@@ -1,0 +1,136 @@
+//! Table 1 + Figures 3/4 reproduction: Sparrow vs full-scan ("XGBoost")
+//! vs GOSS ("LightGBM"), in-memory and off-memory tiers.
+//!
+//!     cargo run --release --example compare_baselines
+//!
+//! Prints the Table-1 analogue (time to an almost-optimal loss), the
+//! Figure-3 (exp-loss vs time) and Figure-4 (AUPRC vs time, linear + log)
+//! charts, and writes all series as CSV. The reference run is recorded in
+//! EXPERIMENTS.md §E1/E3/E4.
+
+use sparrow::baselines::DataSource;
+use sparrow::data::DiskStore;
+use sparrow::eval::MetricSeries;
+use sparrow::harness::{self, Workload};
+use sparrow::util::bench::Table;
+use sparrow::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let secs = args.get_f64("time-limit", 45.0);
+    let rules = args.get_usize("max-rules", 250);
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let w = Workload::standard();
+    let (store_path, test) = w.materialize()?;
+    let train_mem = DiskStore::open(&store_path)?.read_all()?;
+    let bw = harness::off_memory_bandwidth();
+    println!(
+        "workload: {} train x {} features ({:.0} MB), {} test; off-memory bw {:.0} MB/s\n",
+        w.train_n,
+        w.features,
+        (w.train_n * (w.features + 1) * 4) as f64 / 1e6,
+        w.test_n,
+        bw / 1e6
+    );
+
+    // ---- run everything ----------------------------------------------------
+    let mut series: Vec<MetricSeries> = Vec::new();
+
+    println!("running fullscan (in-memory)...");
+    series.push(harness::run_fullscan(
+        &DataSource::memory(train_mem.clone()),
+        &test,
+        harness::stop(rules, secs, 0.0),
+        "fullscan-mem",
+    ));
+    println!("running fullscan (off-memory)...");
+    series.push(harness::run_fullscan(
+        &DataSource::disk(&store_path, bw)?,
+        &test,
+        harness::stop(rules, secs, 0.0),
+        "fullscan-disk",
+    ));
+    println!("running goss (in-memory)...");
+    series.push(harness::run_goss(
+        &DataSource::memory(train_mem.clone()),
+        &test,
+        harness::stop(rules, secs, 0.0),
+        "goss-mem",
+    ));
+    println!("running goss (off-memory)...");
+    series.push(harness::run_goss(
+        &DataSource::disk(&store_path, bw)?,
+        &test,
+        harness::stop(rules, secs, 0.0),
+        "goss-disk",
+    ));
+    println!("running sparrow (1 worker, off-memory sampler)...");
+    series.push(
+        harness::run_sparrow(1, &store_path, &test, "sparrow-1", |c| {
+            c.time_limit = std::time::Duration::from_secs_f64(secs);
+            c.max_rules = rules;
+            c.disk_bandwidth = bw;
+        })?
+        .series,
+    );
+    println!("running sparrow (10 workers, off-memory sampler)...");
+    series.push(
+        harness::run_sparrow(10, &store_path, &test, "sparrow-10", |c| {
+            c.time_limit = std::time::Duration::from_secs_f64(secs);
+            c.max_rules = rules;
+            c.disk_bandwidth = bw;
+        })?
+        .series,
+    );
+
+    // ---- Table 1: time to almost-optimal loss ------------------------------
+    // "almost optimal" = best loss any run achieved, +3% slack (the paper
+    // uses 0.061 for its dataset the same way)
+    let best = series
+        .iter()
+        .filter_map(|s| s.points.iter().map(|p| p.exp_loss).fold(None, |a: Option<f64>, v| Some(a.map_or(v, |x| x.min(v)))))
+        .fold(f64::INFINITY, f64::min);
+    let target = best * 1.03;
+    println!("\n=== Table 1 analogue: time to loss <= {target:.4} ===");
+    let mut t = Table::new(&["Algorithm", "Memory tier", "Time (s)", "Final loss", "Final AUPRC"]);
+    let tier = |label: &str| {
+        if label.contains("mem") {
+            "in-memory"
+        } else {
+            "off-memory"
+        }
+    };
+    for s in &series {
+        let p = s.points.last().unwrap();
+        t.row(&[
+            s.label.clone(),
+            tier(&s.label).to_string(),
+            harness::time_to(s, target),
+            format!("{:.4}", p.exp_loss),
+            format!("{:.4}", p.auprc),
+        ]);
+    }
+    t.print();
+
+    // ---- Figures 3 & 4 ------------------------------------------------------
+    let refs: Vec<&MetricSeries> = series.iter().collect();
+    println!("\n=== Figure 3: test exponential loss vs time ===");
+    print!("{}", MetricSeries::ascii_chart(&refs, |p| p.exp_loss, 76, 14, false));
+    println!("\n=== Figure 4 (left): AUPRC vs time ===");
+    print!("{}", MetricSeries::ascii_chart(&refs, |p| p.auprc, 76, 14, false));
+    println!("\n=== Figure 4 (right): AUPRC vs log-time ===");
+    print!("{}", MetricSeries::ascii_chart(&refs, |p| p.auprc, 76, 14, true));
+
+    // ---- persist -------------------------------------------------------------
+    let dir = std::env::temp_dir().join("sparrow_compare");
+    std::fs::create_dir_all(&dir)?;
+    let mut csv = String::from("label,seconds,iterations,exp_loss,auprc\n");
+    for s in &series {
+        csv.push_str(&s.to_csv());
+    }
+    std::fs::write(dir.join("series.csv"), csv)?;
+    std::fs::write(dir.join("table1.csv"), t.to_csv())?;
+    println!("\nCSV written to {}", dir.display());
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Resilience demonstration (§1/§2 claims): crash and slow down workers
+//! mid-run; TMSN keeps making progress, while the bulk-synchronous
+//! baseline stalls to the laggard's pace.
+//!
+//!     cargo run --release --example fault_tolerance
+
+use std::time::Duration;
+
+use sparrow::data::DiskStore;
+use sparrow::harness::{self, Workload};
+use sparrow::metrics::EventKind;
+
+fn main() -> anyhow::Result<()> {
+    let w = Workload::standard();
+    let (store_path, test) = w.materialize()?;
+    let secs = 12.0 * harness::bench_scale().max(0.25);
+
+    println!("== TMSN under failures ==");
+
+    // --- healthy cluster --------------------------------------------------
+    let healthy = harness::run_sparrow(4, &store_path, &test, "healthy", |c| {
+        c.time_limit = Duration::from_secs_f64(secs);
+        c.max_rules = 10_000;
+    })?;
+    let hp = healthy.series.points.last().unwrap();
+    println!(
+        "healthy   : {} rules, loss {:.4}, auprc {:.4}",
+        healthy.model.len(),
+        hp.exp_loss,
+        hp.auprc
+    );
+
+    // --- two of four workers crash early ----------------------------------
+    let crashed = harness::run_sparrow(4, &store_path, &test, "crashed", |c| {
+        c.time_limit = Duration::from_secs_f64(secs);
+        c.max_rules = 10_000;
+        c.crashes = vec![
+            (1, Duration::from_secs_f64(secs * 0.2)),
+            (3, Duration::from_secs_f64(secs * 0.3)),
+        ];
+    })?;
+    let cp = crashed.series.points.last().unwrap();
+    let crashes = crashed
+        .events
+        .iter()
+        .filter(|e| e.kind == EventKind::Crash)
+        .count();
+    println!(
+        "2/4 crash : {} rules, loss {:.4}, auprc {:.4}   ({crashes} crash events)",
+        crashed.model.len(),
+        cp.exp_loss,
+        cp.auprc
+    );
+
+    // --- one worker runs 8x slow -------------------------------------------
+    let laggard = harness::run_sparrow(4, &store_path, &test, "laggard", |c| {
+        c.time_limit = Duration::from_secs_f64(secs);
+        c.max_rules = 10_000;
+        c.laggards = vec![(2, 8.0)];
+    })?;
+    let lp = laggard.series.points.last().unwrap();
+    println!(
+        "1/4 @ 8x  : {} rules, loss {:.4}, auprc {:.4}",
+        laggard.model.len(),
+        lp.exp_loss,
+        lp.auprc
+    );
+
+    // --- contrast: bulk-synchronous with the same laggard -------------------
+    println!("\n== bulk-synchronous contrast (same laggard) ==");
+    let train = DiskStore::open(&store_path)?.read_all()?;
+    let bs_ok = harness::run_bulk_sync(
+        &train,
+        &test,
+        4,
+        vec![],
+        harness::stop(10_000, secs, 0.0),
+        "bs-healthy",
+    );
+    let bs_lag = harness::run_bulk_sync(
+        &train,
+        &test,
+        4,
+        vec![(2, 8.0)],
+        harness::stop(10_000, secs, 0.0),
+        "bs-laggard",
+    );
+    let iters = |s: &sparrow::eval::MetricSeries| s.points.last().map(|p| p.iterations).unwrap_or(0);
+    println!(
+        "bsp healthy: {} iterations in {secs:.0}s;  bsp with 8x laggard: {} iterations",
+        iters(&bs_ok),
+        iters(&bs_lag)
+    );
+
+    // --- summary -----------------------------------------------------------
+    let tmsn_ratio = laggard.model.len() as f64 / healthy.model.len().max(1) as f64;
+    let bsp_ratio = iters(&bs_lag) as f64 / iters(&bs_ok).max(1) as f64;
+    println!(
+        "\nprogress retained with one 8x laggard:  TMSN {:.0}%   BSP {:.0}%",
+        tmsn_ratio * 100.0,
+        bsp_ratio * 100.0
+    );
+    println!("(paper §1: TMSN's slowdown is proportional to the fraction of faulty machines;\n BSP runs at the speed of the slowest machine)");
+    Ok(())
+}

@@ -1,0 +1,133 @@
+"""L1 — Pallas edge-accumulation kernel (the Sparrow compute hot-spot).
+
+The Scanner's inner loop estimates, for every candidate decision stump
+``h_{f,t}(x) = 2*(x[f] > thr[f,t]) - 1``, the weighted edge
+
+    edges[f, t] = sum_i  u_i * h_{f,t}(x_i),      u_i = w_i * y_i
+
+over a batch of examples.  This is the dominant cost of boosting-by-scanning
+(paper §4.1: "the most time consuming part of our algorithms is the
+computation of the predictions of the strong rules" and the per-candidate
+edge updates).
+
+Hardware adaptation (DESIGN.md §2): the paper ran on CPU clusters; here the
+batch-of-examples x candidate-grid reduction is expressed as a tiled TPU
+kernel:
+
+  * grid = (F/Fb, B/Bb); the feature axis is parallel, the batch axis is a
+    reduction that accumulates into a VMEM-resident ``(Fb, NT)`` output tile
+    (the output BlockSpec ignores the batch grid axis, so Pallas keeps the
+    tile in VMEM across the whole reduction).
+  * each grid step streams one ``(Bb, Fb)`` tile of X from HBM into VMEM
+    via its BlockSpec — the HBM<->VMEM schedule the paper's CPU code did
+    with cache-friendly sequential scans.
+  * ``u`` is broadcast across lanes; the compare+mask+accumulate maps onto
+    the VPU; the companion strong-rule scoring in model.py is a one-hot
+    matmul that maps onto the MXU.
+
+The kernel MUST be lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+Numerics are validated against the pure-jnp oracle in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shapes, chosen for TPU VMEM (DESIGN.md §7):
+#   X tile  (256, 128) f32  = 128 KiB
+#   scratch (128, NT=8) f32 =   4 KiB
+#   compare tensor (256,128,8) f32 = 1 MiB intermediate
+# comfortably under the ~16 MiB VMEM budget, and (8,128)-lane aligned.
+DEFAULT_BLOCK_B = 256
+DEFAULT_BLOCK_F = 128
+
+
+def _edge_kernel(x_ref, u_ref, thr_ref, out_ref):
+    """One grid step: accumulate the edge contribution of a (Bb, Fb) tile."""
+    b_step = pl.program_id(1)
+
+    x = x_ref[...]  # (Bb, Fb)
+    u = u_ref[...]  # (Bb, 1)
+    thr = thr_ref[...]  # (Fb, NT)
+
+    # h_{f,t}(x_i) = 2*(x[i,f] > thr[f,t]) - 1  in {-1, +1}
+    gt = (x[:, :, None] > thr[None, :, :]).astype(x.dtype)  # (Bb, Fb, NT)
+    pred = 2.0 * gt - 1.0
+    # contrib[f, t] = sum_i u[i] * pred[i, f, t]
+    contrib = jnp.sum(u[:, :, None] * pred, axis=0)  # (Fb, NT)
+
+    @pl.when(b_step == 0)
+    def _init():
+        out_ref[...] = contrib
+
+    @pl.when(b_step > 0)
+    def _accumulate():
+        out_ref[...] += contrib
+
+
+def _pick_block(total: int, preferred: int) -> int:
+    """Largest divisor of `total` that is <= preferred (>=1)."""
+    blk = min(preferred, total)
+    while total % blk != 0:
+        blk -= 1
+    return blk
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_f"))
+def edges(
+    x: jax.Array,
+    u: jax.Array,
+    grid_thr: jax.Array,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_f: int = DEFAULT_BLOCK_F,
+) -> jax.Array:
+    """Weighted edges of every candidate threshold stump.
+
+    Args:
+      x: ``(B, F)`` feature matrix.
+      u: ``(B,)`` or ``(B, 1)`` signed weights ``w_i * y_i``.
+      grid_thr: ``(F, NT)`` per-feature candidate thresholds.
+
+    Returns:
+      ``(F, NT)`` array, ``edges[f, t] = sum_i u_i * (2*(x[i,f] > grid_thr[f,t]) - 1)``.
+    """
+    b, f = x.shape
+    f2, nt = grid_thr.shape
+    assert f == f2, f"feature mismatch: x has {f}, grid_thr has {f2}"
+    u2 = u.reshape(b, 1).astype(x.dtype)
+
+    bb = _pick_block(b, block_b)
+    fb = _pick_block(f, block_f)
+
+    return pl.pallas_call(
+        _edge_kernel,
+        grid=(f // fb, b // bb),
+        in_specs=[
+            pl.BlockSpec((bb, fb), lambda fi, bi: (bi, fi)),
+            pl.BlockSpec((bb, 1), lambda fi, bi: (bi, 0)),
+            pl.BlockSpec((fb, nt), lambda fi, bi: (fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((fb, nt), lambda fi, bi: (fi, 0)),
+        out_shape=jax.ShapeDtypeStruct((f, nt), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, u2, grid_thr)
+
+
+def vmem_footprint_bytes(block_b: int, block_f: int, nt: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM bytes for one grid step (DESIGN.md §7 perf estimate).
+
+    Counts the X tile, u tile, threshold tile, output accumulator, and the
+    dominant (Bb, Fb, NT) compare/select intermediate.
+    """
+    x_tile = block_b * block_f
+    u_tile = block_b
+    thr_tile = block_f * nt
+    out_tile = block_f * nt
+    intermediate = block_b * block_f * nt
+    return dtype_bytes * (x_tile + u_tile + thr_tile + out_tile + intermediate)

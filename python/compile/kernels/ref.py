@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the L1 kernel and the L2 scan-batch graph.
+
+These are the correctness ground truth: every Pallas/fused implementation is
+asserted allclose against these in ``python/tests/`` (and the Rust native
+scanner replicates the same math, cross-checked in Rust integration tests).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def stump_predictions(x: jnp.ndarray, grid_thr: jnp.ndarray) -> jnp.ndarray:
+    """``(B, F, NT)`` predictions of every candidate stump on every example.
+
+    ``h_{f,t}(x) = 2 * (x[f] > grid_thr[f, t]) - 1  in {-1, +1}``.
+    """
+    return (2.0 * (x[:, :, None] > grid_thr[None, :, :]) - 1.0).astype(x.dtype)
+
+
+def edges(x: jnp.ndarray, u: jnp.ndarray, grid_thr: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the Pallas edge kernel: ``edges[f,t] = sum_i u_i h_{f,t}(x_i)``."""
+    pred = stump_predictions(x, grid_thr)  # (B, F, NT)
+    return jnp.einsum("b,bfn->fn", u.reshape(-1).astype(x.dtype), pred)
+
+
+def strong_rule_scores(
+    x: jnp.ndarray,
+    feat_onehot: jnp.ndarray,
+    thr: jnp.ndarray,
+    sign: jnp.ndarray,
+    alpha: jnp.ndarray,
+) -> jnp.ndarray:
+    """Oracle for the strong rule ``H(x) = sum_t alpha_t h_t(x)``.
+
+    The model is padded to a fixed ``T``: unused slots carry ``alpha = 0``.
+    ``feat_onehot[:, t]`` is the one-hot column of stump t's feature,
+    ``thr[t]`` its threshold, ``sign[t]`` its polarity in {-1,+1}.
+    """
+    xsel = x @ feat_onehot  # (B, T) — selected feature values
+    preds = sign[None, :] * (2.0 * (xsel > thr[None, :]) - 1.0)
+    return preds @ alpha
+
+
+def scan_batch(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    w_s: jnp.ndarray,
+    score_s: jnp.ndarray,
+    feat_onehot: jnp.ndarray,
+    thr: jnp.ndarray,
+    sign: jnp.ndarray,
+    alpha: jnp.ndarray,
+    grid_thr: jnp.ndarray,
+):
+    """Oracle for the full scan-batch computation (see model.scan_batch)."""
+    scores = strong_rule_scores(x, feat_onehot, thr, sign, alpha)
+    w = w_s * jnp.exp(-y * (scores - score_s))
+    u = w * y
+    e = edges(x, u, grid_thr)
+    return scores, w, e, jnp.sum(w), jnp.sum(w * w)

@@ -1,0 +1,99 @@
+"""L2 — the Sparrow scan-batch compute graph (build-time JAX).
+
+The Rust Scanner (L3) streams fixed-shape batches of in-memory examples
+through this graph (AOT-lowered to HLO text, executed via PJRT):
+
+  inputs (paper §4.1 "Incremental Updates"):
+    x        (B, F)  feature block
+    y        (B,)    labels in {-1, +1}
+    w_s      (B,)    weight at last-sample time   ("w_s" in the paper)
+    score_s  (B,)    strong-rule score at last-sample/last-update time
+    model    (padded to T slots): feat_onehot (F, T), thr (T,), sign (T,),
+             alpha (T,)  — unused slots carry alpha = 0
+    grid_thr (F, NT) candidate-threshold grid owned by this worker
+
+  outputs:
+    scores   (B,)    H(x) under the current model         (cached by L3)
+    w        (B,)    updated weights  w_s * exp(-y (H(x) - H_s(x)))
+    edges    (F, NT) per-candidate weighted edges  sum_i w_i y_i h(x_i)
+    sumw, sumw2      stopping-rule scalars  (W and V of Alg. 2)
+
+The strong rule is evaluated with a one-hot feature-selection **matmul**
+(x @ feat_onehot) so the gather maps onto the MXU; the candidate edges come
+from the L1 Pallas kernel, which lowers into this same HLO module.
+
+Everything here is build-time only: ``aot.py`` lowers `scan_batch` (and the
+pure-jnp fallback + `predict`) once per shape configuration, and Rust never
+imports Python again.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import edge_kernel, ref
+
+
+def strong_rule_scores(x, feat_onehot, thr, sign, alpha):
+    """``H(x)`` for a stump ensemble padded to fixed width T (MXU-friendly)."""
+    xsel = x @ feat_onehot  # (B, T): one-hot matmul == batched feature gather
+    preds = sign[None, :] * (2.0 * (xsel > thr[None, :]) - 1.0)
+    return preds @ alpha
+
+
+def scan_batch(x, y, w_s, score_s, feat_onehot, thr, sign, alpha, grid_thr):
+    """Full scan step: incremental weights + candidate edges + stop scalars.
+
+    Uses the L1 Pallas kernel for the candidate-edge reduction.
+    Returns ``(scores, w, edges, sumw, sumw2)``.
+    """
+    scores = strong_rule_scores(x, feat_onehot, thr, sign, alpha)
+    # Incremental update (paper §4.1): w = w_s * exp(-y * (H(x) - H_s(x))).
+    w = w_s * jnp.exp(-y * (scores - score_s))
+    u = w * y
+    e = edge_kernel.edges(x, u, grid_thr)
+    return scores, w, e, jnp.sum(w), jnp.sum(w * w)
+
+
+def scan_batch_jnp(x, y, w_s, score_s, feat_onehot, thr, sign, alpha, grid_thr):
+    """Same computation with the pure-jnp edge reduction (no Pallas).
+
+    Lowered as a second artifact so the Rust runtime can A/B the kernel
+    against XLA's own fusion of the einsum (bench: ablation_backend).
+    """
+    return ref.scan_batch(x, y, w_s, score_s, feat_onehot, thr, sign, alpha, grid_thr)
+
+
+def predict(x, feat_onehot, thr, sign, alpha):
+    """Scores-only graph for held-out evaluation (Figs. 3-4 series)."""
+    return (strong_rule_scores(x, feat_onehot, thr, sign, alpha),)
+
+
+def make_example_args(batch: int, features: int, tmax: int, nthr: int):
+    """ShapeDtypeStructs for AOT lowering of `scan_batch`."""
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    return (
+        s((batch, features), f32),  # x
+        s((batch,), f32),  # y
+        s((batch,), f32),  # w_s
+        s((batch,), f32),  # score_s
+        s((features, tmax), f32),  # feat_onehot
+        s((tmax,), f32),  # thr
+        s((tmax,), f32),  # sign
+        s((tmax,), f32),  # alpha
+        s((features, nthr), f32),  # grid_thr
+    )
+
+
+def make_predict_args(batch: int, features: int, tmax: int):
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    return (
+        s((batch, features), f32),
+        s((features, tmax), f32),
+        s((tmax,), f32),
+        s((tmax,), f32),
+        s((tmax,), f32),
+    )

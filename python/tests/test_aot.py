@@ -1,0 +1,111 @@
+"""AOT lowering: HLO text artifacts are well-formed and parse-safe.
+
+The actual execute-from-rust round trip is covered by rust integration
+tests (rust/tests/runtime_roundtrip.rs) once `make artifacts` has run.
+"""
+
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+
+class TestHloText:
+    def test_scan_lowering_produces_hlo_module(self):
+        text = aot.lower_scan(16, 8, 4, 2, use_pallas=True)
+        assert text.startswith("HloModule")
+        # entry computation with 9 parameters
+        assert len(re.findall(r"parameter\(\d\)", text)) >= 9
+
+    def test_scan_jnp_lowering_produces_hlo_module(self):
+        text = aot.lower_scan(16, 8, 4, 2, use_pallas=False)
+        assert text.startswith("HloModule")
+
+    def test_predict_lowering(self):
+        text = aot.lower_predict(16, 8, 4)
+        assert text.startswith("HloModule")
+
+    def test_root_is_tuple(self):
+        """return_tuple=True: rust unwraps a tuple result."""
+        text = aot.lower_scan(16, 8, 4, 2, use_pallas=False)
+        assert "tuple(" in text.replace(") ", ")")
+
+    def test_no_custom_calls(self):
+        """interpret=True must leave no Mosaic custom-calls behind —
+        the CPU PJRT plugin cannot execute them."""
+        text = aot.lower_scan(16, 8, 4, 2, use_pallas=True)
+        assert "custom-call" not in text or "mosaic" not in text.lower()
+
+    def test_shapes_embedded(self):
+        text = aot.lower_scan(16, 8, 4, 2, use_pallas=False)
+        assert "f32[16,8]" in text  # x
+        assert "f32[8,2]" in text  # grid_thr
+
+
+class TestWriteIfChanged:
+    def test_idempotent(self, tmp_path):
+        p = str(tmp_path / "a.txt")
+        assert aot.write_if_changed(p, "hello") is True
+        assert aot.write_if_changed(p, "hello") is False
+        assert aot.write_if_changed(p, "world") is True
+        with open(p) as f:
+            assert f.read() == "world"
+
+
+class TestCli:
+    def test_main_writes_artifacts_and_manifest(self, tmp_path):
+        out = str(tmp_path / "artifacts")
+        env = dict(os.environ)
+        proc = subprocess.run(
+            [
+                sys.executable,
+                "-m",
+                "compile.aot",
+                "--out-dir",
+                out,
+                "--configs",
+                "16,8,4,2",
+            ],
+            cwd=os.path.join(os.path.dirname(__file__), ".."),
+            env=env,
+            capture_output=True,
+            text=True,
+            timeout=600,
+        )
+        assert proc.returncode == 0, proc.stderr
+        files = set(os.listdir(out))
+        assert "manifest.txt" in files
+        assert "scan_b16_f8_t4_n2.hlo.txt" in files
+        assert "scanjnp_b16_f8_t4_n2.hlo.txt" in files
+        assert "predict_b16_f8_t4.hlo.txt" in files
+        with open(os.path.join(out, "manifest.txt")) as f:
+            lines = [l for l in f.read().splitlines() if l and not l.startswith("#")]
+        assert len(lines) == 3
+        for line in lines:
+            kv = dict(tok.split("=", 1) for tok in line.split())
+            assert {"kind", "file", "batch", "features", "tmax", "nthr"} <= set(kv)
+
+
+class TestExampleArgs:
+    def test_make_example_args_shapes(self):
+        args = model.make_example_args(32, 16, 8, 4)
+        shapes = [a.shape for a in args]
+        assert shapes == [
+            (32, 16),
+            (32,),
+            (32,),
+            (32,),
+            (16, 8),
+            (8,),
+            (8,),
+            (8,),
+            (16, 4),
+        ]
+
+    def test_make_predict_args_shapes(self):
+        args = model.make_predict_args(32, 16, 8)
+        assert [a.shape for a in args] == [(32, 16), (16, 8), (8,), (8,), (8,)]

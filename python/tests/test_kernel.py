@@ -1,0 +1,177 @@
+"""L1 correctness: Pallas edge kernel vs pure-jnp oracle.
+
+This is the CORE correctness signal for the kernel that ends up inside the
+AOT-lowered scan-batch module. Includes a hypothesis sweep over shapes,
+block sizes and value regimes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import edge_kernel, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def _keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+class TestEdgeKernelBasic:
+    def test_matches_oracle_default_blocks(self):
+        kx, ku, kt = _keys(0, 3)
+        x = _rand(kx, 512, 64)
+        u = _rand(ku, 512)
+        thr = _rand(kt, 64, 8)
+        got = edge_kernel.edges(x, u, thr)
+        want = ref.edges(x, u, thr)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+    def test_single_block(self):
+        kx, ku, kt = _keys(1, 3)
+        x = _rand(kx, 32, 8)
+        u = _rand(ku, 32)
+        thr = _rand(kt, 8, 4)
+        got = edge_kernel.edges(x, u, thr, block_b=32, block_f=8)
+        np.testing.assert_allclose(got, ref.edges(x, u, thr), rtol=1e-5, atol=1e-4)
+
+    def test_multi_block_batch_reduction(self):
+        """Batch axis split across several grid steps must accumulate."""
+        kx, ku, kt = _keys(2, 3)
+        x = _rand(kx, 256, 16)
+        u = _rand(ku, 256)
+        thr = _rand(kt, 16, 4)
+        got = edge_kernel.edges(x, u, thr, block_b=32, block_f=8)
+        np.testing.assert_allclose(got, ref.edges(x, u, thr), rtol=1e-5, atol=1e-4)
+
+    def test_u_2d_accepted(self):
+        kx, ku, kt = _keys(3, 3)
+        x = _rand(kx, 64, 8)
+        u = _rand(ku, 64).reshape(64, 1)
+        thr = _rand(kt, 8, 4)
+        np.testing.assert_allclose(
+            edge_kernel.edges(x, u, thr), ref.edges(x, u, thr), rtol=1e-5, atol=1e-4
+        )
+
+    def test_zero_weights_give_zero_edges(self):
+        kx, kt = _keys(4, 2)
+        x = _rand(kx, 64, 8)
+        u = jnp.zeros((64,), jnp.float32)
+        thr = _rand(kt, 8, 4)
+        assert jnp.all(edge_kernel.edges(x, u, thr) == 0.0)
+
+    def test_uniform_weights_bounded_by_sum(self):
+        """|edge| <= sum of |u| for every candidate (h in {-1,+1})."""
+        kx, ku, kt = _keys(5, 3)
+        x = _rand(kx, 128, 16)
+        u = jnp.abs(_rand(ku, 128))
+        thr = _rand(kt, 16, 4)
+        e = edge_kernel.edges(x, u, thr)
+        assert jnp.all(jnp.abs(e) <= jnp.sum(jnp.abs(u)) + 1e-4)
+
+    def test_threshold_below_min_gives_plus_edge(self):
+        """thr below all values -> h == +1 everywhere -> edge == sum(u)."""
+        kx, ku = _keys(6, 2)
+        x = jnp.abs(_rand(kx, 64, 4)) + 1.0  # all >= 1
+        u = _rand(ku, 64)
+        thr = jnp.zeros((4, 2), jnp.float32)  # all x > 0
+        e = edge_kernel.edges(x, u, thr)
+        np.testing.assert_allclose(e, jnp.full((4, 2), jnp.sum(u)), rtol=1e-5, atol=1e-4)
+
+    def test_threshold_above_max_gives_minus_edge(self):
+        kx, ku = _keys(7, 2)
+        x = -jnp.abs(_rand(kx, 64, 4)) - 1.0  # all <= -1
+        u = _rand(ku, 64)
+        thr = jnp.zeros((4, 2), jnp.float32)
+        e = edge_kernel.edges(x, u, thr)
+        np.testing.assert_allclose(e, jnp.full((4, 2), -jnp.sum(u)), rtol=1e-5, atol=1e-4)
+
+    def test_negating_u_negates_edges(self):
+        kx, ku, kt = _keys(8, 3)
+        x = _rand(kx, 64, 8)
+        u = _rand(ku, 64)
+        thr = _rand(kt, 8, 4)
+        e1 = edge_kernel.edges(x, u, thr)
+        e2 = edge_kernel.edges(x, -u, thr)
+        np.testing.assert_allclose(e1, -e2, rtol=1e-5, atol=1e-4)
+
+    def test_feature_mismatch_raises(self):
+        kx, ku, kt = _keys(9, 3)
+        with pytest.raises(AssertionError):
+            edge_kernel.edges(_rand(kx, 16, 8), _rand(ku, 16), _rand(kt, 4, 2))
+
+
+class TestPickBlock:
+    def test_divisor_selected(self):
+        assert edge_kernel._pick_block(100, 30) == 25
+        assert edge_kernel._pick_block(128, 128) == 128
+        assert edge_kernel._pick_block(128, 100) == 64
+        assert edge_kernel._pick_block(7, 4) == 1
+
+    def test_always_divides(self):
+        for total in range(1, 70):
+            for pref in range(1, 70):
+                blk = edge_kernel._pick_block(total, pref)
+                assert total % blk == 0
+                assert 1 <= blk <= min(pref, total)
+
+
+class TestVmemFootprint:
+    def test_default_blocks_fit_vmem(self):
+        bytes_ = edge_kernel.vmem_footprint_bytes(
+            edge_kernel.DEFAULT_BLOCK_B, edge_kernel.DEFAULT_BLOCK_F, nt=8
+        )
+        assert bytes_ < 16 * 1024 * 1024  # TPU VMEM budget
+
+    def test_monotone_in_blocks(self):
+        a = edge_kernel.vmem_footprint_bytes(128, 64, 8)
+        b = edge_kernel.vmem_footprint_bytes(256, 64, 8)
+        c = edge_kernel.vmem_footprint_bytes(256, 128, 8)
+        assert a < b < c
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([8, 32, 96, 128]),
+    f=st.sampled_from([4, 8, 24, 32]),
+    nt=st.sampled_from([1, 2, 4, 8]),
+    bb=st.sampled_from([8, 16, 32, 64]),
+    fb=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**16),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_hypothesis_shape_sweep(b, f, nt, bb, fb, seed, scale):
+    """Kernel == oracle across shapes, block sizes, and value scales."""
+    kx, ku, kt = _keys(seed, 3)
+    x = _rand(kx, b, f) * scale
+    u = _rand(ku, b)
+    thr = _rand(kt, f, nt) * scale
+    got = edge_kernel.edges(x, u, thr, block_b=bb, block_f=fb)
+    want = ref.edges(x, u, thr)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    skew=st.floats(0.0, 20.0),
+)
+def test_hypothesis_skewed_weights(seed, skew):
+    """Boosting drives exponentially skewed weights; kernel must stay exact."""
+    kx, ku, kt, ks = _keys(seed, 4)
+    x = _rand(kx, 64, 8)
+    # weights spanning up to e^20 dynamic range, signed by labels
+    logw = jax.random.uniform(ks, (64,), minval=-skew, maxval=0.0)
+    y = jnp.sign(_rand(ku, 64)) + (jnp.sign(_rand(ku, 64)) == 0)
+    u = jnp.exp(logw) * y
+    thr = _rand(kt, 8, 4)
+    got = edge_kernel.edges(x, u, thr, block_b=16, block_f=4)
+    want = ref.edges(x, u, thr)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,155 @@
+"""L2 correctness: scan_batch graph vs oracle; model semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+def _make_model(key, features, tmax, n_active):
+    """Random stump ensemble padded to tmax slots."""
+    kf, kt, ks, ka = jax.random.split(key, 4)
+    feats = jax.random.randint(kf, (tmax,), 0, features)
+    onehot = jax.nn.one_hot(feats, features, dtype=jnp.float32).T  # (F, T)
+    thr = jax.random.normal(kt, (tmax,), dtype=jnp.float32)
+    sign = jnp.where(jax.random.bernoulli(ks, shape=(tmax,)), 1.0, -1.0)
+    alpha = jax.random.uniform(ka, (tmax,), minval=0.05, maxval=0.5)
+    active = (jnp.arange(tmax) < n_active).astype(jnp.float32)
+    return onehot, thr, sign, alpha * active
+
+
+def _make_inputs(key, batch, features, nthr):
+    kx, ky, kw, kt = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (batch, features), dtype=jnp.float32)
+    y = jnp.where(jax.random.bernoulli(ky, 0.3, (batch,)), 1.0, -1.0)
+    w_s = jnp.ones((batch,), jnp.float32)
+    score_s = jnp.zeros((batch,), jnp.float32)
+    grid_thr = jax.random.normal(kt, (features, nthr), dtype=jnp.float32)
+    return x, y, w_s, score_s, grid_thr
+
+
+class TestScanBatch:
+    def test_pallas_path_matches_oracle(self):
+        k0, k1 = _keys(0, 2)
+        x, y, w_s, score_s, grid_thr = _make_inputs(k0, 128, 32, 4)
+        onehot, thr, sign, alpha = _make_model(k1, 32, 16, 5)
+        got = model.scan_batch(x, y, w_s, score_s, onehot, thr, sign, alpha, grid_thr)
+        want = ref.scan_batch(x, y, w_s, score_s, onehot, thr, sign, alpha, grid_thr)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-4)
+
+    def test_jnp_path_matches_oracle(self):
+        k0, k1 = _keys(1, 2)
+        x, y, w_s, score_s, grid_thr = _make_inputs(k0, 64, 16, 2)
+        onehot, thr, sign, alpha = _make_model(k1, 16, 8, 3)
+        got = model.scan_batch_jnp(x, y, w_s, score_s, onehot, thr, sign, alpha, grid_thr)
+        want = ref.scan_batch(x, y, w_s, score_s, onehot, thr, sign, alpha, grid_thr)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-6)
+
+    def test_empty_model_unit_weights(self):
+        """With alpha == 0 everywhere, H == 0, so w == w_s and edges use u = w_s*y."""
+        k0, k1 = _keys(2, 2)
+        x, y, w_s, score_s, grid_thr = _make_inputs(k0, 64, 16, 2)
+        onehot, thr, sign, alpha = _make_model(k1, 16, 8, 0)
+        scores, w, e, sumw, sumw2 = model.scan_batch(
+            x, y, w_s, score_s, onehot, thr, sign, alpha, grid_thr
+        )
+        np.testing.assert_allclose(scores, jnp.zeros(64), atol=1e-6)
+        np.testing.assert_allclose(w, w_s, rtol=1e-6)
+        np.testing.assert_allclose(sumw, 64.0, rtol=1e-5)
+        np.testing.assert_allclose(e, ref.edges(x, w_s * y, grid_thr), rtol=1e-4, atol=1e-4)
+
+    def test_incremental_equals_fresh(self):
+        """Starting from (w_s, score_s) of model A and scanning with model B
+        gives the same weights as starting fresh with model B.
+
+        This is exactly the paper's incremental-update invariant: the stored
+        (w_l, H_l) pair lets Scanner/Sampler share the weight computation.
+        """
+        k0, k1, k2 = _keys(3, 3)
+        x, y, w0, s0, grid_thr = _make_inputs(k0, 64, 16, 2)
+        onehot_a, thr_a, sign_a, alpha_a = _make_model(k1, 16, 8, 4)
+        onehot_b, thr_b, sign_b, alpha_b = _make_model(k2, 16, 8, 6)
+
+        # fresh: weights of model B from scratch
+        _, w_fresh, _, _, _ = model.scan_batch(
+            x, y, w0, s0, onehot_b, thr_b, sign_b, alpha_b, grid_thr
+        )
+        # incremental: first compute under A, then update A -> B
+        scores_a, w_a, _, _, _ = model.scan_batch(
+            x, y, w0, s0, onehot_a, thr_a, sign_a, alpha_a, grid_thr
+        )
+        _, w_inc, _, _, _ = model.scan_batch(
+            x, y, w_a, scores_a, onehot_b, thr_b, sign_b, alpha_b, grid_thr
+        )
+        np.testing.assert_allclose(w_inc, w_fresh, rtol=1e-4, atol=1e-5)
+
+    def test_weights_positive(self):
+        k0, k1 = _keys(4, 2)
+        x, y, w_s, score_s, grid_thr = _make_inputs(k0, 128, 32, 4)
+        onehot, thr, sign, alpha = _make_model(k1, 32, 16, 16)
+        _, w, _, sumw, sumw2 = model.scan_batch(
+            x, y, w_s, score_s, onehot, thr, sign, alpha, grid_thr
+        )
+        assert jnp.all(w > 0)
+        assert sumw > 0 and sumw2 > 0
+
+    def test_effective_sample_size_shrinks_with_model(self):
+        """A trained strong rule skews weights -> n_eff = (Σw)²/Σw² < B."""
+        k0, k1 = _keys(5, 2)
+        x, y, w_s, score_s, grid_thr = _make_inputs(k0, 256, 32, 4)
+        onehot, thr, sign, alpha = _make_model(k1, 32, 16, 16)
+        _, _, _, sumw, sumw2 = model.scan_batch(
+            x, y, w_s, score_s, onehot, thr, sign, alpha, grid_thr
+        )
+        n_eff = float(sumw) ** 2 / float(sumw2)
+        assert n_eff < 256.0
+
+
+class TestPredict:
+    def test_predict_matches_scan_scores(self):
+        k0, k1 = _keys(6, 2)
+        x, y, w_s, score_s, grid_thr = _make_inputs(k0, 64, 16, 2)
+        onehot, thr, sign, alpha = _make_model(k1, 16, 8, 5)
+        (scores_p,) = model.predict(x, onehot, thr, sign, alpha)
+        scores_s, *_ = model.scan_batch(
+            x, y, w_s, score_s, onehot, thr, sign, alpha, grid_thr
+        )
+        np.testing.assert_allclose(scores_p, scores_s, rtol=1e-6)
+
+    def test_sign_flip_flips_scores(self):
+        k0, k1 = _keys(7, 2)
+        x, *_ = _make_inputs(k0, 32, 16, 2)
+        onehot, thr, sign, alpha = _make_model(k1, 16, 8, 8)
+        (s1,) = model.predict(x, onehot, thr, sign, alpha)
+        (s2,) = model.predict(x, onehot, thr, -sign, alpha)
+        np.testing.assert_allclose(s1, -s2, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    batch=st.sampled_from([16, 64, 128]),
+    features=st.sampled_from([8, 16, 32]),
+    tmax=st.sampled_from([4, 8, 16]),
+    nthr=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_scan_matches_oracle(batch, features, tmax, nthr, seed):
+    k0, k1 = _keys(seed, 2)
+    x, y, w_s, score_s, grid_thr = _make_inputs(k0, batch, features, nthr)
+    n_active = seed % (tmax + 1)
+    onehot, thr, sign, alpha = _make_model(k1, features, tmax, n_active)
+    got = model.scan_batch(x, y, w_s, score_s, onehot, thr, sign, alpha, grid_thr)
+    want = ref.scan_batch(x, y, w_s, score_s, onehot, thr, sign, alpha, grid_thr)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,87 @@
+//! A4 — scan-backend ablation: native Rust hot loop vs the AOT-lowered
+//! XLA artifacts (Pallas edge kernel and pure-jnp variant) through PJRT.
+//!
+//! Measures raw scan-batch throughput on identical inputs. Interpret-mode
+//! Pallas lowers to a while-loop over grid tiles, so on CPU the jnp
+//! variant fuses better; on a real TPU the Pallas kernel's VMEM tiling is
+//! the point (DESIGN.md §2 and §7 carry the estimate).
+//!
+//! Requires `make artifacts` for the XLA rows (skipped otherwise).
+//!
+//!     cargo bench --bench ablation_backend
+
+use std::path::Path;
+
+use sparrow::boosting::CandidateGrid;
+use sparrow::data::DataBlock;
+use sparrow::model::{StrongRule, Stump};
+use sparrow::runtime::{Manifest, XlaScanBackend};
+use sparrow::scanner::{NativeBackend, ScanBackend};
+use sparrow::util::bench::BenchRunner;
+use sparrow::util::rng::Rng;
+
+const F: usize = 32;
+const NT: usize = 4;
+const B: usize = 128;
+
+fn inputs(n: usize) -> (DataBlock, Vec<f32>, Vec<f32>, Vec<u32>, StrongRule, CandidateGrid) {
+    let mut rng = Rng::new(9);
+    let mut block = DataBlock::empty(F);
+    for _ in 0..n {
+        let row: Vec<f32> = (0..F).map(|_| rng.gauss() as f32).collect();
+        block.push(&row, if rng.bernoulli(0.5) { 1.0 } else { -1.0 });
+    }
+    let w = vec![1.0f32; n];
+    let s = vec![0.0f32; n];
+    let l = vec![0u32; n];
+    let mut model = StrongRule::new();
+    for t in 0..10 {
+        model.push(Stump::new(t % F as u32, 0.1, 1.0), 0.2);
+    }
+    let grid = CandidateGrid::uniform(F, NT, -1.5, 1.5);
+    (block, w, s, l, model, grid)
+}
+
+fn bench_backend(name: &str, be: &mut dyn ScanBackend, runner: &BenchRunner) -> f64 {
+    let (block, w, s, l, model, grid) = inputs(B);
+    let stats = runner.bench(name, || {
+        std::hint::black_box(be.scan_batch(&block, &w, &s, &l, &model, &grid, (0, F)))
+    });
+    let per_ex = stats.median.as_secs_f64() / B as f64;
+    let cand_updates = (B * F * NT) as f64 / stats.median.as_secs_f64();
+    println!(
+        "    {name}: {:.2} µs/example, {:.1} M candidate-updates/s",
+        per_ex * 1e6,
+        cand_updates / 1e6
+    );
+    per_ex
+}
+
+fn main() {
+    let runner = BenchRunner {
+        warmup: 3,
+        runs: 15,
+        ..BenchRunner::default()
+    };
+    println!("A4 — scan backend throughput (B={B}, F={F}, NT={NT}, model=10 stumps)\n");
+
+    let mut native = NativeBackend;
+    let native_t = bench_backend("native", &mut native, &runner);
+
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Manifest::load(&dir) {
+        Err(e) => println!("\nSKIP xla backends: {e}"),
+        Ok(m) => {
+            for (pallas, label) in [(true, "xla-pallas"), (false, "xla-jnp")] {
+                match m.find_scan(pallas, F, NT) {
+                    Err(e) => println!("SKIP {label}: {e}"),
+                    Ok(spec) => {
+                        let mut be = XlaScanBackend::load(&m, spec, pallas).expect("load artifact");
+                        let t = bench_backend(label, &mut be, &runner);
+                        println!("    {label} vs native: {:.2}x", t / native_t);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! A3 — effective-sample-size threshold sweep (§3: resample when
+//! `n_eff/m` crosses a pre-specified threshold).
+//!
+//! Too high → constant resampling (all time in the Sampler, the Fig-3
+//! plateaus dominate); too low → stale skewed samples (slow, noisy
+//! certification). The sweep exposes the sweet spot.
+//!
+//!     cargo bench --bench ablation_ess
+
+use sparrow::harness::{self, Workload};
+use sparrow::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let w = Workload::standard();
+    let (store_path, test) = w.materialize()?;
+    let secs = 10.0;
+
+    let mut t = Table::new(&["n_eff/m threshold", "Rules", "Resamples", "Final loss"]);
+    for thr in [0.05, 0.15, 0.3, 0.5, 0.8] {
+        let out = harness::run_sparrow(2, &store_path, &test, &format!("ess{thr}"), |c| {
+            c.time_limit = std::time::Duration::from_secs_f64(secs);
+            c.max_rules = 100_000;
+            c.ess_threshold = thr;
+        })?;
+        let resamples: u64 = out.workers.iter().map(|w| w.resamples).sum();
+        let p = out.series.points.last().unwrap();
+        t.row(&[
+            format!("{thr:.2}"),
+            out.model.len().to_string(),
+            resamples.to_string(),
+            format!("{:.4}", p.exp_loss),
+        ]);
+    }
+    println!("\nA3 — n_eff/m resampling-threshold sweep ({secs:.0}s budget, 2 workers)");
+    t.print();
+    Ok(())
+}

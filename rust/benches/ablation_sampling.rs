@@ -1,0 +1,44 @@
+//! A2 — sampler ablation: minimal-variance (paper) vs rejection vs
+//! weight-blind uniform sampling.
+//!
+//! Expected shape (§4.1 fn. 4 + §3): minimal-variance ≈ rejection in
+//! expectation but with lower variance in the kept set; uniform wastes
+//! memory on easy examples (its kept set has low n_eff), slowing
+//! certification of specialist rules.
+//!
+//!     cargo bench --bench ablation_sampling
+
+use sparrow::config::SamplerKind;
+use sparrow::harness::{self, Workload};
+use sparrow::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let w = Workload::standard();
+    let (store_path, test) = w.materialize()?;
+    let secs = 12.0;
+
+    let mut t = Table::new(&["Sampler", "Rules", "Resamples", "Final loss", "Final AUPRC"]);
+    for (kind, name) in [
+        (SamplerKind::MinimalVariance, "minimal-variance (paper)"),
+        (SamplerKind::Rejection, "rejection"),
+        (SamplerKind::Uniform, "uniform (weight-blind)"),
+    ] {
+        let out = harness::run_sparrow(2, &store_path, &test, name, |c| {
+            c.time_limit = std::time::Duration::from_secs_f64(secs);
+            c.max_rules = 100_000;
+            c.sampler = kind;
+        })?;
+        let resamples: u64 = out.workers.iter().map(|w| w.resamples).sum();
+        let p = out.series.points.last().unwrap();
+        t.row(&[
+            name.to_string(),
+            out.model.len().to_string(),
+            resamples.to_string(),
+            format!("{:.4}", p.exp_loss),
+            format!("{:.4}", p.auprc),
+        ]);
+    }
+    println!("\nA2 — sampler ablation ({secs:.0}s budget, 2 workers)");
+    t.print();
+    Ok(())
+}

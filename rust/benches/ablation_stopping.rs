@@ -1,0 +1,56 @@
+//! A1 — stopping-rule ablation: Balsubramani-LIL (the paper's rule) vs
+//! naive Hoeffding vs fixed full-scan (no early stopping).
+//!
+//! Measures examples scanned per certified rule and end-to-end progress.
+//! Expected shape: LIL stops earliest (tightest anytime bound, §3 "sound
+//! and tight"), Hoeffding needs more samples, fixed-scan devolves to full
+//! passes.
+//!
+//!     cargo bench --bench ablation_stopping
+
+use sparrow::config::StoppingKind;
+use sparrow::harness::{self, Workload};
+use sparrow::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let w = Workload::standard();
+    let (store_path, test) = w.materialize()?;
+    let secs = 12.0;
+
+    let mut t = Table::new(&[
+        "Stopping rule",
+        "Rules",
+        "Scanned/rule",
+        "Final loss",
+        "Final AUPRC",
+    ]);
+    for (kind, name) in [
+        (StoppingKind::Lil, "lil (paper)"),
+        (StoppingKind::Hoeffding, "hoeffding"),
+        (StoppingKind::DomingoWatanabe, "domingo-watanabe [14]"),
+        (StoppingKind::FixedScan, "fixed-scan"),
+    ] {
+        let out = harness::run_sparrow(2, &store_path, &test, name, |c| {
+            c.time_limit = std::time::Duration::from_secs_f64(secs);
+            c.max_rules = 100_000;
+            c.stopping = kind;
+        })?;
+        let scanned: u64 = out.workers.iter().map(|w| w.scanned).sum();
+        let rules = out.model.len();
+        let p = out.series.points.last().unwrap();
+        t.row(&[
+            name.to_string(),
+            rules.to_string(),
+            if rules > 0 {
+                format!("{}", scanned / rules as u64)
+            } else {
+                "—".into()
+            },
+            format!("{:.4}", p.exp_loss),
+            format!("{:.4}", p.auprc),
+        ]);
+    }
+    println!("\nA1 — stopping-rule ablation ({secs:.0}s budget, 2 workers)");
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! Micro-benchmarks of the L3 hot paths (§Perf): edge accumulation,
+//! incremental scoring, selective sampling, broadcast fan-out latency,
+//! stopping-rule sweep. Baseline + after numbers live in EXPERIMENTS.md
+//! §Perf.
+//!
+//!     cargo bench --bench micro_hotpath
+
+use std::time::{Duration, Instant};
+
+use sparrow::boosting::{edges::accumulate_edges_stripe, CandidateGrid, EdgeMatrix};
+use sparrow::data::DataBlock;
+use sparrow::model::{StrongRule, Stump};
+use sparrow::network::{Fabric, NetConfig};
+use sparrow::sampling::{MinimalVarianceSampler, SelectiveSampler};
+use sparrow::stopping::{CandidateStats, LilRule, StoppingRule};
+use sparrow::util::bench::BenchRunner;
+use sparrow::util::rng::Rng;
+
+fn main() {
+    let runner = BenchRunner {
+        warmup: 2,
+        runs: 9,
+        ..BenchRunner::default()
+    };
+
+    // ---- edge accumulation (the scanner's inner loop) ---------------------
+    let n = 4096;
+    let f = 64;
+    let nt = 8;
+    let mut rng = Rng::new(1);
+    let mut block = DataBlock::empty(f);
+    for _ in 0..n {
+        let row: Vec<f32> = (0..f).map(|_| rng.gauss() as f32).collect();
+        block.push(&row, if rng.bernoulli(0.5) { 1.0 } else { -1.0 });
+    }
+    let w = vec![1.0f32; n];
+    let grid = CandidateGrid::uniform(f, nt, -1.5, 1.5);
+    let stats = runner.bench("edges 4096x64x8", || {
+        let mut acc = EdgeMatrix::zeros(f, nt);
+        accumulate_edges_stripe(&block, &w, &grid, (0, f), &mut acc);
+        acc
+    });
+    let updates = (n * f * nt) as f64 / stats.median.as_secs_f64();
+    println!("  -> {:.1} M candidate-updates/s", updates / 1e6);
+
+    // ---- incremental strong-rule scoring ----------------------------------
+    let mut model = StrongRule::new();
+    for t in 0..64u32 {
+        model.push(Stump::new(t % f as u32, 0.0, 1.0), 0.1);
+    }
+    let stats = runner.bench("score-suffix 4096x64stumps", || {
+        let mut acc = 0f32;
+        for i in 0..n {
+            acc += model.score_suffix(block.row(i), 0);
+        }
+        acc
+    });
+    let sps = (n * 64) as f64 / stats.median.as_secs_f64();
+    println!("  -> {:.1} M stump-evals/s", sps / 1e6);
+
+    // ---- selective sampling -------------------------------------------------
+    let weights: Vec<f64> = (0..100_000).map(|i| 0.1 + (i % 13) as f64 * 0.2).collect();
+    let stats = runner.bench("mvs-sampler 100k offers", || {
+        let mut rng = Rng::new(2);
+        let mut s = MinimalVarianceSampler::new(2.0, &mut rng);
+        let mut kept = 0usize;
+        for &w in &weights {
+            kept += s.offer(w, &mut rng);
+        }
+        kept
+    });
+    println!(
+        "  -> {:.1} M offers/s",
+        100_000.0 / stats.median.as_secs_f64() / 1e6
+    );
+
+    // ---- stopping-rule sweep -------------------------------------------------
+    let rule = LilRule::default();
+    let cands: Vec<CandidateStats> = (0..512)
+        .map(|i| CandidateStats {
+            m: i as f64 * 0.1,
+            sum_w: 1000.0,
+            sum_w2: 900.0,
+            count: 1000,
+        })
+        .collect();
+    let stats = runner.bench("lil-sweep 512 candidates", || {
+        cands.iter().filter(|c| rule.fires(c, 0.05)).count()
+    });
+    println!(
+        "  -> {:.1} M candidate-checks/s",
+        512.0 / stats.median.as_secs_f64() / 1e6
+    );
+
+    // ---- broadcast fan-out latency -------------------------------------------
+    let (fabric, eps) = Fabric::<u64>::new(8, NetConfig::ideal());
+    let t0 = Instant::now();
+    let rounds = 200;
+    for i in 0..rounds {
+        eps[0].broadcast(i, 64);
+        for ep in &eps[1..] {
+            while ep.recv_timeout(Duration::from_secs(1)).is_none() {}
+        }
+    }
+    let per_round = t0.elapsed() / rounds as u32;
+    println!("broadcast fan-out (8 endpoints, ideal net): {per_round:?}/round");
+    fabric.shutdown();
+}

@@ -1,0 +1,70 @@
+//! E6 — resilience: "the overall slowdown ... is proportional to the
+//! fraction of faulty machines" (§4), contrasted with bulk-synchronous,
+//! which runs at the pace of the slowest machine.
+//!
+//! Sweeps the fraction of 8x-laggard workers for both systems and reports
+//! retained progress (rules or iterations per second, relative to the
+//! healthy cluster).
+//!
+//!     cargo bench --bench resilience
+
+use sparrow::data::DiskStore;
+use sparrow::harness::{self, Workload};
+use sparrow::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let w = Workload::standard();
+    let (store_path, test) = w.materialize()?;
+    let train = DiskStore::open(&store_path)?.read_all()?;
+    let secs = 10.0;
+    let workers = 4usize;
+    let slow = 8.0;
+
+    let mut t = Table::new(&[
+        "Faulty fraction",
+        "TMSN rules",
+        "TMSN retained",
+        "BSP iters",
+        "BSP retained",
+    ]);
+    let mut tmsn_base = 0usize;
+    let mut bsp_base = 0u64;
+    for faulty in 0..=workers / 2 {
+        let laggards: Vec<(usize, f64)> = (0..faulty).map(|i| (i, slow)).collect();
+
+        let tmsn = harness::run_sparrow(workers, &store_path, &test, "tmsn", |c| {
+            c.time_limit = std::time::Duration::from_secs_f64(secs);
+            c.max_rules = 100_000;
+            c.laggards = laggards.clone();
+        })?;
+        let tmsn_rules = tmsn.model.len();
+
+        let bsp = harness::run_bulk_sync(
+            &train,
+            &test,
+            workers,
+            laggards.clone(),
+            harness::stop(100_000, secs, 0.0),
+            "bsp",
+        );
+        let bsp_iters = bsp.points.last().map(|p| p.iterations).unwrap_or(0);
+
+        if faulty == 0 {
+            tmsn_base = tmsn_rules.max(1);
+            bsp_base = bsp_iters.max(1);
+        }
+        t.row(&[
+            format!("{}/{}", faulty, workers),
+            tmsn_rules.to_string(),
+            format!("{:.0}%", 100.0 * tmsn_rules as f64 / tmsn_base as f64),
+            bsp_iters.to_string(),
+            format!("{:.0}%", 100.0 * bsp_iters as f64 / bsp_base as f64),
+        ]);
+    }
+    println!("\nResilience sweep — {workers} workers, laggard slowdown {slow}x, {secs:.0}s budget");
+    t.print();
+    println!(
+        "\nexpected shape (paper §1/§4): TMSN retained ≈ 1 − faulty_fraction·(1−1/{slow});\nBSP retained ≈ 1/{slow} as soon as one laggard exists"
+    );
+    Ok(())
+}

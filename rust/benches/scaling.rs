@@ -1,0 +1,62 @@
+//! E5 — worker-count scaling (Table 1's 1 → 10 workers = 3.2x claim).
+//!
+//! Sweeps the cluster size and reports time-to-target-loss and rules/sec.
+//! NOTE: this testbed has a single core, so *compute* does not speed up
+//! with workers — what scales is the protocol (feature-striping means each
+//! worker certifies from a narrower candidate set, so certification is
+//! cheaper, and accepted remote rules are free). The wall-clock speedup on
+//! a real multi-core box is bounded below by the numbers here.
+//!
+//!     cargo bench --bench scaling
+
+use sparrow::harness::{self, Workload};
+use sparrow::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let w = Workload::standard();
+    let (store_path, test) = w.materialize()?;
+    let secs = 20.0;
+    let rules = 200;
+
+    let mut t = Table::new(&["Workers", "Rules", "Time-to-target (s)", "Final loss", "Broadcasts", "Accepts"]);
+    let mut baseline_time: Option<f64> = None;
+    // calibration: single worker's reachable loss defines the target
+    let mut target = 0.0;
+    for workers in [1usize, 2, 4, 8, 10] {
+        let out = harness::run_sparrow(workers, &store_path, &test, &format!("w{workers}"), |c| {
+            c.time_limit = std::time::Duration::from_secs_f64(secs);
+            c.max_rules = rules;
+        })?;
+        if workers == 1 {
+            let best = out
+                .series
+                .points
+                .iter()
+                .map(|p| p.exp_loss)
+                .fold(f64::INFINITY, f64::min);
+            target = best * 1.05;
+        }
+        let tt = out.series.time_to_loss(target).map(|d| d.as_secs_f64());
+        if workers == 1 {
+            baseline_time = tt;
+        }
+        let p = out.series.points.last().unwrap();
+        let accepts: u64 = out.workers.iter().map(|w| w.accepts).sum();
+        t.row(&[
+            workers.to_string(),
+            out.model.len().to_string(),
+            tt.map(|v| format!("{v:.2}")).unwrap_or_else(|| "—".into()),
+            format!("{:.4}", p.exp_loss),
+            out.net.0.to_string(),
+            accepts.to_string(),
+        ]);
+        if let (Some(base), Some(now)) = (baseline_time, tt) {
+            if workers > 1 {
+                eprintln!("  {workers} workers: {:.2}x vs single (paper @10: 3.2x)", base / now);
+            }
+        }
+    }
+    println!("\nScaling sweep — target loss {target:.4}");
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,310 @@
+//! Bulk-synchronous parallel boosting — the §1 strawman TMSN replaces.
+//!
+//! Valiant's BSP model applied to feature-parallel boosting: each of `p`
+//! workers owns a feature stripe; every iteration, all workers scan the
+//! whole dataset for their stripe's best candidate, then a **barrier**
+//! gathers the per-stripe winners at a master, which appends the global
+//! best and broadcasts the new model before the next iteration may start.
+//!
+//! The fast workers wait for the slowest at every barrier — with a laggard
+//! injected, the *whole cluster* runs at the laggard's pace (contrast with
+//! TMSN in `benches/resilience.rs`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::baselines::fullscan::BaselineOutcome;
+use crate::baselines::{StopConditions, TimedEvaluator};
+use crate::boosting::{
+    alpha::{alpha_for_correlation, clamp_correlation},
+    edges::accumulate_edges_stripe,
+    grid::partition_features,
+    CandidateGrid, EdgeMatrix,
+};
+use crate::data::DataBlock;
+use crate::model::{StrongRule, Stump};
+
+/// Bulk-synchronous trainer configuration.
+#[derive(Debug, Clone)]
+pub struct BulkSyncConfig {
+    pub workers: usize,
+    pub nthr: usize,
+    pub stop: StopConditions,
+    pub max_corr: f64,
+    /// per-worker compute slowdown multipliers (laggard injection)
+    pub laggards: Vec<(usize, f64)>,
+    /// synchronization overhead charged at every barrier (models the
+    /// master round-trip the paper's §1 attributes BSP's stalls to)
+    pub sync_overhead: Duration,
+}
+
+impl Default for BulkSyncConfig {
+    fn default() -> Self {
+        BulkSyncConfig {
+            workers: 4,
+            nthr: 4,
+            stop: StopConditions::default(),
+            max_corr: 0.8,
+            laggards: Vec::new(),
+            sync_overhead: Duration::from_micros(500),
+        }
+    }
+}
+
+/// Per-iteration result a worker reports at the barrier.
+#[derive(Debug, Clone, Copy, Default)]
+struct StripeBest {
+    feature: usize,
+    t: usize,
+    edge: f64,
+    sum_w: f64,
+}
+
+/// Run bulk-synchronous feature-parallel boosting (in-memory data,
+/// replicated to every worker as in the paper's setup).
+pub fn train_bulk_sync(
+    train: &DataBlock,
+    test: &DataBlock,
+    cfg: &BulkSyncConfig,
+    label: &str,
+) -> BaselineOutcome {
+    assert!(cfg.workers >= 1);
+    assert!(train.n > 0);
+    let f = train.f;
+    let grid = Arc::new(CandidateGrid::from_quantiles(
+        &train.select(&(0..train.n.min(4096)).collect::<Vec<_>>()),
+        cfg.nthr,
+    ));
+    let stripes = partition_features(f, cfg.workers);
+
+    let model = Arc::new(Mutex::new(StrongRule::new()));
+    let scores = Arc::new(Mutex::new(vec![0f32; train.n]));
+    let barrier = Arc::new(Barrier::new(cfg.workers + 1)); // workers + master
+    let bests: Arc<Mutex<Vec<StripeBest>>> =
+        Arc::new(Mutex::new(vec![StripeBest::default(); cfg.workers]));
+    let done = Arc::new(AtomicBool::new(false));
+    let train = Arc::new(train.clone());
+
+    let mut handles = Vec::new();
+    for (wid, stripe) in stripes.iter().copied().enumerate() {
+        let grid = Arc::clone(&grid);
+        let scores = Arc::clone(&scores);
+        let barrier = Arc::clone(&barrier);
+        let bests = Arc::clone(&bests);
+        let done = Arc::clone(&done);
+        let train = Arc::clone(&train);
+        let laggard = cfg
+            .laggards
+            .iter()
+            .find(|(w, _)| *w == wid)
+            .map(|(_, k)| *k)
+            .unwrap_or(1.0);
+        handles.push(std::thread::spawn(move || {
+            let mut w = vec![0f32; train.n];
+            loop {
+                barrier.wait(); // iteration start
+                if done.load(Ordering::Relaxed) {
+                    return;
+                }
+                let t0 = Instant::now();
+                {
+                    let sc = scores.lock().unwrap();
+                    for i in 0..train.n {
+                        w[i] = (-(train.label(i)) * sc[i]).exp();
+                    }
+                }
+                let mut accum = EdgeMatrix::zeros(f, grid.nthr);
+                accumulate_edges_stripe(&train, &w, &grid, stripe, &mut accum);
+                let mut best = StripeBest {
+                    sum_w: accum.sum_w,
+                    ..StripeBest::default()
+                };
+                for fi in stripe.0..stripe.1 {
+                    for t in 0..grid.nthr {
+                        let e = accum.edge(fi, t);
+                        if e.abs() > best.edge.abs() {
+                            best = StripeBest {
+                                feature: fi,
+                                t,
+                                edge: e,
+                                sum_w: accum.sum_w,
+                            };
+                        }
+                    }
+                }
+                // laggard: pretend this worker's scan took k× longer
+                if laggard > 1.0 {
+                    std::thread::sleep(t0.elapsed().mul_f64(laggard - 1.0));
+                }
+                bests.lock().unwrap()[wid] = best;
+                barrier.wait(); // results ready — master reduces
+            }
+        }));
+    }
+
+    let mut evaluator = TimedEvaluator::new(test, cfg.stop.eval_interval, label);
+    {
+        let m = model.lock().unwrap();
+        evaluator.force_eval(&m);
+    }
+    let t0 = Instant::now();
+    let mut iterations = 0usize;
+    loop {
+        if iterations >= cfg.stop.max_rules || t0.elapsed() >= cfg.stop.time_limit {
+            done.store(true, Ordering::Relaxed);
+            barrier.wait(); // release workers into the done check
+            break;
+        }
+        barrier.wait(); // start iteration
+        barrier.wait(); // wait for all stripes (the BSP stall point)
+        std::thread::sleep(cfg.sync_overhead); // master gather/scatter cost
+
+        let (stump, alpha) = {
+            let bests = bests.lock().unwrap();
+            let best = bests
+                .iter()
+                .max_by(|a, b| a.edge.abs().partial_cmp(&b.edge.abs()).unwrap())
+                .copied()
+                .unwrap();
+            if best.sum_w <= 0.0 || best.edge == 0.0 {
+                done.store(true, Ordering::Relaxed);
+                barrier.wait();
+                break;
+            }
+            let corr = clamp_correlation(best.edge / best.sum_w, cfg.max_corr);
+            if corr.abs() < 1e-9 {
+                done.store(true, Ordering::Relaxed);
+                barrier.wait();
+                break;
+            }
+            let sign = if corr >= 0.0 { 1.0f32 } else { -1.0 };
+            (
+                Stump::new(best.feature as u32, grid.row(best.feature)[best.t], sign),
+                alpha_for_correlation(corr.abs()) as f32,
+            )
+        };
+        {
+            let mut m = model.lock().unwrap();
+            m.push(stump, alpha);
+            let mut sc = scores.lock().unwrap();
+            for i in 0..train.n {
+                sc[i] += alpha * stump.predict(train.row(i));
+            }
+            iterations += 1;
+        }
+        let m = model.lock().unwrap().clone();
+        if let Some(loss) = evaluator.maybe_eval(&m) {
+            if cfg.stop.target_loss > 0.0 && loss <= cfg.stop.target_loss {
+                done.store(true, Ordering::Relaxed);
+                barrier.wait();
+                break;
+            }
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let final_model = model.lock().unwrap().clone();
+    evaluator.force_eval(&final_model);
+    BaselineOutcome {
+        model: final_model,
+        series: evaluator.series,
+        iterations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthGen;
+    use crate::data::SynthConfig;
+    use crate::eval::exp_loss;
+
+    fn synth(n: usize, seed: u64) -> DataBlock {
+        SynthGen::new(SynthConfig {
+            f: 8,
+            pos_rate: 0.4,
+            informative: 4,
+            signal: 0.9,
+            flip_rate: 0.02,
+            seed,
+        })
+        .next_block(n)
+    }
+
+    fn quick_cfg(workers: usize, rules: usize) -> BulkSyncConfig {
+        BulkSyncConfig {
+            workers,
+            stop: StopConditions {
+                max_rules: rules,
+                time_limit: Duration::from_secs(30),
+                target_loss: 0.0,
+                eval_interval: Duration::ZERO,
+            },
+            sync_overhead: Duration::from_micros(100),
+            ..BulkSyncConfig::default()
+        }
+    }
+
+    #[test]
+    fn learns_with_multiple_workers() {
+        let train = synth(4000, 1);
+        let test = synth(800, 2);
+        let out = train_bulk_sync(&train, &test, &quick_cfg(4, 8), "bs");
+        assert_eq!(out.model.len(), 8);
+        assert!(exp_loss(&out.model, &train) < 0.95);
+    }
+
+    #[test]
+    fn matches_fullscan_choice_per_iteration() {
+        // BSP over stripes picks the same global best as a full scan
+        use crate::baselines::fullscan::{train_fullscan, FullScanConfig};
+        use crate::baselines::DataSource;
+        let train = synth(3000, 3);
+        let test = synth(300, 4);
+        let bs = train_bulk_sync(&train, &test, &quick_cfg(3, 5), "bs");
+        let fs = train_fullscan(
+            &DataSource::memory(train.clone()),
+            &test,
+            &FullScanConfig {
+                stop: StopConditions {
+                    max_rules: 5,
+                    time_limit: Duration::from_secs(30),
+                    target_loss: 0.0,
+                    eval_interval: Duration::ZERO,
+                },
+                ..FullScanConfig::default()
+            },
+            "fs",
+        )
+        .unwrap();
+        // same grid quantiles (both use the 4096-pilot) → identical models
+        assert_eq!(bs.model, fs.model);
+    }
+
+    #[test]
+    fn laggard_slows_whole_cluster() {
+        let train = synth(20_000, 5);
+        let test = synth(100, 6);
+        let t0 = Instant::now();
+        let _ = train_bulk_sync(&train, &test, &quick_cfg(3, 4), "fast");
+        let fast = t0.elapsed();
+
+        let mut slow_cfg = quick_cfg(3, 4);
+        slow_cfg.laggards = vec![(1, 10.0)];
+        let t0 = Instant::now();
+        let _ = train_bulk_sync(&train, &test, &slow_cfg, "slow");
+        let slow = t0.elapsed();
+        // every barrier waits for the 10× laggard
+        assert!(slow > fast.mul_f64(1.5), "fast={fast:?} slow={slow:?}");
+    }
+
+    #[test]
+    fn single_worker_degenerates_to_serial() {
+        let train = synth(2000, 7);
+        let test = synth(200, 8);
+        let out = train_bulk_sync(&train, &test, &quick_cfg(1, 3), "bs1");
+        assert_eq!(out.model.len(), 3);
+    }
+}

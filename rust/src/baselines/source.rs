@@ -1,0 +1,182 @@
+//! Data source abstraction for the baselines' per-iteration full passes —
+//! the in-memory vs off-memory tiers of Table 1.
+
+use std::io;
+use std::path::Path;
+
+use crate::data::{DataBlock, DiskStore, IoThrottle};
+
+/// Where a full-scan trainer reads its examples from each iteration.
+pub enum DataSource {
+    /// Whole training set resident in memory (x1e tier).
+    Memory(DataBlock),
+    /// Streamed from disk every pass, throttled to `bandwidth` B/s
+    /// (r3 tier; 0 = unthrottled). The throttle persists across passes —
+    /// every re-read pays for its bytes.
+    Disk {
+        store: DiskStore,
+        throttle: std::cell::RefCell<IoThrottle>,
+        block: usize,
+    },
+}
+
+impl DataSource {
+    pub fn memory(block: DataBlock) -> DataSource {
+        DataSource::Memory(block)
+    }
+
+    pub fn disk(path: &Path, bandwidth: f64) -> io::Result<DataSource> {
+        let throttle = if bandwidth > 0.0 {
+            IoThrottle::new(bandwidth)
+        } else {
+            IoThrottle::unlimited()
+        };
+        Ok(DataSource::Disk {
+            store: DiskStore::open(path)?,
+            throttle: std::cell::RefCell::new(throttle),
+            block: 4096,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            DataSource::Memory(b) => b.n,
+            DataSource::Disk { store, .. } => store.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn num_features(&self) -> usize {
+        match self {
+            DataSource::Memory(b) => b.f,
+            DataSource::Disk { store, .. } => store.num_features(),
+        }
+    }
+
+    /// One full pass: call `f(block, row_offset)` over consecutive chunks.
+    /// The disk variant re-reads (and re-pays for) the bytes every pass.
+    pub fn for_each_block(
+        &self,
+        chunk: usize,
+        mut f: impl FnMut(&DataBlock, usize),
+    ) -> io::Result<()> {
+        match self {
+            DataSource::Memory(data) => {
+                let mut off = 0;
+                while off < data.n {
+                    let take = chunk.min(data.n - off);
+                    // borrow a sub-block without copying labels/features?
+                    // DataBlock is contiguous: build a cheap view-copy.
+                    let sub = DataBlock::new(
+                        take,
+                        data.f,
+                        data.features[off * data.f..(off + take) * data.f].to_vec(),
+                        data.labels[off..off + take].to_vec(),
+                    );
+                    f(&sub, off);
+                    off += take;
+                }
+                Ok(())
+            }
+            DataSource::Disk {
+                store,
+                throttle,
+                block,
+            } => {
+                let mut stream = store.stream(IoThrottle::unlimited())?;
+                let record_bytes = store.header.record_bytes();
+                let mut off = 0usize;
+                let n = store.len();
+                let chunk = chunk.min(*block);
+                while off < n {
+                    let take = chunk.min(n - off);
+                    let b = stream.next_block(take)?;
+                    if b.is_empty() {
+                        break;
+                    }
+                    throttle.borrow_mut().consume(b.n as u64 * record_bytes);
+                    f(&b, off);
+                    off += b.n;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// A pilot block for grid construction.
+    pub fn pilot(&self, n: usize) -> io::Result<DataBlock> {
+        match self {
+            DataSource::Memory(b) => {
+                let take = n.min(b.n);
+                Ok(DataBlock::new(
+                    take,
+                    b.f,
+                    b.features[..take * b.f].to_vec(),
+                    b.labels[..take].to_vec(),
+                ))
+            }
+            DataSource::Disk { store, .. } => {
+                let mut stream = store.stream(IoThrottle::unlimited())?;
+                stream.next_block(n.min(store.len()))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthGen;
+    use crate::data::SynthConfig;
+
+    fn synth(n: usize) -> DataBlock {
+        SynthGen::new(SynthConfig {
+            f: 4,
+            pos_rate: 0.5,
+            informative: 2,
+            signal: 1.0,
+            flip_rate: 0.0,
+            seed: 3,
+        })
+        .next_block(n)
+    }
+
+    #[test]
+    fn memory_pass_covers_all_rows() {
+        let data = synth(1000);
+        let src = DataSource::memory(data.clone());
+        let mut seen = 0usize;
+        src.for_each_block(256, |b, off| {
+            assert_eq!(off, seen);
+            seen += b.n;
+        })
+        .unwrap();
+        assert_eq!(seen, 1000);
+    }
+
+    #[test]
+    fn disk_pass_matches_memory() {
+        let data = synth(500);
+        let dir = std::env::temp_dir().join("sparrow_source_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("src.sprw");
+        DiskStore::write(&path, &data).unwrap();
+        let src = DataSource::disk(&path, 0.0).unwrap();
+        assert_eq!(src.len(), 500);
+        let mut collected = DataBlock::empty(4);
+        src.for_each_block(128, |b, _| collected.extend(b)).unwrap();
+        assert_eq!(collected, data);
+    }
+
+    #[test]
+    fn pilot_returns_prefix() {
+        let data = synth(300);
+        let src = DataSource::memory(data.clone());
+        let p = src.pilot(100).unwrap();
+        assert_eq!(p.n, 100);
+        assert_eq!(p.row(5), data.row(5));
+    }
+}

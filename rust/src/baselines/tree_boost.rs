@@ -1,0 +1,204 @@
+//! Boosting with multi-level trees — the paper's §5 future-work feature
+//! ("extend the algorithm to boosting full trees"), implemented for the
+//! full-scan baseline family (true-to-XGBoost depth-k trees over the same
+//! candidate grid).
+
+use std::time::Instant;
+
+use crate::baselines::{DataSource, StopConditions, TimedEvaluator};
+use crate::boosting::{
+    alpha::{alpha_for_correlation, clamp_correlation},
+    CandidateGrid,
+};
+use crate::data::DataBlock;
+use crate::eval::MetricSeries;
+use crate::model::tree::{DecisionTree, TreeEnsemble};
+
+/// Tree-booster configuration.
+#[derive(Debug, Clone)]
+pub struct TreeBoostConfig {
+    pub depth: usize,
+    pub nthr: usize,
+    pub stop: StopConditions,
+    pub max_corr: f64,
+}
+
+impl Default for TreeBoostConfig {
+    fn default() -> Self {
+        TreeBoostConfig {
+            depth: 2,
+            nthr: 4,
+            stop: StopConditions::default(),
+            max_corr: 0.8,
+        }
+    }
+}
+
+/// Tree-booster outcome.
+#[derive(Debug)]
+pub struct TreeBoostOutcome {
+    pub model: TreeEnsemble,
+    pub series: MetricSeries,
+    pub iterations: usize,
+}
+
+/// Train an AdaBoost ensemble of depth-`depth` trees.
+///
+/// Tree construction needs node-local example subsets, so the training set
+/// is materialized in memory (the paper's in-memory tier; XGBoost does the
+/// same for its exact/approx tree method).
+pub fn train_tree_boost(
+    source: &DataSource,
+    test: &DataBlock,
+    cfg: &TreeBoostConfig,
+    label: &str,
+) -> std::io::Result<TreeBoostOutcome> {
+    assert!(cfg.depth >= 1);
+    let mut train = DataBlock::empty(source.num_features());
+    source.for_each_block(8192, |b, _| train.extend(b))?;
+    assert!(train.n > 0, "empty training set");
+    let pilot = train.select(&(0..train.n.min(4096)).collect::<Vec<_>>());
+    let grid = CandidateGrid::from_quantiles(&pilot, cfg.nthr);
+
+    let mut model = TreeEnsemble::new();
+    let mut scores = vec![0f32; train.n];
+    let mut w = vec![1f32; train.n];
+    let t0 = Instant::now();
+
+    // evaluator needs scores on the test set: maintain incrementally
+    let mut test_scores = vec![0f32; test.n];
+    let mut evaluator = TimedEvaluator::new(test, cfg.stop.eval_interval, label);
+    evaluator.force_eval_scores(&test_scores, 0);
+
+    let mut iterations = 0usize;
+    while iterations < cfg.stop.max_rules && t0.elapsed() < cfg.stop.time_limit {
+        let tree = DecisionTree::fit(&train, &w, &grid, cfg.depth);
+        // weighted correlation of the fitted tree
+        let (mut m, mut sum_w) = (0f64, 0f64);
+        let preds: Vec<f32> = (0..train.n).map(|i| tree.predict(train.row(i))).collect();
+        for i in 0..train.n {
+            m += w[i] as f64 * train.label(i) as f64 * preds[i] as f64;
+            sum_w += w[i] as f64;
+        }
+        if sum_w <= 0.0 {
+            break;
+        }
+        let corr = clamp_correlation(m / sum_w, cfg.max_corr);
+        if corr <= 1e-9 {
+            break; // greedy tree no better than chance under current weights
+        }
+        let alpha = alpha_for_correlation(corr) as f32;
+        model.push(tree.clone(), alpha);
+        iterations += 1;
+
+        for i in 0..train.n {
+            scores[i] += alpha * preds[i];
+            w[i] = (-(train.label(i)) * scores[i]).exp();
+        }
+        for i in 0..test.n {
+            test_scores[i] += alpha * tree.predict(test.row(i));
+        }
+        if let Some(loss) = evaluator.maybe_eval_scores(&test_scores, model.len() as u64) {
+            if cfg.stop.target_loss > 0.0 && loss <= cfg.stop.target_loss {
+                break;
+            }
+        }
+    }
+    evaluator.force_eval_scores(&test_scores, model.len() as u64);
+    Ok(TreeBoostOutcome {
+        model,
+        series: evaluator.series,
+        iterations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::time::Duration;
+
+    fn xor_block(n: usize, seed: u64) -> DataBlock {
+        let mut rng = Rng::new(seed);
+        let mut b = DataBlock::empty(2);
+        for _ in 0..n {
+            let x0 = rng.gauss() as f32;
+            let x1 = rng.gauss() as f32;
+            let noisy = rng.bernoulli(0.05);
+            let mut y = if x0 * x1 > 0.0 { 1.0 } else { -1.0 };
+            if noisy {
+                y = -y;
+            }
+            b.push(&[x0, x1], y);
+        }
+        b
+    }
+
+    fn cfg(depth: usize, rules: usize) -> TreeBoostConfig {
+        TreeBoostConfig {
+            depth,
+            // median-only candidate grid: see model::tree::tests — greedy
+            // roots on pure XOR need the centered threshold
+            nthr: 1,
+            stop: StopConditions {
+                max_rules: rules,
+                time_limit: Duration::from_secs(30),
+                target_loss: 0.0,
+                eval_interval: Duration::ZERO,
+            },
+            ..TreeBoostConfig::default()
+        }
+    }
+
+    #[test]
+    fn depth2_trees_learn_xor_where_stumps_cannot() {
+        let train = xor_block(3000, 1);
+        let test = xor_block(1000, 2);
+        let src = DataSource::memory(train.clone());
+
+        // stumps (depth 1): stuck near chance on XOR
+        let d1 = train_tree_boost(&src, &test, &cfg(1, 10), "d1").unwrap();
+        // depth 2: learns
+        let d2 = train_tree_boost(&src, &test, &cfg(2, 10), "d2").unwrap();
+
+        let err = |ens: &TreeEnsemble, data: &DataBlock| {
+            (0..data.n)
+                .filter(|&i| ens.predict(data.row(i)) != data.label(i))
+                .count() as f64
+                / data.n as f64
+        };
+        let e1 = err(&d1.model, &test);
+        let e2 = err(&d2.model, &test);
+        assert!(e2 < 0.15, "depth-2 test error {e2}");
+        assert!(e2 < e1 - 0.2, "depth-2 ({e2}) must beat depth-1 ({e1})");
+    }
+
+    #[test]
+    fn series_recorded_and_improving() {
+        let train = xor_block(2000, 3);
+        let src = DataSource::memory(train.clone());
+        let out = train_tree_boost(&src, &train, &cfg(2, 8), "t").unwrap();
+        assert!(out.iterations >= 1);
+        let first = out.series.points.first().unwrap().exp_loss;
+        let last = out.series.points.last().unwrap().exp_loss;
+        assert!(last < first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn depth1_matches_fullscan_family_behaviour() {
+        // depth-1 tree boosting is stump boosting; training loss drops
+        let train = xor_block(1500, 4); // XOR: won't drop much, use easy data instead
+        let mut easy = DataBlock::empty(2);
+        for i in 0..train.n {
+            let y = train.label(i);
+            easy.push(&[y * (1.0 + (i % 7) as f32 * 0.1), train.row(i)[1]], y);
+        }
+        let src = DataSource::memory(easy.clone());
+        let out = train_tree_boost(&src, &easy, &cfg(1, 5), "d1easy").unwrap();
+        let loss = crate::eval::exp_loss_scores(
+            &(0..easy.n).map(|i| out.model.score(easy.row(i))).collect::<Vec<_>>(),
+            &easy.labels,
+        );
+        assert!(loss < 0.5, "loss={loss}");
+    }
+}

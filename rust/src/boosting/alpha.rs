@@ -1,0 +1,68 @@
+//! AdaBoost vote weights.
+//!
+//! The paper adds a certified weak rule with `alpha = ½ log((½+γ)/(½−γ))`
+//! (Alg. 1), where γ is the *advantage*: half the normalized weighted
+//! correlation. With weighted error ε, γ = ½ − ε and this is the classic
+//! `½ ln((1−ε)/ε)`.
+
+/// `alpha` from an advantage γ ∈ (0, ½).
+pub fn alpha_for_advantage(gamma: f64) -> f64 {
+    assert!(
+        gamma > 0.0 && gamma < 0.5,
+        "advantage must be in (0, 0.5), got {gamma}"
+    );
+    0.5 * ((0.5 + gamma) / (0.5 - gamma)).ln()
+}
+
+/// `alpha` from a normalized correlation `corr = Σ w y h / Σ w ∈ (0, 1)`.
+/// The advantage is `corr / 2`.
+pub fn alpha_for_correlation(corr: f64) -> f64 {
+    alpha_for_advantage(corr / 2.0)
+}
+
+/// Clamp a measured correlation into the valid open interval, guarding the
+/// log against perfectly-correlated candidates on tiny samples.
+pub fn clamp_correlation(corr: f64, max_corr: f64) -> f64 {
+    corr.clamp(-max_corr, max_corr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_advantage_is_invalid() {
+        assert!(std::panic::catch_unwind(|| alpha_for_advantage(0.0)).is_err());
+        assert!(std::panic::catch_unwind(|| alpha_for_advantage(0.5)).is_err());
+    }
+
+    #[test]
+    fn monotone_in_gamma() {
+        let a1 = alpha_for_advantage(0.05);
+        let a2 = alpha_for_advantage(0.1);
+        let a3 = alpha_for_advantage(0.4);
+        assert!(0.0 < a1 && a1 < a2 && a2 < a3);
+    }
+
+    #[test]
+    fn matches_error_form() {
+        // γ = ½ − ε  ⇒  α = ½ ln((1−ε)/ε)
+        let eps = 0.3f64;
+        let gamma = 0.5 - eps;
+        let a = alpha_for_advantage(gamma);
+        let want = 0.5 * ((1.0 - eps) / eps).ln();
+        assert!((a - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn correlation_form_halves() {
+        assert!((alpha_for_correlation(0.2) - alpha_for_advantage(0.1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clamp() {
+        assert_eq!(clamp_correlation(0.99, 0.9), 0.9);
+        assert_eq!(clamp_correlation(-0.99, 0.9), -0.9);
+        assert_eq!(clamp_correlation(0.3, 0.9), 0.3);
+    }
+}

@@ -1,0 +1,261 @@
+//! Native (CPU) candidate-edge computation — the Rust mirror of the L1
+//! Pallas kernel, used by the scanner's native backend and by the
+//! full-scan baselines.
+//!
+//! `edges[f][t] = Σ_i u_i · (2·[x_{i,f} > thr_{f,t}] − 1)`, `u_i = w_i y_i`.
+//!
+//! Implementation: per example, for each feature, count thresholds below
+//! the value (grid rows are ascending) and bucket-accumulate, then convert
+//! buckets to edges with one reverse prefix sum. O(n · F · NT) worst case
+//! but with a branch-light inner loop; see benches/micro_hotpath.rs.
+
+use crate::boosting::CandidateGrid;
+use crate::data::DataBlock;
+
+/// Edge matrix over a candidate grid, plus the stopping-rule scalars
+/// accumulated in the same pass.
+#[derive(Debug, Clone)]
+pub struct EdgeMatrix {
+    pub f: usize,
+    pub nthr: usize,
+    /// (f, nthr) row-major, positive-polarity edges (negate for sign = -1)
+    pub edges: Vec<f64>,
+    /// Σ |w|  (W of Alg. 2)
+    pub sum_w: f64,
+    /// Σ w²   (V of Alg. 2)
+    pub sum_w2: f64,
+    /// examples accumulated
+    pub count: u64,
+}
+
+impl EdgeMatrix {
+    pub fn zeros(f: usize, nthr: usize) -> EdgeMatrix {
+        EdgeMatrix {
+            f,
+            nthr,
+            edges: vec![0.0; f * nthr],
+            sum_w: 0.0,
+            sum_w2: 0.0,
+            count: 0,
+        }
+    }
+
+    #[inline]
+    pub fn edge(&self, feature: usize, t: usize) -> f64 {
+        self.edges[feature * self.nthr + t]
+    }
+
+    /// Merge another accumulation (e.g. from a second batch).
+    pub fn merge(&mut self, other: &EdgeMatrix) {
+        assert_eq!(self.f, other.f);
+        assert_eq!(self.nthr, other.nthr);
+        for (a, b) in self.edges.iter_mut().zip(&other.edges) {
+            *a += b;
+        }
+        self.sum_w += other.sum_w;
+        self.sum_w2 += other.sum_w2;
+        self.count += other.count;
+    }
+
+    /// Best candidate by |edge| over both polarities:
+    /// returns `(feature, t, signed_edge)` where the sign picks polarity.
+    pub fn best(&self) -> (usize, usize, f64) {
+        let mut best = (0, 0, 0.0f64);
+        for f in 0..self.f {
+            for t in 0..self.nthr {
+                let e = self.edge(f, t);
+                if e.abs() > best.2.abs() {
+                    best = (f, t, e);
+                }
+            }
+        }
+        best
+    }
+}
+
+/// Accumulate candidate edges over `block` with signed weights `u = w·y`.
+///
+/// `accum` must be shaped to `grid`; pass `EdgeMatrix::zeros` to start.
+pub fn accumulate_edges(
+    block: &DataBlock,
+    w: &[f32],
+    grid: &CandidateGrid,
+    accum: &mut EdgeMatrix,
+) {
+    accumulate_edges_stripe(block, w, grid, (0, grid.f), accum)
+}
+
+/// Striped variant (feature-based parallelization, §4): only candidate
+/// columns in `stripe = [start, end)` are accumulated; the stopping-rule
+/// scalars (Σ|w|, Σw², count) still cover the whole batch.
+pub fn accumulate_edges_stripe(
+    block: &DataBlock,
+    w: &[f32],
+    grid: &CandidateGrid,
+    stripe: (usize, usize),
+    accum: &mut EdgeMatrix,
+) {
+    let (fs, fe) = stripe;
+    assert_eq!(block.f, grid.f);
+    assert_eq!(block.n, w.len());
+    assert_eq!(accum.f, grid.f);
+    assert_eq!(accum.nthr, grid.nthr);
+    assert!(fs < fe && fe <= grid.f, "bad stripe {stripe:?}");
+    let nthr = grid.nthr;
+    // bucket[(f-fs)*(nthr+1) + k] accumulates u of examples whose value
+    // exceeds exactly k thresholds of feature f's ascending row
+    let mut bucket = vec![0f64; (fe - fs) * (nthr + 1)];
+    let mut sum_w = 0.0f64;
+    let mut sum_w2 = 0.0f64;
+    for i in 0..block.n {
+        let wi = w[i] as f64;
+        let u = wi * block.label(i) as f64;
+        sum_w += wi.abs();
+        sum_w2 += wi * wi;
+        let row = block.row(i);
+        for f in fs..fe {
+            let x = row[f];
+            let thr = grid.row(f);
+            // count thresholds strictly below x (row ascending)
+            let mut k = 0usize;
+            while k < nthr && x > thr[k] {
+                k += 1;
+            }
+            bucket[(f - fs) * (nthr + 1) + k] += u;
+        }
+    }
+    // edges[f][t] = sum_{k > t} bucket[k] - sum_{k <= t} bucket[k]
+    //             = 2 * suffix_sum(t+1) - total
+    for f in fs..fe {
+        let b = &bucket[(f - fs) * (nthr + 1)..(f - fs + 1) * (nthr + 1)];
+        let total: f64 = b.iter().sum();
+        let mut suffix = total;
+        for t in 0..nthr {
+            suffix -= b[t]; // now sum_{k >= t+1}
+            accum.edges[f * nthr + t] += 2.0 * suffix - total;
+        }
+    }
+    accum.sum_w += sum_w;
+    accum.sum_w2 += sum_w2;
+    accum.count += block.n as u64;
+}
+
+/// One-shot edge computation (fresh accumulator).
+pub fn edges_native(block: &DataBlock, w: &[f32], grid: &CandidateGrid) -> EdgeMatrix {
+    let mut accum = EdgeMatrix::zeros(grid.f, grid.nthr);
+    accumulate_edges(block, w, grid, &mut accum);
+    accum
+}
+
+/// Brute-force reference (tests only): evaluate every stump directly.
+pub fn edges_bruteforce(block: &DataBlock, w: &[f32], grid: &CandidateGrid) -> EdgeMatrix {
+    let mut accum = EdgeMatrix::zeros(grid.f, grid.nthr);
+    for i in 0..block.n {
+        let wi = w[i] as f64;
+        let u = wi * block.label(i) as f64;
+        accum.sum_w += wi.abs();
+        accum.sum_w2 += wi * wi;
+        let row = block.row(i);
+        for f in 0..grid.f {
+            for t in 0..grid.nthr {
+                let h = if row[f] > grid.row(f)[t] { 1.0 } else { -1.0 };
+                accum.edges[f * grid.nthr + t] += u * h;
+            }
+        }
+    }
+    accum.count = block.n as u64;
+    accum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen, prop_check};
+    use crate::util::rng::Rng;
+
+    fn random_block(rng: &mut Rng, n: usize, f: usize) -> (DataBlock, Vec<f32>) {
+        let feats = gen::normal_vec(rng, n * f);
+        let labels = gen::labels(rng, n, 0.4);
+        let w = gen::skewed_weights(rng, n, 3.0);
+        (DataBlock::new(n, f, feats, labels), w)
+    }
+
+    #[test]
+    fn matches_bruteforce() {
+        let mut rng = Rng::new(1);
+        let (block, w) = random_block(&mut rng, 200, 8);
+        let grid = CandidateGrid::from_quantiles(&block, 5);
+        let fast = edges_native(&block, &w, &grid);
+        let slow = edges_bruteforce(&block, &w, &grid);
+        for (a, b) in fast.edges.iter().zip(&slow.edges) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        assert!((fast.sum_w - slow.sum_w).abs() < 1e-9);
+        assert!((fast.sum_w2 - slow.sum_w2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_matches_bruteforce() {
+        prop_check("edges_native == bruteforce", 40, |rng| {
+            let n = gen::size(rng, 1, 120);
+            let f = gen::size(rng, 1, 10);
+            let nthr = gen::size(rng, 1, 6);
+            let (block, w) = random_block(rng, n, f);
+            let grid = CandidateGrid::uniform(f, nthr, -2.0, 2.0);
+            let fast = edges_native(&block, &w, &grid);
+            let slow = edges_bruteforce(&block, &w, &grid);
+            for (a, b) in fast.edges.iter().zip(&slow.edges) {
+                if (a - b).abs() > 1e-6 {
+                    return Err(format!("edge mismatch {a} vs {b} (n={n} f={f} nthr={nthr})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_equals_single_pass() {
+        let mut rng = Rng::new(2);
+        let (block, w) = random_block(&mut rng, 100, 4);
+        let grid = CandidateGrid::uniform(4, 3, -1.0, 1.0);
+        let whole = edges_native(&block, &w, &grid);
+
+        let chunks = block.chunks(33);
+        let mut merged = EdgeMatrix::zeros(4, 3);
+        let mut off = 0;
+        for c in &chunks {
+            let part = edges_native(c, &w[off..off + c.n], &grid);
+            merged.merge(&part);
+            off += c.n;
+        }
+        for (a, b) in whole.edges.iter().zip(&merged.edges) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert_eq!(whole.count, merged.count);
+    }
+
+    #[test]
+    fn best_picks_largest_abs() {
+        let mut m = EdgeMatrix::zeros(2, 2);
+        m.edges = vec![0.1, -0.9, 0.5, 0.2];
+        let (f, t, e) = m.best();
+        assert_eq!((f, t), (0, 1));
+        assert_eq!(e, -0.9);
+    }
+
+    #[test]
+    fn perfect_feature_has_max_edge() {
+        // feature 0 == label: stump (f=0, thr=0) has edge == Σw
+        let mut b = DataBlock::empty(2);
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let y = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+            b.push(&[y * 2.0, rng.gauss() as f32], y);
+        }
+        let w = vec![1.0f32; 50];
+        let grid = CandidateGrid::uniform(2, 1, -0.5, 0.5); // thr = 0
+        let m = edges_native(&b, &w, &grid);
+        assert!((m.edge(0, 0) - 50.0).abs() < 1e-9, "{}", m.edge(0, 0));
+        assert!(m.edge(1, 0).abs() < 20.0);
+    }
+}

@@ -1,0 +1,196 @@
+//! Candidate-threshold grids.
+//!
+//! Each worker owns a stripe of features (feature-based parallelization,
+//! §4) and, per feature, a small grid of candidate thresholds taken from
+//! quantiles of a pilot sample — the same approach as XGBoost's
+//! "approximate greedy" sketch, which the paper selects as its baseline
+//! configuration.
+
+use crate::data::DataBlock;
+
+/// Per-feature candidate thresholds, shaped `(features, nthr)` row-major —
+/// exactly the `grid_thr` input of the AOT scan executable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CandidateGrid {
+    pub f: usize,
+    pub nthr: usize,
+    /// (f, nthr) row-major; each row ascending
+    pub thresholds: Vec<f32>,
+}
+
+impl CandidateGrid {
+    /// Build from quantiles of a pilot block.
+    ///
+    /// Thresholds are midpoints of the `nthr+1`-quantile cut points of each
+    /// feature's empirical distribution, deduplicated by nudging (constant
+    /// features degenerate to copies, which is harmless: their stumps have
+    /// edge ≈ 0 and are never certified).
+    pub fn from_quantiles(pilot: &DataBlock, nthr: usize) -> CandidateGrid {
+        assert!(nthr >= 1);
+        assert!(pilot.n >= 2, "pilot sample too small");
+        let f = pilot.f;
+        let mut thresholds = vec![0f32; f * nthr];
+        let mut col = vec![0f32; pilot.n];
+        for j in 0..f {
+            for i in 0..pilot.n {
+                col[i] = pilot.row(i)[j];
+            }
+            col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for t in 0..nthr {
+                // cut point at quantile (t+1)/(nthr+1)
+                let q = (t + 1) as f64 / (nthr + 1) as f64;
+                let pos = q * (pilot.n - 1) as f64;
+                let lo = pos.floor() as usize;
+                let hi = pos.ceil() as usize;
+                let frac = (pos - lo as f64) as f32;
+                // exact when the bracketing values coincide (constant
+                // features must produce the exact constant, not a lerp
+                // rounding artifact)
+                thresholds[j * nthr + t] = if col[lo] == col[hi] {
+                    col[lo]
+                } else {
+                    col[lo] * (1.0 - frac) + col[hi] * frac
+                };
+            }
+        }
+        CandidateGrid { f, nthr, thresholds }
+    }
+
+    /// Uniform grid on [lo, hi] for every feature (tests / synthetic data).
+    pub fn uniform(f: usize, nthr: usize, lo: f32, hi: f32) -> CandidateGrid {
+        assert!(nthr >= 1 && hi > lo);
+        let mut thresholds = vec![0f32; f * nthr];
+        for j in 0..f {
+            for t in 0..nthr {
+                let frac = (t + 1) as f32 / (nthr + 1) as f32;
+                thresholds[j * nthr + t] = lo + frac * (hi - lo);
+            }
+        }
+        CandidateGrid { f, nthr, thresholds }
+    }
+
+    #[inline]
+    pub fn row(&self, feature: usize) -> &[f32] {
+        &self.thresholds[feature * self.nthr..(feature + 1) * self.nthr]
+    }
+
+    /// Number of candidate stumps including both polarities.
+    pub fn num_candidates(&self) -> usize {
+        self.f * self.nthr * 2
+    }
+
+    /// Restrict to a stripe of features `[start, end)`; threshold rows are
+    /// copied, and the stripe remembers its global feature offset.
+    pub fn stripe(&self, start: usize, end: usize) -> FeatureStripe {
+        assert!(start < end && end <= self.f);
+        FeatureStripe {
+            offset: start,
+            grid: CandidateGrid {
+                f: end - start,
+                nthr: self.nthr,
+                thresholds: self.thresholds[start * self.nthr..end * self.nthr].to_vec(),
+            },
+        }
+    }
+}
+
+/// A worker's stripe of the candidate grid (feature-based parallelization).
+#[derive(Debug, Clone)]
+pub struct FeatureStripe {
+    /// global index of the first feature in this stripe
+    pub offset: usize,
+    pub grid: CandidateGrid,
+}
+
+impl FeatureStripe {
+    /// Map a stripe-local feature index to the global one.
+    pub fn global_feature(&self, local: usize) -> usize {
+        self.offset + local
+    }
+}
+
+/// Partition `f` features into `n` contiguous stripes (sizes differ by ≤1).
+pub fn partition_features(f: usize, n: usize) -> Vec<(usize, usize)> {
+    assert!(n >= 1 && f >= n, "need at least one feature per worker");
+    let base = f / n;
+    let extra = f % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let len = base + usize::from(i < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pilot() -> DataBlock {
+        let mut b = DataBlock::empty(2);
+        for i in 0..100 {
+            b.push(&[i as f32, (i % 10) as f32], if i % 2 == 0 { 1.0 } else { -1.0 });
+        }
+        b
+    }
+
+    #[test]
+    fn quantile_grid_ascending_and_in_range() {
+        let g = CandidateGrid::from_quantiles(&pilot(), 4);
+        assert_eq!(g.f, 2);
+        assert_eq!(g.nthr, 4);
+        for j in 0..2 {
+            let row = g.row(j);
+            for t in 1..4 {
+                assert!(row[t] >= row[t - 1], "row not ascending: {row:?}");
+            }
+            assert!(row[0] >= 0.0);
+        }
+        // feature 0 spans 0..99: quantile cuts near 20/40/60/80
+        let r0 = g.row(0);
+        assert!((r0[0] - 19.8).abs() < 1.0, "{r0:?}");
+        assert!((r0[3] - 79.2).abs() < 1.0, "{r0:?}");
+    }
+
+    #[test]
+    fn uniform_grid() {
+        let g = CandidateGrid::uniform(3, 3, 0.0, 4.0);
+        assert_eq!(g.row(1), &[1.0, 2.0, 3.0]);
+        assert_eq!(g.num_candidates(), 3 * 3 * 2);
+    }
+
+    #[test]
+    fn stripe_copies_rows() {
+        let g = CandidateGrid::uniform(4, 2, 0.0, 3.0);
+        let s = g.stripe(2, 4);
+        assert_eq!(s.offset, 2);
+        assert_eq!(s.grid.f, 2);
+        assert_eq!(s.grid.row(0), g.row(2));
+        assert_eq!(s.global_feature(1), 3);
+    }
+
+    #[test]
+    fn partition_covers_all_features() {
+        for (f, n) in [(10, 3), (9, 3), (7, 7), (256, 10)] {
+            let parts = partition_features(f, n);
+            assert_eq!(parts.len(), n);
+            assert_eq!(parts[0].0, 0);
+            assert_eq!(parts[n - 1].1, f);
+            for w in parts.windows(2) {
+                assert_eq!(w[0].1, w[1].0); // contiguous
+            }
+            let sizes: Vec<usize> = parts.iter().map(|(a, b)| b - a).collect();
+            let min = *sizes.iter().min().unwrap();
+            let max = *sizes.iter().max().unwrap();
+            assert!(max - min <= 1);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn partition_requires_enough_features() {
+        partition_features(2, 3);
+    }
+}

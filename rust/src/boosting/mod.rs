@@ -1,0 +1,11 @@
+//! Boosting math shared by Sparrow and the baselines: AdaBoost vote
+//! weights, candidate-threshold grids, and native (CPU) edge computation
+//! mirroring the L1 kernel exactly.
+
+pub mod alpha;
+pub mod edges;
+pub mod grid;
+
+pub use alpha::{alpha_for_advantage, alpha_for_correlation};
+pub use edges::{edges_native, EdgeMatrix};
+pub use grid::CandidateGrid;

@@ -1,0 +1,340 @@
+//! Configuration system: typed configs with file (`key = value` lines) and
+//! CLI (`--key value`) overrides.
+//!
+//! One [`TrainConfig`] drives Sparrow runs; the same knobs parameterize the
+//! baselines so Table-1 comparisons share a substrate.
+
+use std::time::Duration;
+
+use crate::network::NetConfig;
+use crate::util::cli::Args;
+
+/// Which sequential stopping rule the scanner uses (ablation A1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoppingKind {
+    Lil,
+    Hoeffding,
+    DomingoWatanabe,
+    FixedScan,
+}
+
+impl StoppingKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "lil" => Ok(StoppingKind::Lil),
+            "hoeffding" => Ok(StoppingKind::Hoeffding),
+            "dw" | "domingo-watanabe" => Ok(StoppingKind::DomingoWatanabe),
+            "fixed" | "fixed-scan" => Ok(StoppingKind::FixedScan),
+            _ => Err(format!(
+                "unknown stopping rule {s:?} (lil|hoeffding|dw|fixed)"
+            )),
+        }
+    }
+}
+
+/// Which selective sampler the Sampler uses (ablation A2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplerKind {
+    MinimalVariance,
+    Rejection,
+    Uniform,
+}
+
+impl SamplerKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "mvs" | "minimal-variance" => Ok(SamplerKind::MinimalVariance),
+            "rejection" => Ok(SamplerKind::Rejection),
+            "uniform" => Ok(SamplerKind::Uniform),
+            _ => Err(format!("unknown sampler {s:?} (mvs|rejection|uniform)")),
+        }
+    }
+}
+
+/// Scanner compute backend (ablation A4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// pure-Rust hot loop
+    Native,
+    /// AOT scan artifact with the Pallas edge kernel, via PJRT
+    XlaPallas,
+    /// AOT scan artifact with the pure-jnp edge reduction, via PJRT
+    XlaJnp,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "xla" | "xla-pallas" => Ok(Backend::XlaPallas),
+            "xla-jnp" => Ok(Backend::XlaJnp),
+            _ => Err(format!("unknown backend {s:?} (native|xla-pallas|xla-jnp)")),
+        }
+    }
+}
+
+/// Full training configuration for a Sparrow cluster run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub num_workers: usize,
+    /// in-memory sample size per worker (m)
+    pub sample_size: usize,
+    /// scan batch size (matches the AOT artifact's B when backend = xla)
+    pub batch: usize,
+    /// candidate thresholds per feature (NT)
+    pub nthr: usize,
+    /// initial target advantage γ₀ (halved on fruitless passes)
+    pub gamma0: f64,
+    /// floor for γ — scanning below this gives up the iteration
+    pub gamma_min: f64,
+    /// resample when n_eff / m drops below this (paper §3)
+    pub ess_threshold: f64,
+    /// maximum number of weak rules to learn (K)
+    pub max_rules: usize,
+    /// wall-clock budget for the run
+    pub time_limit: Duration,
+    /// stop once the *training-sample* loss bound drops below this (0 = off)
+    pub target_bound: f64,
+    /// stop once measured test exponential loss reaches this (0 = off) —
+    /// Table 1's "convergence time to an almost optimal loss"
+    pub target_loss: f64,
+    pub stopping: StoppingKind,
+    /// LIL constant C
+    pub stop_c: f64,
+    /// total failure budget δ (union-bounded over candidates)
+    pub stop_delta: f64,
+    pub sampler: SamplerKind,
+    pub backend: Backend,
+    /// disk read bandwidth in bytes/s (0 = unlimited, in-memory tier)
+    pub disk_bandwidth: f64,
+    /// evaluation cadence for the metric series
+    pub eval_interval: Duration,
+    pub net: NetConfig,
+    /// per-worker compute slowdown multipliers (laggard injection)
+    pub laggards: Vec<(usize, f64)>,
+    /// per-worker crash times (failure injection)
+    pub crashes: Vec<(usize, Duration)>,
+    pub seed: u64,
+    /// directory containing AOT artifacts (xla backends)
+    pub artifacts_dir: String,
+    /// resume from a checkpoint: every worker starts from this
+    /// `(model, certified bound)` instead of the empty model
+    pub resume: Option<(crate::model::StrongRule, f64)>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            num_workers: 1,
+            sample_size: 4096,
+            batch: 128,
+            nthr: 4,
+            gamma0: 0.25,
+            gamma_min: 0.0005,
+            ess_threshold: 0.3,
+            max_rules: 128,
+            time_limit: Duration::from_secs(60),
+            target_bound: 0.0,
+            target_loss: 0.0,
+            stopping: StoppingKind::Lil,
+            stop_c: 0.67,
+            stop_delta: 1e-6,
+            sampler: SamplerKind::MinimalVariance,
+            backend: Backend::Native,
+            disk_bandwidth: 0.0,
+            eval_interval: Duration::from_millis(250),
+            net: NetConfig::default(),
+            laggards: Vec::new(),
+            crashes: Vec::new(),
+            seed: 42,
+            artifacts_dir: "artifacts".into(),
+            resume: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Apply `--key value` CLI overrides (see `sparrow train --help`).
+    pub fn apply_args(mut self, args: &Args) -> Result<TrainConfig, String> {
+        self.num_workers = args.get_usize("workers", self.num_workers);
+        self.sample_size = args.get_usize("sample-size", self.sample_size);
+        self.batch = args.get_usize("batch", self.batch);
+        self.nthr = args.get_usize("nthr", self.nthr);
+        self.gamma0 = args.get_f64("gamma0", self.gamma0);
+        self.gamma_min = args.get_f64("gamma-min", self.gamma_min);
+        self.ess_threshold = args.get_f64("ess-threshold", self.ess_threshold);
+        self.max_rules = args.get_usize("max-rules", self.max_rules);
+        self.time_limit = Duration::from_secs_f64(
+            args.get_f64("time-limit", self.time_limit.as_secs_f64()),
+        );
+        self.target_bound = args.get_f64("target-bound", self.target_bound);
+        self.target_loss = args.get_f64("target-loss", self.target_loss);
+        if let Some(s) = args.get("stopping") {
+            self.stopping = StoppingKind::parse(s)?;
+        }
+        self.stop_c = args.get_f64("stop-c", self.stop_c);
+        self.stop_delta = args.get_f64("stop-delta", self.stop_delta);
+        if let Some(s) = args.get("sampler") {
+            self.sampler = SamplerKind::parse(s)?;
+        }
+        if let Some(s) = args.get("backend") {
+            self.backend = Backend::parse(s)?;
+        }
+        self.disk_bandwidth = args.get_f64("disk-bandwidth", self.disk_bandwidth);
+        self.eval_interval = Duration::from_secs_f64(
+            args.get_f64("eval-interval", self.eval_interval.as_secs_f64()),
+        );
+        self.seed = args.get_u64("seed", self.seed);
+        self.artifacts_dir = args.get_or("artifacts-dir", &self.artifacts_dir);
+        self.validate()?;
+        Ok(self)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.num_workers == 0 {
+            return Err("workers must be >= 1".into());
+        }
+        if self.sample_size < 2 {
+            return Err("sample-size must be >= 2".into());
+        }
+        if !(self.gamma0 > 0.0 && self.gamma0 < 0.5) {
+            return Err("gamma0 must be in (0, 0.5)".into());
+        }
+        if !(self.gamma_min > 0.0 && self.gamma_min <= self.gamma0) {
+            return Err("gamma-min must be in (0, gamma0]".into());
+        }
+        if !(self.ess_threshold > 0.0 && self.ess_threshold < 1.0) {
+            return Err("ess-threshold must be in (0, 1)".into());
+        }
+        if self.batch == 0 || self.nthr == 0 || self.max_rules == 0 {
+            return Err("batch, nthr and max-rules must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+/// Workload (dataset) configuration shared by `gen-data`, `train` and the
+/// benches.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub train_n: usize,
+    pub test_n: usize,
+    pub features: usize,
+    pub pos_rate: f64,
+    pub informative: usize,
+    pub signal: f64,
+    pub flip_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            train_n: 100_000,
+            test_n: 10_000,
+            features: 256,
+            pos_rate: 0.025,
+            informative: 64,
+            signal: 0.35,
+            flip_rate: 0.05,
+            seed: 7,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    pub fn apply_args(mut self, args: &Args) -> Result<WorkloadConfig, String> {
+        self.train_n = args.get_usize("train-n", self.train_n);
+        self.test_n = args.get_usize("test-n", self.test_n);
+        self.features = args.get_usize("features", self.features);
+        self.pos_rate = args.get_f64("pos-rate", self.pos_rate);
+        self.informative = args.get_usize("informative", self.informative);
+        self.signal = args.get_f64("signal", self.signal);
+        self.flip_rate = args.get_f64("flip-rate", self.flip_rate);
+        self.seed = args.get_u64("data-seed", self.seed);
+        if self.informative > self.features {
+            return Err("informative must be <= features".into());
+        }
+        Ok(self)
+    }
+
+    pub fn synth_config(&self) -> crate::data::SynthConfig {
+        crate::data::SynthConfig {
+            f: self.features,
+            pos_rate: self.pos_rate,
+            informative: self.informative,
+            signal: self.signal,
+            flip_rate: self.flip_rate,
+            seed: self.seed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn defaults_valid() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let cfg = TrainConfig::default()
+            .apply_args(&args("train --workers 4 --gamma0 0.1 --stopping hoeffding --backend native --sampler rejection"))
+            .unwrap();
+        assert_eq!(cfg.num_workers, 4);
+        assert!((cfg.gamma0 - 0.1).abs() < 1e-12);
+        assert_eq!(cfg.stopping, StoppingKind::Hoeffding);
+        assert_eq!(cfg.sampler, SamplerKind::Rejection);
+    }
+
+    #[test]
+    fn invalid_gamma_rejected() {
+        assert!(TrainConfig::default()
+            .apply_args(&args("train --gamma0 0.7"))
+            .is_err());
+        assert!(TrainConfig::default()
+            .apply_args(&args("train --gamma0 0"))
+            .is_err());
+    }
+
+    #[test]
+    fn invalid_workers_rejected() {
+        assert!(TrainConfig::default()
+            .apply_args(&args("train --workers 0"))
+            .is_err());
+    }
+
+    #[test]
+    fn unknown_enum_values_rejected() {
+        assert!(TrainConfig::default().apply_args(&args("t --stopping nope")).is_err());
+        assert!(TrainConfig::default().apply_args(&args("t --sampler nope")).is_err());
+        assert!(TrainConfig::default().apply_args(&args("t --backend nope")).is_err());
+    }
+
+    #[test]
+    fn enum_parsers() {
+        assert_eq!(StoppingKind::parse("fixed").unwrap(), StoppingKind::FixedScan);
+        assert_eq!(SamplerKind::parse("mvs").unwrap(), SamplerKind::MinimalVariance);
+        assert_eq!(Backend::parse("xla").unwrap(), Backend::XlaPallas);
+        assert_eq!(Backend::parse("xla-jnp").unwrap(), Backend::XlaJnp);
+    }
+
+    #[test]
+    fn workload_overrides_and_validation() {
+        let w = WorkloadConfig::default()
+            .apply_args(&args("g --train-n 500 --features 32 --informative 8"))
+            .unwrap();
+        assert_eq!(w.train_n, 500);
+        assert_eq!(w.features, 32);
+        assert!(WorkloadConfig::default()
+            .apply_args(&args("g --features 4 --informative 8"))
+            .is_err());
+    }
+}

@@ -1,0 +1,334 @@
+//! Cluster coordinator — spawn/observe/collect, never synchronize.
+//!
+//! TMSN has no head node: the "coordinator" here is launch + observation
+//! infrastructure. It spawns worker threads, attaches a passive observer
+//! endpoint to the broadcast fabric (so it sees the same model stream
+//! every worker sees — it is just another listener, not a barrier), and
+//! periodically evaluates the best-certified model on the held-out set to
+//! produce the paper's metric-vs-time series.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::boosting::{grid::partition_features, CandidateGrid};
+use crate::config::TrainConfig;
+use crate::data::{DataBlock, DiskStore};
+use crate::eval::{auprc, exp_loss_scores, MetricPoint, MetricSeries};
+use crate::eval::metrics::scores;
+use crate::metrics::{events, Event, EventLog};
+use crate::model::StrongRule;
+use crate::network::{Fabric, NetConfig};
+use crate::tmsn::{Certificate, ModelMessage};
+use crate::worker::{run_worker, WorkerParams, WorkerResult};
+
+/// Everything a cluster run produces.
+#[derive(Debug)]
+pub struct ClusterOutcome {
+    /// best model by certified bound at shutdown
+    pub model: StrongRule,
+    pub loss_bound: f64,
+    pub series: MetricSeries,
+    pub events: Vec<Event>,
+    pub workers: Vec<WorkerResult>,
+    pub elapsed: Duration,
+    /// (sent, delivered, dropped) fabric counters
+    pub net: (u64, u64, u64),
+}
+
+impl ClusterOutcome {
+    /// Render the Figure-1 execution timeline.
+    pub fn timeline(&self, width: usize) -> String {
+        crate::metrics::render_timeline(&self.events, self.workers.len(), width)
+    }
+}
+
+/// Train a Sparrow cluster on `store`, evaluating against `test`.
+///
+/// `make_backend` constructs each worker's scan backend (native or PJRT —
+/// see `runtime::make_backend` for the config-driven factory).
+pub fn train_cluster(
+    cfg: &TrainConfig,
+    store_path: &std::path::Path,
+    test: &DataBlock,
+    label: &str,
+    make_backend: &dyn Fn(usize) -> anyhow::Result<Box<dyn crate::scanner::ScanBackend>>,
+) -> anyhow::Result<ClusterOutcome> {
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    let t0 = Instant::now();
+    let store = DiskStore::open(store_path)?;
+    let f = store.num_features();
+    anyhow::ensure!(
+        f >= cfg.num_workers,
+        "need at least one feature per worker ({f} features, {} workers)",
+        cfg.num_workers
+    );
+
+    // Pilot sample → shared candidate grid (workers agree on candidates so
+    // broadcast models are interpretable everywhere).
+    let pilot_n = 4096.min(store.len());
+    let pilot = store
+        .stream(crate::data::IoThrottle::unlimited())?
+        .next_block(pilot_n)?;
+    let grid = CandidateGrid::from_quantiles(&pilot, cfg.nthr);
+    let stripes = partition_features(f, cfg.num_workers);
+
+    // Fabric: one endpoint per worker + a passive observer (index n).
+    let net = NetConfig {
+        seed: cfg.seed ^ 0xFA8,
+        ..cfg.net.clone()
+    };
+    let (fabric, mut endpoints) = Fabric::<ModelMessage>::new(cfg.num_workers + 1, net);
+    let observer = endpoints.pop().expect("observer endpoint");
+
+    let (log, event_rx) = EventLog::new();
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // Spawn workers.
+    let mut handles = Vec::new();
+    for (id, endpoint) in endpoints.into_iter().enumerate() {
+        let params = WorkerParams {
+            id,
+            cfg: cfg.clone(),
+            grid: grid.clone(),
+            stripe: stripes[id],
+            store: DiskStore::open(store_path)?,
+            endpoint: Box::new(endpoint),
+            log: log.clone(),
+            stop: Arc::clone(&stop),
+            backend: make_backend(id)?,
+            laggard: cfg
+                .laggards
+                .iter()
+                .find(|(w, _)| *w == id)
+                .map(|(_, k)| *k)
+                .unwrap_or(1.0),
+            crash_after: cfg
+                .crashes
+                .iter()
+                .find(|(w, _)| *w == id)
+                .map(|(_, t)| *t),
+            seed: cfg.seed,
+        };
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("sparrow-worker-{id}"))
+                .spawn(move || run_worker(params))?,
+        );
+    }
+
+    // Observe: track the best certified model seen on the wire; evaluate
+    // on the held-out set every eval_interval.
+    let mut best_model = StrongRule::new();
+    let mut best_cert = Certificate::initial();
+    let mut series = MetricSeries::new(label);
+    let mut next_eval = Instant::now();
+    let mut iterations_seen = 0u64;
+    loop {
+        while let Some(msg) = observer.try_recv() {
+            iterations_seen = iterations_seen.max(msg.model.len() as u64);
+            if msg.cert.loss_bound < best_cert.loss_bound {
+                best_cert = msg.cert;
+                best_model = msg.model;
+            }
+        }
+        if Instant::now() >= next_eval {
+            next_eval = Instant::now() + cfg.eval_interval;
+            let sc = scores(&best_model, test);
+            let point = MetricPoint {
+                elapsed: t0.elapsed(),
+                iterations: best_model.len() as u64,
+                exp_loss: exp_loss_scores(&sc, &test.labels),
+                auprc: auprc(&sc, &test.labels),
+            };
+            series.push(point);
+            if cfg.target_loss > 0.0 && point.exp_loss <= cfg.target_loss {
+                stop.store(true, Ordering::Relaxed);
+            }
+        }
+        if t0.elapsed() >= cfg.time_limit {
+            stop.store(true, Ordering::Relaxed);
+        }
+        if handles.iter().all(|h| h.is_finished()) {
+            break;
+        }
+        if stop.load(Ordering::Relaxed) && handles.iter().all(|h| h.is_finished()) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    let workers: Vec<WorkerResult> = handles
+        .into_iter()
+        .map(|h| h.join().expect("worker panicked"))
+        .collect();
+
+    // Workers may have certified improvements the observer's last poll
+    // missed; fold their final states in.
+    while let Some(msg) = observer.try_recv() {
+        if msg.cert.loss_bound < best_cert.loss_bound {
+            best_cert = msg.cert;
+            best_model = msg.model;
+        }
+    }
+    for w in &workers {
+        if w.loss_bound < best_cert.loss_bound {
+            best_cert.loss_bound = w.loss_bound;
+            best_model = w.model.clone();
+        }
+    }
+
+    // Final evaluation point.
+    let sc = scores(&best_model, test);
+    series.push(MetricPoint {
+        elapsed: t0.elapsed(),
+        iterations: best_model.len() as u64,
+        exp_loss: exp_loss_scores(&sc, &test.labels),
+        auprc: auprc(&sc, &test.labels),
+    });
+
+    let net_stats = fabric.stats.snapshot();
+    fabric.shutdown();
+    let collected = events::drain(&event_rx);
+
+    Ok(ClusterOutcome {
+        model: best_model,
+        loss_bound: best_cert.loss_bound,
+        series,
+        events: collected,
+        workers,
+        elapsed: t0.elapsed(),
+        net: net_stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthGen;
+    use crate::data::SynthConfig;
+    use crate::scanner::NativeBackend;
+
+    fn make_store(n: usize, f: usize, seed: u64) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("sparrow_coord_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("train_{seed}_{n}_{f}.sprw"));
+        let cfg = SynthConfig {
+            f,
+            pos_rate: 0.3,
+            informative: f / 2,
+            signal: 0.8,
+            flip_rate: 0.02,
+            seed,
+        };
+        SynthGen::new(cfg).write_store(&path, n).unwrap();
+        path
+    }
+
+    fn test_block(f: usize, seed: u64) -> DataBlock {
+        let cfg = SynthConfig {
+            f,
+            pos_rate: 0.3,
+            informative: f / 2,
+            signal: 0.8,
+            flip_rate: 0.02,
+            seed,
+        };
+        SynthGen::new(cfg).next_block(2000)
+    }
+
+    fn native_factory() -> impl Fn(usize) -> anyhow::Result<Box<dyn crate::scanner::ScanBackend>> {
+        |_| Ok(Box::new(NativeBackend) as Box<dyn crate::scanner::ScanBackend>)
+    }
+
+    #[test]
+    fn single_worker_learns() {
+        let store = make_store(20_000, 16, 21);
+        let test = test_block(16, 22);
+        let cfg = TrainConfig {
+            num_workers: 1,
+            sample_size: 2000,
+            max_rules: 10,
+            time_limit: Duration::from_secs(20),
+            gamma0: 0.2,
+            ..TrainConfig::default()
+        };
+        let out = train_cluster(&cfg, &store, &test, "t", &native_factory()).unwrap();
+        assert!(!out.model.is_empty(), "no rules learned");
+        assert!(out.loss_bound < 1.0);
+        let final_loss = out.series.final_loss().unwrap();
+        assert!(final_loss < 1.0, "loss={final_loss}");
+        assert!(out.workers[0].found > 0);
+    }
+
+    #[test]
+    fn multi_worker_cluster_converges_and_communicates() {
+        let store = make_store(20_000, 16, 23);
+        let test = test_block(16, 24);
+        let cfg = TrainConfig {
+            num_workers: 4,
+            sample_size: 1500,
+            max_rules: 12,
+            time_limit: Duration::from_secs(30),
+            gamma0: 0.2,
+            ..TrainConfig::default()
+        };
+        let out = train_cluster(&cfg, &store, &test, "t4", &native_factory()).unwrap();
+        assert!(out.model.len() >= 2);
+        let (sent, delivered, _) = out.net;
+        assert!(sent > 0, "no broadcasts");
+        assert!(delivered > 0, "no deliveries");
+        // someone accepted someone else's model
+        let total_accepts: u64 = out.workers.iter().map(|w| w.accepts).sum();
+        assert!(total_accepts > 0, "no TMSN adoption happened");
+        // events recorded
+        assert!(out
+            .events
+            .iter()
+            .any(|e| e.kind == crate::metrics::EventKind::Broadcast));
+        let timeline = out.timeline(60);
+        assert!(timeline.contains("w0"));
+    }
+
+    #[test]
+    fn crash_injection_does_not_stop_cluster() {
+        let store = make_store(10_000, 8, 25);
+        let test = test_block(8, 26);
+        let cfg = TrainConfig {
+            num_workers: 3,
+            sample_size: 1000,
+            // large enough that the cluster is still running when the
+            // crash deadline arrives (the deadline is checked per loop)
+            max_rules: 500,
+            time_limit: Duration::from_secs(5),
+            gamma0: 0.2,
+            crashes: vec![(1, Duration::from_millis(30))],
+            ..TrainConfig::default()
+        };
+        let out = train_cluster(&cfg, &store, &test, "crash", &native_factory()).unwrap();
+        assert!(out.workers[1].crashed);
+        // the survivors still learned a model
+        assert!(!out.model.is_empty());
+        assert!(out
+            .events
+            .iter()
+            .any(|e| e.kind == crate::metrics::EventKind::Crash));
+    }
+
+    #[test]
+    fn respects_time_limit() {
+        let store = make_store(5_000, 8, 27);
+        let test = test_block(8, 28);
+        let cfg = TrainConfig {
+            num_workers: 2,
+            sample_size: 1000,
+            max_rules: 100_000,                    // never reached
+            gamma_min: 1e-9,                       // keep halving forever
+            time_limit: Duration::from_millis(1500),
+            ..TrainConfig::default()
+        };
+        let t0 = Instant::now();
+        let _ = train_cluster(&cfg, &store, &test, "tl", &native_factory()).unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(15));
+    }
+}

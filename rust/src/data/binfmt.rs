@@ -1,0 +1,255 @@
+//! Binary on-disk example format.
+//!
+//! Layout (little-endian):
+//!   header:  magic "SPRW" (4 bytes) | version u32 | n u64 | f u32 | pad u32
+//!   records: n × ( label f32 | features f32 × f )
+//!
+//! Designed for fast *sequential* streaming (the Sampler's access pattern —
+//! the paper's disk-resident set is read in randomly-permuted order, which
+//! we realize by permuting once at write time).
+
+use std::fs::File;
+use std::io::{self, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::data::DataBlock;
+
+pub const MAGIC: &[u8; 4] = b"SPRW";
+pub const VERSION: u32 = 1;
+pub const HEADER_LEN: u64 = 24;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    pub n: u64,
+    pub f: u32,
+}
+
+impl Header {
+    pub fn record_bytes(&self) -> u64 {
+        4 * (1 + self.f as u64)
+    }
+}
+
+pub fn write_header(w: &mut impl Write, h: Header) -> io::Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&h.n.to_le_bytes())?;
+    w.write_all(&h.f.to_le_bytes())?;
+    w.write_all(&0u32.to_le_bytes())?;
+    Ok(())
+}
+
+pub fn read_header(r: &mut impl Read) -> io::Result<Header> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic"));
+    }
+    let mut b4 = [0u8; 4];
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b4)?;
+    let version = u32::from_le_bytes(b4);
+    if version != VERSION {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("unsupported version {version}"),
+        ));
+    }
+    r.read_exact(&mut b8)?;
+    let n = u64::from_le_bytes(b8);
+    r.read_exact(&mut b4)?;
+    let f = u32::from_le_bytes(b4);
+    r.read_exact(&mut b4)?; // pad
+    Ok(Header { n, f })
+}
+
+/// Streaming writer. Call [`Writer::finish`] to patch the record count.
+pub struct Writer {
+    out: BufWriter<File>,
+    f: u32,
+    written: u64,
+}
+
+impl Writer {
+    pub fn create(path: &Path, f: u32) -> io::Result<Writer> {
+        let file = File::create(path)?;
+        let mut out = BufWriter::new(file);
+        // placeholder n, patched by finish()
+        write_header(&mut out, Header { n: 0, f })?;
+        Ok(Writer { out, f, written: 0 })
+    }
+
+    pub fn write_example(&mut self, label: f32, features: &[f32]) -> io::Result<()> {
+        debug_assert_eq!(features.len(), self.f as usize);
+        self.out.write_all(&label.to_le_bytes())?;
+        // Bulk-copy the feature row as bytes.
+        let bytes =
+            unsafe { std::slice::from_raw_parts(features.as_ptr() as *const u8, features.len() * 4) };
+        self.out.write_all(bytes)?;
+        self.written += 1;
+        Ok(())
+    }
+
+    pub fn write_block(&mut self, block: &DataBlock) -> io::Result<()> {
+        assert_eq!(block.f, self.f as usize);
+        for i in 0..block.n {
+            self.write_example(block.label(i), block.row(i))?;
+        }
+        Ok(())
+    }
+
+    pub fn finish(mut self) -> io::Result<Header> {
+        self.out.flush()?;
+        let mut file = self.out.into_inner()?;
+        file.seek(SeekFrom::Start(8))?;
+        file.write_all(&self.written.to_le_bytes())?;
+        file.sync_all()?;
+        Ok(Header {
+            n: self.written,
+            f: self.f,
+        })
+    }
+}
+
+/// Sequential reader with circular rewind (the Sampler loops over the
+/// permuted disk file indefinitely).
+pub struct Reader {
+    inp: BufReader<File>,
+    pub header: Header,
+    /// records read since the last (re)start
+    pos: u64,
+}
+
+impl Reader {
+    pub fn open(path: &Path) -> io::Result<Reader> {
+        let file = File::open(path)?;
+        let mut inp = BufReader::with_capacity(1 << 20, file);
+        let header = read_header(&mut inp)?;
+        Ok(Reader {
+            inp,
+            header,
+            pos: 0,
+        })
+    }
+
+    pub fn position(&self) -> u64 {
+        self.pos
+    }
+
+    /// Read up to `max_n` examples into a block; rewinds and continues from
+    /// the start when the end of file is reached (`circular == true`).
+    pub fn read_block(&mut self, max_n: usize, circular: bool) -> io::Result<DataBlock> {
+        let f = self.header.f as usize;
+        let mut block = DataBlock::empty(f);
+        let mut buf = vec![0u8; 4 * (1 + f)];
+        let mut row = vec![0f32; f];
+        for _ in 0..max_n {
+            if self.pos >= self.header.n {
+                if !circular || self.header.n == 0 {
+                    break;
+                }
+                self.rewind()?;
+            }
+            self.inp.read_exact(&mut buf)?;
+            let label = f32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+            for (j, r) in row.iter_mut().enumerate() {
+                let o = 4 + j * 4;
+                *r = f32::from_le_bytes([buf[o], buf[o + 1], buf[o + 2], buf[o + 3]]);
+            }
+            block.push(&row, label);
+            self.pos += 1;
+        }
+        Ok(block)
+    }
+
+    pub fn rewind(&mut self) -> io::Result<()> {
+        self.inp.seek(SeekFrom::Start(HEADER_LEN))?;
+        self.pos = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("sparrow_binfmt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample_block() -> DataBlock {
+        DataBlock::new(
+            3,
+            2,
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            vec![1.0, -1.0, 1.0],
+        )
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = tmpfile("roundtrip.sprw");
+        let mut w = Writer::create(&path, 2).unwrap();
+        w.write_block(&sample_block()).unwrap();
+        let h = w.finish().unwrap();
+        assert_eq!(h, Header { n: 3, f: 2 });
+
+        let mut r = Reader::open(&path).unwrap();
+        assert_eq!(r.header, h);
+        let b = r.read_block(10, false).unwrap();
+        assert_eq!(b, sample_block());
+    }
+
+    #[test]
+    fn circular_read_wraps() {
+        let path = tmpfile("circular.sprw");
+        let mut w = Writer::create(&path, 2).unwrap();
+        w.write_block(&sample_block()).unwrap();
+        w.finish().unwrap();
+
+        let mut r = Reader::open(&path).unwrap();
+        let b = r.read_block(7, true).unwrap();
+        assert_eq!(b.n, 7);
+        // wrapped rows repeat from the start
+        assert_eq!(b.row(3), sample_block().row(0));
+        assert_eq!(b.label(6), sample_block().label(0));
+    }
+
+    #[test]
+    fn non_circular_stops_at_eof() {
+        let path = tmpfile("eof.sprw");
+        let mut w = Writer::create(&path, 2).unwrap();
+        w.write_block(&sample_block()).unwrap();
+        w.finish().unwrap();
+
+        let mut r = Reader::open(&path).unwrap();
+        let b = r.read_block(10, false).unwrap();
+        assert_eq!(b.n, 3);
+        let b2 = r.read_block(10, false).unwrap();
+        assert!(b2.is_empty());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let path = tmpfile("bad.sprw");
+        std::fs::write(&path, b"NOPExxxxxxxxxxxxxxxxxxxxxxx").unwrap();
+        assert!(Reader::open(&path).is_err());
+    }
+
+    #[test]
+    fn empty_file_ok() {
+        let path = tmpfile("empty.sprw");
+        let w = Writer::create(&path, 4).unwrap();
+        let h = w.finish().unwrap();
+        assert_eq!(h.n, 0);
+        let mut r = Reader::open(&path).unwrap();
+        assert!(r.read_block(5, true).unwrap().is_empty());
+    }
+
+    #[test]
+    fn header_record_bytes() {
+        assert_eq!(Header { n: 0, f: 3 }.record_bytes(), 16);
+    }
+}

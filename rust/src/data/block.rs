@@ -1,0 +1,166 @@
+//! Row-major blocks of labeled examples — the unit of streaming I/O and of
+//! scanner batches.
+
+/// A dense block of `n` examples with `f` features each.
+///
+/// Features are row-major (`features[i*f..(i+1)*f]` is example i), labels
+/// are in {-1.0, +1.0}. Blocks are immutable once built; mutable scanner
+/// state lives in [`crate::data::SampleSet`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataBlock {
+    pub n: usize,
+    pub f: usize,
+    pub features: Vec<f32>,
+    pub labels: Vec<f32>,
+}
+
+impl DataBlock {
+    pub fn new(n: usize, f: usize, features: Vec<f32>, labels: Vec<f32>) -> DataBlock {
+        assert_eq!(features.len(), n * f, "features length mismatch");
+        assert_eq!(labels.len(), n, "labels length mismatch");
+        debug_assert!(labels.iter().all(|&y| y == 1.0 || y == -1.0));
+        DataBlock {
+            n,
+            f,
+            features,
+            labels,
+        }
+    }
+
+    pub fn empty(f: usize) -> DataBlock {
+        DataBlock {
+            n: 0,
+            f,
+            features: Vec::new(),
+            labels: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.f..(i + 1) * self.f]
+    }
+
+    #[inline]
+    pub fn label(&self, i: usize) -> f32 {
+        self.labels[i]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Append one example.
+    pub fn push(&mut self, row: &[f32], label: f32) {
+        assert_eq!(row.len(), self.f);
+        self.features.extend_from_slice(row);
+        self.labels.push(label);
+        self.n += 1;
+    }
+
+    /// Append all rows of `other` (same width).
+    pub fn extend(&mut self, other: &DataBlock) {
+        assert_eq!(self.f, other.f);
+        self.features.extend_from_slice(&other.features);
+        self.labels.extend_from_slice(&other.labels);
+        self.n += other.n;
+    }
+
+    /// A new block containing the selected rows.
+    pub fn select(&self, idx: &[usize]) -> DataBlock {
+        let mut out = DataBlock::empty(self.f);
+        for &i in idx {
+            out.push(self.row(i), self.label(i));
+        }
+        out
+    }
+
+    /// Split into sub-blocks of at most `chunk` rows.
+    pub fn chunks(&self, chunk: usize) -> Vec<DataBlock> {
+        assert!(chunk > 0);
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.n {
+            let j = (i + chunk).min(self.n);
+            out.push(DataBlock::new(
+                j - i,
+                self.f,
+                self.features[i * self.f..j * self.f].to_vec(),
+                self.labels[i..j].to_vec(),
+            ));
+            i = j;
+        }
+        out
+    }
+
+    /// Fraction of positive labels.
+    pub fn positive_rate(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.labels.iter().filter(|&&y| y > 0.0).count() as f64 / self.n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block3() -> DataBlock {
+        DataBlock::new(
+            3,
+            2,
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            vec![1.0, -1.0, 1.0],
+        )
+    }
+
+    #[test]
+    fn rows_and_labels() {
+        let b = block3();
+        assert_eq!(b.row(0), &[1.0, 2.0]);
+        assert_eq!(b.row(2), &[5.0, 6.0]);
+        assert_eq!(b.label(1), -1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "features length mismatch")]
+    fn length_checked() {
+        DataBlock::new(2, 2, vec![0.0; 3], vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn push_and_extend() {
+        let mut b = DataBlock::empty(2);
+        b.push(&[1.0, 2.0], 1.0);
+        b.extend(&block3());
+        assert_eq!(b.n, 4);
+        assert_eq!(b.row(3), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn select_rows() {
+        let b = block3();
+        let s = b.select(&[2, 0]);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.row(0), &[5.0, 6.0]);
+        assert_eq!(s.row(1), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn chunking() {
+        let b = block3();
+        let cs = b.chunks(2);
+        assert_eq!(cs.len(), 2);
+        assert_eq!(cs[0].n, 2);
+        assert_eq!(cs[1].n, 1);
+        assert_eq!(cs[1].row(0), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn positive_rate() {
+        let b = block3();
+        assert!((b.positive_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(DataBlock::empty(4).positive_rate(), 0.0);
+    }
+}

@@ -1,0 +1,160 @@
+//! LIBSVM / SVMlight text ingestion.
+//!
+//! The splice-site benchmark data ([3,4]) ships in this sparse text format;
+//! users with access to the real data convert it once into the binary
+//! [`crate::data::DiskStore`] format with `sparrow gen-data --libsvm ...`.
+//!
+//! Format, one example per line:  `label idx:val idx:val ...` with 1-based
+//! indices and labels in {+1, -1} (or {0, 1}: 0 is mapped to -1).
+
+use std::io::{self, BufRead};
+use std::path::Path;
+
+use crate::data::DataBlock;
+
+/// Parse one line; returns (label, sparse pairs).
+pub fn parse_line(line: &str) -> Result<(f32, Vec<(usize, f32)>), String> {
+    let mut parts = line.split_whitespace();
+    let label_tok = parts.next().ok_or("empty line")?;
+    let raw: f32 = label_tok
+        .parse()
+        .map_err(|_| format!("bad label {label_tok:?}"))?;
+    let label = if raw > 0.0 { 1.0 } else { -1.0 };
+    let mut pairs = Vec::new();
+    for tok in parts {
+        if tok.starts_with('#') {
+            break; // trailing comment
+        }
+        let (idx, val) = tok
+            .split_once(':')
+            .ok_or_else(|| format!("bad pair {tok:?}"))?;
+        let idx: usize = idx.parse().map_err(|_| format!("bad index {idx:?}"))?;
+        if idx == 0 {
+            return Err("libsvm indices are 1-based".into());
+        }
+        let val: f32 = val.parse().map_err(|_| format!("bad value {val:?}"))?;
+        pairs.push((idx - 1, val));
+    }
+    Ok((label, pairs))
+}
+
+/// Read an entire libsvm file into a dense block with `f` features
+/// (pass `f = 0` to infer the max index from the data — two passes).
+pub fn read_file(path: &Path, f: usize) -> io::Result<DataBlock> {
+    let f = if f > 0 {
+        f
+    } else {
+        infer_num_features(path)?
+    };
+    let file = std::fs::File::open(path)?;
+    let mut block = DataBlock::empty(f);
+    let mut row = vec![0f32; f];
+    for (lineno, line) in io::BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (label, pairs) = parse_line(&line)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("line {}: {e}", lineno + 1)))?;
+        row.iter_mut().for_each(|v| *v = 0.0);
+        for (idx, val) in pairs {
+            if idx < f {
+                row[idx] = val;
+            }
+        }
+        block.push(&row, label);
+    }
+    Ok(block)
+}
+
+/// First pass: find the maximum feature index used.
+pub fn infer_num_features(path: &Path) -> io::Result<usize> {
+    let file = std::fs::File::open(path)?;
+    let mut max_idx = 0usize;
+    for line in io::BufReader::new(file).lines() {
+        let line = line?;
+        if line.trim().is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Ok((_, pairs)) = parse_line(&line) {
+            for (idx, _) in pairs {
+                max_idx = max_idx.max(idx + 1);
+            }
+        }
+    }
+    Ok(max_idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmpfile(name: &str, content: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("sparrow_libsvm_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+        path
+    }
+
+    #[test]
+    fn parse_basic_line() {
+        let (y, pairs) = parse_line("+1 1:0.5 3:2.0").unwrap();
+        assert_eq!(y, 1.0);
+        assert_eq!(pairs, vec![(0, 0.5), (2, 2.0)]);
+    }
+
+    #[test]
+    fn zero_label_maps_to_negative() {
+        let (y, _) = parse_line("0 1:1").unwrap();
+        assert_eq!(y, -1.0);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        assert!(parse_line("1 0:5").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_pair() {
+        assert!(parse_line("1 abc").is_err());
+        assert!(parse_line("xyz 1:2").is_err());
+    }
+
+    #[test]
+    fn trailing_comment_ignored() {
+        let (_, pairs) = parse_line("1 1:2 # hello 3:4").unwrap();
+        assert_eq!(pairs, vec![(0, 2.0)]);
+    }
+
+    #[test]
+    fn read_file_dense() {
+        let path = tmpfile(
+            "basic.svm",
+            "+1 1:1.0 3:3.0\n-1 2:2.0\n\n# comment\n+1 3:9.0\n",
+        );
+        let b = read_file(&path, 3).unwrap();
+        assert_eq!(b.n, 3);
+        assert_eq!(b.row(0), &[1.0, 0.0, 3.0]);
+        assert_eq!(b.row(1), &[0.0, 2.0, 0.0]);
+        assert_eq!(b.row(2), &[0.0, 0.0, 9.0]);
+        assert_eq!(b.labels, vec![1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn infer_features() {
+        let path = tmpfile("infer.svm", "1 5:1.0\n-1 2:2.0\n");
+        assert_eq!(infer_num_features(&path).unwrap(), 5);
+        let b = read_file(&path, 0).unwrap();
+        assert_eq!(b.f, 5);
+    }
+
+    #[test]
+    fn out_of_range_index_dropped() {
+        let path = tmpfile("oor.svm", "1 2:1.0 9:9.0\n");
+        let b = read_file(&path, 2).unwrap();
+        assert_eq!(b.row(0), &[0.0, 1.0]);
+    }
+}

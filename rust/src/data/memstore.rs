@@ -1,0 +1,154 @@
+//! In-memory sampled set with the paper's per-example incremental state.
+//!
+//! §4.1 "Incremental Updates": for each example we store the tuple
+//! `(x, y, w_s, w_l, H_l)` — the feature vector and label, the weight at
+//! sample time, the last computed weight, and (the version of) the strong
+//! rule last used to compute it. Because strong rules grow append-only,
+//! "H_l" is fully identified by the model *length* at last update, and a
+//! weight refresh only has to evaluate the suffix of new stumps.
+
+use crate::data::DataBlock;
+
+/// The in-memory sample the Scanner iterates over.
+#[derive(Debug, Clone)]
+pub struct SampleSet {
+    pub data: DataBlock,
+    /// weight at the time the example was (re)sampled  (w_s)
+    pub w_sample: Vec<f32>,
+    /// strong-rule score at the time the example was (re)sampled
+    pub score_sample: Vec<f32>,
+    /// last computed weight  (w_l)
+    pub w_last: Vec<f32>,
+    /// strong-rule score backing w_last
+    pub score_last: Vec<f32>,
+    /// number of model stumps included in score_last  ("H_l" version)
+    pub model_len_last: Vec<u32>,
+}
+
+impl SampleSet {
+    /// Fresh sample: every example enters with weight 1 (paper §4.1 — the
+    /// Sampler assigns each added example an initial weight of 1) and with
+    /// its sample-time score recorded so later updates are incremental.
+    pub fn fresh(data: DataBlock, scores: Vec<f32>, model_len: u32) -> SampleSet {
+        assert_eq!(scores.len(), data.n);
+        let n = data.n;
+        SampleSet {
+            data,
+            w_sample: vec![1.0; n],
+            score_sample: scores.clone(),
+            w_last: vec![1.0; n],
+            score_last: scores,
+            model_len_last: vec![model_len; n],
+        }
+    }
+
+    /// Sample whose examples carry explicit (non-uniform) weights — used
+    /// by the weight-blind uniform-sampling ablation, where kept examples
+    /// must retain their true boosting weight.
+    pub fn with_weights(
+        data: DataBlock,
+        scores: Vec<f32>,
+        weights: Vec<f32>,
+        model_len: u32,
+    ) -> SampleSet {
+        assert_eq!(scores.len(), data.n);
+        assert_eq!(weights.len(), data.n);
+        let n = data.n;
+        SampleSet {
+            data,
+            w_sample: weights.clone(),
+            score_sample: scores.clone(),
+            w_last: weights,
+            score_last: scores,
+            model_len_last: vec![model_len; n],
+        }
+    }
+
+    /// Empty set (before the first sampling pass).
+    pub fn empty(f: usize) -> SampleSet {
+        SampleSet {
+            data: DataBlock::empty(f),
+            w_sample: Vec::new(),
+            score_sample: Vec::new(),
+            w_last: Vec::new(),
+            score_last: Vec::new(),
+            model_len_last: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.n == 0
+    }
+
+    /// Effective sample size of the *current* weights (Eq. 4).
+    pub fn n_eff(&self) -> f64 {
+        crate::sampling::ess::n_eff(&self.w_last)
+    }
+
+    /// Update example `i`'s cached weight given the current model score.
+    #[inline]
+    pub fn set_weight(&mut self, i: usize, score: f32, w: f32, model_len: u32) {
+        self.w_last[i] = w;
+        self.score_last[i] = score;
+        self.model_len_last[i] = model_len;
+    }
+
+    /// Sum of current weights.
+    pub fn total_weight(&self) -> f64 {
+        self.w_last.iter().map(|&w| w as f64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set3() -> SampleSet {
+        let data = DataBlock::new(
+            3,
+            2,
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0],
+            vec![1.0, -1.0, 1.0],
+        );
+        SampleSet::fresh(data, vec![0.5, -0.25, 0.0], 2)
+    }
+
+    #[test]
+    fn fresh_has_unit_weights() {
+        let s = set3();
+        assert_eq!(s.w_sample, vec![1.0; 3]);
+        assert_eq!(s.w_last, vec![1.0; 3]);
+        assert_eq!(s.score_sample, s.score_last);
+        assert_eq!(s.model_len_last, vec![2, 2, 2]);
+        assert!((s.n_eff() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn set_weight_updates_state() {
+        let mut s = set3();
+        s.set_weight(1, 0.75, 2.0, 5);
+        assert_eq!(s.w_last[1], 2.0);
+        assert_eq!(s.score_last[1], 0.75);
+        assert_eq!(s.model_len_last[1], 5);
+        // others untouched
+        assert_eq!(s.w_last[0], 1.0);
+    }
+
+    #[test]
+    fn n_eff_decreases_with_skew() {
+        let mut s = set3();
+        s.w_last = vec![1.0, 1.0, 100.0];
+        assert!(s.n_eff() < 1.2);
+    }
+
+    #[test]
+    fn total_weight() {
+        let mut s = set3();
+        s.w_last = vec![0.5, 1.5, 2.0];
+        assert!((s.total_weight() - 4.0).abs() < 1e-9);
+    }
+}

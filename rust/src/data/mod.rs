@@ -1,0 +1,23 @@
+//! Data substrate: example schema, disk-resident store, in-memory sampled
+//! set, synthetic splice-site workload generator, and LIBSVM ingestion.
+//!
+//! The paper assumes each worker stores the full training set on local disk
+//! (§4, footnote 2) and keeps only a small weighted sample in memory.
+//! [`DiskStore`] is that disk-resident set (optionally throttled to model
+//! the paper's "off-memory" instance tiers), and [`SampleSet`] is the
+//! in-memory set with the per-example incremental-update state
+//! `(x, y, w_s, w_l, H_l)` of §4.1.
+
+pub mod binfmt;
+pub mod block;
+pub mod libsvm;
+pub mod memstore;
+pub mod store;
+pub mod synth;
+pub mod throttle;
+
+pub use block::DataBlock;
+pub use memstore::SampleSet;
+pub use store::DiskStore;
+pub use synth::SynthConfig;
+pub use throttle::IoThrottle;

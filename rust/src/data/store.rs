@@ -1,0 +1,189 @@
+//! Disk-resident training store (the paper's per-worker replicated dataset).
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::data::binfmt::{Header, Reader, Writer};
+use crate::data::{DataBlock, IoThrottle};
+
+/// A disk-resident, sequentially-streamable training set.
+///
+/// The paper's Sampler reads the training set from local disk in a fixed
+/// random permutation (Alg. 2: "Randomly permuted, disk-resident
+/// training-set"); [`DiskStore::write_permuted`] bakes the permutation in at
+/// write time so all subsequent reads are purely sequential.
+pub struct DiskStore {
+    path: PathBuf,
+    pub header: Header,
+}
+
+impl DiskStore {
+    /// Write `block` to `path` in a random permutation and open it.
+    pub fn write_permuted(
+        path: &Path,
+        block: &DataBlock,
+        rng: &mut crate::util::rng::Rng,
+    ) -> io::Result<DiskStore> {
+        let mut idx: Vec<usize> = (0..block.n).collect();
+        rng.shuffle(&mut idx);
+        let mut w = Writer::create(path, block.f as u32)?;
+        for &i in &idx {
+            w.write_example(block.label(i), block.row(i))?;
+        }
+        let header = w.finish()?;
+        Ok(DiskStore {
+            path: path.to_path_buf(),
+            header,
+        })
+    }
+
+    /// Write `block` as-is (already permuted / order irrelevant).
+    pub fn write(path: &Path, block: &DataBlock) -> io::Result<DiskStore> {
+        let mut w = Writer::create(path, block.f as u32)?;
+        w.write_block(block)?;
+        let header = w.finish()?;
+        Ok(DiskStore {
+            path: path.to_path_buf(),
+            header,
+        })
+    }
+
+    pub fn open(path: &Path) -> io::Result<DiskStore> {
+        let r = Reader::open(path)?;
+        Ok(DiskStore {
+            path: path.to_path_buf(),
+            header: r.header,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn len(&self) -> usize {
+        self.header.n as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.header.n == 0
+    }
+
+    pub fn num_features(&self) -> usize {
+        self.header.f as usize
+    }
+
+    /// Size of the dataset on disk in bytes (excluding header).
+    pub fn data_bytes(&self) -> u64 {
+        self.header.n * self.header.record_bytes()
+    }
+
+    /// Open a streaming cursor, optionally throttled (off-memory tier).
+    pub fn stream(&self, throttle: IoThrottle) -> io::Result<StoreStream> {
+        Ok(StoreStream {
+            reader: Reader::open(&self.path)?,
+            throttle,
+        })
+    }
+
+    /// Read the whole store into memory (in-memory tier / test helper).
+    pub fn read_all(&self) -> io::Result<DataBlock> {
+        let mut r = Reader::open(&self.path)?;
+        r.read_block(self.len(), false)
+    }
+}
+
+/// Sequential (circular) cursor over a [`DiskStore`] with byte-rate
+/// accounting.
+pub struct StoreStream {
+    reader: Reader,
+    throttle: IoThrottle,
+}
+
+impl StoreStream {
+    /// Next block of up to `max_n` examples, wrapping at EOF.
+    pub fn next_block(&mut self, max_n: usize) -> io::Result<DataBlock> {
+        let block = self.reader.read_block(max_n, true)?;
+        self.throttle
+            .consume(block.n as u64 * self.reader.header.record_bytes());
+        Ok(block)
+    }
+
+    /// Records consumed since the last wrap.
+    pub fn position(&self) -> u64 {
+        self.reader.position()
+    }
+
+    pub fn stalled(&self) -> std::time::Duration {
+        self.throttle.stalled
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("sparrow_store_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn block(n: usize, f: usize) -> DataBlock {
+        let mut b = DataBlock::empty(f);
+        for i in 0..n {
+            let row: Vec<f32> = (0..f).map(|j| (i * f + j) as f32).collect();
+            b.push(&row, if i % 3 == 0 { 1.0 } else { -1.0 });
+        }
+        b
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let path = tmpfile("rt.sprw");
+        let b = block(10, 4);
+        let store = DiskStore::write(&path, &b).unwrap();
+        assert_eq!(store.len(), 10);
+        assert_eq!(store.num_features(), 4);
+        assert_eq!(store.read_all().unwrap(), b);
+    }
+
+    #[test]
+    fn permuted_write_preserves_multiset() {
+        let path = tmpfile("perm.sprw");
+        let b = block(50, 3);
+        let mut rng = Rng::new(1);
+        let store = DiskStore::write_permuted(&path, &b, &mut rng).unwrap();
+        let read = store.read_all().unwrap();
+        assert_eq!(read.n, 50);
+        // same multiset of first-features
+        let mut a: Vec<i64> = (0..50).map(|i| b.row(i)[0] as i64).collect();
+        let mut c: Vec<i64> = (0..50).map(|i| read.row(i)[0] as i64).collect();
+        a.sort();
+        c.sort();
+        assert_eq!(a, c);
+        // not identical order (astronomically unlikely)
+        assert_ne!(b, read);
+    }
+
+    #[test]
+    fn stream_wraps_circularly() {
+        let path = tmpfile("wrap.sprw");
+        let store = DiskStore::write(&path, &block(5, 2)).unwrap();
+        let mut s = store.stream(IoThrottle::unlimited()).unwrap();
+        let b1 = s.next_block(3).unwrap();
+        let b2 = s.next_block(3).unwrap();
+        let b3 = s.next_block(3).unwrap();
+        assert_eq!(b1.n + b2.n + b3.n, 9);
+        // reads: b1 = rows 0..3, b2 = rows 3,4,0 (wrap), b3 = rows 1,2,3
+        assert_eq!(b2.row(2), block(5, 2).row(0));
+        assert_eq!(b3.row(0), block(5, 2).row(1));
+    }
+
+    #[test]
+    fn data_bytes() {
+        let path = tmpfile("bytes.sprw");
+        let store = DiskStore::write(&path, &block(10, 4)).unwrap();
+        assert_eq!(store.data_bytes(), 10 * 4 * 5);
+    }
+}

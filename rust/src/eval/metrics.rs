@@ -1,0 +1,167 @@
+//! Metric implementations.
+
+use crate::data::DataBlock;
+use crate::model::StrongRule;
+
+/// Average exponential loss `1/n Σ exp(-y_i H(x_i))` (the potential Z_S of
+/// §3 — all compared algorithms optimize this).
+pub fn exp_loss(model: &StrongRule, data: &DataBlock) -> f64 {
+    exp_loss_scores(&scores(model, data), &data.labels)
+}
+
+/// Exponential loss from precomputed scores.
+pub fn exp_loss_scores(scores: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    if scores.is_empty() {
+        return 1.0;
+    }
+    let mut s = 0.0f64;
+    for (&sc, &y) in scores.iter().zip(labels) {
+        s += (-(y as f64) * sc as f64).exp();
+    }
+    s / scores.len() as f64
+}
+
+/// 0/1 test error.
+pub fn test_error(model: &StrongRule, data: &DataBlock) -> f64 {
+    if data.n == 0 {
+        return 0.0;
+    }
+    let mut wrong = 0usize;
+    for i in 0..data.n {
+        if model.predict(data.row(i)) != data.label(i) {
+            wrong += 1;
+        }
+    }
+    wrong as f64 / data.n as f64
+}
+
+/// Strong-rule scores over a block.
+pub fn scores(model: &StrongRule, data: &DataBlock) -> Vec<f32> {
+    (0..data.n).map(|i| model.score(data.row(i))).collect()
+}
+
+/// Area under the precision-recall curve, computed by descending-score
+/// sweep with step interpolation (scikit-learn's `average_precision`
+/// definition: Σ (R_k − R_{k−1}) · P_k).
+pub fn auprc(scores: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let total_pos = labels.iter().filter(|&&y| y > 0.0).count();
+    if total_pos == 0 || scores.is_empty() {
+        return 0.0;
+    }
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal));
+
+    let mut ap = 0.0f64;
+    let mut tp = 0usize;
+    let mut seen = 0usize;
+    let mut prev_recall = 0.0f64;
+    let mut i = 0usize;
+    while i < order.len() {
+        // advance through ties as one group (a threshold can't split ties)
+        let mut j = i;
+        while j < order.len() && scores[order[j]] == scores[order[i]] {
+            if labels[order[j]] > 0.0 {
+                tp += 1;
+            }
+            seen += 1;
+            j += 1;
+        }
+        let precision = tp as f64 / seen as f64;
+        let recall = tp as f64 / total_pos as f64;
+        ap += (recall - prev_recall) * precision;
+        prev_recall = recall;
+        i = j;
+    }
+    ap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Stump;
+
+    #[test]
+    fn exp_loss_empty_model_is_one() {
+        let mut d = DataBlock::empty(1);
+        d.push(&[0.0], 1.0);
+        d.push(&[1.0], -1.0);
+        assert!((exp_loss(&StrongRule::new(), &d) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exp_loss_decreases_with_correct_stump() {
+        let mut d = DataBlock::empty(1);
+        for i in 0..10 {
+            let y = if i % 2 == 0 { 1.0 } else { -1.0 };
+            d.push(&[y], y); // feature == label
+        }
+        let mut m = StrongRule::new();
+        m.push(Stump::new(0, 0.0, 1.0), 1.0);
+        let loss = exp_loss(&m, &d);
+        assert!(loss < 1.0);
+        assert!((loss - (-1.0f64).exp()).abs() < 1e-6); // every example correct
+    }
+
+    #[test]
+    fn exp_loss_scores_matches_model_path() {
+        let mut d = DataBlock::empty(1);
+        d.push(&[2.0], 1.0);
+        d.push(&[-2.0], -1.0);
+        let mut m = StrongRule::new();
+        m.push(Stump::new(0, 0.0, 1.0), 0.7);
+        let via_model = exp_loss(&m, &d);
+        let via_scores = exp_loss_scores(&scores(&m, &d), &d.labels);
+        assert!((via_model - via_scores).abs() < 1e-12);
+    }
+
+    #[test]
+    fn test_error_counts_mistakes() {
+        let mut d = DataBlock::empty(1);
+        d.push(&[1.0], 1.0); // correct for the stump below
+        d.push(&[1.0], -1.0); // wrong
+        let mut m = StrongRule::new();
+        m.push(Stump::new(0, 0.0, 1.0), 1.0);
+        assert!((test_error(&m, &d) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auprc_perfect_ranking_is_one() {
+        let scores = [0.9f32, 0.8, 0.1, 0.0];
+        let labels = [1.0f32, 1.0, -1.0, -1.0];
+        assert!((auprc(&scores, &labels) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auprc_random_ranking_near_base_rate() {
+        // all scores tied → single PR point at (recall 1, precision = base)
+        let scores = vec![0.5f32; 1000];
+        let labels: Vec<f32> = (0..1000).map(|i| if i % 10 == 0 { 1.0 } else { -1.0 }).collect();
+        let ap = auprc(&scores, &labels);
+        assert!((ap - 0.1).abs() < 1e-9, "ap={ap}");
+    }
+
+    #[test]
+    fn auprc_worst_ranking() {
+        // the single positive ranked last: AP = 1/n
+        let scores = [0.9f32, 0.8, 0.7, 0.1];
+        let labels = [-1.0f32, -1.0, -1.0, 1.0];
+        assert!((auprc(&scores, &labels) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auprc_no_positives_zero() {
+        assert_eq!(auprc(&[0.5, 0.2], &[-1.0, -1.0]), 0.0);
+        assert_eq!(auprc(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn auprc_tie_handling_groups() {
+        // two tied at top: one pos one neg → first group P=0.5, R=0.5
+        let scores = [0.9f32, 0.9, 0.1, 0.1];
+        let labels = [1.0f32, -1.0, 1.0, -1.0];
+        // group1: P=1/2 R=1/2 ; group2: P=2/4 R=1 → AP = .5*.5 + .5*.5 = 0.5
+        assert!((auprc(&scores, &labels) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,8 @@
+//! Held-out evaluation: exponential loss and AUPRC (the paper's two
+//! reported metrics, Figs. 3-4), plus timed metric series.
+
+pub mod metrics;
+pub mod series;
+
+pub use metrics::{auprc, exp_loss, exp_loss_scores, test_error};
+pub use series::{MetricPoint, MetricSeries};

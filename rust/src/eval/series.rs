@@ -1,0 +1,228 @@
+//! Timed metric series — the data behind Figures 3 and 4 (metric vs
+//! wall-clock time, including the flat plateaus while Sparrow resamples).
+
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// One evaluation point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricPoint {
+    pub elapsed: Duration,
+    /// boosting iterations completed at this point
+    pub iterations: u64,
+    pub exp_loss: f64,
+    pub auprc: f64,
+}
+
+/// A labeled metric-vs-time series for one algorithm run.
+#[derive(Debug, Clone, Default)]
+pub struct MetricSeries {
+    pub label: String,
+    pub points: Vec<MetricPoint>,
+}
+
+impl MetricSeries {
+    pub fn new(label: &str) -> MetricSeries {
+        MetricSeries {
+            label: label.to_string(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, p: MetricPoint) {
+        self.points.push(p);
+    }
+
+    /// First time the exponential loss reaches `target` (Table 1's
+    /// "convergence time to an almost optimal loss").
+    pub fn time_to_loss(&self, target: f64) -> Option<Duration> {
+        self.points
+            .iter()
+            .find(|p| p.exp_loss <= target)
+            .map(|p| p.elapsed)
+    }
+
+    /// Final (best) values.
+    pub fn final_loss(&self) -> Option<f64> {
+        self.points.last().map(|p| p.exp_loss)
+    }
+
+    pub fn best_auprc(&self) -> Option<f64> {
+        self.points
+            .iter()
+            .map(|p| p.auprc)
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+
+    /// CSV rows `label,seconds,iterations,exp_loss,auprc`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        for p in &self.points {
+            out.push_str(&format!(
+                "{},{:.4},{},{:.6},{:.6}\n",
+                self.label,
+                p.elapsed.as_secs_f64(),
+                p.iterations,
+                p.exp_loss,
+                p.auprc
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("label", self.label.as_str());
+        o.set(
+            "points",
+            Json::Arr(
+                self.points
+                    .iter()
+                    .map(|p| {
+                        let mut q = Json::obj();
+                        q.set("t", p.elapsed.as_secs_f64())
+                            .set("iter", p.iterations)
+                            .set("exp_loss", p.exp_loss)
+                            .set("auprc", p.auprc);
+                        q
+                    })
+                    .collect(),
+            ),
+        );
+        o
+    }
+
+    /// Render several series as an ASCII chart of metric vs time
+    /// (figures 3/4 for terminals; `log_x` mimics Fig. 4 right).
+    pub fn ascii_chart(
+        series: &[&MetricSeries],
+        metric: fn(&MetricPoint) -> f64,
+        width: usize,
+        height: usize,
+        log_x: bool,
+    ) -> String {
+        let mut tmax = 0f64;
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for s in series {
+            for p in &s.points {
+                tmax = tmax.max(p.elapsed.as_secs_f64());
+                lo = lo.min(metric(p));
+                hi = hi.max(metric(p));
+            }
+        }
+        if !lo.is_finite() || tmax <= 0.0 {
+            return String::from("(empty chart)\n");
+        }
+        if hi - lo < 1e-12 {
+            hi = lo + 1.0;
+        }
+        let tmin = if log_x { (tmax / 1e3).max(1e-3) } else { 0.0 };
+        let xpos = |t: f64| -> usize {
+            let frac = if log_x {
+                ((t.max(tmin) / tmin).ln() / (tmax / tmin).ln()).clamp(0.0, 1.0)
+            } else {
+                (t / tmax).clamp(0.0, 1.0)
+            };
+            ((width - 1) as f64 * frac) as usize
+        };
+        let mut rows = vec![vec![b' '; width]; height];
+        for (si, s) in series.iter().enumerate() {
+            let glyph = b"*+ox#@"[si % 6];
+            for p in &s.points {
+                let x = xpos(p.elapsed.as_secs_f64());
+                let yfrac = ((metric(p) - lo) / (hi - lo)).clamp(0.0, 1.0);
+                let y = ((height - 1) as f64 * (1.0 - yfrac)) as usize;
+                rows[y][x] = glyph;
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("{hi:>10.4} ┤\n"));
+        for r in rows {
+            out.push_str("           │");
+            out.push_str(std::str::from_utf8(&r).unwrap());
+            out.push('\n');
+        }
+        out.push_str(&format!("{lo:>10.4} └{}\n", "─".repeat(width)));
+        let legend: Vec<String> = series
+            .iter()
+            .enumerate()
+            .map(|(i, s)| format!("{} {}", b"*+ox#@"[i % 6] as char, s.label))
+            .collect();
+        out.push_str(&format!(
+            "            t ∈ [{:.1}s, {:.1}s]{}   {}\n",
+            tmin,
+            tmax,
+            if log_x { " (log)" } else { "" },
+            legend.join("   ")
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series() -> MetricSeries {
+        let mut s = MetricSeries::new("test");
+        for i in 0..5u64 {
+            s.push(MetricPoint {
+                elapsed: Duration::from_secs(i),
+                iterations: i * 10,
+                exp_loss: 1.0 / (i + 1) as f64,
+                auprc: 0.1 * i as f64,
+            });
+        }
+        s
+    }
+
+    #[test]
+    fn time_to_loss() {
+        let s = series();
+        assert_eq!(s.time_to_loss(0.5), Some(Duration::from_secs(1)));
+        assert_eq!(s.time_to_loss(0.2), Some(Duration::from_secs(4)));
+        assert_eq!(s.time_to_loss(0.01), None);
+    }
+
+    #[test]
+    fn final_and_best() {
+        let s = series();
+        assert!((s.final_loss().unwrap() - 0.2).abs() < 1e-12);
+        assert!((s.best_auprc().unwrap() - 0.4).abs() < 1e-12);
+        assert_eq!(MetricSeries::new("e").final_loss(), None);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let s = series();
+        let csv = s.to_csv();
+        assert_eq!(csv.lines().count(), 5);
+        assert!(csv.starts_with("test,0.0000,0,1.000000,0.000000"));
+    }
+
+    #[test]
+    fn json_contains_points() {
+        let j = series().to_json().to_string();
+        assert!(j.contains("\"label\":\"test\""));
+        assert!(j.contains("\"points\":["));
+    }
+
+    #[test]
+    fn chart_renders() {
+        let s = series();
+        let chart = MetricSeries::ascii_chart(&[&s], |p| p.exp_loss, 40, 10, false);
+        assert!(chart.contains('*'));
+        assert!(chart.lines().count() >= 12);
+        let log_chart = MetricSeries::ascii_chart(&[&s], |p| p.exp_loss, 40, 10, true);
+        assert!(log_chart.contains("(log)"));
+    }
+
+    #[test]
+    fn chart_empty_safe() {
+        let s = MetricSeries::new("empty");
+        let chart = MetricSeries::ascii_chart(&[&s], |p| p.exp_loss, 10, 5, false);
+        assert!(chart.contains("empty chart"));
+    }
+}

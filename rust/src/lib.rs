@@ -1,0 +1,38 @@
+//! # Sparrow-RS
+//!
+//! Reproduction of *"Tell Me Something New: A New Framework for Asynchronous
+//! Parallel Learning"* (Alafate & Freund, 2018): the **TMSN** asynchronous
+//! broadcast protocol and the **Sparrow** boosted-tree learner built on it,
+//! as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Layer map (see `DESIGN.md` for the full inventory):
+//! - **L3 (this crate)** — TMSN protocol ([`tmsn`]), Sparrow workers
+//!   ([`scanner`], [`sampler`], [`worker`]), cluster [`coordinator`],
+//!   broadcast [`network`] fabric, disk/memory [`data`] stores, the
+//!   [`baselines`] the paper compares against, and [`eval`]/[`metrics`].
+//! - **L2/L1 (python/compile, build-time)** — the JAX scan-batch graph and
+//!   the Pallas edge kernel, AOT-lowered to `artifacts/*.hlo.txt` and
+//!   executed from [`runtime`] via PJRT. Python never runs at train time.
+
+pub mod baselines;
+pub mod boosting;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod harness;
+pub mod metrics;
+pub mod model;
+pub mod network;
+pub mod runtime;
+pub mod sampler;
+pub mod sampling;
+pub mod scanner;
+pub mod stopping;
+pub mod tmsn;
+pub mod util;
+pub mod worker;
+
+pub fn crate_version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,522 @@
+//! `sparrow` — CLI for the TMSN/Sparrow reproduction.
+//!
+//! Subcommands:
+//!   gen-data   synthesize (or convert) a disk-resident training store
+//!   train      run a Sparrow cluster (TMSN) on a store
+//!   baseline   run a Table-1 baseline (fullscan | goss | bulksync)
+//!   eval       evaluate a saved model on a test store
+//!
+//! `sparrow <cmd> --help` lists the knobs for each subcommand.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use sparrow::baselines::{
+    train_bulk_sync, train_fullscan, train_goss, BulkSyncConfig, DataSource, FullScanConfig,
+    GossConfig, StopConditions,
+};
+use sparrow::config::{TrainConfig, WorkloadConfig};
+use sparrow::coordinator::train_cluster;
+use sparrow::data::synth::SynthGen;
+use sparrow::data::{libsvm, DiskStore};
+use sparrow::eval::{auprc, exp_loss, test_error};
+use sparrow::metrics::events::to_jsonl;
+use sparrow::model::StrongRule;
+use sparrow::util::cli::Args;
+
+const USAGE: &str = "\
+sparrow — 'Tell Me Something New' asynchronous parallel boosting
+
+USAGE: sparrow <COMMAND> [--key value ...]
+
+COMMANDS
+  gen-data   --out train.sprw [--test-out test.sprw] [--train-n N] [--test-n N]
+             [--features F] [--pos-rate P] [--informative K] [--signal S]
+             [--flip-rate P] [--data-seed S] [--libsvm in.svm]
+  train      --data train.sprw --test test.sprw [--workers N] [--sample-size M]
+             [--gamma0 G] [--ess-threshold T] [--max-rules K] [--time-limit SECS]
+             [--target-loss L] [--stopping lil|hoeffding|fixed]
+             [--sampler mvs|rejection|uniform] [--backend native|xla-pallas|xla-jnp]
+             [--batch B] [--nthr NT] [--disk-bandwidth BYTES/S] [--seed S]
+             [--out-dir DIR]
+  baseline   --algo fullscan|goss|bulksync --data train.sprw --test test.sprw
+             [--max-rules K] [--time-limit SECS] [--target-loss L]
+             [--disk-bandwidth BYTES/S] [--in-memory] [--workers N] [--out-dir DIR]
+  eval       --model model.txt --test test.sprw
+  worker     one TMSN worker process over real TCP:
+             --data train.sprw --worker-id I --workers N --listen ADDR
+             [--peers addr1,addr2,...] --out model.txt [train knobs as above]
+  launch     spawn N local `worker` processes wired over TCP:
+             --data train.sprw --test test.sprw --workers N --out-dir DIR
+             [train knobs as above]
+";
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("gen-data") => cmd_gen_data(&args),
+        Some("train") => cmd_train(&args),
+        Some("baseline") => cmd_baseline(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("worker") => cmd_worker(&args),
+        Some("launch") => cmd_launch(&args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(anyhow::anyhow!("unknown command {other:?}\n{USAGE}")),
+    }
+    .map_or_else(
+        |e| {
+            eprintln!("error: {e:#}");
+            1
+        },
+        |_| 0,
+    );
+    std::process::exit(code);
+}
+
+fn load_test_block(path: &str) -> anyhow::Result<sparrow::data::DataBlock> {
+    Ok(DiskStore::open(Path::new(path))?.read_all()?)
+}
+
+fn out_dir(args: &Args) -> anyhow::Result<Option<PathBuf>> {
+    match args.get("out-dir") {
+        None => Ok(None),
+        Some(d) => {
+            let p = PathBuf::from(d);
+            std::fs::create_dir_all(&p)?;
+            Ok(Some(p))
+        }
+    }
+}
+
+fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("--out is required"))?
+        .to_string();
+    if let Some(svm) = args.get("libsvm") {
+        let features = args.get_usize("features", 0);
+        let block = libsvm::read_file(Path::new(svm), features)?;
+        let store = DiskStore::write(Path::new(&out), &block)?;
+        println!(
+            "converted {} -> {} ({} examples, {} features)",
+            svm,
+            out,
+            store.len(),
+            store.num_features()
+        );
+        args.finish().map_err(anyhow::Error::msg)?;
+        return Ok(());
+    }
+    let w = WorkloadConfig::default()
+        .apply_args(args)
+        .map_err(anyhow::Error::msg)?;
+    let mut gen = SynthGen::new(w.synth_config());
+    let store = gen.write_store(Path::new(&out), w.train_n)?;
+    println!(
+        "wrote {} ({} examples, {} features, {:.1} MB)",
+        out,
+        store.len(),
+        store.num_features(),
+        store.data_bytes() as f64 / 1e6
+    );
+    if let Some(test_out) = args.get("test-out") {
+        let test_store = gen.write_store(Path::new(test_out), w.test_n)?;
+        println!("wrote {} ({} examples)", test_out, test_store.len());
+    }
+    args.finish().map_err(anyhow::Error::msg)?;
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let data = args
+        .get("data")
+        .ok_or_else(|| anyhow::anyhow!("--data is required"))?
+        .to_string();
+    let test_path = args
+        .get("test")
+        .ok_or_else(|| anyhow::anyhow!("--test is required"))?
+        .to_string();
+    let mut cfg = TrainConfig::default()
+        .apply_args(args)
+        .map_err(anyhow::Error::msg)?;
+    // checkpoint resume: --resume model.txt [--resume-bound B]
+    // (bound defaults to the value recorded in model.txt.meta)
+    if let Some(resume_path) = args.get("resume") {
+        let model = StrongRule::from_text(&std::fs::read_to_string(resume_path)?)
+            .map_err(anyhow::Error::msg)?;
+        let bound = match args.get("resume-bound") {
+            Some(v) => v.parse::<f64>().map_err(|_| anyhow::anyhow!("bad --resume-bound"))?,
+            None => {
+                let meta = std::fs::read_to_string(format!("{resume_path}.meta"))
+                    .map_err(|_| anyhow::anyhow!(
+                        "--resume needs {resume_path}.meta (or pass --resume-bound)"
+                    ))?;
+                meta.split_whitespace()
+                    .find_map(|t| t.strip_prefix("bound="))
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| anyhow::anyhow!("no bound= in {resume_path}.meta"))?
+            }
+        };
+        println!("resuming from {resume_path} ({} rules, bound {bound:.4})", model.len());
+        cfg.resume = Some((model, bound));
+    }
+    let out = out_dir(args)?;
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let test = load_test_block(&test_path)?;
+    let store = DiskStore::open(Path::new(&data))?;
+    let features = store.num_features();
+    let cfg2 = cfg.clone();
+    let outcome = train_cluster(&cfg, Path::new(&data), &test, "sparrow", &move |_| {
+        sparrow::runtime::make_backend(&cfg2, features)
+    })?;
+
+    println!(
+        "trained {} rules in {:.2}s  (bound {:.4})",
+        outcome.model.len(),
+        outcome.elapsed.as_secs_f64(),
+        outcome.loss_bound
+    );
+    let final_point = outcome.series.points.last().expect("series");
+    println!(
+        "test exp-loss {:.4}  auprc {:.4}",
+        final_point.exp_loss, final_point.auprc
+    );
+    let (sent, delivered, dropped) = outcome.net;
+    println!("net: {sent} broadcasts, {delivered} delivered, {dropped} dropped");
+    for w in &outcome.workers {
+        println!(
+            "  worker {}: found {} accepted {} rejected {} resamples {} scanned {}{}",
+            w.id,
+            w.found,
+            w.accepts,
+            w.rejects,
+            w.resamples,
+            w.scanned,
+            if w.crashed { " [crashed]" } else { "" }
+        );
+    }
+    if let Some(dir) = out {
+        std::fs::write(dir.join("model.txt"), outcome.model.to_text())?;
+        std::fs::write(
+            dir.join("model.txt.meta"),
+            format!("bound={}\n", outcome.loss_bound),
+        )?;
+        std::fs::write(dir.join("series.csv"), outcome.series.to_csv())?;
+        std::fs::write(dir.join("events.jsonl"), to_jsonl(&outcome.events))?;
+        std::fs::write(dir.join("timeline.txt"), outcome.timeline(100))?;
+        println!("artifacts written to {}", dir.display());
+    }
+    Ok(())
+}
+
+fn cmd_baseline(args: &Args) -> anyhow::Result<()> {
+    let algo = args.get_or("algo", "fullscan");
+    let data = args
+        .get("data")
+        .ok_or_else(|| anyhow::anyhow!("--data is required"))?
+        .to_string();
+    let test_path = args
+        .get("test")
+        .ok_or_else(|| anyhow::anyhow!("--test is required"))?
+        .to_string();
+    let stop = StopConditions {
+        max_rules: args.get_usize("max-rules", 128),
+        time_limit: Duration::from_secs_f64(args.get_f64("time-limit", 60.0)),
+        target_loss: args.get_f64("target-loss", 0.0),
+        eval_interval: Duration::from_secs_f64(args.get_f64("eval-interval", 0.25)),
+    };
+    let bandwidth = args.get_f64("disk-bandwidth", 0.0);
+    let in_memory = args.has_flag("in-memory");
+    let workers = args.get_usize("workers", 4);
+    let args_depth = args.get_usize("depth", 2);
+    let out = out_dir(args)?;
+    let out_dir_v = out.clone();
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let test = load_test_block(&test_path)?;
+    let source = if in_memory {
+        DataSource::memory(DiskStore::open(Path::new(&data))?.read_all()?)
+    } else {
+        DataSource::disk(Path::new(&data), bandwidth)?
+    };
+    let outcome = match algo.as_str() {
+        "fullscan" => train_fullscan(
+            &source,
+            &test,
+            &FullScanConfig {
+                stop,
+                ..FullScanConfig::default()
+            },
+            "fullscan",
+        )?,
+        "goss" => train_goss(
+            &source,
+            &test,
+            &GossConfig {
+                stop,
+                ..GossConfig::default()
+            },
+            "goss",
+        )?,
+        "bulksync" => {
+            let train = DiskStore::open(Path::new(&data))?.read_all()?;
+            train_bulk_sync(
+                &train,
+                &test,
+                &BulkSyncConfig {
+                    workers,
+                    stop,
+                    ..BulkSyncConfig::default()
+                },
+                "bulksync",
+            )
+        }
+        "tree" => {
+            // multi-level trees (paper §5 future work) — separate model
+            // family, reported here and returned via its own outcome
+            let depth = args_depth;
+            let out = sparrow::baselines::train_tree_boost(
+                &source,
+                &test,
+                &sparrow::baselines::TreeBoostConfig {
+                    depth,
+                    stop,
+                    ..sparrow::baselines::TreeBoostConfig::default()
+                },
+                "tree",
+            )?;
+            let p = out.series.points.last().expect("series");
+            println!(
+                "tree(depth={depth}): {} trees, test exp-loss {:.4}, auprc {:.4}, {:.2}s",
+                out.model.len(),
+                p.exp_loss,
+                p.auprc,
+                p.elapsed.as_secs_f64()
+            );
+            if let Some(dir) = out_dir_v {
+                std::fs::write(dir.join("tree_model.txt"), out.model.to_text())?;
+                std::fs::write(dir.join("tree_series.csv"), out.series.to_csv())?;
+            }
+            return Ok(());
+        }
+        other => anyhow::bail!("unknown --algo {other:?} (fullscan|goss|bulksync|tree)"),
+    };
+    let p = outcome.series.points.last().expect("series");
+    println!(
+        "{algo}: {} rules, test exp-loss {:.4}, auprc {:.4}, {:.2}s",
+        outcome.model.len(),
+        p.exp_loss,
+        p.auprc,
+        p.elapsed.as_secs_f64()
+    );
+    if let Some(dir) = out {
+        std::fs::write(dir.join(format!("{algo}_model.txt")), outcome.model.to_text())?;
+        std::fs::write(dir.join(format!("{algo}_series.csv")), outcome.series.to_csv())?;
+        println!("artifacts written to {}", dir.display());
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let model_path = args
+        .get("model")
+        .ok_or_else(|| anyhow::anyhow!("--model is required"))?
+        .to_string();
+    let test_path = args
+        .get("test")
+        .ok_or_else(|| anyhow::anyhow!("--test is required"))?
+        .to_string();
+    args.finish().map_err(anyhow::Error::msg)?;
+    let model =
+        StrongRule::from_text(&std::fs::read_to_string(&model_path)?).map_err(anyhow::Error::msg)?;
+    let test = load_test_block(&test_path)?;
+    let sc = sparrow::eval::metrics::scores(&model, &test);
+    println!(
+        "model: {} rules\nexp-loss: {:.6}\nauprc: {:.6}\n0/1 error: {:.6}",
+        model.len(),
+        exp_loss(&model, &test),
+        auprc(&sc, &test.labels),
+        test_error(&model, &test)
+    );
+    Ok(())
+}
+
+/// One TMSN worker process attached to the real TCP transport.
+///
+/// All workers must be launched with the same `--data`, `--workers` and
+/// `--nthr` so they derive the identical candidate grid (pilot quantiles
+/// are deterministic) and consistent feature stripes.
+fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    use sparrow::boosting::grid::partition_features;
+    use sparrow::boosting::CandidateGrid;
+    use sparrow::data::IoThrottle;
+    use sparrow::metrics::EventLog;
+    use sparrow::network::TcpEndpoint;
+    use sparrow::worker::{run_worker, WorkerParams};
+
+    let data = args
+        .get("data")
+        .ok_or_else(|| anyhow::anyhow!("--data is required"))?
+        .to_string();
+    let worker_id = args.get_usize("worker-id", 0);
+    let listen = args.get_or("listen", "127.0.0.1:0");
+    let peers = args.get_or("peers", "");
+    let out = args.get("out").map(str::to_string);
+    let cfg = TrainConfig::default()
+        .apply_args(args)
+        .map_err(anyhow::Error::msg)?;
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let store = DiskStore::open(Path::new(&data))?;
+    let features = store.num_features();
+    anyhow::ensure!(worker_id < cfg.num_workers, "--worker-id out of range");
+
+    // deterministic shared grid: pilot = first 4096 records (same file on
+    // every worker → same grid)
+    let pilot = store
+        .stream(IoThrottle::unlimited())?
+        .next_block(4096.min(store.len()))?;
+    let grid = CandidateGrid::from_quantiles(&pilot, cfg.nthr);
+    let stripe = partition_features(features, cfg.num_workers)[worker_id];
+
+    let endpoint = TcpEndpoint::bind(&listen)?;
+    println!("worker {worker_id} listening on {}", endpoint.local_addr());
+    for peer in peers.split(',').filter(|p| !p.is_empty()) {
+        endpoint.connect(peer)?;
+        println!("worker {worker_id} connected to {peer}");
+    }
+
+    let (log, _event_rx) = EventLog::new();
+    let cfg2 = cfg.clone();
+    let result = run_worker(WorkerParams {
+        id: worker_id,
+        cfg: cfg.clone(),
+        grid,
+        stripe,
+        store,
+        endpoint: Box::new(endpoint),
+        log,
+        stop: std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false)),
+        backend: sparrow::runtime::make_backend(&cfg2, features)?,
+        laggard: 1.0,
+        crash_after: None,
+        seed: cfg.seed ^ worker_id as u64,
+    });
+
+    println!(
+        "worker {worker_id} done: {} rules, bound {:.4}, found {}, accepted {}",
+        result.model.len(),
+        result.loss_bound,
+        result.found,
+        result.accepts
+    );
+    if let Some(out) = out {
+        std::fs::write(&out, result.model.to_text())?;
+        std::fs::write(
+            format!("{out}.meta"),
+            format!(
+                "bound={} found={} accepts={} rejects={} resamples={} scanned={}\n",
+                result.loss_bound,
+                result.found,
+                result.accepts,
+                result.rejects,
+                result.resamples,
+                result.scanned
+            ),
+        )?;
+    }
+    Ok(())
+}
+
+/// Spawn a local multi-process TMSN cluster over TCP.
+fn cmd_launch(args: &Args) -> anyhow::Result<()> {
+    let data = args
+        .get("data")
+        .ok_or_else(|| anyhow::anyhow!("--data is required"))?
+        .to_string();
+    let test_path = args.get("test").map(str::to_string);
+    let workers = args.get_usize("workers", 2);
+    let base_port = args.get_usize("base-port", 17760);
+    let out = out_dir(args)?.ok_or_else(|| anyhow::anyhow!("--out-dir is required"))?;
+    // knobs forwarded verbatim to the children
+    let forward: Vec<String> = [
+        "sample-size",
+        "gamma0",
+        "max-rules",
+        "time-limit",
+        "nthr",
+        "batch",
+        "backend",
+        "stopping",
+        "sampler",
+        "disk-bandwidth",
+        "seed",
+        "artifacts-dir",
+    ]
+    .iter()
+    .filter_map(|k| args.get(k).map(|v| vec![format!("--{k}"), v.to_string()]))
+    .flatten()
+    .collect();
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let exe = std::env::current_exe()?;
+    let addrs: Vec<String> = (0..workers)
+        .map(|i| format!("127.0.0.1:{}", base_port + i))
+        .collect();
+    let mut children = Vec::new();
+    for i in 0..workers {
+        let peers: Vec<String> = addrs
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| *j != i)
+            .map(|(_, a)| a.clone())
+            .collect();
+        let model_out = out.join(format!("worker_{i}.model.txt"));
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("worker")
+            .args(["--data", &data])
+            .args(["--worker-id", &i.to_string()])
+            .args(["--workers", &workers.to_string()])
+            .args(["--listen", &addrs[i]])
+            .args(["--peers", &peers.join(",")])
+            .args(["--out", model_out.to_str().unwrap()])
+            .args(&forward);
+        children.push((i, cmd.spawn()?));
+    }
+    let mut best: Option<(f64, PathBuf)> = None;
+    for (i, mut child) in children {
+        let status = child.wait()?;
+        anyhow::ensure!(status.success(), "worker {i} failed: {status}");
+        let meta_path = out.join(format!("worker_{i}.model.txt.meta"));
+        let meta = std::fs::read_to_string(&meta_path).unwrap_or_default();
+        let bound: f64 = meta
+            .split_whitespace()
+            .find_map(|t| t.strip_prefix("bound="))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(f64::INFINITY);
+        println!("worker {i}: bound {bound:.4}");
+        let model_path = out.join(format!("worker_{i}.model.txt"));
+        if best.as_ref().map_or(true, |(b, _)| bound < *b) {
+            best = Some((bound, model_path));
+        }
+    }
+    let (bound, best_path) = best.ok_or_else(|| anyhow::anyhow!("no workers finished"))?;
+    std::fs::copy(&best_path, out.join("model.txt"))?;
+    println!("best model: {} (bound {bound:.4}) -> {}", best_path.display(), out.join("model.txt").display());
+    if let Some(test_path) = test_path {
+        let model = StrongRule::from_text(&std::fs::read_to_string(out.join("model.txt"))?)
+            .map_err(anyhow::Error::msg)?;
+        let test = load_test_block(&test_path)?;
+        let sc = sparrow::eval::metrics::scores(&model, &test);
+        println!(
+            "test exp-loss {:.4}  auprc {:.4}",
+            sparrow::eval::exp_loss_scores(&sc, &test.labels),
+            auprc(&sc, &test.labels)
+        );
+    }
+    Ok(())
+}

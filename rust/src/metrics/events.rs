@@ -1,0 +1,189 @@
+//! Cluster event log: every TMSN protocol action, timestamped on a shared
+//! clock, collected from all workers without synchronizing them.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// What happened (the Figure-1 vocabulary).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// worker certified a new weak rule locally
+    LocalImprovement,
+    /// worker broadcast its model
+    Broadcast,
+    /// worker received a remote model
+    Receive,
+    /// received model accepted (scanner interrupted & restarted)
+    Accept,
+    /// received model rejected (certificate not better)
+    Reject,
+    /// worker began building a new in-memory sample
+    ResampleStart,
+    /// new sample installed
+    ResampleEnd,
+    /// worker halved its target edge γ after a fruitless pass
+    GammaShrink,
+    /// worker crashed (failure injection)
+    Crash,
+    /// worker finished
+    Finish,
+}
+
+impl EventKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EventKind::LocalImprovement => "local_improvement",
+            EventKind::Broadcast => "broadcast",
+            EventKind::Receive => "receive",
+            EventKind::Accept => "accept",
+            EventKind::Reject => "reject",
+            EventKind::ResampleStart => "resample_start",
+            EventKind::ResampleEnd => "resample_end",
+            EventKind::GammaShrink => "gamma_shrink",
+            EventKind::Crash => "crash",
+            EventKind::Finish => "finish",
+        }
+    }
+}
+
+/// One timestamped event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub elapsed: Duration,
+    pub worker: usize,
+    pub kind: EventKind,
+    /// model version `(origin worker, sequence)` if applicable
+    pub model: Option<(usize, u64)>,
+    /// free-form detail (loss bound, γ, …)
+    pub value: f64,
+}
+
+/// Collects events from many worker threads over a channel; the shared
+/// epoch gives all workers one clock (no synchronization — just a shared
+/// `Instant` to subtract).
+#[derive(Clone)]
+pub struct EventLog {
+    epoch: Instant,
+    tx: Sender<Event>,
+}
+
+impl EventLog {
+    pub fn new() -> (EventLog, Receiver<Event>) {
+        let (tx, rx) = channel();
+        (
+            EventLog {
+                epoch: Instant::now(),
+                tx,
+            },
+            rx,
+        )
+    }
+
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    pub fn record(&self, worker: usize, kind: EventKind, model: Option<(usize, u64)>, value: f64) {
+        // send failures mean the collector is gone (run over) — ignore
+        let _ = self.tx.send(Event {
+            elapsed: self.epoch.elapsed(),
+            worker,
+            kind,
+            model,
+            value,
+        });
+    }
+}
+
+/// Drain every event currently buffered (collector side).
+pub fn drain(rx: &Receiver<Event>) -> Vec<Event> {
+    let mut out: Vec<Event> = rx.try_iter().collect();
+    out.sort_by_key(|e| e.elapsed);
+    out
+}
+
+/// JSON-lines rendering for offline analysis.
+pub fn to_jsonl(events: &[Event]) -> String {
+    let mut out = String::new();
+    for e in events {
+        let mut o = Json::obj();
+        o.set("t", e.elapsed.as_secs_f64())
+            .set("worker", e.worker)
+            .set("kind", e.kind.as_str())
+            .set("value", e.value);
+        if let Some((w, s)) = e.model {
+            o.set("model_origin", w).set("model_seq", s);
+        }
+        out.push_str(&o.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_drain_ordered() {
+        let (log, rx) = EventLog::new();
+        log.record(2, EventKind::Broadcast, Some((2, 1)), 0.9);
+        log.record(0, EventKind::Receive, Some((2, 1)), 0.9);
+        log.record(1, EventKind::Accept, Some((2, 1)), 0.9);
+        let events = drain(&rx);
+        assert_eq!(events.len(), 3);
+        assert!(events.windows(2).all(|w| w[0].elapsed <= w[1].elapsed));
+        assert_eq!(events[0].worker, 2);
+    }
+
+    #[test]
+    fn clone_shares_channel_and_epoch() {
+        let (log, rx) = EventLog::new();
+        let log2 = log.clone();
+        assert_eq!(log.epoch(), log2.epoch());
+        log2.record(7, EventKind::Finish, None, 0.0);
+        assert_eq!(drain(&rx).len(), 1);
+    }
+
+    #[test]
+    fn record_after_collector_drop_is_safe() {
+        let (log, rx) = EventLog::new();
+        drop(rx);
+        log.record(0, EventKind::Crash, None, 0.0); // must not panic
+    }
+
+    #[test]
+    fn jsonl_format() {
+        let (log, rx) = EventLog::new();
+        log.record(1, EventKind::Accept, Some((0, 3)), 0.5);
+        let events = drain(&rx);
+        let line = to_jsonl(&events);
+        assert!(line.contains("\"kind\":\"accept\""));
+        assert!(line.contains("\"model_origin\":0"));
+        assert!(line.contains("\"model_seq\":3"));
+        assert!(line.ends_with('\n'));
+    }
+
+    #[test]
+    fn kind_names_unique() {
+        use EventKind::*;
+        let kinds = [
+            LocalImprovement,
+            Broadcast,
+            Receive,
+            Accept,
+            Reject,
+            ResampleStart,
+            ResampleEnd,
+            GammaShrink,
+            Crash,
+            Finish,
+        ];
+        let mut names: Vec<&str> = kinds.iter().map(|k| k.as_str()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), kinds.len());
+    }
+}

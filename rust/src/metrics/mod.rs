@@ -1,0 +1,8 @@
+//! Event log and execution timeline — the instrumentation behind Figure 1
+//! (the TMSN execution timeline) and the §Perf counters.
+
+pub mod events;
+pub mod timeline;
+
+pub use events::{Event, EventKind, EventLog};
+pub use timeline::render_timeline;

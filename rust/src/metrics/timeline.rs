@@ -1,0 +1,132 @@
+//! ASCII rendering of the TMSN execution timeline (paper Figure 1):
+//! one lane per worker, glyphs for local improvements, broadcasts,
+//! receptions (accept = the "yellow explosion" interrupt, reject = dot).
+
+use std::time::Duration;
+
+use crate::metrics::{Event, EventKind};
+
+/// Render `events` into a lane-per-worker timeline of `width` columns.
+pub fn render_timeline(events: &[Event], workers: usize, width: usize) -> String {
+    let tmax = events
+        .iter()
+        .map(|e| e.elapsed)
+        .max()
+        .unwrap_or(Duration::ZERO)
+        .as_secs_f64()
+        .max(1e-9);
+    let col = |t: Duration| -> usize {
+        (((t.as_secs_f64() / tmax) * (width - 1) as f64) as usize).min(width - 1)
+    };
+    let mut lanes = vec![vec![b'-'; width]; workers];
+    // crashes terminate the lane visually
+    for e in events {
+        if e.worker >= workers {
+            continue;
+        }
+        let x = col(e.elapsed);
+        let lane = &mut lanes[e.worker];
+        let glyph = match e.kind {
+            EventKind::LocalImprovement => b'F', // Found
+            EventKind::Broadcast => b'B',
+            EventKind::Accept => b'!', // interrupt ("explosion")
+            EventKind::Reject => b'.',
+            EventKind::Receive => continue, // implied by accept/reject
+            EventKind::ResampleStart => b'[',
+            EventKind::ResampleEnd => b']',
+            EventKind::GammaShrink => b'g',
+            EventKind::Crash => b'X',
+            EventKind::Finish => b'|',
+        };
+        // don't let low-priority glyphs overwrite high-priority ones
+        let priority = |g: u8| match g {
+            b'X' => 5,
+            b'!' | b'B' | b'F' => 4,
+            b'[' | b']' | b'|' => 3,
+            b'g' => 2,
+            b'.' => 1,
+            _ => 0,
+        };
+        if priority(glyph) >= priority(lane[x]) {
+            lane[x] = glyph;
+        }
+    }
+    // blank out lanes after crash
+    for e in events {
+        if e.kind == EventKind::Crash && e.worker < workers {
+            let x = col(e.elapsed);
+            for c in lanes[e.worker][x + 1..].iter_mut() {
+                *c = b' ';
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "timeline ({} workers, {:.2}s span)  F=found B=broadcast !=accepted-interrupt .=rejected [ ]=resample g=gamma/2 X=crash\n",
+        workers, tmax
+    ));
+    for (i, lane) in lanes.iter().enumerate() {
+        out.push_str(&format!("w{i:<2} |"));
+        out.push_str(std::str::from_utf8(lane).unwrap());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(ms: u64, worker: usize, kind: EventKind) -> Event {
+        Event {
+            elapsed: Duration::from_millis(ms),
+            worker,
+            kind,
+            model: None,
+            value: 0.0,
+        }
+    }
+
+    #[test]
+    fn renders_lanes_and_glyphs() {
+        let events = vec![
+            ev(10, 0, EventKind::LocalImprovement),
+            ev(11, 0, EventKind::Broadcast),
+            ev(20, 1, EventKind::Accept),
+            ev(30, 2, EventKind::Reject),
+            ev(90, 1, EventKind::Finish),
+        ];
+        let s = render_timeline(&events, 3, 40);
+        assert_eq!(s.lines().count(), 4);
+        assert!(s.contains('B') || s.contains('F'));
+        assert!(s.contains('!'));
+        assert!(s.contains('.'));
+    }
+
+    #[test]
+    fn crash_blanks_rest_of_lane() {
+        let events = vec![
+            ev(10, 0, EventKind::Crash),
+            ev(90, 1, EventKind::Finish),
+        ];
+        let s = render_timeline(&events, 2, 40);
+        let lane0 = s.lines().nth(1).unwrap();
+        assert!(lane0.contains('X'));
+        assert!(lane0.trim_end().len() < 20, "{lane0:?}");
+    }
+
+    #[test]
+    fn empty_events_safe() {
+        let s = render_timeline(&[], 2, 20);
+        assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    fn out_of_range_worker_ignored() {
+        let events = vec![ev(5, 9, EventKind::Broadcast)];
+        let s = render_timeline(&events, 2, 20);
+        // lanes (all lines after the header) contain no broadcast glyph
+        let lanes: Vec<&str> = s.lines().skip(1).collect();
+        assert!(lanes.iter().all(|l| !l.contains('B')), "{lanes:?}");
+    }
+}

@@ -1,0 +1,9 @@
+//! Boosted-stump model: weak rules, strong rules, serialization.
+
+pub mod stump;
+pub mod strong;
+pub mod tree;
+
+pub use strong::StrongRule;
+pub use stump::Stump;
+pub use tree::{DecisionTree, TreeEnsemble};

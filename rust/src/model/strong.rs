@@ -1,0 +1,272 @@
+//! Strong rules: weighted stump ensembles, grown append-only.
+//!
+//! Append-only growth is what makes the paper's incremental update cheap:
+//! "H_l" (the model last used to weight an example) is identified by its
+//! *length*, and refreshing a weight only evaluates the new suffix.
+
+use crate::model::Stump;
+
+/// `H(x) = sign( Σ_t alpha_t · h_t(x) )`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct StrongRule {
+    stumps: Vec<Stump>,
+    alphas: Vec<f32>,
+}
+
+impl StrongRule {
+    pub fn new() -> StrongRule {
+        StrongRule::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.stumps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stumps.is_empty()
+    }
+
+    pub fn stumps(&self) -> &[Stump] {
+        &self.stumps
+    }
+
+    pub fn alphas(&self) -> &[f32] {
+        &self.alphas
+    }
+
+    /// Append a weak rule with vote weight `alpha`.
+    pub fn push(&mut self, stump: Stump, alpha: f32) {
+        assert!(alpha.is_finite() && alpha > 0.0, "alpha must be positive");
+        self.stumps.push(stump);
+        self.alphas.push(alpha);
+    }
+
+    /// Raw margin score `Σ alpha_t h_t(x)`.
+    pub fn score(&self, row: &[f32]) -> f32 {
+        self.score_suffix(row, 0)
+    }
+
+    /// Score contribution of stumps `from..len` only — the incremental
+    /// update path (§4.1): caller caches the score under the first `from`
+    /// stumps and adds this delta.
+    pub fn score_suffix(&self, row: &[f32], from: usize) -> f32 {
+        let mut s = 0.0f32;
+        for (h, &a) in self.stumps[from..].iter().zip(&self.alphas[from..]) {
+            s += a * h.predict(row);
+        }
+        s
+    }
+
+    /// Classify in {-1.0, +1.0} (ties → +1, irrelevant in practice).
+    pub fn predict(&self, row: &[f32]) -> f32 {
+        if self.score(row) >= 0.0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Whether `prefix` is a prefix of `self` (same stumps & alphas).
+    /// Used by the TMSN accept path to decide if an incoming model extends
+    /// the local one (cheap adoption) or replaces it (full re-weight).
+    pub fn extends(&self, prefix: &StrongRule) -> bool {
+        prefix.len() <= self.len()
+            && prefix.stumps == self.stumps[..prefix.len()]
+            && prefix.alphas == self.alphas[..prefix.len()]
+    }
+
+    // ---- serialization (compact text lines; no serde offline) ----
+
+    /// `T` lines of `feature threshold sign alpha`, preceded by a count.
+    pub fn to_text(&self) -> String {
+        let mut out = format!("strongrule v1 {}\n", self.len());
+        for (h, a) in self.stumps.iter().zip(&self.alphas) {
+            out.push_str(&format!(
+                "{} {} {} {}\n",
+                h.feature, h.threshold, h.sign as i32, a
+            ));
+        }
+        out
+    }
+
+    pub fn from_text(text: &str) -> Result<StrongRule, String> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or("empty model text")?;
+        let mut parts = header.split_whitespace();
+        if parts.next() != Some("strongrule") || parts.next() != Some("v1") {
+            return Err("bad model header".into());
+        }
+        let t: usize = parts
+            .next()
+            .ok_or("missing count")?
+            .parse()
+            .map_err(|_| "bad count")?;
+        let mut model = StrongRule::new();
+        for _ in 0..t {
+            let line = lines.next().ok_or("truncated model text")?;
+            let mut it = line.split_whitespace();
+            let feature: u32 = it.next().ok_or("missing feature")?.parse().map_err(|_| "bad feature")?;
+            let threshold: f32 = it.next().ok_or("missing threshold")?.parse().map_err(|_| "bad threshold")?;
+            let sign: f32 = it.next().ok_or("missing sign")?.parse().map_err(|_| "bad sign")?;
+            let alpha: f32 = it.next().ok_or("missing alpha")?.parse().map_err(|_| "bad alpha")?;
+            if sign != 1.0 && sign != -1.0 {
+                return Err(format!("sign must be ±1, got {sign}"));
+            }
+            if !(alpha.is_finite() && alpha > 0.0) {
+                return Err(format!("alpha must be positive and finite, got {alpha}"));
+            }
+            if !threshold.is_finite() {
+                return Err("threshold must be finite".into());
+            }
+            model.push(Stump::new(feature, threshold, sign), alpha);
+        }
+        Ok(model)
+    }
+
+    /// Padded arrays for the AOT scan-batch graph (L2 inputs):
+    /// `(feat_onehot (F,T) row-major, thr (T,), sign (T,), alpha (T,))`.
+    /// Slots `>= len` carry `alpha = 0` and contribute nothing.
+    pub fn to_padded_arrays(&self, f: usize, tmax: usize) -> PaddedModel {
+        assert!(
+            self.len() <= tmax,
+            "model length {} exceeds tmax {tmax}",
+            self.len()
+        );
+        let mut onehot = vec![0f32; f * tmax];
+        let mut thr = vec![0f32; tmax];
+        let mut sign = vec![1f32; tmax];
+        let mut alpha = vec![0f32; tmax];
+        for (t, (h, &a)) in self.stumps.iter().zip(&self.alphas).enumerate() {
+            assert!((h.feature as usize) < f, "feature out of range");
+            onehot[h.feature as usize * tmax + t] = 1.0;
+            thr[t] = h.threshold;
+            sign[t] = h.sign;
+            alpha[t] = a;
+        }
+        PaddedModel {
+            onehot,
+            thr,
+            sign,
+            alpha,
+            f,
+            tmax,
+        }
+    }
+}
+
+/// Fixed-shape model arrays for the PJRT scan executable.
+#[derive(Debug, Clone)]
+pub struct PaddedModel {
+    /// (F, T) row-major one-hot feature selector
+    pub onehot: Vec<f32>,
+    pub thr: Vec<f32>,
+    pub sign: Vec<f32>,
+    pub alpha: Vec<f32>,
+    pub f: usize,
+    pub tmax: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model2() -> StrongRule {
+        let mut m = StrongRule::new();
+        m.push(Stump::new(0, 0.0, 1.0), 0.5);
+        m.push(Stump::new(1, 1.0, -1.0), 0.25);
+        m
+    }
+
+    #[test]
+    fn empty_scores_zero() {
+        let m = StrongRule::new();
+        assert_eq!(m.score(&[1.0, 2.0]), 0.0);
+        assert_eq!(m.predict(&[1.0, 2.0]), 1.0);
+    }
+
+    #[test]
+    fn score_accumulates() {
+        let m = model2();
+        // x = [1, 0]: h0 = +1 (1>0), h1 = -1*(2*(0>1)-1) = +1
+        assert!((m.score(&[1.0, 0.0]) - 0.75).abs() < 1e-6);
+        // x = [-1, 2]: h0 = -1, h1 = -1
+        assert!((m.score(&[-1.0, 2.0]) + 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn suffix_equals_full_minus_prefix() {
+        let m = model2();
+        let row = [0.5f32, 0.5];
+        let full = m.score(&row);
+        let prefix = {
+            let mut p = StrongRule::new();
+            p.push(m.stumps()[0], m.alphas()[0]);
+            p.score(&row)
+        };
+        assert!((m.score_suffix(&row, 1) - (full - prefix)).abs() < 1e-6);
+        assert_eq!(m.score_suffix(&row, 2), 0.0);
+    }
+
+    #[test]
+    fn extends_prefix() {
+        let m = model2();
+        let mut p = StrongRule::new();
+        p.push(m.stumps()[0], m.alphas()[0]);
+        assert!(m.extends(&p));
+        assert!(m.extends(&m));
+        assert!(!p.extends(&m));
+        let mut other = StrongRule::new();
+        other.push(Stump::new(5, 0.0, 1.0), 0.5);
+        assert!(!m.extends(&other));
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let m = model2();
+        let t = m.to_text();
+        let back = StrongRule::from_text(&t).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn text_roundtrip_empty() {
+        let m = StrongRule::new();
+        assert_eq!(StrongRule::from_text(&m.to_text()).unwrap(), m);
+    }
+
+    #[test]
+    fn from_text_rejects_garbage() {
+        assert!(StrongRule::from_text("nope").is_err());
+        assert!(StrongRule::from_text("strongrule v1 2\n1 2 1 0.5\n").is_err());
+    }
+
+    #[test]
+    fn padded_arrays_match_scoring() {
+        let m = model2();
+        let pm = m.to_padded_arrays(3, 4);
+        // emulate the L2 math: xsel = x @ onehot; pred = sign*(2*(xsel>thr)-1)
+        let x = [0.5f32, 2.0, -1.0];
+        let mut score = 0.0f32;
+        for t in 0..pm.tmax {
+            let mut xsel = 0.0f32;
+            for f in 0..pm.f {
+                xsel += x[f] * pm.onehot[f * pm.tmax + t];
+            }
+            let pred = pm.sign[t] * (2.0 * ((xsel > pm.thr[t]) as i32 as f32) - 1.0);
+            score += pm.alpha[t] * pred;
+        }
+        assert!((score - m.score(&x)).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds tmax")]
+    fn padded_arrays_checks_capacity() {
+        model2().to_padded_arrays(3, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha must be positive")]
+    fn push_rejects_bad_alpha() {
+        StrongRule::new().push(Stump::new(0, 0.0, 1.0), 0.0);
+    }
+}

@@ -1,0 +1,90 @@
+//! Decision stumps — the weak rules W of the paper's evaluation
+//! (§5: "we restrict our trees to one level, so-called decision stumps").
+
+/// A threshold stump `h(x) = sign * (2·[x[feature] > threshold] − 1)`.
+///
+/// `sign = +1` predicts +1 above the threshold; `sign = -1` inverts the
+/// polarity, so the candidate set is closed under negation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stump {
+    pub feature: u32,
+    pub threshold: f32,
+    pub sign: f32,
+}
+
+impl Stump {
+    pub fn new(feature: u32, threshold: f32, sign: f32) -> Stump {
+        assert!(sign == 1.0 || sign == -1.0, "sign must be ±1");
+        Stump {
+            feature,
+            threshold,
+            sign,
+        }
+    }
+
+    /// Predict in {-1.0, +1.0}.
+    #[inline]
+    pub fn predict(&self, row: &[f32]) -> f32 {
+        let above = row[self.feature as usize] > self.threshold;
+        if above {
+            self.sign
+        } else {
+            -self.sign
+        }
+    }
+
+    /// The stump with opposite polarity (whose edge is the negation).
+    pub fn negated(&self) -> Stump {
+        Stump {
+            sign: -self.sign,
+            ..*self
+        }
+    }
+}
+
+impl std::fmt::Display for Stump {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "h(x[{}] > {:.4}){}",
+            self.feature,
+            self.threshold,
+            if self.sign > 0.0 { "" } else { " (neg)" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predicts_by_threshold() {
+        let h = Stump::new(1, 0.5, 1.0);
+        assert_eq!(h.predict(&[9.0, 0.6]), 1.0);
+        assert_eq!(h.predict(&[9.0, 0.5]), -1.0); // strict >
+        assert_eq!(h.predict(&[9.0, 0.4]), -1.0);
+    }
+
+    #[test]
+    fn negative_polarity() {
+        let h = Stump::new(0, 0.0, -1.0);
+        assert_eq!(h.predict(&[1.0]), -1.0);
+        assert_eq!(h.predict(&[-1.0]), 1.0);
+    }
+
+    #[test]
+    fn negated_flips_all_predictions() {
+        let h = Stump::new(0, 0.25, 1.0);
+        let n = h.negated();
+        for x in [-1.0f32, 0.0, 0.25, 0.3, 2.0] {
+            assert_eq!(h.predict(&[x]), -n.predict(&[x]));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "sign must be ±1")]
+    fn invalid_sign_rejected() {
+        Stump::new(0, 0.0, 0.5);
+    }
+}

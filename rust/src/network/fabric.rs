@@ -1,0 +1,390 @@
+//! In-process broadcast fabric with a seeded delay/loss model.
+
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::util::rng::Rng;
+
+/// Link model configuration.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// fixed per-link propagation delay
+    pub base_latency: Duration,
+    /// mean of the exponential jitter added per message per link
+    pub jitter_mean: Duration,
+    /// serialization delay = message_bytes / bandwidth (0 = infinite bw)
+    pub bandwidth_bytes_per_sec: f64,
+    /// iid message-loss probability per link
+    pub drop_rate: f64,
+    /// per-receiver latency multipliers (laggard links); empty = all 1.0
+    pub latency_multipliers: Vec<f64>,
+    /// seed for the fabric's delay/loss randomness
+    pub seed: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            base_latency: Duration::from_micros(200),
+            jitter_mean: Duration::from_micros(100),
+            bandwidth_bytes_per_sec: 1e9,
+            drop_rate: 0.0,
+            latency_multipliers: Vec::new(),
+            seed: 0xFAB,
+        }
+    }
+}
+
+impl NetConfig {
+    /// An ideal network (zero latency/jitter/loss) for unit tests.
+    pub fn ideal() -> NetConfig {
+        NetConfig {
+            base_latency: Duration::ZERO,
+            jitter_mean: Duration::ZERO,
+            bandwidth_bytes_per_sec: 0.0,
+            drop_rate: 0.0,
+            latency_multipliers: Vec::new(),
+            seed: 0,
+        }
+    }
+}
+
+/// Delivery counters (shared, lock-free).
+#[derive(Debug, Default)]
+pub struct NetStats {
+    pub sent: AtomicU64,
+    pub delivered: AtomicU64,
+    pub dropped: AtomicU64,
+}
+
+impl NetStats {
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.sent.load(Ordering::Relaxed),
+            self.delivered.load(Ordering::Relaxed),
+            self.dropped.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// A message in flight.
+struct InFlight<T> {
+    due: Instant,
+    seq: u64,
+    dest: usize,
+    msg: T,
+}
+
+impl<T> PartialEq for InFlight<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.due == other.due && self.seq == other.seq
+    }
+}
+impl<T> Eq for InFlight<T> {}
+impl<T> PartialOrd for InFlight<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for InFlight<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // min-heap by (due, seq)
+        other
+            .due
+            .cmp(&self.due)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+enum ToDispatcher<T> {
+    Broadcast { src: usize, bytes: usize, msg: T },
+    Shutdown,
+}
+
+/// One worker's attachment to the fabric.
+pub struct Endpoint<T> {
+    pub id: usize,
+    to_net: Sender<ToDispatcher<T>>,
+    inbox: Receiver<T>,
+}
+
+impl<T: Clone + Send + 'static> Endpoint<T> {
+    /// Fire-and-forget broadcast to every *other* endpoint.
+    pub fn broadcast(&self, msg: T, bytes: usize) {
+        let _ = self.to_net.send(ToDispatcher::Broadcast {
+            src: self.id,
+            bytes,
+            msg,
+        });
+    }
+
+    /// Non-blocking poll of the next delivered message.
+    pub fn try_recv(&self) -> Option<T> {
+        self.inbox.try_recv().ok()
+    }
+
+    /// Blocking receive with timeout.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<T> {
+        self.inbox.recv_timeout(timeout).ok()
+    }
+
+    /// Drain everything currently queued.
+    pub fn drain(&self) -> Vec<T> {
+        self.inbox.try_iter().collect()
+    }
+}
+
+/// The fabric: owns the dispatcher thread.
+pub struct Fabric<T> {
+    to_net: Sender<ToDispatcher<T>>,
+    pub stats: Arc<NetStats>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl<T: Clone + Send + 'static> Fabric<T> {
+    /// Create a fabric with `n` endpoints.
+    pub fn new(n: usize, cfg: NetConfig) -> (Fabric<T>, Vec<Endpoint<T>>) {
+        assert!(n >= 1);
+        let (to_net, from_endpoints) = channel::<ToDispatcher<T>>();
+        let mut inbox_txs = Vec::with_capacity(n);
+        let mut endpoints = Vec::with_capacity(n);
+        for id in 0..n {
+            let (tx, rx) = channel::<T>();
+            inbox_txs.push(tx);
+            endpoints.push(Endpoint {
+                id,
+                to_net: to_net.clone(),
+                inbox: rx,
+            });
+        }
+        let stats = Arc::new(NetStats::default());
+        let stats2 = Arc::clone(&stats);
+        let handle = std::thread::Builder::new()
+            .name("net-fabric".into())
+            .spawn(move || dispatcher(from_endpoints, inbox_txs, cfg, stats2))
+            .expect("spawn fabric dispatcher");
+        (
+            Fabric {
+                to_net,
+                stats,
+                handle: Some(handle),
+            },
+            endpoints,
+        )
+    }
+
+    /// Stop the dispatcher (undelivered messages are discarded).
+    pub fn shutdown(mut self) {
+        let _ = self.to_net.send(ToDispatcher::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<T> Drop for Fabric<T> {
+    fn drop(&mut self) {
+        let _ = self.to_net.send(ToDispatcher::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn dispatcher<T: Clone + Send>(
+    incoming: Receiver<ToDispatcher<T>>,
+    inboxes: Vec<Sender<T>>,
+    cfg: NetConfig,
+    stats: Arc<NetStats>,
+) {
+    let mut rng = Rng::new(cfg.seed);
+    let mut heap: BinaryHeap<InFlight<T>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    loop {
+        // deliver everything due
+        let now = Instant::now();
+        while heap.peek().map_or(false, |m| m.due <= now) {
+            let m = heap.pop().unwrap();
+            if inboxes[m.dest].send(m.msg).is_ok() {
+                stats.delivered.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // wait for the next due time or a new message
+        let timeout = heap
+            .peek()
+            .map(|m| m.due.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match incoming.recv_timeout(timeout) {
+            Ok(ToDispatcher::Broadcast { src, bytes, msg }) => {
+                stats.sent.fetch_add(1, Ordering::Relaxed);
+                let now = Instant::now();
+                let ser = if cfg.bandwidth_bytes_per_sec > 0.0 {
+                    Duration::from_secs_f64(bytes as f64 / cfg.bandwidth_bytes_per_sec)
+                } else {
+                    Duration::ZERO
+                };
+                for dest in 0..inboxes.len() {
+                    if dest == src {
+                        continue;
+                    }
+                    if cfg.drop_rate > 0.0 && rng.bernoulli(cfg.drop_rate) {
+                        stats.dropped.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    let jitter = if cfg.jitter_mean > Duration::ZERO {
+                        Duration::from_secs_f64(
+                            rng.exponential(1.0 / cfg.jitter_mean.as_secs_f64()),
+                        )
+                    } else {
+                        Duration::ZERO
+                    };
+                    let mult = cfg
+                        .latency_multipliers
+                        .get(dest)
+                        .copied()
+                        .unwrap_or(1.0);
+                    let delay = (cfg.base_latency + jitter).mul_f64(mult) + ser;
+                    heap.push(InFlight {
+                        due: now + delay,
+                        seq,
+                        dest,
+                        msg: msg.clone(),
+                    });
+                    seq += 1;
+                }
+            }
+            Ok(ToDispatcher::Shutdown) | Err(RecvTimeoutError::Disconnected) => return,
+            Err(RecvTimeoutError::Timeout) => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broadcast_reaches_all_other_endpoints() {
+        let (fabric, eps) = Fabric::new(4, NetConfig::ideal());
+        eps[1].broadcast("hello".to_string(), 5);
+        for (i, ep) in eps.iter().enumerate() {
+            if i == 1 {
+                assert!(ep.recv_timeout(Duration::from_millis(50)).is_none());
+            } else {
+                assert_eq!(
+                    ep.recv_timeout(Duration::from_secs(2)).as_deref(),
+                    Some("hello")
+                );
+            }
+        }
+        let (sent, delivered, dropped) = fabric.stats.snapshot();
+        assert_eq!((sent, delivered, dropped), (1, 3, 0));
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn latency_delays_delivery() {
+        let cfg = NetConfig {
+            base_latency: Duration::from_millis(50),
+            jitter_mean: Duration::ZERO,
+            ..NetConfig::ideal()
+        };
+        let (fabric, eps) = Fabric::new(2, cfg);
+        let t0 = Instant::now();
+        eps[0].broadcast(1u32, 4);
+        let got = eps[1].recv_timeout(Duration::from_secs(2));
+        assert_eq!(got, Some(1));
+        assert!(t0.elapsed() >= Duration::from_millis(45), "{:?}", t0.elapsed());
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn laggard_multiplier_slows_one_link() {
+        let cfg = NetConfig {
+            base_latency: Duration::from_millis(20),
+            jitter_mean: Duration::ZERO,
+            latency_multipliers: vec![1.0, 1.0, 5.0],
+            ..NetConfig::ideal()
+        };
+        let (fabric, eps) = Fabric::new(3, cfg);
+        eps[0].broadcast(7u8, 1);
+        let t0 = Instant::now();
+        assert!(eps[1].recv_timeout(Duration::from_secs(2)).is_some());
+        let fast = t0.elapsed();
+        assert!(eps[2].recv_timeout(Duration::from_secs(2)).is_some());
+        let slow = t0.elapsed();
+        assert!(slow > fast, "slow={slow:?} fast={fast:?}");
+        assert!(slow >= Duration::from_millis(90), "slow={slow:?}");
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn drop_rate_one_drops_everything() {
+        let cfg = NetConfig {
+            drop_rate: 1.0,
+            ..NetConfig::ideal()
+        };
+        let (fabric, eps) = Fabric::new(2, cfg);
+        eps[0].broadcast(1i32, 4);
+        assert!(eps[1].recv_timeout(Duration::from_millis(100)).is_none());
+        let (_, delivered, dropped) = fabric.stats.snapshot();
+        assert_eq!(delivered, 0);
+        assert_eq!(dropped, 1);
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn messages_ordered_per_fixed_latency() {
+        let (fabric, eps) = Fabric::new(2, NetConfig::ideal());
+        for i in 0..10u32 {
+            eps[0].broadcast(i, 4);
+        }
+        let mut got = Vec::new();
+        while got.len() < 10 {
+            if let Some(v) = eps[1].recv_timeout(Duration::from_secs(2)) {
+                got.push(v);
+            } else {
+                break;
+            }
+        }
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn bandwidth_adds_serialization_delay() {
+        let cfg = NetConfig {
+            bandwidth_bytes_per_sec: 1e6, // 1 MB/s
+            ..NetConfig::ideal()
+        };
+        let (fabric, eps) = Fabric::new(2, cfg);
+        let t0 = Instant::now();
+        eps[0].broadcast(0u8, 100_000); // 100 KB -> 100 ms
+        assert!(eps[1].recv_timeout(Duration::from_secs(2)).is_some());
+        assert!(t0.elapsed() >= Duration::from_millis(80), "{:?}", t0.elapsed());
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn drop_fabric_joins_dispatcher() {
+        let (fabric, eps) = Fabric::new(2, NetConfig::ideal());
+        eps[0].broadcast(1u8, 1);
+        drop(fabric); // must not hang
+        drop(eps);
+    }
+
+    #[test]
+    fn drain_collects_buffered() {
+        let (fabric, eps) = Fabric::new(3, NetConfig::ideal());
+        eps[0].broadcast(1u8, 1);
+        eps[2].broadcast(2u8, 1);
+        std::thread::sleep(Duration::from_millis(100));
+        let got = eps[1].drain();
+        assert_eq!(got.len(), 2);
+        fabric.shutdown();
+    }
+}

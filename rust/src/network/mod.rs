@@ -1,0 +1,20 @@
+//! Broadcast network fabric.
+//!
+//! TMSN's only communication primitive is *broadcast with no
+//! acknowledgement*: a worker publishes `(model, certificate)` and keeps
+//! working; receivers observe the message after a per-link delay. There is
+//! no head node and no barrier anywhere in this module — the fabric is a
+//! delay + loss model, not a coordinator.
+//!
+//! The paper ran on EC2 with real NICs; here the fabric is an in-process
+//! simulator with seeded, configurable per-link latency (base +
+//! exponential jitter), bandwidth-proportional serialization delay,
+//! message loss, per-worker laggard multipliers, and crash injection —
+//! the knobs behind the Figure-1 timeline and the resilience experiments
+//! (E2, E6 in DESIGN.md).
+
+pub mod fabric;
+pub mod tcp;
+
+pub use fabric::{Endpoint, Fabric, NetConfig, NetStats};
+pub use tcp::TcpEndpoint;

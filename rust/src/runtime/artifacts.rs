@@ -1,0 +1,157 @@
+//! Artifact manifest parsing (`artifacts/manifest.txt`, written by
+//! `python/compile/aot.py`). Whitespace-separated `key=value` lines.
+
+use std::path::{Path, PathBuf};
+
+/// One AOT-lowered HLO module and its fixed shapes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    /// "scan" (Pallas edge kernel), "scanjnp" (pure-jnp edges), "predict"
+    pub kind: String,
+    pub file: String,
+    pub batch: usize,
+    pub features: usize,
+    pub tmax: usize,
+    pub nthr: usize,
+}
+
+/// The parsed manifest plus its directory (for resolving file paths).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub specs: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            format!(
+                "cannot read {} ({e}) — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, String> {
+        let mut specs = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut spec = ArtifactSpec {
+                kind: String::new(),
+                file: String::new(),
+                batch: 0,
+                features: 0,
+                tmax: 0,
+                nthr: 0,
+            };
+            for tok in line.split_whitespace() {
+                let (k, v) = tok
+                    .split_once('=')
+                    .ok_or_else(|| format!("manifest line {}: bad token {tok:?}", lineno + 1))?;
+                let parse_usize =
+                    |v: &str| v.parse::<usize>().map_err(|_| format!("line {}: bad {k}={v}", lineno + 1));
+                match k {
+                    "kind" => spec.kind = v.to_string(),
+                    "file" => spec.file = v.to_string(),
+                    "batch" => spec.batch = parse_usize(v)?,
+                    "features" => spec.features = parse_usize(v)?,
+                    "tmax" => spec.tmax = parse_usize(v)?,
+                    "nthr" => spec.nthr = parse_usize(v)?,
+                    _ => {} // forward-compatible: ignore unknown keys
+                }
+            }
+            if spec.kind.is_empty() || spec.file.is_empty() {
+                return Err(format!("manifest line {}: missing kind/file", lineno + 1));
+            }
+            specs.push(spec);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            specs,
+        })
+    }
+
+    /// Find a scan artifact matching the workload shape.
+    pub fn find_scan(
+        &self,
+        pallas: bool,
+        features: usize,
+        nthr: usize,
+    ) -> Result<&ArtifactSpec, String> {
+        let kind = if pallas { "scan" } else { "scanjnp" };
+        self.specs
+            .iter()
+            .find(|s| s.kind == kind && s.features == features && s.nthr == nthr)
+            .ok_or_else(|| {
+                let have: Vec<String> = self
+                    .specs
+                    .iter()
+                    .filter(|s| s.kind == kind)
+                    .map(|s| format!("(F={}, NT={})", s.features, s.nthr))
+                    .collect();
+                format!(
+                    "no {kind} artifact for F={features}, NT={nthr}; available: {} — \
+                     add the config to python/compile/aot.py (--configs) and re-run `make artifacts`",
+                    have.join(", ")
+                )
+            })
+    }
+
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+kind=scan file=scan_b128_f32_t16_n4.hlo.txt batch=128 features=32 tmax=16 nthr=4
+kind=scanjnp file=scanjnp_b128_f32_t16_n4.hlo.txt batch=128 features=32 tmax=16 nthr=4
+kind=predict file=predict_b128_f32_t16.hlo.txt batch=128 features=32 tmax=16 nthr=0
+";
+
+    #[test]
+    fn parses_specs() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.specs.len(), 3);
+        assert_eq!(m.specs[0].kind, "scan");
+        assert_eq!(m.specs[0].batch, 128);
+        assert_eq!(m.specs[2].nthr, 0);
+    }
+
+    #[test]
+    fn find_scan_matches_shape() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        let s = m.find_scan(true, 32, 4).unwrap();
+        assert_eq!(s.kind, "scan");
+        let s = m.find_scan(false, 32, 4).unwrap();
+        assert_eq!(s.kind, "scanjnp");
+        assert!(m.find_scan(true, 64, 4).is_err());
+        let err = m.find_scan(true, 64, 4).unwrap_err();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse(Path::new("/t"), "kind scan").is_err());
+        assert!(Manifest::parse(Path::new("/t"), "file=x.hlo").is_err());
+        assert!(Manifest::parse(Path::new("/t"), "kind=scan file=x batch=abc").is_err());
+    }
+
+    #[test]
+    fn path_resolution() {
+        let m = Manifest::parse(Path::new("/tmp/art"), SAMPLE).unwrap();
+        assert_eq!(
+            m.path_of(&m.specs[0]),
+            PathBuf::from("/tmp/art/scan_b128_f32_t16_n4.hlo.txt")
+        );
+    }
+}

@@ -1,0 +1,229 @@
+//! PJRT runtime — load AOT-compiled HLO artifacts and run them from the
+//! scanner hot path.
+//!
+//! Bridge contract (see `python/compile/aot.py` and DESIGN.md §6):
+//! * interchange is HLO **text** (`HloModuleProto::from_text_file`); the
+//!   text parser reassigns instruction ids, avoiding the 64-bit-id protos
+//!   that xla_extension 0.5.1 rejects;
+//! * the scan module takes 9 parameters
+//!   `x(B,F) y(B) w_s(B) score_s(B) onehot(F,T) thr(T) sign(T) alpha(T)
+//!   grid_thr(F,NT)` and returns the tuple
+//!   `(scores(B), w(B), edges(F,NT), sumw, sumw2)`;
+//! * Python never runs at train time — the artifacts are compiled once by
+//!   `make artifacts`.
+
+pub mod artifacts;
+
+pub use artifacts::{ArtifactSpec, Manifest};
+
+use crate::boosting::{CandidateGrid, EdgeMatrix};
+use crate::config::{Backend, TrainConfig};
+use crate::data::DataBlock;
+use crate::model::StrongRule;
+use crate::scanner::{BatchResult, NativeBackend, ScanBackend};
+
+/// A compiled scan executable bound to a PJRT CPU client.
+pub struct XlaScanBackend {
+    exe: xla::PjRtLoadedExecutable,
+    name: &'static str,
+    batch: usize,
+    features: usize,
+    tmax: usize,
+    nthr: usize,
+    /// grid literal cache — the candidate grid is fixed per scanner
+    grid_cache: Option<(Vec<f32>, xla::Literal)>,
+    /// padded-model literal cache (§Perf): the model changes only between
+    /// boosting iterations, so the four model literals — including the
+    /// F×T one-hot selector, the largest input — are reused across the
+    /// many batches of a scan pass. Keyed by an *exact copy* of the model
+    /// (stumps + alphas compare), never a hash, so a cache hit can never
+    /// produce wrong numerics.
+    model_cache: Option<ModelCache>,
+    /// scratch input buffers reused across batches
+    x_buf: Vec<f32>,
+    y_buf: Vec<f32>,
+    ws_buf: Vec<f32>,
+    ss_buf: Vec<f32>,
+}
+
+struct ModelCache {
+    key: StrongRule,
+    onehot: xla::Literal,
+    thr: xla::Literal,
+    sign: xla::Literal,
+    alpha: xla::Literal,
+}
+
+// SAFETY: the backend is owned and used by exactly one worker thread at a
+// time (Box<dyn ScanBackend> moved into the thread); XLA's TfrtCpuClient
+// itself is thread-safe. The xla crate just doesn't declare Send on its
+// pointer wrappers.
+unsafe impl Send for XlaScanBackend {}
+
+impl XlaScanBackend {
+    /// Compile the artifact described by `spec` on a fresh CPU client.
+    pub fn load(manifest: &Manifest, spec: &ArtifactSpec, pallas: bool) -> anyhow::Result<XlaScanBackend> {
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(manifest.path_of(spec))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(XlaScanBackend {
+            exe,
+            name: if pallas { "xla-pallas" } else { "xla-jnp" },
+            batch: spec.batch,
+            features: spec.features,
+            tmax: spec.tmax,
+            nthr: spec.nthr,
+            grid_cache: None,
+            model_cache: None,
+            x_buf: vec![0.0; spec.batch * spec.features],
+            y_buf: vec![0.0; spec.batch],
+            ws_buf: vec![0.0; spec.batch],
+            ss_buf: vec![0.0; spec.batch],
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn literal_2d(data: &[f32], d0: usize, d1: usize) -> anyhow::Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(&[d0 as i64, d1 as i64])?)
+    }
+}
+
+impl ScanBackend for XlaScanBackend {
+    fn scan_batch(
+        &mut self,
+        block: &DataBlock,
+        w_ref: &[f32],
+        score_ref: &[f32],
+        _model_len_ref: &[u32], // XLA path always full-scores (fixed shape)
+        model: &StrongRule,
+        grid: &CandidateGrid,
+        _stripe: (usize, usize), // full grid computed; scanner filters
+    ) -> BatchResult {
+        let n = block.n;
+        assert!(n <= self.batch, "batch {} exceeds artifact B={}", n, self.batch);
+        assert_eq!(block.f, self.features, "feature width mismatch");
+        assert_eq!(grid.nthr, self.nthr, "nthr mismatch");
+        assert!(
+            model.len() <= self.tmax,
+            "model length {} exceeds artifact tmax {}",
+            model.len(),
+            self.tmax
+        );
+
+        // ---- pack + pad inputs (padded rows get w_ref = 0 → contribute
+        //      nothing to edges or the stopping scalars) ------------------
+        self.x_buf[..n * self.features].copy_from_slice(&block.features);
+        self.x_buf[n * self.features..].fill(0.0);
+        self.y_buf[..n].copy_from_slice(&block.labels);
+        self.y_buf[n..].fill(1.0);
+        self.ws_buf[..n].copy_from_slice(w_ref);
+        self.ws_buf[n..].fill(0.0);
+        self.ss_buf[..n].copy_from_slice(score_ref);
+        self.ss_buf[n..].fill(0.0);
+
+        let mut run = || -> anyhow::Result<BatchResult> {
+            let x = Self::literal_2d(&self.x_buf, self.batch, self.features)?;
+            let y = xla::Literal::vec1(&self.y_buf);
+            let w_s = xla::Literal::vec1(&self.ws_buf);
+            let score_s = xla::Literal::vec1(&self.ss_buf);
+            // §Perf: rebuild the model literals only when the model
+            // actually changed (exact structural compare — see ModelCache)
+            if self
+                .model_cache
+                .as_ref()
+                .map_or(true, |c| &c.key != model)
+            {
+                let pm = model.to_padded_arrays(self.features, self.tmax);
+                self.model_cache = Some(ModelCache {
+                    key: model.clone(),
+                    onehot: Self::literal_2d(&pm.onehot, self.features, self.tmax)?,
+                    thr: xla::Literal::vec1(&pm.thr),
+                    sign: xla::Literal::vec1(&pm.sign),
+                    alpha: xla::Literal::vec1(&pm.alpha),
+                });
+            }
+            if self
+                .grid_cache
+                .as_ref()
+                .map_or(true, |(g, _)| g != &grid.thresholds)
+            {
+                self.grid_cache = Some((
+                    grid.thresholds.clone(),
+                    Self::literal_2d(&grid.thresholds, self.features, self.nthr)?,
+                ));
+            }
+            let mc = self.model_cache.as_ref().unwrap();
+            let grid_lit = &self.grid_cache.as_ref().unwrap().1;
+
+            let args: [&xla::Literal; 9] = [
+                &x, &y, &w_s, &score_s, &mc.onehot, &mc.thr, &mc.sign, &mc.alpha, grid_lit,
+            ];
+            let result = self.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+            let parts = result.to_tuple()?;
+            anyhow::ensure!(parts.len() == 5, "expected 5 outputs, got {}", parts.len());
+            let scores: Vec<f32> = parts[0].to_vec()?;
+            let weights: Vec<f32> = parts[1].to_vec()?;
+            let edges_f32: Vec<f32> = parts[2].to_vec()?;
+            let sumw: f32 = parts[3].get_first_element()?;
+            let sumw2: f32 = parts[4].get_first_element()?;
+
+            let mut edges = EdgeMatrix::zeros(self.features, self.nthr);
+            for (e, &v) in edges.edges.iter_mut().zip(&edges_f32) {
+                *e = v as f64;
+            }
+            edges.sum_w = sumw as f64;
+            edges.sum_w2 = sumw2 as f64;
+            edges.count = n as u64;
+            Ok(BatchResult {
+                scores: scores[..n].to_vec(),
+                weights: weights[..n].to_vec(),
+                edges,
+            })
+        };
+        run().expect("PJRT execution failed")
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+/// Config-driven backend factory used by the coordinator / CLI / benches.
+pub fn make_backend(cfg: &TrainConfig, features: usize) -> anyhow::Result<Box<dyn ScanBackend>> {
+    match cfg.backend {
+        Backend::Native => Ok(Box::new(NativeBackend)),
+        Backend::XlaPallas | Backend::XlaJnp => {
+            let pallas = cfg.backend == Backend::XlaPallas;
+            let manifest = Manifest::load(std::path::Path::new(&cfg.artifacts_dir))
+                .map_err(anyhow::Error::msg)?;
+            let spec = manifest
+                .find_scan(pallas, features, cfg.nthr)
+                .map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(
+                cfg.batch == spec.batch,
+                "config batch {} must equal artifact batch {} (set --batch {})",
+                cfg.batch,
+                spec.batch,
+                spec.batch
+            );
+            anyhow::ensure!(
+                cfg.max_rules <= spec.tmax,
+                "max-rules {} exceeds artifact tmax {}",
+                cfg.max_rules,
+                spec.tmax
+            );
+            Ok(Box::new(XlaScanBackend::load(&manifest, spec, pallas)?))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Execution tests live in rust/tests/runtime_roundtrip.rs (they need
+    // `make artifacts` to have run); manifest parsing is covered in
+    // artifacts.rs.
+}

@@ -1,0 +1,334 @@
+//! The Sampler (paper §4.1): builds a fresh, effectively-uniform in-memory
+//! sample from the disk-resident store by selective sampling.
+//!
+//! When the Scanner's `n_eff/m` collapses, the worker streams the
+//! (pre-permuted) disk store, scores each example under the current model,
+//! and keeps it with probability proportional to `w = exp(-y·H(x))`; kept
+//! copies enter the new sample with weight 1. The stream is circular: the
+//! pass continues until the target sample size is reached (bounded by
+//! `max_passes`). The time spent here is the flat plateau visible in the
+//! paper's Figures 3-4.
+
+use std::time::{Duration, Instant};
+
+use crate::config::SamplerKind;
+use crate::data::store::StoreStream;
+use crate::data::{DataBlock, SampleSet};
+use crate::model::StrongRule;
+use crate::sampling::{MinimalVarianceSampler, RejectionSampler, SelectiveSampler, UniformSampler};
+use crate::util::rng::Rng;
+
+/// Sampler configuration.
+#[derive(Debug, Clone)]
+pub struct SamplerConfig {
+    /// target in-memory sample size m
+    pub target_m: usize,
+    pub kind: SamplerKind,
+    /// examples probed to estimate the selection scale
+    pub probe: usize,
+    /// stop after this many circular passes even if under target
+    pub max_passes: u32,
+    /// disk-read block size
+    pub block: usize,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        SamplerConfig {
+            target_m: 2048,
+            kind: SamplerKind::MinimalVariance,
+            probe: 2048,
+            max_passes: 3,
+            block: 1024,
+        }
+    }
+}
+
+/// Outcome statistics of one resampling pass (events + Fig-3 plateaus).
+#[derive(Debug, Clone, Copy)]
+pub struct SampleStats {
+    pub read: u64,
+    pub kept: usize,
+    pub duration: Duration,
+    pub mean_weight: f64,
+}
+
+/// The sampler process: owns the disk stream cursor.
+pub struct Sampler {
+    stream: StoreStream,
+    store_len: usize,
+    cfg: SamplerConfig,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(stream: StoreStream, store_len: usize, cfg: SamplerConfig, rng: Rng) -> Sampler {
+        assert!(store_len > 0, "empty store");
+        assert!(cfg.target_m >= 1);
+        Sampler {
+            stream,
+            store_len,
+            cfg,
+            rng,
+        }
+    }
+
+    /// Build a fresh sample under `model`.
+    pub fn resample(&mut self, model: &StrongRule) -> std::io::Result<(SampleSet, SampleStats)> {
+        let t0 = Instant::now();
+        let m = self.cfg.target_m;
+
+        // Probe: estimate the mean weight to size the selection scale so
+        // one full pass yields ≈ m keeps.
+        let probe_n = self.cfg.probe.min(self.store_len).max(1);
+        let probe = self.stream.next_block(probe_n)?;
+        let probe_scored = score_block(model, &probe);
+        let mean_w = (probe_scored.iter().map(|&(_, w)| w).sum::<f64>() / probe.n as f64)
+            .max(1e-300);
+        let scale = mean_w * self.store_len as f64 / m as f64;
+
+        let mut sampler: Box<dyn SelectiveSampler> = match self.cfg.kind {
+            SamplerKind::MinimalVariance => {
+                Box::new(MinimalVarianceSampler::new(scale, &mut self.rng))
+            }
+            SamplerKind::Rejection => Box::new(RejectionSampler::new(scale)),
+            SamplerKind::Uniform => {
+                Box::new(UniformSampler::new((m as f64 / self.store_len as f64).min(1.0)))
+            }
+        };
+
+        let mut data = DataBlock::empty(probe.f);
+        let mut scores = Vec::with_capacity(m);
+        let mut weights = Vec::with_capacity(m); // true w (uniform kind)
+        let mut read = probe.n as u64;
+
+        // offer the probe block first (its reads shouldn't be wasted)
+        offer_block(
+            &probe,
+            &probe_scored,
+            sampler.as_mut(),
+            &mut self.rng,
+            m,
+            &mut data,
+            &mut scores,
+            &mut weights,
+        );
+
+        let budget = self.cfg.max_passes as u64 * self.store_len as u64;
+        while data.n < m && read < budget {
+            let take = self.cfg.block.min((budget - read) as usize);
+            let block = self.stream.next_block(take)?;
+            if block.is_empty() {
+                break;
+            }
+            read += block.n as u64;
+            let scored = score_block(model, &block);
+            offer_block(
+                &block,
+                &scored,
+                sampler.as_mut(),
+                &mut self.rng,
+                m,
+                &mut data,
+                &mut scores,
+                &mut weights,
+            );
+        }
+
+        let kept = data.n;
+        let stats = SampleStats {
+            read,
+            kept,
+            duration: t0.elapsed(),
+            mean_weight: mean_w,
+        };
+        let sample = if self.cfg.kind == SamplerKind::Uniform {
+            SampleSet::with_weights(data, scores, weights, model.len() as u32)
+        } else {
+            SampleSet::fresh(data, scores, model.len() as u32)
+        };
+        Ok((sample, stats))
+    }
+
+    /// Total time the underlying stream spent throttled (off-memory tier).
+    pub fn stalled(&self) -> Duration {
+        self.stream.stalled()
+    }
+}
+
+fn score_block(model: &StrongRule, block: &DataBlock) -> Vec<(f32, f64)> {
+    (0..block.n)
+        .map(|i| {
+            let s = model.score(block.row(i));
+            let w = (-(block.label(i) as f64) * s as f64).exp();
+            (s, w)
+        })
+        .collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn offer_block(
+    block: &DataBlock,
+    scored: &[(f32, f64)],
+    sampler: &mut dyn SelectiveSampler,
+    rng: &mut Rng,
+    m: usize,
+    data: &mut DataBlock,
+    scores: &mut Vec<f32>,
+    weights: &mut Vec<f32>,
+) {
+    for i in 0..block.n {
+        if data.n >= m {
+            return;
+        }
+        let (s, w) = scored[i];
+        let copies = sampler.offer(w, rng);
+        for _ in 0..copies {
+            if data.n >= m {
+                return;
+            }
+            data.push(block.row(i), block.label(i));
+            scores.push(s);
+            weights.push(w as f32);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DiskStore, IoThrottle, SynthConfig};
+    use crate::data::synth::SynthGen;
+    use crate::model::Stump;
+
+    fn make_store(n: usize, seed: u64) -> DiskStore {
+        let dir = std::env::temp_dir().join("sparrow_sampler_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("store_{seed}_{n}.sprw"));
+        let cfg = SynthConfig {
+            f: 8,
+            pos_rate: 0.3,
+            informative: 4,
+            signal: 1.0,
+            flip_rate: 0.0,
+            seed,
+        };
+        SynthGen::new(cfg).write_store(&path, n).unwrap()
+    }
+
+    fn sampler_for(store: &DiskStore, kind: SamplerKind, m: usize, seed: u64) -> Sampler {
+        Sampler::new(
+            store.stream(IoThrottle::unlimited()).unwrap(),
+            store.len(),
+            SamplerConfig {
+                target_m: m,
+                kind,
+                probe: 256,
+                max_passes: 3,
+                block: 512,
+            },
+            Rng::new(seed),
+        )
+    }
+
+    #[test]
+    fn empty_model_yields_near_uniform_sample() {
+        let store = make_store(5000, 1);
+        let mut s = sampler_for(&store, SamplerKind::MinimalVariance, 1000, 2);
+        let (sample, stats) = s.resample(&StrongRule::new()).unwrap();
+        assert_eq!(sample.len(), 1000);
+        assert!(stats.read <= 3 * 5000);
+        // empty model → all weights 1 → n_eff = m
+        assert!((sample.n_eff() - 1000.0).abs() < 1e-6);
+        // positive rate preserved (weights uniform)
+        assert!((sample.data.positive_rate() - 0.3).abs() < 0.06);
+    }
+
+    #[test]
+    fn trained_model_overselects_hard_examples() {
+        let store = make_store(8000, 3);
+        // a model confidently right on positives via informative features →
+        // use a stump on feature 0 with big alpha; hard examples (wrong
+        // side) get upweighted and should be overrepresented
+        let mut model = StrongRule::new();
+        model.push(Stump::new(0, 0.0, 1.0), 1.5);
+        let mut s = sampler_for(&store, SamplerKind::MinimalVariance, 1000, 4);
+        let (sample, _) = s.resample(&model).unwrap();
+        assert_eq!(sample.len(), 1000);
+        // the kept set should skew toward examples the model got wrong:
+        // their (pre-sampling) weight was > 1
+        let mut hard = 0usize;
+        for i in 0..sample.len() {
+            let y = sample.data.label(i);
+            if y * model.score(sample.data.row(i)) < 0.0 {
+                hard += 1;
+            }
+        }
+        // under uniform sampling the wrong-side fraction would equal the
+        // model's error rate; weighted sampling multiplies it by ~e^{2α}
+        assert!(hard > sample.len() / 4, "hard={hard}");
+        // fresh sample resets weights to 1
+        assert!((sample.n_eff() - 1000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejection_kind_reaches_target() {
+        let store = make_store(4000, 5);
+        let mut s = sampler_for(&store, SamplerKind::Rejection, 500, 6);
+        let (sample, _) = s.resample(&StrongRule::new()).unwrap();
+        assert_eq!(sample.len(), 500);
+    }
+
+    #[test]
+    fn uniform_kind_keeps_true_weights() {
+        let store = make_store(4000, 7);
+        let mut model = StrongRule::new();
+        model.push(Stump::new(1, 0.0, 1.0), 0.9);
+        let mut s = sampler_for(&store, SamplerKind::Uniform, 500, 8);
+        let (sample, _) = s.resample(&model).unwrap();
+        assert!(sample.len() > 300, "len={}", sample.len());
+        // uniform sampling does NOT reset weights → n_eff < m
+        assert!(sample.n_eff() < sample.len() as f64 * 0.999);
+        // weights match exp(-y H)
+        for i in 0..sample.len().min(50) {
+            let want = (-(sample.data.label(i)) * model.score(sample.data.row(i))).exp();
+            assert!((sample.w_last[i] - want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn pass_budget_bounds_reads() {
+        let store = make_store(1000, 9);
+        // impossible target (more than the data can ever yield at scale):
+        // the pass budget must stop the loop
+        let mut s = Sampler::new(
+            store.stream(IoThrottle::unlimited()).unwrap(),
+            store.len(),
+            SamplerConfig {
+                target_m: 100_000,
+                kind: SamplerKind::Uniform,
+                probe: 100,
+                max_passes: 2,
+                block: 500,
+            },
+            Rng::new(10),
+        );
+        let (sample, stats) = s.resample(&StrongRule::new()).unwrap();
+        assert!(stats.read <= 2 * 1000 + 500);
+        assert!(sample.len() < 100_000);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let store = make_store(3000, 11);
+        let run = |seed| {
+            let mut s = sampler_for(&store, SamplerKind::MinimalVariance, 400, seed);
+            s.resample(&StrongRule::new()).unwrap().0
+        };
+        let a = run(42);
+        let b = run(42);
+        assert_eq!(a.data, b.data);
+        let c = run(43);
+        assert!(a.data != c.data || a.len() != c.len());
+    }
+}

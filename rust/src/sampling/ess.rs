@@ -1,0 +1,92 @@
+//! Effective sample size (paper Eq. 4):
+//!
+//!   n_eff = (Σ w_i)² / Σ w_i²
+//!
+//! As boosting skews the in-memory sample's weights, `n_eff` collapses;
+//! when `n_eff / m` crosses a threshold the worker resamples from disk.
+
+/// Effective number of examples for (unnormalized) weights.
+pub fn n_eff(w: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    let mut s2 = 0.0f64;
+    for &wi in w {
+        let wi = wi as f64;
+        s += wi;
+        s2 += wi * wi;
+    }
+    if s2 <= 0.0 {
+        0.0
+    } else {
+        s * s / s2
+    }
+}
+
+/// Expected fraction of examples kept by weight-proportional selection
+/// (§3: `(mean w) / (max w)`).
+pub fn expected_keep_fraction(w: &[f32]) -> f64 {
+    if w.is_empty() {
+        return 0.0;
+    }
+    let max = w.iter().cloned().fold(f32::MIN, f32::max) as f64;
+    if max <= 0.0 {
+        return 0.0;
+    }
+    let mean = w.iter().map(|&x| x as f64).sum::<f64>() / w.len() as f64;
+    mean / max
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen, prop_check};
+
+    #[test]
+    fn uniform_weights_full_ess() {
+        let w = vec![2.5f32; 100];
+        assert!((n_eff(&w) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn k_hot_weights_give_k() {
+        // k ones and the rest zeros → n_eff = k (the paper's motivating case)
+        let mut w = vec![0.0f32; 100];
+        for wi in w.iter_mut().take(7) {
+            *wi = 1.0;
+        }
+        assert!((n_eff(&w) - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_and_zero() {
+        assert_eq!(n_eff(&[]), 0.0);
+        assert_eq!(n_eff(&[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn scale_invariant() {
+        let w1 = vec![1.0f32, 2.0, 3.0, 4.0];
+        let w2: Vec<f32> = w1.iter().map(|x| x * 7.5).collect();
+        assert!((n_eff(&w1) - n_eff(&w2)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prop_bounded_by_n() {
+        prop_check("1 <= n_eff <= n for positive weights", 50, |rng| {
+            let n = gen::size(rng, 1, 500);
+            let w = gen::skewed_weights(rng, n, 8.0);
+            let e = n_eff(&w);
+            if e >= 1.0 - 1e-9 && e <= n as f64 + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("n_eff={e} out of [1, {n}]"))
+            }
+        });
+    }
+
+    #[test]
+    fn keep_fraction() {
+        assert!((expected_keep_fraction(&[1.0, 1.0]) - 1.0).abs() < 1e-12);
+        assert!((expected_keep_fraction(&[1.0, 0.0]) - 0.5).abs() < 1e-12);
+        assert_eq!(expected_keep_fraction(&[]), 0.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Weighted sampling substrate (§3 "Effective Sample Size", §4.1 Sampler).
+
+pub mod ess;
+pub mod selective;
+
+pub use ess::n_eff;
+pub use selective::{MinimalVarianceSampler, RejectionSampler, SelectiveSampler, UniformSampler};

@@ -1,0 +1,252 @@
+//! Selective (weight-proportional) sampling strategies for the Sampler.
+//!
+//! The paper samples each example with probability proportional to its
+//! weight and assigns the kept copies initial weight 1 (§4.1). It uses
+//! *minimal variance sampling* (Kitagawa's systematic resampling [19])
+//! "because it produces less variation in the sampled set"; rejection and
+//! uniform sampling are provided for the A2 ablation.
+
+use crate::util::rng::Rng;
+
+/// A streaming weighted sampler: offered examples one at a time, returns
+/// how many copies to keep (0 or more).
+pub trait SelectiveSampler: Send {
+    /// Offer an example with weight `w`; how many copies enter the sample?
+    fn offer(&mut self, w: f64, rng: &mut Rng) -> usize;
+
+    /// `scale` is the weight mass per kept example (`c` such that an
+    /// example of weight `c` is kept exactly once in expectation).
+    fn scale(&self) -> f64;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Kitagawa systematic ("minimal variance") resampling, streamed:
+/// accumulate `w/scale` and emit a copy every time the accumulator crosses
+/// the next stratum boundary `offset + k`. Copy counts differ from the
+/// expectation `w/scale` by strictly less than 1.
+#[derive(Debug)]
+pub struct MinimalVarianceSampler {
+    scale: f64,
+    acc: f64,
+    emitted: u64,
+    offset: f64,
+}
+
+impl MinimalVarianceSampler {
+    /// `scale` = expected weight mass per kept example. The stratum offset
+    /// is drawn once per pass (systematic sampling's single random number).
+    pub fn new(scale: f64, rng: &mut Rng) -> MinimalVarianceSampler {
+        assert!(scale > 0.0);
+        MinimalVarianceSampler {
+            scale,
+            acc: 0.0,
+            emitted: 0,
+            offset: rng.f64(),
+        }
+    }
+}
+
+impl SelectiveSampler for MinimalVarianceSampler {
+    fn offer(&mut self, w: f64, _rng: &mut Rng) -> usize {
+        debug_assert!(w >= 0.0);
+        self.acc += w / self.scale;
+        let mut copies = 0usize;
+        while self.acc > self.offset + self.emitted as f64 {
+            self.emitted += 1;
+            copies += 1;
+        }
+        copies
+    }
+
+    fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    fn name(&self) -> &'static str {
+        "minimal-variance"
+    }
+}
+
+/// Classic rejection sampling: keep with probability `min(w/scale, 1)`;
+/// weights above `scale` keep `floor(w/scale)` copies plus a Bernoulli
+/// remainder so expectation matches minimal-variance exactly.
+#[derive(Debug)]
+pub struct RejectionSampler {
+    scale: f64,
+}
+
+impl RejectionSampler {
+    pub fn new(scale: f64) -> RejectionSampler {
+        assert!(scale > 0.0);
+        RejectionSampler { scale }
+    }
+}
+
+impl SelectiveSampler for RejectionSampler {
+    fn offer(&mut self, w: f64, rng: &mut Rng) -> usize {
+        debug_assert!(w >= 0.0);
+        let expect = w / self.scale;
+        let base = expect.floor();
+        let frac = expect - base;
+        base as usize + usize::from(rng.bernoulli(frac))
+    }
+
+    fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    fn name(&self) -> &'static str {
+        "rejection"
+    }
+}
+
+/// Weight-blind uniform sampling at a fixed rate (A2 ablation's strawman —
+/// wastes memory on easy examples; kept examples do NOT have uniform
+/// weight so the caller must carry w into the sample).
+#[derive(Debug)]
+pub struct UniformSampler {
+    pub rate: f64,
+}
+
+impl UniformSampler {
+    pub fn new(rate: f64) -> UniformSampler {
+        assert!((0.0..=1.0).contains(&rate));
+        UniformSampler { rate }
+    }
+}
+
+impl SelectiveSampler for UniformSampler {
+    fn offer(&mut self, _w: f64, rng: &mut Rng) -> usize {
+        usize::from(rng.bernoulli(self.rate))
+    }
+
+    fn scale(&self) -> f64 {
+        1.0
+    }
+
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen, prop_check};
+
+    #[test]
+    fn mvs_copy_count_within_one_of_expectation() {
+        let mut rng = Rng::new(1);
+        let mut s = MinimalVarianceSampler::new(2.0, &mut rng);
+        let ws = [0.5, 3.0, 1.0, 6.0, 0.1, 2.0];
+        let mut total = 0usize;
+        let mut mass = 0.0;
+        for &w in &ws {
+            total += s.offer(w, &mut rng);
+            mass += w;
+        }
+        let expect = mass / 2.0;
+        assert!(
+            (total as f64 - expect).abs() < 1.0,
+            "total={total} expect={expect}"
+        );
+    }
+
+    #[test]
+    fn mvs_heavy_example_kept_multiple_times() {
+        let mut rng = Rng::new(2);
+        let mut s = MinimalVarianceSampler::new(1.0, &mut rng);
+        let copies = s.offer(5.5, &mut rng);
+        assert!(copies == 5 || copies == 6, "copies={copies}");
+    }
+
+    #[test]
+    fn mvs_zero_weight_never_kept() {
+        let mut rng = Rng::new(3);
+        let mut s = MinimalVarianceSampler::new(1.0, &mut rng);
+        for _ in 0..100 {
+            assert_eq!(s.offer(0.0, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn prop_mvs_unbiased() {
+        prop_check("mvs total ≈ mass/scale across seeds", 30, |rng| {
+            let n = gen::size(rng, 50, 500);
+            let ws = gen::skewed_weights(rng, n, 5.0);
+            let scale = 0.5;
+            let mut s = MinimalVarianceSampler::new(scale, rng);
+            let mut total = 0usize;
+            let mut mass = 0.0f64;
+            for &w in &ws {
+                total += s.offer(w as f64, rng);
+                mass += w as f64;
+            }
+            let expect = mass / scale;
+            if (total as f64 - expect).abs() < 1.0 {
+                Ok(())
+            } else {
+                Err(format!("total={total} expect={expect:.3}"))
+            }
+        });
+    }
+
+    #[test]
+    fn rejection_unbiased_in_expectation() {
+        let mut rng = Rng::new(4);
+        let mut s = RejectionSampler::new(2.0);
+        let trials = 20_000;
+        let w = 1.3; // expect 0.65/trial
+        let total: usize = (0..trials).map(|_| s.offer(w, &mut rng)).sum();
+        let rate = total as f64 / trials as f64;
+        assert!((rate - 0.65).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn rejection_heavy_weight_multi_copy() {
+        let mut rng = Rng::new(5);
+        let mut s = RejectionSampler::new(1.0);
+        let copies = s.offer(3.7, &mut rng);
+        assert!(copies == 3 || copies == 4);
+    }
+
+    #[test]
+    fn uniform_rate() {
+        let mut rng = Rng::new(6);
+        let mut s = UniformSampler::new(0.25);
+        let total: usize = (0..40_000).map(|_| s.offer(123.0, &mut rng)).sum();
+        let rate = total as f64 / 40_000.0;
+        assert!((rate - 0.25).abs() < 0.01, "rate={rate}");
+    }
+
+    #[test]
+    fn mvs_variance_lower_than_rejection() {
+        // run both over the same weight stream many times; MVS count
+        // variance must be (much) smaller
+        let ws: Vec<f64> = (0..200).map(|i| 0.5 + (i % 7) as f64 * 0.3).collect();
+        let scale = 1.0;
+        let mut mv_counts = Vec::new();
+        let mut rj_counts = Vec::new();
+        for seed in 0..50 {
+            let mut rng = Rng::new(seed);
+            let mut mv = MinimalVarianceSampler::new(scale, &mut rng);
+            let c: usize = ws.iter().map(|&w| mv.offer(w, &mut rng)).sum();
+            mv_counts.push(c as f64);
+            let mut rng = Rng::new(seed + 1000);
+            let mut rj = RejectionSampler::new(scale);
+            let c: usize = ws.iter().map(|&w| rj.offer(w, &mut rng)).sum();
+            rj_counts.push(c as f64);
+        }
+        let var = |xs: &[f64]| {
+            let m = xs.iter().sum::<f64>() / xs.len() as f64;
+            xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+        };
+        assert!(
+            var(&mv_counts) < var(&rj_counts),
+            "mv={} rj={}",
+            var(&mv_counts),
+            var(&rj_counts)
+        );
+    }
+}

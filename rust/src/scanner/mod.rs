@@ -1,0 +1,440 @@
+//! The Scanner (paper §4.1, Alg. 2).
+//!
+//! Scans the in-memory sample sequentially (in batches), refreshing weights
+//! incrementally and accumulating per-candidate edge statistics, and stops
+//! as soon as the sequential stopping rule certifies some candidate's true
+//! advantage ≥ γ. If a scan budget passes with no certification the target
+//! γ is halved (Alg. 2's `γ ← γ/2`); a full pass over the sample with no
+//! certification returns `Exhausted` (Alg. 2's `Fail`), prompting the
+//! worker to resample. Between batches the worker may interrupt the scan
+//! when a better remote model arrives (the TMSN receive path).
+
+pub mod backend;
+
+pub use backend::{BatchResult, NativeBackend, ScanBackend};
+
+use crate::boosting::{CandidateGrid, EdgeMatrix};
+use crate::data::{DataBlock, SampleSet};
+use crate::model::{StrongRule, Stump};
+use crate::stopping::{CandidateStats, StoppingRule};
+
+/// Outcome of one scanner invocation (one boosting iteration attempt).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScanOutcome {
+    /// A candidate was certified at advantage γ.
+    Found {
+        stump: Stump,
+        gamma: f64,
+        scanned: u64,
+    },
+    /// Full pass, nothing certified (worker should resample / γ exhausted).
+    Exhausted { scanned: u64 },
+    /// The interrupt callback asked to stop (remote model accepted).
+    Interrupted { scanned: u64 },
+}
+
+/// Scanner configuration (a slice of `TrainConfig`).
+#[derive(Debug, Clone)]
+pub struct ScannerConfig {
+    pub batch: usize,
+    /// initial target advantage γ₀ per invocation
+    pub gamma0: f64,
+    /// give up the invocation when γ would drop below this
+    pub gamma_min: f64,
+    /// examples scanned before γ halves (Alg. 2's `M`);
+    /// 0 = auto: `max(256, m/8)` so γ can drop to a certifiable level
+    /// within a single pass over the sample
+    pub scan_budget: u64,
+}
+
+impl Default for ScannerConfig {
+    fn default() -> Self {
+        ScannerConfig {
+            batch: 128,
+            gamma0: 0.25,
+            gamma_min: 0.001,
+            scan_budget: 0,
+        }
+    }
+}
+
+/// The scanner: owns the candidate grid (full width), the worker's feature
+/// stripe, the compute backend and the stopping rule.
+pub struct Scanner {
+    pub grid: CandidateGrid,
+    pub stripe: (usize, usize),
+    backend: Box<dyn ScanBackend>,
+    rule: Box<dyn StoppingRule>,
+    cfg: ScannerConfig,
+    /// circular cursor into the sample (persists across invocations — the
+    /// `i` threaded through Alg. 1/2)
+    cursor: usize,
+    /// scratch batch buffers
+    scratch: Scratch,
+    /// total examples scanned over the scanner's lifetime (diagnostics)
+    pub total_scanned: u64,
+    /// γ-halving events (diagnostics / GammaShrink events)
+    pub gamma_shrinks: u64,
+}
+
+#[derive(Default)]
+struct Scratch {
+    block: Option<DataBlock>,
+    w_ref: Vec<f32>,
+    score_ref: Vec<f32>,
+    len_ref: Vec<u32>,
+    idx: Vec<usize>,
+}
+
+impl Scanner {
+    pub fn new(
+        grid: CandidateGrid,
+        stripe: (usize, usize),
+        backend: Box<dyn ScanBackend>,
+        rule: Box<dyn StoppingRule>,
+        cfg: ScannerConfig,
+    ) -> Scanner {
+        assert!(stripe.0 < stripe.1 && stripe.1 <= grid.f);
+        Scanner {
+            grid,
+            stripe,
+            backend,
+            rule,
+            cfg,
+            cursor: 0,
+            scratch: Scratch::default(),
+            total_scanned: 0,
+            gamma_shrinks: 0,
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// One scanner invocation: scan up to one full pass over `sample`,
+    /// looking for a candidate with certified advantage ≥ γ (γ starts at
+    /// γ₀ and halves every `scan_budget` examples).
+    ///
+    /// `interrupt` is polled between batches; returning `true` aborts the
+    /// scan (the worker accepted a remote model).
+    pub fn run_pass(
+        &mut self,
+        sample: &mut SampleSet,
+        model: &StrongRule,
+        mut interrupt: impl FnMut() -> bool,
+    ) -> ScanOutcome {
+        let m = sample.len();
+        if m == 0 {
+            return ScanOutcome::Exhausted { scanned: 0 };
+        }
+        let budget = if self.cfg.scan_budget == 0 {
+            (m as u64 / 8).max(256)
+        } else {
+            self.cfg.scan_budget
+        };
+        let mut gamma = self.cfg.gamma0;
+        let mut accum = EdgeMatrix::zeros(self.grid.f, self.grid.nthr);
+        let mut scanned = 0u64;
+        let model_len = model.len() as u32;
+
+        while scanned < m as u64 {
+            if interrupt() {
+                return ScanOutcome::Interrupted { scanned };
+            }
+            let take = (self.cfg.batch as u64).min(m as u64 - scanned) as usize;
+            let result = self.scan_chunk(sample, model, take);
+            // write back refreshed weights/scores
+            for (k, &i) in self.scratch.idx.iter().enumerate() {
+                sample.set_weight(i, result.scores[k], result.weights[k], model_len);
+            }
+            accum.merge(&result.edges);
+            scanned += take as u64;
+            self.total_scanned += take as u64;
+
+            // γ halving on budget exhaustion (Alg. 2: m > M)
+            while scanned >= budget * (self.gamma_shrinks_local(gamma) + 1) {
+                gamma /= 2.0;
+                self.gamma_shrinks += 1;
+                if gamma < self.cfg.gamma_min {
+                    return ScanOutcome::Exhausted { scanned };
+                }
+            }
+
+            // stopping-rule sweep over the stripe candidates (both signs)
+            if let Some((stump, g)) = self.check_candidates(&accum, gamma) {
+                return ScanOutcome::Found {
+                    stump,
+                    gamma: g,
+                    scanned,
+                };
+            }
+        }
+        ScanOutcome::Exhausted { scanned }
+    }
+
+    // how many halvings already happened for the γ passed in (derived,
+    // avoids carrying extra state through the loop)
+    fn gamma_shrinks_local(&self, gamma: f64) -> u64 {
+        (self.cfg.gamma0 / gamma).log2().round() as u64
+    }
+
+    /// Read the next `take` examples (circular) into scratch and run the
+    /// backend.
+    fn scan_chunk(&mut self, sample: &SampleSet, model: &StrongRule, take: usize) -> BatchResult {
+        let m = sample.len();
+        let f = sample.data.f;
+        let block = self
+            .scratch
+            .block
+            .get_or_insert_with(|| DataBlock::empty(f));
+        block.n = 0;
+        block.features.clear();
+        block.labels.clear();
+        self.scratch.w_ref.clear();
+        self.scratch.score_ref.clear();
+        self.scratch.len_ref.clear();
+        self.scratch.idx.clear();
+        for _ in 0..take {
+            let i = self.cursor;
+            self.cursor = (self.cursor + 1) % m;
+            block.push(sample.data.row(i), sample.data.label(i));
+            self.scratch.w_ref.push(sample.w_last[i]);
+            self.scratch.score_ref.push(sample.score_last[i]);
+            self.scratch.len_ref.push(sample.model_len_last[i]);
+            self.scratch.idx.push(i);
+        }
+        self.backend.scan_batch(
+            block,
+            &self.scratch.w_ref,
+            &self.scratch.score_ref,
+            &self.scratch.len_ref,
+            model,
+            &self.grid,
+            self.stripe,
+        )
+    }
+
+    /// Does any stripe candidate (either polarity) fire at target `gamma`?
+    fn check_candidates(&self, accum: &EdgeMatrix, gamma: f64) -> Option<(Stump, f64)> {
+        let (fs, fe) = self.stripe;
+        let mut best: Option<(Stump, f64, f64)> = None; // (stump, γ, deviation)
+        for f in fs..fe {
+            for t in 0..self.grid.nthr {
+                let e = accum.edge(f, t);
+                for sign in [1.0f64, -1.0] {
+                    let stats = CandidateStats {
+                        m: e * sign,
+                        sum_w: accum.sum_w,
+                        sum_w2: accum.sum_w2,
+                        count: accum.count,
+                    };
+                    if self.rule.fires(&stats, gamma) {
+                        let dev = stats.deviation(gamma);
+                        if best.as_ref().map_or(true, |b| dev > b.2) {
+                            best = Some((
+                                Stump::new(f as u32, self.grid.row(f)[t], sign as f32),
+                                gamma,
+                                dev,
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        best.map(|(s, g, _)| (s, g))
+    }
+
+    /// Reset the circular cursor (used when a new sample is installed).
+    pub fn reset_cursor(&mut self) {
+        self.cursor = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stopping::LilRule;
+    use crate::util::rng::Rng;
+
+    /// A sample where feature 0 equals the label (a perfect weak rule) and
+    /// the rest are noise.
+    fn easy_sample(n: usize, f: usize, seed: u64) -> SampleSet {
+        let mut rng = Rng::new(seed);
+        let mut block = DataBlock::empty(f);
+        for _ in 0..n {
+            let y = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+            let mut row: Vec<f32> = (0..f).map(|_| rng.gauss() as f32).collect();
+            row[0] = y * (1.0 + rng.f32());
+            block.push(&row, y);
+        }
+        SampleSet::fresh(block, vec![0.0; n], 0)
+    }
+
+    fn noise_sample(n: usize, f: usize, seed: u64) -> SampleSet {
+        let mut rng = Rng::new(seed);
+        let mut block = DataBlock::empty(f);
+        for _ in 0..n {
+            let y = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+            let row: Vec<f32> = (0..f).map(|_| rng.gauss() as f32).collect();
+            block.push(&row, y);
+        }
+        SampleSet::fresh(block, vec![0.0; n], 0)
+    }
+
+    fn scanner(f: usize, gamma0: f64) -> Scanner {
+        Scanner::new(
+            CandidateGrid::uniform(f, 3, -1.0, 1.0),
+            (0, f),
+            Box::new(NativeBackend),
+            Box::new(LilRule::default()),
+            ScannerConfig {
+                batch: 64,
+                gamma0,
+                gamma_min: 0.001,
+                scan_budget: 0,
+            },
+        )
+    }
+
+    #[test]
+    fn finds_perfect_feature() {
+        let mut sample = easy_sample(2000, 4, 1);
+        let mut sc = scanner(4, 0.25);
+        let model = StrongRule::new();
+        match sc.run_pass(&mut sample, &model, || false) {
+            ScanOutcome::Found { stump, gamma, scanned } => {
+                assert_eq!(stump.feature, 0, "found {stump}");
+                assert!(gamma > 0.0);
+                // early stopping: far fewer than the full pass
+                assert!(scanned < 2000, "scanned={scanned}");
+            }
+            other => panic!("expected Found, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn exhausts_on_pure_noise() {
+        let mut sample = noise_sample(500, 4, 2);
+        let mut sc = scanner(4, 0.25);
+        let model = StrongRule::new();
+        match sc.run_pass(&mut sample, &model, || false) {
+            ScanOutcome::Exhausted { scanned } => assert_eq!(scanned, 500),
+            other => panic!("expected Exhausted, got {other:?}"),
+        }
+        // γ was halved along the way
+        assert!(sc.gamma_shrinks > 0);
+    }
+
+    #[test]
+    fn interrupt_aborts_scan() {
+        let mut sample = noise_sample(1000, 4, 3);
+        let mut sc = scanner(4, 0.25);
+        let model = StrongRule::new();
+        let mut polls = 0;
+        let out = sc.run_pass(&mut sample, &model, || {
+            polls += 1;
+            polls > 2
+        });
+        match out {
+            ScanOutcome::Interrupted { scanned } => {
+                assert!(scanned <= 200, "scanned={scanned}");
+            }
+            other => panic!("expected Interrupted, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn weights_refreshed_during_scan() {
+        let mut sample = easy_sample(300, 2, 4);
+        let mut sc = scanner(2, 0.4);
+        // a model that's already good on feature 0 → weights shrink
+        let mut model = StrongRule::new();
+        model.push(Stump::new(0, 0.0, 1.0), 0.8);
+        let _ = sc.run_pass(&mut sample, &model, || false);
+        // every scanned example has model_len_last == 1 and weight < 1
+        let scanned_any = sample.model_len_last.iter().any(|&l| l == 1);
+        assert!(scanned_any);
+        for i in 0..sample.len() {
+            if sample.model_len_last[i] == 1 {
+                assert!(sample.w_last[i] < 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn stripe_restricts_found_features() {
+        // perfect feature 0, but the worker owns features [2, 4) → it must
+        // NOT certify feature 0
+        let mut sample = easy_sample(1500, 4, 5);
+        let mut sc = Scanner::new(
+            CandidateGrid::uniform(4, 3, -1.0, 1.0),
+            (2, 4),
+            Box::new(NativeBackend),
+            Box::new(LilRule::default()),
+            ScannerConfig::default(),
+        );
+        let model = StrongRule::new();
+        match sc.run_pass(&mut sample, &model, || false) {
+            ScanOutcome::Found { stump, .. } => {
+                assert!((2..4).contains(&(stump.feature as usize)), "{stump}");
+            }
+            ScanOutcome::Exhausted { .. } => {} // fine: no signal in stripe
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cursor_persists_across_invocations() {
+        let mut sample = noise_sample(100, 2, 6);
+        let mut sc = scanner(2, 0.25);
+        let model = StrongRule::new();
+        let _ = sc.run_pass(&mut sample, &model, || false);
+        assert_eq!(sc.cursor, 0); // full pass wrapped exactly
+        let mut polls = 0;
+        let _ = sc.run_pass(&mut sample, &model, || {
+            polls += 1;
+            polls > 1
+        });
+        assert_ne!(sc.cursor, 0); // partial pass left the cursor mid-sample
+        sc.reset_cursor();
+        assert_eq!(sc.cursor, 0);
+    }
+
+    #[test]
+    fn gamma_budget_halves_target() {
+        // weak-but-real signal at small advantage: γ₀ too ambitious, the
+        // scanner must halve down to a certifiable level within the pass
+        let mut rng = Rng::new(7);
+        let mut block = DataBlock::empty(2);
+        let n = 20_000;
+        for _ in 0..n {
+            let y = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+            // feature 0 agrees with y 65% of the time → corr 0.3, adv 0.15
+            let agree = rng.bernoulli(0.65);
+            let x0 = if agree { y } else { -y } * (0.5 + rng.f32());
+            block.push(&[x0, rng.gauss() as f32], y);
+        }
+        let mut sample = SampleSet::fresh(block, vec![0.0; n], 0);
+        let mut sc = Scanner::new(
+            CandidateGrid::uniform(2, 1, -0.5, 0.5),
+            (0, 2),
+            Box::new(NativeBackend),
+            Box::new(LilRule::default()),
+            ScannerConfig {
+                batch: 256,
+                gamma0: 0.45, // unreachable
+                gamma_min: 0.001,
+                scan_budget: 2000,
+            },
+        );
+        match sc.run_pass(&mut sample, &StrongRule::new(), || false) {
+            ScanOutcome::Found { stump, gamma, .. } => {
+                assert_eq!(stump.feature, 0);
+                assert!(gamma < 0.45, "gamma={gamma}");
+                assert!(sc.gamma_shrinks >= 1);
+            }
+            other => panic!("expected Found, got {other:?}"),
+        }
+    }
+}

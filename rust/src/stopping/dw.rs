@@ -1,0 +1,109 @@
+//! Domingo–Watanabe adaptive-sampling stopping rule.
+//!
+//! §3 cites Domingo & Watanabe [14] (and Bradley & Schapire's FilterBoost
+//! [13]) as the prior early-stopping approaches Sparrow deliberately
+//! departs from. This implements the DW-style rule for the A1 ablation:
+//! a time-peeled Hoeffding test — at "time" t (here: accumulated variance
+//! V), the deviation must clear `sqrt(2 V ln(t(t+1)/δ))`, the union bound
+//! over all stopping times. Valid anytime, but the `log t` inflation grows
+//! forever, whereas the LIL bound's `log log` is exponentially tighter —
+//! which is exactly the paper's reason for choosing [15].
+
+use crate::stopping::{CandidateStats, StoppingRule};
+
+/// Domingo–Watanabe peeled-Hoeffding sequential test.
+#[derive(Debug, Clone)]
+pub struct DwRule {
+    pub delta: f64,
+    pub min_count: u64,
+}
+
+impl Default for DwRule {
+    fn default() -> Self {
+        DwRule {
+            delta: 1e-6,
+            min_count: 100,
+        }
+    }
+}
+
+impl StoppingRule for DwRule {
+    fn fires(&self, stats: &CandidateStats, gamma: f64) -> bool {
+        if stats.count < self.min_count || stats.sum_w2 <= 0.0 {
+            return false;
+        }
+        stats.deviation(gamma) > self.bound(stats)
+    }
+
+    fn bound(&self, stats: &CandidateStats) -> f64 {
+        let t = stats.count as f64;
+        let v = stats.sum_w2.max(1e-300);
+        (2.0 * v * ((t * (t + 1.0)) / self.delta).ln()).sqrt()
+    }
+
+    fn name(&self) -> &'static str {
+        "domingo-watanabe"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stopping::LilRule;
+    use crate::util::prop::prop_check;
+
+    fn stats_n(n: u64, corr: f64) -> CandidateStats {
+        CandidateStats {
+            m: corr * n as f64,
+            sum_w: n as f64,
+            sum_w2: n as f64,
+            count: n,
+        }
+    }
+
+    #[test]
+    fn fires_on_strong_signal() {
+        let rule = DwRule::default();
+        assert!(rule.fires(&stats_n(5000, 0.5), 0.1));
+    }
+
+    #[test]
+    fn respects_min_count() {
+        assert!(!DwRule::default().fires(&stats_n(50, 1.0), 0.1));
+    }
+
+    #[test]
+    fn looser_than_lil_asymptotically() {
+        // log t vs log log t: by n = 1e6 the DW bound must be strictly wider
+        let s = stats_n(1_000_000, 0.0);
+        let dw = DwRule::default().bound(&s);
+        let lil = LilRule::default().bound(&s);
+        assert!(dw > lil, "dw={dw} lil={lil}");
+    }
+
+    #[test]
+    fn prop_sound_under_null() {
+        prop_check("dw sound under null", 30, |rng| {
+            let mut s = CandidateStats::default();
+            let rule = DwRule::default();
+            for _ in 0..2000 {
+                let w = (-rng.f64() * 2.0).exp();
+                let u = if rng.bernoulli(0.5) { w } else { -w };
+                s.m += u;
+                s.sum_w += w;
+                s.sum_w2 += w * w;
+                s.count += 1;
+                if rule.fires(&s, 0.1) {
+                    return Err(format!("false fire at {}", s.count));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bound_monotone_in_count() {
+        let rule = DwRule::default();
+        assert!(rule.bound(&stats_n(10_000, 0.0)) > rule.bound(&stats_n(1_000, 0.0)));
+    }
+}

@@ -1,0 +1,289 @@
+//! Stopping-rule implementations.
+
+use crate::stopping::CandidateStats;
+
+/// A sequential test over a candidate's running statistics.
+pub trait StoppingRule: Send + Sync {
+    /// Does the rule fire for a candidate at target advantage `gamma`?
+    ///
+    /// Firing asserts: with probability ≥ 1−δ the candidate's true
+    /// advantage is at least `gamma` (when `deviation > 0`).
+    fn fires(&self, stats: &CandidateStats, gamma: f64) -> bool;
+
+    /// The current confidence-bound radius (for diagnostics/plots).
+    fn bound(&self, stats: &CandidateStats) -> f64;
+
+    fn name(&self) -> &'static str;
+}
+
+/// The paper's rule: Balsubramani's finite-time law-of-the-iterated-
+/// logarithm martingale concentration (Theorem 1 / Alg. 2 StoppingRule):
+///
+/// fire when  |M| > C · sqrt( V · ( loglog(V / |M|) + log(1/δ) ) )
+///
+/// with `M = m − 2γW` and `V = Σw²`. `C` is the universal constant of the
+/// theorem (theory gives ~O(1); the original Sparrow release shipped a
+/// practical C < 1, default here 0.67) and δ the per-candidate failure
+/// probability.
+#[derive(Debug, Clone)]
+pub struct LilRule {
+    pub c: f64,
+    pub delta: f64,
+    /// minimum examples before the asymptotics are trusted (CLT floor;
+    /// §3 assumes n ≳ 100)
+    pub min_count: u64,
+}
+
+impl Default for LilRule {
+    fn default() -> Self {
+        LilRule {
+            c: 0.67,
+            delta: 1e-6,
+            min_count: 100,
+        }
+    }
+}
+
+impl LilRule {
+    pub fn new(c: f64, delta: f64) -> LilRule {
+        assert!(c > 0.0 && delta > 0.0 && delta < 1.0);
+        LilRule {
+            c,
+            delta,
+            ..LilRule::default()
+        }
+    }
+
+    /// Split a global failure budget across `k` simultaneous candidates
+    /// (union bound over the worker's candidate stripe).
+    pub fn with_union_bound(c: f64, delta_total: f64, k: usize) -> LilRule {
+        LilRule::new(c, delta_total / k.max(1) as f64)
+    }
+}
+
+impl StoppingRule for LilRule {
+    fn fires(&self, stats: &CandidateStats, gamma: f64) -> bool {
+        if stats.count < self.min_count || stats.sum_w2 <= 0.0 {
+            return false;
+        }
+        let m = stats.deviation(gamma);
+        // Only a *positive* deviation certifies advantage ≥ γ. (The paper
+        // takes |M|; the negative side certifies the negated candidate,
+        // which appears separately in our candidate set.)
+        m > self.bound(stats)
+    }
+
+    fn bound(&self, stats: &CandidateStats) -> f64 {
+        let v = stats.sum_w2.max(1e-300);
+        // loglog term, floored: log log max(V/|M|, e^e) keeps the argument
+        // of both logs above 1 without branching on M = 0.
+        let m_abs = stats.deviation(0.0).abs().max(1e-300);
+        let ratio = (v / m_abs).max(std::f64::consts::E.powf(std::f64::consts::E));
+        let ll = ratio.ln().ln();
+        self.c * (v * (ll + (1.0 / self.delta).ln())).sqrt()
+    }
+
+    fn name(&self) -> &'static str {
+        "lil"
+    }
+}
+
+/// Naive Hoeffding-style rule (A1 ablation): treats the weighted sum as a
+/// sub-Gaussian with variance proxy V and *fixed* horizon — pointwise valid
+/// but not anytime-valid, and looser in the adaptive setting because it
+/// must be re-unioned over every prefix in practice. We apply the standard
+/// correction δ' = δ / count² (union over stopping times).
+#[derive(Debug, Clone)]
+pub struct HoeffdingRule {
+    pub delta: f64,
+    pub min_count: u64,
+}
+
+impl Default for HoeffdingRule {
+    fn default() -> Self {
+        HoeffdingRule {
+            delta: 1e-6,
+            min_count: 100,
+        }
+    }
+}
+
+impl StoppingRule for HoeffdingRule {
+    fn fires(&self, stats: &CandidateStats, gamma: f64) -> bool {
+        if stats.count < self.min_count || stats.sum_w2 <= 0.0 {
+            return false;
+        }
+        stats.deviation(gamma) > self.bound(stats)
+    }
+
+    fn bound(&self, stats: &CandidateStats) -> f64 {
+        let delta_t = self.delta / ((stats.count as f64).powi(2)).max(1.0);
+        (2.0 * stats.sum_w2 * (1.0 / delta_t).ln()).sqrt()
+    }
+
+    fn name(&self) -> &'static str {
+        "hoeffding"
+    }
+}
+
+/// No early stopping (the classic full-scan boosting baseline): the rule
+/// never fires; the caller scans the entire sample and picks the best
+/// empirical candidate.
+#[derive(Debug, Clone, Default)]
+pub struct FixedScan;
+
+impl StoppingRule for FixedScan {
+    fn fires(&self, _stats: &CandidateStats, _gamma: f64) -> bool {
+        false
+    }
+
+    fn bound(&self, _stats: &CandidateStats) -> f64 {
+        f64::INFINITY
+    }
+
+    fn name(&self) -> &'static str {
+        "fixed-scan"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen, prop_check};
+
+    fn stats_from(us: &[f64]) -> CandidateStats {
+        let mut s = CandidateStats::new();
+        for &u in us {
+            s.m += u;
+            s.sum_w += u.abs();
+            s.sum_w2 += u * u;
+            s.count += 1;
+        }
+        s
+    }
+
+    #[test]
+    fn fires_on_strong_signal() {
+        // all-correct candidate: m grows linearly, bound grows like sqrt
+        let us = vec![1.0; 2000];
+        let s = stats_from(&us);
+        let rule = LilRule::default();
+        assert!(rule.fires(&s, 0.1));
+    }
+
+    #[test]
+    fn does_not_fire_below_min_count() {
+        let us = vec![1.0; 50];
+        let s = stats_from(&us);
+        assert!(!LilRule::default().fires(&s, 0.1));
+    }
+
+    #[test]
+    fn does_not_fire_on_noise() {
+        // alternating ±1: m stays ~0
+        let us: Vec<f64> = (0..5000).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let s = stats_from(&us);
+        assert!(!LilRule::default().fires(&s, 0.05));
+        assert!(!HoeffdingRule::default().fires(&s, 0.05));
+    }
+
+    #[test]
+    fn prop_no_false_fire_under_null() {
+        // under the null (true edge 0), firing at γ=0.1 over 2000 draws
+        // should be (very) rare: test 50 seeds, allow none (δ=1e-6).
+        prop_check("lil sound under null", 50, |rng| {
+            let mut s = CandidateStats::new();
+            let rule = LilRule::default();
+            for _ in 0..2000 {
+                let w = (-rng.f64() * 2.0).exp();
+                let u = if rng.bernoulli(0.5) { w } else { -w };
+                s.m += u;
+                s.sum_w += w;
+                s.sum_w2 += w * w;
+                s.count += 1;
+                if rule.fires(&s, 0.1) {
+                    return Err(format!("false fire at count={}", s.count));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_fires_eventually_with_true_edge() {
+        prop_check("lil powers up on real edges", 20, |rng| {
+            let mut s = CandidateStats::new();
+            let rule = LilRule::default();
+            // true correlation 0.5 (advantage 0.25) vs target γ = 0.1
+            for _ in 0..20_000u64 {
+                let u = if rng.bernoulli(0.75) { 1.0 } else { -1.0 };
+                s.m += u;
+                s.sum_w += 1.0;
+                s.sum_w2 += 1.0;
+                s.count += 1;
+                if rule.fires(&s, 0.1) {
+                    if s.count < 100 {
+                        return Err("fired before min_count".into());
+                    }
+                    return Ok(());
+                }
+            }
+            Err("never fired on a strong edge".into())
+        });
+    }
+
+    #[test]
+    fn lil_tighter_than_hoeffding() {
+        // the LIL bound should (eventually) be tighter → earlier stopping
+        let us = vec![1.0; 10_000];
+        let s = stats_from(&us);
+        let lil = LilRule::default().bound(&s);
+        let hoef = HoeffdingRule::default().bound(&s);
+        assert!(lil < hoef, "lil={lil} hoeffding={hoef}");
+    }
+
+    #[test]
+    fn fixed_scan_never_fires() {
+        let us = vec![1.0; 100_000];
+        let s = stats_from(&us);
+        assert!(!FixedScan.fires(&s, 0.0001));
+        assert_eq!(FixedScan.bound(&s), f64::INFINITY);
+    }
+
+    #[test]
+    fn union_bound_divides_delta() {
+        let r = LilRule::with_union_bound(0.67, 1e-3, 100);
+        assert!((r.delta - 1e-5).abs() < 1e-18);
+    }
+
+    #[test]
+    fn negative_deviation_never_fires() {
+        // strong *negative* edge must not certify the positive candidate
+        let us = vec![-1.0; 5000];
+        let s = stats_from(&us);
+        assert!(!LilRule::default().fires(&s, 0.1));
+    }
+
+    #[test]
+    fn prop_bound_monotone_in_v() {
+        prop_check("bound grows with V", 30, |rng| {
+            let base = gen::size(rng, 200, 5000) as f64;
+            let s1 = CandidateStats {
+                m: 0.0,
+                sum_w: base,
+                sum_w2: base,
+                count: base as u64,
+            };
+            let s2 = CandidateStats {
+                sum_w2: base * 2.0,
+                ..s1
+            };
+            let rule = LilRule::default();
+            if rule.bound(&s2) > rule.bound(&s1) {
+                Ok(())
+            } else {
+                Err(format!("bound not monotone at V={base}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,72 @@
+//! Sequential stopping rules (§3 "Sequential Analysis and Early Stopping").
+//!
+//! A stopping rule watches a candidate's running statistics and fires when
+//! the candidate's true edge exceeds the target γ with high probability.
+//! The paper's rule is the finite-time iterated-logarithm martingale bound
+//! of Balsubramani [15] (Theorem 1); a naive Hoeffding rule and a
+//! fixed-scan (no early stopping) rule are provided for the A1 ablation.
+
+pub mod dw;
+pub mod lil;
+
+pub use dw::DwRule;
+pub use lil::{FixedScan, HoeffdingRule, LilRule, StoppingRule};
+
+/// Running statistics for one candidate weak rule (Alg. 2 state).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CandidateStats {
+    /// Σ w·y·h(x) — the candidate's unnormalized empirical edge  (m[h])
+    pub m: f64,
+    /// Σ |w| over scanned examples                                (W)
+    pub sum_w: f64,
+    /// Σ w² over scanned examples                                 (V)
+    pub sum_w2: f64,
+    /// number of examples scanned
+    pub count: u64,
+}
+
+impl CandidateStats {
+    pub fn new() -> CandidateStats {
+        CandidateStats::default()
+    }
+
+    /// Martingale deviation from the target edge: `M = m − 2γ·W`
+    /// (positive when the candidate looks better than target γ).
+    #[inline]
+    pub fn deviation(&self, gamma: f64) -> f64 {
+        self.m - 2.0 * gamma * self.sum_w
+    }
+
+    /// Normalized empirical correlation `m / W ∈ [-1, 1]`.
+    pub fn correlation(&self) -> f64 {
+        if self.sum_w <= 0.0 {
+            0.0
+        } else {
+            self.m / self.sum_w
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deviation_centered_at_target() {
+        let s = CandidateStats {
+            m: 10.0,
+            sum_w: 20.0,
+            sum_w2: 5.0,
+            count: 20,
+        };
+        // corr = 0.5, advantage = 0.25; target γ = 0.25 ⇒ deviation 0
+        assert!((s.deviation(0.25)).abs() < 1e-12);
+        assert!(s.deviation(0.2) > 0.0);
+        assert!(s.deviation(0.3) < 0.0);
+    }
+
+    #[test]
+    fn correlation_empty_is_zero() {
+        assert_eq!(CandidateStats::new().correlation(), 0.0);
+    }
+}

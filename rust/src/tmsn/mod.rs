@@ -1,0 +1,290 @@
+//! The TMSN protocol (§2, §4.2, Alg. 1) — the paper's core contribution.
+//!
+//! A worker maintains `(H, L)`: its current model and a sound upper bound
+//! on the model's loss. When a local search improves the bound by the gap
+//! ε, the worker broadcasts the new pair; when a worker *receives* a pair
+//! whose bound beats its own, it interrupts its search and adopts it —
+//! otherwise it discards the message. That is the whole protocol: no head
+//! node, no synchronization, no acknowledgements, and any worker can fail
+//! without affecting the others beyond losing its contributions.
+//!
+//! For boosting the bound is the exponential-loss *potential certificate*:
+//! adding a weak rule with certified advantage γ multiplies the training
+//! potential bound by `sqrt(1 − 4γ²)` (AdaBoost's per-round Z_t with the
+//! optimal α). Certified advantages come from the sequential stopping rule,
+//! so the bound is sound with probability ≥ 1 − δ — exactly the "only
+//! assumption workers make about incoming messages" (§2).
+
+use crate::model::StrongRule;
+
+/// The "certificate of quality" attached to a broadcast model (§4.2's
+/// `z_{t+1}`, Alg. 1's `L`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Certificate {
+    /// sound upper bound on the model's exponential-loss potential
+    pub loss_bound: f64,
+    /// worker that produced this model version
+    pub origin: usize,
+    /// origin-local sequence number (for lineage/diagnostics)
+    pub seq: u64,
+}
+
+impl Certificate {
+    pub fn initial() -> Certificate {
+        Certificate {
+            loss_bound: 1.0, // empty model: Z = 1
+            origin: usize::MAX,
+            seq: 0,
+        }
+    }
+}
+
+/// A broadcast message: the model and its certificate.
+#[derive(Debug, Clone)]
+pub struct ModelMessage {
+    pub model: StrongRule,
+    pub cert: Certificate,
+}
+
+impl ModelMessage {
+    /// Serialized size estimate, used for the fabric's bandwidth model
+    /// (stump = feature u32 + threshold f32 + sign i8 + alpha f32 ≈ 13 B,
+    /// plus certificate/header overhead).
+    pub fn wire_bytes(&self) -> usize {
+        32 + 13 * self.model.len()
+    }
+}
+
+/// Decision on an incoming message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// strictly better bound — interrupt the scanner and adopt
+    Accept,
+    /// not better — discard
+    Reject,
+}
+
+/// Per-worker TMSN state machine.
+#[derive(Debug, Clone)]
+pub struct TmsnState {
+    pub model: StrongRule,
+    pub cert: Certificate,
+    worker_id: usize,
+    next_seq: u64,
+    /// accepted-message counter (diagnostics)
+    pub accepts: u64,
+    pub rejects: u64,
+}
+
+impl TmsnState {
+    pub fn new(worker_id: usize) -> TmsnState {
+        TmsnState {
+            model: StrongRule::new(),
+            cert: Certificate::initial(),
+            worker_id,
+            next_seq: 1,
+            accepts: 0,
+            rejects: 0,
+        }
+    }
+
+    /// Resume from a checkpointed `(model, bound)` pair: the worker starts
+    /// as if it had just accepted that model over the broadcast channel.
+    pub fn resume(worker_id: usize, model: StrongRule, loss_bound: f64) -> TmsnState {
+        assert!(loss_bound.is_finite() && loss_bound >= 0.0);
+        TmsnState {
+            model,
+            cert: Certificate {
+                loss_bound,
+                origin: worker_id,
+                seq: 0,
+            },
+            worker_id,
+            next_seq: 1,
+            accepts: 0,
+            rejects: 0,
+        }
+    }
+
+    /// Local improvement: a weak rule with certified advantage γ was added
+    /// (the caller already pushed it into `model`). Updates the bound
+    /// multiplicatively and stamps a new certificate. Returns the message
+    /// to broadcast.
+    pub fn local_improvement(&mut self, model: StrongRule, gamma: f64) -> ModelMessage {
+        assert!(gamma > 0.0 && gamma < 0.5);
+        assert!(
+            model.len() > self.model.len(),
+            "local improvement must extend the model"
+        );
+        let factor = (1.0 - 4.0 * gamma * gamma).sqrt();
+        self.model = model;
+        self.cert = Certificate {
+            loss_bound: self.cert.loss_bound * factor,
+            origin: self.worker_id,
+            seq: self.next_seq,
+        };
+        self.next_seq += 1;
+        ModelMessage {
+            model: self.model.clone(),
+            cert: self.cert,
+        }
+    }
+
+    /// Handle an incoming `(H, L)` message (Alg. 1's receive path):
+    /// accept iff the incoming bound is *strictly* lower than ours.
+    pub fn on_message(&mut self, msg: ModelMessage) -> Verdict {
+        if msg.cert.loss_bound < self.cert.loss_bound {
+            self.model = msg.model;
+            self.cert = msg.cert;
+            self.accepts += 1;
+            Verdict::Accept
+        } else {
+            self.rejects += 1;
+            Verdict::Reject
+        }
+    }
+
+    pub fn worker_id(&self) -> usize {
+        self.worker_id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Stump;
+    use crate::util::prop::prop_check;
+
+    fn extend(model: &StrongRule, feature: u32) -> StrongRule {
+        let mut m = model.clone();
+        m.push(Stump::new(feature, 0.0, 1.0), 0.2);
+        m
+    }
+
+    #[test]
+    fn local_improvement_tightens_bound() {
+        let mut s = TmsnState::new(0);
+        let msg = s.local_improvement(extend(&s.model.clone(), 1), 0.1);
+        assert!(msg.cert.loss_bound < 1.0);
+        assert_eq!(msg.cert.origin, 0);
+        assert_eq!(msg.cert.seq, 1);
+        let b1 = msg.cert.loss_bound;
+        let msg2 = s.local_improvement(extend(&s.model.clone(), 2), 0.1);
+        assert!(msg2.cert.loss_bound < b1);
+        assert_eq!(msg2.cert.seq, 2);
+    }
+
+    #[test]
+    fn bound_factor_matches_adaboost_z() {
+        let mut s = TmsnState::new(0);
+        let g = 0.2f64;
+        let msg = s.local_improvement(extend(&StrongRule::new(), 0), g);
+        assert!((msg.cert.loss_bound - (1.0 - 4.0 * g * g).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accept_strictly_better_only() {
+        let mut a = TmsnState::new(0);
+        let mut b = TmsnState::new(1);
+        let msg = a.local_improvement(extend(&StrongRule::new(), 0), 0.1);
+
+        // b has the empty model (bound 1.0) → accepts
+        assert_eq!(b.on_message(msg.clone()), Verdict::Accept);
+        assert_eq!(b.model, a.model);
+        assert_eq!(b.cert, a.cert);
+
+        // replaying the same message is now a reject (not strictly better)
+        assert_eq!(b.on_message(msg), Verdict::Reject);
+        assert_eq!(b.accepts, 1);
+        assert_eq!(b.rejects, 1);
+    }
+
+    #[test]
+    fn stale_message_rejected() {
+        let mut a = TmsnState::new(0);
+        let mut b = TmsnState::new(1);
+        let old = a.local_improvement(extend(&StrongRule::new(), 0), 0.05);
+        let new = a.local_improvement(extend(&a.model.clone(), 1), 0.05);
+        assert_eq!(b.on_message(new), Verdict::Accept);
+        assert_eq!(b.on_message(old), Verdict::Reject);
+    }
+
+    #[test]
+    fn wire_bytes_grows_with_model() {
+        let mut s = TmsnState::new(0);
+        let m1 = s.local_improvement(extend(&StrongRule::new(), 0), 0.1);
+        let m2 = s.local_improvement(extend(&s.model.clone(), 1), 0.1);
+        assert!(m2.wire_bytes() > m1.wire_bytes());
+    }
+
+    #[test]
+    fn prop_bound_monotone_along_accept_chain() {
+        // Any interleaving of local improvements and message exchanges
+        // keeps every worker's bound non-increasing — the protocol's
+        // progress invariant.
+        prop_check("bounds monotone under TMSN", 50, |rng| {
+            let n = 4;
+            let mut workers: Vec<TmsnState> = (0..n).map(TmsnState::new).collect();
+            let mut bounds: Vec<f64> = vec![1.0; n];
+            let mut inflight: Vec<ModelMessage> = Vec::new();
+            for step in 0..60 {
+                let w = rng.below(n as u64) as usize;
+                if rng.bernoulli(0.5) || inflight.is_empty() {
+                    // local improvement with random γ
+                    let g = 0.05 + rng.f64() * 0.3;
+                    let model = extend(&workers[w].model.clone(), step as u32);
+                    let msg = workers[w].local_improvement(model, g);
+                    inflight.push(msg);
+                } else {
+                    // deliver a random in-flight message (arbitrary order!)
+                    let k = rng.below(inflight.len() as u64) as usize;
+                    let msg = inflight[k].clone();
+                    workers[w].on_message(msg);
+                }
+                let b = workers[w].cert.loss_bound;
+                if b > bounds[w] + 1e-12 {
+                    return Err(format!("worker {w} bound increased {} -> {b}", bounds[w]));
+                }
+                bounds[w] = b;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_convergence_after_full_delivery() {
+        // Once every broadcast message is delivered to every worker, all
+        // workers hold the minimum bound (the §2 convergence claim).
+        prop_check("all workers converge to best bound", 30, |rng| {
+            let n = 5;
+            let mut workers: Vec<TmsnState> = (0..n).map(TmsnState::new).collect();
+            let mut all_msgs: Vec<ModelMessage> = Vec::new();
+            for step in 0..20 {
+                let w = rng.below(n as u64) as usize;
+                let g = 0.05 + rng.f64() * 0.3;
+                let model = extend(&workers[w].model.clone(), step as u32);
+                all_msgs.push(workers[w].local_improvement(model, g));
+            }
+            let best = all_msgs
+                .iter()
+                .map(|m| m.cert.loss_bound)
+                .fold(f64::INFINITY, f64::min);
+            // deliver everything to everyone, in a random order per worker
+            for w in workers.iter_mut() {
+                let mut order: Vec<usize> = (0..all_msgs.len()).collect();
+                rng.shuffle(&mut order);
+                for &k in &order {
+                    w.on_message(all_msgs[k].clone());
+                }
+                if (w.cert.loss_bound - best).abs() > 1e-12 && w.cert.loss_bound > best {
+                    return Err(format!(
+                        "worker {} stuck at {} > best {best}",
+                        w.worker_id(),
+                        w.cert.loss_bound
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,203 @@
+//! In-tree micro/macro benchmark harness (no `criterion` offline).
+//!
+//! Benches under `rust/benches/` are `harness = false` binaries that use
+//! [`BenchRunner`] for warmup + repeated timing with median/MAD reporting,
+//! and [`Table`] for printing paper-style result tables.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over repeated runs.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub mean: Duration,
+    pub runs: usize,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort();
+        let runs = samples.len();
+        let median = samples[runs / 2];
+        let mean = samples.iter().sum::<Duration>() / runs as u32;
+        Stats {
+            median,
+            min: samples[0],
+            max: samples[runs - 1],
+            mean,
+            runs,
+        }
+    }
+}
+
+/// Repeated-measurement runner with warmup.
+pub struct BenchRunner {
+    pub warmup: usize,
+    pub runs: usize,
+    pub min_time: Duration,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        BenchRunner {
+            warmup: 1,
+            runs: 5,
+            min_time: Duration::from_millis(50),
+        }
+    }
+}
+
+impl BenchRunner {
+    pub fn quick() -> Self {
+        BenchRunner {
+            warmup: 1,
+            runs: 3,
+            min_time: Duration::from_millis(10),
+        }
+    }
+
+    /// Benchmark `f`, returning timing stats. `f` is called once per run.
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.runs);
+        for _ in 0..self.runs {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        let stats = Stats::from_samples(samples);
+        println!(
+            "{name}: median {:?} (min {:?}, max {:?}, {} runs)",
+            stats.median, stats.min, stats.max, stats.runs
+        );
+        stats
+    }
+
+    /// Benchmark with an inner-iteration count so very fast ops are measurable.
+    /// Reports per-op time.
+    pub fn bench_n<T>(&self, name: &str, iters: usize, mut f: impl FnMut() -> T) -> Duration {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut best = Duration::MAX;
+        for _ in 0..self.runs {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            let per_op = t0.elapsed() / iters as u32;
+            best = best.min(per_op);
+        }
+        println!("{name}: {:?}/op (best of {}, {} iters)", best, self.runs, iters);
+        best
+    }
+}
+
+/// Paper-style fixed-width result table.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<width$} |", c, width = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        println!("{sep}");
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a duration as fractional seconds for tables.
+pub fn secs(d: Duration) -> String {
+    format!("{:.3}", d.as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_median() {
+        let s = Stats::from_samples(vec![
+            Duration::from_millis(3),
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+        ]);
+        assert_eq!(s.median, Duration::from_millis(2));
+        assert_eq!(s.min, Duration::from_millis(1));
+        assert_eq!(s.max, Duration::from_millis(3));
+        assert_eq!(s.runs, 3);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let r = BenchRunner::quick();
+        let mut count = 0;
+        let s = r.bench("noop", || {
+            count += 1;
+            count
+        });
+        assert_eq!(s.runs, 3);
+        assert_eq!(count, 4); // 1 warmup + 3 runs
+    }
+
+    #[test]
+    fn table_csv() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_row_width_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

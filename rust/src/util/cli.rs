@@ -1,0 +1,168 @@
+//! Minimal CLI argument parser (no `clap` in the offline environment).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! subcommands, and typed getters with defaults. Unknown-flag detection is
+//! the caller's responsibility via [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        // first non-flag token is the subcommand
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.values.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.values
+                        .insert(stripped.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                // stray positional after flags — treat as error-worthy leftover
+                out.flags.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get_u64(key, default as u64) as usize
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// All keys that were provided but never queried — catches typos.
+    pub fn finish(&self) -> Result<(), String> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&str> = self
+            .values
+            .keys()
+            .map(|s| s.as_str())
+            .chain(self.flags.iter().map(|s| s.as_str()))
+            .filter(|k| !consumed.iter().any(|c| c == k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown arguments: {}", unknown.join(", ")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_values() {
+        let a = parse("train --workers 4 --gap=0.05");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get_u64("workers", 1), 4);
+        assert!((a.get_f64("gap", 0.0) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("train");
+        assert_eq!(a.get_u64("workers", 7), 7);
+        assert_eq!(a.get_or("name", "x"), "x");
+    }
+
+    #[test]
+    fn flags() {
+        let a = parse("run --verbose --n 3");
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+        assert_eq!(a.get_u64("n", 0), 3);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --n 3 --fast");
+        assert!(a.has_flag("fast"));
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // `--x -3` : "-3" does not start with "--", so it is a value
+        let a = parse("cmd --x -3");
+        assert_eq!(a.get_f64("x", 0.0), -3.0);
+    }
+
+    #[test]
+    fn finish_flags_unknown() {
+        let a = parse("cmd --known 1 --typo 2");
+        let _ = a.get("known");
+        let err = a.finish().unwrap_err();
+        assert!(err.contains("typo"), "{err}");
+    }
+
+    #[test]
+    fn finish_ok_when_all_consumed() {
+        let a = parse("cmd --k 1 --flag");
+        let _ = a.get("k");
+        let _ = a.has_flag("flag");
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--x 1");
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.get_u64("x", 0), 1);
+    }
+}

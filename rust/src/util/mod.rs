@@ -1,0 +1,12 @@
+//! Shared infrastructure: PRNG, JSON writer, CLI parsing, bench harness,
+//! and property-testing helpers.
+//!
+//! The offline build environment provides no `rand`/`serde`/`clap`/
+//! `criterion`/`proptest`; these small, focused replacements keep the rest
+//! of the codebase idiomatic.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

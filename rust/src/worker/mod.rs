@@ -1,0 +1,364 @@
+//! A Sparrow worker (paper §4, Alg. 1): Scanner + Sampler + TMSN endpoint.
+//!
+//! The worker is fully autonomous — it never waits for any other machine.
+//! Its loop: keep a weighted in-memory sample fresh (resample when
+//! `n_eff/m` collapses), scan for a certifiable weak rule, broadcast local
+//! improvements, and adopt strictly-better remote models the moment they
+//! arrive (interrupting the scan mid-pass).
+
+pub mod link;
+pub mod throttle;
+
+pub use link::{BroadcastLink, NullLink};
+pub use throttle::ThrottledBackend;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::boosting::{alpha_for_advantage, CandidateGrid};
+use crate::config::TrainConfig;
+use crate::data::{DiskStore, IoThrottle, SampleSet};
+use crate::metrics::{EventKind, EventLog};
+use crate::model::StrongRule;
+use crate::sampler::{Sampler, SamplerConfig};
+use crate::scanner::{ScanBackend, ScanOutcome, Scanner, ScannerConfig};
+use crate::stopping::{DwRule, FixedScan, HoeffdingRule, LilRule, StoppingRule};
+use crate::tmsn::{ModelMessage, TmsnState, Verdict};
+use crate::util::rng::Rng;
+
+/// Everything a worker thread needs.
+pub struct WorkerParams {
+    pub id: usize,
+    pub cfg: TrainConfig,
+    pub grid: CandidateGrid,
+    /// owned feature stripe `[start, end)`
+    pub stripe: (usize, usize),
+    pub store: DiskStore,
+    pub endpoint: Box<dyn BroadcastLink>,
+    pub log: EventLog,
+    pub stop: Arc<AtomicBool>,
+    pub backend: Box<dyn ScanBackend>,
+    /// compute slowdown multiplier (1.0 = healthy, >1 = laggard)
+    pub laggard: f64,
+    /// crash this long after start (failure injection)
+    pub crash_after: Option<Duration>,
+    pub seed: u64,
+}
+
+/// Final worker state returned to the coordinator.
+#[derive(Debug)]
+pub struct WorkerResult {
+    pub id: usize,
+    pub model: StrongRule,
+    pub loss_bound: f64,
+    pub found: u64,
+    pub accepts: u64,
+    pub rejects: u64,
+    pub resamples: u64,
+    pub scanned: u64,
+    pub crashed: bool,
+}
+
+/// Build the configured stopping rule, union-bounded over the stripe's
+/// candidate count.
+pub fn make_stopping_rule(cfg: &TrainConfig, candidates: usize) -> Box<dyn StoppingRule> {
+    match cfg.stopping {
+        crate::config::StoppingKind::Lil => Box::new(LilRule::with_union_bound(
+            cfg.stop_c,
+            cfg.stop_delta,
+            candidates,
+        )),
+        crate::config::StoppingKind::Hoeffding => Box::new(HoeffdingRule {
+            delta: cfg.stop_delta / candidates.max(1) as f64,
+            min_count: 100,
+        }),
+        crate::config::StoppingKind::DomingoWatanabe => Box::new(DwRule {
+            delta: cfg.stop_delta / candidates.max(1) as f64,
+            min_count: 100,
+        }),
+        crate::config::StoppingKind::FixedScan => Box::new(FixedScan),
+    }
+}
+
+/// Run a worker to completion (blocking; called on its own thread).
+pub fn run_worker(params: WorkerParams) -> WorkerResult {
+    let WorkerParams {
+        id,
+        cfg,
+        grid,
+        stripe,
+        store,
+        endpoint,
+        log,
+        stop,
+        backend,
+        laggard,
+        crash_after,
+        seed,
+    } = params;
+    let start = Instant::now();
+    let mut rng = Rng::new(seed ^ (id as u64).wrapping_mul(0x9E37_79B9));
+
+    let candidates = (stripe.1 - stripe.0) * grid.nthr * 2;
+    let rule = make_stopping_rule(&cfg, candidates);
+    let backend: Box<dyn ScanBackend> = if laggard > 1.0 {
+        Box::new(ThrottledBackend::new(backend, laggard))
+    } else {
+        backend
+    };
+    let mut scanner = Scanner::new(
+        grid,
+        stripe,
+        backend,
+        rule,
+        ScannerConfig {
+            batch: cfg.batch,
+            gamma0: cfg.gamma0,
+            gamma_min: cfg.gamma_min,
+            scan_budget: 0,
+        },
+    );
+    let throttle = if cfg.disk_bandwidth > 0.0 {
+        IoThrottle::new(cfg.disk_bandwidth)
+    } else {
+        IoThrottle::unlimited()
+    };
+    let mut sampler = Sampler::new(
+        store.stream(throttle).expect("open store stream"),
+        store.len(),
+        SamplerConfig {
+            target_m: cfg.sample_size,
+            kind: cfg.sampler,
+            probe: cfg.sample_size.min(4096),
+            max_passes: 3,
+            block: 1024,
+        },
+        rng.fork(1),
+    );
+
+    let mut tmsn = match &cfg.resume {
+        Some((model, bound)) => TmsnState::resume(id, model.clone(), *bound),
+        None => TmsnState::new(id),
+    };
+    let mut sample = SampleSet::empty(store.num_features());
+    let mut force_resample = true;
+    let mut found = 0u64;
+    let mut resamples = 0u64;
+    let mut crashed = false;
+    let mut prev_gamma_shrinks = 0u64;
+
+    'outer: loop {
+        // ---- liveness checks -------------------------------------------
+        if stop.load(Ordering::Relaxed) || start.elapsed() >= cfg.time_limit {
+            break;
+        }
+        if let Some(t) = crash_after {
+            if start.elapsed() >= t {
+                log.record(id, EventKind::Crash, None, 0.0);
+                crashed = true;
+                break;
+            }
+        }
+        if tmsn.model.len() >= cfg.max_rules
+            || (cfg.target_bound > 0.0 && tmsn.cert.loss_bound <= cfg.target_bound)
+        {
+            break;
+        }
+
+        // ---- inbox (receive path of Alg. 1) ----------------------------
+        while let Some(msg) = endpoint.poll() {
+            handle_message(&mut tmsn, msg, &mut sample, id, &log);
+        }
+
+        // ---- sample freshness (§3 n_eff trigger) ------------------------
+        let need_sample = force_resample
+            || sample.is_empty()
+            || sample.n_eff() / cfg.sample_size as f64 <= cfg.ess_threshold;
+        if need_sample {
+            log.record(id, EventKind::ResampleStart, None, sample.n_eff());
+            let model = tmsn.model.clone();
+            match sampler.resample(&model) {
+                Ok((s, stats)) => {
+                    sample = s;
+                    scanner.reset_cursor();
+                    resamples += 1;
+                    log.record(id, EventKind::ResampleEnd, None, stats.kept as f64);
+                }
+                Err(e) => {
+                    // disk failure: treat as crash (resilience semantics)
+                    log.record(id, EventKind::Crash, None, 0.0);
+                    eprintln!("worker {id}: sampler I/O error: {e}");
+                    crashed = true;
+                    break 'outer;
+                }
+            }
+            force_resample = false;
+            if sample.is_empty() {
+                // degenerate store — nothing to learn from
+                break;
+            }
+        }
+
+        // ---- one scanner invocation -------------------------------------
+        let model = tmsn.model.clone();
+        let mut pending: Option<ModelMessage> = None;
+        let current_bound = tmsn.cert.loss_bound;
+        let deadline_hit = &stop;
+        let outcome = scanner.run_pass(&mut sample, &model, || {
+            if deadline_hit.load(Ordering::Relaxed) {
+                return true;
+            }
+            if let Some(msg) = endpoint.poll() {
+                log.record(id, EventKind::Receive, Some((msg.cert.origin, msg.cert.seq)), msg.cert.loss_bound);
+                if msg.cert.loss_bound < current_bound {
+                    pending = Some(msg);
+                    return true;
+                } else {
+                    log.record(id, EventKind::Reject, Some((msg.cert.origin, msg.cert.seq)), msg.cert.loss_bound);
+                }
+            }
+            false
+        });
+        // surface γ-halving events
+        for _ in prev_gamma_shrinks..scanner.gamma_shrinks {
+            log.record(id, EventKind::GammaShrink, None, 0.0);
+        }
+        prev_gamma_shrinks = scanner.gamma_shrinks;
+
+        match outcome {
+            ScanOutcome::Found {
+                stump,
+                gamma,
+                scanned: _,
+            } => {
+                let mut new_model = tmsn.model.clone();
+                new_model.push(stump, alpha_for_advantage(gamma) as f32);
+                let msg = tmsn.local_improvement(new_model, gamma);
+                log.record(
+                    id,
+                    EventKind::LocalImprovement,
+                    Some((id, msg.cert.seq)),
+                    msg.cert.loss_bound,
+                );
+                endpoint.send(msg);
+                log.record(id, EventKind::Broadcast, Some((id, tmsn.cert.seq)), tmsn.cert.loss_bound);
+                found += 1;
+            }
+            ScanOutcome::Exhausted { .. } => {
+                // Alg. 2 `Fail` → build a fresh sample
+                force_resample = true;
+            }
+            ScanOutcome::Interrupted { .. } => {
+                if let Some(msg) = pending.take() {
+                    handle_message(&mut tmsn, msg, &mut sample, id, &log);
+                }
+                // stop-flag interrupts just fall through to the loop head
+            }
+        }
+        // tiny jitter so identical workers don't phase-lock in tests
+        if laggard > 1.0 {
+            std::thread::sleep(Duration::from_micros(rng.below(50)));
+        }
+    }
+
+    log.record(id, EventKind::Finish, None, tmsn.cert.loss_bound);
+    WorkerResult {
+        id,
+        model: tmsn.model.clone(),
+        loss_bound: tmsn.cert.loss_bound,
+        found,
+        accepts: tmsn.accepts,
+        rejects: tmsn.rejects,
+        resamples,
+        scanned: scanner.total_scanned,
+        crashed,
+    }
+}
+
+/// Process one received model message: accept-or-reject, and keep the
+/// sample's cached weights consistent with the (possibly new) model.
+fn handle_message(
+    tmsn: &mut TmsnState,
+    msg: ModelMessage,
+    sample: &mut SampleSet,
+    id: usize,
+    log: &EventLog,
+) {
+    let origin = (msg.cert.origin, msg.cert.seq);
+    let bound = msg.cert.loss_bound;
+    let old_model = tmsn.model.clone();
+    match tmsn.on_message(msg) {
+        Verdict::Accept => {
+            log.record(id, EventKind::Accept, Some(origin), bound);
+            // If the accepted model extends ours, the per-example
+            // incremental state stays valid (suffix update). Otherwise the
+            // lineage broke: rebase every cached weight onto the new model
+            // from its sample-time reference pair.
+            if !tmsn.model.extends(&old_model) {
+                rebase_sample(sample, &tmsn.model);
+            }
+        }
+        Verdict::Reject => {
+            log.record(id, EventKind::Reject, Some(origin), bound);
+        }
+    }
+}
+
+/// Recompute cached weights against `model` from the sample-time reference
+/// `(w_s, H_s(x))` — exact for any lineage (§4.1's invariant).
+pub fn rebase_sample(sample: &mut SampleSet, model: &StrongRule) {
+    let len = model.len() as u32;
+    for i in 0..sample.len() {
+        let score = model.score(sample.data.row(i));
+        let y = sample.data.label(i);
+        let w = sample.w_sample[i] * (-(y) * (score - sample.score_sample[i])).exp();
+        sample.set_weight(i, score, w, len);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Stump;
+
+    #[test]
+    fn rebase_matches_direct_weights() {
+        let mut rng = Rng::new(1);
+        let mut block = crate::data::DataBlock::empty(3);
+        for _ in 0..50 {
+            let y = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+            block.push(
+                &[rng.gauss() as f32, rng.gauss() as f32, rng.gauss() as f32],
+                y,
+            );
+        }
+        // sampled under a "model A" with per-example scores 0 (fresh)
+        let mut sample = SampleSet::fresh(block, vec![0.0; 50], 0);
+        // foreign model B
+        let mut b = StrongRule::new();
+        b.push(Stump::new(0, 0.1, 1.0), 0.4);
+        b.push(Stump::new(2, -0.2, -1.0), 0.3);
+        rebase_sample(&mut sample, &b);
+        for i in 0..50 {
+            let want_score = b.score(sample.data.row(i));
+            let want_w = (-(sample.data.label(i)) * want_score).exp();
+            assert!((sample.score_last[i] - want_score).abs() < 1e-5);
+            assert!((sample.w_last[i] - want_w).abs() < 1e-4);
+            assert_eq!(sample.model_len_last[i], 2);
+        }
+    }
+
+    #[test]
+    fn rebase_respects_nonzero_sample_reference() {
+        // sampled when the model scored the example 0.5 with weight 1
+        let mut block = crate::data::DataBlock::empty(1);
+        block.push(&[2.0], 1.0);
+        let mut sample = SampleSet::fresh(block, vec![0.5], 3);
+        let mut b = StrongRule::new();
+        b.push(Stump::new(0, 0.0, 1.0), 0.9); // score(x) = 0.9
+        rebase_sample(&mut sample, &b);
+        // w = 1 * exp(-1 * (0.9 - 0.5))
+        assert!((sample.w_last[0] - (-0.4f32).exp()).abs() < 1e-5);
+    }
+}

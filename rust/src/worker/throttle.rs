@@ -1,0 +1,101 @@
+//! Laggard injection: a backend wrapper that slows compute by a factor.
+//!
+//! The paper's resilience claim (§1, §4): "the overall slowdown resulting
+//! from machine slowness or failure is proportional to the fraction of
+//! faulty machines". Wrapping a worker's backend with a multiplier `k`
+//! makes that worker behave like a machine running k× slower — the E6
+//! resilience experiment sweeps this.
+
+use std::time::{Duration, Instant};
+
+use crate::boosting::CandidateGrid;
+use crate::data::DataBlock;
+use crate::model::StrongRule;
+use crate::scanner::{BatchResult, ScanBackend};
+
+/// Wraps a backend, adding `(k - 1)×` the measured batch time as sleep.
+pub struct ThrottledBackend {
+    inner: Box<dyn ScanBackend>,
+    factor: f64,
+}
+
+impl ThrottledBackend {
+    pub fn new(inner: Box<dyn ScanBackend>, factor: f64) -> ThrottledBackend {
+        assert!(factor >= 1.0, "laggard factor must be >= 1");
+        ThrottledBackend { inner, factor }
+    }
+}
+
+impl ScanBackend for ThrottledBackend {
+    fn scan_batch(
+        &mut self,
+        block: &DataBlock,
+        w_ref: &[f32],
+        score_ref: &[f32],
+        model_len_ref: &[u32],
+        model: &StrongRule,
+        grid: &CandidateGrid,
+        stripe: (usize, usize),
+    ) -> BatchResult {
+        let t0 = Instant::now();
+        let out = self
+            .inner
+            .scan_batch(block, w_ref, score_ref, model_len_ref, model, grid, stripe);
+        let spent = t0.elapsed();
+        let extra = spent.mul_f64(self.factor - 1.0);
+        if extra > Duration::ZERO {
+            std::thread::sleep(extra);
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "throttled"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scanner::NativeBackend;
+    use crate::util::rng::Rng;
+
+    fn work(be: &mut dyn ScanBackend, n: usize) -> Duration {
+        let mut rng = Rng::new(1);
+        let f = 16;
+        let feats: Vec<f32> = (0..n * f).map(|_| rng.gauss() as f32).collect();
+        let labels: Vec<f32> = (0..n)
+            .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+            .collect();
+        let block = DataBlock::new(n, f, feats, labels);
+        let grid = CandidateGrid::uniform(f, 4, -1.0, 1.0);
+        let model = StrongRule::new();
+        let w = vec![1.0f32; n];
+        let s = vec![0.0f32; n];
+        let l = vec![0u32; n];
+        let t0 = Instant::now();
+        for _ in 0..10 {
+            be.scan_batch(&block, &w, &s, &l, &model, &grid, (0, f));
+        }
+        t0.elapsed()
+    }
+
+    #[test]
+    fn throttled_slower_than_native() {
+        let mut native = NativeBackend;
+        let base = work(&mut native, 512);
+        let mut slow = ThrottledBackend::new(Box::new(NativeBackend), 4.0);
+        let slowed = work(&mut slow, 512);
+        // expect roughly 4x; allow wide margin for scheduling noise
+        assert!(
+            slowed > base.mul_f64(2.0),
+            "base={base:?} slowed={slowed:?}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "laggard factor")]
+    fn rejects_speedup_factor() {
+        ThrottledBackend::new(Box::new(NativeBackend), 0.5);
+    }
+}

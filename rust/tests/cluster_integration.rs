@@ -1,0 +1,199 @@
+//! Cluster-level integration tests: TMSN protocol invariants observed on
+//! real multi-threaded runs (event-log causality, bound monotonicity,
+//! robustness to message loss and laggards).
+
+use std::time::Duration;
+
+use sparrow::config::TrainConfig;
+use sparrow::coordinator::{train_cluster, ClusterOutcome};
+use sparrow::data::synth::SynthGen;
+use sparrow::data::SynthConfig;
+use sparrow::metrics::EventKind;
+use sparrow::network::NetConfig;
+use sparrow::scanner::NativeBackend;
+
+fn run(patch: impl FnOnce(&mut TrainConfig)) -> ClusterOutcome {
+    let dir = std::env::temp_dir().join("sparrow_cluster_int");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("train.sprw");
+    let synth = SynthConfig {
+        f: 16,
+        pos_rate: 0.3,
+        informative: 8,
+        signal: 0.8,
+        flip_rate: 0.02,
+        seed: 99,
+    };
+    let mut gen = SynthGen::new(synth);
+    if !path.exists() {
+        gen.write_store(&path, 20_000).unwrap();
+    } else {
+        let mut rem = 20_000usize;
+        while rem > 0 {
+            let take = rem.min(8192);
+            gen.next_block(take);
+            rem -= take;
+        }
+    }
+    let test = gen.next_block(2_000);
+    let mut cfg = TrainConfig {
+        num_workers: 4,
+        sample_size: 2048,
+        max_rules: 16,
+        time_limit: Duration::from_secs(30),
+        gamma0: 0.2,
+        ..TrainConfig::default()
+    };
+    patch(&mut cfg);
+    train_cluster(&cfg, &path, &test, "int", &|_| Ok(Box::new(NativeBackend))).unwrap()
+}
+
+#[test]
+fn every_accept_has_a_matching_broadcast() {
+    let out = run(|_| {});
+    let broadcasts: Vec<(usize, u64)> = out
+        .events
+        .iter()
+        .filter(|e| e.kind == EventKind::Broadcast || e.kind == EventKind::LocalImprovement)
+        .filter_map(|e| e.model)
+        .collect();
+    let accepts: Vec<&sparrow::metrics::Event> = out
+        .events
+        .iter()
+        .filter(|e| e.kind == EventKind::Accept)
+        .collect();
+    assert!(!accepts.is_empty(), "no accepts in a 4-worker run");
+    for a in accepts {
+        let origin = a.model.expect("accept without model version");
+        assert!(
+            broadcasts.contains(&origin),
+            "accepted model {origin:?} never broadcast"
+        );
+    }
+}
+
+#[test]
+fn per_worker_bounds_monotone_in_event_log() {
+    let out = run(|_| {});
+    let mut bound = vec![f64::INFINITY; 4];
+    for e in &out.events {
+        if matches!(e.kind, EventKind::LocalImprovement | EventKind::Accept) {
+            assert!(
+                e.value <= bound[e.worker] + 1e-9,
+                "worker {} bound went up: {} -> {}",
+                e.worker,
+                bound[e.worker],
+                e.value
+            );
+            bound[e.worker] = e.value;
+        }
+    }
+    // final reported bound equals the min over workers
+    let min_bound = out
+        .workers
+        .iter()
+        .map(|w| w.loss_bound)
+        .fold(f64::INFINITY, f64::min);
+    assert!((out.loss_bound - min_bound).abs() < 1e-9);
+}
+
+#[test]
+fn tolerates_heavy_message_loss() {
+    let out = run(|c| {
+        c.net = NetConfig {
+            drop_rate: 0.7,
+            ..NetConfig::default()
+        };
+    });
+    // progress despite 70% loss: every worker learns locally even if
+    // gossip rarely lands
+    assert!(!out.model.is_empty());
+    let (_, _, dropped) = out.net;
+    assert!(dropped > 0, "drop injection had no effect");
+}
+
+#[test]
+fn laggard_worker_does_not_block_others() {
+    let out = run(|c| {
+        c.laggards = vec![(0, 20.0)];
+        c.max_rules = 12;
+    });
+    assert!(out.model.len() >= 12, "cluster blocked by laggard");
+    // the healthy workers did the finding
+    let healthy_found: u64 = out.workers.iter().skip(1).map(|w| w.found).sum();
+    let laggard_found = out.workers[0].found;
+    assert!(
+        healthy_found > laggard_found,
+        "healthy {healthy_found} vs laggard {laggard_found}"
+    );
+}
+
+#[test]
+fn resample_events_bracketed() {
+    let out = run(|_| {});
+    // every worker: ResampleStart/End alternate properly
+    for w in 0..4 {
+        let mut depth = 0i32;
+        for e in out.events.iter().filter(|e| e.worker == w) {
+            match e.kind {
+                EventKind::ResampleStart => {
+                    depth += 1;
+                    assert_eq!(depth, 1, "nested resample on worker {w}");
+                }
+                EventKind::ResampleEnd => {
+                    depth -= 1;
+                    assert_eq!(depth, 0, "unmatched ResampleEnd on worker {w}");
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+#[test]
+fn final_model_loss_bound_is_sound_on_train_sample() {
+    // certified bound >= actual training-set potential, w.h.p. — checked
+    // against the full training set (bound soundness, §2)
+    let dir = std::env::temp_dir().join("sparrow_cluster_int");
+    let path = dir.join("train.sprw");
+    let out = run(|c| c.max_rules = 10);
+    let train = sparrow::data::DiskStore::open(&path)
+        .unwrap()
+        .read_all()
+        .unwrap();
+    let actual = sparrow::eval::exp_loss(&out.model, &train);
+    // allow slack for f32 + sampling noise: the bound certifies the
+    // potential up to the stopping rule's failure probability
+    assert!(
+        actual <= out.loss_bound * 1.25 + 0.05,
+        "bound {} badly violated by actual {}",
+        out.loss_bound,
+        actual
+    );
+}
+
+#[test]
+fn resume_continues_from_checkpoint() {
+    // phase 1: learn a few rules
+    let first = run(|c| c.max_rules = 6);
+    assert!(first.model.len() >= 6);
+    let ckpt_model = first.model.clone();
+    let ckpt_bound = first.loss_bound;
+
+    // phase 2: resume and extend
+    let second = run(|c| {
+        c.max_rules = 12;
+        c.resume = Some((ckpt_model.clone(), ckpt_bound));
+    });
+    assert!(
+        second.model.len() > ckpt_model.len(),
+        "resume did not extend: {} -> {}",
+        ckpt_model.len(),
+        second.model.len()
+    );
+    assert!(
+        second.loss_bound <= ckpt_bound + 1e-9,
+        "resume lost bound progress: {ckpt_bound} -> {}",
+        second.loss_bound
+    );
+}

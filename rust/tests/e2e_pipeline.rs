@@ -1,0 +1,249 @@
+//! End-to-end pipeline through the CLI binary: gen-data → train →
+//! baseline → eval, exercising argument parsing, file formats, model
+//! serialization and the full training stack as a user would.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_sparrow"))
+}
+
+fn workdir() -> PathBuf {
+    let dir = std::env::temp_dir().join("sparrow_e2e_cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn gen_data(dir: &std::path::Path) -> (PathBuf, PathBuf) {
+    let train = dir.join("train.sprw");
+    let test = dir.join("test.sprw");
+    if train.exists() && test.exists() {
+        return (train, test);
+    }
+    let out = bin()
+        .args([
+            "gen-data",
+            "--out",
+            train.to_str().unwrap(),
+            "--test-out",
+            test.to_str().unwrap(),
+            "--train-n",
+            "20000",
+            "--test-n",
+            "2000",
+            "--features",
+            "16",
+            "--informative",
+            "8",
+            "--signal",
+            "0.8",
+            "--pos-rate",
+            "0.2",
+        ])
+        .output()
+        .expect("run gen-data");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    (train, test)
+}
+
+#[test]
+fn cli_full_pipeline() {
+    let dir = workdir();
+    let (train, test) = gen_data(&dir);
+    let out_dir = dir.join("run1");
+
+    // train
+    let out = bin()
+        .args([
+            "train",
+            "--data",
+            train.to_str().unwrap(),
+            "--test",
+            test.to_str().unwrap(),
+            "--workers",
+            "2",
+            "--max-rules",
+            "12",
+            "--time-limit",
+            "30",
+            "--out-dir",
+            out_dir.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run train");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("trained"), "{stdout}");
+
+    // outputs exist
+    for f in ["model.txt", "series.csv", "events.jsonl", "timeline.txt"] {
+        assert!(out_dir.join(f).exists(), "missing {f}");
+    }
+
+    // eval the saved model
+    let out = bin()
+        .args([
+            "eval",
+            "--model",
+            out_dir.join("model.txt").to_str().unwrap(),
+            "--test",
+            test.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run eval");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("exp-loss"), "{stdout}");
+    // exp-loss should beat the empty model (1.0)
+    let loss: f64 = stdout
+        .lines()
+        .find(|l| l.starts_with("exp-loss:"))
+        .and_then(|l| l.split(':').nth(1))
+        .and_then(|v| v.trim().parse().ok())
+        .expect("parse loss");
+    assert!(loss < 1.0, "loss {loss}");
+}
+
+#[test]
+fn cli_baseline_runs() {
+    let dir = workdir();
+    let (train, test) = gen_data(&dir);
+    for algo in ["fullscan", "goss", "bulksync"] {
+        let out = bin()
+            .args([
+                "baseline",
+                "--algo",
+                algo,
+                "--data",
+                train.to_str().unwrap(),
+                "--test",
+                test.to_str().unwrap(),
+                "--max-rules",
+                "6",
+                "--time-limit",
+                "30",
+                "--in-memory",
+            ])
+            .output()
+            .expect("run baseline");
+        assert!(
+            out.status.success(),
+            "{algo}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(stdout.contains(algo), "{stdout}");
+    }
+}
+
+#[test]
+fn cli_rejects_unknown_args() {
+    let out = bin()
+        .args(["train", "--data", "x", "--test", "y", "--no-such-flag", "1"])
+        .output()
+        .expect("run");
+    assert!(!out.status.success());
+}
+
+#[test]
+fn cli_help_lists_commands() {
+    let out = bin().output().expect("run");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["gen-data", "train", "baseline", "eval"] {
+        assert!(stdout.contains(cmd), "missing {cmd} in usage");
+    }
+}
+
+#[test]
+fn cli_libsvm_conversion() {
+    let dir = workdir();
+    let svm = dir.join("tiny.svm");
+    std::fs::write(&svm, "+1 1:1.5 3:2.0\n-1 2:0.5\n+1 1:0.5 2:1.0 3:0.1\n").unwrap();
+    let out_path = dir.join("tiny.sprw");
+    let out = bin()
+        .args([
+            "gen-data",
+            "--libsvm",
+            svm.to_str().unwrap(),
+            "--out",
+            out_path.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run gen-data --libsvm");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let store = sparrow::data::DiskStore::open(&out_path).unwrap();
+    assert_eq!(store.len(), 3);
+    assert_eq!(store.num_features(), 3);
+}
+
+#[test]
+fn cli_launch_multiprocess_tcp_cluster() {
+    let dir = workdir();
+    let (train, test) = gen_data(&dir);
+    let out_dir = dir.join("launch");
+    let out = bin()
+        .args([
+            "launch",
+            "--data",
+            train.to_str().unwrap(),
+            "--test",
+            test.to_str().unwrap(),
+            "--workers",
+            "2",
+            "--base-port",
+            "17890",
+            "--out-dir",
+            out_dir.to_str().unwrap(),
+            "--max-rules",
+            "8",
+            "--time-limit",
+            "20",
+        ])
+        .output()
+        .expect("run launch");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("best model"), "{stdout}");
+    assert!(out_dir.join("model.txt").exists());
+    // both workers produced models + metas
+    for i in 0..2 {
+        assert!(out_dir.join(format!("worker_{i}.model.txt")).exists());
+        assert!(out_dir.join(format!("worker_{i}.model.txt.meta")).exists());
+    }
+}
+
+#[test]
+fn cli_train_resume_roundtrip() {
+    let dir = workdir();
+    let (train, test) = gen_data(&dir);
+    let run1 = dir.join("resume_run1");
+    let ok = bin()
+        .args([
+            "train", "--data", train.to_str().unwrap(), "--test", test.to_str().unwrap(),
+            "--workers", "2", "--max-rules", "5", "--time-limit", "20",
+            "--out-dir", run1.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run train");
+    assert!(ok.status.success(), "{}", String::from_utf8_lossy(&ok.stderr));
+    let model_path = run1.join("model.txt");
+    let run2 = dir.join("resume_run2");
+    let out = bin()
+        .args([
+            "train", "--data", train.to_str().unwrap(), "--test", test.to_str().unwrap(),
+            "--workers", "2", "--max-rules", "10", "--time-limit", "20",
+            "--resume", model_path.to_str().unwrap(),
+            "--out-dir", run2.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run resumed train");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("resuming from"), "{stdout}");
+    // resumed model is at least as long as the checkpoint
+    let m1 = std::fs::read_to_string(&model_path).unwrap();
+    let m2 = std::fs::read_to_string(run2.join("model.txt")).unwrap();
+    let rules = |s: &str| s.lines().next().unwrap().split_whitespace().last().unwrap().parse::<usize>().unwrap();
+    assert!(rules(&m2) >= rules(&m1), "{} -> {}", rules(&m1), rules(&m2));
+}

@@ -1,0 +1,196 @@
+//! Robustness/property tests: malformed inputs never panic, serialization
+//! round-trips under fuzzing, degenerate numerical regimes stay sane.
+
+use sparrow::boosting::{edges_native, CandidateGrid};
+use sparrow::data::{binfmt, DataBlock};
+use sparrow::model::{StrongRule, Stump};
+use sparrow::sampling::n_eff;
+use sparrow::stopping::{CandidateStats, LilRule, StoppingRule};
+use sparrow::util::prop::{gen, prop_check};
+use sparrow::util::rng::Rng;
+
+#[test]
+fn binfmt_rejects_random_garbage_without_panicking() {
+    prop_check("garbage files error cleanly", 50, |rng| {
+        let dir = std::env::temp_dir().join("sparrow_robustness");
+        std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+        let path = dir.join(format!("garbage_{}.bin", rng.next_u64()));
+        let len = gen::size(rng, 0, 256);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        std::fs::write(&path, &bytes).map_err(|e| e.to_string())?;
+        // must return Err or a header the reader then respects — never panic
+        let result = std::panic::catch_unwind(|| {
+            if let Ok(mut r) = binfmt::Reader::open(&path) {
+                let _ = r.read_block(16, false);
+            }
+        });
+        std::fs::remove_file(&path).ok();
+        result.map_err(|_| "panicked on garbage input".to_string())
+    });
+}
+
+#[test]
+fn model_text_fuzz_roundtrip_or_clean_error() {
+    prop_check("model text parser total", 100, |rng| {
+        // random mutations of a valid serialization
+        let mut m = StrongRule::new();
+        for t in 0..gen::size(rng, 0, 6) {
+            m.push(
+                Stump::new(t as u32, rng.gauss() as f32, 1.0),
+                0.1 + rng.f32() * 0.5,
+            );
+        }
+        let mut text = m.to_text();
+        // flip a random byte half the time
+        if rng.bernoulli(0.5) && !text.is_empty() {
+            let i = rng.below(text.len() as u64) as usize;
+            let mut bytes = text.into_bytes();
+            bytes[i] = bytes[i].wrapping_add(1 + rng.below(200) as u8);
+            text = String::from_utf8_lossy(&bytes).into_owned();
+        }
+        let result = std::panic::catch_unwind(|| StrongRule::from_text(&text));
+        match result {
+            Err(_) => Err("parser panicked".into()),
+            Ok(_) => Ok(()), // Ok(model) or Err(msg) both fine
+        }
+    });
+}
+
+#[test]
+fn extreme_weights_keep_statistics_finite() {
+    // boosting can drive weights to extremes; edge accumulation and n_eff
+    // must stay finite and consistent
+    prop_check("extreme weight regimes", 30, |rng| {
+        let n = gen::size(rng, 2, 64);
+        let f = 3;
+        let mut block = DataBlock::empty(f);
+        let mut w = Vec::new();
+        for _ in 0..n {
+            let row: Vec<f32> = (0..f).map(|_| rng.gauss() as f32).collect();
+            block.push(&row, if rng.bernoulli(0.5) { 1.0 } else { -1.0 });
+            // log-uniform across ~60 orders of magnitude
+            w.push(10f32.powf((rng.f64() * 60.0 - 30.0) as f32));
+        }
+        let grid = CandidateGrid::uniform(f, 2, -1.0, 1.0);
+        let m = edges_native(&block, &w, &grid);
+        if !m.sum_w.is_finite() || !m.sum_w2.is_finite() {
+            return Err(format!("non-finite scalars: {} {}", m.sum_w, m.sum_w2));
+        }
+        for &e in &m.edges {
+            if !e.is_finite() {
+                return Err("non-finite edge".into());
+            }
+            if e.abs() > m.sum_w * (1.0 + 1e-9) {
+                return Err(format!("edge {} exceeds sum_w {}", e, m.sum_w));
+            }
+        }
+        let ne = n_eff(&w);
+        if !(ne.is_finite() && ne >= 0.0 && ne <= n as f64 + 1e-6) {
+            return Err(format!("n_eff {ne} out of range"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn stopping_rule_total_on_degenerate_stats() {
+    let rule = LilRule::default();
+    for stats in [
+        CandidateStats::default(),
+        CandidateStats {
+            m: f64::MAX / 2.0,
+            sum_w: f64::MAX / 2.0,
+            sum_w2: f64::MAX / 2.0,
+            count: u64::MAX,
+        },
+        CandidateStats {
+            m: -1e300,
+            sum_w: 1e-300,
+            sum_w2: 1e-300,
+            count: 1000,
+        },
+        CandidateStats {
+            m: 0.0,
+            sum_w: 0.0,
+            sum_w2: 0.0,
+            count: 1000,
+        },
+    ] {
+        // must not panic; bound must not be NaN
+        let fired = rule.fires(&stats, 0.1);
+        let bound = rule.bound(&stats);
+        assert!(!bound.is_nan(), "NaN bound for {stats:?} (fired={fired})");
+    }
+}
+
+#[test]
+fn grid_handles_constant_features() {
+    // constant column → all quantile cuts identical; stumps on it have
+    // edge exactly -sum_w or +sum_w depending on side — never certified
+    // as informative vs a ±1 label coin, and never a crash
+    let mut block = DataBlock::empty(2);
+    let mut rng = Rng::new(5);
+    for _ in 0..200 {
+        block.push(
+            &[3.25, rng.gauss() as f32],
+            if rng.bernoulli(0.5) { 1.0 } else { -1.0 },
+        );
+    }
+    let grid = CandidateGrid::from_quantiles(&block, 4);
+    assert!(grid.row(0).iter().all(|&t| t == 3.25));
+    let w = vec![1.0f32; 200];
+    let m = edges_native(&block, &w, &grid);
+    for t in 0..4 {
+        // x > 3.25 is false for all → h = -1 always → edge = -Σ u = -(Σ w y)
+        let label_sum: f64 = block.labels.iter().map(|&y| y as f64).sum();
+        assert!((m.edge(0, t) + label_sum).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn empty_and_single_example_samples() {
+    use sparrow::data::SampleSet;
+    let empty = SampleSet::empty(4);
+    assert_eq!(empty.n_eff(), 0.0);
+    assert_eq!(empty.total_weight(), 0.0);
+
+    let mut block = DataBlock::empty(1);
+    block.push(&[0.5], 1.0);
+    let single = SampleSet::fresh(block, vec![0.0], 0);
+    assert!((single.n_eff() - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn strong_rule_score_associativity_under_split() {
+    // score_suffix split at any point reconstructs the full score
+    prop_check("suffix split exact", 50, |rng| {
+        let f = 4;
+        let mut m = StrongRule::new();
+        let t = gen::size(rng, 1, 12);
+        for _ in 0..t {
+            m.push(
+                Stump::new(
+                    rng.below(f as u64) as u32,
+                    rng.gauss() as f32,
+                    if rng.bernoulli(0.5) { 1.0 } else { -1.0 },
+                ),
+                0.05 + rng.f32() * 0.5,
+            );
+        }
+        let row: Vec<f32> = (0..f).map(|_| rng.gauss() as f32).collect();
+        let full = m.score(&row);
+        let split = gen::size(rng, 0, t);
+        let prefix: f32 = {
+            let mut p = StrongRule::new();
+            for i in 0..split {
+                p.push(m.stumps()[i], m.alphas()[i]);
+            }
+            p.score(&row)
+        };
+        let got = prefix + m.score_suffix(&row, split);
+        if (got - full).abs() > 1e-4 {
+            return Err(format!("{got} != {full} at split {split}/{t}"));
+        }
+        Ok(())
+    });
+}
