@@ -1,0 +1,31 @@
+# Convenience entry points. The authoritative verification gate is
+# scripts/tier1.sh (used verbatim by CI).
+
+.PHONY: tier1 build test fmt clippy artifacts bench clean
+
+tier1:
+	./scripts/tier1.sh
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+fmt:
+	cd rust && cargo fmt
+
+clippy:
+	cd rust && cargo clippy --all-targets -- -D warnings
+
+# AOT-lower the L2/L1 Python graph to HLO-text artifacts consumed by the
+# xla-* backends (requires a JAX environment; see python/compile/aot.py).
+# rust/artifacts is where the runtime tests and benches look for them.
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../rust/artifacts
+
+bench:
+	cd rust && cargo bench
+
+clean:
+	cd rust && cargo clean

@@ -89,7 +89,7 @@ fn main() -> anyhow::Result<()> {
     // uses 0.061 for its dataset the same way)
     let best = series
         .iter()
-        .filter_map(|s| s.points.iter().map(|p| p.exp_loss).fold(None, |a: Option<f64>, v| Some(a.map_or(v, |x| x.min(v)))))
+        .flat_map(|s| s.points.iter().map(|p| p.exp_loss))
         .fold(f64::INFINITY, f64::min);
     let target = best * 1.03;
     println!("\n=== Table 1 analogue: time to loss <= {target:.4} ===");

@@ -85,7 +85,8 @@ fn main() -> anyhow::Result<()> {
         harness::stop(10_000, secs, 0.0),
         "bs-laggard",
     );
-    let iters = |s: &sparrow::eval::MetricSeries| s.points.last().map(|p| p.iterations).unwrap_or(0);
+    let iters =
+        |s: &sparrow::eval::MetricSeries| s.points.last().map(|p| p.iterations).unwrap_or(0);
     println!(
         "bsp healthy: {} iterations in {secs:.0}s;  bsp with 8x laggard: {} iterations",
         iters(&bs_ok),

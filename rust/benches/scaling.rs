@@ -18,7 +18,14 @@ fn main() -> anyhow::Result<()> {
     let secs = 20.0;
     let rules = 200;
 
-    let mut t = Table::new(&["Workers", "Rules", "Time-to-target (s)", "Final loss", "Broadcasts", "Accepts"]);
+    let mut t = Table::new(&[
+        "Workers",
+        "Rules",
+        "Time-to-target (s)",
+        "Final loss",
+        "Broadcasts",
+        "Accepts",
+    ]);
     let mut baseline_time: Option<f64> = None;
     // calibration: single worker's reachable loss defines the target
     let mut target = 0.0;

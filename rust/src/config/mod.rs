@@ -286,7 +286,10 @@ mod tests {
     #[test]
     fn cli_overrides() {
         let cfg = TrainConfig::default()
-            .apply_args(&args("train --workers 4 --gamma0 0.1 --stopping hoeffding --backend native --sampler rejection"))
+            .apply_args(&args(
+                "train --workers 4 --gamma0 0.1 --stopping hoeffding \
+                 --backend native --sampler rejection",
+            ))
             .unwrap();
         assert_eq!(cfg.num_workers, 4);
         assert!((cfg.gamma0 - 0.1).abs() < 1e-12);

@@ -83,8 +83,9 @@ impl Writer {
         debug_assert_eq!(features.len(), self.f as usize);
         self.out.write_all(&label.to_le_bytes())?;
         // Bulk-copy the feature row as bytes.
-        let bytes =
-            unsafe { std::slice::from_raw_parts(features.as_ptr() as *const u8, features.len() * 4) };
+        let bytes = unsafe {
+            std::slice::from_raw_parts(features.as_ptr() as *const u8, features.len() * 4)
+        };
         self.out.write_all(bytes)?;
         self.written += 1;
         Ok(())

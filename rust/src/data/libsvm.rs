@@ -54,8 +54,9 @@ pub fn read_file(path: &Path, f: usize) -> io::Result<DataBlock> {
         if line.trim().is_empty() || line.starts_with('#') {
             continue;
         }
-        let (label, pairs) = parse_line(&line)
-            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("line {}: {e}", lineno + 1)))?;
+        let (label, pairs) = parse_line(&line).map_err(|e| {
+            io::Error::new(io::ErrorKind::InvalidData, format!("line {}: {e}", lineno + 1))
+        })?;
         row.iter_mut().for_each(|v| *v = 0.0);
         for (idx, val) in pairs {
             if idx < f {

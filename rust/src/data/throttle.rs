@@ -48,8 +48,8 @@ impl IoThrottle {
             return;
         }
         let now = Instant::now();
-        self.tokens = (self.tokens + now.duration_since(self.last).as_secs_f64() * self.bytes_per_sec)
-            .min(self.burst);
+        let refill = now.duration_since(self.last).as_secs_f64() * self.bytes_per_sec;
+        self.tokens = (self.tokens + refill).min(self.burst);
         self.last = now;
         self.tokens -= bytes as f64;
         if self.tokens < 0.0 {

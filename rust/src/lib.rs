@@ -13,6 +13,11 @@
 //! - **L2/L1 (python/compile, build-time)** — the JAX scan-batch graph and
 //!   the Pallas edge kernel, AOT-lowered to `artifacts/*.hlo.txt` and
 //!   executed from [`runtime`] via PJRT. Python never runs at train time.
+//!
+//! The build is fully offline: the only dependencies (`anyhow`, `xla`) are
+//! vendored under `vendor/` — `anyhow` as an API-compatible shim, `xla` as
+//! a compile-only stub that errors at runtime (the native backend is the
+//! default and needs neither). See `rust/Cargo.toml` for the swap points.
 
 pub mod baselines;
 pub mod boosting;

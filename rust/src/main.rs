@@ -506,7 +506,11 @@ fn cmd_launch(args: &Args) -> anyhow::Result<()> {
     }
     let (bound, best_path) = best.ok_or_else(|| anyhow::anyhow!("no workers finished"))?;
     std::fs::copy(&best_path, out.join("model.txt"))?;
-    println!("best model: {} (bound {bound:.4}) -> {}", best_path.display(), out.join("model.txt").display());
+    println!(
+        "best model: {} (bound {bound:.4}) -> {}",
+        best_path.display(),
+        out.join("model.txt").display()
+    );
     if let Some(test_path) = test_path {
         let model = StrongRule::from_text(&std::fs::read_to_string(out.join("model.txt"))?)
             .map_err(anyhow::Error::msg)?;

@@ -105,8 +105,16 @@ impl StrongRule {
         for _ in 0..t {
             let line = lines.next().ok_or("truncated model text")?;
             let mut it = line.split_whitespace();
-            let feature: u32 = it.next().ok_or("missing feature")?.parse().map_err(|_| "bad feature")?;
-            let threshold: f32 = it.next().ok_or("missing threshold")?.parse().map_err(|_| "bad threshold")?;
+            let feature: u32 = it
+                .next()
+                .ok_or("missing feature")?
+                .parse()
+                .map_err(|_| "bad feature")?;
+            let threshold: f32 = it
+                .next()
+                .ok_or("missing threshold")?
+                .parse()
+                .map_err(|_| "bad threshold")?;
             let sign: f32 = it.next().ok_or("missing sign")?.parse().map_err(|_| "bad sign")?;
             let alpha: f32 = it.next().ok_or("missing alpha")?.parse().map_err(|_| "bad alpha")?;
             if sign != 1.0 && sign != -1.0 {

@@ -254,7 +254,11 @@ impl TreeEnsemble {
                 return Err("bad tree header".into());
             }
             let alpha: f32 = tp.next().ok_or("missing alpha")?.parse().map_err(|_| "bad alpha")?;
-            let n_nodes: usize = tp.next().ok_or("missing nodes")?.parse().map_err(|_| "bad nodes")?;
+            let n_nodes: usize = tp
+                .next()
+                .ok_or("missing nodes")?
+                .parse()
+                .map_err(|_| "bad nodes")?;
             if !(alpha.is_finite() && alpha > 0.0) {
                 return Err("alpha must be positive".into());
             }

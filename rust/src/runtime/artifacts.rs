@@ -53,8 +53,10 @@ impl Manifest {
                 let (k, v) = tok
                     .split_once('=')
                     .ok_or_else(|| format!("manifest line {}: bad token {tok:?}", lineno + 1))?;
-                let parse_usize =
-                    |v: &str| v.parse::<usize>().map_err(|_| format!("line {}: bad {k}={v}", lineno + 1));
+                let parse_usize = |v: &str| {
+                    v.parse::<usize>()
+                        .map_err(|_| format!("line {}: bad {k}={v}", lineno + 1))
+                };
                 match k {
                     "kind" => spec.kind = v.to_string(),
                     "file" => spec.file = v.to_string(),

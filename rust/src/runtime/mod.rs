@@ -62,7 +62,11 @@ unsafe impl Send for XlaScanBackend {}
 
 impl XlaScanBackend {
     /// Compile the artifact described by `spec` on a fresh CPU client.
-    pub fn load(manifest: &Manifest, spec: &ArtifactSpec, pallas: bool) -> anyhow::Result<XlaScanBackend> {
+    pub fn load(
+        manifest: &Manifest,
+        spec: &ArtifactSpec,
+        pallas: bool,
+    ) -> anyhow::Result<XlaScanBackend> {
         let client = xla::PjRtClient::cpu()?;
         let proto = xla::HloModuleProto::from_text_file(manifest.path_of(spec))?;
         let comp = xla::XlaComputation::from_proto(&proto);

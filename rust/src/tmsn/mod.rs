@@ -199,6 +199,61 @@ mod tests {
         assert_eq!(b.rejects, 1);
     }
 
+    /// A message carrying an arbitrary certificate (bypasses the
+    /// `local_improvement` bound arithmetic to probe the verdict rule
+    /// directly).
+    fn msg_with_bound(loss_bound: f64, origin: usize, seq: u64) -> ModelMessage {
+        ModelMessage {
+            model: extend(&StrongRule::new(), origin as u32),
+            cert: Certificate {
+                loss_bound,
+                origin,
+                seq,
+            },
+        }
+    }
+
+    #[test]
+    fn verdict_accept_iff_strictly_better() {
+        // Alg. 1 receive path: accept iff the incoming bound is *strictly*
+        // lower — strictly better ⇒ Accept; exact tie ⇒ Reject; worse ⇒
+        // Reject. Ties must not churn state (no re-adoption loops).
+        let mut s = TmsnState::resume(0, extend(&StrongRule::new(), 9), 0.5);
+
+        assert_eq!(s.on_message(msg_with_bound(0.49, 1, 1)), Verdict::Accept);
+        assert!((s.cert.loss_bound - 0.49).abs() < 1e-15);
+
+        let model_before = s.model.clone();
+        assert_eq!(s.on_message(msg_with_bound(0.49, 2, 1)), Verdict::Reject); // tie
+        assert_eq!(s.on_message(msg_with_bound(0.50, 2, 2)), Verdict::Reject); // worse
+        assert_eq!(s.on_message(msg_with_bound(9.99, 2, 3)), Verdict::Reject); // much worse
+        assert_eq!(s.model, model_before, "rejects must not mutate the model");
+        assert!((s.cert.loss_bound - 0.49).abs() < 1e-15);
+        assert_eq!(s.accepts, 1);
+        assert_eq!(s.rejects, 3);
+    }
+
+    #[test]
+    fn bound_monotone_across_adopted_messages() {
+        // The certificate bound never increases, no matter what mix of
+        // better/worse/stale messages arrives in what order — the protocol's
+        // progress invariant, checked on the accept path specifically.
+        let mut s = TmsnState::new(0);
+        let bounds = [0.9, 0.95, 0.6, 0.6, 0.61, 0.3, 0.9, 0.05, 0.049, 0.5];
+        let mut prev = s.cert.loss_bound;
+        for (seq, &b) in bounds.iter().enumerate() {
+            let verdict = s.on_message(msg_with_bound(b, 1, seq as u64));
+            assert_eq!(verdict == Verdict::Accept, b < prev, "bound {b} vs {prev}");
+            assert!(
+                s.cert.loss_bound <= prev,
+                "adopted bound increased: {prev} -> {}",
+                s.cert.loss_bound
+            );
+            prev = s.cert.loss_bound;
+        }
+        assert!((prev - 0.049).abs() < 1e-15);
+    }
+
     #[test]
     fn stale_message_rejected() {
         let mut a = TmsnState::new(0);

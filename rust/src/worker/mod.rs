@@ -210,12 +210,13 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
                 return true;
             }
             if let Some(msg) = endpoint.poll() {
-                log.record(id, EventKind::Receive, Some((msg.cert.origin, msg.cert.seq)), msg.cert.loss_bound);
+                let version = Some((msg.cert.origin, msg.cert.seq));
+                log.record(id, EventKind::Receive, version, msg.cert.loss_bound);
                 if msg.cert.loss_bound < current_bound {
                     pending = Some(msg);
                     return true;
                 } else {
-                    log.record(id, EventKind::Reject, Some((msg.cert.origin, msg.cert.seq)), msg.cert.loss_bound);
+                    log.record(id, EventKind::Reject, version, msg.cert.loss_bound);
                 }
             }
             false
@@ -242,7 +243,8 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
                     msg.cert.loss_bound,
                 );
                 endpoint.send(msg);
-                log.record(id, EventKind::Broadcast, Some((id, tmsn.cert.seq)), tmsn.cert.loss_bound);
+                let version = Some((id, tmsn.cert.seq));
+                log.record(id, EventKind::Broadcast, version, tmsn.cert.loss_bound);
                 found += 1;
             }
             ScanOutcome::Exhausted { .. } => {

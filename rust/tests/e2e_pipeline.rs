@@ -244,6 +244,9 @@ fn cli_train_resume_roundtrip() {
     // resumed model is at least as long as the checkpoint
     let m1 = std::fs::read_to_string(&model_path).unwrap();
     let m2 = std::fs::read_to_string(run2.join("model.txt")).unwrap();
-    let rules = |s: &str| s.lines().next().unwrap().split_whitespace().last().unwrap().parse::<usize>().unwrap();
+    let rules = |s: &str| {
+        let header = s.lines().next().unwrap();
+        header.split_whitespace().last().unwrap().parse::<usize>().unwrap()
+    };
     assert!(rules(&m2) >= rules(&m1), "{} -> {}", rules(&m1), rules(&m2));
 }

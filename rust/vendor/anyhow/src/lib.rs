@@ -1,0 +1,145 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment vendors all dependencies in-tree; this shim covers
+//! exactly the subset of the real API the workspace uses: [`Error`],
+//! [`Result`], [`Error::msg`], the blanket `From<E: std::error::Error>`
+//! conversion used by `?`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//! Swapping in the real crates.io `anyhow` is a one-line Cargo.toml change.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-backed error value.
+///
+/// Unlike the real `anyhow::Error` there is no backtrace and no downcast;
+/// the source chain is flattened into the message at conversion time.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`, which
+// is what makes this blanket conversion coherent (same as real anyhow).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        let mut msg = err.to_string();
+        let mut source = err.source();
+        while let Some(s) = source {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            source = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn msg_displays() {
+        let e = Error::msg("boom");
+        assert_eq!(format!("{e}"), "boom");
+        assert_eq!(format!("{e:#}"), "boom");
+        assert_eq!(format!("{e:?}"), "boom");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(format!("{e}").contains("gone"));
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+
+        fn bails() -> Result<()> {
+            bail!("nope {}", 1);
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "nope 1");
+
+        fn ensures(v: usize) -> Result<usize> {
+            ensure!(v < 10, "v too big: {v}");
+            Ok(v)
+        }
+        assert_eq!(ensures(3).unwrap(), 3);
+        assert_eq!(ensures(30).unwrap_err().to_string(), "v too big: 30");
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn check(v: bool) -> Result<()> {
+            ensure!(v);
+            Ok(())
+        }
+        assert!(check(true).is_ok());
+        assert!(check(false).unwrap_err().to_string().contains("condition failed"));
+    }
+}

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate (see ROADMAP.md): release build + full test suite.
+#
+# Single entry point shared by CI (.github/workflows/ci.yml) and local devs:
+#
+#     ./scripts/tier1.sh
+#
+# Keep this file in sync with the "Tier-1 verify" line in ROADMAP.md.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+cargo build --release
+cargo test -q
+
+# The workspace root package is `sparrow`, so the gate above does not reach
+# the vendored shim crates; test them explicitly (fast — a handful of tests).
+cargo test -q -p anyhow -p xla
