@@ -51,6 +51,30 @@ impl Default for SynthConfig {
     }
 }
 
+impl SynthConfig {
+    /// Stable 64-bit fingerprint over *every* field (FNV-1a on the raw
+    /// bits). On-disk workload caches must key on this: two configs that
+    /// differ only in `pos_rate`, `signal`, or `flip_rate` generate
+    /// different data and must never reuse each other's store.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for v in [
+            self.f as u64,
+            self.pos_rate.to_bits(),
+            self.informative as u64,
+            self.signal.to_bits(),
+            self.flip_rate.to_bits(),
+            self.seed,
+        ] {
+            for byte in v.to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+        }
+        h
+    }
+}
+
 /// Streaming generator; deterministic given (config, position).
 pub struct SynthGen {
     cfg: SynthConfig,
@@ -220,6 +244,28 @@ mod tests {
         assert_eq!(store.num_features(), 32);
         let b = store.read_all().unwrap();
         assert_eq!(b.n, 1000);
+    }
+
+    #[test]
+    fn fingerprint_covers_every_field() {
+        let base = cfg(9);
+        let same = cfg(9);
+        assert_eq!(base.fingerprint(), same.fingerprint());
+        let variants = [
+            SynthConfig { f: base.f + 1, ..base.clone() },
+            SynthConfig { pos_rate: base.pos_rate + 0.01, ..base.clone() },
+            SynthConfig { informative: base.informative + 1, ..base.clone() },
+            SynthConfig { signal: base.signal + 0.01, ..base.clone() },
+            SynthConfig { flip_rate: base.flip_rate + 0.01, ..base.clone() },
+            SynthConfig { seed: base.seed + 1, ..base.clone() },
+        ];
+        for v in &variants {
+            assert_ne!(
+                v.fingerprint(),
+                base.fingerprint(),
+                "fingerprint missed a field: {v:?}"
+            );
+        }
     }
 
     #[test]

@@ -68,13 +68,18 @@ impl Workload {
     }
 
     /// Build (or reuse) the on-disk store + in-memory test block.
-    /// Stores are cached under the target dir keyed by the workload shape.
+    /// Stores are cached under the target dir, keyed by the size and the
+    /// full [`SynthConfig`] fingerprint — two workloads differing in *any*
+    /// generator field (pos_rate, signal, flip_rate, …) must never reuse
+    /// each other's store.
     pub fn materialize(&self) -> std::io::Result<(PathBuf, DataBlock)> {
         let dir = std::env::temp_dir().join("sparrow_workloads");
         std::fs::create_dir_all(&dir)?;
         let path = dir.join(format!(
-            "w_{}_{}_{}_{:x}.sprw",
-            self.train_n, self.features, self.synth.informative, self.synth.seed
+            "w_{}_{}_{:016x}.sprw",
+            self.train_n,
+            self.features,
+            self.synth.fingerprint()
         ));
         let mut gen = SynthGen::new(self.synth.clone());
         if !path.exists() || DiskStore::open(&path).map(|s| s.len()).unwrap_or(0) != self.train_n {
@@ -237,6 +242,37 @@ mod tests {
         assert_eq!(p1, p2);
         assert_eq!(t1, t2, "test block must not depend on cache state");
         assert_eq!(DiskStore::open(&p1).unwrap().len(), 500);
+    }
+
+    #[test]
+    fn cache_key_distinguishes_generator_fields() {
+        // Regression: the cache filename used to omit pos_rate, signal,
+        // and flip_rate, silently handing one workload another's store.
+        let base = Workload {
+            train_n: 400,
+            test_n: 100,
+            features: 8,
+            synth: SynthConfig {
+                f: 8,
+                pos_rate: 0.3,
+                informative: 4,
+                signal: 0.8,
+                flip_rate: 0.0,
+                seed: 0xCA7,
+            },
+        };
+        let (p_base, _) = base.materialize().unwrap();
+        let patches: [fn(&mut SynthConfig); 3] = [
+            |s| s.pos_rate = 0.31,
+            |s| s.signal = 0.81,
+            |s| s.flip_rate = 0.01,
+        ];
+        for patch in patches {
+            let mut w = base.clone();
+            patch(&mut w.synth);
+            let (p, _) = w.materialize().unwrap();
+            assert_ne!(p, p_base, "distinct configs must get distinct stores");
+        }
     }
 
     #[test]

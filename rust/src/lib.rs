@@ -6,10 +6,13 @@
 //! as a three-layer Rust + JAX + Pallas stack.
 //!
 //! Layer map (see `DESIGN.md` for the full inventory):
-//! - **L3 (this crate)** — TMSN protocol ([`tmsn`]), Sparrow workers
-//!   ([`scanner`], [`sampler`], [`worker`]), cluster [`coordinator`],
-//!   broadcast [`network`] fabric, disk/memory [`data`] stores, the
-//!   [`baselines`] the paper compares against, and [`eval`]/[`metrics`].
+//! - **L3 (this crate)** — the payload-generic TMSN protocol ([`tmsn`]:
+//!   `Payload`/`Certified`/`Tmsn`/`Driver`, with boosting instantiated in
+//!   [`tmsn::boost`] and a second, SGD workload in [`sgd`]), Sparrow
+//!   workers ([`scanner`], [`sampler`], [`worker`]), cluster
+//!   [`coordinator`], broadcast [`network`] fabric, disk/memory [`data`]
+//!   stores, the [`baselines`] the paper compares against, and
+//!   [`eval`]/[`metrics`].
 //! - **L2/L1 (python/compile, build-time)** — the JAX scan-batch graph and
 //!   the Pallas edge kernel, AOT-lowered to `artifacts/*.hlo.txt` and
 //!   executed from [`runtime`] via PJRT. Python never runs at train time.
@@ -33,6 +36,7 @@ pub mod runtime;
 pub mod sampler;
 pub mod sampling;
 pub mod scanner;
+pub mod sgd;
 pub mod stopping;
 pub mod tmsn;
 pub mod util;

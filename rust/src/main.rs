@@ -356,6 +356,7 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
     use sparrow::data::IoThrottle;
     use sparrow::metrics::EventLog;
     use sparrow::network::TcpEndpoint;
+    use sparrow::tmsn::BoostPayload;
     use sparrow::worker::{run_worker, WorkerParams};
 
     let data = args
@@ -383,7 +384,7 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
     let grid = CandidateGrid::from_quantiles(&pilot, cfg.nthr);
     let stripe = partition_features(features, cfg.num_workers)[worker_id];
 
-    let endpoint = TcpEndpoint::bind(&listen)?;
+    let endpoint: TcpEndpoint<BoostPayload> = TcpEndpoint::bind(&listen)?;
     println!("worker {worker_id} listening on {}", endpoint.local_addr());
     for peer in peers.split(',').filter(|p| !p.is_empty()) {
         endpoint.connect(peer)?;

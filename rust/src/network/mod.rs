@@ -1,10 +1,15 @@
 //! Broadcast network fabric.
 //!
 //! TMSN's only communication primitive is *broadcast with no
-//! acknowledgement*: a worker publishes `(model, certificate)` and keeps
+//! acknowledgement*: a worker publishes a certified payload and keeps
 //! working; receivers observe the message after a per-link delay. There is
 //! no head node and no barrier anywhere in this module — the fabric is a
 //! delay + loss model, not a coordinator.
+//!
+//! Both transports are payload-generic: [`Fabric`]/[`Endpoint`] carry any
+//! `T: Clone + Send`, and [`TcpEndpoint`] frames any
+//! [`crate::tmsn::Payload`] via its own `encode`/`decode` — no workload
+//! types appear anywhere in this module.
 //!
 //! The paper ran on EC2 with real NICs; here the fabric is an in-process
 //! simulator with seeded, configurable per-link latency (base +

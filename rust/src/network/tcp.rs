@@ -3,14 +3,18 @@
 //! The in-process [`crate::network::Fabric`] simulates a cluster inside
 //! one binary (benches, failure injection). This module is the *real*
 //! transport the original Sparrow used: every worker process listens on a
-//! socket, dials its peers, and broadcasts `(model, certificate)` messages
-//! with no acknowledgements and no ordering guarantees beyond TCP's
-//! per-link FIFO — faithfully TMSN: a dead peer just stops receiving.
+//! socket, dials its peers, and broadcasts certified payloads with no
+//! acknowledgements and no ordering guarantees beyond TCP's per-link
+//! FIFO — faithfully TMSN: a dead peer just stops receiving.
+//!
+//! The transport is payload-generic: framing wraps [`Payload::encode`] /
+//! [`Payload::decode`], so any workload's messages ride the same sockets.
 //!
 //! Wire format (little-endian):
 //!     magic  u32  = 0x54_4D_53_4E ("TMSN")
 //!     len    u32  = payload bytes
-//!     payload     = certificate line + model text (see `encode`)
+//!     payload     = `P::encode()` (e.g. certificate line + model text
+//!                   for the boosting payload)
 
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -18,21 +22,15 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::model::StrongRule;
-use crate::tmsn::{Certificate, ModelMessage};
+use crate::tmsn::Payload;
 
 const MAGIC: u32 = 0x544D_534E;
 /// hard cap on accepted payloads (a model of 10⁶ stumps ≈ 30 MB text)
-const MAX_PAYLOAD: u32 = 64 << 20;
+pub(crate) const MAX_PAYLOAD: u32 = 64 << 20;
 
-/// Encode a model message for the wire.
-pub fn encode(msg: &ModelMessage) -> Vec<u8> {
-    let header = format!(
-        "cert {} {} {}\n",
-        msg.cert.loss_bound, msg.cert.origin, msg.cert.seq
-    );
-    let body = msg.model.to_text();
-    let payload = [header.as_bytes(), body.as_bytes()].concat();
+/// Frame a payload for the wire.
+pub fn encode<P: Payload>(msg: &P) -> Vec<u8> {
+    let payload = msg.encode();
     let mut out = Vec::with_capacity(8 + payload.len());
     out.extend_from_slice(&MAGIC.to_le_bytes());
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
@@ -41,31 +39,14 @@ pub fn encode(msg: &ModelMessage) -> Vec<u8> {
 }
 
 /// Decode a payload (after framing) back into a message.
-pub fn decode(payload: &[u8]) -> Result<ModelMessage, String> {
-    let text = std::str::from_utf8(payload).map_err(|_| "non-utf8 payload")?;
-    let (first, rest) = text.split_once('\n').ok_or("missing cert line")?;
-    let mut it = first.split_whitespace();
-    if it.next() != Some("cert") {
-        return Err("bad cert line".into());
-    }
-    let loss_bound: f64 = it.next().ok_or("missing bound")?.parse().map_err(|_| "bad bound")?;
-    let origin: usize = it.next().ok_or("missing origin")?.parse().map_err(|_| "bad origin")?;
-    let seq: u64 = it.next().ok_or("missing seq")?.parse().map_err(|_| "bad seq")?;
-    if !loss_bound.is_finite() || loss_bound < 0.0 {
-        return Err("bound must be finite and non-negative".into());
-    }
-    let model = StrongRule::from_text(rest)?;
-    Ok(ModelMessage {
-        model,
-        cert: Certificate {
-            loss_bound,
-            origin,
-            seq,
-        },
-    })
+pub fn decode<P: Payload>(payload: &[u8]) -> Result<P, String> {
+    P::decode(payload)
 }
 
-fn read_frame(stream: &mut TcpStream) -> io::Result<Option<Vec<u8>>> {
+/// Read one length-prefixed frame. `Ok(None)` = clean EOF between frames
+/// (peer closed); `InvalidData` errors = corrupt stream (bad magic,
+/// oversized length), after which the link must be dropped.
+fn read_frame(stream: &mut impl Read) -> io::Result<Option<Vec<u8>>> {
     let mut head = [0u8; 8];
     if let Err(e) = stream.read_exact(&mut head) {
         // clean EOF between frames = peer closed
@@ -89,20 +70,20 @@ fn read_frame(stream: &mut TcpStream) -> io::Result<Option<Vec<u8>>> {
 }
 
 /// A worker's TCP attachment: listens for peers, dials peers, broadcasts.
-pub struct TcpEndpoint {
+pub struct TcpEndpoint<P: Payload> {
     peers: Arc<Mutex<Vec<TcpStream>>>,
-    inbox: Receiver<ModelMessage>,
+    inbox: Receiver<P>,
     local_addr: SocketAddr,
     // keep the sender alive for acceptor threads spawned later
-    _inbox_tx: Sender<ModelMessage>,
+    _inbox_tx: Sender<P>,
 }
 
-impl TcpEndpoint {
+impl<P: Payload> TcpEndpoint<P> {
     /// Bind a listener (`addr` like "127.0.0.1:0") and start accepting.
-    pub fn bind(addr: &str) -> io::Result<TcpEndpoint> {
+    pub fn bind(addr: &str) -> io::Result<TcpEndpoint<P>> {
         let listener = TcpListener::bind(addr)?;
         let local_addr = listener.local_addr()?;
-        let (tx, rx) = channel::<ModelMessage>();
+        let (tx, rx) = channel::<P>();
         let peers: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
 
         let tx_acceptor = tx.clone();
@@ -150,17 +131,17 @@ impl TcpEndpoint {
 
     /// Fire-and-forget broadcast. Dead peers are dropped silently —
     /// exactly TMSN's failure semantics.
-    pub fn broadcast(&self, msg: &ModelMessage) {
+    pub fn broadcast(&self, msg: &P) {
         let frame = encode(msg);
         let mut peers = self.peers.lock().unwrap();
         peers.retain_mut(|p| p.write_all(&frame).is_ok());
     }
 
-    pub fn try_recv(&self) -> Option<ModelMessage> {
+    pub fn try_recv(&self) -> Option<P> {
         self.inbox.try_recv().ok()
     }
 
-    pub fn recv_timeout(&self, timeout: Duration) -> Option<ModelMessage> {
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<P> {
         self.inbox.recv_timeout(timeout).ok()
     }
 
@@ -169,10 +150,10 @@ impl TcpEndpoint {
     }
 }
 
-fn receive_loop(mut stream: TcpStream, tx: Sender<ModelMessage>) {
+fn receive_loop<P: Payload>(mut stream: TcpStream, tx: Sender<P>) {
     loop {
         match read_frame(&mut stream) {
-            Ok(Some(payload)) => match decode(&payload) {
+            Ok(Some(payload)) => match P::decode(&payload) {
                 Ok(msg) => {
                     if tx.send(msg).is_err() {
                         return; // endpoint dropped
@@ -193,15 +174,17 @@ fn receive_loop(mut stream: TcpStream, tx: Sender<ModelMessage>) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::Stump;
+    // the shared workload-agnostic test payload — the TCP layer must not
+    // care what rides inside its frames
+    use crate::tmsn::testpay::{TestCert, TestPayload};
+    use crate::util::prop::prop_check;
+    use std::io::Cursor;
 
-    fn msg(seq: u64) -> ModelMessage {
-        let mut model = StrongRule::new();
-        model.push(Stump::new(3, 0.5, 1.0), 0.25);
-        ModelMessage {
-            model,
-            cert: Certificate {
-                loss_bound: 0.9,
+    fn msg(seq: u64) -> TestPayload {
+        TestPayload {
+            body: "payload body".into(),
+            cert: TestCert {
+                score: 0.9,
                 origin: 7,
                 seq,
             },
@@ -215,23 +198,104 @@ mod tests {
         // strip framing
         assert_eq!(u32::from_le_bytes(frame[0..4].try_into().unwrap()), MAGIC);
         let len = u32::from_le_bytes(frame[4..8].try_into().unwrap()) as usize;
-        let back = decode(&frame[8..8 + len]).unwrap();
-        assert_eq!(back.model, m.model);
-        assert_eq!(back.cert, m.cert);
+        assert_eq!(8 + len, frame.len());
+        let back: TestPayload = decode(&frame[8..8 + len]).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn prop_frame_roundtrip() {
+        // Any payload survives framing + deframing + decoding exactly.
+        prop_check("tcp frame roundtrip", 64, |rng| {
+            let body: String = (0..rng.below(200))
+                .map(|_| (b'a' + rng.below(26) as u8) as char)
+                .collect();
+            let m = TestPayload {
+                body,
+                cert: TestCert {
+                    score: rng.f64(),
+                    origin: rng.below(256) as usize,
+                    seq: rng.below(1 << 40),
+                },
+            };
+            let frame = encode(&m);
+            let mut cursor = Cursor::new(frame.as_slice());
+            let payload = read_frame(&mut cursor)
+                .map_err(|e| e.to_string())?
+                .ok_or("unexpected EOF")?;
+            let back: TestPayload = decode(&payload).map_err(|e| e.to_string())?;
+            if back != m {
+                return Err(format!("{back:?} != {m:?}"));
+            }
+            // the frame is fully consumed: a second read is a clean EOF
+            if read_frame(&mut cursor).map_err(|e| e.to_string())?.is_some() {
+                return Err("trailing bytes after frame".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn read_frame_clean_eof_between_frames() {
+        let mut empty = Cursor::new(&[][..]);
+        assert!(read_frame(&mut empty).unwrap().is_none());
+    }
+
+    #[test]
+    fn read_frame_rejects_truncated_header() {
+        // fewer than 8 header bytes, but not zero: a torn frame, not EOF —
+        // read_exact reports UnexpectedEof which maps to clean close
+        let frame = encode(&msg(1));
+        let mut torn = Cursor::new(&frame[..5]);
+        assert!(read_frame(&mut torn).unwrap().is_none());
+    }
+
+    #[test]
+    fn read_frame_rejects_truncated_payload() {
+        let frame = encode(&msg(1));
+        // header promises more bytes than the stream carries
+        let mut torn = Cursor::new(&frame[..frame.len() - 3]);
+        let err = read_frame(&mut torn).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn read_frame_rejects_bad_magic() {
+        let mut frame = encode(&msg(1));
+        frame[0] ^= 0xFF;
+        let err = read_frame(&mut Cursor::new(frame.as_slice())).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert_eq!(err.to_string(), "bad magic");
+    }
+
+    #[test]
+    fn read_frame_rejects_oversized_len() {
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&MAGIC.to_le_bytes());
+        frame.extend_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        frame.extend_from_slice(&[0u8; 16]);
+        let err = read_frame(&mut Cursor::new(frame.as_slice())).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert_eq!(err.to_string(), "oversized frame");
+        // exactly MAX_PAYLOAD is allowed by framing (would read the bytes)
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&MAGIC.to_le_bytes());
+        frame.extend_from_slice(&MAX_PAYLOAD.to_le_bytes());
+        let err = read_frame(&mut Cursor::new(frame.as_slice())).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
     }
 
     #[test]
     fn decode_rejects_garbage() {
-        assert!(decode(b"nonsense").is_err());
-        assert!(decode(b"cert abc 0 0\nstrongrule v1 0\n").is_err());
-        assert!(decode(b"cert 0.5 0 0\nnot a model").is_err());
-        assert!(decode(&[0xFF, 0xFE, 0x00]).is_err());
+        assert!(decode::<TestPayload>(b"nonsense").is_err());
+        assert!(decode::<TestPayload>(b"test abc 0 0\nbody").is_err());
+        assert!(decode::<TestPayload>(&[0xFF, 0xFE, 0x00]).is_err());
     }
 
     #[test]
     fn two_endpoints_exchange_messages() {
-        let a = TcpEndpoint::bind("127.0.0.1:0").unwrap();
-        let b = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+        let a = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        let b = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
         a.connect(&b.local_addr().to_string()).unwrap();
         b.connect(&a.local_addr().to_string()).unwrap();
         assert_eq!(a.peer_count(), 1);
@@ -247,7 +311,7 @@ mod tests {
 
     #[test]
     fn three_node_broadcast_reaches_all() {
-        let nodes: Vec<TcpEndpoint> = (0..3)
+        let nodes: Vec<TcpEndpoint<TestPayload>> = (0..3)
             .map(|_| TcpEndpoint::bind("127.0.0.1:0").unwrap())
             .collect();
         for i in 0..3 {
@@ -268,8 +332,8 @@ mod tests {
 
     #[test]
     fn dead_peer_dropped_without_error() {
-        let a = TcpEndpoint::bind("127.0.0.1:0").unwrap();
-        let b = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+        let a = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        let b = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
         a.connect(&b.local_addr().to_string()).unwrap();
         drop(b);
         // broadcasting into a closed peer must not panic; peer is pruned
@@ -282,9 +346,31 @@ mod tests {
     }
 
     #[test]
+    fn malformed_payload_drops_link_not_worker() {
+        let a = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        // dial the endpoint raw and ship a well-framed but undecodable
+        // payload: the receiver must drop the link and keep serving others
+        let mut raw = TcpStream::connect(a.local_addr()).unwrap();
+        let garbage = b"not a wire payload";
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&MAGIC.to_le_bytes());
+        frame.extend_from_slice(&(garbage.len() as u32).to_le_bytes());
+        frame.extend_from_slice(garbage);
+        raw.write_all(&frame).unwrap();
+        assert!(a.recv_timeout(Duration::from_millis(200)).is_none());
+
+        // a healthy peer still gets through
+        let b = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        b.connect(&a.local_addr().to_string()).unwrap();
+        b.broadcast(&msg(3));
+        let got = a.recv_timeout(Duration::from_secs(5)).expect("delivery");
+        assert_eq!(got.cert.seq, 3);
+    }
+
+    #[test]
     fn ordered_per_link() {
-        let a = TcpEndpoint::bind("127.0.0.1:0").unwrap();
-        let b = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+        let a = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        let b = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
         a.connect(&b.local_addr().to_string()).unwrap();
         for i in 0..20 {
             a.broadcast(&msg(i));

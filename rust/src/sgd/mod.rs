@@ -1,0 +1,637 @@
+//! Certified asynchronous SGD — the second TMSN workload.
+//!
+//! The paper presents TMSN as a *general* framework for asynchronous
+//! parallel learning (§1, §2); boosting is only the demonstration. This
+//! module proves the generality claim on our own stack: a linear model
+//! trained by logistic-loss SGD rides the identical protocol and fabric —
+//! [`crate::tmsn::Tmsn`], [`crate::tmsn::Driver`], [`crate::network`] —
+//! with **zero boosting types anywhere**.
+//!
+//! The workload maps onto the protocol like this:
+//!
+//! * **payload** = the weight vector;
+//! * **certificate** = the model's loss on a *shared held-out set* that
+//!   every worker derives deterministically from the run seed. Any worker
+//!   can re-evaluate an incoming payload, so the bound is sound and the
+//!   "tell me something new" rule applies verbatim: broadcast only when
+//!   your held-out loss strictly undercuts the best certified loss you
+//!   know of (by the gap ε), adopt only strictly-better certificates.
+//! * **local search** = a chunk of SGD steps on the worker's private data
+//!   shard, polling the inbox mid-chunk (the interrupt-the-scan path).
+//!
+//! Resilience is therefore a property of the protocol, not of boosting:
+//! the cluster runner injects laggards and crashes exactly like the
+//! boosting coordinator does, and survivors keep making certified
+//! progress (see `examples/async_sgd.rs` and the tests below).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::data::synth::SynthGen;
+use crate::data::{DataBlock, SynthConfig};
+use crate::metrics::{events, Event, EventKind, EventLog};
+use crate::network::{Endpoint, Fabric, NetConfig};
+use crate::tmsn::{Certified, Driver, Payload, Tmsn};
+
+/// Certificate: logistic loss on the shared held-out set. Strictly lower
+/// is strictly better; the initial (no-certificate) state is `+inf` so the
+/// first finite evaluation always certifies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SgdCert {
+    /// mean logistic loss of the payload's weights on the held-out set
+    pub loss: f64,
+    pub origin: usize,
+    pub seq: u64,
+}
+
+impl Certified for SgdCert {
+    fn initial() -> SgdCert {
+        SgdCert {
+            loss: f64::INFINITY,
+            origin: usize::MAX,
+            seq: 0,
+        }
+    }
+
+    fn better_than(&self, other: &SgdCert) -> bool {
+        self.loss < other.loss
+    }
+
+    fn origin(&self) -> usize {
+        self.origin
+    }
+
+    fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    fn stamp(&mut self, origin: usize, seq: u64) {
+        self.origin = origin;
+        self.seq = seq;
+    }
+
+    fn summary(&self) -> f64 {
+        self.loss
+    }
+}
+
+/// A broadcast SGD message: the linear model's weights plus certificate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SgdPayload {
+    pub w: Vec<f32>,
+    pub cert: SgdCert,
+}
+
+impl SgdPayload {
+    /// Payload for freshly evaluated weights (lineage stamped on commit).
+    pub fn certified(w: Vec<f32>, loss: f64) -> SgdPayload {
+        assert!(loss.is_finite() && loss >= 0.0);
+        SgdPayload {
+            w,
+            cert: SgdCert {
+                loss,
+                origin: usize::MAX,
+                seq: 0,
+            },
+        }
+    }
+}
+
+impl Payload for SgdPayload {
+    type Cert = SgdCert;
+
+    fn initial() -> SgdPayload {
+        SgdPayload {
+            w: Vec::new(), // empty = the zero model in any dimension
+            cert: SgdCert::initial(),
+        }
+    }
+
+    fn cert(&self) -> &SgdCert {
+        &self.cert
+    }
+
+    fn cert_mut(&mut self) -> &mut SgdCert {
+        &mut self.cert
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut out = format!(
+            "sgdcert {} {} {}\nlinear v1 {}\n",
+            self.cert.loss,
+            self.cert.origin,
+            self.cert.seq,
+            self.w.len()
+        );
+        for v in &self.w {
+            out.push_str(&format!("{v}\n"));
+        }
+        out.into_bytes()
+    }
+
+    fn decode(payload: &[u8]) -> Result<SgdPayload, String> {
+        let text = std::str::from_utf8(payload).map_err(|_| "non-utf8 payload")?;
+        let mut lines = text.lines();
+        let cert_line = lines.next().ok_or("empty payload")?;
+        let mut it = cert_line.split_whitespace();
+        if it.next() != Some("sgdcert") {
+            return Err("bad cert line".into());
+        }
+        let loss: f64 = it.next().ok_or("missing loss")?.parse().map_err(|_| "bad loss")?;
+        let origin: usize = it.next().ok_or("missing origin")?.parse().map_err(|_| "bad origin")?;
+        let seq: u64 = it.next().ok_or("missing seq")?.parse().map_err(|_| "bad seq")?;
+        if loss.is_nan() || loss < 0.0 {
+            return Err("loss must be non-negative".into());
+        }
+        let header = lines.next().ok_or("missing model header")?;
+        let mut hp = header.split_whitespace();
+        if hp.next() != Some("linear") || hp.next() != Some("v1") {
+            return Err("bad model header".into());
+        }
+        let n: usize = hp.next().ok_or("missing count")?.parse().map_err(|_| "bad count")?;
+        // never trust a wire-supplied count for allocation: each weight
+        // line needs at least 2 payload bytes, so cap the hint there (the
+        // read loop below still errors on truncation)
+        let mut w = Vec::with_capacity(n.min(payload.len() / 2));
+        for _ in 0..n {
+            let v: f32 = lines
+                .next()
+                .ok_or("truncated weights")?
+                .trim()
+                .parse()
+                .map_err(|_| "bad weight")?;
+            if !v.is_finite() {
+                return Err("weights must be finite".into());
+            }
+            w.push(v);
+        }
+        Ok(SgdPayload {
+            w,
+            cert: SgdCert { loss, origin, seq },
+        })
+    }
+}
+
+/// `w·x` over however many weights the payload carries (the initial empty
+/// payload scores 0 everywhere).
+fn dot(w: &[f32], x: &[f32]) -> f32 {
+    w.iter().zip(x).map(|(a, b)| a * b).sum()
+}
+
+/// Numerically stable `ln(1 + e^z)`.
+fn log1p_exp(z: f64) -> f64 {
+    if z > 0.0 {
+        z + (-z).exp().ln_1p()
+    } else {
+        z.exp().ln_1p()
+    }
+}
+
+/// Mean logistic loss of `w` on `data` (labels in {-1, +1}).
+pub fn logistic_loss(w: &[f32], data: &DataBlock) -> f64 {
+    assert!(!data.is_empty(), "empty evaluation set");
+    let mut total = 0.0f64;
+    for i in 0..data.n {
+        let margin = data.label(i) as f64 * dot(w, data.row(i)) as f64;
+        total += log1p_exp(-margin);
+    }
+    total / data.n as f64
+}
+
+/// Configuration for the async-SGD cluster.
+#[derive(Debug, Clone)]
+pub struct SgdConfig {
+    pub workers: usize,
+    /// training examples in each worker's private shard
+    pub shard_n: usize,
+    /// shared held-out set size (the certificate's evaluation set)
+    pub valid_n: usize,
+    pub lr: f32,
+    /// SGD steps per local search chunk (between certificate evaluations)
+    pub steps_per_chunk: usize,
+    /// inbox poll cadence inside a chunk (the interrupt-the-scan path)
+    pub poll_every: usize,
+    /// max chunks per worker
+    pub chunks: usize,
+    /// ε gap: broadcast only if held-out loss undercuts the certified
+    /// bound by at least this ("tell me something *new*")
+    pub min_gain: f64,
+    pub time_limit: Duration,
+    /// per-worker compute slowdown multipliers (failure injection)
+    pub laggards: Vec<(usize, f64)>,
+    /// per-worker crash times (failure injection)
+    pub crashes: Vec<(usize, Duration)>,
+    pub synth: SynthConfig,
+    pub net: NetConfig,
+    pub seed: u64,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        SgdConfig {
+            workers: 4,
+            shard_n: 4_000,
+            valid_n: 1_000,
+            lr: 0.05,
+            steps_per_chunk: 200,
+            poll_every: 16,
+            chunks: 200,
+            min_gain: 1e-3,
+            time_limit: Duration::from_secs(30),
+            laggards: Vec::new(),
+            crashes: Vec::new(),
+            synth: SynthConfig {
+                f: 16,
+                pos_rate: 0.3,
+                informative: 8,
+                signal: 0.8,
+                flip_rate: 0.02,
+                seed: 0x5D6D,
+            },
+            net: NetConfig::default(),
+            seed: 7,
+        }
+    }
+}
+
+/// Final per-worker state.
+#[derive(Debug)]
+pub struct SgdWorkerResult {
+    pub id: usize,
+    /// certified held-out loss the worker ended with
+    pub loss: f64,
+    /// the certified payload held at shutdown (folded into the outcome's
+    /// `best` in case its broadcast was lost on the observer link)
+    pub payload: SgdPayload,
+    pub steps: u64,
+    pub published: u64,
+    pub accepts: u64,
+    pub rejects: u64,
+    pub crashed: bool,
+}
+
+/// Everything an async-SGD cluster run produces.
+#[derive(Debug)]
+pub struct SgdOutcome {
+    /// best certified payload observed on the wire (or held at shutdown)
+    pub best: SgdPayload,
+    /// the observer's certified-bound trajectory: strictly decreasing by
+    /// construction (only strictly-better certificates are recorded)
+    pub bound_series: Vec<(Duration, f64)>,
+    pub workers: Vec<SgdWorkerResult>,
+    pub events: Vec<Event>,
+    /// (sent, delivered, dropped) fabric counters
+    pub net: (u64, u64, u64),
+    pub elapsed: Duration,
+}
+
+struct SgdWorkerParams {
+    id: usize,
+    cfg: SgdConfig,
+    shard: DataBlock,
+    valid: Arc<DataBlock>,
+    endpoint: Endpoint<SgdPayload>,
+    log: EventLog,
+    stop: Arc<AtomicBool>,
+    laggard: f64,
+    crash_after: Option<Duration>,
+}
+
+/// One asynchronous SGD worker: local chunks of descent on its private
+/// shard, certificate evaluations on the shared held-out set, and the
+/// generic [`Driver`] for every protocol interaction.
+fn run_sgd_worker(params: SgdWorkerParams) -> SgdWorkerResult {
+    let SgdWorkerParams {
+        id,
+        cfg,
+        shard,
+        valid,
+        endpoint,
+        log,
+        stop,
+        laggard,
+        crash_after,
+    } = params;
+    let start = Instant::now();
+    let f = cfg.synth.f;
+    let mut driver = Driver::new(Tmsn::<SgdPayload>::new(id), endpoint, log.clone());
+
+    // local scratch weights: certified state + uncertified local progress
+    let mut w = vec![0.0f32; f];
+    let mut steps = 0u64;
+    let mut published = 0u64;
+    let mut crashed = false;
+    let mut cursor = id * 31; // decorrelate shard walk across workers
+
+    let resync = |w: &mut Vec<f32>, adopted: &SgdPayload| {
+        w.clear();
+        w.extend_from_slice(&adopted.w);
+        w.resize(f, 0.0);
+    };
+
+    'outer: for _chunk in 0..cfg.chunks {
+        // ---- liveness checks -------------------------------------------
+        if stop.load(Ordering::Relaxed) || start.elapsed() >= cfg.time_limit {
+            break;
+        }
+        if let Some(t) = crash_after {
+            if start.elapsed() >= t {
+                log.record(id, EventKind::Crash, None, 0.0);
+                crashed = true;
+                break;
+            }
+        }
+
+        // ---- inbox (receive path of Alg. 1) ----------------------------
+        driver.poll_adopt(&mut |_prev, cur| resync(&mut w, cur));
+
+        // ---- one local search chunk ------------------------------------
+        let chunk_start = Instant::now();
+        let mut interrupted = false;
+        for step in 0..cfg.steps_per_chunk {
+            let i = cursor % shard.n;
+            cursor = cursor.wrapping_add(1);
+            let x = shard.row(i);
+            let y = shard.label(i);
+            // logistic gradient step: w += lr · y · σ(−y·w·x) · x
+            let g = 1.0 / (1.0 + ((y * dot(&w, x)) as f64).exp());
+            let scale = cfg.lr * y * g as f32;
+            for (wj, xj) in w.iter_mut().zip(x) {
+                *wj += scale * xj;
+            }
+            steps += 1;
+            // interrupt-the-scan: a strictly-better certificate abandons
+            // the chunk (local uncertified progress is discarded, exactly
+            // like the boosting scanner abandons a pass)
+            if step % cfg.poll_every == cfg.poll_every - 1 && driver.poll_interrupt() {
+                driver.adopt_pending(&mut |_prev, cur| resync(&mut w, cur));
+                interrupted = true;
+                break;
+            }
+            if stop.load(Ordering::Relaxed) {
+                break 'outer;
+            }
+        }
+        // laggard injection: a slow machine takes proportionally longer
+        // per chunk of the same work
+        if laggard > 1.0 {
+            std::thread::sleep(chunk_start.elapsed().mul_f64(laggard - 1.0));
+        }
+        if interrupted {
+            continue;
+        }
+
+        // ---- certify & broadcast (send path of Alg. 1) ------------------
+        let loss = logistic_loss(&w, &valid);
+        if loss.is_finite() && loss < driver.cert().loss - cfg.min_gain {
+            driver.publish(SgdPayload::certified(w.clone(), loss));
+            published += 1;
+        }
+    }
+
+    log.record(id, EventKind::Finish, None, driver.cert().loss);
+    let state = driver.into_state();
+    SgdWorkerResult {
+        id,
+        loss: state.cert().loss,
+        payload: state.payload().clone(),
+        steps,
+        published,
+        accepts: state.accepts,
+        rejects: state.rejects,
+        crashed,
+    }
+}
+
+/// Run an async-SGD cluster on the simulated fabric: `workers` threads,
+/// one passive observer endpoint, laggard/crash injection — the same
+/// harness shape as the boosting coordinator, over the same protocol.
+pub fn train_sgd_cluster(cfg: &SgdConfig) -> SgdOutcome {
+    assert!(cfg.workers >= 1);
+    assert!(cfg.shard_n >= 1 && cfg.valid_n >= 1);
+    assert!(cfg.steps_per_chunk >= 1 && cfg.poll_every >= 1);
+    let t0 = Instant::now();
+
+    // Private shards + the shared held-out set, all from one deterministic
+    // stream: shards are disjoint, and every worker could re-derive the
+    // held-out set from the seed (what makes the certificate verifiable).
+    let mut gen = SynthGen::new(cfg.synth.clone());
+    let shards: Vec<DataBlock> = (0..cfg.workers).map(|_| gen.next_block(cfg.shard_n)).collect();
+    let valid = Arc::new(gen.next_block(cfg.valid_n));
+
+    let net = NetConfig {
+        seed: cfg.seed ^ 0x56D,
+        ..cfg.net.clone()
+    };
+    let (fabric, mut endpoints) = Fabric::<SgdPayload>::new(cfg.workers + 1, net);
+    let observer = endpoints.pop().expect("observer endpoint");
+    let (log, event_rx) = EventLog::new();
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let mut handles = Vec::new();
+    for (id, (endpoint, shard)) in endpoints.into_iter().zip(shards).enumerate() {
+        let params = SgdWorkerParams {
+            id,
+            cfg: cfg.clone(),
+            shard,
+            valid: Arc::clone(&valid),
+            endpoint,
+            log: log.clone(),
+            stop: Arc::clone(&stop),
+            laggard: cfg
+                .laggards
+                .iter()
+                .find(|(w, _)| *w == id)
+                .map(|(_, k)| *k)
+                .unwrap_or(1.0),
+            crash_after: cfg.crashes.iter().find(|(w, _)| *w == id).map(|(_, t)| *t),
+        };
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("sgd-worker-{id}"))
+                .spawn(move || run_sgd_worker(params))
+                .expect("spawn sgd worker"),
+        );
+    }
+
+    // Passive observation: track the best certificate on the wire.
+    let mut best = SgdPayload::initial();
+    let mut bound_series: Vec<(Duration, f64)> = Vec::new();
+    loop {
+        while let Some(msg) = observer.try_recv() {
+            if msg.cert.better_than(&best.cert) {
+                bound_series.push((t0.elapsed(), msg.cert.loss));
+                best = msg;
+            }
+        }
+        if t0.elapsed() >= cfg.time_limit {
+            stop.store(true, Ordering::Relaxed);
+        }
+        if handles.iter().all(|h| h.is_finished()) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    let workers: Vec<SgdWorkerResult> = handles
+        .into_iter()
+        .map(|h| h.join().expect("sgd worker panicked"))
+        .collect();
+
+    // Fold in anything the observer's last poll missed, plus the workers'
+    // final certified payloads — a lossy net may have dropped the best
+    // broadcast on the observer's own link.
+    while let Some(msg) = observer.try_recv() {
+        if msg.cert.better_than(&best.cert) {
+            bound_series.push((t0.elapsed(), msg.cert.loss));
+            best = msg;
+        }
+    }
+    for w in &workers {
+        if w.payload.cert.better_than(&best.cert) {
+            bound_series.push((t0.elapsed(), w.payload.cert.loss));
+            best = w.payload.clone();
+        }
+    }
+
+    let net_stats = fabric.stats.snapshot();
+    fabric.shutdown();
+    SgdOutcome {
+        best,
+        bound_series,
+        workers,
+        events: events::drain(&event_rx),
+        net: net_stats,
+        elapsed: t0.elapsed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn payload_roundtrip() {
+        let p = SgdPayload {
+            w: vec![0.5, -1.25, 0.0, 3.5e-3],
+            cert: SgdCert {
+                loss: 0.42,
+                origin: 3,
+                seq: 17,
+            },
+        };
+        assert_eq!(SgdPayload::decode(&p.encode()).unwrap(), p);
+        // the initial payload (infinite loss, no weights) round-trips too
+        let init = SgdPayload::initial();
+        assert_eq!(SgdPayload::decode(&init.encode()).unwrap(), init);
+    }
+
+    #[test]
+    fn prop_payload_roundtrip() {
+        prop_check("sgd payload roundtrip", 50, |rng| {
+            let n = rng.below(64) as usize;
+            let p = SgdPayload {
+                w: (0..n).map(|_| rng.gauss() as f32).collect(),
+                cert: SgdCert {
+                    loss: rng.f64() * 2.0,
+                    origin: rng.below(64) as usize,
+                    seq: rng.below(1 << 40),
+                },
+            };
+            let back = SgdPayload::decode(&p.encode()).map_err(|e| e.to_string())?;
+            if back != p {
+                return Err(format!("{back:?} != {p:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(SgdPayload::decode(b"nonsense").is_err());
+        assert!(SgdPayload::decode(b"sgdcert abc 0 0\nlinear v1 0\n").is_err());
+        assert!(SgdPayload::decode(b"sgdcert -1 0 0\nlinear v1 0\n").is_err());
+        assert!(SgdPayload::decode(b"sgdcert NaN 0 0\nlinear v1 0\n").is_err());
+        assert!(SgdPayload::decode(b"sgdcert 0.5 0 0\nlinear v1 2\n1.0\n").is_err());
+        assert!(SgdPayload::decode(b"sgdcert 0.5 0 0\nlinear v1 1\ninf\n").is_err());
+        assert!(SgdPayload::decode(&[0xFF, 0xFE, 0x00]).is_err());
+    }
+
+    #[test]
+    fn logistic_loss_zero_model_is_ln2() {
+        let mut d = DataBlock::empty(2);
+        d.push(&[1.0, 0.0], 1.0);
+        d.push(&[0.0, 1.0], -1.0);
+        let loss = logistic_loss(&[0.0, 0.0], &d);
+        assert!((loss - std::f64::consts::LN_2).abs() < 1e-12);
+        // a model aligned with the labels beats the zero model
+        let good = logistic_loss(&[2.0, -2.0], &d);
+        assert!(good < loss);
+    }
+
+    #[test]
+    fn sgd_cluster_converges_with_laggard_and_crash() {
+        // The acceptance scenario at test scale: ≥4 workers, one laggard,
+        // one crash, generic Driver end to end — the certified bound must
+        // strictly decrease and end below the zero-model loss.
+        let cfg = SgdConfig {
+            workers: 4,
+            shard_n: 1_500,
+            valid_n: 600,
+            steps_per_chunk: 100,
+            // enough chunks that the cluster is still running when the
+            // crash deadline arrives (the deadline is checked per chunk)
+            chunks: 5_000,
+            time_limit: Duration::from_secs(20),
+            laggards: vec![(1, 4.0)],
+            crashes: vec![(2, Duration::from_millis(3))],
+            net: NetConfig {
+                seed: 1,
+                ..NetConfig::default()
+            },
+            ..SgdConfig::default()
+        };
+        let out = train_sgd_cluster(&cfg);
+
+        assert!(out.workers[2].crashed, "crash injection must fire");
+        assert!(
+            out.events.iter().any(|e| e.kind == EventKind::Crash),
+            "crash event recorded"
+        );
+        assert!(!out.bound_series.is_empty(), "no certified improvement");
+        assert!(
+            out.bound_series.windows(2).all(|p| p[1].1 < p[0].1),
+            "certified bound must strictly decrease: {:?}",
+            out.bound_series
+        );
+        let final_loss = out.best.cert.loss;
+        assert!(
+            final_loss < std::f64::consts::LN_2,
+            "certified loss {final_loss} not below the zero model"
+        );
+        // the protocol did its job: someone adopted someone else's model
+        let (sent, delivered, _) = out.net;
+        assert!(sent > 0 && delivered > 0);
+        let survivors_accepts: u64 = out.workers.iter().map(|w| w.accepts).sum();
+        assert!(survivors_accepts > 0, "no adoption happened");
+    }
+
+    #[test]
+    fn sgd_single_worker_needs_no_peers() {
+        let cfg = SgdConfig {
+            workers: 1,
+            shard_n: 1_000,
+            valid_n: 400,
+            steps_per_chunk: 100,
+            chunks: 20,
+            time_limit: Duration::from_secs(10),
+            ..SgdConfig::default()
+        };
+        let out = train_sgd_cluster(&cfg);
+        assert!(out.best.cert.loss < std::f64::consts::LN_2);
+        assert_eq!(out.workers[0].accepts, 0, "no peers, nothing to adopt");
+        assert!(out.workers[0].published > 0);
+    }
+}

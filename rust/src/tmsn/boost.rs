@@ -1,0 +1,442 @@
+//! The boosting instantiation of TMSN — the paper's demonstration
+//! workload (§4.2, Alg. 1).
+//!
+//! The certificate is the exponential-loss *potential bound*: adding a
+//! weak rule with certified advantage γ multiplies the training potential
+//! bound by `sqrt(1 − 4γ²)` (AdaBoost's per-round Z_t with the optimal α).
+//! Certified advantages come from the sequential stopping rule, so the
+//! bound is sound with probability ≥ 1 − δ — exactly the "only assumption
+//! workers make about incoming messages" (§2).
+//!
+//! Everything boosting-specific about the protocol lives here; the state
+//! machine, driver, and transports ([`crate::tmsn`], [`crate::network`],
+//! [`crate::worker::link`]) are payload-generic.
+
+use crate::model::StrongRule;
+use crate::tmsn::{Certified, Payload, Tmsn};
+
+/// The "certificate of quality" attached to a broadcast model (§4.2's
+/// `z_{t+1}`, Alg. 1's `L`): a sound upper bound on the model's
+/// exponential-loss potential. Strictly lower is strictly better.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LossBoundCert {
+    /// sound upper bound on the model's exponential-loss potential
+    pub loss_bound: f64,
+    /// worker that produced this model version
+    pub origin: usize,
+    /// origin-local sequence number (for lineage/diagnostics)
+    pub seq: u64,
+}
+
+impl Certified for LossBoundCert {
+    fn initial() -> LossBoundCert {
+        LossBoundCert {
+            loss_bound: 1.0, // empty model: Z = 1
+            origin: usize::MAX,
+            seq: 0,
+        }
+    }
+
+    fn better_than(&self, other: &LossBoundCert) -> bool {
+        self.loss_bound < other.loss_bound
+    }
+
+    fn origin(&self) -> usize {
+        self.origin
+    }
+
+    fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    fn stamp(&mut self, origin: usize, seq: u64) {
+        self.origin = origin;
+        self.seq = seq;
+    }
+
+    fn summary(&self) -> f64 {
+        self.loss_bound
+    }
+}
+
+/// A broadcast boosting message: the strong rule and its certificate.
+#[derive(Debug, Clone)]
+pub struct BoostPayload {
+    pub model: StrongRule,
+    pub cert: LossBoundCert,
+}
+
+impl BoostPayload {
+    /// Checkpoint-resume payload: a saved `(model, bound)` pair.
+    pub fn resume(model: StrongRule, loss_bound: f64) -> BoostPayload {
+        assert!(loss_bound.is_finite() && loss_bound >= 0.0);
+        BoostPayload {
+            model,
+            cert: LossBoundCert {
+                loss_bound,
+                origin: usize::MAX,
+                seq: 0,
+            },
+        }
+    }
+
+    /// The §4.2 bound update: a weak rule with certified advantage γ was
+    /// appended to this payload's model (the caller already pushed it into
+    /// `model`), multiplying the potential bound by `sqrt(1 − 4γ²)`. The
+    /// lineage is stamped later, by [`Tmsn::local_update`].
+    pub fn improved(&self, model: StrongRule, gamma: f64) -> BoostPayload {
+        assert!(gamma > 0.0 && gamma < 0.5);
+        assert!(
+            model.len() > self.model.len(),
+            "local improvement must extend the model"
+        );
+        let factor = (1.0 - 4.0 * gamma * gamma).sqrt();
+        BoostPayload {
+            model,
+            cert: LossBoundCert {
+                loss_bound: self.cert.loss_bound * factor,
+                origin: self.cert.origin,
+                seq: self.cert.seq,
+            },
+        }
+    }
+}
+
+impl Payload for BoostPayload {
+    type Cert = LossBoundCert;
+
+    fn initial() -> BoostPayload {
+        BoostPayload {
+            model: StrongRule::new(),
+            cert: LossBoundCert::initial(),
+        }
+    }
+
+    fn cert(&self) -> &LossBoundCert {
+        &self.cert
+    }
+
+    fn cert_mut(&mut self) -> &mut LossBoundCert {
+        &mut self.cert
+    }
+
+    /// Wire format: certificate line + model text (the payload inside the
+    /// TCP framing of [`crate::network::tcp`], and the byte count behind
+    /// the fabric's bandwidth model).
+    fn encode(&self) -> Vec<u8> {
+        let header = format!(
+            "cert {} {} {}\n",
+            self.cert.loss_bound, self.cert.origin, self.cert.seq
+        );
+        let body = self.model.to_text();
+        [header.as_bytes(), body.as_bytes()].concat()
+    }
+
+    fn decode(payload: &[u8]) -> Result<BoostPayload, String> {
+        let text = std::str::from_utf8(payload).map_err(|_| "non-utf8 payload")?;
+        let (first, rest) = text.split_once('\n').ok_or("missing cert line")?;
+        let mut it = first.split_whitespace();
+        if it.next() != Some("cert") {
+            return Err("bad cert line".into());
+        }
+        let loss_bound: f64 = it.next().ok_or("missing bound")?.parse().map_err(|_| "bad bound")?;
+        let origin: usize = it.next().ok_or("missing origin")?.parse().map_err(|_| "bad origin")?;
+        let seq: u64 = it.next().ok_or("missing seq")?.parse().map_err(|_| "bad seq")?;
+        if !loss_bound.is_finite() || loss_bound < 0.0 {
+            return Err("bound must be finite and non-negative".into());
+        }
+        let model = StrongRule::from_text(rest)?;
+        Ok(BoostPayload {
+            model,
+            cert: LossBoundCert {
+                loss_bound,
+                origin,
+                seq,
+            },
+        })
+    }
+}
+
+impl Tmsn<BoostPayload> {
+    /// Local improvement: a weak rule with certified advantage γ was added
+    /// (the caller already pushed it into `model`). Updates the bound
+    /// multiplicatively and stamps a new certificate. Returns the message
+    /// to broadcast.
+    pub fn local_improvement(&mut self, model: StrongRule, gamma: f64) -> BoostPayload {
+        let payload = self.payload().improved(model, gamma);
+        self.local_update(payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Stump;
+    use crate::tmsn::Verdict;
+    use crate::util::prop::prop_check;
+
+    fn extend(model: &StrongRule, feature: u32) -> StrongRule {
+        let mut m = model.clone();
+        m.push(Stump::new(feature, 0.0, 1.0), 0.2);
+        m
+    }
+
+    #[test]
+    fn local_improvement_tightens_bound() {
+        let mut s = Tmsn::<BoostPayload>::new(0);
+        let msg = s.local_improvement(extend(&s.payload().model.clone(), 1), 0.1);
+        assert!(msg.cert.loss_bound < 1.0);
+        assert_eq!(msg.cert.origin, 0);
+        assert_eq!(msg.cert.seq, 1);
+        let b1 = msg.cert.loss_bound;
+        let msg2 = s.local_improvement(extend(&s.payload().model.clone(), 2), 0.1);
+        assert!(msg2.cert.loss_bound < b1);
+        assert_eq!(msg2.cert.seq, 2);
+    }
+
+    #[test]
+    fn bound_factor_matches_adaboost_z() {
+        let mut s = Tmsn::<BoostPayload>::new(0);
+        let g = 0.2f64;
+        let msg = s.local_improvement(extend(&StrongRule::new(), 0), g);
+        assert!((msg.cert.loss_bound - (1.0 - 4.0 * g * g).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accept_strictly_better_only() {
+        let mut a = Tmsn::<BoostPayload>::new(0);
+        let mut b = Tmsn::<BoostPayload>::new(1);
+        let msg = a.local_improvement(extend(&StrongRule::new(), 0), 0.1);
+
+        // b has the empty model (bound 1.0) → accepts
+        assert_eq!(b.on_message(msg.clone()), Verdict::Accept);
+        assert_eq!(b.payload().model, a.payload().model);
+        assert_eq!(b.cert(), a.cert());
+
+        // replaying the same message is now a reject (not strictly better)
+        assert_eq!(b.on_message(msg), Verdict::Reject);
+        assert_eq!(b.accepts, 1);
+        assert_eq!(b.rejects, 1);
+    }
+
+    /// A message carrying an arbitrary certificate (bypasses the
+    /// `local_improvement` bound arithmetic to probe the verdict rule
+    /// directly).
+    fn msg_with_bound(loss_bound: f64, origin: usize, seq: u64) -> BoostPayload {
+        BoostPayload {
+            model: extend(&StrongRule::new(), origin as u32),
+            cert: LossBoundCert {
+                loss_bound,
+                origin,
+                seq,
+            },
+        }
+    }
+
+    #[test]
+    fn verdict_accept_iff_strictly_better() {
+        // Alg. 1 receive path: accept iff the incoming bound is *strictly*
+        // lower — strictly better ⇒ Accept; exact tie ⇒ Reject; worse ⇒
+        // Reject. Ties must not churn state (no re-adoption loops).
+        let mut s = Tmsn::resume(0, BoostPayload::resume(extend(&StrongRule::new(), 9), 0.5));
+
+        assert_eq!(s.on_message(msg_with_bound(0.49, 1, 1)), Verdict::Accept);
+        assert!((s.cert().loss_bound - 0.49).abs() < 1e-15);
+
+        let model_before = s.payload().model.clone();
+        assert_eq!(s.on_message(msg_with_bound(0.49, 2, 1)), Verdict::Reject); // tie
+        assert_eq!(s.on_message(msg_with_bound(0.50, 2, 2)), Verdict::Reject); // worse
+        assert_eq!(s.on_message(msg_with_bound(9.99, 2, 3)), Verdict::Reject); // much worse
+        assert_eq!(s.payload().model, model_before, "rejects must not mutate the model");
+        assert!((s.cert().loss_bound - 0.49).abs() < 1e-15);
+        assert_eq!(s.accepts, 1);
+        assert_eq!(s.rejects, 3);
+    }
+
+    #[test]
+    fn resume_stamps_worker_lineage() {
+        let s = Tmsn::resume(4, BoostPayload::resume(extend(&StrongRule::new(), 1), 0.7));
+        assert_eq!(s.cert().origin, 4);
+        assert_eq!(s.cert().seq, 0);
+        assert!((s.cert().loss_bound - 0.7).abs() < 1e-15);
+    }
+
+    #[test]
+    fn bound_monotone_across_adopted_messages() {
+        // The certificate bound never increases, no matter what mix of
+        // better/worse/stale messages arrives in what order — the protocol's
+        // progress invariant, checked on the accept path specifically.
+        let mut s = Tmsn::<BoostPayload>::new(0);
+        let bounds = [0.9, 0.95, 0.6, 0.6, 0.61, 0.3, 0.9, 0.05, 0.049, 0.5];
+        let mut prev = s.cert().loss_bound;
+        for (seq, &b) in bounds.iter().enumerate() {
+            let verdict = s.on_message(msg_with_bound(b, 1, seq as u64));
+            assert_eq!(verdict == Verdict::Accept, b < prev, "bound {b} vs {prev}");
+            assert!(
+                s.cert().loss_bound <= prev,
+                "adopted bound increased: {prev} -> {}",
+                s.cert().loss_bound
+            );
+            prev = s.cert().loss_bound;
+        }
+        assert!((prev - 0.049).abs() < 1e-15);
+    }
+
+    #[test]
+    fn stale_message_rejected() {
+        let mut a = Tmsn::<BoostPayload>::new(0);
+        let mut b = Tmsn::<BoostPayload>::new(1);
+        let old = a.local_improvement(extend(&StrongRule::new(), 0), 0.05);
+        let new = a.local_improvement(extend(&a.payload().model.clone(), 1), 0.05);
+        assert_eq!(b.on_message(new), Verdict::Accept);
+        assert_eq!(b.on_message(old), Verdict::Reject);
+    }
+
+    #[test]
+    fn wire_bytes_grows_with_model() {
+        let mut s = Tmsn::<BoostPayload>::new(0);
+        let m1 = s.local_improvement(extend(&StrongRule::new(), 0), 0.1);
+        let m2 = s.local_improvement(extend(&s.payload().model.clone(), 1), 0.1);
+        assert!(m2.wire_bytes() > m1.wire_bytes());
+    }
+
+    #[test]
+    fn wire_bytes_is_the_real_encoded_length() {
+        // One wire-size model: the fabric's bandwidth delays are driven by
+        // the same byte count the TCP transport actually ships.
+        let mut s = Tmsn::<BoostPayload>::new(0);
+        let msg = s.local_improvement(extend(&StrongRule::new(), 3), 0.1);
+        assert_eq!(msg.wire_bytes(), msg.encode().len());
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut model = StrongRule::new();
+        model.push(Stump::new(3, 0.5, 1.0), 0.25);
+        let m = BoostPayload {
+            model,
+            cert: LossBoundCert {
+                loss_bound: 0.9,
+                origin: 7,
+                seq: 5,
+            },
+        };
+        let back = BoostPayload::decode(&m.encode()).unwrap();
+        assert_eq!(back.model, m.model);
+        assert_eq!(back.cert, m.cert);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(BoostPayload::decode(b"nonsense").is_err());
+        assert!(BoostPayload::decode(b"cert abc 0 0\nstrongrule v1 0\n").is_err());
+        assert!(BoostPayload::decode(b"cert 0.5 0 0\nnot a model").is_err());
+        assert!(BoostPayload::decode(b"cert -0.5 0 0\nstrongrule v1 0\n").is_err());
+        assert!(BoostPayload::decode(b"cert inf 0 0\nstrongrule v1 0\n").is_err());
+        assert!(BoostPayload::decode(&[0xFF, 0xFE, 0x00]).is_err());
+    }
+
+    #[test]
+    fn prop_payload_roundtrip() {
+        prop_check("boost payload roundtrip", 50, |rng| {
+            let mut model = StrongRule::new();
+            for _ in 0..rng.below(20) {
+                model.push(
+                    Stump::new(
+                        rng.below(1000) as u32,
+                        rng.gauss() as f32,
+                        if rng.bernoulli(0.5) { 1.0 } else { -1.0 },
+                    ),
+                    0.01 + rng.f64() as f32,
+                );
+            }
+            let p = BoostPayload {
+                model,
+                cert: LossBoundCert {
+                    loss_bound: rng.f64(),
+                    origin: rng.below(64) as usize,
+                    seq: rng.below(1 << 40),
+                },
+            };
+            let back = BoostPayload::decode(&p.encode()).map_err(|e| e.to_string())?;
+            if back.model != p.model {
+                return Err("model mismatch".into());
+            }
+            if back.cert != p.cert {
+                return Err(format!("cert mismatch: {:?} vs {:?}", back.cert, p.cert));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_bound_monotone_along_accept_chain() {
+        // Any interleaving of local improvements and message exchanges
+        // keeps every worker's bound non-increasing — the protocol's
+        // progress invariant.
+        prop_check("bounds monotone under TMSN", 50, |rng| {
+            let n = 4;
+            let mut workers: Vec<Tmsn<BoostPayload>> = (0..n).map(Tmsn::new).collect();
+            let mut bounds: Vec<f64> = vec![1.0; n];
+            let mut inflight: Vec<BoostPayload> = Vec::new();
+            for step in 0..60 {
+                let w = rng.below(n as u64) as usize;
+                if rng.bernoulli(0.5) || inflight.is_empty() {
+                    // local improvement with random γ
+                    let g = 0.05 + rng.f64() * 0.3;
+                    let model = extend(&workers[w].payload().model.clone(), step as u32);
+                    let msg = workers[w].local_improvement(model, g);
+                    inflight.push(msg);
+                } else {
+                    // deliver a random in-flight message (arbitrary order!)
+                    let k = rng.below(inflight.len() as u64) as usize;
+                    let msg = inflight[k].clone();
+                    workers[w].on_message(msg);
+                }
+                let b = workers[w].cert().loss_bound;
+                if b > bounds[w] + 1e-12 {
+                    return Err(format!("worker {w} bound increased {} -> {b}", bounds[w]));
+                }
+                bounds[w] = b;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_convergence_after_full_delivery() {
+        // Once every broadcast message is delivered to every worker, all
+        // workers hold the minimum bound (the §2 convergence claim).
+        prop_check("all workers converge to best bound", 30, |rng| {
+            let n = 5;
+            let mut workers: Vec<Tmsn<BoostPayload>> = (0..n).map(Tmsn::new).collect();
+            let mut all_msgs: Vec<BoostPayload> = Vec::new();
+            for step in 0..20 {
+                let w = rng.below(n as u64) as usize;
+                let g = 0.05 + rng.f64() * 0.3;
+                let model = extend(&workers[w].payload().model.clone(), step as u32);
+                all_msgs.push(workers[w].local_improvement(model, g));
+            }
+            let best = all_msgs
+                .iter()
+                .map(|m| m.cert.loss_bound)
+                .fold(f64::INFINITY, f64::min);
+            // deliver everything to everyone, in a random order per worker
+            for w in workers.iter_mut() {
+                let mut order: Vec<usize> = (0..all_msgs.len()).collect();
+                rng.shuffle(&mut order);
+                for &k in &order {
+                    w.on_message(all_msgs[k].clone());
+                }
+                if (w.cert().loss_bound - best).abs() > 1e-12 && w.cert().loss_bound > best {
+                    return Err(format!(
+                        "worker {} stuck at {} > best {best}",
+                        w.worker_id(),
+                        w.cert().loss_bound
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,74 +1,121 @@
-//! The TMSN protocol (§2, §4.2, Alg. 1) — the paper's core contribution.
+//! The TMSN protocol (§2, §4.2, Alg. 1) — the paper's core contribution,
+//! as a **payload-generic** protocol layer.
 //!
-//! A worker maintains `(H, L)`: its current model and a sound upper bound
-//! on the model's loss. When a local search improves the bound by the gap
-//! ε, the worker broadcasts the new pair; when a worker *receives* a pair
-//! whose bound beats its own, it interrupts its search and adopts it —
-//! otherwise it discards the message. That is the whole protocol: no head
-//! node, no synchronization, no acknowledgements, and any worker can fail
-//! without affecting the others beyond losing its contributions.
+//! A worker maintains a payload `(H, L)`: its current model and a sound
+//! certificate of the model's quality. When a local search improves the
+//! certificate, the worker broadcasts the new payload; when a worker
+//! *receives* a payload whose certificate beats its own, it interrupts its
+//! search and adopts it — otherwise it discards the message. That is the
+//! whole protocol: no head node, no synchronization, no acknowledgements,
+//! and any worker can fail without affecting the others beyond losing its
+//! contributions.
 //!
-//! For boosting the bound is the exponential-loss *potential certificate*:
-//! adding a weak rule with certified advantage γ multiplies the training
-//! potential bound by `sqrt(1 − 4γ²)` (AdaBoost's per-round Z_t with the
-//! optimal α). Certified advantages come from the sequential stopping rule,
-//! so the bound is sound with probability ≥ 1 − δ — exactly the "only
-//! assumption workers make about incoming messages" (§2).
+//! The paper demonstrates TMSN with boosted trees, but §1/§2 present it as
+//! a *general* framework for asynchronous parallel learning. This module
+//! is that framework, factored into three pieces:
+//!
+//! * [`Certified`] — a certificate with a strict partial order
+//!   (`better_than`): "the only assumption workers make about incoming
+//!   messages" (§2) is that a certificate soundly bounds model quality and
+//!   that strictly-better certificates are worth adopting.
+//! * [`Payload`] — a broadcastable `(model, certificate)` pair with a wire
+//!   encoding; [`Payload::wire_bytes`] is the *real* encoded length, so the
+//!   simulated fabric's bandwidth model and the TCP transport agree.
+//! * [`Tmsn<P>`] — the per-worker state machine: `local_update` (send
+//!   path) and `on_message` (receive path, accept iff *strictly* better).
+//!   The certificate is monotone non-worsening under any interleaving.
+//!
+//! [`Driver<P, L>`] packages the poll/adopt/broadcast loop every workload
+//! repeats (drain-the-inbox, interrupt-the-scan, publish-and-log) over any
+//! [`Link<P>`] transport.
+//!
+//! Instantiations:
+//! * [`boost`] — the paper's boosting workload: certificate = exponential-
+//!   loss potential bound, update factor `sqrt(1 − 4γ²)` (AdaBoost's Z_t).
+//! * [`crate::sgd`] — certified asynchronous SGD on a linear model
+//!   (certificate = held-out loss), proving the protocol carries
+//!   non-boosting learners unchanged.
 
-use crate::model::StrongRule;
+pub mod boost;
 
-/// The "certificate of quality" attached to a broadcast model (§4.2's
-/// `z_{t+1}`, Alg. 1's `L`).
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct Certificate {
-    /// sound upper bound on the model's exponential-loss potential
-    pub loss_bound: f64,
-    /// worker that produced this model version
-    pub origin: usize,
-    /// origin-local sequence number (for lineage/diagnostics)
-    pub seq: u64,
+pub use boost::{BoostPayload, LossBoundCert};
+
+use crate::metrics::{EventKind, EventLog};
+
+/// A certificate of model quality with a strict partial order.
+///
+/// `better_than` must be a strict partial order (irreflexive, transitive):
+/// TMSN's verdict rule adopts a payload iff its certificate is strictly
+/// better, so ties never churn state and re-broadcast loops are impossible.
+/// `origin`/`seq` are lineage metadata (who produced the certified model,
+/// and its origin-local version) used for logging and diagnostics.
+pub trait Certified: Clone + Send + std::fmt::Debug + 'static {
+    /// Certificate of the initial (empty) model.
+    fn initial() -> Self;
+    /// Strict partial order: does `self` certify a strictly better model?
+    fn better_than(&self, other: &Self) -> bool;
+    /// Worker that produced this certificate.
+    fn origin(&self) -> usize;
+    /// Origin-local sequence number (lineage/diagnostics).
+    fn seq(&self) -> u64;
+    /// Stamp lineage; called by [`Tmsn`] when a payload is committed.
+    fn stamp(&mut self, origin: usize, seq: u64);
+    /// Scalar rendering for event logs and timelines (for both built-in
+    /// workloads: lower = better).
+    fn summary(&self) -> f64;
 }
 
-impl Certificate {
-    pub fn initial() -> Certificate {
-        Certificate {
-            loss_bound: 1.0, // empty model: Z = 1
-            origin: usize::MAX,
-            seq: 0,
-        }
+/// A broadcastable `(model, certificate)` pair.
+pub trait Payload: Clone + Send + 'static {
+    type Cert: Certified;
+
+    /// The initial (empty-model) payload every worker starts from.
+    fn initial() -> Self;
+    fn cert(&self) -> &Self::Cert;
+    fn cert_mut(&mut self) -> &mut Self::Cert;
+    /// Wire encoding (certificate + model; transport framing excluded).
+    fn encode(&self) -> Vec<u8>;
+    /// Inverse of [`Payload::encode`]. Must reject malformed input — a bad
+    /// peer must never be able to crash a worker.
+    fn decode(payload: &[u8]) -> Result<Self, String>;
+    /// Serialized size, used by the fabric's bandwidth model. Defaults to
+    /// the real encoded length so simulated serialization delays match
+    /// what the TCP transport actually ships.
+    fn wire_bytes(&self) -> usize {
+        self.encode().len()
     }
 }
 
-/// A broadcast message: the model and its certificate.
-#[derive(Debug, Clone)]
-pub struct ModelMessage {
-    pub model: StrongRule,
-    pub cert: Certificate,
+/// The only two operations TMSN needs from a network.
+pub trait Link<P: Payload>: Send {
+    /// Fire-and-forget broadcast to all peers.
+    fn send(&self, msg: P);
+    /// Non-blocking poll for the next delivered message.
+    fn poll(&self) -> Option<P>;
 }
 
-impl ModelMessage {
-    /// Serialized size estimate, used for the fabric's bandwidth model
-    /// (stump = feature u32 + threshold f32 + sign i8 + alpha f32 ≈ 13 B,
-    /// plus certificate/header overhead).
-    pub fn wire_bytes(&self) -> usize {
-        32 + 13 * self.model.len()
+impl<P: Payload> Link<P> for Box<dyn Link<P>> {
+    fn send(&self, msg: P) {
+        (**self).send(msg)
+    }
+    fn poll(&self) -> Option<P> {
+        (**self).poll()
     }
 }
 
 /// Decision on an incoming message.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Verdict {
-    /// strictly better bound — interrupt the scanner and adopt
+    /// strictly better certificate — interrupt the search and adopt
     Accept,
     /// not better — discard
     Reject,
 }
 
-/// Per-worker TMSN state machine.
+/// Per-worker TMSN state machine, generic over the payload.
 #[derive(Debug, Clone)]
-pub struct TmsnState {
-    pub model: StrongRule,
-    pub cert: Certificate,
+pub struct Tmsn<P: Payload> {
+    payload: P,
     worker_id: usize,
     next_seq: u64,
     /// accepted-message counter (diagnostics)
@@ -76,11 +123,10 @@ pub struct TmsnState {
     pub rejects: u64,
 }
 
-impl TmsnState {
-    pub fn new(worker_id: usize) -> TmsnState {
-        TmsnState {
-            model: StrongRule::new(),
-            cert: Certificate::initial(),
+impl<P: Payload> Tmsn<P> {
+    pub fn new(worker_id: usize) -> Tmsn<P> {
+        Tmsn {
+            payload: P::initial(),
             worker_id,
             next_seq: 1,
             accepts: 0,
@@ -88,17 +134,12 @@ impl TmsnState {
         }
     }
 
-    /// Resume from a checkpointed `(model, bound)` pair: the worker starts
-    /// as if it had just accepted that model over the broadcast channel.
-    pub fn resume(worker_id: usize, model: StrongRule, loss_bound: f64) -> TmsnState {
-        assert!(loss_bound.is_finite() && loss_bound >= 0.0);
-        TmsnState {
-            model,
-            cert: Certificate {
-                loss_bound,
-                origin: worker_id,
-                seq: 0,
-            },
+    /// Resume from a checkpointed payload: the worker starts as if it had
+    /// just accepted that payload over the broadcast channel.
+    pub fn resume(worker_id: usize, mut payload: P) -> Tmsn<P> {
+        payload.cert_mut().stamp(worker_id, 0);
+        Tmsn {
+            payload,
             worker_id,
             next_seq: 1,
             accepts: 0,
@@ -106,36 +147,34 @@ impl TmsnState {
         }
     }
 
-    /// Local improvement: a weak rule with certified advantage γ was added
-    /// (the caller already pushed it into `model`). Updates the bound
-    /// multiplicatively and stamps a new certificate. Returns the message
-    /// to broadcast.
-    pub fn local_improvement(&mut self, model: StrongRule, gamma: f64) -> ModelMessage {
-        assert!(gamma > 0.0 && gamma < 0.5);
+    pub fn payload(&self) -> &P {
+        &self.payload
+    }
+
+    pub fn cert(&self) -> &P::Cert {
+        self.payload.cert()
+    }
+
+    /// Local improvement (Alg. 1 send path): commit a payload whose
+    /// certificate strictly beats the current one, stamp its lineage, and
+    /// return the message to broadcast. Panics if the certificate does not
+    /// strictly improve — the protocol's monotonicity invariant.
+    pub fn local_update(&mut self, mut payload: P) -> P {
         assert!(
-            model.len() > self.model.len(),
-            "local improvement must extend the model"
+            payload.cert().better_than(self.payload.cert()),
+            "local update must strictly improve the certificate"
         );
-        let factor = (1.0 - 4.0 * gamma * gamma).sqrt();
-        self.model = model;
-        self.cert = Certificate {
-            loss_bound: self.cert.loss_bound * factor,
-            origin: self.worker_id,
-            seq: self.next_seq,
-        };
+        payload.cert_mut().stamp(self.worker_id, self.next_seq);
         self.next_seq += 1;
-        ModelMessage {
-            model: self.model.clone(),
-            cert: self.cert,
-        }
+        self.payload = payload.clone();
+        payload
     }
 
-    /// Handle an incoming `(H, L)` message (Alg. 1's receive path):
-    /// accept iff the incoming bound is *strictly* lower than ours.
-    pub fn on_message(&mut self, msg: ModelMessage) -> Verdict {
-        if msg.cert.loss_bound < self.cert.loss_bound {
-            self.model = msg.model;
-            self.cert = msg.cert;
+    /// Handle an incoming payload (Alg. 1's receive path): accept iff the
+    /// incoming certificate is *strictly* better than ours.
+    pub fn on_message(&mut self, msg: P) -> Verdict {
+        if msg.cert().better_than(self.payload.cert()) {
+            self.payload = msg;
             self.accepts += 1;
             Verdict::Accept
         } else {
@@ -149,197 +188,411 @@ impl TmsnState {
     }
 }
 
+/// The poll/adopt/broadcast loop shared by every TMSN workload.
+///
+/// Owns the state machine and its transport attachment, and records the
+/// protocol's event vocabulary (receive/accept/reject/improve/broadcast)
+/// on the shared [`EventLog`] clock. Two receive paths mirror Alg. 1:
+///
+/// * [`Driver::poll_adopt`] — drain the whole inbox between work units,
+///   adopting every strictly-better payload;
+/// * [`Driver::poll_interrupt`] + [`Driver::adopt_pending`] — the
+///   interrupt-the-scan path: cheap single poll from inside a work unit's
+///   inner loop; a strictly-better arrival is parked as pending (so the
+///   caller can abandon the scan first) and adopted on the way out.
+///   Worse arrivals are logged but not offered to the state machine, so
+///   the verdict counters only reflect messages actually considered.
+pub struct Driver<P: Payload, L: Link<P>> {
+    tmsn: Tmsn<P>,
+    link: L,
+    log: EventLog,
+    pending: Option<P>,
+}
+
+impl<P: Payload, L: Link<P>> Driver<P, L> {
+    pub fn new(tmsn: Tmsn<P>, link: L, log: EventLog) -> Driver<P, L> {
+        Driver {
+            tmsn,
+            link,
+            log,
+            pending: None,
+        }
+    }
+
+    pub fn state(&self) -> &Tmsn<P> {
+        &self.tmsn
+    }
+
+    pub fn payload(&self) -> &P {
+        self.tmsn.payload()
+    }
+
+    pub fn cert(&self) -> &P::Cert {
+        self.tmsn.cert()
+    }
+
+    pub fn worker_id(&self) -> usize {
+        self.tmsn.worker_id()
+    }
+
+    /// Tear down, returning the final state machine.
+    pub fn into_state(self) -> Tmsn<P> {
+        self.tmsn
+    }
+
+    /// Offer one message to the state machine; on adoption, call
+    /// `on_adopt(replaced, adopted)` so the caller can repair any state
+    /// derived from the old payload (e.g. cached sample weights).
+    fn offer(&mut self, msg: P, on_adopt: &mut dyn FnMut(&P, &P)) -> Verdict {
+        let version = Some((msg.cert().origin(), msg.cert().seq()));
+        let value = msg.cert().summary();
+        let replaced = if msg.cert().better_than(self.tmsn.cert()) {
+            Some(self.tmsn.payload().clone())
+        } else {
+            None
+        };
+        match self.tmsn.on_message(msg) {
+            Verdict::Accept => {
+                self.log
+                    .record(self.tmsn.worker_id(), EventKind::Accept, version, value);
+                on_adopt(&replaced.expect("verdict rule is deterministic"), self.tmsn.payload());
+                Verdict::Accept
+            }
+            Verdict::Reject => {
+                self.log
+                    .record(self.tmsn.worker_id(), EventKind::Reject, version, value);
+                Verdict::Reject
+            }
+        }
+    }
+
+    /// Drain every queued message, adopting each strictly-better payload.
+    /// Returns the number adopted.
+    pub fn poll_adopt(&mut self, on_adopt: &mut dyn FnMut(&P, &P)) -> usize {
+        let mut adopted = 0;
+        while let Some(msg) = self.link.poll() {
+            if self.offer(msg, on_adopt) == Verdict::Accept {
+                adopted += 1;
+            }
+        }
+        adopted
+    }
+
+    /// Single poll for the interrupt-the-scan path. If a strictly-better
+    /// payload arrived it is parked as pending and `true` is returned: the
+    /// caller should abort its work unit and call [`Driver::adopt_pending`].
+    /// Worse arrivals are logged (`Receive` + `Reject`) and dropped.
+    pub fn poll_interrupt(&mut self) -> bool {
+        if let Some(msg) = self.link.poll() {
+            let version = Some((msg.cert().origin(), msg.cert().seq()));
+            let value = msg.cert().summary();
+            self.log
+                .record(self.tmsn.worker_id(), EventKind::Receive, version, value);
+            if msg.cert().better_than(self.tmsn.cert()) {
+                self.pending = Some(msg);
+                return true;
+            }
+            self.log
+                .record(self.tmsn.worker_id(), EventKind::Reject, version, value);
+        }
+        false
+    }
+
+    /// Adopt the payload parked by [`Driver::poll_interrupt`], if any.
+    pub fn adopt_pending(&mut self, on_adopt: &mut dyn FnMut(&P, &P)) -> bool {
+        match self.pending.take() {
+            Some(msg) => {
+                self.offer(msg, on_adopt);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Commit a local improvement and broadcast it (Alg. 1 send path).
+    /// Returns the committed sequence number.
+    pub fn publish(&mut self, payload: P) -> u64 {
+        let msg = self.tmsn.local_update(payload);
+        let id = self.tmsn.worker_id();
+        let seq = msg.cert().seq();
+        let value = msg.cert().summary();
+        self.log
+            .record(id, EventKind::LocalImprovement, Some((id, seq)), value);
+        self.link.send(msg);
+        self.log.record(id, EventKind::Broadcast, Some((id, seq)), value);
+        seq
+    }
+}
+
+/// Minimal workload-agnostic payload shared by the protocol and transport
+/// unit tests: a string body plus a lower-is-better scalar certificate.
+/// Exists purely to show those layers need nothing from any model family.
+#[cfg(test)]
+pub(crate) mod testpay {
+    use super::{Certified, Payload};
+
+    #[derive(Debug, Clone, PartialEq)]
+    pub struct TestCert {
+        pub score: f64,
+        pub origin: usize,
+        pub seq: u64,
+    }
+
+    impl Certified for TestCert {
+        fn initial() -> TestCert {
+            TestCert {
+                score: f64::INFINITY,
+                origin: usize::MAX,
+                seq: 0,
+            }
+        }
+        fn better_than(&self, other: &TestCert) -> bool {
+            self.score < other.score
+        }
+        fn origin(&self) -> usize {
+            self.origin
+        }
+        fn seq(&self) -> u64 {
+            self.seq
+        }
+        fn stamp(&mut self, origin: usize, seq: u64) {
+            self.origin = origin;
+            self.seq = seq;
+        }
+        fn summary(&self) -> f64 {
+            self.score
+        }
+    }
+
+    #[derive(Debug, Clone, PartialEq)]
+    pub struct TestPayload {
+        pub body: String,
+        pub cert: TestCert,
+    }
+
+    impl TestPayload {
+        pub fn scored(body: &str, score: f64) -> TestPayload {
+            TestPayload {
+                body: body.to_string(),
+                cert: TestCert {
+                    score,
+                    origin: usize::MAX,
+                    seq: 0,
+                },
+            }
+        }
+    }
+
+    impl Payload for TestPayload {
+        type Cert = TestCert;
+        fn initial() -> TestPayload {
+            TestPayload {
+                body: String::new(),
+                cert: TestCert::initial(),
+            }
+        }
+        fn cert(&self) -> &TestCert {
+            &self.cert
+        }
+        fn cert_mut(&mut self) -> &mut TestCert {
+            &mut self.cert
+        }
+        fn encode(&self) -> Vec<u8> {
+            format!(
+                "test {} {} {}\n{}",
+                self.cert.score, self.cert.origin, self.cert.seq, self.body
+            )
+            .into_bytes()
+        }
+        fn decode(payload: &[u8]) -> Result<TestPayload, String> {
+            let text = std::str::from_utf8(payload).map_err(|_| "non-utf8")?;
+            let (first, body) = text.split_once('\n').ok_or("missing cert line")?;
+            let mut it = first.split_whitespace();
+            if it.next() != Some("test") {
+                return Err("bad cert line".into());
+            }
+            let score: f64 = it.next().ok_or("missing score")?.parse().map_err(|_| "bad score")?;
+            let origin: usize =
+                it.next().ok_or("missing origin")?.parse().map_err(|_| "bad origin")?;
+            let seq: u64 = it.next().ok_or("missing seq")?.parse().map_err(|_| "bad seq")?;
+            Ok(TestPayload {
+                body: body.to_string(),
+                cert: TestCert { score, origin, seq },
+            })
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
+    use super::testpay::{TestCert, TestPayload};
     use super::*;
-    use crate::model::Stump;
+    use crate::network::{Fabric, NetConfig};
     use crate::util::prop::prop_check;
+    use std::time::Duration;
 
-    fn extend(model: &StrongRule, feature: u32) -> StrongRule {
-        let mut m = model.clone();
-        m.push(Stump::new(feature, 0.0, 1.0), 0.2);
-        m
+    fn log() -> EventLog {
+        EventLog::new().0
     }
 
     #[test]
-    fn local_improvement_tightens_bound() {
-        let mut s = TmsnState::new(0);
-        let msg = s.local_improvement(extend(&s.model.clone(), 1), 0.1);
-        assert!(msg.cert.loss_bound < 1.0);
-        assert_eq!(msg.cert.origin, 0);
-        assert_eq!(msg.cert.seq, 1);
-        let b1 = msg.cert.loss_bound;
-        let msg2 = s.local_improvement(extend(&s.model.clone(), 2), 0.1);
-        assert!(msg2.cert.loss_bound < b1);
+    fn verdict_accept_iff_strictly_better_generic() {
+        let mut s = Tmsn::<TestPayload>::resume(0, TestPayload::scored("mine", 0.5));
+        assert_eq!(s.on_message(TestPayload::scored("better", 0.49)), Verdict::Accept);
+        assert_eq!(s.payload().body, "better");
+        let before = s.payload().clone();
+        assert_eq!(s.on_message(TestPayload::scored("tie", 0.49)), Verdict::Reject);
+        assert_eq!(s.on_message(TestPayload::scored("worse", 0.8)), Verdict::Reject);
+        assert_eq!(*s.payload(), before, "rejects must not mutate state");
+        assert_eq!((s.accepts, s.rejects), (1, 2));
+    }
+
+    #[test]
+    fn local_update_stamps_lineage_and_requires_improvement() {
+        let mut s = Tmsn::<TestPayload>::new(3);
+        let msg = s.local_update(TestPayload::scored("a", 10.0));
+        assert_eq!((msg.cert.origin, msg.cert.seq), (3, 1));
+        let msg2 = s.local_update(TestPayload::scored("b", 9.0));
         assert_eq!(msg2.cert.seq, 2);
+        assert_eq!(s.cert().score, 9.0);
     }
 
     #[test]
-    fn bound_factor_matches_adaboost_z() {
-        let mut s = TmsnState::new(0);
-        let g = 0.2f64;
-        let msg = s.local_improvement(extend(&StrongRule::new(), 0), g);
-        assert!((msg.cert.loss_bound - (1.0 - 4.0 * g * g).sqrt()).abs() < 1e-12);
+    #[should_panic(expected = "strictly improve")]
+    fn local_update_rejects_non_improvement() {
+        let mut s = Tmsn::<TestPayload>::new(0);
+        s.local_update(TestPayload::scored("a", 5.0));
+        s.local_update(TestPayload::scored("b", 5.0)); // tie: not strictly better
     }
 
     #[test]
-    fn accept_strictly_better_only() {
-        let mut a = TmsnState::new(0);
-        let mut b = TmsnState::new(1);
-        let msg = a.local_improvement(extend(&StrongRule::new(), 0), 0.1);
-
-        // b has the empty model (bound 1.0) → accepts
-        assert_eq!(b.on_message(msg.clone()), Verdict::Accept);
-        assert_eq!(b.model, a.model);
-        assert_eq!(b.cert, a.cert);
-
-        // replaying the same message is now a reject (not strictly better)
-        assert_eq!(b.on_message(msg), Verdict::Reject);
-        assert_eq!(b.accepts, 1);
-        assert_eq!(b.rejects, 1);
-    }
-
-    /// A message carrying an arbitrary certificate (bypasses the
-    /// `local_improvement` bound arithmetic to probe the verdict rule
-    /// directly).
-    fn msg_with_bound(loss_bound: f64, origin: usize, seq: u64) -> ModelMessage {
-        ModelMessage {
-            model: extend(&StrongRule::new(), origin as u32),
-            cert: Certificate {
-                loss_bound,
-                origin,
-                seq,
-            },
-        }
-    }
-
-    #[test]
-    fn verdict_accept_iff_strictly_better() {
-        // Alg. 1 receive path: accept iff the incoming bound is *strictly*
-        // lower — strictly better ⇒ Accept; exact tie ⇒ Reject; worse ⇒
-        // Reject. Ties must not churn state (no re-adoption loops).
-        let mut s = TmsnState::resume(0, extend(&StrongRule::new(), 9), 0.5);
-
-        assert_eq!(s.on_message(msg_with_bound(0.49, 1, 1)), Verdict::Accept);
-        assert!((s.cert.loss_bound - 0.49).abs() < 1e-15);
-
-        let model_before = s.model.clone();
-        assert_eq!(s.on_message(msg_with_bound(0.49, 2, 1)), Verdict::Reject); // tie
-        assert_eq!(s.on_message(msg_with_bound(0.50, 2, 2)), Verdict::Reject); // worse
-        assert_eq!(s.on_message(msg_with_bound(9.99, 2, 3)), Verdict::Reject); // much worse
-        assert_eq!(s.model, model_before, "rejects must not mutate the model");
-        assert!((s.cert.loss_bound - 0.49).abs() < 1e-15);
-        assert_eq!(s.accepts, 1);
-        assert_eq!(s.rejects, 3);
-    }
-
-    #[test]
-    fn bound_monotone_across_adopted_messages() {
-        // The certificate bound never increases, no matter what mix of
-        // better/worse/stale messages arrives in what order — the protocol's
-        // progress invariant, checked on the accept path specifically.
-        let mut s = TmsnState::new(0);
-        let bounds = [0.9, 0.95, 0.6, 0.6, 0.61, 0.3, 0.9, 0.05, 0.049, 0.5];
-        let mut prev = s.cert.loss_bound;
-        for (seq, &b) in bounds.iter().enumerate() {
-            let verdict = s.on_message(msg_with_bound(b, 1, seq as u64));
-            assert_eq!(verdict == Verdict::Accept, b < prev, "bound {b} vs {prev}");
-            assert!(
-                s.cert.loss_bound <= prev,
-                "adopted bound increased: {prev} -> {}",
-                s.cert.loss_bound
-            );
-            prev = s.cert.loss_bound;
-        }
-        assert!((prev - 0.049).abs() < 1e-15);
-    }
-
-    #[test]
-    fn stale_message_rejected() {
-        let mut a = TmsnState::new(0);
-        let mut b = TmsnState::new(1);
-        let old = a.local_improvement(extend(&StrongRule::new(), 0), 0.05);
-        let new = a.local_improvement(extend(&a.model.clone(), 1), 0.05);
-        assert_eq!(b.on_message(new), Verdict::Accept);
-        assert_eq!(b.on_message(old), Verdict::Reject);
-    }
-
-    #[test]
-    fn wire_bytes_grows_with_model() {
-        let mut s = TmsnState::new(0);
-        let m1 = s.local_improvement(extend(&StrongRule::new(), 0), 0.1);
-        let m2 = s.local_improvement(extend(&s.model.clone(), 1), 0.1);
-        assert!(m2.wire_bytes() > m1.wire_bytes());
-    }
-
-    #[test]
-    fn prop_bound_monotone_along_accept_chain() {
-        // Any interleaving of local improvements and message exchanges
-        // keeps every worker's bound non-increasing — the protocol's
-        // progress invariant.
-        prop_check("bounds monotone under TMSN", 50, |rng| {
+    fn prop_cert_monotone_under_any_interleaving() {
+        // The generic protocol keeps every worker's certificate monotone
+        // non-worsening under arbitrary improvement/delivery interleavings.
+        prop_check("generic cert monotone", 50, |rng| {
             let n = 4;
-            let mut workers: Vec<TmsnState> = (0..n).map(TmsnState::new).collect();
-            let mut bounds: Vec<f64> = vec![1.0; n];
-            let mut inflight: Vec<ModelMessage> = Vec::new();
+            let mut workers: Vec<Tmsn<TestPayload>> = (0..n).map(Tmsn::new).collect();
+            let mut scores = vec![f64::INFINITY; n];
+            let mut inflight: Vec<TestPayload> = Vec::new();
             for step in 0..60 {
                 let w = rng.below(n as u64) as usize;
                 if rng.bernoulli(0.5) || inflight.is_empty() {
-                    // local improvement with random γ
-                    let g = 0.05 + rng.f64() * 0.3;
-                    let model = extend(&workers[w].model.clone(), step as u32);
-                    let msg = workers[w].local_improvement(model, g);
-                    inflight.push(msg);
+                    let cur = workers[w].cert().score;
+                    let next = if cur.is_finite() {
+                        cur * (0.5 + rng.f64() * 0.49)
+                    } else {
+                        rng.f64() * 10.0
+                    };
+                    let p = TestPayload::scored(&format!("{step}"), next);
+                    inflight.push(workers[w].local_update(p));
                 } else {
-                    // deliver a random in-flight message (arbitrary order!)
                     let k = rng.below(inflight.len() as u64) as usize;
-                    let msg = inflight[k].clone();
-                    workers[w].on_message(msg);
+                    workers[w].on_message(inflight[k].clone());
                 }
-                let b = workers[w].cert.loss_bound;
-                if b > bounds[w] + 1e-12 {
-                    return Err(format!("worker {w} bound increased {} -> {b}", bounds[w]));
+                let s = workers[w].cert().score;
+                if s > scores[w] {
+                    return Err(format!("worker {w} cert worsened {} -> {s}", scores[w]));
                 }
-                bounds[w] = b;
+                scores[w] = s;
             }
             Ok(())
         });
     }
 
     #[test]
-    fn prop_convergence_after_full_delivery() {
-        // Once every broadcast message is delivered to every worker, all
-        // workers hold the minimum bound (the §2 convergence claim).
-        prop_check("all workers converge to best bound", 30, |rng| {
-            let n = 5;
-            let mut workers: Vec<TmsnState> = (0..n).map(TmsnState::new).collect();
-            let mut all_msgs: Vec<ModelMessage> = Vec::new();
-            for step in 0..20 {
-                let w = rng.below(n as u64) as usize;
-                let g = 0.05 + rng.f64() * 0.3;
-                let model = extend(&workers[w].model.clone(), step as u32);
-                all_msgs.push(workers[w].local_improvement(model, g));
+    fn driver_publish_adopt_over_fabric() {
+        let (fabric, mut eps) = Fabric::<TestPayload>::new(2, NetConfig::ideal());
+        let b_ep = eps.pop().unwrap();
+        let a_ep = eps.pop().unwrap();
+        let mut a = Driver::new(Tmsn::new(0), a_ep, log());
+        let mut b = Driver::new(Tmsn::new(1), b_ep, log());
+
+        let seq = a.publish(TestPayload::scored("v1", 1.0));
+        assert_eq!(seq, 1);
+        let mut adopted = 0;
+        for _ in 0..200 {
+            adopted += b.poll_adopt(&mut |_, _| {});
+            if adopted > 0 {
+                break;
             }
-            let best = all_msgs
-                .iter()
-                .map(|m| m.cert.loss_bound)
-                .fold(f64::INFINITY, f64::min);
-            // deliver everything to everyone, in a random order per worker
-            for w in workers.iter_mut() {
-                let mut order: Vec<usize> = (0..all_msgs.len()).collect();
-                rng.shuffle(&mut order);
-                for &k in &order {
-                    w.on_message(all_msgs[k].clone());
-                }
-                if (w.cert.loss_bound - best).abs() > 1e-12 && w.cert.loss_bound > best {
-                    return Err(format!(
-                        "worker {} stuck at {} > best {best}",
-                        w.worker_id(),
-                        w.cert.loss_bound
-                    ));
-                }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(adopted, 1);
+        assert_eq!(b.payload().body, "v1");
+        assert_eq!(b.cert().origin, 0);
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn driver_interrupt_path_parks_then_adopts() {
+        let (fabric, mut eps) = Fabric::<TestPayload>::new(2, NetConfig::ideal());
+        let b_ep = eps.pop().unwrap();
+        let a_ep = eps.pop().unwrap();
+        let mut a = Driver::new(Tmsn::new(0), a_ep, log());
+        let mut b = Driver::new(Tmsn::new(1), b_ep, log());
+
+        a.publish(TestPayload::scored("good", 1.0));
+        let mut interrupted = false;
+        for _ in 0..200 {
+            if b.poll_interrupt() {
+                interrupted = true;
+                break;
             }
-            Ok(())
-        });
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(interrupted, "strictly-better arrival must interrupt");
+        // state unchanged until the pending payload is explicitly adopted
+        assert_eq!(b.payload().body, "");
+        assert!(b.adopt_pending(&mut |_, _| {}));
+        assert_eq!(b.payload().body, "good");
+        assert!(!b.adopt_pending(&mut |_, _| {}), "pending is consumed");
+
+        // a worse arrival is rejected inline and does not interrupt
+        a.publish(TestPayload::scored("better-for-a-only", 0.5));
+        b.publish(TestPayload::scored("best", 0.1));
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!b.poll_interrupt());
+        assert_eq!(b.payload().body, "best");
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn on_adopt_sees_replaced_and_adopted() {
+        let (fabric, mut eps) = Fabric::<TestPayload>::new(2, NetConfig::ideal());
+        let b_ep = eps.pop().unwrap();
+        let a_ep = eps.pop().unwrap();
+        let mut a = Driver::new(Tmsn::new(0), a_ep, log());
+        let mut b = Driver::new(Tmsn::resume(1, TestPayload::scored("old", 2.0)), b_ep, log());
+
+        a.publish(TestPayload::scored("new", 1.0));
+        let mut seen = None;
+        for _ in 0..200 {
+            b.poll_adopt(&mut |prev, cur| seen = Some((prev.body.clone(), cur.body.clone())));
+            if seen.is_some() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(seen, Some(("old".to_string(), "new".to_string())));
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn wire_bytes_defaults_to_encoded_length() {
+        let p = TestPayload::scored("payload-body", 0.25);
+        assert_eq!(p.wire_bytes(), p.encode().len());
+    }
+
+    #[test]
+    fn payload_roundtrip_generic() {
+        let p = TestPayload {
+            body: "multi\nline body".into(),
+            cert: TestCert {
+                score: 0.125,
+                origin: 7,
+                seq: 42,
+            },
+        };
+        assert_eq!(TestPayload::decode(&p.encode()).unwrap(), p);
     }
 }

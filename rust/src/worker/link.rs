@@ -1,39 +1,35 @@
-//! Transport abstraction: a worker's attachment to the broadcast medium.
+//! Transport attachments: how a worker joins the broadcast medium.
 //!
-//! Implemented by the in-process simulated fabric
-//! ([`crate::network::Endpoint<ModelMessage>`], used by the coordinator,
-//! benches, and failure-injection experiments) and by the real TCP
-//! transport ([`crate::network::TcpEndpoint`], used by the
-//! `sparrow worker` multi-process mode).
+//! The protocol's transport surface is [`crate::tmsn::Link`] — two
+//! operations, fire-and-forget `send` and non-blocking `poll`. This module
+//! implements it for every transport, generically over the payload:
+//!
+//! * [`crate::network::Endpoint<P>`] — the in-process simulated fabric
+//!   (coordinator, benches, failure-injection experiments);
+//! * [`crate::network::TcpEndpoint<P>`] — the real TCP transport
+//!   (`sparrow worker` multi-process mode);
+//! * [`NullLink`] — a disconnected link (single-worker runs).
 
 use crate::network::{Endpoint, TcpEndpoint};
-use crate::tmsn::ModelMessage;
+use crate::tmsn::{Link, Payload};
 
-/// The only two operations TMSN needs from a network.
-pub trait BroadcastLink: Send {
-    /// Fire-and-forget broadcast to all peers.
-    fn send(&self, msg: ModelMessage);
-    /// Non-blocking poll for the next delivered message.
-    fn poll(&self) -> Option<ModelMessage>;
-}
-
-impl BroadcastLink for Endpoint<ModelMessage> {
-    fn send(&self, msg: ModelMessage) {
+impl<P: Payload> Link<P> for Endpoint<P> {
+    fn send(&self, msg: P) {
         let bytes = msg.wire_bytes();
         self.broadcast(msg, bytes);
     }
 
-    fn poll(&self) -> Option<ModelMessage> {
+    fn poll(&self) -> Option<P> {
         self.try_recv()
     }
 }
 
-impl BroadcastLink for TcpEndpoint {
-    fn send(&self, msg: ModelMessage) {
+impl<P: Payload> Link<P> for TcpEndpoint<P> {
+    fn send(&self, msg: P) {
         self.broadcast(&msg);
     }
 
-    fn poll(&self) -> Option<ModelMessage> {
+    fn poll(&self) -> Option<P> {
         self.try_recv()
     }
 }
@@ -41,9 +37,9 @@ impl BroadcastLink for TcpEndpoint {
 /// A disconnected link (single-worker runs with no peers at all).
 pub struct NullLink;
 
-impl BroadcastLink for NullLink {
-    fn send(&self, _msg: ModelMessage) {}
-    fn poll(&self) -> Option<ModelMessage> {
+impl<P: Payload> Link<P> for NullLink {
+    fn send(&self, _msg: P) {}
+    fn poll(&self) -> Option<P> {
         None
     }
 }
@@ -51,30 +47,47 @@ impl BroadcastLink for NullLink {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::metrics::EventLog;
     use crate::model::StrongRule;
     use crate::network::{Fabric, NetConfig};
-    use crate::tmsn::Certificate;
+    use crate::tmsn::{BoostPayload, Certified, Driver, LossBoundCert, Tmsn};
 
-    fn msg() -> ModelMessage {
-        ModelMessage {
+    fn msg() -> BoostPayload {
+        BoostPayload {
             model: StrongRule::new(),
-            cert: Certificate::initial(),
+            cert: LossBoundCert::initial(),
         }
     }
 
     #[test]
     fn null_link_swallows() {
         let l = NullLink;
-        l.send(msg());
-        assert!(l.poll().is_none());
+        Link::<BoostPayload>::send(&l, msg());
+        assert!(Link::<BoostPayload>::poll(&l).is_none());
+    }
+
+    #[test]
+    fn null_link_driver_keeps_local_state() {
+        // A worker with no peers behaves exactly like the single-machine
+        // learner: publishes go nowhere, polls adopt nothing, and the
+        // verdict counters never move.
+        let (log, _rx) = EventLog::new();
+        let mut d = Driver::new(Tmsn::<BoostPayload>::new(0), NullLink, log);
+        let mut model = StrongRule::new();
+        model.push(crate::model::Stump::new(0, 0.0, 1.0), 0.2);
+        d.publish(d.payload().improved(model, 0.1));
+        assert_eq!(d.poll_adopt(&mut |_, _| {}), 0);
+        assert!(!d.poll_interrupt());
+        assert_eq!((d.state().accepts, d.state().rejects), (0, 0));
+        assert!(d.cert().loss_bound < 1.0, "local progress is kept");
     }
 
     #[test]
     fn fabric_endpoint_roundtrip_through_trait() {
-        let (fabric, mut eps) = Fabric::<ModelMessage>::new(2, NetConfig::ideal());
+        let (fabric, mut eps) = Fabric::<BoostPayload>::new(2, NetConfig::ideal());
         let b = eps.pop().unwrap();
         let a = eps.pop().unwrap();
-        let link_a: &dyn BroadcastLink = &a;
+        let link_a: &dyn Link<BoostPayload> = &a;
         link_a.send(msg());
         let mut got = None;
         for _ in 0..100 {

@@ -4,12 +4,15 @@
 //! Its loop: keep a weighted in-memory sample fresh (resample when
 //! `n_eff/m` collapses), scan for a certifiable weak rule, broadcast local
 //! improvements, and adopt strictly-better remote models the moment they
-//! arrive (interrupting the scan mid-pass).
+//! arrive (interrupting the scan mid-pass). The poll/adopt/broadcast
+//! mechanics live in the payload-generic [`crate::tmsn::Driver`]; this
+//! module supplies what is boosting-specific: the scan, the sample, and
+//! the weight-rebasing that keeps the sample consistent across adoptions.
 
 pub mod link;
 pub mod throttle;
 
-pub use link::{BroadcastLink, NullLink};
+pub use link::NullLink;
 pub use throttle::ThrottledBackend;
 
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -24,7 +27,7 @@ use crate::model::StrongRule;
 use crate::sampler::{Sampler, SamplerConfig};
 use crate::scanner::{ScanBackend, ScanOutcome, Scanner, ScannerConfig};
 use crate::stopping::{DwRule, FixedScan, HoeffdingRule, LilRule, StoppingRule};
-use crate::tmsn::{ModelMessage, TmsnState, Verdict};
+use crate::tmsn::{BoostPayload, Driver, Link, Tmsn};
 use crate::util::rng::Rng;
 
 /// Everything a worker thread needs.
@@ -35,7 +38,7 @@ pub struct WorkerParams {
     /// owned feature stripe `[start, end)`
     pub stripe: (usize, usize),
     pub store: DiskStore,
-    pub endpoint: Box<dyn BroadcastLink>,
+    pub endpoint: Box<dyn Link<BoostPayload>>,
     pub log: EventLog,
     pub stop: Arc<AtomicBool>,
     pub backend: Box<dyn ScanBackend>,
@@ -137,10 +140,11 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
         rng.fork(1),
     );
 
-    let mut tmsn = match &cfg.resume {
-        Some((model, bound)) => TmsnState::resume(id, model.clone(), *bound),
-        None => TmsnState::new(id),
+    let tmsn = match &cfg.resume {
+        Some((model, bound)) => Tmsn::resume(id, BoostPayload::resume(model.clone(), *bound)),
+        None => Tmsn::new(id),
     };
+    let mut driver = Driver::new(tmsn, endpoint, log.clone());
     let mut sample = SampleSet::empty(store.num_features());
     let mut force_resample = true;
     let mut found = 0u64;
@@ -160,16 +164,16 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
                 break;
             }
         }
-        if tmsn.model.len() >= cfg.max_rules
-            || (cfg.target_bound > 0.0 && tmsn.cert.loss_bound <= cfg.target_bound)
+        if driver.payload().model.len() >= cfg.max_rules
+            || (cfg.target_bound > 0.0 && driver.cert().loss_bound <= cfg.target_bound)
         {
             break;
         }
 
         // ---- inbox (receive path of Alg. 1) ----------------------------
-        while let Some(msg) = endpoint.poll() {
-            handle_message(&mut tmsn, msg, &mut sample, id, &log);
-        }
+        driver.poll_adopt(&mut |prev, cur| {
+            rebase_if_foreign(&mut sample, prev, cur);
+        });
 
         // ---- sample freshness (§3 n_eff trigger) ------------------------
         let need_sample = force_resample
@@ -177,7 +181,7 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
             || sample.n_eff() / cfg.sample_size as f64 <= cfg.ess_threshold;
         if need_sample {
             log.record(id, EventKind::ResampleStart, None, sample.n_eff());
-            let model = tmsn.model.clone();
+            let model = driver.payload().model.clone();
             match sampler.resample(&model) {
                 Ok((s, stats)) => {
                     sample = s;
@@ -201,25 +205,10 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
         }
 
         // ---- one scanner invocation -------------------------------------
-        let model = tmsn.model.clone();
-        let mut pending: Option<ModelMessage> = None;
-        let current_bound = tmsn.cert.loss_bound;
+        let model = driver.payload().model.clone();
         let deadline_hit = &stop;
         let outcome = scanner.run_pass(&mut sample, &model, || {
-            if deadline_hit.load(Ordering::Relaxed) {
-                return true;
-            }
-            if let Some(msg) = endpoint.poll() {
-                let version = Some((msg.cert.origin, msg.cert.seq));
-                log.record(id, EventKind::Receive, version, msg.cert.loss_bound);
-                if msg.cert.loss_bound < current_bound {
-                    pending = Some(msg);
-                    return true;
-                } else {
-                    log.record(id, EventKind::Reject, version, msg.cert.loss_bound);
-                }
-            }
-            false
+            deadline_hit.load(Ordering::Relaxed) || driver.poll_interrupt()
         });
         // surface γ-halving events
         for _ in prev_gamma_shrinks..scanner.gamma_shrinks {
@@ -233,18 +222,9 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
                 gamma,
                 scanned: _,
             } => {
-                let mut new_model = tmsn.model.clone();
+                let mut new_model = driver.payload().model.clone();
                 new_model.push(stump, alpha_for_advantage(gamma) as f32);
-                let msg = tmsn.local_improvement(new_model, gamma);
-                log.record(
-                    id,
-                    EventKind::LocalImprovement,
-                    Some((id, msg.cert.seq)),
-                    msg.cert.loss_bound,
-                );
-                endpoint.send(msg);
-                let version = Some((id, tmsn.cert.seq));
-                log.record(id, EventKind::Broadcast, version, tmsn.cert.loss_bound);
+                driver.publish(driver.payload().improved(new_model, gamma));
                 found += 1;
             }
             ScanOutcome::Exhausted { .. } => {
@@ -252,9 +232,9 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
                 force_resample = true;
             }
             ScanOutcome::Interrupted { .. } => {
-                if let Some(msg) = pending.take() {
-                    handle_message(&mut tmsn, msg, &mut sample, id, &log);
-                }
+                driver.adopt_pending(&mut |prev, cur| {
+                    rebase_if_foreign(&mut sample, prev, cur);
+                });
                 // stop-flag interrupts just fall through to the loop head
             }
         }
@@ -264,46 +244,29 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
         }
     }
 
-    log.record(id, EventKind::Finish, None, tmsn.cert.loss_bound);
+    log.record(id, EventKind::Finish, None, driver.cert().loss_bound);
+    let state = driver.into_state();
     WorkerResult {
         id,
-        model: tmsn.model.clone(),
-        loss_bound: tmsn.cert.loss_bound,
+        model: state.payload().model.clone(),
+        loss_bound: state.cert().loss_bound,
         found,
-        accepts: tmsn.accepts,
-        rejects: tmsn.rejects,
+        accepts: state.accepts,
+        rejects: state.rejects,
         resamples,
         scanned: scanner.total_scanned,
         crashed,
     }
 }
 
-/// Process one received model message: accept-or-reject, and keep the
-/// sample's cached weights consistent with the (possibly new) model.
-fn handle_message(
-    tmsn: &mut TmsnState,
-    msg: ModelMessage,
-    sample: &mut SampleSet,
-    id: usize,
-    log: &EventLog,
-) {
-    let origin = (msg.cert.origin, msg.cert.seq);
-    let bound = msg.cert.loss_bound;
-    let old_model = tmsn.model.clone();
-    match tmsn.on_message(msg) {
-        Verdict::Accept => {
-            log.record(id, EventKind::Accept, Some(origin), bound);
-            // If the accepted model extends ours, the per-example
-            // incremental state stays valid (suffix update). Otherwise the
-            // lineage broke: rebase every cached weight onto the new model
-            // from its sample-time reference pair.
-            if !tmsn.model.extends(&old_model) {
-                rebase_sample(sample, &tmsn.model);
-            }
-        }
-        Verdict::Reject => {
-            log.record(id, EventKind::Reject, Some(origin), bound);
-        }
+/// Adoption hook for [`Driver`]: keep the sample's cached weights
+/// consistent with the newly adopted model. If the adopted model extends
+/// the replaced one, the per-example incremental state stays valid (suffix
+/// update); otherwise the lineage broke and every cached weight is rebased
+/// onto the new model from its sample-time reference pair.
+fn rebase_if_foreign(sample: &mut SampleSet, prev: &BoostPayload, cur: &BoostPayload) {
+    if !cur.model.extends(&prev.model) {
+        rebase_sample(sample, &cur.model);
     }
 }
 
@@ -362,5 +325,32 @@ mod tests {
         rebase_sample(&mut sample, &b);
         // w = 1 * exp(-1 * (0.9 - 0.5))
         assert!((sample.w_last[0] - (-0.4f32).exp()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rebase_skipped_when_adopted_model_extends() {
+        // extends-lineage adoptions must leave cached weights untouched;
+        // the base model must be non-empty (the empty model is a prefix of
+        // everything, so any adoption from it is an "extends" adoption)
+        let mut block = crate::data::DataBlock::empty(1);
+        block.push(&[2.0], 1.0);
+        let mut sample = SampleSet::fresh(block, vec![0.0], 0);
+        let w_before = sample.w_last[0];
+
+        let mut base_model = StrongRule::new();
+        base_model.push(Stump::new(0, 0.5, 1.0), 0.4);
+        let base = BoostPayload::resume(base_model, 0.9);
+        let mut extended = base.model.clone();
+        extended.push(Stump::new(0, 0.0, 1.0), 0.9);
+        let cur = BoostPayload::resume(extended, 0.5);
+        rebase_if_foreign(&mut sample, &base, &cur);
+        assert_eq!(sample.w_last[0], w_before, "suffix lineage: no rebase");
+
+        // a non-extending (foreign) model does trigger the rebase
+        let mut foreign = StrongRule::new();
+        foreign.push(Stump::new(0, 1.0, -1.0), 0.3);
+        let cur = BoostPayload::resume(foreign, 0.4);
+        rebase_if_foreign(&mut sample, &base, &cur);
+        assert_ne!(sample.w_last[0], w_before);
     }
 }

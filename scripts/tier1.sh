@@ -11,6 +11,9 @@ set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
 cargo build --release
+# Examples and harness=false benches are the first casualties of an API
+# redesign and `cargo test` does not build the benches — gate them too.
+cargo build --examples --benches
 cargo test -q
 
 # The workspace root package is `sparrow`, so the gate above does not reach
