@@ -1,7 +1,7 @@
 # Convenience entry points. The authoritative verification gate is
 # scripts/tier1.sh (used verbatim by CI).
 
-.PHONY: tier1 build test fmt clippy artifacts bench clean
+.PHONY: tier1 build test fmt clippy doc artifacts bench clean
 
 tier1:
 	./scripts/tier1.sh
@@ -17,6 +17,12 @@ fmt:
 
 clippy:
 	cd rust && cargo clippy --all-targets -- -D warnings
+
+# API docs for the sparrow crate only (vendored shims excluded); rustdoc
+# warnings surface missing_docs from the modules that opt in (sampler/,
+# sampling/, data/store.rs, data/strata.rs).
+doc:
+	cd rust && cargo doc --no-deps
 
 # AOT-lower the L2/L1 Python graph to HLO-text artifacts consumed by the
 # xla-* backends (requires a JAX environment; see python/compile/aot.py).

@@ -51,6 +51,32 @@ impl SamplerKind {
     }
 }
 
+/// How the worker drives its Sampler (DESIGN.md §4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplerMode {
+    /// Paper-faithful: resample on the worker thread; the scanner idles
+    /// for the whole pass (the Figure-3/4 plateau).
+    Blocking,
+    /// Concurrent pipeline: a background thread builds the next sample
+    /// against the latest adopted model (stratified store, version-stamped
+    /// invalidation) and the scanner flips at a batch boundary with ~zero
+    /// stall.
+    Background,
+}
+
+impl SamplerMode {
+    /// Parse a `--sampler-mode` value.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "blocking" => Ok(SamplerMode::Blocking),
+            "background" | "bg" => Ok(SamplerMode::Background),
+            _ => Err(format!(
+                "unknown sampler mode {s:?} (blocking|background)"
+            )),
+        }
+    }
+}
+
 /// Scanner compute backend (ablation A4).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
@@ -104,6 +130,8 @@ pub struct TrainConfig {
     /// total failure budget δ (union-bounded over candidates)
     pub stop_delta: f64,
     pub sampler: SamplerKind,
+    /// blocking (paper-faithful) or background (pipelined) sampling
+    pub sampler_mode: SamplerMode,
     pub backend: Backend,
     /// disk read bandwidth in bytes/s (0 = unlimited, in-memory tier)
     pub disk_bandwidth: f64,
@@ -140,6 +168,7 @@ impl Default for TrainConfig {
             stop_c: 0.67,
             stop_delta: 1e-6,
             sampler: SamplerKind::MinimalVariance,
+            sampler_mode: SamplerMode::Blocking,
             backend: Backend::Native,
             disk_bandwidth: 0.0,
             eval_interval: Duration::from_millis(250),
@@ -176,6 +205,9 @@ impl TrainConfig {
         self.stop_delta = args.get_f64("stop-delta", self.stop_delta);
         if let Some(s) = args.get("sampler") {
             self.sampler = SamplerKind::parse(s)?;
+        }
+        if let Some(s) = args.get("sampler-mode") {
+            self.sampler_mode = SamplerMode::parse(s)?;
         }
         if let Some(s) = args.get("backend") {
             self.backend = Backend::parse(s)?;
@@ -319,6 +351,9 @@ mod tests {
         assert!(TrainConfig::default().apply_args(&args("t --stopping nope")).is_err());
         assert!(TrainConfig::default().apply_args(&args("t --sampler nope")).is_err());
         assert!(TrainConfig::default().apply_args(&args("t --backend nope")).is_err());
+        assert!(TrainConfig::default()
+            .apply_args(&args("t --sampler-mode nope"))
+            .is_err());
     }
 
     #[test]
@@ -327,6 +362,17 @@ mod tests {
         assert_eq!(SamplerKind::parse("mvs").unwrap(), SamplerKind::MinimalVariance);
         assert_eq!(Backend::parse("xla").unwrap(), Backend::XlaPallas);
         assert_eq!(Backend::parse("xla-jnp").unwrap(), Backend::XlaJnp);
+        assert_eq!(SamplerMode::parse("bg").unwrap(), SamplerMode::Background);
+    }
+
+    #[test]
+    fn sampler_mode_default_and_override() {
+        // the knob must default to the paper-faithful blocking sampler
+        assert_eq!(TrainConfig::default().sampler_mode, SamplerMode::Blocking);
+        let cfg = TrainConfig::default()
+            .apply_args(&args("train --sampler-mode background"))
+            .unwrap();
+        assert_eq!(cfg.sampler_mode, SamplerMode::Background);
     }
 
     #[test]

@@ -13,11 +13,13 @@ pub mod block;
 pub mod libsvm;
 pub mod memstore;
 pub mod store;
+pub mod strata;
 pub mod synth;
 pub mod throttle;
 
 pub use block::DataBlock;
 pub use memstore::SampleSet;
 pub use store::DiskStore;
+pub use strata::{StrataConfig, StratifiedStore};
 pub use synth::SynthConfig;
 pub use throttle::IoThrottle;

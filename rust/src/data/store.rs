@@ -1,4 +1,11 @@
 //! Disk-resident training store (the paper's per-worker replicated dataset).
+//!
+//! Two read layers sit on top of the on-disk format ([`crate::data::binfmt`]):
+//! the circular [`StoreStream`] used by the blocking sampler's selective
+//! pass, and the stratified, weight-indexed view in [`crate::data::strata`]
+//! used by the background sampler pipeline (DESIGN.md §4).
+
+#![warn(missing_docs)]
 
 use std::io;
 use std::path::{Path, PathBuf};
@@ -14,6 +21,7 @@ use crate::data::{DataBlock, IoThrottle};
 /// write time so all subsequent reads are purely sequential.
 pub struct DiskStore {
     path: PathBuf,
+    /// the on-disk header (example count, feature width)
     pub header: Header,
 }
 
@@ -48,6 +56,7 @@ impl DiskStore {
         })
     }
 
+    /// Open an existing store file, validating its header.
     pub fn open(path: &Path) -> io::Result<DiskStore> {
         let r = Reader::open(path)?;
         Ok(DiskStore {
@@ -56,18 +65,24 @@ impl DiskStore {
         })
     }
 
+    /// Path of the backing file (additional readers — e.g. the background
+    /// sampler's [`crate::data::StratifiedStore`] — open their own cursor
+    /// from it).
     pub fn path(&self) -> &Path {
         &self.path
     }
 
+    /// Number of examples in the store.
     pub fn len(&self) -> usize {
         self.header.n as usize
     }
 
+    /// `true` when the store holds no examples.
     pub fn is_empty(&self) -> bool {
         self.header.n == 0
     }
 
+    /// Number of features per example.
     pub fn num_features(&self) -> usize {
         self.header.f as usize
     }
@@ -113,6 +128,7 @@ impl StoreStream {
         self.reader.position()
     }
 
+    /// Total time this stream's throttle spent sleeping (off-memory tier).
     pub fn stalled(&self) -> std::time::Duration {
         self.throttle.stalled
     }

@@ -1,0 +1,409 @@
+//! Stratified, weight-indexed view of a [`DiskStore`](crate::data::DiskStore)
+//! — the read layer behind the background sampler (DESIGN.md §4).
+//!
+//! The Sampler keeps examples with probability proportional to their
+//! boosting weight, so on a trained model most of the records it streams
+//! from disk are read only to be *rejected*. This module maintains a
+//! per-example **weight stratum** index (buckets keyed on `⌊log₂ w⌋`) from
+//! the weights computed during the previous committed build, and marks the
+//! heaviest strata — the mostly-*accepted* examples — as **resident**: their
+//! bytes are served from memory (the OS page cache keeps them hot) and are
+//! therefore not charged against the off-memory tier's I/O throttle. A
+//! resample on a skewed weight distribution then pays disk bandwidth only
+//! for the light, mostly-rejected tail it still has to visit.
+//!
+//! Two invariants keep the index honest under the concurrent pipeline:
+//!
+//! 1. **Contents never depend on the index.** The index influences *cost*
+//!    (which bytes are charged) but never *which examples are kept* — the
+//!    build pass visits every record and decides acceptance from
+//!    per-example seeded coins (see `sampler::background`). A stale or
+//!    empty index degrades performance, never correctness.
+//! 2. **Only committed builds mutate the index.** Weights observed by an
+//!    in-flight build are buffered and applied by [`StratifiedStore::commit_build`];
+//!    an invalidated build calls [`StratifiedStore::abort_build`] and leaves
+//!    no trace. Thread interleaving can change how *fast* later builds run,
+//!    but (per invariant 1) not what they produce.
+
+#![warn(missing_docs)]
+
+use std::io;
+use std::path::Path;
+use std::time::Duration;
+
+use crate::data::binfmt::Reader;
+use crate::data::{DataBlock, IoThrottle};
+
+/// Number of weight strata: buckets cover `w ∈ [2^-16, 2^16)` in powers of
+/// two, with underflow/overflow clamped into the end buckets.
+pub const NUM_STRATA: usize = 32;
+
+/// Stratum id for weight `w`: `clamp(⌊log₂ w⌋ + NUM_STRATA/2, 0, NUM_STRATA-1)`.
+/// Weight 1 (a freshly sampled example) lands in bucket `NUM_STRATA/2`;
+/// each step up doubles the weight ceiling.
+pub fn bucket_of(w: f64) -> u8 {
+    let k = w.max(1e-300).log2().floor() as i64 + (NUM_STRATA as i64) / 2;
+    k.clamp(0, NUM_STRATA as i64 - 1) as u8
+}
+
+/// Configuration for the stratified read layer.
+#[derive(Debug, Clone, Copy)]
+pub struct StrataConfig {
+    /// Residency budget in examples: the heaviest strata are marked
+    /// memory-resident up to this many rows. `0` disables residency (every
+    /// read is charged to the throttle, as with a plain stream).
+    pub resident_rows: usize,
+}
+
+impl Default for StrataConfig {
+    fn default() -> Self {
+        StrataConfig {
+            resident_rows: 16_384,
+        }
+    }
+}
+
+/// A [`DiskStore`](crate::data::DiskStore) opened for stratified sequential
+/// builds: a cursor for full-store passes plus the committed weight-bucket
+/// index and residency set described in the module docs.
+pub struct StratifiedStore {
+    reader: Reader,
+    throttle: IoThrottle,
+    cfg: StrataConfig,
+    n: usize,
+    record_bytes: u64,
+    /// committed stratum per example (from the last committed build)
+    bucket: Vec<u8>,
+    /// committed residency flags (heaviest strata within the budget)
+    resident: Vec<bool>,
+    resident_count: usize,
+    /// total bytes actually charged to the throttle (diagnostics)
+    charged_bytes: u64,
+    /// in-flight build buffer (applied on commit, dropped on abort)
+    pending_bucket: Vec<u8>,
+    building: bool,
+    cursor: usize,
+}
+
+impl StratifiedStore {
+    /// Open the store file at `path` with the given throttle (the
+    /// off-memory tier model; use [`IoThrottle::unlimited`] for the
+    /// in-memory tier, where residency is a no-op by construction).
+    ///
+    /// The index starts empty-handed: every example in the stratum of
+    /// weight 1 (the empty model scores everything 0) and nothing resident.
+    pub fn open(
+        path: &Path,
+        throttle: IoThrottle,
+        cfg: StrataConfig,
+    ) -> io::Result<StratifiedStore> {
+        let reader = Reader::open(path)?;
+        let n = reader.header.n as usize;
+        let record_bytes = reader.header.record_bytes();
+        Ok(StratifiedStore {
+            reader,
+            throttle,
+            cfg,
+            n,
+            record_bytes,
+            bucket: vec![bucket_of(1.0); n],
+            resident: vec![false; n],
+            resident_count: 0,
+            charged_bytes: 0,
+            pending_bucket: Vec::new(),
+            building: false,
+            cursor: 0,
+        })
+    }
+
+    /// Number of examples in the store.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// `true` when the store holds no examples.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Number of features per example.
+    pub fn num_features(&self) -> usize {
+        self.reader.header.f as usize
+    }
+
+    /// Begin a build pass: rewind the cursor to record 0 and open the
+    /// in-flight bucket buffer (pre-filled with the committed assignments,
+    /// so records a build never reaches keep their old stratum).
+    pub fn begin_build(&mut self) -> io::Result<()> {
+        self.reader.rewind()?;
+        self.cursor = 0;
+        self.pending_bucket = self.bucket.clone();
+        self.building = true;
+        Ok(())
+    }
+
+    /// Read the next sequential block of up to `max_n` records (no wrap —
+    /// a build pass visits each record exactly once). Returns the global
+    /// index of the block's first record and the block itself.
+    ///
+    /// Only bytes of non-resident records are charged to the throttle:
+    /// resident rows model data the previous build left hot in memory.
+    pub fn next_block(&mut self, max_n: usize) -> io::Result<(usize, DataBlock)> {
+        assert!(self.building, "next_block outside begin_build/commit");
+        let start = self.cursor;
+        let block = self.reader.read_block(max_n, false)?;
+        self.cursor += block.n;
+        let cold = (start..start + block.n)
+            .filter(|&i| !self.resident[i])
+            .count() as u64;
+        let bytes = cold * self.record_bytes;
+        self.charged_bytes += bytes;
+        self.throttle.consume(bytes);
+        Ok((start, block))
+    }
+
+    /// Record the freshly computed weight of example `i` for the in-flight
+    /// build. Buffered: visible in the index only after
+    /// [`StratifiedStore::commit_build`].
+    #[inline]
+    pub fn note_weight(&mut self, i: usize, w: f64) {
+        debug_assert!(self.building);
+        self.pending_bucket[i] = bucket_of(w);
+    }
+
+    /// Commit the in-flight build: install the buffered bucket assignments
+    /// and recompute residency — strata from heaviest to lightest are
+    /// marked resident until the `resident_rows` budget is exhausted
+    /// (the boundary stratum is taken partially, in index order).
+    pub fn commit_build(&mut self) {
+        assert!(self.building);
+        std::mem::swap(&mut self.bucket, &mut self.pending_bucket);
+        self.pending_bucket = Vec::new();
+        self.building = false;
+        self.rebuild_residency();
+    }
+
+    /// Abort the in-flight build, discarding its buffered observations.
+    /// The committed index is untouched, so an invalidated build leaves
+    /// future builds exactly as it found them.
+    pub fn abort_build(&mut self) {
+        self.pending_bucket = Vec::new();
+        self.building = false;
+    }
+
+    fn rebuild_residency(&mut self) {
+        let budget = self.cfg.resident_rows;
+        self.resident.iter_mut().for_each(|r| *r = false);
+        self.resident_count = 0;
+        if budget == 0 || self.throttle.is_unlimited() {
+            return;
+        }
+        let mut counts = [0usize; NUM_STRATA];
+        for &b in &self.bucket {
+            counts[b as usize] += 1;
+        }
+        // heaviest strata first; stop at the first stratum that would
+        // overflow the budget and fill the remainder from it in index order
+        let mut remaining = budget;
+        let mut full = [false; NUM_STRATA];
+        let mut partial: Option<u8> = None;
+        for k in (0..NUM_STRATA).rev() {
+            if counts[k] == 0 {
+                continue;
+            }
+            if counts[k] <= remaining {
+                full[k] = true;
+                remaining -= counts[k];
+            } else {
+                partial = Some(k as u8);
+                break;
+            }
+        }
+        for (i, &b) in self.bucket.iter().enumerate() {
+            if full[b as usize] || (partial == Some(b) && remaining > 0) {
+                if partial == Some(b) && !full[b as usize] {
+                    remaining -= 1;
+                }
+                self.resident[i] = true;
+                self.resident_count += 1;
+            }
+        }
+    }
+
+    /// Fraction of the store currently resident (0 when residency is off).
+    pub fn resident_fraction(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.resident_count as f64 / self.n as f64
+    }
+
+    /// Total bytes charged to the throttle over the store's lifetime.
+    pub fn charged_bytes(&self) -> u64 {
+        self.charged_bytes
+    }
+
+    /// Total time the throttle spent stalled (off-memory tier sleeps).
+    pub fn stalled(&self) -> Duration {
+        self.throttle.stalled
+    }
+
+    /// Committed stratum of example `i` (diagnostics / tests).
+    pub fn bucket(&self, i: usize) -> u8 {
+        self.bucket[i]
+    }
+
+    /// Is example `i` currently resident? (diagnostics / tests)
+    pub fn is_resident(&self, i: usize) -> bool {
+        self.resident[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DataBlock, DiskStore};
+
+    fn store_path(name: &str, n: usize, f: usize) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("sparrow_strata_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let mut b = DataBlock::empty(f);
+        for i in 0..n {
+            let row: Vec<f32> = (0..f).map(|j| (i * f + j) as f32).collect();
+            b.push(&row, if i % 2 == 0 { 1.0 } else { -1.0 });
+        }
+        DiskStore::write(&path, &b).unwrap();
+        path
+    }
+
+    fn full_pass(s: &mut StratifiedStore, weight: impl Fn(usize) -> f64) {
+        s.begin_build().unwrap();
+        let mut read = 0;
+        while read < s.len() {
+            let (start, block) = s.next_block(64).unwrap();
+            for k in 0..block.n {
+                s.note_weight(start + k, weight(start + k));
+            }
+            read += block.n;
+        }
+    }
+
+    #[test]
+    fn bucket_math() {
+        assert_eq!(bucket_of(1.0) as usize, NUM_STRATA / 2);
+        assert_eq!(bucket_of(2.0) as usize, NUM_STRATA / 2 + 1);
+        assert_eq!(bucket_of(0.5) as usize, NUM_STRATA / 2 - 1);
+        assert_eq!(bucket_of(3.9) as usize, NUM_STRATA / 2 + 1);
+        assert_eq!(bucket_of(0.0), 0); // clamped underflow
+        assert_eq!(bucket_of(1e30) as usize, NUM_STRATA - 1); // clamped overflow
+    }
+
+    #[test]
+    fn sequential_blocks_cover_store_once() {
+        let path = store_path("cover.sprw", 100, 3);
+        let mut s = StratifiedStore::open(
+            &path,
+            IoThrottle::unlimited(),
+            StrataConfig { resident_rows: 0 },
+        )
+        .unwrap();
+        s.begin_build().unwrap();
+        let mut seen = 0;
+        loop {
+            let (start, block) = s.next_block(33).unwrap();
+            if block.is_empty() {
+                break;
+            }
+            assert_eq!(start, seen);
+            seen += block.n;
+        }
+        assert_eq!(seen, 100); // exactly one pass, no wrap
+        s.commit_build();
+    }
+
+    #[test]
+    fn commit_installs_buckets_abort_discards() {
+        let path = store_path("commit.sprw", 50, 2);
+        let mut s = StratifiedStore::open(
+            &path,
+            IoThrottle::unlimited(),
+            StrataConfig { resident_rows: 0 },
+        )
+        .unwrap();
+        assert_eq!(s.bucket(7) as usize, NUM_STRATA / 2); // initial: weight 1
+        full_pass(&mut s, |i| if i < 10 { 8.0 } else { 0.25 });
+        s.commit_build();
+        assert_eq!(s.bucket(7), bucket_of(8.0));
+        assert_eq!(s.bucket(20), bucket_of(0.25));
+
+        // aborted build leaves the committed index untouched
+        full_pass(&mut s, |_| 1024.0);
+        s.abort_build();
+        assert_eq!(s.bucket(7), bucket_of(8.0));
+        assert_eq!(s.bucket(20), bucket_of(0.25));
+    }
+
+    #[test]
+    fn residency_prefers_heavy_strata_within_budget() {
+        let path = store_path("resident.sprw", 100, 2);
+        // finite throttle so residency is active; generous rate, small reads
+        let mut s = StratifiedStore::open(
+            &path,
+            IoThrottle::new(1e12),
+            StrataConfig { resident_rows: 30 },
+        )
+        .unwrap();
+        // 20 heavy, 30 medium, 50 light
+        full_pass(&mut s, |i| {
+            if i < 20 {
+                64.0
+            } else if i < 50 {
+                2.0
+            } else {
+                0.01
+            }
+        });
+        s.commit_build();
+        // all 20 heavy resident; 10 of the medium stratum (budget partial)
+        assert!((0..20).all(|i| s.is_resident(i)));
+        let medium_resident = (20..50).filter(|&i| s.is_resident(i)).count();
+        assert_eq!(medium_resident, 10);
+        assert!((50..100).all(|i| !s.is_resident(i)));
+        assert!((s.resident_fraction() - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resident_bytes_not_charged() {
+        let path = store_path("charge.sprw", 100, 2);
+        let record = 4 * (1 + 2) as u64;
+        let mut s = StratifiedStore::open(
+            &path,
+            IoThrottle::new(1e12),
+            StrataConfig { resident_rows: 40 },
+        )
+        .unwrap();
+        // first pass: nothing resident yet → every byte charged
+        full_pass(&mut s, |i| if i < 40 { 16.0 } else { 0.1 });
+        s.commit_build();
+        assert_eq!(s.charged_bytes(), 100 * record);
+        // second pass: the 40 heavy rows are resident → only 60 charged
+        full_pass(&mut s, |i| if i < 40 { 16.0 } else { 0.1 });
+        s.commit_build();
+        assert_eq!(s.charged_bytes(), 100 * record + 60 * record);
+    }
+
+    #[test]
+    fn unlimited_throttle_disables_residency() {
+        let path = store_path("unlim.sprw", 40, 2);
+        let mut s = StratifiedStore::open(
+            &path,
+            IoThrottle::unlimited(),
+            StrataConfig { resident_rows: 1000 },
+        )
+        .unwrap();
+        full_pass(&mut s, |_| 8.0);
+        s.commit_build();
+        assert_eq!(s.resident_fraction(), 0.0);
+    }
+}

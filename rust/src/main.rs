@@ -36,7 +36,8 @@ COMMANDS
   train      --data train.sprw --test test.sprw [--workers N] [--sample-size M]
              [--gamma0 G] [--ess-threshold T] [--max-rules K] [--time-limit SECS]
              [--target-loss L] [--stopping lil|hoeffding|fixed]
-             [--sampler mvs|rejection|uniform] [--backend native|xla-pallas|xla-jnp]
+             [--sampler mvs|rejection|uniform] [--sampler-mode blocking|background]
+             [--backend native|xla-pallas|xla-jnp]
              [--batch B] [--nthr NT] [--disk-bandwidth BYTES/S] [--seed S]
              [--out-dir DIR]
   baseline   --algo fullscan|goss|bulksync --data train.sprw --test test.sprw
@@ -454,6 +455,7 @@ fn cmd_launch(args: &Args) -> anyhow::Result<()> {
         "backend",
         "stopping",
         "sampler",
+        "sampler-mode",
         "disk-bandwidth",
         "seed",
         "artifacts-dir",

@@ -21,8 +21,12 @@ pub enum EventKind {
     Reject,
     /// worker began building a new in-memory sample
     ResampleStart,
-    /// new sample installed
+    /// new sample built (blocking mode: also installed)
     ResampleEnd,
+    /// background-built sample swapped in at a batch boundary
+    SampleSwap,
+    /// in-flight background build invalidated by a model adoption
+    BuildAbort,
     /// worker halved its target edge γ after a fruitless pass
     GammaShrink,
     /// worker crashed (failure injection)
@@ -41,6 +45,8 @@ impl EventKind {
             EventKind::Reject => "reject",
             EventKind::ResampleStart => "resample_start",
             EventKind::ResampleEnd => "resample_end",
+            EventKind::SampleSwap => "sample_swap",
+            EventKind::BuildAbort => "build_abort",
             EventKind::GammaShrink => "gamma_shrink",
             EventKind::Crash => "crash",
             EventKind::Finish => "finish",
@@ -177,6 +183,8 @@ mod tests {
             Reject,
             ResampleStart,
             ResampleEnd,
+            SampleSwap,
+            BuildAbort,
             GammaShrink,
             Crash,
             Finish,

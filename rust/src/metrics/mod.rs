@@ -4,5 +4,5 @@
 pub mod events;
 pub mod timeline;
 
-pub use events::{Event, EventKind, EventLog};
+pub use events::{drain, Event, EventKind, EventLog};
 pub use timeline::render_timeline;

@@ -34,6 +34,8 @@ pub fn render_timeline(events: &[Event], workers: usize, width: usize) -> String
             EventKind::Receive => continue, // implied by accept/reject
             EventKind::ResampleStart => b'[',
             EventKind::ResampleEnd => b']',
+            EventKind::SampleSwap => b's',
+            EventKind::BuildAbort => b'~',
             EventKind::GammaShrink => b'g',
             EventKind::Crash => b'X',
             EventKind::Finish => b'|',
@@ -42,8 +44,8 @@ pub fn render_timeline(events: &[Event], workers: usize, width: usize) -> String
         let priority = |g: u8| match g {
             b'X' => 5,
             b'!' | b'B' | b'F' => 4,
-            b'[' | b']' | b'|' => 3,
-            b'g' => 2,
+            b'[' | b']' | b'|' | b's' => 3,
+            b'g' | b'~' => 2,
             b'.' => 1,
             _ => 0,
         };
@@ -62,7 +64,7 @@ pub fn render_timeline(events: &[Event], workers: usize, width: usize) -> String
     }
     let mut out = String::new();
     out.push_str(&format!(
-        "timeline ({} workers, {:.2}s span)  F=found B=broadcast !=accepted-interrupt .=rejected [ ]=resample g=gamma/2 X=crash\n",
+        "timeline ({} workers, {:.2}s span)  F=found B=broadcast !=accepted-interrupt .=rejected [ ]=resample s=swap ~=build-abort g=gamma/2 X=crash\n",
         workers, tmax
     ));
     for (i, lane) in lanes.iter().enumerate() {

@@ -1,0 +1,832 @@
+//! The background sampler: builds the next [`SampleSet`] on its own thread
+//! while the Scanner keeps working (DESIGN.md §4).
+//!
+//! The paper's Figures 3–4 show flat plateaus where every worker stalls
+//! while its Sampler rebuilds the in-memory sample. Nothing in TMSN
+//! requires that stall: sampling only *reads* the disk store and the
+//! adopted model, so it can proceed concurrently with scanning, and a TMSN
+//! broadcast interrupts both (the scan between batches, the build between
+//! blocks). This module supplies the builder side of that pipeline; the
+//! handoff lives in [`super::handle`] and the policy wiring in
+//! [`crate::worker`].
+//!
+//! # Determinism: contents are a pure function of `(seed, stamp, model)`
+//!
+//! A concurrent build can be aborted at *any* block boundary by an
+//! adoption, so sample contents must not depend on where an abort landed.
+//! [`build_once`] therefore differs from the blocking sampler's streaming
+//! pass in two deliberate ways:
+//!
+//! 1. **Per-example hash coins.** Instead of one sequential RNG stream
+//!    (whose draws shift when the visit order or stop point changes), every
+//!    example `i` gets its own RNG seeded from
+//!    `(seed, version, attempt, i)`. Acceptance of example `i` depends on
+//!    nothing but its own fresh weight and its own coins.
+//! 2. **One full pass, no early stop.** The pass visits every record
+//!    exactly once and never truncates at the target size `m`; the
+//!    selection scale is calibrated (from a deterministic probe prefix) so
+//!    the expected kept count is `m`. Kept count therefore varies by a few
+//!    percent around `m` — the price of order-independence.
+//!
+//! Together these make the accepted sample a pure function of
+//! `(seed, BuildStamp, model, store)` — byte-identical no matter how many
+//! earlier builds were aborted, how the pass was chunked, or what the
+//! strata index contained (the index only re-prices I/O; see
+//! [`crate::data::strata`]).
+//!
+//! The blocking sampler ([`super::Sampler`]) is untouched by all of this
+//! and remains the paper-faithful default.
+
+use std::io;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::SamplerKind;
+use crate::data::strata::{StrataConfig, StratifiedStore};
+use crate::data::{DataBlock, IoThrottle, SampleSet};
+use crate::metrics::{EventKind, EventLog};
+use crate::model::StrongRule;
+use crate::sampler::handle::{BuildStamp, BuiltSample, SampleHandle};
+use crate::sampler::{score_block, SampleStats, SamplerConfig};
+use crate::util::rng::Rng;
+
+/// Result of one build attempt.
+#[derive(Debug)]
+pub enum BuildOutcome {
+    /// The pass completed; the sample is ready to publish.
+    Built {
+        /// the freshly built sample
+        sample: SampleSet,
+        /// build statistics (reads, keeps, duration, mean weight)
+        stats: SampleStats,
+    },
+    /// The invalidation check fired mid-pass (a newer model was adopted);
+    /// the in-flight sample was discarded and the strata index untouched.
+    Invalidated {
+        /// records read before the abort
+        read: u64,
+    },
+}
+
+/// Upper bound on copies of a single example per build (weight-proportional
+/// kinds). Purely per-example, so it preserves order-independence.
+const MAX_COPIES_PER_EXAMPLE: f64 = 1024.0;
+
+/// RNG key shared by every example coin of one build.
+fn coin_key(seed: u64, stamp: BuildStamp) -> u64 {
+    seed ^ stamp.version.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ stamp.attempt.wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+}
+
+/// Per-example coin RNG: decorrelated from neighbours by SplitMix seeding.
+fn example_rng(key: u64, i: u64) -> Rng {
+    Rng::new(key ^ (i + 1).wrapping_mul(0xFF51_AFD7_ED55_8CCD))
+}
+
+/// Build one sample against `model`, identified by `stamp`.
+///
+/// Visits every record of `store` exactly once (sequential pass, resident
+/// strata not charged to the throttle), computes each example's fresh
+/// weight, and keeps `⌊w/c⌋ + Bernoulli(frac)` copies using the example's
+/// own seeded coin (`SamplerKind::Uniform` keeps with the flat rate `m/n`
+/// and carries true weights, as in the blocking sampler's ablation mode).
+///
+/// `invalidated` is polled between blocks; returning `true` aborts the
+/// build, discards all buffered strata observations, and yields
+/// [`BuildOutcome::Invalidated`].
+pub fn build_once(
+    store: &mut StratifiedStore,
+    model: &StrongRule,
+    stamp: BuildStamp,
+    cfg: &SamplerConfig,
+    seed: u64,
+    mut invalidated: impl FnMut() -> bool,
+) -> io::Result<BuildOutcome> {
+    let t0 = Instant::now();
+    let n = store.len();
+    let f = store.num_features();
+    if n == 0 {
+        return Ok(BuildOutcome::Built {
+            sample: SampleSet::empty(f),
+            stats: SampleStats {
+                read: 0,
+                kept: 0,
+                duration: t0.elapsed(),
+                mean_weight: 0.0,
+            },
+        });
+    }
+    let m = cfg.target_m.max(1);
+    let key = coin_key(seed, stamp);
+    store.begin_build()?;
+
+    // Probe: the deterministic prefix 0..probe_n estimates the mean weight,
+    // sizing the selection scale so the full pass yields ≈ m keeps.
+    let probe_n = cfg.probe.min(n).max(1);
+    let (probe_start, probe) = store.next_block(probe_n)?;
+    debug_assert_eq!(probe_start, 0);
+    let probe_scored = score_block(model, &probe);
+    let mean_w =
+        (probe_scored.iter().map(|&(_, w)| w).sum::<f64>() / probe.n as f64).max(1e-300);
+    let scale = mean_w * n as f64 / m as f64;
+    let uniform_rate = (m as f64 / n as f64).min(1.0);
+
+    let mut data = DataBlock::empty(probe.f);
+    let mut scores = Vec::with_capacity(m);
+    let mut weights = Vec::with_capacity(m);
+    let mut read = probe.n as u64;
+    offer_block(
+        cfg.kind,
+        key,
+        scale,
+        uniform_rate,
+        0,
+        &probe,
+        &probe_scored,
+        store,
+        &mut data,
+        &mut scores,
+        &mut weights,
+    );
+
+    while (read as usize) < n {
+        if invalidated() {
+            store.abort_build();
+            return Ok(BuildOutcome::Invalidated { read });
+        }
+        let (start, block) = store.next_block(cfg.block.max(1))?;
+        if block.is_empty() {
+            break;
+        }
+        let scored = score_block(model, &block);
+        read += block.n as u64;
+        offer_block(
+            cfg.kind,
+            key,
+            scale,
+            uniform_rate,
+            start,
+            &block,
+            &scored,
+            store,
+            &mut data,
+            &mut scores,
+            &mut weights,
+        );
+    }
+    store.commit_build();
+
+    let kept = data.n;
+    let stats = SampleStats {
+        read,
+        kept,
+        duration: t0.elapsed(),
+        mean_weight: mean_w,
+    };
+    let sample = if cfg.kind == SamplerKind::Uniform {
+        SampleSet::with_weights(data, scores, weights, model.len() as u32)
+    } else {
+        SampleSet::fresh(data, scores, model.len() as u32)
+    };
+    Ok(BuildOutcome::Built { sample, stats })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn offer_block(
+    kind: SamplerKind,
+    key: u64,
+    scale: f64,
+    uniform_rate: f64,
+    start: usize,
+    block: &DataBlock,
+    scored: &[(f32, f64)],
+    store: &mut StratifiedStore,
+    data: &mut DataBlock,
+    scores: &mut Vec<f32>,
+    weights: &mut Vec<f32>,
+) {
+    for i in 0..block.n {
+        let gi = start + i;
+        let (s, w) = scored[i];
+        store.note_weight(gi, w);
+        let mut rng = example_rng(key, gi as u64);
+        let copies = match kind {
+            SamplerKind::Uniform => usize::from(rng.bernoulli(uniform_rate)),
+            _ => {
+                // per-example copy cap: a pure, order-independent guard
+                // against a wildly unrepresentative probe scale
+                let expect = (w / scale).min(MAX_COPIES_PER_EXAMPLE);
+                let base = expect.floor();
+                base as usize + usize::from(rng.bernoulli(expect - base))
+            }
+        };
+        for _ in 0..copies {
+            data.push(block.row(i), block.label(i));
+            scores.push(s);
+            weights.push(w as f32);
+        }
+    }
+}
+
+struct Job {
+    model: StrongRule,
+    stamp: BuildStamp,
+}
+
+struct CtrlState {
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+struct Ctrl {
+    state: Mutex<CtrlState>,
+    cv: Condvar,
+    /// bumped (under the state lock) on every post and on shutdown; the
+    /// builder polls it between blocks — the invalidation signal
+    epoch: AtomicU64,
+    /// fatal builder I/O error, surfaced to the worker as a crash
+    failed: Mutex<Option<String>>,
+}
+
+/// Owner handle for the background sampler thread.
+///
+/// The worker drives it with four calls:
+/// * [`BackgroundSampler::request`] — "I need a (new) sample for model
+///   version `v`"; deduplicates while a build for `v` is outstanding, and
+///   bumps the attempt counter when a fresh sample of the *same* version
+///   is needed (the scanner exhausted the previous one).
+/// * [`BackgroundSampler::on_model_change`] — "the adopted model changed";
+///   restarts the outstanding build (if any) against the new model. This
+///   is the invalidation path: the in-flight pass aborts at its next block
+///   boundary.
+/// * [`BackgroundSampler::try_install`] — non-blocking take at a batch
+///   boundary; returns only samples stamped with the current version.
+/// * [`BackgroundSampler::wait_install`] — blocking take for the initial
+///   fill, when there is no previous sample to keep scanning.
+///
+/// Dropping the handle shuts the thread down (it aborts any in-flight
+/// build and joins).
+///
+/// # Example
+///
+/// ```
+/// use sparrow::data::synth::SynthGen;
+/// use sparrow::data::{IoThrottle, StrataConfig, SynthConfig};
+/// use sparrow::metrics::EventLog;
+/// use sparrow::model::StrongRule;
+/// use sparrow::sampler::{BackgroundSampler, SamplerConfig};
+///
+/// let dir = std::env::temp_dir().join("sparrow_doc_bg_sampler");
+/// std::fs::create_dir_all(&dir).unwrap();
+/// let path = dir.join("doc.sprw");
+/// let synth = SynthConfig { f: 4, pos_rate: 0.4, informative: 2, signal: 1.0,
+///                           flip_rate: 0.0, seed: 2 };
+/// SynthGen::new(synth).write_store(&path, 1000).unwrap();
+///
+/// let (log, _rx) = EventLog::new();
+/// let mut bg = BackgroundSampler::spawn(
+///     &path,
+///     IoThrottle::unlimited(),
+///     StrataConfig::default(),
+///     SamplerConfig { target_m: 128, ..SamplerConfig::default() },
+///     7,  // seed — sample contents are a pure function of (seed, stamp, model)
+///     0,  // worker id for event logging
+///     log,
+/// ).unwrap();
+///
+/// bg.request(0, &StrongRule::new()); // build against model version 0
+/// let (sample, stats) = bg.wait_install(0, || false).unwrap().expect("built");
+/// assert!(!sample.is_empty());
+/// assert_eq!(stats.read, 1000); // one full pass, no truncation
+/// ```
+pub struct BackgroundSampler {
+    ctrl: Arc<Ctrl>,
+    handle: SampleHandle,
+    thread: Option<JoinHandle<()>>,
+    requested: Option<BuildStamp>,
+    installed: Option<BuildStamp>,
+}
+
+impl BackgroundSampler {
+    /// Open `store_path` (with its own reader + throttle, independent of
+    /// any scanner-side stream) and start the builder thread.
+    pub fn spawn(
+        store_path: &Path,
+        throttle: IoThrottle,
+        strata: StrataConfig,
+        cfg: SamplerConfig,
+        seed: u64,
+        worker: usize,
+        log: EventLog,
+    ) -> io::Result<BackgroundSampler> {
+        let mut store = StratifiedStore::open(store_path, throttle, strata)?;
+        let ctrl = Arc::new(Ctrl {
+            state: Mutex::new(CtrlState {
+                job: None,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            epoch: AtomicU64::new(0),
+            failed: Mutex::new(None),
+        });
+        let handle = SampleHandle::new();
+        let tctrl = ctrl.clone();
+        let thandle = handle.clone();
+        let thread = std::thread::Builder::new()
+            .name(format!("sampler-{worker}"))
+            .spawn(move || builder_loop(&mut store, &tctrl, &thandle, &cfg, seed, worker, &log))?;
+        Ok(BackgroundSampler {
+            ctrl,
+            handle,
+            thread: Some(thread),
+            requested: None,
+            installed: None,
+        })
+    }
+
+    fn post(&self, model: StrongRule, stamp: BuildStamp) {
+        let mut st = self.ctrl.state.lock().unwrap();
+        self.ctrl.epoch.fetch_add(1, Ordering::SeqCst);
+        st.job = Some(Job { model, stamp });
+        self.ctrl.cv.notify_all();
+    }
+
+    /// Ask for a sample built against model `version`. No-op while a build
+    /// for this version is already outstanding; a repeat request after the
+    /// previous build was installed bumps the attempt counter so the new
+    /// sample draws different coins.
+    pub fn request(&mut self, version: u64, model: &StrongRule) {
+        if let Some(r) = self.requested {
+            if r.version == version && self.installed != Some(r) {
+                return; // already building exactly this
+            }
+        }
+        let attempt = match self.requested {
+            Some(r) if r.version == version => r.attempt + 1,
+            _ => 0,
+        };
+        let stamp = BuildStamp { version, attempt };
+        self.requested = Some(stamp);
+        self.post(model.clone(), stamp);
+    }
+
+    /// The adopted model changed (TMSN adoption or local publish): if a
+    /// build is outstanding, restart it against the new model. The
+    /// in-flight pass sees the epoch bump at its next block boundary and
+    /// discards its partial sample.
+    pub fn on_model_change(&mut self, version: u64, model: &StrongRule) {
+        if self.requested.is_some() && self.requested != self.installed {
+            let stamp = BuildStamp {
+                version,
+                attempt: 0,
+            };
+            self.requested = Some(stamp);
+            self.post(model.clone(), stamp);
+        }
+    }
+
+    /// Lock-free "is a pending sample waiting?" flag for interrupt
+    /// closures (may be stale-positive for one batch; the versioned take
+    /// sorts it out).
+    pub fn ready_flag(&self) -> Arc<AtomicBool> {
+        self.handle.ready_flag()
+    }
+
+    /// The builder's fatal error, if it died (worker treats it as the
+    /// same disk-failure crash as a blocking resample error).
+    pub fn error(&self) -> Option<String> {
+        self.ctrl.failed.lock().unwrap().clone()
+    }
+
+    fn fail_err(msg: String) -> io::Error {
+        io::Error::new(io::ErrorKind::Other, format!("background sampler: {msg}"))
+    }
+
+    /// Non-blocking: install the pending sample iff it was built against
+    /// `version` (a stale pending sample is discarded — never installed).
+    pub fn try_install(&mut self, version: u64) -> io::Result<Option<(SampleSet, SampleStats)>> {
+        if let Some(e) = self.error() {
+            return Err(Self::fail_err(e));
+        }
+        match self.handle.take_if_current(version) {
+            Some(b) => {
+                self.installed = Some(b.stamp);
+                Ok(Some((b.sample, b.stats)))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Blocking: wait until a sample for `version` lands (the caller must
+    /// have [`BackgroundSampler::request`]ed one first) or `give_up`
+    /// returns true. Used for the initial fill only — afterwards the
+    /// scanner keeps working and flips via [`BackgroundSampler::try_install`].
+    pub fn wait_install(
+        &mut self,
+        version: u64,
+        mut give_up: impl FnMut() -> bool,
+    ) -> io::Result<Option<(SampleSet, SampleStats)>> {
+        let ctrl = self.ctrl.clone();
+        let got = self.handle.wait_take(version, Duration::from_millis(10), || {
+            give_up() || ctrl.failed.lock().unwrap().is_some()
+        });
+        if let Some(b) = got {
+            self.installed = Some(b.stamp);
+            return Ok(Some((b.sample, b.stats)));
+        }
+        if let Some(e) = self.error() {
+            return Err(Self::fail_err(e));
+        }
+        Ok(None)
+    }
+}
+
+impl Drop for BackgroundSampler {
+    fn drop(&mut self) {
+        {
+            let mut st = self.ctrl.state.lock().unwrap();
+            st.shutdown = true;
+            self.ctrl.epoch.fetch_add(1, Ordering::SeqCst);
+            self.ctrl.cv.notify_all();
+        }
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn builder_loop(
+    store: &mut StratifiedStore,
+    ctrl: &Arc<Ctrl>,
+    handle: &SampleHandle,
+    cfg: &SamplerConfig,
+    seed: u64,
+    worker: usize,
+    log: &EventLog,
+) {
+    loop {
+        // Take the next job; capture the epoch under the same lock so no
+        // post can slip between the take and the snapshot.
+        let (job, my_epoch) = {
+            let mut st = ctrl.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(j) = st.job.take() {
+                    break (j, ctrl.epoch.load(Ordering::SeqCst));
+                }
+                st = ctrl.cv.wait(st).unwrap();
+            }
+        };
+        log.record(
+            worker,
+            EventKind::ResampleStart,
+            None,
+            job.stamp.version as f64,
+        );
+        let invalidated = || ctrl.epoch.load(Ordering::Relaxed) != my_epoch;
+        match build_once(store, &job.model, job.stamp, cfg, seed, invalidated) {
+            Ok(BuildOutcome::Built { sample, stats }) => {
+                log.record(worker, EventKind::ResampleEnd, None, stats.kept as f64);
+                handle.publish(BuiltSample {
+                    sample,
+                    stats,
+                    stamp: job.stamp,
+                });
+            }
+            Ok(BuildOutcome::Invalidated { read }) => {
+                log.record(worker, EventKind::BuildAbort, None, read as f64);
+            }
+            Err(e) => {
+                *ctrl.failed.lock().unwrap() = Some(e.to_string());
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthGen;
+    use crate::data::SynthConfig;
+    use crate::model::Stump;
+
+    fn make_store(name: &str, n: usize, seed: u64) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("sparrow_bg_sampler_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{name}_{seed}_{n}.sprw"));
+        let cfg = SynthConfig {
+            f: 6,
+            pos_rate: 0.3,
+            informative: 3,
+            signal: 1.0,
+            flip_rate: 0.0,
+            seed,
+        };
+        SynthGen::new(cfg).write_store(&path, n).unwrap();
+        path
+    }
+
+    fn open(path: &std::path::Path, resident_rows: usize) -> StratifiedStore {
+        StratifiedStore::open(
+            path,
+            IoThrottle::unlimited(),
+            StrataConfig { resident_rows },
+        )
+        .unwrap()
+    }
+
+    fn cfg(m: usize, block: usize) -> SamplerConfig {
+        SamplerConfig {
+            target_m: m,
+            kind: SamplerKind::MinimalVariance,
+            probe: 256,
+            max_passes: 1,
+            block,
+        }
+    }
+
+    fn model1() -> StrongRule {
+        let mut m = StrongRule::new();
+        m.push(Stump::new(0, 0.0, 1.0), 0.8);
+        m
+    }
+
+    fn built(
+        store: &mut StratifiedStore,
+        model: &StrongRule,
+        stamp: BuildStamp,
+        c: &SamplerConfig,
+        seed: u64,
+    ) -> SampleSet {
+        match build_once(store, model, stamp, c, seed, || false).unwrap() {
+            BuildOutcome::Built { sample, .. } => sample,
+            other => panic!("expected Built, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn near_target_size_and_fresh_weights() {
+        let path = make_store("size", 6000, 1);
+        let mut store = open(&path, 0);
+        let stamp = BuildStamp {
+            version: 0,
+            attempt: 0,
+        };
+        let s = built(&mut store, &StrongRule::new(), stamp, &cfg(1000, 512), 7);
+        // scale calibration: expected keeps == m, no truncation → within 15%
+        assert!(
+            (s.len() as f64 - 1000.0).abs() < 150.0,
+            "kept={}",
+            s.len()
+        );
+        // fresh sample: unit weights
+        assert!((s.n_eff() - s.len() as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn contents_independent_of_block_size() {
+        // the order-independence property behind safe mid-build aborts:
+        // chunking the pass differently must not change the sample
+        let path = make_store("chunk", 3000, 2);
+        let stamp = BuildStamp {
+            version: 4,
+            attempt: 1,
+        };
+        let model = model1();
+        let a = built(&mut open(&path, 0), &model, stamp, &cfg(400, 32), 9);
+        let b = built(&mut open(&path, 0), &model, stamp, &cfg(400, 1024), 9);
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.score_sample, b.score_sample);
+    }
+
+    #[test]
+    fn contents_independent_of_residency_state() {
+        // the strata index re-prices I/O but must never steer contents:
+        // a warm (post-commit, resident strata active) store builds the
+        // identical sample. A finite throttle is required for residency to
+        // engage at all; make it effectively instant so the test is fast.
+        let path = make_store("warm", 3000, 3);
+        let stamp = BuildStamp {
+            version: 2,
+            attempt: 0,
+        };
+        let model = model1();
+        let cold = built(&mut open(&path, 0), &model, stamp, &cfg(400, 256), 11);
+        let mut warm_store = StratifiedStore::open(
+            &path,
+            IoThrottle::new(1e12),
+            StrataConfig {
+                resident_rows: 1024,
+            },
+        )
+        .unwrap();
+        let first = built(&mut warm_store, &model, stamp, &cfg(400, 256), 11);
+        assert!(
+            warm_store.resident_fraction() > 0.0,
+            "residency must engage for the warm build"
+        );
+        let warm = built(&mut warm_store, &model, stamp, &cfg(400, 256), 11);
+        assert_eq!(cold.data, first.data);
+        assert_eq!(first.data, warm.data);
+    }
+
+    #[test]
+    fn stamps_vary_contents() {
+        let path = make_store("stamps", 3000, 4);
+        let c = cfg(400, 256);
+        let m = StrongRule::new();
+        let base = built(
+            &mut open(&path, 0),
+            &m,
+            BuildStamp {
+                version: 0,
+                attempt: 0,
+            },
+            &c,
+            5,
+        );
+        let next_attempt = built(
+            &mut open(&path, 0),
+            &m,
+            BuildStamp {
+                version: 0,
+                attempt: 1,
+            },
+            &c,
+            5,
+        );
+        let next_version = built(
+            &mut open(&path, 0),
+            &m,
+            BuildStamp {
+                version: 1,
+                attempt: 0,
+            },
+            &c,
+            5,
+        );
+        assert!(base.data != next_attempt.data);
+        assert!(base.data != next_version.data);
+    }
+
+    #[test]
+    fn invalidation_discards_in_flight_build() {
+        let path = make_store("inval", 4000, 5);
+        let mut store = open(&path, 0);
+        let mut polls = 0;
+        let out = build_once(
+            &mut store,
+            &StrongRule::new(),
+            BuildStamp {
+                version: 0,
+                attempt: 0,
+            },
+            &cfg(500, 128),
+            13,
+            || {
+                polls += 1;
+                polls > 3
+            },
+        )
+        .unwrap();
+        match out {
+            BuildOutcome::Invalidated { read } => {
+                assert!(read < 4000, "aborted early, read={read}");
+            }
+            other => panic!("expected Invalidated, got {other:?}"),
+        }
+        // the aborted build left no trace: committed index still pristine
+        assert_eq!(
+            store.bucket(0) as usize,
+            crate::data::strata::NUM_STRATA / 2
+        );
+        // and a subsequent full build is identical to one on a fresh store
+        let stamp = BuildStamp {
+            version: 1,
+            attempt: 0,
+        };
+        let after_abort = built(&mut store, &StrongRule::new(), stamp, &cfg(500, 128), 13);
+        let fresh = built(
+            &mut open(&path, 0),
+            &StrongRule::new(),
+            stamp,
+            &cfg(500, 128),
+            13,
+        );
+        assert_eq!(after_abort.data, fresh.data);
+    }
+
+    #[test]
+    fn thread_converges_to_latest_version() {
+        // the end-to-end invalidation invariant, no sleeps: whatever the
+        // interleaving (the v1 build may complete or abort), the sample
+        // that installs for v2 is byte-identical to a synchronous build
+        // against (seed, {version: 2, attempt: 0}, model_v2).
+        let path = make_store("thread", 3000, 6);
+        let (log, _rx) = EventLog::new();
+        let c = cfg(400, 128);
+        let mut bg = BackgroundSampler::spawn(
+            &path,
+            IoThrottle::unlimited(),
+            StrataConfig { resident_rows: 0 },
+            c.clone(),
+            21,
+            0,
+            log,
+        )
+        .unwrap();
+
+        let m0 = StrongRule::new();
+        bg.request(0, &m0);
+        let (s0, _) = bg.wait_install(0, || false).unwrap().expect("initial fill");
+        let sync0 = built(
+            &mut open(&path, 0),
+            &m0,
+            BuildStamp {
+                version: 0,
+                attempt: 0,
+            },
+            &c,
+            21,
+        );
+        assert_eq!(s0.data, sync0.data);
+
+        // two rapid model changes: v1 then v2 — v1's build may be aborted
+        // mid-flight or complete and be discarded as stale; either way only
+        // a v2-stamped sample may install
+        let m1 = model1();
+        let mut m2 = model1();
+        m2.push(Stump::new(1, 0.5, -1.0), 0.4);
+        bg.request(1, &m1);
+        bg.on_model_change(2, &m2);
+        let (s2, _) = bg.wait_install(2, || false).unwrap().expect("v2 sample");
+        let sync2 = built(
+            &mut open(&path, 0),
+            &m2,
+            BuildStamp {
+                version: 2,
+                attempt: 0,
+            },
+            &c,
+            21,
+        );
+        assert_eq!(s2.data, sync2.data);
+        assert_eq!(s2.score_sample, sync2.score_sample);
+    }
+
+    #[test]
+    fn repeat_request_bumps_attempt() {
+        let path = make_store("attempt", 2500, 7);
+        let (log, _rx) = EventLog::new();
+        let c = cfg(300, 256);
+        let mut bg = BackgroundSampler::spawn(
+            &path,
+            IoThrottle::unlimited(),
+            StrataConfig { resident_rows: 0 },
+            c.clone(),
+            31,
+            0,
+            log,
+        )
+        .unwrap();
+        let m = StrongRule::new();
+        bg.request(0, &m);
+        let (a, _) = bg.wait_install(0, || false).unwrap().unwrap();
+        bg.request(0, &m); // same version again → attempt 1 → new coins
+        let (b, _) = bg.wait_install(0, || false).unwrap().unwrap();
+        assert!(a.data != b.data, "attempt bump must redraw the sample");
+    }
+
+    #[test]
+    fn request_dedupes_while_outstanding() {
+        let path = make_store("dedupe", 2000, 8);
+        let (log, rx) = EventLog::new();
+        let mut bg = BackgroundSampler::spawn(
+            &path,
+            IoThrottle::unlimited(),
+            StrataConfig { resident_rows: 0 },
+            cfg(300, 256),
+            41,
+            0,
+            log,
+        )
+        .unwrap();
+        let m = StrongRule::new();
+        bg.request(0, &m);
+        bg.request(0, &m); // must not queue a second build
+        bg.request(0, &m);
+        let _ = bg.wait_install(0, || false).unwrap().unwrap();
+        drop(bg); // join the thread so no further events can arrive
+        let starts = crate::metrics::drain(&rx)
+            .iter()
+            .filter(|e| e.kind == EventKind::ResampleStart)
+            .count();
+        assert_eq!(starts, 1, "duplicate requests must dedupe");
+    }
+}

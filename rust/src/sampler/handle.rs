@@ -1,0 +1,232 @@
+//! Double-buffered sample handoff between the background sampler thread
+//! and the scanner (DESIGN.md §4: the swap protocol).
+//!
+//! The handle holds at most one **pending** sample, stamped with the model
+//! version (and build attempt) it was built against. The builder publishes
+//! into the slot — latest wins, an unclaimed older pending is dropped — and
+//! the scanner takes from it at a batch boundary. The take is guarded by
+//! the scanner's *current* version: a pending sample stamped with any other
+//! version is discarded on sight, which is the consumer half of the
+//! invalidation invariant (the swapped-in sample is always one built
+//! against the currently-adopted model).
+//!
+//! The swap itself is a constant-time pointer move under an uncontended
+//! mutex (each side holds the lock only to move a `Box`); the `ready` flag
+//! is a separate atomic so the scanner's between-batches poll never takes
+//! the lock at all.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::data::SampleSet;
+use crate::sampler::SampleStats;
+
+/// Identity of one background build: the worker-local model version it was
+/// built against, plus a per-version attempt counter (bumped when the same
+/// model needs a *different* sample, e.g. after the scanner exhausts one).
+///
+/// Together with the run seed, the stamp fully determines the accepted
+/// sample's contents — see `sampler::background::build_once`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BuildStamp {
+    /// worker-local model version (bumped on every adoption and publish)
+    pub version: u64,
+    /// rebuild counter within one version
+    pub attempt: u64,
+}
+
+/// A finished background build: the sample, its build statistics, and the
+/// stamp identifying the model it was built against.
+#[derive(Debug)]
+pub struct BuiltSample {
+    /// the freshly built in-memory sample
+    pub sample: SampleSet,
+    /// statistics of the build pass (reads, keeps, duration, mean weight)
+    pub stats: SampleStats,
+    /// which (version, attempt) this sample realizes
+    pub stamp: BuildStamp,
+}
+
+struct Shared {
+    pending: Mutex<Option<Box<BuiltSample>>>,
+    cv: Condvar,
+    /// own Arc so interrupt closures can hold the flag without the handle
+    ready: Arc<AtomicBool>,
+}
+
+/// The scanner ⇄ builder handoff slot. Cheaply cloneable; all clones share
+/// the same single pending buffer.
+#[derive(Clone)]
+pub struct SampleHandle {
+    shared: Arc<Shared>,
+}
+
+impl Default for SampleHandle {
+    fn default() -> Self {
+        SampleHandle::new()
+    }
+}
+
+impl SampleHandle {
+    /// Create an empty handle.
+    pub fn new() -> SampleHandle {
+        SampleHandle {
+            shared: Arc::new(Shared {
+                pending: Mutex::new(None),
+                cv: Condvar::new(),
+                ready: Arc::new(AtomicBool::new(false)),
+            }),
+        }
+    }
+
+    /// Builder side: publish a finished sample. Replaces any unclaimed
+    /// pending sample (latest wins) and wakes a waiting consumer.
+    pub fn publish(&self, built: BuiltSample) {
+        let mut slot = self.shared.pending.lock().unwrap();
+        *slot = Some(Box::new(built));
+        self.shared.ready.store(true, Ordering::Release);
+        self.shared.cv.notify_all();
+    }
+
+    /// Is a pending sample available? Lock-free; safe to poll from the
+    /// scanner's between-batches interrupt check.
+    pub fn ready(&self) -> bool {
+        self.shared.ready.load(Ordering::Acquire)
+    }
+
+    /// A clone of the ready flag for embedding in interrupt closures
+    /// (lets the scanner poll without borrowing the handle).
+    pub fn ready_flag(&self) -> Arc<AtomicBool> {
+        self.shared.ready.clone()
+    }
+
+    /// Consumer side: take the pending sample **iff** it was built against
+    /// `current_version`. A pending sample with any other version stamp is
+    /// discarded (the model moved on while it was in flight) and `None` is
+    /// returned.
+    pub fn take_if_current(&self, current_version: u64) -> Option<BuiltSample> {
+        let mut slot = self.shared.pending.lock().unwrap();
+        let taken = match slot.take() {
+            Some(b) if b.stamp.version == current_version => Some(*b),
+            // stale: drop it (building for the current version is the
+            // producer's job; see BackgroundSampler::request)
+            _ => None,
+        };
+        self.shared.ready.store(slot.is_some(), Ordering::Release);
+        taken
+    }
+
+    /// Block until [`SampleHandle::take_if_current`] succeeds or `give_up`
+    /// returns true (checked at least every `tick`). Used only for the
+    /// initial fill, when the scanner has no sample to keep working on.
+    pub fn wait_take(
+        &self,
+        current_version: u64,
+        tick: Duration,
+        mut give_up: impl FnMut() -> bool,
+    ) -> Option<BuiltSample> {
+        let mut slot = self.shared.pending.lock().unwrap();
+        loop {
+            match slot.take() {
+                Some(b) if b.stamp.version == current_version => {
+                    self.shared.ready.store(false, Ordering::Release);
+                    return Some(*b);
+                }
+                Some(_) => {
+                    // stale pending: discard and keep waiting
+                    self.shared.ready.store(false, Ordering::Release);
+                }
+                None => {}
+            }
+            if give_up() {
+                return None;
+            }
+            let (s, _) = self.shared.cv.wait_timeout(slot, tick).unwrap();
+            slot = s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SampleSet;
+    use std::time::Duration as D;
+
+    fn built(version: u64, attempt: u64, n: usize) -> BuiltSample {
+        let mut data = crate::data::DataBlock::empty(1);
+        for i in 0..n {
+            data.push(&[i as f32], 1.0);
+        }
+        let len = data.n;
+        BuiltSample {
+            sample: SampleSet::fresh(data, vec![0.0; len], 0),
+            stats: SampleStats {
+                read: n as u64,
+                kept: n,
+                duration: D::ZERO,
+                mean_weight: 1.0,
+            },
+            stamp: BuildStamp { version, attempt },
+        }
+    }
+
+    #[test]
+    fn publish_take_roundtrip() {
+        let h = SampleHandle::new();
+        assert!(!h.ready());
+        assert!(h.take_if_current(0).is_none());
+        h.publish(built(3, 0, 5));
+        assert!(h.ready());
+        let b = h.take_if_current(3).expect("matching version");
+        assert_eq!(b.stamp, BuildStamp { version: 3, attempt: 0 });
+        assert_eq!(b.sample.len(), 5);
+        assert!(!h.ready());
+    }
+
+    #[test]
+    fn stale_pending_discarded() {
+        let h = SampleHandle::new();
+        h.publish(built(1, 0, 4));
+        // consumer has moved on to version 2: the v1 sample must never be
+        // installed, and the slot must come back empty
+        assert!(h.take_if_current(2).is_none());
+        assert!(!h.ready());
+        assert!(h.take_if_current(1).is_none(), "discard is permanent");
+    }
+
+    #[test]
+    fn latest_publish_wins() {
+        let h = SampleHandle::new();
+        h.publish(built(5, 0, 2));
+        h.publish(built(5, 1, 9));
+        let b = h.take_if_current(5).unwrap();
+        assert_eq!(b.stamp.attempt, 1);
+        assert_eq!(b.sample.len(), 9);
+        assert!(h.take_if_current(5).is_none(), "slot holds one sample");
+    }
+
+    #[test]
+    fn wait_take_gives_up() {
+        let h = SampleHandle::new();
+        let mut polls = 0;
+        let got = h.wait_take(0, D::from_millis(1), || {
+            polls += 1;
+            polls > 2
+        });
+        assert!(got.is_none());
+    }
+
+    #[test]
+    fn wait_take_crosses_threads() {
+        let h = SampleHandle::new();
+        let h2 = h.clone();
+        let t = std::thread::spawn(move || {
+            h2.publish(built(7, 0, 3));
+        });
+        let b = h.wait_take(7, D::from_millis(5), || false).unwrap();
+        assert_eq!(b.stamp.version, 7);
+        t.join().unwrap();
+    }
+}

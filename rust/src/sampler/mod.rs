@@ -8,6 +8,57 @@
 //! pass continues until the target sample size is reached (bounded by
 //! `max_passes`). The time spent here is the flat plateau visible in the
 //! paper's Figures 3-4.
+//!
+//! Two drive modes share this module (`SamplerMode` in
+//! [`crate::config`], spec in DESIGN.md §4):
+//!
+//! * **Blocking** (default, paper-faithful): [`Sampler::resample`] runs on
+//!   the worker thread; the scanner idles for the whole pass — that *is*
+//!   the plateau.
+//! * **Background**: a [`background::BackgroundSampler`] thread builds the
+//!   next sample concurrently against the latest adopted model over a
+//!   stratified store ([`crate::data::strata`]), stamps it with the model
+//!   version, and hands it over through the double-buffered
+//!   [`handle::SampleHandle`]; the scanner flips at a batch boundary with
+//!   ~zero stall, and a TMSN adoption mid-build invalidates the in-flight
+//!   sample.
+//!
+//! # Example
+//!
+//! Blocking resample against the empty model:
+//!
+//! ```
+//! use sparrow::data::synth::SynthGen;
+//! use sparrow::data::{IoThrottle, SynthConfig};
+//! use sparrow::model::StrongRule;
+//! use sparrow::sampler::{Sampler, SamplerConfig};
+//! use sparrow::util::rng::Rng;
+//!
+//! let dir = std::env::temp_dir().join("sparrow_doc_sampler");
+//! std::fs::create_dir_all(&dir).unwrap();
+//! let path = dir.join("doc.sprw");
+//! let synth = SynthConfig { f: 4, pos_rate: 0.4, informative: 2, signal: 1.0,
+//!                           flip_rate: 0.0, seed: 1 };
+//! let store = SynthGen::new(synth).write_store(&path, 2000).unwrap();
+//!
+//! let mut sampler = Sampler::new(
+//!     store.stream(IoThrottle::unlimited()).unwrap(),
+//!     store.len(),
+//!     SamplerConfig { target_m: 256, ..SamplerConfig::default() },
+//!     Rng::new(7),
+//! );
+//! let (sample, stats) = sampler.resample(&StrongRule::new()).unwrap();
+//! assert_eq!(sample.len(), 256);
+//! assert!(stats.read >= 256);
+//! ```
+
+#![warn(missing_docs)]
+
+pub mod background;
+pub mod handle;
+
+pub use background::{build_once, BackgroundSampler, BuildOutcome};
+pub use handle::{BuildStamp, BuiltSample, SampleHandle};
 
 use std::time::{Duration, Instant};
 
@@ -23,10 +74,12 @@ use crate::util::rng::Rng;
 pub struct SamplerConfig {
     /// target in-memory sample size m
     pub target_m: usize,
+    /// which selective-sampling strategy keeps examples (A2 ablation)
     pub kind: SamplerKind,
     /// examples probed to estimate the selection scale
     pub probe: usize,
     /// stop after this many circular passes even if under target
+    /// (blocking mode only; a background build is exactly one pass)
     pub max_passes: u32,
     /// disk-read block size
     pub block: usize,
@@ -47,9 +100,13 @@ impl Default for SamplerConfig {
 /// Outcome statistics of one resampling pass (events + Fig-3 plateaus).
 #[derive(Debug, Clone, Copy)]
 pub struct SampleStats {
+    /// store records read (and scored) during the pass
     pub read: u64,
+    /// examples kept into the new sample
     pub kept: usize,
+    /// wall-clock time of the pass, throttle stalls included
     pub duration: Duration,
+    /// mean example weight estimated by the probe
     pub mean_weight: f64,
 }
 
@@ -62,6 +119,10 @@ pub struct Sampler {
 }
 
 impl Sampler {
+    /// A sampler over `stream` (a circular cursor into a store of
+    /// `store_len` examples). The cursor position persists across
+    /// [`Sampler::resample`] calls, so successive resamples read
+    /// successive regions of the permuted store.
     pub fn new(stream: StoreStream, store_len: usize, cfg: SamplerConfig, rng: Rng) -> Sampler {
         assert!(store_len > 0, "empty store");
         assert!(cfg.target_m >= 1);
@@ -156,7 +217,9 @@ impl Sampler {
     }
 }
 
-fn score_block(model: &StrongRule, block: &DataBlock) -> Vec<(f32, f64)> {
+/// Score a block under `model`, returning per-example `(score, weight)`
+/// with `w = exp(-y·H(x))`. Shared by the blocking and background passes.
+pub(crate) fn score_block(model: &StrongRule, block: &DataBlock) -> Vec<(f32, f64)> {
     (0..block.n)
         .map(|i| {
             let s = model.score(block.row(i));

@@ -1,4 +1,10 @@
 //! Weighted sampling substrate (§3 "Effective Sample Size", §4.1 Sampler).
+//!
+//! [`ess::n_eff`] is the resample trigger; the [`selective`] strategies
+//! decide which streamed examples a resample keeps. Both drive modes of
+//! [`crate::sampler`] (blocking and background) sit on top of this module.
+
+#![warn(missing_docs)]
 
 pub mod ess;
 pub mod selective;

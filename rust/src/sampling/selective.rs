@@ -18,6 +18,7 @@ pub trait SelectiveSampler: Send {
     /// example of weight `c` is kept exactly once in expectation).
     fn scale(&self) -> f64;
 
+    /// Human-readable strategy name (ablation tables, logs).
     fn name(&self) -> &'static str;
 }
 
@@ -77,6 +78,8 @@ pub struct RejectionSampler {
 }
 
 impl RejectionSampler {
+    /// `scale` = expected weight mass per kept example (as in
+    /// [`MinimalVarianceSampler::new`]).
     pub fn new(scale: f64) -> RejectionSampler {
         assert!(scale > 0.0);
         RejectionSampler { scale }
@@ -106,10 +109,12 @@ impl SelectiveSampler for RejectionSampler {
 /// weight so the caller must carry w into the sample).
 #[derive(Debug)]
 pub struct UniformSampler {
+    /// flat keep probability per offered example
     pub rate: f64,
 }
 
 impl UniformSampler {
+    /// Keep every offered example with probability `rate ∈ [0, 1]`.
     pub fn new(rate: f64) -> UniformSampler {
         assert!((0.0..=1.0).contains(&rate));
         UniformSampler { rate }

@@ -8,6 +8,14 @@
 //! mechanics live in the payload-generic [`crate::tmsn::Driver`]; this
 //! module supplies what is boosting-specific: the scan, the sample, and
 //! the weight-rebasing that keeps the sample consistent across adoptions.
+//!
+//! With `SamplerMode::Background` (DESIGN.md §4) the resample runs on a
+//! dedicated thread instead of inline: the worker tracks a local **model
+//! version** (bumped on every adoption and publish), forwards each change
+//! to the [`crate::sampler::BackgroundSampler`] so an in-flight build is
+//! invalidated, and swaps a version-matched finished sample in at a batch
+//! boundary — the scanner keeps scanning the old sample in the meantime
+//! instead of idling through the paper's resample plateau.
 
 pub mod link;
 pub mod throttle;
@@ -20,11 +28,11 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::boosting::{alpha_for_advantage, CandidateGrid};
-use crate::config::TrainConfig;
-use crate::data::{DiskStore, IoThrottle, SampleSet};
+use crate::config::{SamplerMode, TrainConfig};
+use crate::data::{DiskStore, IoThrottle, SampleSet, StrataConfig};
 use crate::metrics::{EventKind, EventLog};
 use crate::model::StrongRule;
-use crate::sampler::{Sampler, SamplerConfig};
+use crate::sampler::{BackgroundSampler, SampleStats, Sampler, SamplerConfig};
 use crate::scanner::{ScanBackend, ScanOutcome, Scanner, ScannerConfig};
 use crate::stopping::{DwRule, FixedScan, HoeffdingRule, LilRule, StoppingRule};
 use crate::tmsn::{BoostPayload, Driver, Link, Tmsn};
@@ -61,6 +69,59 @@ pub struct WorkerResult {
     pub resamples: u64,
     pub scanned: u64,
     pub crashed: bool,
+}
+
+/// How the worker's sample gets rebuilt: inline (paper-faithful) or on the
+/// background pipeline (DESIGN.md §4).
+enum SampleSource {
+    Blocking(Sampler),
+    Background(BackgroundSampler),
+}
+
+/// Result for a worker that crashed before its main loop could run (e.g.
+/// the background sampler thread failed to spawn).
+fn crashed_result(id: usize, cfg: &TrainConfig, log: &EventLog) -> WorkerResult {
+    let tmsn: Tmsn<BoostPayload> = match &cfg.resume {
+        Some((model, bound)) => Tmsn::resume(id, BoostPayload::resume(model.clone(), *bound)),
+        None => Tmsn::new(id),
+    };
+    log.record(id, EventKind::Finish, None, tmsn.cert().loss_bound);
+    WorkerResult {
+        id,
+        model: tmsn.payload().model.clone(),
+        loss_bound: tmsn.cert().loss_bound,
+        found: 0,
+        accepts: 0,
+        rejects: 0,
+        resamples: 0,
+        scanned: 0,
+        crashed: true,
+    }
+}
+
+/// Install a background-built sample into the scanner's seat (swap at a
+/// batch boundary): replace the sample, rewind the scan cursor, count the
+/// resample, and emit the `SampleSwap` event.
+fn install_sample(
+    sample: &mut SampleSet,
+    scanner: &mut Scanner,
+    resamples: &mut u64,
+    log: &EventLog,
+    id: usize,
+    fresh: SampleSet,
+    stats: SampleStats,
+) {
+    *sample = fresh;
+    scanner.reset_cursor();
+    *resamples += 1;
+    log.record(id, EventKind::SampleSwap, None, stats.kept as f64);
+}
+
+/// Log a sampler disk failure (treated as a crash — resilience semantics);
+/// the caller sets `crashed` and breaks its loop.
+fn log_sampler_crash(log: &EventLog, id: usize, e: &dyn std::fmt::Display) {
+    log.record(id, EventKind::Crash, None, 0.0);
+    eprintln!("worker {id}: sampler I/O error: {e}");
 }
 
 /// Build the configured stopping rule, union-bounded over the stripe's
@@ -127,18 +188,46 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
     } else {
         IoThrottle::unlimited()
     };
-    let mut sampler = Sampler::new(
-        store.stream(throttle).expect("open store stream"),
-        store.len(),
-        SamplerConfig {
-            target_m: cfg.sample_size,
-            kind: cfg.sampler,
-            probe: cfg.sample_size.min(4096),
-            max_passes: 3,
-            block: 1024,
-        },
-        rng.fork(1),
-    );
+    let sampler_cfg = SamplerConfig {
+        target_m: cfg.sample_size,
+        kind: cfg.sampler,
+        probe: cfg.sample_size.min(4096),
+        max_passes: 3,
+        block: 1024,
+    };
+    let mut sampler_rng = rng.fork(1);
+    let mut source = match cfg.sampler_mode {
+        SamplerMode::Blocking => SampleSource::Blocking(Sampler::new(
+            store.stream(throttle).expect("open store stream"),
+            store.len(),
+            sampler_cfg,
+            sampler_rng,
+        )),
+        SamplerMode::Background => {
+            match BackgroundSampler::spawn(
+                store.path(),
+                throttle,
+                StrataConfig {
+                    // keep roughly a few samples' worth of heavy strata hot
+                    resident_rows: cfg.sample_size.saturating_mul(4),
+                },
+                sampler_cfg,
+                sampler_rng.next_u64(),
+                id,
+                log.clone(),
+            ) {
+                Ok(bg) => SampleSource::Background(bg),
+                Err(e) => {
+                    log.record(id, EventKind::Crash, None, 0.0);
+                    eprintln!("worker {id}: background sampler spawn failed: {e}");
+                    return crashed_result(id, &cfg, &log);
+                }
+            }
+        }
+    };
+    // worker-local model version: bumped on every adoption and publish;
+    // stamps background builds so stale in-flight samples are invalidated
+    let mut version: u64 = 0;
 
     let tmsn = match &cfg.resume {
         Some((model, bound)) => Tmsn::resume(id, BoostPayload::resume(model.clone(), *bound)),
@@ -171,30 +260,89 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
         }
 
         // ---- inbox (receive path of Alg. 1) ----------------------------
-        driver.poll_adopt(&mut |prev, cur| {
+        let adopted = driver.poll_adopt(&mut |prev, cur| {
             rebase_if_foreign(&mut sample, prev, cur);
         });
+        if adopted > 0 {
+            version += adopted as u64;
+            if let SampleSource::Background(bg) = &mut source {
+                // invalidate/restart any in-flight build (DESIGN.md §4)
+                bg.on_model_change(version, &driver.payload().model);
+            }
+        }
+
+        // ---- background handoff: flip to a finished sample -------------
+        if let SampleSource::Background(bg) = &mut source {
+            match bg.try_install(version) {
+                Ok(Some((s, stats))) => {
+                    install_sample(&mut sample, &mut scanner, &mut resamples, &log, id, s, stats);
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    log_sampler_crash(&log, id, &e);
+                    crashed = true;
+                    break 'outer;
+                }
+            }
+        }
 
         // ---- sample freshness (§3 n_eff trigger) ------------------------
         let need_sample = force_resample
             || sample.is_empty()
             || sample.n_eff() / cfg.sample_size as f64 <= cfg.ess_threshold;
         if need_sample {
-            log.record(id, EventKind::ResampleStart, None, sample.n_eff());
-            let model = driver.payload().model.clone();
-            match sampler.resample(&model) {
-                Ok((s, stats)) => {
-                    sample = s;
-                    scanner.reset_cursor();
-                    resamples += 1;
-                    log.record(id, EventKind::ResampleEnd, None, stats.kept as f64);
+            match &mut source {
+                SampleSource::Blocking(sampler) => {
+                    log.record(id, EventKind::ResampleStart, None, sample.n_eff());
+                    let model = driver.payload().model.clone();
+                    match sampler.resample(&model) {
+                        Ok((s, stats)) => {
+                            sample = s;
+                            scanner.reset_cursor();
+                            resamples += 1;
+                            log.record(id, EventKind::ResampleEnd, None, stats.kept as f64);
+                        }
+                        Err(e) => {
+                            // disk failure: treat as crash (resilience semantics)
+                            log_sampler_crash(&log, id, &e);
+                            crashed = true;
+                            break 'outer;
+                        }
+                    }
                 }
-                Err(e) => {
-                    // disk failure: treat as crash (resilience semantics)
-                    log.record(id, EventKind::Crash, None, 0.0);
-                    eprintln!("worker {id}: sampler I/O error: {e}");
-                    crashed = true;
-                    break 'outer;
+                SampleSource::Background(bg) => {
+                    // ask for a build against the current model (deduped
+                    // while one is already in flight)
+                    bg.request(version, &driver.payload().model);
+                    if sample.is_empty() {
+                        // initial fill: nothing to scan yet, so this wait
+                        // is the only blocking hand-off in background mode
+                        let install = bg.wait_install(version, || {
+                            stop.load(Ordering::Relaxed)
+                                || start.elapsed() >= cfg.time_limit
+                        });
+                        match install {
+                            Ok(Some((s, stats))) => {
+                                install_sample(
+                                    &mut sample,
+                                    &mut scanner,
+                                    &mut resamples,
+                                    &log,
+                                    id,
+                                    s,
+                                    stats,
+                                );
+                            }
+                            Ok(None) => break 'outer, // stopped while waiting
+                            Err(e) => {
+                                log_sampler_crash(&log, id, &e);
+                                crashed = true;
+                                break 'outer;
+                            }
+                        }
+                    }
+                    // else: keep scanning the stale sample until the fresh
+                    // one lands — the plateau the pipeline eliminates
                 }
             }
             force_resample = false;
@@ -207,8 +355,16 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
         // ---- one scanner invocation -------------------------------------
         let model = driver.payload().model.clone();
         let deadline_hit = &stop;
+        // a finished background sample also interrupts the pass, so the
+        // swap happens at a batch boundary instead of a pass boundary
+        let bg_ready = match &source {
+            SampleSource::Background(bg) => Some(bg.ready_flag()),
+            SampleSource::Blocking(_) => None,
+        };
         let outcome = scanner.run_pass(&mut sample, &model, || {
-            deadline_hit.load(Ordering::Relaxed) || driver.poll_interrupt()
+            deadline_hit.load(Ordering::Relaxed)
+                || driver.poll_interrupt()
+                || bg_ready.as_ref().map_or(false, |r| r.load(Ordering::Relaxed))
         });
         // surface γ-halving events
         for _ in prev_gamma_shrinks..scanner.gamma_shrinks {
@@ -225,17 +381,70 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
                 let mut new_model = driver.payload().model.clone();
                 new_model.push(stump, alpha_for_advantage(gamma) as f32);
                 driver.publish(driver.payload().improved(new_model, gamma));
+                version += 1;
+                if let SampleSource::Background(bg) = &mut source {
+                    bg.on_model_change(version, &driver.payload().model);
+                }
                 found += 1;
             }
             ScanOutcome::Exhausted { .. } => {
                 // Alg. 2 `Fail` → build a fresh sample
                 force_resample = true;
+                // In background mode an exhausted sample has nothing
+                // certifiable left — don't busy-spin full passes over it
+                // (each spamming γ-halvings) while the replacement builds;
+                // park on the handoff until the swap, an adoption, or stop.
+                if let SampleSource::Background(bg) = &mut source {
+                    bg.request(version, &driver.payload().model);
+                    let install = bg.wait_install(version, || {
+                        stop.load(Ordering::Relaxed)
+                            || start.elapsed() >= cfg.time_limit
+                            || driver.poll_interrupt()
+                    });
+                    match install {
+                        Ok(Some((s, stats))) => {
+                            install_sample(
+                                &mut sample,
+                                &mut scanner,
+                                &mut resamples,
+                                &log,
+                                id,
+                                s,
+                                stats,
+                            );
+                            force_resample = false;
+                        }
+                        Ok(None) => {
+                            // gave up: a strictly-better model may be
+                            // parked from the poll_interrupt probe above
+                            let adopted = driver.adopt_pending(&mut |prev, cur| {
+                                rebase_if_foreign(&mut sample, prev, cur);
+                            });
+                            if adopted {
+                                version += 1;
+                                bg.on_model_change(version, &driver.payload().model);
+                            }
+                        }
+                        Err(e) => {
+                            log_sampler_crash(&log, id, &e);
+                            crashed = true;
+                            break 'outer;
+                        }
+                    }
+                }
             }
             ScanOutcome::Interrupted { .. } => {
-                driver.adopt_pending(&mut |prev, cur| {
+                let adopted = driver.adopt_pending(&mut |prev, cur| {
                     rebase_if_foreign(&mut sample, prev, cur);
                 });
-                // stop-flag interrupts just fall through to the loop head
+                if adopted {
+                    version += 1;
+                    if let SampleSource::Background(bg) = &mut source {
+                        bg.on_model_change(version, &driver.payload().model);
+                    }
+                }
+                // stop-flag and sample-ready interrupts fall through to
+                // the loop head (where a pending sample is swapped in)
             }
         }
         // tiny jitter so identical workers don't phase-lock in tests

@@ -2,40 +2,18 @@
 //! real multi-threaded runs (event-log causality, bound monotonicity,
 //! robustness to message loss and laggards).
 
+mod common;
+
 use std::time::Duration;
 
 use sparrow::config::TrainConfig;
 use sparrow::coordinator::{train_cluster, ClusterOutcome};
-use sparrow::data::synth::SynthGen;
-use sparrow::data::SynthConfig;
 use sparrow::metrics::EventKind;
 use sparrow::network::NetConfig;
 use sparrow::scanner::NativeBackend;
 
 fn run(patch: impl FnOnce(&mut TrainConfig)) -> ClusterOutcome {
-    let dir = std::env::temp_dir().join("sparrow_cluster_int");
-    std::fs::create_dir_all(&dir).unwrap();
-    let path = dir.join("train.sprw");
-    let synth = SynthConfig {
-        f: 16,
-        pos_rate: 0.3,
-        informative: 8,
-        signal: 0.8,
-        flip_rate: 0.02,
-        seed: 99,
-    };
-    let mut gen = SynthGen::new(synth);
-    if !path.exists() {
-        gen.write_store(&path, 20_000).unwrap();
-    } else {
-        let mut rem = 20_000usize;
-        while rem > 0 {
-            let take = rem.min(8192);
-            gen.next_block(take);
-            rem -= take;
-        }
-    }
-    let test = gen.next_block(2_000);
+    let (path, test) = common::synth_store("sparrow_cluster_int", 99, 20_000, 2_000);
     let mut cfg = TrainConfig {
         num_workers: 4,
         sample_size: 2048,
@@ -154,8 +132,7 @@ fn resample_events_bracketed() {
 fn final_model_loss_bound_is_sound_on_train_sample() {
     // certified bound >= actual training-set potential, w.h.p. — checked
     // against the full training set (bound soundness, §2)
-    let dir = std::env::temp_dir().join("sparrow_cluster_int");
-    let path = dir.join("train.sprw");
+    let (path, _) = common::synth_store("sparrow_cluster_int", 99, 20_000, 2_000);
     let out = run(|c| c.max_rules = 10);
     let train = sparrow::data::DiskStore::open(&path)
         .unwrap()

@@ -1,0 +1,61 @@
+//! Shared fixtures for the cluster-level integration suites.
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+use std::sync::{Mutex, OnceLock};
+
+use sparrow::data::synth::SynthGen;
+use sparrow::data::{DataBlock, SynthConfig};
+
+fn synth_cfg(seed: u64) -> SynthConfig {
+    SynthConfig {
+        f: 16,
+        pos_rate: 0.3,
+        informative: 8,
+        signal: 0.8,
+        flip_rate: 0.02,
+        seed,
+    }
+}
+
+/// Materialize (once per test binary) an `n`-example training store under a
+/// suite-specific temp dir, plus the `test_n`-example test block drawn from
+/// the same generator stream just past the store prefix (same distribution,
+/// disjoint examples).
+///
+/// Creation is race-free: tests within one binary run on parallel threads,
+/// so the store is built under a `OnceLock`, and the file is written to a
+/// process-unique temp name and atomically renamed into place — a
+/// concurrent or killed writer can never leave a partial store behind for
+/// another run to pick up.
+pub fn synth_store(suite: &str, seed: u64, n: usize, test_n: usize) -> (PathBuf, DataBlock) {
+    let dir = std::env::temp_dir().join(suite);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("train_{seed}_{n}.sprw"));
+    // per-path creation guard (not a single global flag, so one binary may
+    // materialize stores for several (suite, seed, n) combinations); the
+    // lock is held across the write to serialize same-path callers
+    static CREATED: OnceLock<Mutex<HashSet<PathBuf>>> = OnceLock::new();
+    let mut created = CREATED
+        .get_or_init(|| Mutex::new(HashSet::new()))
+        .lock()
+        .unwrap();
+    if created.insert(path.clone()) && !path.exists() {
+        let tmp = dir.join(format!(".train_{seed}_{n}.{}.tmp", std::process::id()));
+        SynthGen::new(synth_cfg(seed)).write_store(&tmp, n).unwrap();
+        // atomic publish; if a concurrent process won the race the rename
+        // just replaces its byte-identical file
+        std::fs::rename(&tmp, &path).unwrap();
+    }
+    drop(created);
+    // fast-forward a fresh generator past the store prefix so every test
+    // shares the identical held-out block
+    let mut gen = SynthGen::new(synth_cfg(seed));
+    let mut rem = n;
+    while rem > 0 {
+        let take = rem.min(8192);
+        gen.next_block(take);
+        rem -= take;
+    }
+    (path, gen.next_block(test_n))
+}

@@ -1,0 +1,115 @@
+//! End-to-end tests for the background sampler pipeline (DESIGN.md §4):
+//! real multi-threaded cluster runs with `SamplerMode::Background`,
+//! checking the swap/invalidation event grammar and that the default
+//! blocking mode is untouched by the knob.
+
+mod common;
+
+use std::time::Duration;
+
+use sparrow::config::{SamplerMode, TrainConfig};
+use sparrow::coordinator::{train_cluster, ClusterOutcome};
+use sparrow::metrics::EventKind;
+use sparrow::scanner::NativeBackend;
+
+fn run(patch: impl FnOnce(&mut TrainConfig)) -> ClusterOutcome {
+    let (path, test) = common::synth_store("sparrow_pipeline_int", 123, 20_000, 2_000);
+    let mut cfg = TrainConfig {
+        num_workers: 2,
+        sample_size: 2048,
+        max_rules: 10,
+        time_limit: Duration::from_secs(30),
+        gamma0: 0.2,
+        sampler_mode: SamplerMode::Background,
+        ..TrainConfig::default()
+    };
+    patch(&mut cfg);
+    train_cluster(&cfg, &path, &test, "pipeline", &|_| {
+        Ok(Box::new(NativeBackend))
+    })
+    .unwrap()
+}
+
+#[test]
+fn background_mode_learns() {
+    let out = run(|_| {});
+    assert!(!out.model.is_empty(), "no rules learned in background mode");
+    // every sample that reached a scanner arrived through the swap path
+    let swaps = out
+        .events
+        .iter()
+        .filter(|e| e.kind == EventKind::SampleSwap)
+        .count();
+    assert!(swaps >= 2, "each worker must install at least one sample");
+    for w in &out.workers {
+        assert!(w.resamples >= 1, "worker {} never installed a sample", w.id);
+        assert!(!w.crashed, "worker {} crashed", w.id);
+    }
+}
+
+#[test]
+fn builder_events_balance() {
+    // builder-side grammar: every build that starts either completes
+    // (ResampleEnd) or is invalidated (BuildAbort) — per worker lane
+    let out = run(|c| c.num_workers = 4);
+    for w in 0..4 {
+        let count = |k: EventKind| {
+            out.events
+                .iter()
+                .filter(|e| e.worker == w && e.kind == k)
+                .count()
+        };
+        let starts = count(EventKind::ResampleStart);
+        let ends = count(EventKind::ResampleEnd);
+        let aborts = count(EventKind::BuildAbort);
+        assert!(starts >= 1, "worker {w} never started a build");
+        // the last build may still be in flight when the run stops, so
+        // starts can exceed ends+aborts by at most one
+        assert!(
+            starts == ends + aborts || starts == ends + aborts + 1,
+            "worker {w}: starts={starts} ends={ends} aborts={aborts}"
+        );
+        // a worker can only swap in samples that finished building
+        let swaps = count(EventKind::SampleSwap);
+        assert!(swaps <= ends, "worker {w}: swaps={swaps} > ends={ends}");
+    }
+}
+
+#[test]
+fn background_cluster_still_certifies_and_adopts() {
+    // protocol invariants don't care how the sample is produced: bounds
+    // stay monotone per worker and adoptions still happen
+    let out = run(|c| {
+        c.num_workers = 4;
+        c.max_rules = 12;
+    });
+    let mut bound = vec![f64::INFINITY; 4];
+    for e in &out.events {
+        if matches!(e.kind, EventKind::LocalImprovement | EventKind::Accept) {
+            assert!(
+                e.value <= bound[e.worker] + 1e-9,
+                "worker {} bound went up",
+                e.worker
+            );
+            bound[e.worker] = e.value;
+        }
+    }
+    let accepts = out
+        .events
+        .iter()
+        .filter(|e| e.kind == EventKind::Accept)
+        .count();
+    assert!(accepts > 0, "4-worker background run had no adoptions");
+}
+
+#[test]
+fn blocking_mode_never_emits_pipeline_events() {
+    // the knob must gate the pipeline completely: a default (blocking)
+    // run contains no swap or abort events anywhere
+    let out = run(|c| c.sampler_mode = SamplerMode::Blocking);
+    assert!(!out.model.is_empty());
+    assert!(out
+        .events
+        .iter()
+        .all(|e| e.kind != EventKind::SampleSwap && e.kind != EventKind::BuildAbort));
+}
