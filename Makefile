@@ -1,7 +1,7 @@
 # Convenience entry points. The authoritative verification gate is
 # scripts/tier1.sh (used verbatim by CI).
 
-.PHONY: tier1 build test fmt clippy doc artifacts bench clean
+.PHONY: tier1 build test fmt clippy doc artifacts bench bench-scan clean
 
 tier1:
 	./scripts/tier1.sh
@@ -24,10 +24,17 @@ clippy:
 doc:
 	cd rust && cargo doc --no-deps
 
+# Rows-vs-binned scan-engine sweep (DESIGN.md §8) → BENCH_scan.json at the
+# repo root, tracking the scan-throughput trajectory across PRs.
+bench-scan:
+	cd rust && cargo bench --bench micro_hotpath -- --json ../BENCH_scan.json
+
 # AOT-lower the L2/L1 Python graph to HLO-text artifacts consumed by the
 # xla-* backends (requires a JAX environment; see python/compile/aot.py).
 # rust/artifacts is where the runtime tests and benches look for them.
-artifacts:
+# The scan sweep runs first so BENCH_scan.json is refreshed even when no
+# JAX environment is available for the HLO step.
+artifacts: bench-scan
 	cd python && python3 -m compile.aot --out-dir ../rust/artifacts
 
 bench:

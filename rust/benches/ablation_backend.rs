@@ -13,10 +13,10 @@
 use std::path::Path;
 
 use sparrow::boosting::CandidateGrid;
-use sparrow::data::DataBlock;
+use sparrow::data::{BinnedBatch, DataBlock};
 use sparrow::model::{StrongRule, Stump};
 use sparrow::runtime::{Manifest, XlaScanBackend};
-use sparrow::scanner::{NativeBackend, ScanBackend};
+use sparrow::scanner::{BatchResult, BinnedBackend, NativeBackend, ScanBackend};
 use sparrow::util::bench::BenchRunner;
 use sparrow::util::rng::Rng;
 
@@ -67,6 +67,31 @@ fn main() {
 
     let mut native = NativeBackend;
     let native_t = bench_backend("native", &mut native, &runner);
+
+    // binned CPU engine (--scan-engine binned): same inputs plus the
+    // prebuilt per-sample bins (built outside the timed region, as at
+    // sample-install time in the worker)
+    {
+        let (block, w, s, l, model, grid) = inputs(B);
+        let stripe_bins = grid.bin_spec((0, F)).bin_block(&block);
+        let idx: Vec<usize> = (0..B).collect();
+        let mut bins = BinnedBatch::default();
+        bins.gather(&stripe_bins, &idx);
+        let mut be = BinnedBackend::new(1);
+        let mut out = BatchResult::zeros(F, NT);
+        let stats = runner.bench("binned", || {
+            out.reset(F, NT);
+            be.scan_batch_into(&block, Some(&bins), &w, &s, &l, &model, &grid, (0, F), &mut out);
+            out.edges.count
+        });
+        let per_ex = stats.median.as_secs_f64() / B as f64;
+        println!(
+            "    binned: {:.2} µs/example, {:.1} M candidate-updates/s ({:.2}x vs native)",
+            per_ex * 1e6,
+            (B * F * NT) as f64 / stats.median.as_secs_f64() / 1e6,
+            native_t / per_ex
+        );
+    }
 
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     match Manifest::load(&dir) {

@@ -118,6 +118,7 @@ fn main() -> anyhow::Result<()> {
             resident_rows: 4 * m,
         },
         cfg.clone(),
+        None,
         7,
         0,
         log,

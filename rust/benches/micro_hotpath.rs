@@ -1,22 +1,108 @@
-//! Micro-benchmarks of the L3 hot paths (§Perf): edge accumulation,
-//! incremental scoring, selective sampling, broadcast fan-out latency,
-//! stopping-rule sweep. Baseline + after numbers live in EXPERIMENTS.md
-//! §Perf.
+//! Micro-benchmarks of the L3 hot paths (§Perf): edge accumulation
+//! (row engine vs the binned columnar engine × thread counts), incremental
+//! scoring, selective sampling, broadcast fan-out latency, stopping-rule
+//! sweep. Baseline + after numbers live in EXPERIMENTS.md §Perf.
 //!
-//!     cargo bench --bench micro_hotpath
+//!     cargo bench --bench micro_hotpath [-- --json BENCH_scan.json]
+//!
+//! `--json PATH` additionally writes the rows-vs-binned scan sweep as a
+//! JSON artifact (`make artifacts` emits it to the repo root as
+//! `BENCH_scan.json`, tracking the perf trajectory across PRs).
 
 use std::time::{Duration, Instant};
 
-use sparrow::boosting::{edges::accumulate_edges_stripe, CandidateGrid, EdgeMatrix};
-use sparrow::data::DataBlock;
+use sparrow::boosting::{
+    edges::{accumulate_edges_stripe, accumulate_edges_stripe_into},
+    CandidateGrid, EdgeMatrix,
+};
+use sparrow::data::{BinnedBatch, DataBlock};
 use sparrow::model::{StrongRule, Stump};
 use sparrow::network::{Fabric, NetConfig};
 use sparrow::sampling::{MinimalVarianceSampler, SelectiveSampler};
+use sparrow::scanner::BinnedBackend;
 use sparrow::stopping::{CandidateStats, LilRule, StoppingRule};
 use sparrow::util::bench::BenchRunner;
+use sparrow::util::json::Json;
 use sparrow::util::rng::Rng;
 
+/// The rows-vs-binned × thread-count sweep of the edge-accumulation hot
+/// loop at the acceptance shape (F=64, NT=8): the row engine's per-example
+/// threshold search vs the binned engine's bucket accumulation (DESIGN.md
+/// §8), both through their zero-allocation scanner entries (scoring is the
+/// shared row-view step and benched separately below). Returns the result
+/// object written to `BENCH_scan.json` by `--json`.
+fn scan_engine_sweep(runner: &BenchRunner) -> Json {
+    const N: usize = 32_768; // many BIN_CHUNK chunks → thread scaling visible
+    const F: usize = 64;
+    const NT: usize = 8;
+    let mut rng = Rng::new(11);
+    let mut block = DataBlock::empty(F);
+    for _ in 0..N {
+        let row: Vec<f32> = (0..F).map(|_| rng.gauss() as f32).collect();
+        block.push(&row, if rng.bernoulli(0.5) { 1.0 } else { -1.0 });
+    }
+    let grid = CandidateGrid::uniform(F, NT, -1.5, 1.5);
+    let w = vec![1.0f32; N];
+    // bins are built once per sample and reused — not part of the hot path
+    let stripe_bins = grid.bin_spec((0, F)).bin_block(&block);
+    let idx: Vec<usize> = (0..N).collect();
+    let mut bins = BinnedBatch::default();
+    bins.gather(&stripe_bins, &idx);
+
+    let mut acc = EdgeMatrix::zeros(F, NT);
+    let mut bucket = Vec::new();
+    let rows = runner.bench("scan rows 32768x64x8", || {
+        acc.reset();
+        accumulate_edges_stripe_into(&block, &w, &grid, (0, F), &mut acc, &mut bucket);
+        acc.count
+    });
+    let rows_s = rows.median.as_secs_f64();
+    println!(
+        "  -> rows: {:.1} M candidate-updates/s",
+        (N * F * NT) as f64 / rows_s / 1e6
+    );
+
+    let mut sweep = Json::obj();
+    let mut binned_1t = rows_s;
+    let mut binned_last = rows_s;
+    for threads in [1usize, 2, 4] {
+        let mut be = BinnedBackend::new(threads);
+        let stats = runner.bench(&format!("scan binned 32768x64x8 t={threads}"), || {
+            acc.reset();
+            be.accumulate_batch(&bins, &w, &block.labels, NT, (0, F), &mut acc);
+            acc.count
+        });
+        let t_s = stats.median.as_secs_f64();
+        if threads == 1 {
+            binned_1t = t_s;
+            println!("  -> binned 1t speedup over rows: {:.2}x", rows_s / t_s);
+        } else {
+            println!("  -> binned {threads}t scaling vs 1t: {:.2}x", binned_1t / t_s);
+        }
+        binned_last = t_s;
+        sweep.set(&format!("t{threads}"), t_s);
+    }
+
+    let mut result = Json::obj();
+    result
+        .set("bench", "scan_engine")
+        .set("n", N)
+        .set("features", F)
+        .set("nthr", NT)
+        .set("rows_s", rows_s)
+        .set("binned_s", sweep)
+        .set("speedup_binned_1t", rows_s / binned_1t)
+        .set("scaling_4t", binned_1t / binned_last);
+    result
+}
+
 fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let json_path = argv
+        .windows(2)
+        .find(|w| w[0] == "--json")
+        .map(|w| w[1].clone());
+
     let runner = BenchRunner {
         warmup: 2,
         runs: 9,
@@ -42,6 +128,13 @@ fn main() {
     });
     let updates = (n * f * nt) as f64 / stats.median.as_secs_f64();
     println!("  -> {:.1} M candidate-updates/s", updates / 1e6);
+
+    // ---- scan engines: rows vs binned × threads (§Perf, DESIGN.md §8) -----
+    let scan_json = scan_engine_sweep(&runner);
+    if let Some(path) = &json_path {
+        std::fs::write(path, scan_json.to_string() + "\n").expect("write BENCH_scan json");
+        println!("scan sweep written to {path}");
+    }
 
     // ---- incremental strong-rule scoring ----------------------------------
     let mut model = StrongRule::new();

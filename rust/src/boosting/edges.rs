@@ -45,6 +45,15 @@ impl EdgeMatrix {
         self.edges[feature * self.nthr + t]
     }
 
+    /// Zero in place, keeping the shape — pass-accumulator reuse
+    /// (the scanner's zero-allocation batch path).
+    pub fn reset(&mut self) {
+        self.edges.fill(0.0);
+        self.sum_w = 0.0;
+        self.sum_w2 = 0.0;
+        self.count = 0;
+    }
+
     /// Merge another accumulation (e.g. from a second batch).
     pub fn merge(&mut self, other: &EdgeMatrix) {
         assert_eq!(self.f, other.f);
@@ -95,6 +104,21 @@ pub fn accumulate_edges_stripe(
     stripe: (usize, usize),
     accum: &mut EdgeMatrix,
 ) {
+    accumulate_edges_stripe_into(block, w, grid, stripe, accum, &mut Vec::new())
+}
+
+/// Scratch-reusing variant: `bucket` is cleared, resized and refilled —
+/// pass the same vector every batch and the edge pass allocates nothing
+/// (the scanner routes its zero-allocation path through here via
+/// `BatchResult`'s bucket scratch).
+pub fn accumulate_edges_stripe_into(
+    block: &DataBlock,
+    w: &[f32],
+    grid: &CandidateGrid,
+    stripe: (usize, usize),
+    accum: &mut EdgeMatrix,
+    bucket: &mut Vec<f64>,
+) {
     let (fs, fe) = stripe;
     assert_eq!(block.f, grid.f);
     assert_eq!(block.n, w.len());
@@ -104,7 +128,8 @@ pub fn accumulate_edges_stripe(
     let nthr = grid.nthr;
     // bucket[(f-fs)*(nthr+1) + k] accumulates u of examples whose value
     // exceeds exactly k thresholds of feature f's ascending row
-    let mut bucket = vec![0f64; (fe - fs) * (nthr + 1)];
+    bucket.clear();
+    bucket.resize((fe - fs) * (nthr + 1), 0.0);
     let mut sum_w = 0.0f64;
     let mut sum_w2 = 0.0f64;
     for i in 0..block.n {
@@ -124,8 +149,26 @@ pub fn accumulate_edges_stripe(
             bucket[(f - fs) * (nthr + 1) + k] += u;
         }
     }
-    // edges[f][t] = sum_{k > t} bucket[k] - sum_{k <= t} bucket[k]
-    //             = 2 * suffix_sum(t+1) - total
+    fold_buckets(bucket, stripe, nthr, accum);
+    accum.sum_w += sum_w;
+    accum.sum_w2 += sum_w2;
+    accum.count += block.n as u64;
+}
+
+/// Convert per-feature bucket accumulations into edge contributions:
+/// `edges[f][t] += sum_{k > t} bucket[k] − sum_{k <= t} bucket[k]
+///              = 2 · suffix_sum(t+1) − total`.
+/// Shared by the row engine above and the binned engine
+/// (`scanner::backend::BinnedBackend`), so both fold with the identical
+/// f64 operation order.
+pub(crate) fn fold_buckets(
+    bucket: &[f64],
+    stripe: (usize, usize),
+    nthr: usize,
+    accum: &mut EdgeMatrix,
+) {
+    let (fs, fe) = stripe;
+    debug_assert_eq!(bucket.len(), (fe - fs) * (nthr + 1));
     for f in fs..fe {
         let b = &bucket[(f - fs) * (nthr + 1)..(f - fs + 1) * (nthr + 1)];
         let total: f64 = b.iter().sum();
@@ -135,9 +178,6 @@ pub fn accumulate_edges_stripe(
             accum.edges[f * nthr + t] += 2.0 * suffix - total;
         }
     }
-    accum.sum_w += sum_w;
-    accum.sum_w2 += sum_w2;
-    accum.count += block.n as u64;
 }
 
 /// One-shot edge computation (fresh accumulator).
@@ -232,6 +272,41 @@ mod tests {
             assert!((a - b).abs() < 1e-6);
         }
         assert_eq!(whole.count, merged.count);
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_bucket() {
+        // the zero-allocation entry with a dirty, reused bucket gives a
+        // bit-identical accumulation to per-batch fresh buckets
+        let mut rng = Rng::new(5);
+        let (block, w) = random_block(&mut rng, 150, 5);
+        let grid = CandidateGrid::uniform(5, 4, -1.5, 1.5);
+        let mut bucket = vec![999.0; 3]; // wrong size AND dirty on purpose
+        let mut reused = EdgeMatrix::zeros(5, 4);
+        let mut fresh = EdgeMatrix::zeros(5, 4);
+        let mut off = 0;
+        for chunk in block.chunks(40) {
+            let ws = &w[off..off + chunk.n];
+            accumulate_edges_stripe(&chunk, ws, &grid, (0, 5), &mut fresh);
+            accumulate_edges_stripe_into(&chunk, ws, &grid, (0, 5), &mut reused, &mut bucket);
+            off += chunk.n;
+        }
+        assert_eq!(fresh.edges, reused.edges, "bit-identical accumulation");
+        assert_eq!(fresh.count, reused.count);
+        assert_eq!(fresh.sum_w.to_bits(), reused.sum_w.to_bits());
+    }
+
+    #[test]
+    fn reset_zeroes_in_place() {
+        let mut rng = Rng::new(6);
+        let (block, w) = random_block(&mut rng, 50, 3);
+        let grid = CandidateGrid::uniform(3, 2, -1.0, 1.0);
+        let mut m = edges_native(&block, &w, &grid);
+        assert!(m.count > 0);
+        m.reset();
+        assert!(m.edges.iter().all(|&e| e == 0.0));
+        assert_eq!((m.sum_w, m.sum_w2, m.count), (0.0, 0.0, 0));
+        assert_eq!((m.f, m.nthr), (3, 2), "shape preserved");
     }
 
     #[test]

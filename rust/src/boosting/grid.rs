@@ -79,6 +79,19 @@ impl CandidateGrid {
         self.f * self.nthr * 2
     }
 
+    /// The quantization spec of a feature stripe for the binned scan
+    /// engine (DESIGN.md §8): hands `data::binned` exactly the threshold
+    /// rows the row engine compares against (copied — the data layer does
+    /// not depend on `boosting`).
+    pub fn bin_spec(&self, stripe: (usize, usize)) -> crate::data::BinSpec {
+        assert!(stripe.0 < stripe.1 && stripe.1 <= self.f);
+        crate::data::BinSpec::new(
+            stripe,
+            self.nthr,
+            self.thresholds[stripe.0 * self.nthr..stripe.1 * self.nthr].to_vec(),
+        )
+    }
+
     /// Restrict to a stripe of features `[start, end)`; threshold rows are
     /// copied, and the stripe remembers its global feature offset.
     pub fn stripe(&self, start: usize, end: usize) -> FeatureStripe {
@@ -169,6 +182,16 @@ mod tests {
         assert_eq!(s.grid.f, 2);
         assert_eq!(s.grid.row(0), g.row(2));
         assert_eq!(s.global_feature(1), 3);
+    }
+
+    #[test]
+    fn bin_spec_copies_stripe_rows() {
+        let g = CandidateGrid::uniform(4, 3, 0.0, 4.0);
+        let spec = g.bin_spec((1, 3));
+        assert_eq!(spec.stripe, (1, 3));
+        assert_eq!(spec.nthr, 3);
+        assert_eq!(spec.row(0), g.row(1));
+        assert_eq!(spec.row(1), g.row(2));
     }
 
     #[test]

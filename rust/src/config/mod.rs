@@ -77,6 +77,30 @@ impl SamplerMode {
     }
 }
 
+/// Which CPU scan engine drives the edge accumulation (DESIGN.md §8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScanEngine {
+    /// row-major per-example linear threshold search (default; same
+    /// numerics as the pre-engine scanner — note the stopping-rule sweep
+    /// cadence is amortized for BOTH engines, see `ScannerConfig`)
+    Rows,
+    /// binned columnar engine: quantized u8 stripe built at sample-install
+    /// time, branch-free bucket accumulation, `--scan-threads` sharding
+    /// with a thread-count-independent merge order
+    Binned,
+}
+
+impl ScanEngine {
+    /// Parse a `--scan-engine` value.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "rows" => Ok(ScanEngine::Rows),
+            "binned" => Ok(ScanEngine::Binned),
+            _ => Err(format!("unknown scan engine {s:?} (rows|binned)")),
+        }
+    }
+}
+
 /// Scanner compute backend (ablation A4).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
@@ -133,6 +157,15 @@ pub struct TrainConfig {
     /// blocking (paper-faithful) or background (pipelined) sampling
     pub sampler_mode: SamplerMode,
     pub backend: Backend,
+    /// rows (default) or binned CPU scan engine (native backend only)
+    pub scan_engine: ScanEngine,
+    /// worker threads for the binned engine's edge accumulation (results
+    /// are identical for every value; 1 = fully inline). Sharding
+    /// granularity is fixed 512-example chunks, so threads only engage
+    /// when `batch > 512` — pair `--scan-threads N` with `--batch 1024`
+    /// or more; at the default batch of 128 the engine's win is the
+    /// branch-free single-thread loop, not sharding.
+    pub scan_threads: usize,
     /// disk read bandwidth in bytes/s (0 = unlimited, in-memory tier)
     pub disk_bandwidth: f64,
     /// evaluation cadence for the metric series
@@ -170,6 +203,8 @@ impl Default for TrainConfig {
             sampler: SamplerKind::MinimalVariance,
             sampler_mode: SamplerMode::Blocking,
             backend: Backend::Native,
+            scan_engine: ScanEngine::Rows,
+            scan_threads: 1,
             disk_bandwidth: 0.0,
             eval_interval: Duration::from_millis(250),
             net: NetConfig::default(),
@@ -212,6 +247,10 @@ impl TrainConfig {
         if let Some(s) = args.get("backend") {
             self.backend = Backend::parse(s)?;
         }
+        if let Some(s) = args.get("scan-engine") {
+            self.scan_engine = ScanEngine::parse(s)?;
+        }
+        self.scan_threads = args.get_usize("scan-threads", self.scan_threads);
         self.disk_bandwidth = args.get_f64("disk-bandwidth", self.disk_bandwidth);
         self.eval_interval = Duration::from_secs_f64(
             args.get_f64("eval-interval", self.eval_interval.as_secs_f64()),
@@ -240,6 +279,17 @@ impl TrainConfig {
         }
         if self.batch == 0 || self.nthr == 0 || self.max_rules == 0 {
             return Err("batch, nthr and max-rules must be positive".into());
+        }
+        if self.scan_threads == 0 {
+            return Err("scan-threads must be >= 1".into());
+        }
+        if self.scan_engine == ScanEngine::Binned {
+            if self.nthr > u8::MAX as usize {
+                return Err("scan-engine binned needs nthr <= 255 (u8 bins)".into());
+            }
+            if self.backend != Backend::Native {
+                return Err("scan-engine binned requires --backend native".into());
+            }
         }
         Ok(())
     }
@@ -363,6 +413,38 @@ mod tests {
         assert_eq!(Backend::parse("xla").unwrap(), Backend::XlaPallas);
         assert_eq!(Backend::parse("xla-jnp").unwrap(), Backend::XlaJnp);
         assert_eq!(SamplerMode::parse("bg").unwrap(), SamplerMode::Background);
+        assert_eq!(ScanEngine::parse("binned").unwrap(), ScanEngine::Binned);
+        assert_eq!(ScanEngine::parse("rows").unwrap(), ScanEngine::Rows);
+    }
+
+    #[test]
+    fn scan_engine_default_and_override() {
+        // the knob must default to rows (the pre-engine numerics)
+        let d = TrainConfig::default();
+        assert_eq!(d.scan_engine, ScanEngine::Rows);
+        assert_eq!(d.scan_threads, 1);
+        let cfg = TrainConfig::default()
+            .apply_args(&args("train --scan-engine binned --scan-threads 4"))
+            .unwrap();
+        assert_eq!(cfg.scan_engine, ScanEngine::Binned);
+        assert_eq!(cfg.scan_threads, 4);
+        assert!(TrainConfig::default()
+            .apply_args(&args("t --scan-engine nope"))
+            .is_err());
+        assert!(TrainConfig::default()
+            .apply_args(&args("t --scan-threads 0"))
+            .is_err());
+        // binned is a native-engine feature: xla backends reject it, and
+        // u8 bins bound nthr
+        assert!(TrainConfig::default()
+            .apply_args(&args("t --scan-engine binned --backend xla-pallas"))
+            .is_err());
+        assert!(TrainConfig::default()
+            .apply_args(&args("t --scan-engine binned --nthr 300"))
+            .is_err());
+        assert!(TrainConfig::default()
+            .apply_args(&args("t --scan-engine rows --nthr 300"))
+            .is_ok());
     }
 
     #[test]

@@ -1,0 +1,357 @@
+//! Quantized, column-major stripe views for the binned scan engine
+//! (DESIGN.md §8).
+//!
+//! The row engine answers "how many thresholds lie strictly below `x`?"
+//! with a per-example linear search over each feature's ascending
+//! threshold row — `O(NT)` data-dependent branches per (example, feature)
+//! on the hot path. The binned engine answers it **once per sample**: at
+//! sample-install time every stripe feature is quantized into a `u8` bin
+//! index (the threshold-interval index), and the scan's inner loop becomes
+//! a branch-free bucket accumulation `hist[bin[i]] += u[i]`.
+//!
+//! # Exactness
+//!
+//! `bin(x)` is defined as `|{t : x > thr[t]}|` — computed by the *same*
+//! ascending-row count the row engine runs per example. Therefore
+//! `x > thr[t] ⟺ bin(x) > t` holds **exactly** for every value, including
+//! values equal to a threshold (bin counts strict exceedances only),
+//! duplicated thresholds, and ±∞ (`+∞ → nthr`, `−∞ → 0`). Binning is a
+//! lossless reindexing of the stump predicate, not an approximation; see
+//! `boosting::edges` for how buckets fold back into edges.
+//!
+//! # Layout
+//!
+//! Bins are stored **column-major** — one contiguous `Vec<u8>` region per
+//! stripe feature — so the accumulation loop streams each column
+//! sequentially (and a batch gather is a per-column `u8` copy, ~4× lighter
+//! than the `f32` row copy the scorer already pays).
+
+use crate::data::DataBlock;
+
+/// How to quantize one feature stripe: a copy of the worker's candidate
+/// threshold rows restricted to the stripe, in stripe-local order.
+///
+/// Built from the worker's grid via `CandidateGrid::bin_spec` (the data
+/// layer does not depend on `boosting`, so the rows are copied in).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BinSpec {
+    /// global feature range `[start, end)` this spec covers
+    pub stripe: (usize, usize),
+    /// thresholds per feature
+    pub nthr: usize,
+    /// `(width × nthr)` row-major, each row ascending — identical values to
+    /// the grid rows the row engine compares against
+    pub thresholds: Vec<f32>,
+}
+
+impl BinSpec {
+    /// A spec over `stripe` with `nthr` thresholds per feature.
+    ///
+    /// Bins take values in `0..=nthr`, so `nthr` must fit alongside the
+    /// sentinel-free `u8` range: `nthr <= 255`.
+    pub fn new(stripe: (usize, usize), nthr: usize, thresholds: Vec<f32>) -> BinSpec {
+        assert!(stripe.0 < stripe.1, "empty stripe {stripe:?}");
+        assert!(
+            (1..=u8::MAX as usize).contains(&nthr),
+            "nthr {nthr} out of the u8 bin range [1, 255]"
+        );
+        assert_eq!(thresholds.len(), (stripe.1 - stripe.0) * nthr);
+        BinSpec {
+            stripe,
+            nthr,
+            thresholds,
+        }
+    }
+
+    /// Number of features in the stripe.
+    pub fn width(&self) -> usize {
+        self.stripe.1 - self.stripe.0
+    }
+
+    /// FNV-1a fingerprint of the threshold bits — stamped into built
+    /// stripes so [`BinnedStripe::matches`] detects a *different grid of
+    /// identical shape* (stale bins must never be reused silently).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &t in &self.thresholds {
+            h ^= t.to_bits() as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        h
+    }
+
+    /// Ascending threshold row of stripe-local feature `c`.
+    #[inline]
+    pub fn row(&self, c: usize) -> &[f32] {
+        &self.thresholds[c * self.nthr..(c + 1) * self.nthr]
+    }
+
+    /// Quantize one value of stripe-local feature `c`: the number of
+    /// thresholds strictly below `x` — the exact count the row engine
+    /// computes per example, so `x > thr[t] ⟺ bin > t`.
+    #[inline]
+    pub fn bin_value(&self, c: usize, x: f32) -> u8 {
+        let thr = self.row(c);
+        let mut k = 0usize;
+        while k < self.nthr && x > thr[k] {
+            k += 1;
+        }
+        k as u8
+    }
+
+    /// Quantize every stripe feature of `block`, column-major.
+    pub fn bin_block(&self, block: &DataBlock) -> BinnedStripe {
+        assert!(self.stripe.1 <= block.f, "stripe exceeds block width");
+        let w = self.width();
+        let n = block.n;
+        let mut bins = vec![0u8; w * n];
+        for i in 0..n {
+            let row = block.row(i);
+            for c in 0..w {
+                bins[c * n + i] = self.bin_value(c, row[self.stripe.0 + c]);
+            }
+        }
+        BinnedStripe {
+            stripe: self.stripe,
+            nthr: self.nthr,
+            grid_fingerprint: self.fingerprint(),
+            n,
+            bins,
+        }
+    }
+}
+
+/// One sample's quantized feature stripe, column-major: built once per
+/// sample (at install time) and reused across every pass and γ-retry over
+/// that sample. Weight refreshes and model adoptions never touch it —
+/// bins depend only on the features and the (fixed) candidate grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BinnedStripe {
+    /// global feature range `[start, end)`
+    pub stripe: (usize, usize),
+    /// thresholds per feature (bins take values `0..=nthr`)
+    pub nthr: usize,
+    /// fingerprint of the threshold values the bins were built against
+    pub grid_fingerprint: u64,
+    /// examples covered
+    pub n: usize,
+    /// `(width × n)` column-major: `bins[c*n + i]` is example `i`'s bin on
+    /// stripe-local feature `c`
+    pub bins: Vec<u8>,
+}
+
+impl BinnedStripe {
+    /// The contiguous bin column of stripe-local feature `c`.
+    #[inline]
+    pub fn column(&self, c: usize) -> &[u8] {
+        &self.bins[c * self.n..(c + 1) * self.n]
+    }
+
+    /// Was this stripe built by `spec` over a sample of `n` examples?
+    /// Shape AND threshold fingerprint must agree — a different grid of
+    /// identical shape forces a rebuild instead of silently reusing bins
+    /// quantized against the wrong thresholds.
+    pub fn matches(&self, spec: &BinSpec, n: usize) -> bool {
+        self.n == n
+            && self.stripe == spec.stripe
+            && self.nthr == spec.nthr
+            && self.grid_fingerprint == spec.fingerprint()
+    }
+}
+
+/// Column-major bins for ONE scanner batch, gathered from a sample's
+/// [`BinnedStripe`] along the batch's (circular) index list. Owned by the
+/// scanner's scratch and reused across batches — no per-batch allocation.
+#[derive(Debug, Clone, Default)]
+pub struct BinnedBatch {
+    /// stripe width (features)
+    pub width: usize,
+    /// batch size (examples)
+    pub n: usize,
+    /// `(width × n)` column-major
+    pub bins: Vec<u8>,
+}
+
+impl BinnedBatch {
+    /// Refill from `stripe` at the batch indices `idx` (reuses the buffer).
+    pub fn gather(&mut self, stripe: &BinnedStripe, idx: &[usize]) {
+        self.width = stripe.stripe.1 - stripe.stripe.0;
+        self.n = idx.len();
+        self.bins.clear();
+        self.bins.resize(self.width * self.n, 0);
+        for c in 0..self.width {
+            let col = stripe.column(c);
+            let dst = &mut self.bins[c * self.n..(c + 1) * self.n];
+            for (k, &i) in idx.iter().enumerate() {
+                dst[k] = col[i];
+            }
+        }
+    }
+
+    /// The contiguous bin column of stripe-local feature `c`.
+    #[inline]
+    pub fn column(&self, c: usize) -> &[u8] {
+        &self.bins[c * self.n..(c + 1) * self.n]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen, prop_check};
+    use crate::util::rng::Rng;
+
+    fn spec_2x3() -> BinSpec {
+        // feature 0: thresholds [-1, 0, 1]; feature 1: [0.5, 0.5, 2.0]
+        // (duplicated threshold on purpose)
+        BinSpec::new((0, 2), 3, vec![-1.0, 0.0, 1.0, 0.5, 0.5, 2.0])
+    }
+
+    #[test]
+    fn bin_value_is_strict_exceedance_count() {
+        let s = spec_2x3();
+        assert_eq!(s.bin_value(0, -2.0), 0);
+        assert_eq!(s.bin_value(0, -1.0), 0); // equal → not an exceedance
+        assert_eq!(s.bin_value(0, -0.5), 1);
+        assert_eq!(s.bin_value(0, 0.0), 1);
+        assert_eq!(s.bin_value(0, 1.5), 3);
+        // duplicated thresholds: crossing the pair jumps by two
+        assert_eq!(s.bin_value(1, 0.5), 0);
+        assert_eq!(s.bin_value(1, 0.6), 2);
+        // infinities land in the extreme bins
+        assert_eq!(s.bin_value(0, f32::INFINITY), 3);
+        assert_eq!(s.bin_value(0, f32::NEG_INFINITY), 0);
+    }
+
+    #[test]
+    fn prop_bin_encodes_stump_predicate_exactly() {
+        // the exactness claim behind the whole engine:
+        // x > thr[t]  ⟺  bin(x) > t, for every (x, t) incl. boundary values
+        prop_check("bin ⟺ predicate", 60, |rng| {
+            let nthr = gen::size(rng, 1, 8);
+            let mut thr: Vec<f32> = (0..nthr).map(|_| rng.gauss() as f32).collect();
+            thr.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let spec = BinSpec::new((0, 1), nthr, thr.clone());
+            for _ in 0..32 {
+                // mix free values with exact threshold hits and infinities
+                let x = match rng.below(4) {
+                    0 => thr[rng.below(nthr as u64) as usize],
+                    1 => {
+                        if rng.bernoulli(0.5) {
+                            f32::INFINITY
+                        } else {
+                            f32::NEG_INFINITY
+                        }
+                    }
+                    _ => rng.gauss() as f32,
+                };
+                let bin = spec.bin_value(0, x);
+                for (t, &th) in thr.iter().enumerate() {
+                    let pred = x > th;
+                    let from_bin = bin as usize > t;
+                    if pred != from_bin {
+                        return Err(format!(
+                            "x={x} thr[{t}]={th}: predicate {pred} vs bin {bin}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bin_block_is_column_major() {
+        let s = spec_2x3();
+        let block = DataBlock::new(
+            3,
+            2,
+            vec![-2.0, 0.6, 0.5, 0.4, 2.0, 3.0],
+            vec![1.0, -1.0, 1.0],
+        );
+        let bs = s.bin_block(&block);
+        assert_eq!(bs.n, 3);
+        // feature 0 column: values -2.0, 0.5, 2.0 → bins 0, 1, 3
+        assert_eq!(bs.column(0), &[0, 1, 3]);
+        // feature 1 column: values 0.6, 0.4, 3.0 → bins 2, 0, 3
+        assert_eq!(bs.column(1), &[2, 0, 3]);
+    }
+
+    #[test]
+    fn matches_checks_shape_identity() {
+        let s = spec_2x3();
+        let block = DataBlock::new(2, 2, vec![0.0; 4], vec![1.0, -1.0]);
+        let bs = s.bin_block(&block);
+        assert!(bs.matches(&s, 2));
+        assert!(!bs.matches(&s, 3)); // different sample size
+        let other = BinSpec::new((0, 2), 2, vec![0.0; 4]);
+        assert!(!bs.matches(&other, 2)); // different nthr
+        // identical shape, different threshold values → must NOT match
+        let same_shape = BinSpec::new((0, 2), 3, vec![-1.0, 0.0, 1.5, 0.5, 0.5, 2.0]);
+        assert!(!bs.matches(&same_shape, 2), "stale bins reused across grids");
+    }
+
+    #[test]
+    fn gather_follows_circular_indices() {
+        let s = spec_2x3();
+        let block = DataBlock::new(
+            4,
+            2,
+            vec![-2.0, 0.0, 0.5, 0.0, 2.0, 0.0, -0.5, 0.0],
+            vec![1.0; 4],
+        );
+        let bs = s.bin_block(&block);
+        let mut b = BinnedBatch::default();
+        b.gather(&bs, &[3, 0, 1]); // wrap-around order
+        assert_eq!(b.n, 3);
+        assert_eq!(b.width, 2);
+        // feature 0 values at idx [3,0,1] = [-0.5, -2.0, 0.5] → bins [1,0,1]
+        assert_eq!(b.column(0), &[1, 0, 1]);
+        // reuse: shrinking gather resizes correctly
+        b.gather(&bs, &[2]);
+        assert_eq!(b.n, 1);
+        assert_eq!(b.column(0), &[3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "u8 bin range")]
+    fn rejects_oversized_nthr() {
+        BinSpec::new((0, 1), 256, vec![0.0; 256]);
+    }
+
+    fn rng_spec(rng: &mut Rng, width: usize, nthr: usize) -> BinSpec {
+        let mut thr = Vec::with_capacity(width * nthr);
+        for _ in 0..width {
+            let mut row: Vec<f32> = (0..nthr).map(|_| rng.gauss() as f32).collect();
+            row.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            thr.extend(row);
+        }
+        BinSpec::new((0, width), nthr, thr)
+    }
+
+    #[test]
+    fn prop_block_binning_matches_scalar_binning() {
+        prop_check("bin_block == bin_value", 20, |rng| {
+            let n = gen::size(rng, 1, 40);
+            let w = gen::size(rng, 1, 5);
+            let nthr = gen::size(rng, 1, 6);
+            let spec = rng_spec(rng, w, nthr);
+            let block = DataBlock::new(
+                n,
+                w,
+                gen::normal_vec(rng, n * w),
+                gen::labels(rng, n, 0.5),
+            );
+            let bs = spec.bin_block(&block);
+            for i in 0..n {
+                for c in 0..w {
+                    let want = spec.bin_value(c, block.row(i)[c]);
+                    if bs.column(c)[i] != want {
+                        return Err(format!("({i},{c}): {} vs {want}", bs.column(c)[i]));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -7,6 +7,7 @@
 //! "H_l" is fully identified by the model *length* at last update, and a
 //! weight refresh only has to evaluate the suffix of new stumps.
 
+use crate::data::binned::{BinSpec, BinnedStripe};
 use crate::data::DataBlock;
 
 /// The in-memory sample the Scanner iterates over.
@@ -23,6 +24,10 @@ pub struct SampleSet {
     pub score_last: Vec<f32>,
     /// number of model stumps included in score_last  ("H_l" version)
     pub model_len_last: Vec<u32>,
+    /// quantized stripe view for the binned scan engine (DESIGN.md §8);
+    /// built once at sample-install time, never touched by weight
+    /// refreshes or adoptions (bins depend only on features + grid)
+    pub binned: Option<BinnedStripe>,
 }
 
 impl SampleSet {
@@ -39,6 +44,7 @@ impl SampleSet {
             w_last: vec![1.0; n],
             score_last: scores,
             model_len_last: vec![model_len; n],
+            binned: None,
         }
     }
 
@@ -61,6 +67,7 @@ impl SampleSet {
             w_last: weights,
             score_last: scores,
             model_len_last: vec![model_len; n],
+            binned: None,
         }
     }
 
@@ -73,6 +80,7 @@ impl SampleSet {
             w_last: Vec::new(),
             score_last: Vec::new(),
             model_len_last: Vec::new(),
+            binned: None,
         }
     }
 
@@ -100,6 +108,20 @@ impl SampleSet {
     /// Sum of current weights.
     pub fn total_weight(&self) -> f64 {
         self.w_last.iter().map(|&w| w as f64).sum()
+    }
+
+    /// Attach the quantized stripe view the binned scan engine consumes
+    /// (DESIGN.md §8). No-op when a matching view is already attached —
+    /// the samplers prebuild it at install time, so the scanner's call is
+    /// a shape check, never a hot-path rebuild.
+    pub fn ensure_binned(&mut self, spec: &BinSpec) {
+        let stale = self
+            .binned
+            .as_ref()
+            .map_or(true, |b| !b.matches(spec, self.data.n));
+        if stale {
+            self.binned = Some(spec.bin_block(&self.data));
+        }
     }
 }
 
@@ -150,5 +172,26 @@ mod tests {
         let mut s = set3();
         s.w_last = vec![0.5, 1.5, 2.0];
         assert!((s.total_weight() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ensure_binned_builds_once_and_rebuilds_on_mismatch() {
+        let mut s = set3();
+        assert!(s.binned.is_none());
+        let spec = BinSpec::new((0, 2), 2, vec![0.5, 2.5, 3.5, 4.5]);
+        s.ensure_binned(&spec);
+        let first = s.binned.clone().expect("built");
+        // rows are [0,1],[2,3],[4,5]: feature 0 bins vs [0.5, 2.5]
+        assert_eq!(first.column(0), &[0, 1, 2]);
+        assert_eq!(first.column(1), &[0, 0, 2]);
+        // matching spec: untouched (same allocation contents)
+        s.ensure_binned(&spec);
+        assert_eq!(s.binned.as_ref().unwrap(), &first);
+        // a different stripe shape forces a rebuild
+        let narrow = BinSpec::new((1, 2), 2, vec![3.5, 4.5]);
+        s.ensure_binned(&narrow);
+        let rebuilt = s.binned.as_ref().unwrap();
+        assert_eq!(rebuilt.stripe, (1, 2));
+        assert_eq!(rebuilt.column(0), &[0, 0, 2]);
     }
 }

@@ -9,6 +9,7 @@
 //! `(x, y, w_s, w_l, H_l)` of §4.1.
 
 pub mod binfmt;
+pub mod binned;
 pub mod block;
 pub mod libsvm;
 pub mod memstore;
@@ -17,6 +18,7 @@ pub mod strata;
 pub mod synth;
 pub mod throttle;
 
+pub use binned::{BinSpec, BinnedBatch, BinnedStripe};
 pub use block::DataBlock;
 pub use memstore::SampleSet;
 pub use store::DiskStore;

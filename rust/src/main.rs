@@ -38,6 +38,7 @@ COMMANDS
              [--target-loss L] [--stopping lil|hoeffding|fixed]
              [--sampler mvs|rejection|uniform] [--sampler-mode blocking|background]
              [--backend native|xla-pallas|xla-jnp]
+             [--scan-engine rows|binned] [--scan-threads N]
              [--batch B] [--nthr NT] [--disk-bandwidth BYTES/S] [--seed S]
              [--out-dir DIR]
   baseline   --algo fullscan|goss|bulksync --data train.sprw --test test.sprw
@@ -456,6 +457,8 @@ fn cmd_launch(args: &Args) -> anyhow::Result<()> {
         "stopping",
         "sampler",
         "sampler-mode",
+        "scan-engine",
+        "scan-threads",
         "disk-bandwidth",
         "seed",
         "artifacts-dir",

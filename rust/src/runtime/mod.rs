@@ -17,10 +17,10 @@ pub mod artifacts;
 pub use artifacts::{ArtifactSpec, Manifest};
 
 use crate::boosting::{CandidateGrid, EdgeMatrix};
-use crate::config::{Backend, TrainConfig};
-use crate::data::DataBlock;
+use crate::config::{Backend, ScanEngine, TrainConfig};
+use crate::data::{BinnedBatch, DataBlock};
 use crate::model::StrongRule;
-use crate::scanner::{BatchResult, NativeBackend, ScanBackend};
+use crate::scanner::{BatchResult, BinnedBackend, NativeBackend, ScanBackend};
 
 /// A compiled scan executable bound to a PJRT CPU client.
 pub struct XlaScanBackend {
@@ -97,16 +97,18 @@ impl XlaScanBackend {
 }
 
 impl ScanBackend for XlaScanBackend {
-    fn scan_batch(
+    fn scan_batch_into(
         &mut self,
         block: &DataBlock,
+        _bins: Option<&BinnedBatch>, // PJRT path has its own layout
         w_ref: &[f32],
         score_ref: &[f32],
         _model_len_ref: &[u32], // XLA path always full-scores (fixed shape)
         model: &StrongRule,
         grid: &CandidateGrid,
         _stripe: (usize, usize), // full grid computed; scanner filters
-    ) -> BatchResult {
+        out: &mut BatchResult,
+    ) {
         let n = block.n;
         assert!(n <= self.batch, "batch {} exceeds artifact B={}", n, self.batch);
         assert_eq!(block.f, self.features, "feature width mismatch");
@@ -129,7 +131,7 @@ impl ScanBackend for XlaScanBackend {
         self.ss_buf[..n].copy_from_slice(score_ref);
         self.ss_buf[n..].fill(0.0);
 
-        let mut run = || -> anyhow::Result<BatchResult> {
+        let mut run = || -> anyhow::Result<(Vec<f32>, Vec<f32>, EdgeMatrix)> {
             let x = Self::literal_2d(&self.x_buf, self.batch, self.features)?;
             let y = xla::Literal::vec1(&self.y_buf);
             let w_s = xla::Literal::vec1(&self.ws_buf);
@@ -182,13 +184,14 @@ impl ScanBackend for XlaScanBackend {
             edges.sum_w = sumw as f64;
             edges.sum_w2 = sumw2 as f64;
             edges.count = n as u64;
-            Ok(BatchResult {
-                scores: scores[..n].to_vec(),
-                weights: weights[..n].to_vec(),
-                edges,
-            })
+            Ok((scores, weights, edges))
         };
-        run().expect("PJRT execution failed")
+        let (scores, weights, edges) = run().expect("PJRT execution failed");
+        out.scores.clear();
+        out.scores.extend_from_slice(&scores[..n]);
+        out.weights.clear();
+        out.weights.extend_from_slice(&weights[..n]);
+        out.edges.merge(&edges);
     }
 
     fn name(&self) -> &'static str {
@@ -199,8 +202,15 @@ impl ScanBackend for XlaScanBackend {
 /// Config-driven backend factory used by the coordinator / CLI / benches.
 pub fn make_backend(cfg: &TrainConfig, features: usize) -> anyhow::Result<Box<dyn ScanBackend>> {
     match cfg.backend {
-        Backend::Native => Ok(Box::new(NativeBackend)),
+        Backend::Native => match cfg.scan_engine {
+            ScanEngine::Rows => Ok(Box::new(NativeBackend)),
+            ScanEngine::Binned => Ok(Box::new(BinnedBackend::new(cfg.scan_threads))),
+        },
         Backend::XlaPallas | Backend::XlaJnp => {
+            anyhow::ensure!(
+                cfg.scan_engine == ScanEngine::Rows,
+                "--scan-engine binned requires --backend native"
+            );
             let pallas = cfg.backend == Backend::XlaPallas;
             let manifest = Manifest::load(std::path::Path::new(&cfg.artifacts_dir))
                 .map_err(anyhow::Error::msg)?;
@@ -230,4 +240,30 @@ mod tests {
     // Execution tests live in rust/tests/runtime_roundtrip.rs (they need
     // `make artifacts` to have run); manifest parsing is covered in
     // artifacts.rs.
+    use super::*;
+
+    #[test]
+    fn make_backend_selects_scan_engine() {
+        let rows = TrainConfig::default();
+        assert_eq!(make_backend(&rows, 8).unwrap().name(), "native");
+        let binned = TrainConfig {
+            scan_engine: ScanEngine::Binned,
+            scan_threads: 4,
+            ..TrainConfig::default()
+        };
+        let be = make_backend(&binned, 8).unwrap();
+        assert_eq!(be.name(), "binned");
+        assert!(be.wants_bins());
+    }
+
+    #[test]
+    fn make_backend_rejects_binned_on_xla() {
+        let cfg = TrainConfig {
+            backend: Backend::XlaPallas,
+            scan_engine: ScanEngine::Binned,
+            ..TrainConfig::default()
+        };
+        let err = make_backend(&cfg, 8).unwrap_err().to_string();
+        assert!(err.contains("native"), "unexpected error: {err}");
+    }
 }

@@ -46,7 +46,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::SamplerKind;
 use crate::data::strata::{StrataConfig, StratifiedStore};
-use crate::data::{DataBlock, IoThrottle, SampleSet};
+use crate::data::{BinSpec, DataBlock, IoThrottle, SampleSet};
 use crate::metrics::{EventKind, EventLog};
 use crate::model::StrongRule;
 use crate::sampler::handle::{BuildStamp, BuiltSample, SampleHandle};
@@ -292,6 +292,7 @@ struct Ctrl {
 ///     IoThrottle::unlimited(),
 ///     StrataConfig::default(),
 ///     SamplerConfig { target_m: 128, ..SamplerConfig::default() },
+///     None, // bin spec — Some(_) prebuilds the binned engine's stripe view
 ///     7,  // seed — sample contents are a pure function of (seed, stamp, model)
 ///     0,  // worker id for event logging
 ///     log,
@@ -313,11 +314,19 @@ pub struct BackgroundSampler {
 impl BackgroundSampler {
     /// Open `store_path` (with its own reader + throttle, independent of
     /// any scanner-side stream) and start the builder thread.
+    ///
+    /// With `bin_spec = Some(_)` every committed build also quantizes the
+    /// sample's feature stripe (DESIGN.md §8) before publishing, so the
+    /// handoff delivers the prebuilt `BinnedStripe` with the sample and
+    /// the scanner never bins on the hot path. Binning is a pure function
+    /// of (sample, grid), so it does not perturb the determinism contract.
+    #[allow(clippy::too_many_arguments)]
     pub fn spawn(
         store_path: &Path,
         throttle: IoThrottle,
         strata: StrataConfig,
         cfg: SamplerConfig,
+        bin_spec: Option<BinSpec>,
         seed: u64,
         worker: usize,
         log: EventLog,
@@ -337,7 +346,11 @@ impl BackgroundSampler {
         let thandle = handle.clone();
         let thread = std::thread::Builder::new()
             .name(format!("sampler-{worker}"))
-            .spawn(move || builder_loop(&mut store, &tctrl, &thandle, &cfg, seed, worker, &log))?;
+            .spawn(move || {
+                builder_loop(
+                    &mut store, &tctrl, &thandle, &cfg, &bin_spec, seed, worker, &log,
+                )
+            })?;
         Ok(BackgroundSampler {
             ctrl,
             handle,
@@ -458,11 +471,13 @@ impl Drop for BackgroundSampler {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn builder_loop(
     store: &mut StratifiedStore,
     ctrl: &Arc<Ctrl>,
     handle: &SampleHandle,
     cfg: &SamplerConfig,
+    bin_spec: &Option<BinSpec>,
     seed: u64,
     worker: usize,
     log: &EventLog,
@@ -490,7 +505,12 @@ fn builder_loop(
         );
         let invalidated = || ctrl.epoch.load(Ordering::Relaxed) != my_epoch;
         match build_once(store, &job.model, job.stamp, cfg, seed, invalidated) {
-            Ok(BuildOutcome::Built { sample, stats }) => {
+            Ok(BuildOutcome::Built { mut sample, stats }) => {
+                // commit path: quantize the stripe here, on the builder
+                // thread, so the swap hands the scanner a ready view
+                if let Some(spec) = bin_spec {
+                    sample.ensure_binned(spec);
+                }
                 log.record(worker, EventKind::ResampleEnd, None, stats.kept as f64);
                 handle.publish(BuiltSample {
                     sample,
@@ -736,6 +756,7 @@ mod tests {
             IoThrottle::unlimited(),
             StrataConfig { resident_rows: 0 },
             c.clone(),
+            None,
             21,
             0,
             log,
@@ -790,6 +811,7 @@ mod tests {
             IoThrottle::unlimited(),
             StrataConfig { resident_rows: 0 },
             c.clone(),
+            None,
             31,
             0,
             log,
@@ -804,6 +826,35 @@ mod tests {
     }
 
     #[test]
+    fn builder_prebuilds_binned_stripe() {
+        // the commit path quantizes on the builder thread: the installed
+        // sample already carries the stripe view the scanner will use
+        let path = make_store("bins", 2000, 9);
+        let (log, _rx) = EventLog::new();
+        let spec = BinSpec::new(
+            (1, 4),
+            3,
+            vec![-0.5, 0.0, 0.5, -0.5, 0.0, 0.5, -0.5, 0.0, 0.5],
+        );
+        let mut bg = BackgroundSampler::spawn(
+            &path,
+            IoThrottle::unlimited(),
+            StrataConfig { resident_rows: 0 },
+            cfg(300, 256),
+            Some(spec.clone()),
+            51,
+            0,
+            log,
+        )
+        .unwrap();
+        bg.request(0, &StrongRule::new());
+        let (s, _) = bg.wait_install(0, || false).unwrap().unwrap();
+        let built = s.binned.as_ref().expect("bins prebuilt by the builder");
+        assert!(built.matches(&spec, s.data.n));
+        assert_eq!(built, &spec.bin_block(&s.data));
+    }
+
+    #[test]
     fn request_dedupes_while_outstanding() {
         let path = make_store("dedupe", 2000, 8);
         let (log, rx) = EventLog::new();
@@ -812,6 +863,7 @@ mod tests {
             IoThrottle::unlimited(),
             StrataConfig { resident_rows: 0 },
             cfg(300, 256),
+            None,
             41,
             0,
             log,

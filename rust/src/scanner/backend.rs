@@ -3,31 +3,92 @@
 //! One batch step = (re)score a block of examples under the current model,
 //! refresh their weights incrementally, and accumulate candidate edges —
 //! the computation AOT-lowered in `python/compile/model.py::scan_batch`.
-//! [`NativeBackend`] is the pure-Rust mirror (bit-compatible semantics);
-//! the PJRT-backed backends live in `crate::runtime` and are selected via
+//! Two CPU engines implement it (selected by `--scan-engine`, DESIGN.md
+//! §8):
+//!
+//! * [`NativeBackend`] (`rows`, default) — the row-major per-example
+//!   linear threshold search, bit-compatible with the L1 Pallas kernel;
+//! * [`BinnedBackend`] (`binned`) — branch-free bucket accumulation over
+//!   the sample's prebuilt column-major `u8` bins, optionally sharded over
+//!   `--scan-threads` scoped threads with a merge order that is fixed by
+//!   construction, so results are identical for every thread count.
+//!
+//! The PJRT-backed backends live in `crate::runtime` and are selected via
 //! `config::Backend` (ablation A4).
+//!
+//! The primary entry is the zero-allocation [`ScanBackend::scan_batch_into`]:
+//! the caller owns a [`BatchResult`] scratch that is reused across every
+//! batch of a pass, and the batch's edge/scalar contributions are
+//! accumulated directly into its `edges` matrix (no per-batch `EdgeMatrix`
+//! + merge). [`ScanBackend::scan_batch`] remains as an allocating
+//! convenience wrapper for tests, benches and baselines.
 
-use crate::boosting::{edges::accumulate_edges_stripe, CandidateGrid, EdgeMatrix};
-use crate::data::DataBlock;
+use crate::boosting::{
+    edges::{accumulate_edges_stripe_into, fold_buckets},
+    CandidateGrid, EdgeMatrix,
+};
+use crate::data::{BinnedBatch, DataBlock};
 use crate::model::StrongRule;
 
-/// Result of one scan batch.
+/// Caller-owned scratch + result of scan batches.
+///
+/// `scores`/`weights` hold the *current batch* (cleared and refilled each
+/// call); `edges` is the **pass accumulator** — every batch adds its
+/// contributions, so the caller zeroes it once per pass via
+/// [`BatchResult::reset`] instead of allocating per batch.
 #[derive(Debug, Clone)]
 pub struct BatchResult {
     /// per-example strong-rule score under the *current* model
     pub scores: Vec<f32>,
     /// per-example refreshed weight
     pub weights: Vec<f32>,
-    /// candidate edge contributions of this batch (full grid width; only
-    /// the stripe columns are required to be filled)
+    /// accumulated candidate edges (full grid width; only the stripe
+    /// columns are required to be filled) + stopping-rule scalars
     pub edges: EdgeMatrix,
+    /// bucket scratch for the row engine's edge pass — lives here so the
+    /// caller-owned scratch travels with the result across batches
+    pub(crate) bucket: Vec<f64>,
+}
+
+impl BatchResult {
+    /// Fresh scratch shaped to a grid.
+    pub fn zeros(f: usize, nthr: usize) -> BatchResult {
+        BatchResult {
+            scores: Vec::new(),
+            weights: Vec::new(),
+            edges: EdgeMatrix::zeros(f, nthr),
+            bucket: Vec::new(),
+        }
+    }
+
+    /// Reset for a new pass: clear the per-batch vectors and zero the edge
+    /// accumulator in place (reshaping only if the grid changed).
+    pub fn reset(&mut self, f: usize, nthr: usize) {
+        self.scores.clear();
+        self.weights.clear();
+        if self.edges.f == f && self.edges.nthr == nthr {
+            self.edges.reset();
+        } else {
+            self.edges = EdgeMatrix::zeros(f, nthr);
+        }
+    }
+}
+
+impl Default for BatchResult {
+    fn default() -> Self {
+        BatchResult::zeros(0, 0)
+    }
 }
 
 /// A compute backend for scan batches.
 pub trait ScanBackend: Send {
-    /// Process one batch.
+    /// Process one batch into caller-owned scratch — the zero-allocation
+    /// path the scanner drives.
     ///
     /// * `block` — the examples (full feature width).
+    /// * `bins` — the batch's quantized stripe view (column-major `u8`),
+    ///   gathered by the scanner when [`ScanBackend::wants_bins`] is true;
+    ///   row engines receive `None` and ignore it.
     /// * `w_ref`, `score_ref` — the cached `(w_l, H_l(x))` pair per example:
     ///   weights satisfy `w = w_ref · exp(−y·(H(x) − score_ref))` for ANY
     ///   consistent reference pair, which is what makes the incremental
@@ -36,25 +97,26 @@ pub trait ScanBackend: Send {
     ///   (lets the native path evaluate only the new suffix).
     /// * `grid` — full candidate grid; `stripe` — the `[start, end)` range
     ///   of features this worker owns.
-    fn scan_batch(
+    /// * `out` — `scores`/`weights` are cleared and refilled for this
+    ///   batch; the batch's edges and stopping scalars are **accumulated**
+    ///   into `out.edges` (zero it at pass start with [`BatchResult::reset`]).
+    #[allow(clippy::too_many_arguments)]
+    fn scan_batch_into(
         &mut self,
         block: &DataBlock,
+        bins: Option<&BinnedBatch>,
         w_ref: &[f32],
         score_ref: &[f32],
         model_len_ref: &[u32],
         model: &StrongRule,
         grid: &CandidateGrid,
         stripe: (usize, usize),
-    ) -> BatchResult;
+        out: &mut BatchResult,
+    );
 
-    fn name(&self) -> &'static str;
-}
-
-/// Pure-Rust backend: incremental suffix scoring + striped edge pass.
-#[derive(Debug, Default)]
-pub struct NativeBackend;
-
-impl ScanBackend for NativeBackend {
+    /// Allocating convenience wrapper: a fresh [`BatchResult`] per call
+    /// (tests, benches, one-shot callers).
+    #[allow(clippy::too_many_arguments)]
     fn scan_batch(
         &mut self,
         block: &DataBlock,
@@ -65,28 +127,79 @@ impl ScanBackend for NativeBackend {
         grid: &CandidateGrid,
         stripe: (usize, usize),
     ) -> BatchResult {
-        let n = block.n;
-        debug_assert_eq!(w_ref.len(), n);
-        debug_assert_eq!(score_ref.len(), n);
-        debug_assert_eq!(model_len_ref.len(), n);
-        let mut scores = Vec::with_capacity(n);
-        let mut weights = Vec::with_capacity(n);
-        for i in 0..n {
-            let row = block.row(i);
-            // incremental: only the suffix the reference hasn't seen
-            let delta = model.score_suffix(row, model_len_ref[i] as usize);
-            let score = score_ref[i] + delta;
-            let w = w_ref[i] * (-(block.label(i)) * delta).exp();
-            scores.push(score);
-            weights.push(w);
-        }
-        let mut edges = EdgeMatrix::zeros(grid.f, grid.nthr);
-        accumulate_edges_stripe(block, &weights, grid, stripe, &mut edges);
-        BatchResult {
+        let mut out = BatchResult::zeros(grid.f, grid.nthr);
+        self.scan_batch_into(
+            block, None, w_ref, score_ref, model_len_ref, model, grid, stripe, &mut out,
+        );
+        out
+    }
+
+    /// Does this backend consume the quantized [`BinnedBatch`] view? The
+    /// scanner gathers batch bins (and keeps the sample's `BinnedStripe`
+    /// fresh) only when this is true.
+    fn wants_bins(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Incremental suffix scoring + weight refresh shared by the CPU engines
+/// (§4.1): clears and refills `scores`/`weights` for this batch.
+fn refresh_scores(
+    block: &DataBlock,
+    w_ref: &[f32],
+    score_ref: &[f32],
+    model_len_ref: &[u32],
+    model: &StrongRule,
+    scores: &mut Vec<f32>,
+    weights: &mut Vec<f32>,
+) {
+    let n = block.n;
+    debug_assert_eq!(w_ref.len(), n);
+    debug_assert_eq!(score_ref.len(), n);
+    debug_assert_eq!(model_len_ref.len(), n);
+    scores.clear();
+    weights.clear();
+    scores.reserve(n);
+    weights.reserve(n);
+    for i in 0..n {
+        let row = block.row(i);
+        // incremental: only the suffix the reference hasn't seen
+        let delta = model.score_suffix(row, model_len_ref[i] as usize);
+        let score = score_ref[i] + delta;
+        let w = w_ref[i] * (-(block.label(i)) * delta).exp();
+        scores.push(score);
+        weights.push(w);
+    }
+}
+
+/// Pure-Rust row engine: incremental suffix scoring + striped edge pass
+/// with a per-example linear threshold search.
+#[derive(Debug, Default)]
+pub struct NativeBackend;
+
+impl ScanBackend for NativeBackend {
+    fn scan_batch_into(
+        &mut self,
+        block: &DataBlock,
+        _bins: Option<&BinnedBatch>,
+        w_ref: &[f32],
+        score_ref: &[f32],
+        model_len_ref: &[u32],
+        model: &StrongRule,
+        grid: &CandidateGrid,
+        stripe: (usize, usize),
+        out: &mut BatchResult,
+    ) {
+        let BatchResult {
             scores,
             weights,
             edges,
-        }
+            bucket,
+        } = out;
+        refresh_scores(block, w_ref, score_ref, model_len_ref, model, scores, weights);
+        accumulate_edges_stripe_into(block, weights, grid, stripe, edges, bucket);
     }
 
     fn name(&self) -> &'static str {
@@ -94,9 +207,191 @@ impl ScanBackend for NativeBackend {
     }
 }
 
+/// Fixed sharding granularity of the binned engine: the batch is cut into
+/// contiguous chunks of this many examples; every chunk accumulates its
+/// own bucket partial (from 0.0, in example order) and the partials are
+/// merged in ascending chunk order. Chunk boundaries — and therefore the
+/// f64 summation tree — are a function of the batch alone, never of
+/// `--scan-threads`, so the result is **identical for every thread
+/// count**. A batch of at most `BIN_CHUNK` examples (the production
+/// default of 128 included) is a single chunk, making the binned engine
+/// bit-identical to the row engine there.
+pub const BIN_CHUNK: usize = 512;
+
+/// Binned columnar engine (DESIGN.md §8): branch-free bucket accumulation
+/// `hist[bin[i]] += u[i]` per stripe column over the sample's prebuilt
+/// `u8` bins, sharded across `threads` scoped workers by contiguous
+/// example ranges. Suffix scoring / weight refresh stays on the row view.
+#[derive(Debug)]
+pub struct BinnedBackend {
+    threads: usize,
+    /// signed contributions u = w·y for the current batch
+    u: Vec<f64>,
+    /// per-chunk bucket partials, `(num_chunks × width × (nthr+1))`
+    partials: Vec<f64>,
+    /// merged batch bucket, `(width × (nthr+1))`
+    bucket: Vec<f64>,
+}
+
+impl BinnedBackend {
+    /// An engine that shards batch accumulation over `threads` workers
+    /// (1 = fully inline; results are identical for every value).
+    pub fn new(threads: usize) -> BinnedBackend {
+        assert!(threads >= 1, "scan-threads must be >= 1");
+        BinnedBackend {
+            threads,
+            u: Vec::new(),
+            partials: Vec::new(),
+            bucket: Vec::new(),
+        }
+    }
+
+    /// The engine's compute core, minus the (row-view) scoring step:
+    /// accumulate one batch's stopping scalars and signed contributions
+    /// `u = w·y` (batch order — the same f64 operation order as the row
+    /// engine's example loop), then bucket-accumulate and fold the edges
+    /// into `accum`. Public so the §Perf benches can time the edge pass
+    /// head-to-head against `accumulate_edges_stripe`.
+    pub fn accumulate_batch(
+        &mut self,
+        bins: &BinnedBatch,
+        weights: &[f32],
+        labels: &[f32],
+        nthr: usize,
+        stripe: (usize, usize),
+        accum: &mut EdgeMatrix,
+    ) {
+        let n = bins.n;
+        debug_assert_eq!(weights.len(), n);
+        debug_assert_eq!(labels.len(), n);
+        self.u.clear();
+        self.u.reserve(n);
+        let mut sum_w = 0.0f64;
+        let mut sum_w2 = 0.0f64;
+        for i in 0..n {
+            let wi = weights[i] as f64;
+            sum_w += wi.abs();
+            sum_w2 += wi * wi;
+            self.u.push(wi * labels[i] as f64);
+        }
+        accum.sum_w += sum_w;
+        accum.sum_w2 += sum_w2;
+        accum.count += n as u64;
+        self.accumulate(bins, nthr, stripe, accum);
+    }
+
+    /// Bucket-accumulate the batch over its bin columns and fold into
+    /// `accum` (which must already carry this batch's stopping scalars).
+    fn accumulate(
+        &mut self,
+        bins: &BinnedBatch,
+        nthr: usize,
+        stripe: (usize, usize),
+        accum: &mut EdgeMatrix,
+    ) {
+        let n = bins.n;
+        let width = bins.width;
+        debug_assert_eq!(width, stripe.1 - stripe.0);
+        let stride = width * (nthr + 1);
+        let nchunks = n.div_ceil(BIN_CHUNK).max(1);
+        self.partials.clear();
+        self.partials.resize(nchunks * stride, 0.0);
+
+        let u = &self.u;
+        // one chunk's partial: columns outer, examples inner — for any
+        // fixed (column, bucket) slot the adds land in ascending example
+        // order, exactly like the row engine's per-slot order
+        let run_chunk = |c: usize, p: &mut [f64]| {
+            let lo = c * BIN_CHUNK;
+            let hi = ((c + 1) * BIN_CHUNK).min(n);
+            for col in 0..width {
+                let colbins = &bins.bins[col * n..(col + 1) * n];
+                let hist = &mut p[col * (nthr + 1)..(col + 1) * (nthr + 1)];
+                for i in lo..hi {
+                    hist[colbins[i] as usize] += u[i];
+                }
+            }
+        };
+
+        let eff = self.threads.min(nchunks);
+        if eff <= 1 {
+            for (c, p) in self.partials.chunks_mut(stride).enumerate() {
+                run_chunk(c, p);
+            }
+        } else {
+            // contiguous chunk ranges per rank; each rank writes only its
+            // own disjoint partial slices, so no synchronization is needed
+            let per = nchunks.div_ceil(eff);
+            let run = &run_chunk;
+            std::thread::scope(|s| {
+                for (r, shard) in self.partials.chunks_mut(per * stride).enumerate() {
+                    s.spawn(move || {
+                        for (k, p) in shard.chunks_mut(stride).enumerate() {
+                            run(r * per + k, p);
+                        }
+                    });
+                }
+            });
+        }
+
+        // deterministic rank-ordered merge: partials fold in ascending
+        // chunk order, independent of how threads divided them
+        self.bucket.clear();
+        self.bucket.resize(stride, 0.0);
+        for chunk in self.partials.chunks(stride) {
+            for (a, &p) in self.bucket.iter_mut().zip(chunk) {
+                *a += p;
+            }
+        }
+        // buckets → edges: the row engine's reverse prefix sum
+        fold_buckets(&self.bucket, stripe, nthr, accum);
+    }
+}
+
+impl ScanBackend for BinnedBackend {
+    fn scan_batch_into(
+        &mut self,
+        block: &DataBlock,
+        bins: Option<&BinnedBatch>,
+        w_ref: &[f32],
+        score_ref: &[f32],
+        model_len_ref: &[u32],
+        model: &StrongRule,
+        grid: &CandidateGrid,
+        stripe: (usize, usize),
+        out: &mut BatchResult,
+    ) {
+        let BatchResult {
+            scores,
+            weights,
+            edges,
+            bucket,
+        } = out;
+        refresh_scores(block, w_ref, score_ref, model_len_ref, model, scores, weights);
+        match bins {
+            Some(b) => {
+                debug_assert_eq!(b.n, block.n);
+                self.accumulate_batch(b, weights, &block.labels, grid.nthr, stripe, edges);
+            }
+            // no quantized view (a caller outside the scanner): the row
+            // path computes the identical result, just slower
+            None => accumulate_edges_stripe_into(block, weights, grid, stripe, edges, bucket),
+        }
+    }
+
+    fn wants_bins(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &'static str {
+        "binned"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::boosting::edges::edges_bruteforce;
     use crate::model::Stump;
     use crate::util::prop::{gen, prop_check};
     use crate::util::rng::Rng;
@@ -123,6 +418,15 @@ mod tests {
             );
         }
         m
+    }
+
+    /// Gather a full-batch `BinnedBatch` for `block` under `grid`/`stripe`.
+    fn bins_for(block: &DataBlock, grid: &CandidateGrid, stripe: (usize, usize)) -> BinnedBatch {
+        let stripe_bins = grid.bin_spec(stripe).bin_block(block);
+        let idx: Vec<usize> = (0..block.n).collect();
+        let mut b = BinnedBatch::default();
+        b.gather(&stripe_bins, &idx);
+        b
     }
 
     #[test]
@@ -230,5 +534,203 @@ mod tests {
         // scalars cover the whole batch regardless of stripe
         assert_eq!(r.edges.count, 40);
         assert!((r.edges.sum_w - 40.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scratch_reuse_across_batches_matches_per_batch_allocation() {
+        // the zero-allocation path (one BatchResult reused, edges
+        // accumulated in place) equals scan_batch-per-batch + merge
+        let mut rng = Rng::new(3);
+        let block = random_block(&mut rng, 200, 5);
+        let model = random_model(&mut rng, 5, 4);
+        let grid = CandidateGrid::uniform(5, 3, -1.2, 1.2);
+        let mut be = NativeBackend;
+
+        let mut merged = EdgeMatrix::zeros(5, 3);
+        let mut reused = BatchResult::zeros(5, 3);
+        reused.reset(5, 3);
+        let mut off = 0;
+        for chunk in block.chunks(64) {
+            let w_ref = vec![1.0f32; chunk.n];
+            let s_ref = vec![0.0f32; chunk.n];
+            let l_ref = vec![0u32; chunk.n];
+            let r = be.scan_batch(&chunk, &w_ref, &s_ref, &l_ref, &model, &grid, (0, 5));
+            merged.merge(&r.edges);
+            be.scan_batch_into(
+                &chunk, None, &w_ref, &s_ref, &l_ref, &model, &grid, (0, 5), &mut reused,
+            );
+            // per-batch vectors hold exactly this batch
+            assert_eq!(reused.scores.len(), chunk.n);
+            assert_eq!(reused.scores, r.scores);
+            assert_eq!(reused.weights, r.weights);
+            off += chunk.n;
+        }
+        assert_eq!(off, 200);
+        assert_eq!(merged.edges, reused.edges.edges, "bit-identical");
+        assert_eq!(merged.count, reused.edges.count);
+        assert_eq!(merged.sum_w.to_bits(), reused.edges.sum_w.to_bits());
+    }
+
+    /// Inject boundary values: snap some features to exact grid thresholds
+    /// and set a few to ±∞.
+    fn inject_boundary_values(rng: &mut Rng, block: &mut DataBlock, grid: &CandidateGrid) {
+        let n = block.n;
+        let f = block.f;
+        for _ in 0..(n * f / 4).max(1) {
+            let i = rng.below(n as u64) as usize;
+            let j = rng.below(f as u64) as usize;
+            block.features[i * f + j] = match rng.below(4) {
+                0 => f32::INFINITY,
+                1 => f32::NEG_INFINITY,
+                _ => grid.row(j)[rng.below(grid.nthr as u64) as usize],
+            };
+        }
+    }
+
+    #[test]
+    fn prop_binned_matches_native_and_bruteforce() {
+        // the tentpole equivalence: binned == rows == brute force over
+        // random blocks/grids/stripes, including values exactly equal to
+        // thresholds and ±∞ at the bin boundaries
+        prop_check("binned == native == bruteforce", 30, |rng| {
+            let n = gen::size(rng, 1, 700); // spans 1–2 BIN_CHUNK chunks
+            let f = gen::size(rng, 1, 9);
+            let nthr = gen::size(rng, 1, 6);
+            let mut block = random_block(rng, n, f);
+            let grid = CandidateGrid::uniform(f, nthr, -2.0, 2.0);
+            inject_boundary_values(rng, &mut block, &grid);
+            let fs = rng.below(f as u64) as usize;
+            let fe = fs + 1 + rng.below((f - fs) as u64) as usize;
+            let threads = 1 + rng.below(4) as usize;
+
+            let w_ref: Vec<f32> = gen::skewed_weights(rng, n, 2.0);
+            let s_ref = vec![0.0f32; n];
+            let l_ref = vec![0u32; n];
+            let model = StrongRule::new(); // empty → weights == w_ref exactly
+
+            let mut rows = NativeBackend;
+            let a = rows.scan_batch(&block, &w_ref, &s_ref, &l_ref, &model, &grid, (fs, fe));
+
+            let bins = bins_for(&block, &grid, (fs, fe));
+            let mut binned = BinnedBackend::new(threads);
+            let mut b = BatchResult::zeros(f, nthr);
+            binned.scan_batch_into(
+                &block,
+                Some(&bins),
+                &w_ref,
+                &s_ref,
+                &l_ref,
+                &model,
+                &grid,
+                (fs, fe),
+                &mut b,
+            );
+
+            let brute = edges_bruteforce(&block, &w_ref, &grid);
+            for ff in fs..fe {
+                for t in 0..nthr {
+                    let ea = a.edges.edge(ff, t);
+                    let eb = b.edges.edge(ff, t);
+                    let ec = brute.edge(ff, t);
+                    if (ea - eb).abs() > 1e-9 * (1.0 + ea.abs()) {
+                        return Err(format!(
+                            "binned vs rows f={ff} t={t}: {eb} vs {ea} (n={n} thr={threads})"
+                        ));
+                    }
+                    if (ea - ec).abs() > 1e-6 * (1.0 + ec.abs()) {
+                        return Err(format!("rows vs brute f={ff} t={t}: {ea} vs {ec}"));
+                    }
+                }
+            }
+            if a.edges.sum_w.to_bits() != b.edges.sum_w.to_bits()
+                || a.edges.sum_w2.to_bits() != b.edges.sum_w2.to_bits()
+                || a.edges.count != b.edges.count
+            {
+                return Err("stopping scalars diverged".into());
+            }
+            // single-chunk batches are bit-identical, not just close
+            if n <= BIN_CHUNK {
+                for ff in fs..fe {
+                    for t in 0..nthr {
+                        if a.edges.edge(ff, t).to_bits() != b.edges.edge(ff, t).to_bits() {
+                            return Err(format!("single-chunk bit mismatch f={ff} t={t}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn binned_identical_across_thread_counts() {
+        // the determinism property: the merge order is fixed by chunk
+        // boundaries, so --scan-threads ∈ {1, 2, 7} give the identical
+        // EdgeMatrix, bit for bit
+        let mut rng = Rng::new(7);
+        let n = 1500; // 3 chunks
+        let f = 6;
+        let nthr = 4;
+        let block = random_block(&mut rng, n, f);
+        let grid = CandidateGrid::uniform(f, nthr, -1.5, 1.5);
+        let model = random_model(&mut rng, f, 3);
+        let w_ref = gen::skewed_weights(&mut rng, n, 3.0);
+        let s_ref = vec![0.0f32; n];
+        let l_ref = vec![0u32; n];
+        let bins = bins_for(&block, &grid, (0, f));
+
+        let mut results = Vec::new();
+        for threads in [1usize, 2, 7] {
+            let mut be = BinnedBackend::new(threads);
+            let mut out = BatchResult::zeros(f, nthr);
+            be.scan_batch_into(
+                &block,
+                Some(&bins),
+                &w_ref,
+                &s_ref,
+                &l_ref,
+                &model,
+                &grid,
+                (0, f),
+                &mut out,
+            );
+            results.push(out.edges);
+        }
+        for other in &results[1..] {
+            assert_eq!(results[0].edges, other.edges, "edges differ across thread counts");
+            assert_eq!(results[0].sum_w.to_bits(), other.sum_w.to_bits());
+            assert_eq!(results[0].sum_w2.to_bits(), other.sum_w2.to_bits());
+            assert_eq!(results[0].count, other.count);
+        }
+    }
+
+    #[test]
+    fn binned_without_bins_falls_back_to_row_path() {
+        let mut rng = Rng::new(9);
+        let block = random_block(&mut rng, 80, 4);
+        let grid = CandidateGrid::uniform(4, 3, -1.0, 1.0);
+        let model = random_model(&mut rng, 4, 2);
+        let w_ref = vec![1.0f32; 80];
+        let s_ref = vec![0.0f32; 80];
+        let l_ref = vec![0u32; 80];
+        let mut rows = NativeBackend;
+        let a = rows.scan_batch(&block, &w_ref, &s_ref, &l_ref, &model, &grid, (0, 4));
+        let mut binned = BinnedBackend::new(2);
+        let b = binned.scan_batch(&block, &w_ref, &s_ref, &l_ref, &model, &grid, (0, 4));
+        assert_eq!(a.edges.edges, b.edges.edges);
+        assert_eq!(a.weights, b.weights);
+    }
+
+    #[test]
+    fn wants_bins_flags() {
+        assert!(!NativeBackend.wants_bins());
+        assert!(BinnedBackend::new(1).wants_bins());
+        assert_eq!(BinnedBackend::new(3).name(), "binned");
+    }
+
+    #[test]
+    #[should_panic(expected = "scan-threads")]
+    fn binned_rejects_zero_threads() {
+        BinnedBackend::new(0);
     }
 }

@@ -11,10 +11,10 @@
 
 pub mod backend;
 
-pub use backend::{BatchResult, NativeBackend, ScanBackend};
+pub use backend::{BatchResult, BinnedBackend, NativeBackend, ScanBackend, BIN_CHUNK};
 
 use crate::boosting::{CandidateGrid, EdgeMatrix};
-use crate::data::{DataBlock, SampleSet};
+use crate::data::{BinSpec, BinnedBatch, DataBlock, SampleSet};
 use crate::model::{StrongRule, Stump};
 use crate::stopping::{CandidateStats, StoppingRule};
 
@@ -45,6 +45,11 @@ pub struct ScannerConfig {
     /// 0 = auto: `max(256, m/8)` so γ can drop to a certifiable level
     /// within a single pass over the sample
     pub scan_budget: u64,
+    /// stopping-rule sweep cadence in batches; 0 = auto:
+    /// `max(1, stripe_width·nthr / batch)`, which keeps the sweep cost
+    /// below the scan cost on wide stripes. Budget-crossing (γ-halving)
+    /// and final batches always sweep regardless of cadence.
+    pub sweep_every: usize,
 }
 
 impl Default for ScannerConfig {
@@ -54,6 +59,7 @@ impl Default for ScannerConfig {
             gamma0: 0.25,
             gamma_min: 0.001,
             scan_budget: 0,
+            sweep_every: 0,
         }
     }
 }
@@ -71,6 +77,9 @@ pub struct Scanner {
     cursor: usize,
     /// scratch batch buffers
     scratch: Scratch,
+    /// quantization spec for the binned engine, derived lazily from
+    /// grid + stripe when the backend wants bins
+    bin_spec: Option<BinSpec>,
     /// total examples scanned over the scanner's lifetime (diagnostics)
     pub total_scanned: u64,
     /// γ-halving events (diagnostics / GammaShrink events)
@@ -84,6 +93,10 @@ struct Scratch {
     score_ref: Vec<f32>,
     len_ref: Vec<u32>,
     idx: Vec<usize>,
+    /// batch bins gathered from the sample's prebuilt BinnedStripe
+    bins: BinnedBatch,
+    /// reused batch output; its `edges` is the pass accumulator
+    result: BatchResult,
 }
 
 impl Scanner {
@@ -103,6 +116,7 @@ impl Scanner {
             cfg,
             cursor: 0,
             scratch: Scratch::default(),
+            bin_spec: None,
             total_scanned: 0,
             gamma_shrinks: 0,
         }
@@ -133,55 +147,90 @@ impl Scanner {
         } else {
             self.cfg.scan_budget
         };
+        // amortized stopping-rule sweeps: on wide stripes a full
+        // stripe×thresholds×polarity sweep per batch would dominate the
+        // scan itself, so sweep every `stripe_width·nthr / batch` batches
+        // (γ-halving and final batches always sweep)
+        let sweep_every = if self.cfg.sweep_every == 0 {
+            let width = self.stripe.1 - self.stripe.0;
+            ((width * self.grid.nthr) / self.cfg.batch).max(1) as u64
+        } else {
+            self.cfg.sweep_every as u64
+        };
+        // binned engine: the sample must carry its quantized stripe view.
+        // Prebuilt by the samplers at install time, so this is normally a
+        // shape check; a cold sample (tests, ad-hoc callers) builds here —
+        // once per sample, reused across every pass and γ-retry.
+        if self.backend.wants_bins() {
+            if self.bin_spec.is_none() {
+                self.bin_spec = Some(self.grid.bin_spec(self.stripe));
+            }
+            sample.ensure_binned(self.bin_spec.as_ref().unwrap());
+        }
         let mut gamma = self.cfg.gamma0;
-        let mut accum = EdgeMatrix::zeros(self.grid.f, self.grid.nthr);
+        // integer halving counter (Alg. 2's halving index) — γ itself is
+        // derived, never round-tripped back out of a float
+        let mut halvings = 0u64;
+        let mut batches = 0u64;
         let mut scanned = 0u64;
         let model_len = model.len() as u32;
+        // the pass accumulator is the reused scratch's edge matrix — the
+        // backend adds each batch directly into it (no per-batch alloc)
+        self.scratch.result.reset(self.grid.f, self.grid.nthr);
 
         while scanned < m as u64 {
             if interrupt() {
                 return ScanOutcome::Interrupted { scanned };
             }
             let take = (self.cfg.batch as u64).min(m as u64 - scanned) as usize;
-            let result = self.scan_chunk(sample, model, take);
+            self.scan_chunk(sample, model, take);
             // write back refreshed weights/scores
             for (k, &i) in self.scratch.idx.iter().enumerate() {
-                sample.set_weight(i, result.scores[k], result.weights[k], model_len);
+                sample.set_weight(
+                    i,
+                    self.scratch.result.scores[k],
+                    self.scratch.result.weights[k],
+                    model_len,
+                );
             }
-            accum.merge(&result.edges);
             scanned += take as u64;
             self.total_scanned += take as u64;
+            batches += 1;
 
             // γ halving on budget exhaustion (Alg. 2: m > M)
-            while scanned >= budget * (self.gamma_shrinks_local(gamma) + 1) {
+            let mut halved = false;
+            while scanned >= budget * (halvings + 1) {
                 gamma /= 2.0;
+                halvings += 1;
+                halved = true;
                 self.gamma_shrinks += 1;
                 if gamma < self.cfg.gamma_min {
                     return ScanOutcome::Exhausted { scanned };
                 }
             }
 
-            // stopping-rule sweep over the stripe candidates (both signs)
-            if let Some((stump, g)) = self.check_candidates(&accum, gamma) {
-                return ScanOutcome::Found {
-                    stump,
-                    gamma: g,
-                    scanned,
-                };
+            // stopping-rule sweep over the stripe candidates (both signs),
+            // amortized to the cadence; γ-halving and final batches always
+            // sweep so early stopping lags a per-batch sweep by at most one
+            // interval
+            if batches % sweep_every == 0 || halved || scanned >= m as u64 {
+                if let Some((stump, g)) = self.check_candidates(&self.scratch.result.edges, gamma)
+                {
+                    return ScanOutcome::Found {
+                        stump,
+                        gamma: g,
+                        scanned,
+                    };
+                }
             }
         }
         ScanOutcome::Exhausted { scanned }
     }
 
-    // how many halvings already happened for the γ passed in (derived,
-    // avoids carrying extra state through the loop)
-    fn gamma_shrinks_local(&self, gamma: f64) -> u64 {
-        (self.cfg.gamma0 / gamma).log2().round() as u64
-    }
-
     /// Read the next `take` examples (circular) into scratch and run the
-    /// backend.
-    fn scan_chunk(&mut self, sample: &SampleSet, model: &StrongRule, take: usize) -> BatchResult {
+    /// backend's zero-allocation batch step (edges accumulate into the
+    /// reused `scratch.result`).
+    fn scan_chunk(&mut self, sample: &SampleSet, model: &StrongRule, take: usize) {
         let m = sample.len();
         let f = sample.data.f;
         let block = self
@@ -204,15 +253,27 @@ impl Scanner {
             self.scratch.len_ref.push(sample.model_len_last[i]);
             self.scratch.idx.push(i);
         }
-        self.backend.scan_batch(
+        let bins = if self.backend.wants_bins() {
+            let stripe_bins = sample
+                .binned
+                .as_ref()
+                .expect("binned stripe prepared at pass start");
+            self.scratch.bins.gather(stripe_bins, &self.scratch.idx);
+            Some(&self.scratch.bins)
+        } else {
+            None
+        };
+        self.backend.scan_batch_into(
             block,
+            bins,
             &self.scratch.w_ref,
             &self.scratch.score_ref,
             &self.scratch.len_ref,
             model,
             &self.grid,
             self.stripe,
-        )
+            &mut self.scratch.result,
+        );
     }
 
     /// Does any stripe candidate (either polarity) fire at target `gamma`?
@@ -293,6 +354,7 @@ mod tests {
                 gamma0,
                 gamma_min: 0.001,
                 scan_budget: 0,
+                sweep_every: 0,
             },
         )
     }
@@ -402,6 +464,115 @@ mod tests {
     }
 
     #[test]
+    fn binned_engine_matches_rows_outcome() {
+        // the engine knob must not change a single certified answer: rows
+        // and binned (any thread count) produce the identical ScanOutcome
+        // and identical refreshed weights on the same sample
+        for threads in [1usize, 3] {
+            let mut sample_rows = easy_sample(2000, 4, 11);
+            let mut sample_binned = sample_rows.clone();
+            let mut rows = scanner(4, 0.25);
+            let mut binned = Scanner::new(
+                CandidateGrid::uniform(4, 3, -1.0, 1.0),
+                (0, 4),
+                Box::new(BinnedBackend::new(threads)),
+                Box::new(LilRule::default()),
+                ScannerConfig {
+                    batch: 64,
+                    gamma0: 0.25,
+                    gamma_min: 0.001,
+                    scan_budget: 0,
+                    sweep_every: 0,
+                },
+            );
+            let model = StrongRule::new();
+            let a = rows.run_pass(&mut sample_rows, &model, || false);
+            let b = binned.run_pass(&mut sample_binned, &model, || false);
+            assert_eq!(a, b, "threads={threads}");
+            assert_eq!(sample_rows.w_last, sample_binned.w_last);
+            // second invocation continues from identical cursors/state
+            let a2 = rows.run_pass(&mut sample_rows, &model, || false);
+            let b2 = binned.run_pass(&mut sample_binned, &model, || false);
+            assert_eq!(a2, b2, "threads={threads} (second pass)");
+        }
+    }
+
+    #[test]
+    fn binned_engine_builds_bins_once_per_sample() {
+        // a cold sample gets its stripe view on the first pass; further
+        // passes reuse it (same allocation shape, no rebuild)
+        let mut sample = noise_sample(300, 4, 12);
+        assert!(sample.binned.is_none());
+        let mut sc = Scanner::new(
+            CandidateGrid::uniform(4, 3, -1.0, 1.0),
+            (1, 3),
+            Box::new(BinnedBackend::new(2)),
+            Box::new(LilRule::default()),
+            ScannerConfig::default(),
+        );
+        let _ = sc.run_pass(&mut sample, &StrongRule::new(), || false);
+        let built = sample.binned.clone().expect("bins built at pass start");
+        assert_eq!(built.stripe, (1, 3));
+        assert_eq!(built.n, 300);
+        let _ = sc.run_pass(&mut sample, &StrongRule::new(), || false);
+        assert_eq!(sample.binned.as_ref().unwrap(), &built, "reused, not rebuilt");
+    }
+
+    #[test]
+    fn amortized_sweep_fires_within_one_interval_of_per_batch_baseline() {
+        // satellite regression: on a wide stripe the auto cadence sweeps
+        // every stripe_width·nthr/batch batches; early stopping may lag a
+        // per-batch sweep by at most one interval of examples
+        let f = 64;
+        let nthr = 8;
+        let batch = 16;
+        let mut rng = Rng::new(13);
+        let mut block = DataBlock::empty(f);
+        for _ in 0..4000 {
+            let y = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+            let mut row: Vec<f32> = (0..f).map(|_| rng.gauss() as f32).collect();
+            row[0] = y * (1.0 + rng.f32());
+            block.push(&row, y);
+        }
+        let sample = SampleSet::fresh(block, vec![0.0; 4000], 0);
+        let run = |sweep_every: usize| {
+            let mut sc = Scanner::new(
+                CandidateGrid::uniform(f, nthr, -1.0, 1.0),
+                (0, f),
+                Box::new(NativeBackend),
+                Box::new(LilRule::default()),
+                ScannerConfig {
+                    batch,
+                    gamma0: 0.25,
+                    gamma_min: 0.001,
+                    scan_budget: 1_000_000, // no halving noise
+                    sweep_every,
+                },
+            );
+            let mut s = sample.clone();
+            sc.run_pass(&mut s, &StrongRule::new(), || false)
+        };
+        let interval = ((f * nthr) / batch).max(1); // auto cadence = 32
+        assert!(interval > 1, "test requires a wide stripe");
+        let (base, amortized) = (run(1), run(0));
+        match (base, amortized) {
+            (
+                ScanOutcome::Found { scanned: s1, stump: st1, .. },
+                ScanOutcome::Found { scanned: s2, stump: st2, .. },
+            ) => {
+                assert_eq!(st1.feature, 0);
+                assert_eq!(st2.feature, 0);
+                assert!(s2 >= s1, "amortized cannot fire earlier");
+                assert!(
+                    s2 - s1 <= (interval * batch) as u64,
+                    "amortized lagged more than one sweep interval: {s1} -> {s2}"
+                );
+            }
+            other => panic!("expected Found/Found, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn gamma_budget_halves_target() {
         // weak-but-real signal at small advantage: γ₀ too ambitious, the
         // scanner must halve down to a certifiable level within the pass
@@ -426,6 +597,7 @@ mod tests {
                 gamma0: 0.45, // unreachable
                 gamma_min: 0.001,
                 scan_budget: 2000,
+                sweep_every: 0,
             },
         );
         match sc.run_pass(&mut sample, &StrongRule::new(), || false) {

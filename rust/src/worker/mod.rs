@@ -28,8 +28,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::boosting::{alpha_for_advantage, CandidateGrid};
-use crate::config::{SamplerMode, TrainConfig};
-use crate::data::{DiskStore, IoThrottle, SampleSet, StrataConfig};
+use crate::config::{SamplerMode, ScanEngine, TrainConfig};
+use crate::data::{BinSpec, DiskStore, IoThrottle, SampleSet, StrataConfig};
 use crate::metrics::{EventKind, EventLog};
 use crate::model::StrongRule;
 use crate::sampler::{BackgroundSampler, SampleStats, Sampler, SamplerConfig};
@@ -99,9 +99,14 @@ fn crashed_result(id: usize, cfg: &TrainConfig, log: &EventLog) -> WorkerResult 
     }
 }
 
-/// Install a background-built sample into the scanner's seat (swap at a
-/// batch boundary): replace the sample, rewind the scan cursor, count the
-/// resample, and emit the `SampleSwap` event.
+/// Install a freshly built sample into the scanner's seat (shared by the
+/// blocking post-resample path and the background swap-at-a-batch-boundary
+/// path): replace the sample, ensure its quantized stripe view when the
+/// binned engine is active (the background builder prebuilds it, making
+/// this a shape check; blocking mode quantizes here — its sample-install
+/// time), rewind the scan cursor, count the resample, and emit `event`
+/// (`ResampleEnd` for blocking, `SampleSwap` for a background install).
+#[allow(clippy::too_many_arguments)]
 fn install_sample(
     sample: &mut SampleSet,
     scanner: &mut Scanner,
@@ -110,11 +115,16 @@ fn install_sample(
     id: usize,
     fresh: SampleSet,
     stats: SampleStats,
+    bin_spec: &Option<BinSpec>,
+    event: EventKind,
 ) {
     *sample = fresh;
+    if let Some(spec) = bin_spec {
+        sample.ensure_binned(spec);
+    }
     scanner.reset_cursor();
     *resamples += 1;
-    log.record(id, EventKind::SampleSwap, None, stats.kept as f64);
+    log.record(id, event, None, stats.kept as f64);
 }
 
 /// Log a sampler disk failure (treated as a crash — resilience semantics);
@@ -166,6 +176,13 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
 
     let candidates = (stripe.1 - stripe.0) * grid.nthr * 2;
     let rule = make_stopping_rule(&cfg, candidates);
+    // binned engine: samples carry a quantized stripe view, built at
+    // install time (blocking mode inline, background mode on the builder
+    // thread) so the scanner never bins on the hot path (DESIGN.md §8)
+    let bin_spec: Option<BinSpec> = match cfg.scan_engine {
+        ScanEngine::Binned => Some(grid.bin_spec(stripe)),
+        ScanEngine::Rows => None,
+    };
     let backend: Box<dyn ScanBackend> = if laggard > 1.0 {
         Box::new(ThrottledBackend::new(backend, laggard))
     } else {
@@ -181,6 +198,7 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
             gamma0: cfg.gamma0,
             gamma_min: cfg.gamma_min,
             scan_budget: 0,
+            sweep_every: 0,
         },
     );
     let throttle = if cfg.disk_bandwidth > 0.0 {
@@ -212,6 +230,7 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
                     resident_rows: cfg.sample_size.saturating_mul(4),
                 },
                 sampler_cfg,
+                bin_spec.clone(),
                 sampler_rng.next_u64(),
                 id,
                 log.clone(),
@@ -275,7 +294,17 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
         if let SampleSource::Background(bg) = &mut source {
             match bg.try_install(version) {
                 Ok(Some((s, stats))) => {
-                    install_sample(&mut sample, &mut scanner, &mut resamples, &log, id, s, stats);
+                    install_sample(
+                        &mut sample,
+                        &mut scanner,
+                        &mut resamples,
+                        &log,
+                        id,
+                        s,
+                        stats,
+                        &bin_spec,
+                        EventKind::SampleSwap,
+                    );
                 }
                 Ok(None) => {}
                 Err(e) => {
@@ -297,10 +326,17 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
                     let model = driver.payload().model.clone();
                     match sampler.resample(&model) {
                         Ok((s, stats)) => {
-                            sample = s;
-                            scanner.reset_cursor();
-                            resamples += 1;
-                            log.record(id, EventKind::ResampleEnd, None, stats.kept as f64);
+                            install_sample(
+                                &mut sample,
+                                &mut scanner,
+                                &mut resamples,
+                                &log,
+                                id,
+                                s,
+                                stats,
+                                &bin_spec,
+                                EventKind::ResampleEnd,
+                            );
                         }
                         Err(e) => {
                             // disk failure: treat as crash (resilience semantics)
@@ -331,6 +367,8 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
                                     id,
                                     s,
                                     stats,
+                                    &bin_spec,
+                                    EventKind::SampleSwap,
                                 );
                             }
                             Ok(None) => break 'outer, // stopped while waiting
@@ -411,6 +449,8 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
                                 id,
                                 s,
                                 stats,
+                                &bin_spec,
+                                EventKind::SampleSwap,
                             );
                             force_resample = false;
                         }

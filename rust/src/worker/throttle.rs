@@ -9,7 +9,7 @@
 use std::time::{Duration, Instant};
 
 use crate::boosting::CandidateGrid;
-use crate::data::DataBlock;
+use crate::data::{BinnedBatch, DataBlock};
 use crate::model::StrongRule;
 use crate::scanner::{BatchResult, ScanBackend};
 
@@ -27,26 +27,31 @@ impl ThrottledBackend {
 }
 
 impl ScanBackend for ThrottledBackend {
-    fn scan_batch(
+    fn scan_batch_into(
         &mut self,
         block: &DataBlock,
+        bins: Option<&BinnedBatch>,
         w_ref: &[f32],
         score_ref: &[f32],
         model_len_ref: &[u32],
         model: &StrongRule,
         grid: &CandidateGrid,
         stripe: (usize, usize),
-    ) -> BatchResult {
+        out: &mut BatchResult,
+    ) {
         let t0 = Instant::now();
-        let out = self
-            .inner
-            .scan_batch(block, w_ref, score_ref, model_len_ref, model, grid, stripe);
+        self.inner.scan_batch_into(
+            block, bins, w_ref, score_ref, model_len_ref, model, grid, stripe, out,
+        );
         let spent = t0.elapsed();
         let extra = spent.mul_f64(self.factor - 1.0);
         if extra > Duration::ZERO {
             std::thread::sleep(extra);
         }
-        out
+    }
+
+    fn wants_bins(&self) -> bool {
+        self.inner.wants_bins()
     }
 
     fn name(&self) -> &'static str {
@@ -97,5 +102,14 @@ mod tests {
     #[should_panic(expected = "laggard factor")]
     fn rejects_speedup_factor() {
         ThrottledBackend::new(Box::new(NativeBackend), 0.5);
+    }
+
+    #[test]
+    fn delegates_wants_bins_to_inner() {
+        use crate::scanner::BinnedBackend;
+        let rows = ThrottledBackend::new(Box::new(NativeBackend), 2.0);
+        assert!(!rows.wants_bins());
+        let binned = ThrottledBackend::new(Box::new(BinnedBackend::new(2)), 2.0);
+        assert!(binned.wants_bins(), "laggard wrapper must forward bins");
     }
 }

@@ -1,0 +1,187 @@
+//! `--scan-engine` equivalence suite (DESIGN.md §8): the binned columnar
+//! engine must not change a single certified answer — identical
+//! `ScanOutcome` (same stump, same γ, same scanned count) as the row
+//! engine on the fixed-seed cluster-integration fixtures, for every
+//! thread count — while the whole pipeline (worker, sampler modes,
+//! cluster) keeps running.
+
+mod common;
+
+use std::time::Duration;
+
+use sparrow::boosting::{alpha_for_advantage, grid::partition_features, CandidateGrid};
+use sparrow::config::{SamplerMode, ScanEngine, TrainConfig};
+use sparrow::coordinator::train_cluster;
+use sparrow::data::{DiskStore, IoThrottle, SampleSet};
+use sparrow::model::StrongRule;
+use sparrow::sampler::{Sampler, SamplerConfig};
+use sparrow::scanner::{BinnedBackend, NativeBackend, ScanBackend, ScanOutcome, Scanner, ScannerConfig};
+use sparrow::stopping::LilRule;
+use sparrow::util::rng::Rng;
+
+/// The cluster-integration fixture: store + pilot-quantile grid, exactly
+/// as `coordinator::train_cluster` derives them.
+fn fixture(nthr: usize) -> (std::path::PathBuf, CandidateGrid) {
+    let (path, _test) = common::synth_store("sparrow_scan_engine", 99, 20_000, 2_000);
+    let store = DiskStore::open(&path).unwrap();
+    let pilot = store
+        .stream(IoThrottle::unlimited())
+        .unwrap()
+        .next_block(4096.min(store.len()))
+        .unwrap();
+    (path.clone(), CandidateGrid::from_quantiles(&pilot, nthr))
+}
+
+/// A fixed-seed blocking resample against `model` — byte-identical on
+/// every call with the same seed.
+fn fixture_sample(path: &std::path::Path, m: usize, seed: u64, model: &StrongRule) -> SampleSet {
+    let store = DiskStore::open(path).unwrap();
+    let mut sampler = Sampler::new(
+        store.stream(IoThrottle::unlimited()).unwrap(),
+        store.len(),
+        SamplerConfig {
+            target_m: m,
+            ..SamplerConfig::default()
+        },
+        Rng::new(seed),
+    );
+    sampler.resample(model).unwrap().0
+}
+
+fn scanner_with(grid: CandidateGrid, stripe: (usize, usize), backend: Box<dyn ScanBackend>) -> Scanner {
+    Scanner::new(
+        grid,
+        stripe,
+        backend,
+        Box::new(LilRule::default()),
+        ScannerConfig {
+            batch: 128,
+            gamma0: 0.2,
+            gamma_min: 0.001,
+            scan_budget: 0,
+            sweep_every: 0,
+        },
+    )
+}
+
+/// Drive one engine through `iters` boosting iterations over the fixture:
+/// resample (fixed seed) whenever a pass exhausts, push certified stumps,
+/// and record every outcome.
+fn drive(
+    path: &std::path::Path,
+    grid: &CandidateGrid,
+    stripe: (usize, usize),
+    backend: Box<dyn ScanBackend>,
+    iters: usize,
+) -> (Vec<ScanOutcome>, Vec<f32>, StrongRule) {
+    let mut sc = scanner_with(grid.clone(), stripe, backend);
+    let mut model = StrongRule::new();
+    let mut sample = fixture_sample(path, 2048, 7, &model);
+    let mut outcomes = Vec::new();
+    for _ in 0..iters {
+        let out = sc.run_pass(&mut sample, &model, || false);
+        outcomes.push(out.clone());
+        match out {
+            ScanOutcome::Found { stump, gamma, .. } => {
+                model.push(stump, alpha_for_advantage(gamma) as f32);
+            }
+            ScanOutcome::Exhausted { .. } => {
+                // Alg. 2 Fail → fresh fixed-seed sample against the model
+                sample = fixture_sample(path, 2048, 7 + model.len() as u64, &model);
+                sc.reset_cursor();
+            }
+            ScanOutcome::Interrupted { .. } => unreachable!("no interrupts"),
+        }
+    }
+    (outcomes, sample.w_last, model)
+}
+
+#[test]
+fn binned_outcomes_identical_to_rows_on_fixture() {
+    // acceptance: --scan-engine binned produces the identical ScanOutcome
+    // (stump, γ, scanned) as rows on the fixed-seed fixture, for thread
+    // counts 1 and 4 — across a whole model-evolution run, not one pass
+    let (path, grid) = fixture(4);
+    let stripe = partition_features(grid.f, 4)[1]; // a real worker stripe
+    let (rows, rows_w, rows_model) =
+        drive(&path, &grid, stripe, Box::new(NativeBackend), 6);
+    assert!(
+        rows.iter()
+            .any(|o| matches!(o, ScanOutcome::Found { .. })),
+        "fixture must certify something: {rows:?}"
+    );
+    for threads in [1usize, 4] {
+        let (binned, binned_w, binned_model) = drive(
+            &path,
+            &grid,
+            stripe,
+            Box::new(BinnedBackend::new(threads)),
+            6,
+        );
+        assert_eq!(rows, binned, "outcomes diverged at threads={threads}");
+        assert_eq!(rows_w, binned_w, "weights diverged at threads={threads}");
+        assert_eq!(
+            rows_model.to_text(),
+            binned_model.to_text(),
+            "models diverged at threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn binned_full_width_stripe_matches_rows() {
+    // single-worker shape: the full feature width in one stripe
+    let (path, grid) = fixture(4);
+    let stripe = (0, grid.f);
+    let (rows, _, _) = drive(&path, &grid, stripe, Box::new(NativeBackend), 4);
+    let (binned, _, _) = drive(&path, &grid, stripe, Box::new(BinnedBackend::new(4)), 4);
+    assert_eq!(rows, binned);
+}
+
+fn cluster_cfg() -> TrainConfig {
+    TrainConfig {
+        num_workers: 4,
+        sample_size: 2048,
+        max_rules: 10,
+        time_limit: Duration::from_secs(30),
+        gamma0: 0.2,
+        scan_engine: ScanEngine::Binned,
+        scan_threads: 2,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn binned_cluster_run_learns() {
+    // end-to-end: a 4-worker cluster on the binned engine (worker prebuilds
+    // bins at install time) makes normal progress
+    let (path, test) = common::synth_store("sparrow_scan_engine", 99, 20_000, 2_000);
+    let cfg = cluster_cfg();
+    let threads = cfg.scan_threads;
+    let out = train_cluster(&cfg, &path, &test, "binned", &move |_| {
+        Ok(Box::new(BinnedBackend::new(threads)) as Box<dyn ScanBackend>)
+    })
+    .unwrap();
+    assert!(!out.model.is_empty(), "no rules learned on binned engine");
+    assert!(out.workers.iter().all(|w| !w.crashed));
+    assert!(out.loss_bound < 1.0, "bound {}", out.loss_bound);
+}
+
+#[test]
+fn binned_cluster_run_learns_with_background_sampler() {
+    // the builder-thread commit path prebuilds the stripe view; the swap
+    // hands it over and the scanner never bins on the hot path
+    let (path, test) = common::synth_store("sparrow_scan_engine", 99, 20_000, 2_000);
+    let mut cfg = cluster_cfg();
+    cfg.sampler_mode = SamplerMode::Background;
+    // batch > BIN_CHUNK so the scoped-thread sharding actually engages in
+    // a real cluster run (at batch ≤ 512 a batch is a single chunk)
+    cfg.batch = 1024;
+    let threads = cfg.scan_threads;
+    let out = train_cluster(&cfg, &path, &test, "binned-bg", &move |_| {
+        Ok(Box::new(BinnedBackend::new(threads)) as Box<dyn ScanBackend>)
+    })
+    .unwrap();
+    assert!(!out.model.is_empty());
+    assert!(out.workers.iter().all(|w| !w.crashed));
+}
