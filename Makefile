@@ -1,7 +1,7 @@
 # Convenience entry points. The authoritative verification gate is
 # scripts/tier1.sh (used verbatim by CI).
 
-.PHONY: tier1 build test fmt clippy doc artifacts bench bench-scan clean
+.PHONY: tier1 build test fmt clippy doc artifacts bench bench-scan sim clean
 
 tier1:
 	./scripts/tier1.sh
@@ -23,6 +23,11 @@ clippy:
 # sampling/, data/store.rs, data/strata.rs).
 doc:
 	cd rust && cargo doc --no-deps
+
+# Deterministic fault-injection scenario suite (DESIGN.md §9). Pick the
+# seed with SPARROW_SIM_SEED=N; CI sweeps seeds 1-3 in the `sim` job.
+sim:
+	cd rust && cargo test --test sim_cluster
 
 # Rows-vs-binned scan-engine sweep (DESIGN.md §8) → BENCH_scan.json at the
 # repo root, tracking the scan-throughput trajectory across PRs.

@@ -5,11 +5,20 @@
 //! disk. Our synthetic datasets fit in page cache, so the *bandwidth gap*
 //! between tiers is reproduced explicitly: a token-bucket throttle caps the
 //! byte rate of any component configured as disk-resident.
+//!
+//! Time flows through a [`Clock`]: with the default [`RealClock`] the
+//! throttle sleeps for real; under the simulator's
+//! [`crate::sim::SimClock`] the same code *advances virtual time* instead,
+//! so a scenario can model slow disks without spending wall time
+//! (DESIGN.md §9).
 
+use std::fmt;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::sim::clock::{Clock, RealClock};
+
 /// Token-bucket byte-rate limiter.
-#[derive(Debug)]
 pub struct IoThrottle {
     bytes_per_sec: f64,
     /// tokens currently available (bytes)
@@ -17,19 +26,38 @@ pub struct IoThrottle {
     /// max burst (bytes)
     burst: f64,
     last: Instant,
+    clock: Arc<dyn Clock>,
     /// total time spent sleeping — reported in experiment logs
     pub stalled: Duration,
+}
+
+impl fmt::Debug for IoThrottle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("IoThrottle")
+            .field("bytes_per_sec", &self.bytes_per_sec)
+            .field("tokens", &self.tokens)
+            .field("burst", &self.burst)
+            .field("stalled", &self.stalled)
+            .field("virtual", &self.clock.is_virtual())
+            .finish()
+    }
 }
 
 impl IoThrottle {
     /// `bytes_per_sec == 0` disables throttling (in-memory tier).
     pub fn new(bytes_per_sec: f64) -> IoThrottle {
+        IoThrottle::with_clock(bytes_per_sec, Arc::new(RealClock))
+    }
+
+    /// A throttle reading time (and sleeping) through `clock`.
+    pub fn with_clock(bytes_per_sec: f64, clock: Arc<dyn Clock>) -> IoThrottle {
         let burst = (bytes_per_sec / 10.0).max((64u64 << 10) as f64);
         IoThrottle {
             bytes_per_sec,
             tokens: burst,
             burst,
-            last: Instant::now(),
+            last: clock.now(),
+            clock,
             stalled: Duration::ZERO,
         }
     }
@@ -47,7 +75,7 @@ impl IoThrottle {
         if self.is_unlimited() {
             return;
         }
-        let now = Instant::now();
+        let now = self.clock.now();
         let refill = now.duration_since(self.last).as_secs_f64() * self.bytes_per_sec;
         self.tokens = (self.tokens + refill).min(self.burst);
         self.last = now;
@@ -55,8 +83,8 @@ impl IoThrottle {
         if self.tokens < 0.0 {
             let wait = Duration::from_secs_f64(-self.tokens / self.bytes_per_sec);
             self.stalled += wait;
-            std::thread::sleep(wait);
-            self.last = Instant::now();
+            self.clock.sleep(wait);
+            self.last = self.clock.now();
             self.tokens = 0.0;
         }
     }
@@ -65,6 +93,7 @@ impl IoThrottle {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::SimClock;
 
     #[test]
     fn unlimited_never_sleeps() {
@@ -97,5 +126,35 @@ mod tests {
         let t0 = Instant::now();
         t.consume(1 << 20); // within burst
         assert!(t0.elapsed() < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn virtual_clock_stalls_in_virtual_time_only() {
+        // The same throttle code models a 1 MiB/s disk under the sim
+        // clock: ~7 MiB past the burst must "cost" ~7 virtual seconds
+        // while finishing instantly on the wall clock.
+        let clock = Arc::new(SimClock::new());
+        let mut t = IoThrottle::with_clock(1024.0 * 1024.0, clock.clone());
+        let wall = Instant::now();
+        for _ in 0..8 {
+            t.consume(1 << 20);
+        }
+        assert!(wall.elapsed() < Duration::from_millis(100), "must not really sleep");
+        let virt = clock.now_virtual();
+        assert!(virt >= Duration::from_secs(6), "virtual stall too small: {virt:?}");
+        assert_eq!(t.stalled, virt, "all virtual time came from the throttle");
+    }
+
+    #[test]
+    fn virtual_refill_honors_advances() {
+        let clock = Arc::new(SimClock::new());
+        let mut t = IoThrottle::with_clock(1024.0 * 1024.0, clock.clone());
+        t.consume(1 << 20); // far past the ~100 KiB burst: drains the bucket
+        let stalled_before = t.stalled;
+        assert!(stalled_before > Duration::ZERO);
+        // a long idle period refills the bucket — a within-burst read is free
+        clock.advance(Duration::from_secs(10));
+        t.consume(64 << 10);
+        assert_eq!(t.stalled, stalled_before, "refilled bucket must not stall");
     }
 }

@@ -11,8 +11,10 @@
 //!   [`tmsn::boost`] and a second, SGD workload in [`sgd`]), Sparrow
 //!   workers ([`scanner`], [`sampler`], [`worker`]), cluster
 //!   [`coordinator`], broadcast [`network`] fabric, disk/memory [`data`]
-//!   stores, the [`baselines`] the paper compares against, and
-//!   [`eval`]/[`metrics`].
+//!   stores, the [`baselines`] the paper compares against,
+//!   [`eval`]/[`metrics`], and the deterministic fault-injection
+//!   simulator ([`sim`]: virtual-time clock, seeded fault fabric,
+//!   scripted crash/laggard/partition scenarios).
 //! - **L2/L1 (python/compile, build-time)** — the JAX scan-batch graph and
 //!   the Pallas edge kernel, AOT-lowered to `artifacts/*.hlo.txt` and
 //!   executed from [`runtime`] via PJRT. Python never runs at train time.
@@ -37,6 +39,7 @@ pub mod sampler;
 pub mod sampling;
 pub mod scanner;
 pub mod sgd;
+pub mod sim;
 pub mod stopping;
 pub mod tmsn;
 pub mod util;

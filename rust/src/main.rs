@@ -51,6 +51,10 @@ COMMANDS
   launch     spawn N local `worker` processes wired over TCP:
              --data train.sprw --test test.sprw --workers N --out-dir DIR
              [train knobs as above]
+  sim        deterministic fault-injection scenarios in virtual time:
+             [--workload boost|sgd] [--scenario calm|crash|laggard|partition|churn|all]
+             [--seed S] [--workers N] [--horizon SECS] [--drop P] [--dup P]
+             [--reorder P] [--trace] (exit 1 on any TMSN invariant violation)
 ";
 
 fn main() {
@@ -62,6 +66,7 @@ fn main() {
         Some("eval") => cmd_eval(&args),
         Some("worker") => cmd_worker(&args),
         Some("launch") => cmd_launch(&args),
+        Some("sim") => cmd_sim(&args),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(())
@@ -432,6 +437,115 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
             ),
         )?;
     }
+    Ok(())
+}
+
+/// Run the deterministic fault-injection simulator (DESIGN.md §9): the
+/// real TMSN state machine over a seeded virtual-time wire, with scripted
+/// crash/laggard/partition schedules. Exits non-zero if any scenario
+/// violates a TMSN invariant.
+fn cmd_sim(args: &Args) -> anyhow::Result<()> {
+    use sparrow::sim::{
+        preset, run_scenario, sgd_sim_fixture, BoostSimWorker, EdgeFaults, SgdSimWorker,
+        SimConfig, SimNetConfig, PRESETS,
+    };
+    use sparrow::tmsn::BoostPayload;
+    use std::sync::Arc;
+
+    let workload = args.get_or("workload", "boost");
+    let scenario_arg = args.get_or("scenario", "all");
+    let seed = args.get_u64("seed", 1);
+    let workers = args.get_usize("workers", 5);
+    let horizon = Duration::from_secs_f64(args.get_f64("horizon", 1.5));
+    let net = SimNetConfig {
+        edge: EdgeFaults::lossy(
+            args.get_f64("drop", 0.0),
+            args.get_f64("dup", 0.0),
+            args.get_f64("reorder", 0.0),
+        ),
+        overrides: Vec::new(),
+    };
+    let show_trace = args.has_flag("trace");
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let names: Vec<String> = if scenario_arg == "all" {
+        PRESETS.iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![scenario_arg.clone()]
+    };
+
+    fn summarize<P: sparrow::tmsn::Payload>(
+        name: &str,
+        workload: &str,
+        seed: u64,
+        r: &sparrow::sim::SimReport<P>,
+    ) {
+        use sparrow::tmsn::{Certified, Payload};
+        println!(
+            "[{workload}/{name}] seed={seed} vtime={:.3}s best={:.6} \
+             net: {} broadcast / {} delivered / {} dropped / {} blocked",
+            r.virtual_elapsed.as_secs_f64(),
+            r.best.cert().summary(),
+            r.net.broadcasts,
+            r.net.delivered,
+            r.net.dropped,
+            r.net.partition_blocked,
+        );
+        for w in &r.workers {
+            println!(
+                "  w{}: steps={} published={} accepts={} rejects={} cert={:.6}{}{}",
+                w.id,
+                w.steps,
+                w.published,
+                w.accepts,
+                w.rejects,
+                w.final_summary,
+                if w.alive { "" } else { " [down]" },
+                if w.restarts > 0 { " [restarted]" } else { "" },
+            );
+        }
+        for v in &r.violations {
+            println!("  VIOLATION: {v}");
+        }
+    }
+
+    let mut violations = 0usize;
+    for name in &names {
+        let scenario = preset(name, workers)
+            .ok_or_else(|| anyhow::anyhow!("unknown --scenario {name:?} (try: {PRESETS:?})"))?;
+        let cfg = SimConfig {
+            workers,
+            seed,
+            net: net.clone(),
+            scenario,
+            horizon,
+            ..SimConfig::default()
+        };
+        match workload.as_str() {
+            "boost" => {
+                let r =
+                    run_scenario(&cfg, |id, inc| BoostSimWorker::for_run(seed, id, inc));
+                summarize::<BoostPayload>(name, &workload, seed, &r);
+                violations += r.violations.len();
+                if show_trace {
+                    print!("{}", r.trace);
+                }
+            }
+            "sgd" => {
+                let (shards, valid) = sgd_sim_fixture(seed, workers);
+                let r = run_scenario(&cfg, |id, _inc| {
+                    SgdSimWorker::new(id, Arc::clone(&shards[id]), Arc::clone(&valid))
+                });
+                summarize(name, &workload, seed, &r);
+                violations += r.violations.len();
+                if show_trace {
+                    print!("{}", r.trace);
+                }
+            }
+            other => anyhow::bail!("unknown --workload {other:?} (boost|sgd)"),
+        }
+    }
+    anyhow::ensure!(violations == 0, "{violations} TMSN invariant violation(s)");
     Ok(())
 }
 

@@ -2,8 +2,10 @@
 //! clock, collected from all workers without synchronizing them.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::sim::clock::{Clock, RealClock};
 use crate::util::json::Json;
 
 /// What happened (the Figure-1 vocabulary).
@@ -68,19 +70,30 @@ pub struct Event {
 
 /// Collects events from many worker threads over a channel; the shared
 /// epoch gives all workers one clock (no synchronization — just a shared
-/// `Instant` to subtract).
+/// `Instant` to subtract). Timestamps are read through a [`Clock`], so
+/// the same pipeline stamps **virtual** time when handed a
+/// [`crate::sim::SimClock`] (the simulator's deterministic traces) and
+/// wall time everywhere else.
 #[derive(Clone)]
 pub struct EventLog {
     epoch: Instant,
+    clock: Arc<dyn Clock>,
     tx: Sender<Event>,
 }
 
 impl EventLog {
     pub fn new() -> (EventLog, Receiver<Event>) {
+        EventLog::with_clock(Arc::new(RealClock))
+    }
+
+    /// An event log whose `elapsed` stamps come from `clock` (epoch =
+    /// the clock's now at construction).
+    pub fn with_clock(clock: Arc<dyn Clock>) -> (EventLog, Receiver<Event>) {
         let (tx, rx) = channel();
         (
             EventLog {
-                epoch: Instant::now(),
+                epoch: clock.now(),
+                clock,
                 tx,
             },
             rx,
@@ -94,7 +107,7 @@ impl EventLog {
     pub fn record(&self, worker: usize, kind: EventKind, model: Option<(usize, u64)>, value: f64) {
         // send failures mean the collector is gone (run over) — ignore
         let _ = self.tx.send(Event {
-            elapsed: self.epoch.elapsed(),
+            elapsed: self.clock.now().saturating_duration_since(self.epoch),
             worker,
             kind,
             model,
@@ -151,6 +164,20 @@ mod tests {
         assert_eq!(log.epoch(), log2.epoch());
         log2.record(7, EventKind::Finish, None, 0.0);
         assert_eq!(drain(&rx).len(), 1);
+    }
+
+    #[test]
+    fn virtual_clock_stamps_virtual_time() {
+        use crate::sim::SimClock;
+        let clock = Arc::new(SimClock::new());
+        let (log, rx) = EventLog::with_clock(clock.clone());
+        log.record(0, EventKind::Broadcast, None, 1.0);
+        clock.advance(Duration::from_secs(5));
+        log.record(1, EventKind::Accept, None, 1.0);
+        let events = drain(&rx);
+        // exact virtual stamps, no wall time leaked in
+        assert_eq!(events[0].elapsed, Duration::ZERO);
+        assert_eq!(events[1].elapsed, Duration::from_secs(5));
     }
 
     #[test]

@@ -1,4 +1,11 @@
 //! In-process broadcast fabric with a seeded delay/loss model.
+//!
+//! The dispatcher reads time through a [`Clock`]: by default the real OS
+//! clock (identical behavior to always), but handed a
+//! [`crate::sim::SimClock`] the [`NetConfig`] delay model plays out in
+//! *virtual* time — an hour-long `base_latency` costs no wall time, the
+//! test just advances the clock (see
+//! `virtual_clock_defers_delivery_until_advanced` below).
 
 use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -7,6 +14,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::sim::clock::{Clock, RealClock};
 use crate::util::rng::Rng;
 
 /// Link model configuration.
@@ -146,8 +154,18 @@ pub struct Fabric<T> {
 }
 
 impl<T: Clone + Send + 'static> Fabric<T> {
-    /// Create a fabric with `n` endpoints.
+    /// Create a fabric with `n` endpoints on the real clock.
     pub fn new(n: usize, cfg: NetConfig) -> (Fabric<T>, Vec<Endpoint<T>>) {
+        Fabric::new_with_clock(n, cfg, Arc::new(RealClock))
+    }
+
+    /// Create a fabric whose delay model is timed by `clock`; with a
+    /// virtual clock, delivery waits for `clock` advances, not wall time.
+    pub fn new_with_clock(
+        n: usize,
+        cfg: NetConfig,
+        clock: Arc<dyn Clock>,
+    ) -> (Fabric<T>, Vec<Endpoint<T>>) {
         assert!(n >= 1);
         let (to_net, from_endpoints) = channel::<ToDispatcher<T>>();
         let mut inbox_txs = Vec::with_capacity(n);
@@ -165,7 +183,7 @@ impl<T: Clone + Send + 'static> Fabric<T> {
         let stats2 = Arc::clone(&stats);
         let handle = std::thread::Builder::new()
             .name("net-fabric".into())
-            .spawn(move || dispatcher(from_endpoints, inbox_txs, cfg, stats2))
+            .spawn(move || dispatcher(from_endpoints, inbox_txs, cfg, stats2, clock))
             .expect("spawn fabric dispatcher");
         (
             Fabric {
@@ -200,28 +218,36 @@ fn dispatcher<T: Clone + Send>(
     inboxes: Vec<Sender<T>>,
     cfg: NetConfig,
     stats: Arc<NetStats>,
+    clock: Arc<dyn Clock>,
 ) {
     let mut rng = Rng::new(cfg.seed);
     let mut heap: BinaryHeap<InFlight<T>> = BinaryHeap::new();
     let mut seq = 0u64;
     loop {
         // deliver everything due
-        let now = Instant::now();
+        let now = clock.now();
         while heap.peek().map_or(false, |m| m.due <= now) {
             let m = heap.pop().unwrap();
             if inboxes[m.dest].send(m.msg).is_ok() {
                 stats.delivered.fetch_add(1, Ordering::Relaxed);
             }
         }
-        // wait for the next due time or a new message
-        let timeout = heap
+        // wait for the next due time or a new message; under a virtual
+        // clock the channel still waits in *real* time, so cap the wait
+        // and re-read the clock — due times move only when it advances
+        let mut timeout = heap
             .peek()
-            .map(|m| m.due.saturating_duration_since(Instant::now()))
+            .map(|m| m.due.saturating_duration_since(clock.now()))
             .unwrap_or(Duration::from_millis(50));
+        if clock.is_virtual() && !heap.is_empty() {
+            // an empty heap has nothing clock-gated: new broadcasts wake
+            // the channel on their own, so keep the long idle heartbeat
+            timeout = timeout.min(Duration::from_millis(1));
+        }
         match incoming.recv_timeout(timeout) {
             Ok(ToDispatcher::Broadcast { src, bytes, msg }) => {
                 stats.sent.fetch_add(1, Ordering::Relaxed);
-                let now = Instant::now();
+                let now = clock.now();
                 let ser = if cfg.bandwidth_bytes_per_sec > 0.0 {
                     Duration::from_secs_f64(bytes as f64 / cfg.bandwidth_bytes_per_sec)
                 } else {
@@ -366,6 +392,132 @@ mod tests {
         eps[0].broadcast(0u8, 100_000); // 100 KB -> 100 ms
         assert!(eps[1].recv_timeout(Duration::from_secs(2)).is_some());
         assert!(t0.elapsed() >= Duration::from_millis(80), "{:?}", t0.elapsed());
+        fabric.shutdown();
+    }
+
+    // ---- degenerate NetConfig values: never panic, counters consistent ---
+
+    #[test]
+    fn single_endpoint_cluster_is_a_noop_network() {
+        // n = 1: broadcasts have no recipients; nothing is delivered,
+        // nothing is dropped, drain is empty, shutdown is clean.
+        let (fabric, eps) = Fabric::new(1, NetConfig::default());
+        for _ in 0..10 {
+            eps[0].broadcast(1u8, 1);
+        }
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(eps[0].drain().is_empty());
+        let (sent, delivered, dropped) = fabric.stats.snapshot();
+        assert_eq!((sent, delivered, dropped), (10, 0, 0));
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn zero_bandwidth_means_unthrottled_serialization() {
+        // bandwidth_bytes_per_sec == 0 is the documented "infinite
+        // bandwidth" sentinel: a huge message must not add delay.
+        let cfg = NetConfig {
+            bandwidth_bytes_per_sec: 0.0,
+            ..NetConfig::ideal()
+        };
+        let (fabric, eps) = Fabric::new(2, cfg);
+        eps[0].broadcast(7u8, usize::MAX >> 8); // absurd byte count
+        assert!(eps[1].recv_timeout(Duration::from_secs(2)).is_some());
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn zero_byte_message_with_tiny_bandwidth() {
+        // 1 B/s bandwidth with a 0-byte message: serialization delay is
+        // exactly zero, not NaN/panic territory.
+        let cfg = NetConfig {
+            bandwidth_bytes_per_sec: 1.0,
+            ..NetConfig::ideal()
+        };
+        let (fabric, eps) = Fabric::new(2, cfg);
+        eps[0].broadcast(3u8, 0);
+        assert_eq!(eps[1].recv_timeout(Duration::from_secs(2)), Some(3));
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn huge_latency_messages_discarded_on_shutdown() {
+        // an hour of latency: undelivered in-flight messages are discarded
+        // by shutdown (not counted dropped — drops are the loss model)
+        let cfg = NetConfig {
+            base_latency: Duration::from_secs(3600),
+            jitter_mean: Duration::ZERO,
+            ..NetConfig::ideal()
+        };
+        let (fabric, eps) = Fabric::new(3, cfg);
+        eps[0].broadcast(9u8, 1);
+        std::thread::sleep(Duration::from_millis(20));
+        let (sent, delivered, dropped) = fabric.stats.snapshot();
+        assert_eq!((sent, delivered, dropped), (1, 0, 0));
+        fabric.shutdown(); // must return promptly, not wait an hour
+    }
+
+    #[test]
+    fn stats_partition_offered_messages_under_loss() {
+        // with drop_rate 0.5 every offered message is either delivered or
+        // counted dropped — no third fate, no double counting
+        let cfg = NetConfig {
+            drop_rate: 0.5,
+            seed: 99,
+            ..NetConfig::ideal()
+        };
+        let (fabric, eps) = Fabric::new(3, cfg);
+        for i in 0..100u32 {
+            eps[(i % 3) as usize].broadcast(i, 4);
+        }
+        let offered = 100u64 * 2; // n - 1 recipients per broadcast
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let (sent, delivered, dropped) = fabric.stats.snapshot();
+            assert_eq!(sent, 100);
+            assert!(delivered + dropped <= offered, "{delivered}+{dropped}");
+            if delivered + dropped == offered {
+                assert!(delivered > 0 && dropped > 0, "seeded coin too lopsided");
+                break;
+            }
+            assert!(Instant::now() < deadline, "counters never settled");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn extreme_latency_multipliers_dont_panic() {
+        let cfg = NetConfig {
+            base_latency: Duration::from_micros(10),
+            jitter_mean: Duration::ZERO,
+            // zero multiplier (instant link) and a huge one together
+            latency_multipliers: vec![0.0, 1.0, 1e6],
+            ..NetConfig::ideal()
+        };
+        let (fabric, eps) = Fabric::new(3, cfg);
+        eps[1].broadcast(1u8, 1);
+        assert!(eps[0].recv_timeout(Duration::from_secs(2)).is_some());
+        // endpoint 2's delivery is ~10s out; shutdown discards it cleanly
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn virtual_clock_defers_delivery_until_advanced() {
+        use crate::sim::SimClock;
+        let clock = Arc::new(SimClock::new());
+        let cfg = NetConfig {
+            base_latency: Duration::from_secs(3600),
+            jitter_mean: Duration::ZERO,
+            ..NetConfig::ideal()
+        };
+        let (fabric, eps) = Fabric::<u8>::new_with_clock(2, cfg, clock.clone());
+        eps[0].broadcast(42, 1);
+        // an hour of *virtual* latency: nothing arrives in real 50 ms
+        assert!(eps[1].recv_timeout(Duration::from_millis(50)).is_none());
+        // advancing the clock past the due time releases the delivery
+        clock.advance(Duration::from_secs(7200));
+        assert_eq!(eps[1].recv_timeout(Duration::from_secs(2)), Some(42));
         fabric.shutdown();
     }
 

@@ -208,6 +208,79 @@ mod tests {
     }
 
     #[test]
+    fn adoption_storm_never_installs_stale_and_swaps_only_at_boundaries() {
+        // Seeded, sleep-free simulation of an adoption storm: model
+        // versions race ahead of the builder, publishes land for current
+        // and stale versions alike, and the scanner hits batch boundaries
+        // at arbitrary points in between. Invariants under every
+        // interleaving:
+        //   1. a take only ever returns a sample stamped with the
+        //      scanner's *current* version (stale pendings are discarded);
+        //   2. mid-batch `ready()` polls never consume or mutate the slot;
+        //   3. after any boundary (take attempt) the slot is empty and the
+        //      ready flag agrees.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xAD0B);
+        let h = SampleHandle::new();
+        let mut version = 0u64; // the scanner's current model version
+        let mut attempt = 0u64;
+        let mut installed = 0u64;
+        let mut discarded_probes = 0u64;
+        for _ in 0..5_000 {
+            match rng.below(4) {
+                0 => {
+                    // adoption storm: the model moves on (possibly while a
+                    // build for the old version sits unclaimed)
+                    version += 1;
+                    attempt = 0;
+                }
+                1 => {
+                    // builder publishes; sometimes for an already-stale
+                    // version (it raced an adoption)
+                    let behind = rng.below(3);
+                    let v = version.saturating_sub(behind);
+                    h.publish(built(v, attempt, 1 + (v % 7) as usize));
+                    attempt += 1;
+                    assert!(h.ready(), "publish must raise the ready flag");
+                }
+                2 => {
+                    // mid-batch: the scanner peeks the flag (twice — the
+                    // poll must be side-effect free)
+                    let r1 = h.ready();
+                    let r2 = h.ready();
+                    assert_eq!(r1, r2, "ready() must not consume");
+                }
+                _ => {
+                    // batch boundary: the only place a swap may land
+                    let was_ready = h.ready();
+                    match h.take_if_current(version) {
+                        Some(b) => {
+                            assert!(was_ready, "take succeeded with flag down");
+                            assert_eq!(
+                                b.stamp.version, version,
+                                "a stale build was installed"
+                            );
+                            installed += 1;
+                        }
+                        None => {
+                            if was_ready {
+                                // there was a pending build but it was
+                                // stale — it must now be gone for good
+                                discarded_probes += 1;
+                            }
+                        }
+                    }
+                    assert!(!h.ready(), "slot must be empty after a boundary");
+                    assert!(h.take_if_current(version).is_none());
+                }
+            }
+        }
+        // the storm must actually exercise both outcomes
+        assert!(installed > 100, "installed only {installed} builds");
+        assert!(discarded_probes > 100, "discarded only {discarded_probes} stale builds");
+    }
+
+    #[test]
     fn wait_take_gives_up() {
         let h = SampleHandle::new();
         let mut polls = 0;

@@ -188,6 +188,28 @@ fn log1p_exp(z: f64) -> f64 {
     }
 }
 
+/// One slice of plain logistic-loss SGD on `shard`, walking `cursor`
+/// through the shard cyclically: `w += lr · y · σ(−y·w·x) · x` per step.
+///
+/// This is the local-search unit shared by the threaded cluster worker
+/// ([`train_sgd_cluster`]) and the virtual-time simulator
+/// ([`crate::sim::SgdSimWorker`]) — both drive the identical arithmetic,
+/// so sim-validated convergence transfers to the threaded runner.
+pub fn sgd_steps(w: &mut [f32], shard: &DataBlock, lr: f32, cursor: &mut usize, steps: usize) {
+    assert!(!shard.is_empty(), "empty training shard");
+    for _ in 0..steps {
+        let i = *cursor % shard.n;
+        *cursor = cursor.wrapping_add(1);
+        let x = shard.row(i);
+        let y = shard.label(i);
+        let g = 1.0 / (1.0 + ((y * dot(w, x)) as f64).exp());
+        let scale = lr * y * g as f32;
+        for (wj, xj) in w.iter_mut().zip(x) {
+            *wj += scale * xj;
+        }
+    }
+}
+
 /// Mean logistic loss of `w` on `data` (labels in {-1, +1}).
 pub fn logistic_loss(w: &[f32], data: &DataBlock) -> f64 {
     assert!(!data.is_empty(), "empty evaluation set");
@@ -349,22 +371,18 @@ fn run_sgd_worker(params: SgdWorkerParams) -> SgdWorkerResult {
         // ---- one local search chunk ------------------------------------
         let chunk_start = Instant::now();
         let mut interrupted = false;
-        for step in 0..cfg.steps_per_chunk {
-            let i = cursor % shard.n;
-            cursor = cursor.wrapping_add(1);
-            let x = shard.row(i);
-            let y = shard.label(i);
-            // logistic gradient step: w += lr · y · σ(−y·w·x) · x
-            let g = 1.0 / (1.0 + ((y * dot(&w, x)) as f64).exp());
-            let scale = cfg.lr * y * g as f32;
-            for (wj, xj) in w.iter_mut().zip(x) {
-                *wj += scale * xj;
-            }
-            steps += 1;
+        let mut done = 0;
+        while done < cfg.steps_per_chunk {
+            let slice = cfg.poll_every.min(cfg.steps_per_chunk - done);
+            sgd_steps(&mut w, &shard, cfg.lr, &mut cursor, slice);
+            steps += slice as u64;
+            done += slice;
             // interrupt-the-scan: a strictly-better certificate abandons
             // the chunk (local uncertified progress is discarded, exactly
-            // like the boosting scanner abandons a pass)
-            if step % cfg.poll_every == cfg.poll_every - 1 && driver.poll_interrupt() {
+            // like the boosting scanner abandons a pass); only full
+            // poll_every slices poll — a ragged final slice runs through
+            // to the certify step, as it always has
+            if done % cfg.poll_every == 0 && driver.poll_interrupt() {
                 driver.adopt_pending(&mut |_prev, cur| resync(&mut w, cur));
                 interrupted = true;
                 break;
@@ -557,6 +575,34 @@ mod tests {
         assert!(SgdPayload::decode(b"sgdcert 0.5 0 0\nlinear v1 2\n1.0\n").is_err());
         assert!(SgdPayload::decode(b"sgdcert 0.5 0 0\nlinear v1 1\ninf\n").is_err());
         assert!(SgdPayload::decode(&[0xFF, 0xFE, 0x00]).is_err());
+    }
+
+    #[test]
+    fn sgd_steps_is_deterministic_and_improves() {
+        let mut gen = SynthGen::new(SynthConfig {
+            f: 8,
+            pos_rate: 0.4,
+            informative: 4,
+            signal: 1.0,
+            flip_rate: 0.0,
+            seed: 11,
+        });
+        let shard = gen.next_block(500);
+        let mut w1 = vec![0.0f32; 8];
+        let mut w2 = vec![0.0f32; 8];
+        let (mut c1, mut c2) = (0usize, 0usize);
+        sgd_steps(&mut w1, &shard, 0.1, &mut c1, 400);
+        sgd_steps(&mut w2, &shard, 0.1, &mut c2, 400);
+        assert_eq!(w1, w2, "same shard + cursor must be bitwise identical");
+        assert_eq!((c1, c2), (400, 400));
+        // slicing the chunk (the worker's poll cadence) changes nothing
+        let mut w3 = vec![0.0f32; 8];
+        let mut c3 = 0usize;
+        for _ in 0..25 {
+            sgd_steps(&mut w3, &shard, 0.1, &mut c3, 16);
+        }
+        assert_eq!(w1, w3, "poll-slicing must not change the arithmetic");
+        assert!(logistic_loss(&w1, &shard) < logistic_loss(&vec![0.0f32; 8], &shard));
     }
 
     #[test]

@@ -1,0 +1,166 @@
+//! Clock abstraction: real wall-clock time vs. simulated virtual time.
+//!
+//! Every time-dependent component in the repo (fabric delays, I/O and
+//! compute throttles, metrics timestamps) reads time through [`Clock`]
+//! instead of calling `Instant::now()` / `thread::sleep` directly. With
+//! [`RealClock`] (the default everywhere) behavior is byte-identical to
+//! the pre-clock code; with [`SimClock`] the same components run under
+//! **virtual time**: "sleeping" advances a counter instead of the OS
+//! clock, so a simulated hour costs nanoseconds of wall time and a fixed
+//! seed yields the exact same timestamps on every run (DESIGN.md §9).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// A source of time plus the ability to wait.
+///
+/// `now()` returns an [`Instant`] so existing `Instant`-based arithmetic
+/// (`duration_since`, heap ordering of due times) works unmodified;
+/// [`SimClock`] mints instants as a fixed base plus the virtual offset.
+pub trait Clock: Send + Sync {
+    /// The current time on this clock.
+    fn now(&self) -> Instant;
+
+    /// Wait for `d`: a real sleep on [`RealClock`], a virtual-time advance
+    /// on [`SimClock`] (returns immediately).
+    fn sleep(&self, d: Duration);
+
+    /// Virtual clocks return `true` so code that waits on *real* OS
+    /// primitives (channel `recv_timeout`, condvars) caps its real wait
+    /// and re-reads the clock instead of blocking for a virtual duration.
+    fn is_virtual(&self) -> bool {
+        false
+    }
+}
+
+/// The operating-system clock: `Instant::now()` + `thread::sleep`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RealClock;
+
+impl Clock for RealClock {
+    fn now(&self) -> Instant {
+        Instant::now()
+    }
+
+    fn sleep(&self, d: Duration) {
+        if d > Duration::ZERO {
+            std::thread::sleep(d);
+        }
+    }
+}
+
+/// A virtual clock: time is a monotone nanosecond counter advanced
+/// explicitly (by the simulator's event loop) or implicitly (by
+/// [`Clock::sleep`], which models the sleep instead of performing it).
+///
+/// Shared via `Arc`; all readers observe one timeline. The counter only
+/// moves forward — `advance_to` with a past timestamp is a no-op.
+#[derive(Debug)]
+pub struct SimClock {
+    base: Instant,
+    nanos: AtomicU64,
+}
+
+impl Default for SimClock {
+    fn default() -> Self {
+        SimClock::new()
+    }
+}
+
+impl SimClock {
+    /// A fresh virtual clock at t = 0.
+    pub fn new() -> SimClock {
+        SimClock {
+            base: Instant::now(),
+            nanos: AtomicU64::new(0),
+        }
+    }
+
+    /// Virtual time elapsed since the clock's epoch.
+    pub fn now_virtual(&self) -> Duration {
+        Duration::from_nanos(self.nanos.load(Ordering::Acquire))
+    }
+
+    /// Advance virtual time by `d`.
+    pub fn advance(&self, d: Duration) {
+        self.nanos
+            .fetch_add(d.as_nanos().min(u64::MAX as u128) as u64, Ordering::AcqRel);
+    }
+
+    /// Advance virtual time *to* `t` (no-op if already past it).
+    pub fn advance_to(&self, t: Duration) {
+        self.nanos
+            .fetch_max(t.as_nanos().min(u64::MAX as u128) as u64, Ordering::AcqRel);
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> Instant {
+        self.base + self.now_virtual()
+    }
+
+    fn sleep(&self, d: Duration) {
+        self.advance(d);
+    }
+
+    fn is_virtual(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn real_clock_advances_on_its_own() {
+        let c = RealClock;
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+        assert!(!c.is_virtual());
+    }
+
+    #[test]
+    fn sim_clock_only_moves_when_told() {
+        let c = SimClock::new();
+        let t0 = c.now();
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(c.now(), t0, "wall time must not leak into virtual time");
+        c.advance(Duration::from_secs(3600));
+        assert_eq!(c.now_virtual(), Duration::from_secs(3600));
+        assert_eq!(c.now().duration_since(t0), Duration::from_secs(3600));
+        assert!(c.is_virtual());
+    }
+
+    #[test]
+    fn sim_sleep_is_instant_and_advances() {
+        let c = SimClock::new();
+        let wall = Instant::now();
+        c.sleep(Duration::from_secs(1000));
+        assert!(wall.elapsed() < Duration::from_millis(100));
+        assert_eq!(c.now_virtual(), Duration::from_secs(1000));
+    }
+
+    #[test]
+    fn advance_to_is_monotone() {
+        let c = SimClock::new();
+        c.advance_to(Duration::from_millis(50));
+        c.advance_to(Duration::from_millis(20)); // in the past: no-op
+        assert_eq!(c.now_virtual(), Duration::from_millis(50));
+        c.advance_to(Duration::from_millis(70));
+        assert_eq!(c.now_virtual(), Duration::from_millis(70));
+    }
+
+    #[test]
+    fn trait_object_is_shareable() {
+        let c: Arc<dyn Clock> = Arc::new(SimClock::new());
+        let c2 = Arc::clone(&c);
+        let base = c.now();
+        let h = std::thread::spawn(move || c2.sleep(Duration::from_millis(7)));
+        h.join().unwrap();
+        // the advance from the other thread is visible here
+        assert_eq!(c.now().duration_since(base), Duration::from_millis(7));
+    }
+}

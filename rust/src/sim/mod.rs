@@ -1,0 +1,549 @@
+//! Deterministic fault-injection simulator (DESIGN.md §9).
+//!
+//! The paper's headline resilience claim — TMSN "does not require
+//! synchronization or a head node and is highly resilient against failing
+//! machines or laggards" — is validated here as a *replayable* property:
+//! a seeded, single-threaded discrete-event simulator runs the real
+//! protocol state machine ([`crate::tmsn::Tmsn`]) over a simulated wire
+//! ([`SimNet`], implementing the generic [`crate::tmsn::Link`]) under
+//! **virtual time** ([`SimClock`]), while a scripted [`Scenario`] injects
+//! crashes, restarts, laggards, and partitions at exact virtual
+//! timestamps.
+//!
+//! Because every stochastic choice flows from one seeded RNG and the
+//! event loop is single-threaded with a total deterministic order over
+//! simultaneous events, the run's full [`SimTrace`] is a pure function of
+//! `(seed, config, scenario)` — byte-identical across runs, asserted in
+//! `tests/sim_cluster.rs`. The engine also checks the TMSN invariants
+//! *continuously* while faults fire:
+//!
+//! 1. **verdict soundness** — a message is accepted iff its certificate
+//!    is strictly better than the worker's current one;
+//! 2. **certificate monotonicity** — no worker's certificate ever
+//!    worsens (per incarnation; a restart legitimately starts over);
+//! 3. **local-improvement soundness** — a worker never publishes a
+//!    payload that does not strictly improve on its own.
+//!
+//! Violations are collected (not panicked) so a failing scenario reports
+//! every broken invariant alongside its replayable trace.
+
+pub mod clock;
+pub mod net;
+pub mod scenario;
+pub mod trace;
+pub mod workloads;
+
+pub use clock::{Clock, RealClock, SimClock};
+pub use net::{EdgeFaults, SimEndpoint, SimNet, SimNetConfig, SimNetStats};
+pub use scenario::{Scenario, ScenarioEvent};
+pub use trace::SimTrace;
+pub use workloads::{sgd_sim_fixture, BoostSimWorker, SgdSimWorker, SimWorker};
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::metrics::{events, Event, EventKind, EventLog};
+use crate::tmsn::{Certified, Link, Payload, Tmsn, Verdict};
+use crate::util::rng::Rng;
+
+/// Configuration of one simulated cluster run.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// cluster size
+    pub workers: usize,
+    /// master seed: forked into the net's fault RNG (workload seeds are
+    /// derived by the caller's spawn function)
+    pub seed: u64,
+    /// wire fault model
+    pub net: SimNetConfig,
+    /// scripted fault schedule
+    pub scenario: Scenario,
+    /// virtual-time budget for local work; after the horizon no new work
+    /// units start, in-flight messages drain, and survivors do one final
+    /// inbox sweep
+    pub horizon: Duration,
+    /// per-worker cap on work units (safety backstop)
+    pub max_steps: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            workers: 4,
+            seed: 1,
+            net: SimNetConfig::default(),
+            scenario: Scenario::new(),
+            horizon: Duration::from_millis(1500),
+            max_steps: 100_000,
+        }
+    }
+}
+
+/// Final per-worker accounting (accumulated across incarnations).
+#[derive(Debug, Clone)]
+pub struct WorkerSummary {
+    /// worker id
+    pub id: usize,
+    /// alive at the end of the run (never crashed, or restarted)
+    pub alive: bool,
+    /// number of restarts (incarnations − 1)
+    pub restarts: u64,
+    /// work units performed
+    pub steps: u64,
+    /// payloads published
+    pub published: u64,
+    /// messages accepted / rejected by the verdict rule
+    pub accepts: u64,
+    /// see `accepts`
+    pub rejects: u64,
+    /// final certificate summary (lower = better for both workloads)
+    pub final_summary: f64,
+}
+
+/// Everything one simulated run produces.
+#[derive(Debug)]
+pub struct SimReport<P: Payload> {
+    /// best payload ever published on the wire
+    pub best: P,
+    /// per-worker accounting
+    pub workers: Vec<WorkerSummary>,
+    /// TMSN invariant violations observed (empty = the claims held)
+    pub violations: Vec<String>,
+    /// the deterministic event trace (byte-identical per seed)
+    pub trace: String,
+    /// protocol events with **virtual** timestamps, via the unmodified
+    /// metrics pipeline
+    pub events: Vec<Event>,
+    /// wire counters
+    pub net: SimNetStats,
+    /// virtual time at the end of the run
+    pub virtual_elapsed: Duration,
+}
+
+impl<P: Payload> SimReport<P> {
+    /// Did every surviving worker end on the best published certificate?
+    /// (The §2 convergence claim; meaningful when the scenario heals all
+    /// partitions and the wire has no iid drop.)
+    pub fn survivors_converged(&self) -> bool {
+        let best = self.best.cert().summary();
+        self.workers
+            .iter()
+            .filter(|w| w.alive)
+            .all(|w| w.final_summary == best)
+    }
+}
+
+struct Slot<P: Payload, W> {
+    tmsn: Tmsn<P>,
+    worker: W,
+    ep: SimEndpoint<P>,
+    alive: bool,
+    speed: f64,
+    next_ready: Duration,
+    steps: u64,
+    published: u64,
+    restarts: u64,
+    /// verdict counters of completed incarnations
+    acc_accepts: u64,
+    acc_rejects: u64,
+    /// last certificate, for the monotonicity invariant (reset on restart)
+    prev_cert: <P as Payload>::Cert,
+}
+
+/// Drain one worker's inbox through the real verdict rule, checking the
+/// accept-iff-strictly-better and monotonicity invariants per message.
+fn drain_inbox<P: Payload, W: SimWorker<P>>(
+    slot: &mut Slot<P, W>,
+    t: Duration,
+    log: &EventLog,
+    trace: &mut SimTrace,
+    violations: &mut Vec<String>,
+) {
+    while let Some(msg) = slot.ep.poll() {
+        let id = slot.tmsn.worker_id();
+        let (origin, seq) = (msg.cert().origin(), msg.cert().seq());
+        let val = msg.cert().summary();
+        let expected = msg.cert().better_than(slot.tmsn.cert());
+        log.record(id, EventKind::Receive, Some((origin, seq)), val);
+        match slot.tmsn.on_message(msg) {
+            Verdict::Accept => {
+                log.record(id, EventKind::Accept, Some((origin, seq)), val);
+                trace.push(t, &format!("w{id}   accept  {origin}#{seq} cert={val:.9}"));
+                if !expected {
+                    violations.push(format!(
+                        "worker {id} ACCEPTED a not-strictly-better cert {origin}#{seq} at {t:?}"
+                    ));
+                }
+                let adopted = slot.tmsn.payload().clone();
+                slot.worker.on_adopt(&adopted);
+            }
+            Verdict::Reject => {
+                log.record(id, EventKind::Reject, Some((origin, seq)), val);
+                trace.push(t, &format!("w{id}   reject  {origin}#{seq}"));
+                if expected {
+                    violations.push(format!(
+                        "worker {id} REJECTED a strictly-better cert {origin}#{seq} at {t:?}"
+                    ));
+                }
+            }
+        }
+        check_monotone(slot, t, violations);
+    }
+}
+
+fn check_monotone<P: Payload, W>(slot: &mut Slot<P, W>, t: Duration, violations: &mut Vec<String>) {
+    let cur = slot.tmsn.cert().clone();
+    if slot.prev_cert.better_than(&cur) {
+        violations.push(format!(
+            "worker {} certificate WORSENED ({} -> {}) at {t:?}",
+            slot.tmsn.worker_id(),
+            slot.prev_cert.summary(),
+            cur.summary()
+        ));
+    }
+    slot.prev_cert = cur;
+}
+
+/// One worker turn: receive path, one local work unit, send path.
+#[allow(clippy::too_many_arguments)]
+fn worker_turn<P: Payload, W: SimWorker<P>>(
+    slot: &mut Slot<P, W>,
+    t: Duration,
+    log: &EventLog,
+    trace: &mut SimTrace,
+    violations: &mut Vec<String>,
+    best: &mut P,
+) {
+    drain_inbox(slot, t, log, trace, violations);
+    let current = slot.tmsn.payload().clone();
+    let (base_cost, candidate) = slot.worker.step(&current);
+    slot.steps += 1;
+    // never let a zero-cost step freeze virtual time
+    let cost = base_cost.mul_f64(slot.speed).max(Duration::from_micros(1));
+    slot.next_ready = t + cost;
+    if let Some(p) = candidate {
+        let id = slot.tmsn.worker_id();
+        if p.cert().better_than(slot.tmsn.cert()) {
+            let msg = slot.tmsn.local_update(p);
+            let seq = msg.cert().seq();
+            let val = msg.cert().summary();
+            log.record(id, EventKind::LocalImprovement, Some((id, seq)), val);
+            slot.ep.send(msg.clone());
+            log.record(id, EventKind::Broadcast, Some((id, seq)), val);
+            trace.push(t, &format!("w{id}   publish seq={seq} cert={val:.9}"));
+            slot.published += 1;
+            if msg.cert().better_than(best.cert()) {
+                *best = msg;
+            }
+        } else {
+            violations.push(format!(
+                "worker {id} produced a NON-IMPROVING candidate at {t:?}"
+            ));
+        }
+    }
+    check_monotone(slot, t, violations);
+}
+
+/// Run one scenario to completion and report.
+///
+/// `spawn(id, incarnation)` builds a worker's local-search state;
+/// incarnation 0 is the initial boot, 1+ follow restarts. Derive any
+/// workload randomness from both arguments so restarted workers are
+/// deterministic too.
+pub fn run_scenario<P, W, F>(cfg: &SimConfig, mut spawn: F) -> SimReport<P>
+where
+    P: Payload,
+    W: SimWorker<P>,
+    F: FnMut(usize, u64) -> W,
+{
+    assert!(cfg.workers >= 1, "need at least one worker");
+    if let Some(m) = cfg.scenario.max_worker() {
+        assert!(m < cfg.workers, "scenario references worker {m} of {}", cfg.workers);
+    }
+
+    let clock = Arc::new(SimClock::new());
+    let (log, event_rx) = EventLog::with_clock(clock.clone());
+    let mut master = Rng::new(cfg.seed);
+    let (net, endpoints) = SimNet::<P>::new(cfg.workers, cfg.net.clone(), master.fork(0xE7));
+    let mut trace = SimTrace::new();
+    let mut violations: Vec<String> = Vec::new();
+    let mut best = P::initial();
+
+    let mut slots: Vec<Slot<P, W>> = endpoints
+        .into_iter()
+        .enumerate()
+        .map(|(id, ep)| Slot {
+            tmsn: Tmsn::new(id),
+            worker: spawn(id, 0),
+            ep,
+            alive: true,
+            speed: 1.0,
+            next_ready: Duration::ZERO,
+            steps: 0,
+            published: 0,
+            restarts: 0,
+            acc_accepts: 0,
+            acc_rejects: 0,
+            prev_cert: <P as Payload>::Cert::initial(),
+        })
+        .collect();
+
+    let sched = cfg.scenario.sorted();
+    let mut sidx = 0usize;
+
+    loop {
+        // earliest pending event across the three sources
+        let t_scn = (sidx < sched.len()).then(|| sched[sidx].0);
+        let t_net = net.next_due();
+        let t_work = slots
+            .iter()
+            .filter(|s| s.alive && s.steps < cfg.max_steps && s.next_ready <= cfg.horizon)
+            .map(|s| s.next_ready)
+            .min();
+        let Some(t) = [t_scn, t_net, t_work].into_iter().flatten().min() else {
+            break;
+        };
+        clock.advance_to(t);
+        net.set_now(t);
+
+        // 1) scenario events due at t (stable order)
+        while sidx < sched.len() && sched[sidx].0 <= t {
+            let ev = &sched[sidx].1;
+            trace.push(t, &ev.describe());
+            match ev {
+                ScenarioEvent::Crash(i) => {
+                    let s = &mut slots[*i];
+                    if s.alive {
+                        s.alive = false;
+                        net.set_down(*i, true);
+                        log.record(*i, EventKind::Crash, None, 0.0);
+                    }
+                }
+                ScenarioEvent::Restart(i) => {
+                    let s = &mut slots[*i];
+                    if !s.alive {
+                        s.acc_accepts += s.tmsn.accepts;
+                        s.acc_rejects += s.tmsn.rejects;
+                        s.restarts += 1;
+                        s.alive = true;
+                        s.tmsn = Tmsn::new(*i);
+                        s.worker = spawn(*i, s.restarts);
+                        s.prev_cert = <P as Payload>::Cert::initial();
+                        s.next_ready = t;
+                        net.set_down(*i, false);
+                    }
+                }
+                ScenarioEvent::Laggard(i, k) => {
+                    assert!(*k > 0.0, "laggard factor must be positive");
+                    slots[*i].speed = *k;
+                }
+                ScenarioEvent::Partition(groups) => net.partition(groups),
+                ScenarioEvent::Heal => net.heal(),
+            }
+            sidx += 1;
+        }
+
+        // 2) wire deliveries due at t
+        net.deliver_due(t);
+        for (wt, line) in net.drain_wire_log() {
+            trace.push(wt, &line);
+        }
+
+        // 3) worker turns due at t (ascending id — deterministic)
+        for i in 0..slots.len() {
+            let due = slots[i].alive
+                && slots[i].steps < cfg.max_steps
+                && slots[i].next_ready <= t
+                && slots[i].next_ready <= cfg.horizon;
+            if due {
+                worker_turn(&mut slots[i], t, &log, &mut trace, &mut violations, &mut best);
+            }
+        }
+        // send-time wire events (drops/dups/blocks) from this round's turns
+        for (wt, line) in net.drain_wire_log() {
+            trace.push(wt, &line);
+        }
+    }
+
+    // quiescence: every in-flight message has been delivered or discarded;
+    // survivors take one final look at their inboxes (adopt-only)
+    let t_end = clock.now_virtual();
+    for slot in slots.iter_mut() {
+        if slot.alive {
+            drain_inbox(slot, t_end, &log, &mut trace, &mut violations);
+            log.record(slot.tmsn.worker_id(), EventKind::Finish, None, slot.tmsn.cert().summary());
+        }
+    }
+
+    let workers = slots
+        .iter()
+        .map(|s| WorkerSummary {
+            id: s.tmsn.worker_id(),
+            alive: s.alive,
+            restarts: s.restarts,
+            steps: s.steps,
+            published: s.published,
+            accepts: s.acc_accepts + s.tmsn.accepts,
+            rejects: s.acc_rejects + s.tmsn.rejects,
+            final_summary: s.tmsn.cert().summary(),
+        })
+        .collect();
+
+    debug_assert_eq!(net.queue_len(), 0, "event loop exited with messages in flight");
+    SimReport {
+        best,
+        workers,
+        violations,
+        trace: trace.text(),
+        events: events::drain(&event_rx),
+        net: net.stats(),
+        virtual_elapsed: t_end,
+    }
+}
+
+/// Named scenario presets shared by the test suite and the `sparrow sim`
+/// CLI; all timestamps are inside the default 1.5 s horizon.
+pub const PRESETS: &[&str] = &["calm", "crash", "laggard", "partition", "churn"];
+
+/// Build a preset schedule for an `n`-worker cluster; `None` for unknown
+/// names. See [`PRESETS`].
+pub fn preset(name: &str, n: usize) -> Option<Scenario> {
+    let ms = Duration::from_millis;
+    Some(match name {
+        // fault-free control run
+        "calm" => Scenario::new(),
+        // staggered fail-stop of the top half of the cluster
+        "crash" => (0..n / 2).fold(Scenario::new(), |s, k| {
+            s.at(ms(300 + 120 * k as u64), ScenarioEvent::Crash(n - 1 - k))
+        }),
+        // one machine turns 8x slower early on
+        "laggard" => Scenario::new().at(ms(100), ScenarioEvent::Laggard(1 % n, 8.0)),
+        // clean split, healed while work continues
+        "partition" => {
+            let a: Vec<usize> = (0..n / 2).collect();
+            let b: Vec<usize> = (n / 2..n).collect();
+            Scenario::new()
+                .at(ms(300), ScenarioEvent::Partition(vec![a, b]))
+                .at(ms(900), ScenarioEvent::Heal)
+        }
+        // everything at once: laggard + crash + partition + heal + restart
+        "churn" => {
+            let a: Vec<usize> = (0..n / 2).collect();
+            let b: Vec<usize> = (n / 2..n).collect();
+            Scenario::new()
+                .at(ms(200), ScenarioEvent::Laggard(0, 4.0))
+                .at(ms(300), ScenarioEvent::Crash(1 % n))
+                .at(ms(500), ScenarioEvent::Partition(vec![a, b]))
+                .at(ms(800), ScenarioEvent::Heal)
+                .at(ms(900), ScenarioEvent::Restart(1 % n))
+                .at(ms(1200), ScenarioEvent::Crash(n - 1))
+        }
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tmsn::testpay::TestPayload;
+
+    /// Trivial deterministic workload: improve by 10% every step.
+    struct Halver {
+        score: f64,
+    }
+    impl SimWorker<TestPayload> for Halver {
+        fn step(&mut self, _current: &TestPayload) -> (Duration, Option<TestPayload>) {
+            self.score *= 0.9;
+            (
+                Duration::from_millis(10),
+                Some(TestPayload::scored("h", self.score)),
+            )
+        }
+        fn on_adopt(&mut self, adopted: &TestPayload) {
+            // continue from the adopted score so candidates keep improving
+            self.score = self.score.min(adopted.cert.score);
+        }
+    }
+
+    fn cfg(workers: usize, scenario: Scenario) -> SimConfig {
+        SimConfig {
+            workers,
+            scenario,
+            horizon: Duration::from_millis(200),
+            ..SimConfig::default()
+        }
+    }
+
+    fn run(c: &SimConfig) -> SimReport<TestPayload> {
+        run_scenario(c, |id, _inc| Halver {
+            score: 100.0 + id as f64,
+        })
+    }
+
+    #[test]
+    fn trivial_run_converges_and_is_deterministic() {
+        let c = cfg(3, Scenario::new());
+        let a = run(&c);
+        let b = run(&c);
+        assert_eq!(a.trace, b.trace, "trace must be a pure function of the seed");
+        assert!(a.violations.is_empty(), "{:?}", a.violations);
+        assert!(a.survivors_converged());
+        assert!(a.best.cert.score < 100.0);
+        assert!(a.net.delivered > 0, "peers must actually hear each other");
+        assert!(a.workers.iter().all(|w| w.steps > 0));
+    }
+
+    #[test]
+    fn crash_stops_a_worker_and_survivors_continue() {
+        let c = cfg(
+            3,
+            Scenario::new().at(Duration::from_millis(50), ScenarioEvent::Crash(2)),
+        );
+        let r = run(&c);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+        assert!(!r.workers[2].alive);
+        let crashed_steps = r.workers[2].steps;
+        assert!(crashed_steps < r.workers[0].steps, "crash must stop work");
+        assert!(r.survivors_converged());
+        assert!(r.trace.contains("w2   crash"));
+    }
+
+    #[test]
+    fn restart_rejoins_with_fresh_state() {
+        let c = cfg(
+            2,
+            Scenario::new()
+                .at(Duration::from_millis(40), ScenarioEvent::Crash(1))
+                .at(Duration::from_millis(120), ScenarioEvent::Restart(1)),
+        );
+        let r = run(&c);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+        assert!(r.workers[1].alive);
+        assert_eq!(r.workers[1].restarts, 1);
+        assert!(r.survivors_converged(), "restarted worker must catch up");
+        assert!(r.trace.contains("w1   restart"));
+    }
+
+    #[test]
+    fn laggard_slows_only_itself() {
+        let base = run(&cfg(3, Scenario::new()));
+        let lag = run(&cfg(
+            3,
+            Scenario::new().at(Duration::ZERO, ScenarioEvent::Laggard(2, 10.0)),
+        ));
+        // the no-barrier claim, structurally: peers' work is untouched
+        assert_eq!(base.workers[0].steps, lag.workers[0].steps);
+        assert_eq!(base.workers[1].steps, lag.workers[1].steps);
+        assert!(lag.workers[2].steps < base.workers[2].steps);
+        assert!(lag.violations.is_empty());
+    }
+
+    #[test]
+    fn unknown_preset_is_none_and_known_presets_build() {
+        assert!(preset("nope", 4).is_none());
+        for name in PRESETS {
+            let s = preset(name, 5).expect(name);
+            assert!(s.max_worker().map_or(true, |m| m < 5), "{name}");
+        }
+    }
+}

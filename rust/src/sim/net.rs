@@ -1,0 +1,521 @@
+//! Deterministic simulated broadcast network with per-edge fault injection.
+//!
+//! [`SimNet`] is the virtual-time counterpart of the threaded
+//! [`crate::network::Fabric`]: same broadcast-only, no-acknowledgement
+//! semantics, but single-threaded and driven explicitly by the simulator's
+//! event loop — `send` schedules deliveries at virtual due times,
+//! [`SimNet::deliver_due`] moves them into per-worker inboxes, and every
+//! random choice (delay, drop, duplication, reordering) comes from one
+//! seeded [`Rng`], so the whole wire history is a pure function of the
+//! seed.
+//!
+//! [`SimEndpoint`] implements the generic [`crate::tmsn::Link`], so the
+//! production protocol driver ([`crate::tmsn::Driver`]) and state machine
+//! run over the simulated net **unmodified** — that is the point: the
+//! resilience tests exercise the real protocol code, only the wire and the
+//! clock are simulated.
+
+use std::collections::{BinaryHeap, VecDeque};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::tmsn::{Link, Payload};
+use crate::util::rng::Rng;
+
+/// Fault model of one directed edge.
+#[derive(Debug, Clone)]
+pub struct EdgeFaults {
+    /// minimum propagation delay
+    pub delay_min: Duration,
+    /// maximum *base* propagation delay (uniform in `[min, max]`)
+    pub delay_max: Duration,
+    /// iid probability a message is silently lost
+    pub drop: f64,
+    /// probability a message is delivered twice (independent delays, so
+    /// the copies may arrive in either order)
+    pub dup: f64,
+    /// probability a message gets up to 2× the `[min, max]` span of extra
+    /// delay — enough to overtake later messages (reordering); the total
+    /// delay stays bounded by `min + 3·(max − min)`
+    pub reorder: f64,
+}
+
+impl Default for EdgeFaults {
+    fn default() -> Self {
+        EdgeFaults {
+            delay_min: Duration::from_micros(500),
+            delay_max: Duration::from_millis(3),
+            drop: 0.0,
+            dup: 0.0,
+            reorder: 0.0,
+        }
+    }
+}
+
+impl EdgeFaults {
+    /// A lossy/chaotic edge profile for stress scenarios.
+    pub fn lossy(drop: f64, dup: f64, reorder: f64) -> EdgeFaults {
+        EdgeFaults {
+            drop,
+            dup,
+            reorder,
+            ..EdgeFaults::default()
+        }
+    }
+}
+
+/// Network-wide configuration: a default edge profile plus per-edge
+/// `(src, dst)` overrides.
+#[derive(Debug, Clone, Default)]
+pub struct SimNetConfig {
+    /// fault model applied to every edge without an override
+    pub edge: EdgeFaults,
+    /// per-directed-edge overrides (first match wins)
+    pub overrides: Vec<(usize, usize, EdgeFaults)>,
+}
+
+/// Wire counters. `offered` counts per-destination send attempts (one
+/// broadcast to an `n`-cluster offers `n − 1` messages); after the queue
+/// drains, `delivered + to_down == offered − dropped − partition_blocked
+/// + duplicated` — asserted in the test suite.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SimNetStats {
+    /// broadcasts submitted by workers
+    pub broadcasts: u64,
+    /// per-destination messages considered (broadcasts × (n − 1))
+    pub offered: u64,
+    /// messages placed into an inbox
+    pub delivered: u64,
+    /// messages lost to the iid drop fault
+    pub dropped: u64,
+    /// extra copies injected by the duplication fault
+    pub duplicated: u64,
+    /// messages given extra reordering delay
+    pub reordered: u64,
+    /// messages blocked at send time by an active partition
+    pub partition_blocked: u64,
+    /// messages that arrived at a crashed worker and were discarded
+    pub to_down: u64,
+}
+
+/// A message in flight, ordered as a min-heap by `(due, seq)` — the
+/// tie-break makes delivery order deterministic even at equal due times.
+struct InFlight<P> {
+    due: Duration,
+    seq: u64,
+    src: usize,
+    dst: usize,
+    msg: P,
+}
+
+impl<P> PartialEq for InFlight<P> {
+    fn eq(&self, other: &Self) -> bool {
+        self.due == other.due && self.seq == other.seq
+    }
+}
+impl<P> Eq for InFlight<P> {}
+impl<P> PartialOrd for InFlight<P> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<P> Ord for InFlight<P> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap: invert for (due, seq) min-heap order
+        other
+            .due
+            .cmp(&self.due)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct Inner<P> {
+    cfg: SimNetConfig,
+    rng: Rng,
+    now: Duration,
+    seq: u64,
+    queue: BinaryHeap<InFlight<P>>,
+    inboxes: Vec<VecDeque<P>>,
+    /// partition: group index per worker (`None` = fully connected)
+    group_of: Option<Vec<Option<usize>>>,
+    down: Vec<bool>,
+    stats: SimNetStats,
+    /// timestamped wire-event lines, drained into the run trace
+    wire_log: Vec<(Duration, String)>,
+}
+
+impl<P: Payload> Inner<P> {
+    fn faults(&self, src: usize, dst: usize) -> EdgeFaults {
+        self.cfg
+            .overrides
+            .iter()
+            .find(|(s, d, _)| *s == src && *d == dst)
+            .map(|(_, _, f)| f.clone())
+            .unwrap_or_else(|| self.cfg.edge.clone())
+    }
+
+    fn blocked(&self, src: usize, dst: usize) -> bool {
+        match &self.group_of {
+            None => false,
+            // isolated (unlisted) workers can reach nobody
+            Some(g) => match (g[src], g[dst]) {
+                (Some(a), Some(b)) => a != b,
+                _ => true,
+            },
+        }
+    }
+
+    fn draw_delay(&mut self, f: &EdgeFaults) -> Duration {
+        let span = f.delay_max.saturating_sub(f.delay_min);
+        f.delay_min + span.mul_f64(self.rng.f64())
+    }
+
+    fn enqueue(&mut self, src: usize, dst: usize, due: Duration, msg: P) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(InFlight {
+            due,
+            seq,
+            src,
+            dst,
+            msg,
+        });
+    }
+
+    fn broadcast(&mut self, src: usize, msg: P) {
+        self.stats.broadcasts += 1;
+        let now = self.now;
+        for dst in 0..self.inboxes.len() {
+            if dst == src {
+                continue;
+            }
+            self.stats.offered += 1;
+            if self.blocked(src, dst) {
+                self.stats.partition_blocked += 1;
+                self.wire_log.push((now, format!("net  block {src}->{dst} (partition)")));
+                continue;
+            }
+            let f = self.faults(src, dst);
+            if f.drop > 0.0 && self.rng.bernoulli(f.drop) {
+                self.stats.dropped += 1;
+                self.wire_log.push((now, format!("net  drop  {src}->{dst}")));
+                continue;
+            }
+            let mut delay = self.draw_delay(&f);
+            if f.reorder > 0.0 && self.rng.bernoulli(f.reorder) {
+                let span = f.delay_max.saturating_sub(f.delay_min);
+                delay += span.mul_f64(self.rng.f64() * 2.0);
+                self.stats.reordered += 1;
+            }
+            self.enqueue(src, dst, now + delay, msg.clone());
+            if f.dup > 0.0 && self.rng.bernoulli(f.dup) {
+                let d2 = self.draw_delay(&f);
+                self.stats.duplicated += 1;
+                self.wire_log.push((now, format!("net  dup   {src}->{dst}")));
+                self.enqueue(src, dst, now + d2, msg.clone());
+            }
+        }
+    }
+
+    fn deliver_due(&mut self, t: Duration) {
+        self.now = self.now.max(t);
+        while self.queue.peek().map_or(false, |m| m.due <= t) {
+            let m = self.queue.pop().unwrap();
+            if self.down[m.dst] {
+                self.stats.to_down += 1;
+                self.wire_log
+                    .push((m.due, format!("net  drop  {}->{} (down)", m.src, m.dst)));
+            } else {
+                self.stats.delivered += 1;
+                self.wire_log
+                    .push((m.due, format!("net  deliver {}->{}", m.src, m.dst)));
+                self.inboxes[m.dst].push_back(m.msg);
+            }
+        }
+    }
+}
+
+/// The simulated network. Endpoints share the inner state; the engine
+/// drives delivery through [`SimNet::deliver_due`].
+pub struct SimNet<P> {
+    inner: Arc<Mutex<Inner<P>>>,
+}
+
+/// One worker's attachment to the simulated network; implements the
+/// generic [`Link`] so protocol code is transport-agnostic.
+pub struct SimEndpoint<P> {
+    id: usize,
+    inner: Arc<Mutex<Inner<P>>>,
+}
+
+impl<P: Payload> SimNet<P> {
+    /// A simulated `n`-cluster. All fault randomness is drawn from `rng`.
+    pub fn new(n: usize, cfg: SimNetConfig, rng: Rng) -> (SimNet<P>, Vec<SimEndpoint<P>>) {
+        assert!(n >= 1);
+        assert!(
+            cfg.edge.delay_max >= cfg.edge.delay_min,
+            "delay_max must be >= delay_min"
+        );
+        for (s, d, f) in &cfg.overrides {
+            assert!(*s < n && *d < n, "override edge ({s},{d}) out of range");
+            assert!(f.delay_max >= f.delay_min);
+        }
+        let inner = Arc::new(Mutex::new(Inner {
+            cfg,
+            rng,
+            now: Duration::ZERO,
+            seq: 0,
+            queue: BinaryHeap::new(),
+            inboxes: (0..n).map(|_| VecDeque::new()).collect(),
+            group_of: None,
+            down: vec![false; n],
+            stats: SimNetStats::default(),
+            wire_log: Vec::new(),
+        }));
+        let endpoints = (0..n)
+            .map(|id| SimEndpoint {
+                id,
+                inner: Arc::clone(&inner),
+            })
+            .collect();
+        (SimNet { inner }, endpoints)
+    }
+
+    /// Advance the net's notion of "now" (affects the due time of
+    /// subsequent sends). Monotone.
+    pub fn set_now(&self, t: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        g.now = g.now.max(t);
+    }
+
+    /// Virtual due time of the earliest in-flight message.
+    pub fn next_due(&self) -> Option<Duration> {
+        self.inner.lock().unwrap().queue.peek().map(|m| m.due)
+    }
+
+    /// Deliver every message due at or before `t` into its inbox (or drop
+    /// it if the destination is down), in deterministic `(due, seq)` order.
+    pub fn deliver_due(&self, t: Duration) {
+        self.inner.lock().unwrap().deliver_due(t);
+    }
+
+    /// Install a partition: messages crossing group boundaries (or
+    /// touching an unlisted worker) are blocked at send time.
+    pub fn partition(&self, groups: &[Vec<usize>]) {
+        let mut g = self.inner.lock().unwrap();
+        let n = g.inboxes.len();
+        let mut group_of: Vec<Option<usize>> = vec![None; n];
+        for (gi, members) in groups.iter().enumerate() {
+            for &w in members {
+                assert!(w < n, "partition member {w} out of range");
+                assert!(group_of[w].is_none(), "worker {w} in two partition groups");
+                group_of[w] = Some(gi);
+            }
+        }
+        g.group_of = Some(group_of);
+    }
+
+    /// Remove any partition. Blocked messages are *not* retransmitted.
+    pub fn heal(&self) {
+        self.inner.lock().unwrap().group_of = None;
+    }
+
+    /// Mark a worker crashed (`down = true`: inbox cleared, future
+    /// deliveries discarded) or recovered.
+    pub fn set_down(&self, id: usize, down: bool) {
+        let mut g = self.inner.lock().unwrap();
+        g.down[id] = down;
+        if down {
+            g.inboxes[id].clear();
+        }
+    }
+
+    /// Snapshot of the wire counters.
+    pub fn stats(&self) -> SimNetStats {
+        self.inner.lock().unwrap().stats.clone()
+    }
+
+    /// Messages still in flight.
+    pub fn queue_len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Take the buffered wire-event lines (for the run trace).
+    pub fn drain_wire_log(&self) -> Vec<(Duration, String)> {
+        std::mem::take(&mut self.inner.lock().unwrap().wire_log)
+    }
+}
+
+impl<P: Payload> SimEndpoint<P> {
+    /// This endpoint's worker id.
+    pub fn id(&self) -> usize {
+        self.id
+    }
+}
+
+impl<P: Payload> Link<P> for SimEndpoint<P> {
+    fn send(&self, msg: P) {
+        self.inner.lock().unwrap().broadcast(self.id, msg);
+    }
+
+    fn poll(&self) -> Option<P> {
+        self.inner.lock().unwrap().inboxes[self.id].pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tmsn::testpay::TestPayload;
+
+    fn ms(x: u64) -> Duration {
+        Duration::from_millis(x)
+    }
+
+    fn fixed_delay(d: Duration) -> SimNetConfig {
+        SimNetConfig {
+            edge: EdgeFaults {
+                delay_min: d,
+                delay_max: d,
+                ..EdgeFaults::default()
+            },
+            overrides: Vec::new(),
+        }
+    }
+
+    fn payload(tag: &str) -> TestPayload {
+        TestPayload::scored(tag, 0.5)
+    }
+
+    #[test]
+    fn broadcast_reaches_all_other_endpoints_after_delay() {
+        let (net, eps) = SimNet::new(3, fixed_delay(ms(5)), Rng::new(1));
+        eps[0].send(payload("hi"));
+        assert!(eps[1].poll().is_none(), "nothing delivered before due time");
+        assert_eq!(net.next_due(), Some(ms(5)));
+        net.deliver_due(ms(5));
+        assert_eq!(eps[1].poll().unwrap().body, "hi");
+        assert_eq!(eps[2].poll().unwrap().body, "hi");
+        assert!(eps[0].poll().is_none(), "no self-delivery");
+        let s = net.stats();
+        assert_eq!((s.broadcasts, s.offered, s.delivered), (1, 2, 2));
+    }
+
+    #[test]
+    fn schedule_is_a_pure_function_of_the_seed() {
+        let run = |seed: u64| {
+            let cfg = SimNetConfig {
+                edge: EdgeFaults {
+                    drop: 0.3,
+                    dup: 0.3,
+                    reorder: 0.5,
+                    ..EdgeFaults::default()
+                },
+                overrides: Vec::new(),
+            };
+            let (net, eps) = SimNet::new(4, cfg, Rng::new(seed));
+            for i in 0..20 {
+                net.set_now(Duration::from_micros(i * 137));
+                eps[(i % 4) as usize].send(payload(&format!("m{i}")));
+            }
+            net.deliver_due(Duration::from_secs(1));
+            let log: Vec<String> = net.drain_wire_log().into_iter().map(|(_, l)| l).collect();
+            (log, net.stats())
+        };
+        let (la, sa) = run(7);
+        let (lb, sb) = run(7);
+        assert_eq!(la, lb, "same seed must give an identical wire history");
+        assert_eq!(sa, sb);
+        let (lc, _) = run(8);
+        assert_ne!(la, lc, "different seeds must diverge");
+    }
+
+    #[test]
+    fn partition_blocks_cross_group_only() {
+        let (net, eps) = SimNet::new(4, fixed_delay(ms(1)), Rng::new(2));
+        net.partition(&[vec![0, 1], vec![2, 3]]);
+        eps[0].send(payload("a"));
+        net.deliver_due(ms(1));
+        assert!(eps[1].poll().is_some(), "same-group delivery survives");
+        assert!(eps[2].poll().is_none());
+        assert!(eps[3].poll().is_none());
+        assert_eq!(net.stats().partition_blocked, 2);
+        net.heal();
+        eps[0].send(payload("b"));
+        net.deliver_due(ms(10));
+        assert!(eps[2].poll().is_some(), "heal restores the link");
+    }
+
+    #[test]
+    fn unlisted_workers_are_isolated_by_a_partition() {
+        let (net, eps) = SimNet::new(3, fixed_delay(ms(1)), Rng::new(3));
+        net.partition(&[vec![0, 1]]);
+        eps[2].send(payload("x"));
+        eps[0].send(payload("y"));
+        net.deliver_due(ms(1));
+        assert!(eps[0].poll().is_none(), "isolated worker reaches nobody");
+        assert!(eps[1].poll().unwrap().body == "y");
+        assert!(eps[2].poll().is_none(), "nobody reaches the isolated worker");
+    }
+
+    #[test]
+    fn down_worker_discards_deliveries_and_inbox() {
+        let (net, eps) = SimNet::new(2, fixed_delay(ms(1)), Rng::new(4));
+        eps[0].send(payload("queued"));
+        net.deliver_due(ms(1));
+        assert_eq!(net.stats().delivered, 1);
+        // message sits unread in w1's inbox; the crash clears it
+        net.set_down(1, true);
+        assert!(eps[1].poll().is_none(), "crash clears the inbox");
+        eps[0].send(payload("while-down"));
+        net.deliver_due(ms(10));
+        assert_eq!(net.stats().to_down, 1);
+        net.set_down(1, false);
+        assert!(eps[1].poll().is_none(), "nothing replayed after recovery");
+    }
+
+    #[test]
+    fn duplication_delivers_twice_and_is_counted() {
+        let cfg = SimNetConfig {
+            edge: EdgeFaults {
+                delay_min: ms(1),
+                delay_max: ms(2),
+                dup: 1.0,
+                ..EdgeFaults::default()
+            },
+            overrides: Vec::new(),
+        };
+        let (net, eps) = SimNet::new(2, cfg, Rng::new(5));
+        eps[0].send(payload("d"));
+        net.deliver_due(ms(10));
+        assert!(eps[1].poll().is_some());
+        assert!(eps[1].poll().is_some(), "duplicate copy must arrive too");
+        assert!(eps[1].poll().is_none());
+        let s = net.stats();
+        assert_eq!((s.duplicated, s.delivered), (1, 2));
+    }
+
+    #[test]
+    fn per_edge_override_applies_to_that_edge_only() {
+        let cfg = SimNetConfig {
+            edge: fixed_delay(ms(1)).edge,
+            overrides: vec![(0, 2, EdgeFaults { drop: 1.0, ..fixed_delay(ms(1)).edge })],
+        };
+        let (net, eps) = SimNet::new(3, cfg, Rng::new(6));
+        eps[0].send(payload("o"));
+        net.deliver_due(ms(5));
+        assert!(eps[1].poll().is_some(), "default edge delivers");
+        assert!(eps[2].poll().is_none(), "overridden edge drops everything");
+        assert_eq!(net.stats().dropped, 1);
+    }
+
+    #[test]
+    fn single_node_cluster_broadcast_is_a_noop() {
+        let (net, eps) = SimNet::new(1, fixed_delay(ms(1)), Rng::new(7));
+        eps[0].send(payload("solo"));
+        net.deliver_due(ms(10));
+        assert!(eps[0].poll().is_none());
+        let s = net.stats();
+        assert_eq!((s.broadcasts, s.offered, s.delivered), (1, 0, 0));
+    }
+}

@@ -1,0 +1,143 @@
+//! Scenario schedules: scripted fault injection at virtual timestamps.
+//!
+//! A [`Scenario`] is a list of `(virtual time, event)` pairs the engine
+//! applies while the cluster runs — the replayable encoding of "machine 2
+//! dies at t=300ms, the rack splits at t=500ms and heals at t=800ms, …".
+//! Because the schedule is data (not sleeps on real threads), the same
+//! scenario replays identically under any seed and can be asserted on in
+//! CI (DESIGN.md §9).
+
+use std::time::Duration;
+
+/// One scripted fault (or recovery) applied to the simulated cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScenarioEvent {
+    /// Worker halts: no more local work, its inbox is discarded, and every
+    /// message delivered to it while down is dropped.
+    Crash(usize),
+    /// A crashed worker rejoins with a fresh (empty) model — the paper's
+    /// no-ceremony recovery: it catches up purely by receiving broadcasts.
+    Restart(usize),
+    /// Worker's compute slows by the given factor (≥ 1); a factor of 1
+    /// restores full speed.
+    Laggard(usize, f64),
+    /// Network splits into the given groups; messages sent across group
+    /// boundaries are silently blocked. Workers not listed in any group
+    /// are isolated. Replaces any previous partition.
+    Partition(Vec<Vec<usize>>),
+    /// Remove the partition: all links work again (messages blocked while
+    /// partitioned are *not* retransmitted — TMSN needs no replay, later
+    /// broadcasts carry strictly-better state).
+    Heal,
+}
+
+impl ScenarioEvent {
+    /// Short rendering for the event trace.
+    pub fn describe(&self) -> String {
+        match self {
+            ScenarioEvent::Crash(w) => format!("w{w}   crash"),
+            ScenarioEvent::Restart(w) => format!("w{w}   restart"),
+            ScenarioEvent::Laggard(w, k) => format!("w{w}   laggard x{k}"),
+            ScenarioEvent::Partition(groups) => format!("net  partition {groups:?}"),
+            ScenarioEvent::Heal => "net  heal".to_string(),
+        }
+    }
+
+    /// The worker this event targets, if any (used for validation).
+    pub fn worker(&self) -> Option<usize> {
+        match self {
+            ScenarioEvent::Crash(w) | ScenarioEvent::Restart(w) | ScenarioEvent::Laggard(w, _) => {
+                Some(*w)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// An ordered fault schedule over virtual time.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Scenario {
+    events: Vec<(Duration, ScenarioEvent)>,
+}
+
+impl Scenario {
+    /// The empty (fault-free) scenario.
+    pub fn new() -> Scenario {
+        Scenario { events: Vec::new() }
+    }
+
+    /// Schedule `event` at virtual time `t` (builder style). Events may be
+    /// added in any order; same-timestamp events apply in insertion order.
+    pub fn at(mut self, t: Duration, event: ScenarioEvent) -> Scenario {
+        self.events.push((t, event));
+        self
+    }
+
+    /// The schedule sorted by timestamp (stable: insertion order breaks
+    /// ties), as consumed by the engine.
+    pub fn sorted(&self) -> Vec<(Duration, ScenarioEvent)> {
+        let mut v = self.events.clone();
+        v.sort_by_key(|(t, _)| *t);
+        v
+    }
+
+    /// Number of scheduled events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True for the fault-free scenario.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Largest worker index referenced anywhere in the schedule.
+    pub fn max_worker(&self) -> Option<usize> {
+        self.events
+            .iter()
+            .flat_map(|(_, e)| match e {
+                ScenarioEvent::Partition(groups) => {
+                    groups.iter().flatten().copied().collect::<Vec<_>>()
+                }
+                other => other.worker().into_iter().collect(),
+            })
+            .max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(x: u64) -> Duration {
+        Duration::from_millis(x)
+    }
+
+    #[test]
+    fn sorted_orders_by_time_stably() {
+        let s = Scenario::new()
+            .at(ms(500), ScenarioEvent::Heal)
+            .at(ms(100), ScenarioEvent::Crash(1))
+            .at(ms(100), ScenarioEvent::Laggard(0, 2.0)); // same t: after Crash(1)
+        let sorted = s.sorted();
+        assert_eq!(sorted[0].1, ScenarioEvent::Crash(1));
+        assert_eq!(sorted[1].1, ScenarioEvent::Laggard(0, 2.0));
+        assert_eq!(sorted[2].1, ScenarioEvent::Heal);
+    }
+
+    #[test]
+    fn max_worker_scans_partitions_too() {
+        let s = Scenario::new()
+            .at(ms(1), ScenarioEvent::Crash(2))
+            .at(ms(2), ScenarioEvent::Partition(vec![vec![0, 5], vec![1]]));
+        assert_eq!(s.max_worker(), Some(5));
+        assert_eq!(Scenario::new().max_worker(), None);
+    }
+
+    #[test]
+    fn describe_is_stable() {
+        assert_eq!(ScenarioEvent::Crash(3).describe(), "w3   crash");
+        assert_eq!(ScenarioEvent::Heal.describe(), "net  heal");
+        assert_eq!(ScenarioEvent::Laggard(1, 4.0).describe(), "w1   laggard x4");
+    }
+}

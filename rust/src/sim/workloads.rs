@@ -1,0 +1,271 @@
+//! Workload adapters for the simulator: what a worker *does* between
+//! protocol interactions.
+//!
+//! The engine owns the protocol (the real [`crate::tmsn::Tmsn`] state
+//! machine over [`super::SimNet`]); a [`SimWorker`] supplies only the
+//! local search. Costs are **virtual**: a step reports how long it would
+//! have taken, and the engine advances the virtual clock — which is what
+//! makes laggard factors, crash timing, and every trace byte exactly
+//! reproducible.
+//!
+//! Two instantiations mirror the repo's two production workloads:
+//!
+//! * [`BoostSimWorker`] — the paper's boosting payload
+//!   ([`crate::tmsn::BoostPayload`]): a seeded search that certifies weak
+//!   rules with advantage γ and tightens the loss bound by
+//!   `sqrt(1 − 4γ²)` per find, exactly the production certificate
+//!   arithmetic (the scanner's statistics are abstracted into a seeded
+//!   hit-rate; the protocol math is the real thing).
+//! * [`SgdSimWorker`] — certified async SGD ([`crate::sgd::SgdPayload`])
+//!   running the **identical** gradient arithmetic as the threaded
+//!   cluster ([`crate::sgd::sgd_steps`]) on a real shard, with the real
+//!   held-out-loss certificate — full numerical convergence, in virtual
+//!   time.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::data::DataBlock;
+use crate::model::Stump;
+use crate::sgd::{logistic_loss, sgd_steps, SgdPayload};
+use crate::tmsn::{BoostPayload, Payload};
+use crate::util::rng::Rng;
+
+/// One simulated worker's local search.
+pub trait SimWorker<P: Payload> {
+    /// Perform one unit of local work against the currently certified
+    /// payload. Returns the unit's *base* virtual cost (the engine scales
+    /// it by the worker's laggard factor) and, if the search succeeded, a
+    /// strictly-better payload to publish.
+    fn step(&mut self, current: &P) -> (Duration, Option<P>);
+
+    /// A strictly-better remote payload was adopted; repair any local
+    /// state derived from the old one (e.g. scratch weights).
+    fn on_adopt(&mut self, adopted: &P);
+}
+
+/// Seeded boosting search: certifies a weak rule with probability
+/// `hit_rate` per unit, with advantage γ ~ U[0.05, 0.30].
+pub struct BoostSimWorker {
+    rng: Rng,
+    /// fixed virtual cost of one search unit
+    pub step_cost: Duration,
+    /// mean of the exponential jitter added per unit
+    pub jitter_mean: Duration,
+    /// probability one unit certifies a weak rule
+    pub hit_rate: f64,
+}
+
+impl BoostSimWorker {
+    /// A worker with the default cost model (2 ms + Exp(1 ms) per unit,
+    /// 70% hit rate), seeded independently per worker.
+    pub fn new(seed: u64) -> BoostSimWorker {
+        BoostSimWorker {
+            rng: Rng::new(seed),
+            step_cost: Duration::from_millis(2),
+            jitter_mean: Duration::from_millis(1),
+            hit_rate: 0.7,
+        }
+    }
+
+    /// The canonical per-`(run seed, worker, incarnation)` search stream —
+    /// the one derivation shared by the test suite and `sparrow sim`, so
+    /// both provably run the same workload.
+    pub fn for_run(run_seed: u64, id: usize, incarnation: u64) -> BoostSimWorker {
+        BoostSimWorker::new(
+            run_seed ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ (incarnation << 48),
+        )
+    }
+}
+
+impl SimWorker<BoostPayload> for BoostSimWorker {
+    fn step(&mut self, current: &BoostPayload) -> (Duration, Option<BoostPayload>) {
+        let jitter = if self.jitter_mean > Duration::ZERO {
+            Duration::from_secs_f64(self.rng.exponential(1.0 / self.jitter_mean.as_secs_f64()))
+        } else {
+            Duration::ZERO
+        };
+        let cost = self.step_cost + jitter;
+        if !self.rng.bernoulli(self.hit_rate) {
+            return (cost, None);
+        }
+        let gamma = 0.05 + self.rng.f64() * 0.25;
+        let alpha = 0.5 * ((1.0 + 2.0 * gamma) / (1.0 - 2.0 * gamma)).ln();
+        let mut model = current.model.clone();
+        model.push(
+            Stump::new(
+                self.rng.below(64) as u32,
+                self.rng.gauss() as f32,
+                if self.rng.bernoulli(0.5) { 1.0 } else { -1.0 },
+            ),
+            alpha as f32,
+        );
+        (cost, Some(current.improved(model, gamma)))
+    }
+
+    fn on_adopt(&mut self, _adopted: &BoostPayload) {}
+}
+
+/// Certified async SGD on a real data shard — the production gradient
+/// arithmetic ([`sgd_steps`]) and certificate ([`logistic_loss`] on the
+/// shared held-out set), under virtual time.
+pub struct SgdSimWorker {
+    shard: Arc<DataBlock>,
+    valid: Arc<DataBlock>,
+    w: Vec<f32>,
+    cursor: usize,
+    f: usize,
+    /// learning rate
+    pub lr: f32,
+    /// gradient steps per work unit
+    pub steps_per_unit: usize,
+    /// ε gap: publish only when undercutting the certified loss by this
+    pub min_gain: f64,
+}
+
+/// The canonical SGD sim fixture: per-worker private shards plus the
+/// shared held-out set, derived from the run seed — one builder shared by
+/// the test suite and `sparrow sim`.
+pub fn sgd_sim_fixture(run_seed: u64, workers: usize) -> (Vec<Arc<DataBlock>>, Arc<DataBlock>) {
+    let mut gen = crate::data::synth::SynthGen::new(crate::data::SynthConfig {
+        f: 12,
+        pos_rate: 0.35,
+        informative: 6,
+        signal: 0.9,
+        flip_rate: 0.02,
+        seed: run_seed ^ 0x51D0,
+    });
+    let shards = (0..workers).map(|_| Arc::new(gen.next_block(800))).collect();
+    let valid = Arc::new(gen.next_block(400));
+    (shards, valid)
+}
+
+impl SgdSimWorker {
+    /// A worker over its private `shard`, certifying on the shared
+    /// `valid` set. `id` decorrelates the shard walk across workers
+    /// (same scheme as the threaded cluster).
+    pub fn new(id: usize, shard: Arc<DataBlock>, valid: Arc<DataBlock>) -> SgdSimWorker {
+        assert!(!shard.is_empty() && !valid.is_empty());
+        let f = shard.f;
+        SgdSimWorker {
+            shard,
+            valid,
+            w: vec![0.0; f],
+            cursor: id * 31,
+            f,
+            lr: 0.05,
+            steps_per_unit: 100,
+            min_gain: 1e-3,
+        }
+    }
+}
+
+impl SimWorker<SgdPayload> for SgdSimWorker {
+    fn step(&mut self, current: &SgdPayload) -> (Duration, Option<SgdPayload>) {
+        sgd_steps(&mut self.w, &self.shard, self.lr, &mut self.cursor, self.steps_per_unit);
+        // deterministic cost model: 10 µs of virtual compute per step
+        let cost = Duration::from_micros(10 * self.steps_per_unit as u64);
+        let loss = logistic_loss(&self.w, &self.valid);
+        if loss.is_finite() && loss < current.cert.loss - self.min_gain {
+            (cost, Some(SgdPayload::certified(self.w.clone(), loss)))
+        } else {
+            (cost, None)
+        }
+    }
+
+    fn on_adopt(&mut self, adopted: &SgdPayload) {
+        // resync local scratch to the adopted weights (uncertified local
+        // progress is discarded, like the threaded worker's resync)
+        self.w.clear();
+        self.w.extend_from_slice(&adopted.w);
+        self.w.resize(self.f, 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthGen;
+    use crate::data::SynthConfig;
+    use crate::tmsn::Certified;
+
+    #[test]
+    fn boost_worker_is_deterministic_per_seed() {
+        let run = |seed: u64| {
+            let mut w = BoostSimWorker::new(seed);
+            let mut p = BoostPayload::initial();
+            let mut hist = Vec::new();
+            for _ in 0..30 {
+                let (cost, cand) = w.step(&p);
+                if let Some(c) = cand {
+                    hist.push((cost, c.cert.loss_bound));
+                    p = c;
+                } else {
+                    hist.push((cost, f64::NAN));
+                }
+            }
+            format!("{hist:?}")
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9), run(10));
+    }
+
+    #[test]
+    fn boost_candidates_strictly_improve() {
+        let mut w = BoostSimWorker::new(3);
+        let mut p = BoostPayload::initial();
+        for _ in 0..50 {
+            if let (_, Some(c)) = w.step(&p) {
+                assert!(c.cert().better_than(p.cert()));
+                assert!(c.model.len() == p.model.len() + 1);
+                p = c;
+            }
+        }
+        assert!(p.cert.loss_bound < 1.0, "no improvement ever found");
+    }
+
+    fn sgd_fixture() -> (Arc<DataBlock>, Arc<DataBlock>) {
+        let mut gen = SynthGen::new(SynthConfig {
+            f: 8,
+            pos_rate: 0.4,
+            informative: 4,
+            signal: 1.0,
+            flip_rate: 0.01,
+            seed: 0xDA7A,
+        });
+        (Arc::new(gen.next_block(400)), Arc::new(gen.next_block(200)))
+    }
+
+    #[test]
+    fn sgd_worker_publishes_only_with_min_gain() {
+        let (shard, valid) = sgd_fixture();
+        let mut w = SgdSimWorker::new(0, shard, valid);
+        let mut p = SgdPayload::initial();
+        let mut published = 0;
+        for _ in 0..40 {
+            let (cost, cand) = w.step(&p);
+            assert_eq!(cost, Duration::from_micros(1000));
+            if let Some(c) = cand {
+                assert!(
+                    c.cert.loss < p.cert.loss - w.min_gain || p.cert.loss.is_infinite(),
+                    "published without the ε gap"
+                );
+                p = c;
+                published += 1;
+            }
+        }
+        assert!(published > 0, "sgd never certified an improvement");
+        assert!(p.cert.loss < std::f64::consts::LN_2);
+    }
+
+    #[test]
+    fn sgd_adopt_resyncs_scratch_weights() {
+        let (shard, valid) = sgd_fixture();
+        let mut w = SgdSimWorker::new(1, shard, valid);
+        let adopted = SgdPayload::certified(vec![1.0, -1.0], 0.5);
+        w.on_adopt(&adopted);
+        assert_eq!(&w.w[..2], &[1.0, -1.0]);
+        assert_eq!(w.w.len(), 8, "scratch padded back to full width");
+        assert!(w.w[2..].iter().all(|&v| v == 0.0));
+    }
+}

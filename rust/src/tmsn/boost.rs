@@ -337,6 +337,48 @@ mod tests {
     }
 
     #[test]
+    fn prop_better_than_is_a_strict_partial_order() {
+        // The protocol's verdict rule and its no-churn/no-rebroadcast
+        // guarantees assume `better_than` is a strict partial order over
+        // certificates: irreflexive, asymmetric, transitive — and blind
+        // to lineage (origin/seq are diagnostics, not ordering keys).
+        prop_check("LossBoundCert strict partial order", 200, |rng| {
+            // draw from a small pool so exact ties and chains are common
+            let pool = [0.0, 0.049, 0.5, 0.5, 1.0, f64::INFINITY];
+            let cert = |rng: &mut crate::util::rng::Rng| LossBoundCert {
+                loss_bound: if rng.bernoulli(0.5) {
+                    pool[rng.below(pool.len() as u64) as usize]
+                } else {
+                    rng.f64() * 2.0
+                },
+                origin: rng.below(8) as usize,
+                seq: rng.below(100),
+            };
+            let certs: Vec<LossBoundCert> = (0..5).map(|_| cert(rng)).collect();
+            for a in &certs {
+                if a.better_than(a) {
+                    return Err(format!("irreflexivity violated: {a:?}"));
+                }
+                for b in &certs {
+                    if a.better_than(b) && b.better_than(a) {
+                        return Err(format!("asymmetry violated: {a:?} vs {b:?}"));
+                    }
+                    // equal bounds with different lineage order neither way
+                    if a.loss_bound == b.loss_bound && (a.better_than(b) || b.better_than(a)) {
+                        return Err(format!("lineage leaked into the order: {a:?} vs {b:?}"));
+                    }
+                    for c in &certs {
+                        if a.better_than(b) && b.better_than(c) && !a.better_than(c) {
+                            return Err(format!("transitivity violated: {a:?} {b:?} {c:?}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn prop_payload_roundtrip() {
         prop_check("boost payload roundtrip", 50, |rng| {
             let mut model = StrongRule::new();

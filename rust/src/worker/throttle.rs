@@ -6,23 +6,44 @@
 //! makes that worker behave like a machine running k× slower — the E6
 //! resilience experiment sweeps this.
 
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
 use crate::boosting::CandidateGrid;
 use crate::data::{BinnedBatch, DataBlock};
 use crate::model::StrongRule;
 use crate::scanner::{BatchResult, ScanBackend};
+use crate::sim::clock::{Clock, RealClock};
 
 /// Wraps a backend, adding `(k - 1)×` the measured batch time as sleep.
+///
+/// Batch time is measured (and the extra sleep performed) through a
+/// [`Clock`], so under a [`crate::sim::SimClock`] a laggard slows down in
+/// *virtual* time: wrap a backend whose cost is modeled via `clock.sleep`
+/// and the slowdown composes deterministically (DESIGN.md §9).
 pub struct ThrottledBackend {
     inner: Box<dyn ScanBackend>,
     factor: f64,
+    clock: Arc<dyn Clock>,
 }
 
 impl ThrottledBackend {
     pub fn new(inner: Box<dyn ScanBackend>, factor: f64) -> ThrottledBackend {
+        ThrottledBackend::with_clock(inner, factor, Arc::new(RealClock))
+    }
+
+    /// A laggard wrapper timing itself on `clock`.
+    pub fn with_clock(
+        inner: Box<dyn ScanBackend>,
+        factor: f64,
+        clock: Arc<dyn Clock>,
+    ) -> ThrottledBackend {
         assert!(factor >= 1.0, "laggard factor must be >= 1");
-        ThrottledBackend { inner, factor }
+        ThrottledBackend {
+            inner,
+            factor,
+            clock,
+        }
     }
 }
 
@@ -39,14 +60,14 @@ impl ScanBackend for ThrottledBackend {
         stripe: (usize, usize),
         out: &mut BatchResult,
     ) {
-        let t0 = Instant::now();
+        let t0 = self.clock.now();
         self.inner.scan_batch_into(
             block, bins, w_ref, score_ref, model_len_ref, model, grid, stripe, out,
         );
-        let spent = t0.elapsed();
+        let spent = self.clock.now().saturating_duration_since(t0);
         let extra = spent.mul_f64(self.factor - 1.0);
         if extra > Duration::ZERO {
-            std::thread::sleep(extra);
+            self.clock.sleep(extra);
         }
     }
 
@@ -64,6 +85,7 @@ mod tests {
     use super::*;
     use crate::scanner::NativeBackend;
     use crate::util::rng::Rng;
+    use std::time::Instant;
 
     fn work(be: &mut dyn ScanBackend, n: usize) -> Duration {
         let mut rng = Rng::new(1);
@@ -102,6 +124,50 @@ mod tests {
     #[should_panic(expected = "laggard factor")]
     fn rejects_speedup_factor() {
         ThrottledBackend::new(Box::new(NativeBackend), 0.5);
+    }
+
+    #[test]
+    fn virtual_clock_throttles_in_virtual_time() {
+        use crate::sim::SimClock;
+
+        /// A backend whose compute cost is *modeled*: each batch advances
+        /// the shared clock by 10 ms instead of burning CPU.
+        struct Modeled(Arc<SimClock>);
+        impl ScanBackend for Modeled {
+            fn scan_batch_into(
+                &mut self,
+                _block: &DataBlock,
+                _bins: Option<&BinnedBatch>,
+                _w_ref: &[f32],
+                _score_ref: &[f32],
+                _model_len_ref: &[u32],
+                _model: &StrongRule,
+                _grid: &CandidateGrid,
+                _stripe: (usize, usize),
+                _out: &mut BatchResult,
+            ) {
+                self.0.sleep(Duration::from_millis(10));
+            }
+            fn wants_bins(&self) -> bool {
+                false
+            }
+            fn name(&self) -> &'static str {
+                "modeled"
+            }
+        }
+
+        let clock = Arc::new(SimClock::new());
+        let mut slow =
+            ThrottledBackend::with_clock(Box::new(Modeled(clock.clone())), 4.0, clock.clone());
+        let block = DataBlock::new(1, 1, vec![0.0], vec![1.0]);
+        let grid = CandidateGrid::uniform(1, 1, -1.0, 1.0);
+        let model = StrongRule::new();
+        let wall = Instant::now();
+        slow.scan_batch(&block, &[1.0], &[0.0], &[0], &model, &grid, (0, 1));
+        // 10 ms modeled batch × factor 4 = exactly 40 ms of virtual time,
+        // and essentially zero wall time
+        assert_eq!(clock.now_virtual(), Duration::from_millis(40));
+        assert!(wall.elapsed() < Duration::from_millis(100));
     }
 
     #[test]

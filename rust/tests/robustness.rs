@@ -9,12 +9,38 @@ use sparrow::stopping::{CandidateStats, LilRule, StoppingRule};
 use sparrow::util::prop::{gen, prop_check};
 use sparrow::util::rng::Rng;
 
+/// Removes its directory on drop, so the scratch space is cleaned up even
+/// when a property fails and `prop_check` panics.
+struct ScratchDir(std::path::PathBuf);
+
+impl ScratchDir {
+    /// A per-process unique temp dir (pid + wall-clock nonce): concurrent
+    /// `cargo test` invocations of this suite can never collide on it.
+    fn unique(tag: &str) -> ScratchDir {
+        let nonce = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos())
+            .unwrap_or(0);
+        let dir = std::env::temp_dir().join(format!(
+            "sparrow_{tag}_{}_{nonce:x}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).expect("create scratch dir");
+        ScratchDir(dir)
+    }
+}
+
+impl Drop for ScratchDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
 #[test]
 fn binfmt_rejects_random_garbage_without_panicking() {
+    let scratch = ScratchDir::unique("robustness");
     prop_check("garbage files error cleanly", 50, |rng| {
-        let dir = std::env::temp_dir().join("sparrow_robustness");
-        std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
-        let path = dir.join(format!("garbage_{}.bin", rng.next_u64()));
+        let path = scratch.0.join(format!("garbage_{}.bin", rng.next_u64()));
         let len = gen::size(rng, 0, 256);
         let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
         std::fs::write(&path, &bytes).map_err(|e| e.to_string())?;

@@ -1,0 +1,384 @@
+//! Deterministic fault-injection scenario suite (DESIGN.md §9).
+//!
+//! Every test here runs the **real** TMSN state machine over the seeded
+//! virtual-time simulator and asserts the paper's resilience claims as
+//! invariants:
+//!
+//! * accept-iff-strictly-better is never violated,
+//! * certificates are monotone per worker (per incarnation),
+//! * the cluster converges despite k-of-n crashes,
+//! * laggards never block peers (the no-barrier claim),
+//! * and a fixed seed yields a **byte-identical** event trace.
+//!
+//! The suite honors `SPARROW_SIM_SEED` (default 1): CI runs it across
+//! several seeds (`.github/workflows/ci.yml`, job `sim`; locally
+//! `make sim` or `SPARROW_SIM_SEED=7 cargo test --test sim_cluster`).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sparrow::metrics::{EventKind, EventLog};
+use sparrow::sgd::SgdPayload;
+use sparrow::sim::{
+    preset, run_scenario, sgd_sim_fixture, BoostSimWorker, EdgeFaults, Scenario, ScenarioEvent,
+    SgdSimWorker, SimClock, SimConfig, SimNet, SimNetConfig, SimReport, PRESETS,
+};
+use sparrow::tmsn::{BoostPayload, Certified, Driver, Payload, Tmsn};
+
+fn ms(x: u64) -> Duration {
+    Duration::from_millis(x)
+}
+
+/// The seed CI sweeps via the `SPARROW_SIM_SEED` matrix.
+fn env_seed() -> u64 {
+    std::env::var("SPARROW_SIM_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+}
+
+fn boost_cfg(seed: u64, scenario: Scenario) -> SimConfig {
+    SimConfig {
+        workers: 5,
+        seed,
+        scenario,
+        horizon: ms(1500),
+        ..SimConfig::default()
+    }
+}
+
+fn run_boost(cfg: &SimConfig) -> SimReport<BoostPayload> {
+    // the canonical (run seed, worker, incarnation) derivation, shared
+    // with `sparrow sim`, so restarts are deterministic too
+    run_scenario(cfg, |id, incarnation| BoostSimWorker::for_run(cfg.seed, id, incarnation))
+}
+
+fn run_sgd(cfg: &SimConfig) -> SimReport<SgdPayload> {
+    let (shards, valid) = sgd_sim_fixture(cfg.seed, cfg.workers);
+    run_scenario(cfg, |id, _incarnation| {
+        // a restarted machine re-reads the same on-disk shard but starts
+        // from zero weights — SgdSimWorker::new is already that state
+        SgdSimWorker::new(id, Arc::clone(&shards[id]), Arc::clone(&valid))
+    })
+}
+
+fn assert_clean<P: Payload>(r: &SimReport<P>) {
+    assert!(
+        r.violations.is_empty(),
+        "TMSN invariant violations:\n{}",
+        r.violations.join("\n")
+    );
+}
+
+// ---------------------------------------------------------------------------
+// determinism: the acceptance criterion (byte-identical traces per seed)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fixed_seed_gives_byte_identical_traces_for_every_preset() {
+    let seed = env_seed();
+    for name in PRESETS {
+        let scenario = preset(name, 5).expect(name);
+        let a = run_boost(&boost_cfg(seed, scenario.clone()));
+        let b = run_boost(&boost_cfg(seed, scenario));
+        assert_clean(&a);
+        assert!(!a.trace.is_empty());
+        assert_eq!(
+            a.trace, b.trace,
+            "trace of preset '{name}' is not a pure function of seed {seed}"
+        );
+        // the virtual timeline and counters replay exactly too
+        assert_eq!(a.virtual_elapsed, b.virtual_elapsed);
+        assert_eq!(a.net, b.net);
+    }
+}
+
+#[test]
+fn different_seeds_give_different_traces() {
+    let scenario = preset("crash", 5).unwrap();
+    let a = run_boost(&boost_cfg(1, scenario.clone()));
+    let b = run_boost(&boost_cfg(2, scenario));
+    assert_ne!(a.trace, b.trace, "the seed must actually steer the run");
+}
+
+#[test]
+fn sgd_trace_is_byte_identical_per_seed() {
+    let cfg = SimConfig {
+        workers: 4,
+        seed: env_seed(),
+        scenario: preset("churn", 4).unwrap(),
+        horizon: ms(1500),
+        ..SimConfig::default()
+    };
+    let a = run_sgd(&cfg);
+    let b = run_sgd(&cfg);
+    assert_clean(&a);
+    assert_eq!(a.trace, b.trace, "SGD trace is not a pure function of the seed");
+}
+
+// ---------------------------------------------------------------------------
+// crash resilience: convergence despite k-of-n failures
+// ---------------------------------------------------------------------------
+
+#[test]
+fn boosting_converges_despite_k_of_n_crashes() {
+    let r = run_boost(&boost_cfg(env_seed(), preset("crash", 5).unwrap()));
+    assert_clean(&r);
+    let crashed: Vec<usize> =
+        r.workers.iter().filter(|w| !w.alive).map(|w| w.id).collect();
+    assert_eq!(crashed, vec![3, 4], "the crash preset fells the top 2 of 5");
+    // survivors made certified progress and all ended on the best bound
+    assert!(r.best.cert.loss_bound < 0.5, "bound {}", r.best.cert.loss_bound);
+    assert!(r.survivors_converged(), "survivors diverged: {:?}", r.workers);
+    // crashed workers stopped working (strictly fewer steps than peers)
+    for &c in &crashed {
+        assert!(r.workers[c].steps < r.workers[0].steps);
+    }
+    // the metrics pipeline saw the crashes, on the virtual clock
+    let crash_events: Vec<_> =
+        r.events.iter().filter(|e| e.kind == EventKind::Crash).collect();
+    assert_eq!(crash_events.len(), 2);
+    assert!(crash_events.iter().all(|e| e.elapsed >= ms(300)));
+}
+
+#[test]
+fn restart_rejoins_with_nothing_but_broadcasts() {
+    // churn preset: worker 1 crashes at 300ms and restarts at 900ms with
+    // an empty model; by quiescence it must hold the best certificate —
+    // the paper's "no recovery ceremony" claim.
+    let r = run_boost(&boost_cfg(env_seed(), preset("churn", 5).unwrap()));
+    assert_clean(&r);
+    assert_eq!(r.workers[1].restarts, 1);
+    assert!(r.workers[1].alive);
+    assert!(!r.workers[4].alive, "churn crashes the last worker for good");
+    assert!(r.survivors_converged(), "{:?}", r.workers);
+    assert!(r.trace.contains("w1   restart"));
+}
+
+// ---------------------------------------------------------------------------
+// laggards: the no-barrier claim
+// ---------------------------------------------------------------------------
+
+#[test]
+fn laggard_never_blocks_peers() {
+    let seed = env_seed();
+    let base = run_boost(&boost_cfg(seed, preset("calm", 5).unwrap()));
+    let lag = run_boost(&boost_cfg(seed, preset("laggard", 5).unwrap()));
+    assert_clean(&base);
+    assert_clean(&lag);
+    // worker 1 is 8x slower from t=100ms; every other worker's work
+    // schedule is *bit-identical* to the fault-free run — there is no
+    // barrier anywhere for a slow machine to hold
+    for id in [0usize, 2, 3, 4] {
+        assert_eq!(
+            base.workers[id].steps, lag.workers[id].steps,
+            "laggard changed peer {id}'s step count"
+        );
+        assert_eq!(
+            base.workers[id].published, lag.workers[id].published,
+            "laggard changed peer {id}'s publish count"
+        );
+    }
+    // the laggard itself does proportionally less
+    assert!(lag.workers[1].steps < base.workers[1].steps / 3);
+    // and still converges with everyone else
+    assert!(lag.survivors_converged());
+}
+
+// ---------------------------------------------------------------------------
+// partitions
+// ---------------------------------------------------------------------------
+
+#[test]
+fn partition_heals_and_cluster_reconverges() {
+    let r = run_boost(&boost_cfg(env_seed(), preset("partition", 5).unwrap()));
+    assert_clean(&r);
+    assert!(r.net.partition_blocked > 0, "partition never blocked anything");
+    assert!(r.survivors_converged(), "cluster did not reconverge after heal");
+    assert!(r.trace.contains("net  partition"));
+    assert!(r.trace.contains("net  heal"));
+}
+
+#[test]
+fn unhealed_partition_converges_per_island() {
+    // without a heal, each island must still satisfy every invariant and
+    // converge internally (global convergence is impossible by design)
+    let scenario = Scenario::new().at(
+        ms(100),
+        ScenarioEvent::Partition(vec![vec![0, 1], vec![2, 3, 4]]),
+    );
+    let r = run_boost(&boost_cfg(env_seed(), scenario));
+    assert_clean(&r);
+    for island in [vec![0usize, 1], vec![2usize, 3, 4]] {
+        let best = island
+            .iter()
+            .map(|&i| r.workers[i].final_summary)
+            .fold(f64::INFINITY, f64::min);
+        for &i in &island {
+            assert_eq!(
+                r.workers[i].final_summary, best,
+                "island {island:?} did not converge internally"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// chaotic wire: drop + duplication + reordering
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lossy_duplicating_reordering_links_preserve_all_invariants() {
+    let cfg = SimConfig {
+        workers: 5,
+        seed: env_seed() ^ 0xC405,
+        net: SimNetConfig {
+            edge: EdgeFaults::lossy(0.25, 0.25, 0.5),
+            overrides: Vec::new(),
+        },
+        scenario: preset("churn", 5).unwrap(),
+        horizon: ms(1500),
+        ..SimConfig::default()
+    };
+    let r = run_boost(&cfg);
+    // the whole point: duplicated/reordered/stale deliveries are rejected
+    // by the verdict rule, never adopted — zero invariant violations
+    assert_clean(&r);
+    let s = &r.net;
+    assert!(s.dropped > 0 && s.duplicated > 0 && s.reordered > 0, "{s:?}");
+    // wire accounting: every offered message is delivered, dropped,
+    // blocked, or discarded at a dead node; duplicates add deliveries
+    assert_eq!(
+        s.delivered + s.to_down,
+        s.offered - s.dropped - s.partition_blocked + s.duplicated,
+        "{s:?}"
+    );
+    // duplicates of an adopted payload must show up as rejects
+    assert!(r.workers.iter().map(|w| w.rejects).sum::<u64>() > 0);
+}
+
+// ---------------------------------------------------------------------------
+// SGD workload: the same engine carries a second learner
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sgd_converges_despite_crashes() {
+    // crash-only scenario: every survivor sees every broadcast, so exact
+    // convergence to the best certificate is structurally guaranteed —
+    // even if the best publisher is one of the machines that later dies
+    let cfg = SimConfig {
+        workers: 4,
+        seed: env_seed(),
+        scenario: preset("crash", 4).unwrap(),
+        horizon: ms(1500),
+        ..SimConfig::default()
+    };
+    let r = run_sgd(&cfg);
+    assert_clean(&r);
+    assert!(
+        r.best.cert.loss < std::f64::consts::LN_2,
+        "certified loss {} not below the zero model",
+        r.best.cert.loss
+    );
+    assert_eq!(r.workers.iter().filter(|w| !w.alive).count(), 2);
+    assert!(r.survivors_converged(), "{:?}", r.workers);
+    // someone adopted someone else's model (the protocol did its job)
+    assert!(r.workers.iter().map(|w| w.accepts).sum::<u64>() > 0);
+}
+
+#[test]
+fn sgd_survives_churn_and_restart_recovers() {
+    let cfg = SimConfig {
+        workers: 4,
+        seed: env_seed(),
+        scenario: preset("churn", 4).unwrap(),
+        horizon: ms(1500),
+        ..SimConfig::default()
+    };
+    let r = run_sgd(&cfg);
+    assert_clean(&r);
+    assert!(r.best.cert.loss < std::f64::consts::LN_2);
+    // the restarted worker rebuilt from zero weights (plus any broadcasts
+    // it heard) and must itself end with a certified sub-ln2 model; note
+    // TMSN promises *progress*, not late-joiner state sync — if every
+    // peer plateaued under the ε gap before the restart, nothing obliges
+    // them to re-broadcast, so exact equality is not asserted here
+    // (see sgd_converges_despite_crashes for the exact-convergence case)
+    let w1 = &r.workers[1];
+    assert_eq!((w1.restarts, w1.alive), (1, true));
+    assert!(
+        w1.final_summary < std::f64::consts::LN_2,
+        "restarted worker never recovered: {w1:?}"
+    );
+    assert!(r.workers.iter().map(|w| w.accepts).sum::<u64>() > 0);
+    assert!(r.trace.contains("w1   restart"));
+}
+
+// ---------------------------------------------------------------------------
+// the production Driver runs unmodified over SimNet + SimClock
+// ---------------------------------------------------------------------------
+
+#[test]
+fn driver_runs_unmodified_over_simnet_under_virtual_time() {
+    let clock = Arc::new(SimClock::new());
+    let (log, rx) = EventLog::with_clock(clock.clone());
+    let delay = EdgeFaults {
+        delay_min: ms(5),
+        delay_max: ms(5),
+        ..EdgeFaults::default()
+    };
+    let cfg = SimNetConfig {
+        edge: delay,
+        overrides: Vec::new(),
+    };
+    let (net, mut eps) = SimNet::<BoostPayload>::new(2, cfg, sparrow::util::rng::Rng::new(3));
+    let b_ep = eps.pop().unwrap();
+    let a_ep = eps.pop().unwrap();
+    let mut a = Driver::new(Tmsn::<BoostPayload>::new(0), a_ep, log.clone());
+    let mut b = Driver::new(Tmsn::<BoostPayload>::new(1), b_ep, log);
+
+    // a real local improvement through the production send path
+    let mut model = a.payload().model.clone();
+    model.push(sparrow::model::Stump::new(0, 0.0, 1.0), 0.2);
+    let improved = a.payload().improved(model, 0.1);
+    a.publish(improved);
+
+    // nothing arrives until virtual time reaches the link delay
+    assert_eq!(b.poll_adopt(&mut |_, _| {}), 0);
+    assert_eq!(net.next_due(), Some(ms(5)));
+    clock.advance_to(ms(5));
+    net.deliver_due(ms(5));
+    assert_eq!(b.poll_adopt(&mut |_, _| {}), 1, "driver must adopt over SimNet");
+    assert_eq!(b.cert().origin, 0);
+    assert!(b.cert().loss_bound < 1.0);
+
+    // the unmodified metrics pipeline stamped *virtual* time
+    let events = sparrow::metrics::drain(&rx);
+    let accept = events
+        .iter()
+        .find(|e| e.kind == EventKind::Accept)
+        .expect("accept event");
+    assert_eq!(accept.elapsed, ms(5), "accept must be stamped at virtual t=5ms");
+}
+
+// ---------------------------------------------------------------------------
+// the full battery on the CI seed matrix
+// ---------------------------------------------------------------------------
+
+#[test]
+fn seeded_battery_all_presets_hold_all_invariants() {
+    let seed = env_seed();
+    for name in PRESETS {
+        let r = run_boost(&boost_cfg(seed, preset(name, 5).expect(name)));
+        assert_clean(&r);
+        assert!(
+            r.best.cert().summary() < 1.0,
+            "preset '{name}' made no certified progress"
+        );
+        assert!(
+            r.survivors_converged(),
+            "preset '{name}' (seed {seed}) did not converge: {:?}",
+            r.workers
+        );
+    }
+}
