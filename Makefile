@@ -1,7 +1,7 @@
 # Convenience entry points. The authoritative verification gate is
 # scripts/tier1.sh (used verbatim by CI).
 
-.PHONY: tier1 build test fmt clippy doc artifacts bench bench-scan sim clean
+.PHONY: tier1 build test fmt clippy doc check-ops-doc serve-demo artifacts bench bench-scan sim clean
 
 tier1:
 	./scripts/tier1.sh
@@ -23,6 +23,17 @@ clippy:
 # sampling/, data/store.rs, data/strata.rs).
 doc:
 	cd rust && cargo doc --no-deps
+
+# OPERATIONS.md coverage gate (CI `doc` job): every RPC method and event
+# kind in the source must be documented in the operator's manual.
+check-ops-doc:
+	./scripts/check_ops_doc.sh
+
+# Scripted control-plane round trip (OPERATIONS.md §1): gen-data →
+# `sparrow serve` → ping / predict / metrics.snapshot / serve.stats →
+# shutdown, all through `sparrow rpc`.
+serve-demo:
+	./scripts/serve_demo.sh
 
 # Deterministic fault-injection scenario suite (DESIGN.md §9). Pick the
 # seed with SPARROW_SIM_SEED=N; CI sweeps seeds 1-3 in the `sim` job.

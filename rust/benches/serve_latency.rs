@@ -1,0 +1,142 @@
+//! Serve-path latency under an adoption storm (DESIGN.md §10).
+//!
+//! Measures end-to-end prediction latency (TCP round trip through the
+//! RPC framing) in three regimes:
+//!   1. in-process dispatch only (no socket) — the protocol floor,
+//!   2. quiet: TCP round trips against a fixed served model,
+//!   3. storm: the same client while a publisher thread hot-swaps the
+//!      served model as fast as it can.
+//! The claim under test: a swap never blocks or drops a request, so the
+//! storm p99 stays in the same regime as the quiet p99 (no
+//! stop-the-world swap pause), and served versions remain monotone.
+//!
+//!     cargo bench --bench serve_latency
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use sparrow::admin::{dispatch, RpcClient, RpcServer};
+use sparrow::model::{StrongRule, Stump};
+use sparrow::serve::{ModelSlot, ServeHandler};
+use sparrow::util::json::Json;
+
+const MODEL_RULES: usize = 64;
+const FEATURES: usize = 64;
+const QUIET_REQS: usize = 2_000;
+const STORM_REQS: usize = 2_000;
+
+fn model(version: u64) -> StrongRule {
+    let mut m = StrongRule::new();
+    for t in 0..MODEL_RULES {
+        // vary thresholds by version so every swap installs new content
+        let thr = (version % 7) as f32 * 0.1 - 0.3;
+        m.push(Stump::new((t % FEATURES) as u32, thr, 1.0), 0.05);
+    }
+    m
+}
+
+fn predict_params() -> Json {
+    let row: Vec<Json> = (0..FEATURES)
+        .map(|i| Json::Num((i as f64 * 0.37).sin()))
+        .collect();
+    let mut o = Json::obj();
+    o.set("row", Json::Arr(row));
+    o
+}
+
+fn percentile(sorted: &[Duration], p: f64) -> Duration {
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx]
+}
+
+fn report(label: &str, lat: &mut Vec<Duration>) {
+    lat.sort();
+    println!(
+        "{label}: n={} p50={:?} p90={:?} p99={:?} max={:?}",
+        lat.len(),
+        percentile(lat, 0.50),
+        percentile(lat, 0.90),
+        percentile(lat, 0.99),
+        lat.last().unwrap(),
+    );
+}
+
+fn main() {
+    let slot = Arc::new(ModelSlot::new());
+    slot.publish(model(1), 1, 0.9);
+
+    // ---- 1. protocol floor: dispatch without a socket ---------------------
+    let handler = ServeHandler::new(Arc::clone(&slot));
+    let raw = {
+        let mut req = Json::obj();
+        req.set("v", 1.0)
+            .set("id", 1.0)
+            .set("method", "predict")
+            .set("params", predict_params());
+        req.to_string().into_bytes()
+    };
+    let mut lat = Vec::with_capacity(QUIET_REQS);
+    for _ in 0..200 {
+        dispatch(&handler, &raw); // warmup
+    }
+    for _ in 0..QUIET_REQS {
+        let t0 = Instant::now();
+        let out = dispatch(&handler, &raw);
+        lat.push(t0.elapsed());
+        assert!(out.windows(8).any(|w| w == b"\"score\":"), "bad reply");
+    }
+    report("dispatch-only", &mut lat);
+
+    // ---- 2. quiet TCP round trips -----------------------------------------
+    let server = RpcServer::bind("127.0.0.1:0", Arc::new(ServeHandler::new(Arc::clone(&slot))))
+        .expect("bind serve endpoint");
+    let mut client = RpcClient::connect(&server.local_addr().to_string()).expect("connect");
+    let params = predict_params();
+    for _ in 0..200 {
+        client.call_ok("predict", params.clone()).expect("warmup");
+    }
+    let mut lat = Vec::with_capacity(QUIET_REQS);
+    for _ in 0..QUIET_REQS {
+        let t0 = Instant::now();
+        client.call_ok("predict", params.clone()).expect("quiet predict");
+        lat.push(t0.elapsed());
+    }
+    report("tcp quiet   ", &mut lat);
+
+    // ---- 3. adoption storm ------------------------------------------------
+    let stop = Arc::new(AtomicBool::new(false));
+    let publisher = {
+        let slot = Arc::clone(&slot);
+        let stop = Arc::clone(&stop);
+        thread::spawn(move || {
+            let mut v = slot.version();
+            let mut published = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                v += 1;
+                slot.publish(model(v), v, 1.0 / v as f64);
+                published += 1;
+            }
+            published
+        })
+    };
+    let mut lat = Vec::with_capacity(STORM_REQS);
+    let mut last_version = 0u64;
+    for _ in 0..STORM_REQS {
+        let t0 = Instant::now();
+        let r = client.call_ok("predict", params.clone()).expect("storm predict");
+        lat.push(t0.elapsed());
+        let v = r.get("model_version").and_then(Json::as_u64).unwrap();
+        assert!(v >= last_version, "served version went backwards under storm");
+        last_version = v;
+    }
+    stop.store(true, Ordering::Relaxed);
+    let published = publisher.join().unwrap();
+    report("tcp storm   ", &mut lat);
+    println!(
+        "storm: {published} models published, {} swaps installed, final served v{}",
+        slot.swaps(),
+        slot.version()
+    );
+}

@@ -1,0 +1,90 @@
+//! Client side of the control-plane RPC: one connection, sequential
+//! request/response calls (the `sparrow rpc` subcommand and the
+//! integration tests are built on this).
+
+use std::io::{self, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::admin::proto::{RpcRequest, PROTO_VERSION};
+use crate::network::tcp::{frame_bytes, read_frame};
+use crate::util::json::Json;
+
+/// A blocking RPC client over one TCP connection.
+pub struct RpcClient {
+    stream: TcpStream,
+    next_id: u64,
+}
+
+impl RpcClient {
+    /// Dial an RPC endpoint, retrying briefly so bring-up order doesn't
+    /// matter (same policy as the broadcast transport's `connect`).
+    pub fn connect(addr: &str) -> io::Result<RpcClient> {
+        let mut last_err = io::Error::new(io::ErrorKind::Other, "no attempt");
+        for _ in 0..50 {
+            match TcpStream::connect(addr) {
+                Ok(s) => {
+                    s.set_nodelay(true).ok();
+                    return Ok(RpcClient {
+                        stream: s,
+                        next_id: 1,
+                    });
+                }
+                Err(e) => {
+                    last_err = e;
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+        Err(last_err)
+    }
+
+    /// One call; returns the full response envelope
+    /// (`{"v":…,"id":…,"result":…}` or `{"v":…,"id":…,"error":…}`).
+    pub fn call(&mut self, method: &str, params: Json) -> io::Result<Json> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = RpcRequest {
+            id,
+            method: method.to_string(),
+            params,
+        };
+        let body = req.to_json().to_string();
+        self.stream.write_all(&frame_bytes(body.as_bytes()))?;
+        let raw = read_frame(&mut self.stream)?.ok_or_else(|| {
+            io::Error::new(io::ErrorKind::UnexpectedEof, "endpoint closed mid-call")
+        })?;
+        let text = std::str::from_utf8(&raw)
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "non-UTF-8 response"))?;
+        let v = Json::parse(text)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+        if v.get("v").and_then(Json::as_u64) != Some(PROTO_VERSION) {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "response protocol version mismatch",
+            ));
+        }
+        if v.get("id").and_then(Json::as_u64) != Some(id) {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "response id does not match request",
+            ));
+        }
+        Ok(v)
+    }
+
+    /// One call, unwrapped: the `result` object on success, a rendered
+    /// `"rpc error <code>: <message>"` string on a typed error.
+    pub fn call_ok(&mut self, method: &str, params: Json) -> Result<Json, String> {
+        let envelope = self.call(method, params).map_err(|e| e.to_string())?;
+        if let Some(err) = envelope.get("error") {
+            let code = err.get("code").and_then(Json::as_f64).unwrap_or(0.0);
+            let msg = err.get("message").and_then(Json::as_str).unwrap_or("?");
+            return Err(format!("rpc error {code}: {msg}"));
+        }
+        envelope
+            .get("result")
+            .cloned()
+            .ok_or_else(|| "response carried neither result nor error".to_string())
+    }
+}

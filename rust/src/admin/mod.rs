@@ -1,0 +1,266 @@
+//! The admin control plane: a versioned JSON-RPC endpoint on every worker
+//! (DESIGN.md §10, OPERATIONS.md for the operator's manual).
+//!
+//! The paper's pitch — no head node, resilient, asynchronous — only
+//! matters in production if an operator can *see* and *steer* a live
+//! swarm. This module adds exactly that, without touching the training
+//! hot path: the worker publishes gauges into a shared [`ControlState`]
+//! and drains a nudge queue at its loop head; a lightweight
+//! [`RpcServer`] thread answers operator requests from that shared state.
+//!
+//! - [`proto`] — the wire envelope, typed error codes, and the canonical
+//!   method lists (`ADMIN_METHODS`, `SERVE_METHODS`).
+//! - [`server`] — the framing/dispatch loop, generic over [`RpcHandler`]
+//!   (the serve endpoint reuses it).
+//! - [`client`] — the blocking client behind `sparrow rpc`.
+//! - [`state`] — gauges, live counters, nudges, fault switches.
+//! - [`AdminHandler`] — the worker admin methods themselves.
+//!
+//! # Example
+//!
+//! ```
+//! use std::sync::atomic::AtomicBool;
+//! use std::sync::Arc;
+//! use sparrow::admin::{AdminHandler, ControlState, RpcClient, RpcServer};
+//! use sparrow::util::json::Json;
+//!
+//! let state = Arc::new(ControlState::new());
+//! let stop = Arc::new(AtomicBool::new(false));
+//! let handler = Arc::new(AdminHandler::new(0, Arc::clone(&state), Arc::clone(&stop)));
+//! let server = RpcServer::bind("127.0.0.1:0", handler).unwrap();
+//! let mut client = RpcClient::connect(&server.local_addr().to_string()).unwrap();
+//! let pong = client.call_ok("ping", Json::Null).unwrap();
+//! assert_eq!(pong.get("pong").and_then(Json::as_bool), Some(true));
+//! ```
+
+#![warn(missing_docs)]
+
+pub mod client;
+pub mod proto;
+pub mod server;
+pub mod state;
+
+pub use client::RpcClient;
+pub use proto::{RpcError, RpcRequest, ADMIN_METHODS, PROTO_VERSION, SERVE_METHODS};
+pub use server::{dispatch, RpcHandler, RpcServer};
+pub use state::{ControlState, Nudge};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::util::json::Json;
+
+/// The worker admin endpoint: serves every method in
+/// [`proto::ADMIN_METHODS`] from the shared [`ControlState`] plus the
+/// worker's stop flag.
+pub struct AdminHandler {
+    worker: usize,
+    state: Arc<ControlState>,
+    stop: Arc<AtomicBool>,
+}
+
+impl AdminHandler {
+    /// An admin endpoint for worker `worker` steering `state`;
+    /// `shutdown` sets `stop`, which the worker's liveness check honors.
+    pub fn new(worker: usize, state: Arc<ControlState>, stop: Arc<AtomicBool>) -> AdminHandler {
+        AdminHandler {
+            worker,
+            state,
+            stop,
+        }
+    }
+
+    fn set_gamma(&self, params: &Json) -> Result<Json, RpcError> {
+        let gamma = params
+            .get("gamma")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| RpcError::invalid_params("expected {\"gamma\": number}"))?;
+        if !(gamma > 0.0 && gamma < 0.5) {
+            return Err(RpcError::invalid_params(format!(
+                "gamma must be in (0, 0.5), got {gamma}"
+            )));
+        }
+        self.state.push_nudge(Nudge::SetGamma(gamma));
+        let mut o = Json::obj();
+        o.set("ok", true).set("gamma", gamma);
+        Ok(o)
+    }
+
+    fn set_sweep(&self, params: &Json) -> Result<Json, RpcError> {
+        let every = params
+            .get("every")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| RpcError::invalid_params("expected {\"every\": integer >= 0}"))?;
+        self.state.push_nudge(Nudge::SetSweep(every as usize));
+        let mut o = Json::obj();
+        o.set("ok", true).set("every", every as f64);
+        Ok(o)
+    }
+
+    fn fault_inject(&self, params: &Json) -> Result<Json, RpcError> {
+        let fault = params
+            .get("fault")
+            .and_then(Json::as_str)
+            .ok_or_else(|| RpcError::invalid_params("expected {\"fault\": string}"))?;
+        let mut o = Json::obj();
+        o.set("ok", true).set("fault", fault);
+        match fault {
+            "crash" => {
+                self.state.request_crash();
+                Ok(o)
+            }
+            "laggard" => {
+                let factor = params
+                    .get("factor")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| RpcError::invalid_params("laggard needs {\"factor\": number}"))?;
+                if !(factor >= 1.0 && factor.is_finite()) {
+                    return Err(RpcError::invalid_params(format!(
+                        "factor must be >= 1, got {factor}"
+                    )));
+                }
+                self.state.set_laggard(factor);
+                o.set("factor", factor);
+                Ok(o)
+            }
+            "heal" => {
+                self.state.set_laggard(1.0);
+                Ok(o)
+            }
+            // the rest of the sim vocabulary needs the scripted fabric
+            "partition" | "restart" => Err(RpcError::unsupported(format!(
+                "fault \"{fault}\" is sim-only (see `sparrow sim`); live workers support crash/laggard/heal"
+            ))),
+            other => Err(RpcError::invalid_params(format!(
+                "unknown fault \"{other}\" (crash, laggard, heal)"
+            ))),
+        }
+    }
+}
+
+impl RpcHandler for AdminHandler {
+    fn handle(&self, method: &str, params: &Json) -> Result<Json, RpcError> {
+        match method {
+            "ping" => {
+                let mut o = Json::obj();
+                o.set("pong", true)
+                    .set("proto", PROTO_VERSION as f64)
+                    .set("worker", self.worker as f64);
+                Ok(o)
+            }
+            "metrics.snapshot" => Ok(self.state.snapshot_json()),
+            "model.current" => Ok(self.state.model_json()),
+            "config.set_gamma" => self.set_gamma(params),
+            "config.gamma_reset" => {
+                self.state.push_nudge(Nudge::GammaReset);
+                let mut o = Json::obj();
+                o.set("ok", true);
+                Ok(o)
+            }
+            "config.set_sweep" => self.set_sweep(params),
+            "fault.inject" => self.fault_inject(params),
+            "shutdown" => {
+                self.stop.store(true, Ordering::Relaxed);
+                let mut o = Json::obj();
+                o.set("ok", true).set("stopping", true);
+                Ok(o)
+            }
+            other => Err(RpcError::method_not_found(other)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn handler() -> (AdminHandler, Arc<ControlState>, Arc<AtomicBool>) {
+        let state = Arc::new(ControlState::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        (
+            AdminHandler::new(3, Arc::clone(&state), Arc::clone(&stop)),
+            state,
+            stop,
+        )
+    }
+
+    fn params(text: &str) -> Json {
+        Json::parse(text).unwrap()
+    }
+
+    #[test]
+    fn every_listed_method_is_handled() {
+        // ADMIN_METHODS is the contract: each entry must dispatch to a
+        // real handler arm (not MethodNotFound), with minimal params
+        let (h, _, _) = handler();
+        for m in ADMIN_METHODS {
+            let p = match *m {
+                "config.set_gamma" => params(r#"{"gamma":0.1}"#),
+                "config.set_sweep" => params(r#"{"every":2}"#),
+                "fault.inject" => params(r#"{"fault":"heal"}"#),
+                _ => Json::Null,
+            };
+            match h.handle(m, &p) {
+                Ok(_) => {}
+                Err(e) => panic!("{m}: {e:?}"),
+            }
+        }
+        // and an unknown method is typed -32601
+        assert_eq!(h.handle("nope", &Json::Null).unwrap_err().code, -32601);
+    }
+
+    #[test]
+    fn nudge_methods_queue_nudges() {
+        let (h, state, _) = handler();
+        h.handle("config.set_gamma", &params(r#"{"gamma":0.2}"#)).unwrap();
+        h.handle("config.gamma_reset", &Json::Null).unwrap();
+        h.handle("config.set_sweep", &params(r#"{"every":5}"#)).unwrap();
+        assert_eq!(
+            state.drain_nudges(),
+            vec![Nudge::SetGamma(0.2), Nudge::GammaReset, Nudge::SetSweep(5)]
+        );
+    }
+
+    #[test]
+    fn gamma_bounds_enforced() {
+        let (h, state, _) = handler();
+        for bad in [r#"{"gamma":0}"#, r#"{"gamma":0.5}"#, r#"{"gamma":-1}"#, r#"{}"#] {
+            let err = h.handle("config.set_gamma", &params(bad)).unwrap_err();
+            assert_eq!(err.code, -32602, "{bad}");
+        }
+        assert!(state.drain_nudges().is_empty(), "bad params queued a nudge");
+    }
+
+    #[test]
+    fn fault_vocabulary() {
+        let (h, state, _) = handler();
+        h.handle("fault.inject", &params(r#"{"fault":"laggard","factor":4}"#)).unwrap();
+        assert_eq!(state.laggard(), 4.0);
+        h.handle("fault.inject", &params(r#"{"fault":"heal"}"#)).unwrap();
+        assert_eq!(state.laggard(), 1.0);
+        h.handle("fault.inject", &params(r#"{"fault":"crash"}"#)).unwrap();
+        assert!(state.crash_requested());
+        // sim-only faults are typed Unsupported, not InvalidParams
+        let err = h
+            .handle("fault.inject", &params(r#"{"fault":"partition"}"#))
+            .unwrap_err();
+        assert_eq!(err.code, -32001);
+        let err = h
+            .handle("fault.inject", &params(r#"{"fault":"gremlins"}"#))
+            .unwrap_err();
+        assert_eq!(err.code, -32602);
+        // laggard without factor / bad factor rejected
+        for bad in [r#"{"fault":"laggard"}"#, r#"{"fault":"laggard","factor":0.5}"#] {
+            assert_eq!(h.handle("fault.inject", &params(bad)).unwrap_err().code, -32602);
+        }
+    }
+
+    #[test]
+    fn shutdown_sets_stop_flag() {
+        let (h, _, stop) = handler();
+        assert!(!stop.load(Ordering::Relaxed));
+        let r = h.handle("shutdown", &Json::Null).unwrap();
+        assert_eq!(r.get("stopping").and_then(Json::as_bool), Some(true));
+        assert!(stop.load(Ordering::Relaxed));
+    }
+}

@@ -1,0 +1,274 @@
+//! Wire protocol for the control plane: a versioned JSON-RPC envelope with
+//! typed error codes (DESIGN.md §10).
+//!
+//! Every request and response is one JSON object inside one TCP frame
+//! (the same magic + length framing the broadcast transport uses, see
+//! [`crate::network::tcp`]). Requests carry a protocol version so a v2
+//! operator tool talking to a v1 worker fails loudly with
+//! [`RpcError::version_mismatch`] instead of mis-parsing.
+//!
+//! Request:  `{"v":1,"id":7,"method":"metrics.snapshot","params":{...}}`
+//! Response: `{"v":1,"id":7,"result":{...}}`
+//!       or  `{"v":1,"id":7,"error":{"code":-32601,"message":"..."}}`
+//!
+//! The golden-schema tests under `rust/tests/golden/admin_rpc/` pin this
+//! format byte-for-byte; OPERATIONS.md documents every method.
+
+use crate::util::json::Json;
+
+/// Control-plane protocol version carried in every envelope.
+pub const PROTO_VERSION: u64 = 1;
+
+/// Every method the admin endpoint serves, in OPERATIONS.md order. The
+/// doc-coverage check (`scripts/check_ops_doc.sh`) diffs the manual
+/// against this list, so adding a method without documenting it fails CI.
+pub const ADMIN_METHODS: &[&str] = &[
+    "ping",
+    "metrics.snapshot",
+    "model.current",
+    "config.set_gamma",
+    "config.gamma_reset",
+    "config.set_sweep",
+    "fault.inject",
+    "shutdown",
+];
+
+/// Every method the serve (prediction) endpoint serves.
+pub const SERVE_METHODS: &[&str] = &["ping", "predict", "serve.stats", "model.current"];
+
+/// Typed RPC failure: a JSON-RPC-style numeric code plus a human message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RpcError {
+    /// Numeric error code (see the constructors for the vocabulary).
+    pub code: i64,
+    /// Human-readable explanation.
+    pub message: String,
+}
+
+impl RpcError {
+    /// `-32700` — request frame was not valid JSON.
+    pub fn parse_error(detail: impl Into<String>) -> RpcError {
+        RpcError {
+            code: -32700,
+            message: format!("parse error: {}", detail.into()),
+        }
+    }
+
+    /// `-32600` — JSON was valid but not a well-formed request envelope.
+    pub fn invalid_request(detail: impl Into<String>) -> RpcError {
+        RpcError {
+            code: -32600,
+            message: format!("invalid request: {}", detail.into()),
+        }
+    }
+
+    /// `-32601` — the method is not one this endpoint serves.
+    pub fn method_not_found(method: &str) -> RpcError {
+        RpcError {
+            code: -32601,
+            message: format!("method not found: {method}"),
+        }
+    }
+
+    /// `-32602` — the method exists but `params` is missing/ill-typed.
+    pub fn invalid_params(detail: impl Into<String>) -> RpcError {
+        RpcError {
+            code: -32602,
+            message: format!("invalid params: {}", detail.into()),
+        }
+    }
+
+    /// `-32603` — the handler failed internally.
+    pub fn internal(detail: impl Into<String>) -> RpcError {
+        RpcError {
+            code: -32603,
+            message: format!("internal error: {}", detail.into()),
+        }
+    }
+
+    /// `-32001` — the request is understood but this endpoint cannot do it
+    /// (e.g. `fault.inject` with a sim-only fault on a live worker).
+    pub fn unsupported(detail: impl Into<String>) -> RpcError {
+        RpcError {
+            code: -32001,
+            message: format!("unsupported: {}", detail.into()),
+        }
+    }
+
+    /// `-32002` — the envelope's `v` is not [`PROTO_VERSION`].
+    pub fn version_mismatch(got: &Json) -> RpcError {
+        RpcError {
+            code: -32002,
+            message: format!(
+                "version mismatch: endpoint speaks v{PROTO_VERSION}, request carried {}",
+                got.to_string()
+            ),
+        }
+    }
+}
+
+/// A parsed request envelope.
+#[derive(Debug, Clone)]
+pub struct RpcRequest {
+    /// Caller-chosen correlation id, echoed in the response.
+    pub id: u64,
+    /// Method name, e.g. `"metrics.snapshot"`.
+    pub method: String,
+    /// Method parameters (`Json::Null` when omitted).
+    pub params: Json,
+}
+
+impl RpcRequest {
+    /// Validate a decoded JSON value as a v-[`PROTO_VERSION`] envelope.
+    pub fn from_json(v: &Json) -> Result<RpcRequest, RpcError> {
+        if !matches!(v, Json::Obj(_)) {
+            return Err(RpcError::invalid_request("not a JSON object"));
+        }
+        let ver = v.get("v").ok_or_else(|| {
+            RpcError::invalid_request("missing protocol version field \"v\"")
+        })?;
+        if ver.as_u64() != Some(PROTO_VERSION) {
+            return Err(RpcError::version_mismatch(ver));
+        }
+        let id = v
+            .get("id")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| RpcError::invalid_request("missing or non-integer \"id\""))?;
+        let method = v
+            .get("method")
+            .and_then(Json::as_str)
+            .ok_or_else(|| RpcError::invalid_request("missing or non-string \"method\""))?
+            .to_string();
+        let params = v.get("params").cloned().unwrap_or(Json::Null);
+        Ok(RpcRequest { id, method, params })
+    }
+
+    /// Build a request envelope (client side).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("v", PROTO_VERSION as f64)
+            .set("id", self.id as f64)
+            .set("method", self.method.as_str());
+        if !self.params.is_null() {
+            o.set("params", self.params.clone());
+        }
+        o
+    }
+}
+
+/// A success response envelope: `{"v":1,"id":id,"result":result}`.
+pub fn response_ok(id: u64, result: Json) -> Json {
+    let mut o = Json::obj();
+    o.set("v", PROTO_VERSION as f64)
+        .set("id", id as f64)
+        .set("result", result);
+    o
+}
+
+/// An error response envelope:
+/// `{"v":1,"id":id,"error":{"code":…,"message":…}}`.
+pub fn response_err(id: u64, err: &RpcError) -> Json {
+    let mut e = Json::obj();
+    e.set("code", err.code as f64)
+        .set("message", err.message.as_str());
+    let mut o = Json::obj();
+    o.set("v", PROTO_VERSION as f64)
+        .set("id", id as f64)
+        .set("error", e);
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let mut params = Json::obj();
+        params.set("gamma", 0.1);
+        let req = RpcRequest {
+            id: 9,
+            method: "config.set_gamma".into(),
+            params,
+        };
+        let wire = req.to_json().to_string();
+        let back = RpcRequest::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.id, 9);
+        assert_eq!(back.method, "config.set_gamma");
+        assert_eq!(back.params.get("gamma").and_then(Json::as_f64), Some(0.1));
+    }
+
+    #[test]
+    fn missing_version_rejected() {
+        let v = Json::parse(r#"{"id":1,"method":"ping"}"#).unwrap();
+        let err = RpcRequest::from_json(&v).unwrap_err();
+        assert_eq!(err.code, -32600);
+    }
+
+    #[test]
+    fn wrong_version_is_version_mismatch() {
+        let v = Json::parse(r#"{"v":2,"id":1,"method":"ping"}"#).unwrap();
+        let err = RpcRequest::from_json(&v).unwrap_err();
+        assert_eq!(err.code, -32002);
+        assert!(err.message.contains("v1"), "{}", err.message);
+    }
+
+    #[test]
+    fn missing_id_or_method_rejected() {
+        for bad in [
+            r#"{"v":1,"method":"ping"}"#,
+            r#"{"v":1,"id":1}"#,
+            r#"{"v":1,"id":"x","method":"ping"}"#,
+            r#"{"v":1,"id":1,"method":7}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            let err = RpcRequest::from_json(&v).unwrap_err();
+            assert_eq!(err.code, -32600, "{bad}");
+        }
+    }
+
+    #[test]
+    fn params_default_to_null() {
+        let v = Json::parse(r#"{"v":1,"id":1,"method":"ping"}"#).unwrap();
+        let req = RpcRequest::from_json(&v).unwrap();
+        assert!(req.params.is_null());
+    }
+
+    #[test]
+    fn response_envelopes_echo_id() {
+        let ok = response_ok(5, Json::Bool(true)).to_string();
+        assert_eq!(ok, r#"{"id":5,"result":true,"v":1}"#);
+        let err = response_err(6, &RpcError::method_not_found("nope")).to_string();
+        assert!(err.contains(r#""id":6"#), "{err}");
+        assert!(err.contains(r#""code":-32601"#), "{err}");
+    }
+
+    #[test]
+    fn error_codes_distinct() {
+        let codes = [
+            RpcError::parse_error("x").code,
+            RpcError::invalid_request("x").code,
+            RpcError::method_not_found("x").code,
+            RpcError::invalid_params("x").code,
+            RpcError::internal("x").code,
+            RpcError::unsupported("x").code,
+            RpcError::version_mismatch(&Json::Num(2.0)).code,
+        ];
+        let mut sorted = codes.to_vec();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), codes.len());
+    }
+
+    #[test]
+    fn method_lists_sane() {
+        assert!(ADMIN_METHODS.contains(&"metrics.snapshot"));
+        assert!(SERVE_METHODS.contains(&"predict"));
+        for list in [ADMIN_METHODS, SERVE_METHODS] {
+            let mut names = list.to_vec();
+            names.sort();
+            names.dedup();
+            assert_eq!(names.len(), list.len(), "duplicate method name");
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Generic JSON-RPC server over the TMSN TCP framing (DESIGN.md §10).
+//!
+//! One [`RpcServer`] serves one [`RpcHandler`] from a lightweight
+//! detached acceptor thread (the same pattern as
+//! [`crate::network::TcpEndpoint`]): each connection gets its own thread
+//! that loops frame → [`dispatch`] → frame, so a connection can issue
+//! many requests. The admin endpoint and the serve (prediction) endpoint
+//! are both instances of this server with different handlers.
+//!
+//! [`dispatch`] is the socket-free core — bytes in, response bytes out —
+//! which is what the golden-schema tests drive directly.
+
+use std::io::{self, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+
+use crate::admin::proto::{response_err, response_ok, RpcError, RpcRequest};
+use crate::network::tcp::{frame_bytes, read_frame};
+use crate::util::json::Json;
+
+/// A method dispatcher: the admin endpoint and the serve endpoint each
+/// implement this once.
+pub trait RpcHandler: Send + Sync + 'static {
+    /// Execute `method` with `params`, returning the `result` object or a
+    /// typed error. Envelope concerns (version, id, framing) are handled
+    /// by the server.
+    fn handle(&self, method: &str, params: &Json) -> Result<Json, RpcError>;
+}
+
+/// Turn one raw request frame into one response frame body (the JSON
+/// bytes, unframed). Never fails: every malformed input becomes a typed
+/// error envelope with id 0.
+pub fn dispatch(handler: &dyn RpcHandler, raw: &[u8]) -> Vec<u8> {
+    let reply = match std::str::from_utf8(raw)
+        .map_err(|_| RpcError::parse_error("request is not UTF-8"))
+        .and_then(|text| Json::parse(text).map_err(RpcError::parse_error))
+    {
+        Ok(v) => match RpcRequest::from_json(&v) {
+            Ok(req) => match handler.handle(&req.method, &req.params) {
+                Ok(result) => response_ok(req.id, result),
+                Err(e) => response_err(req.id, &e),
+            },
+            Err(e) => {
+                // best-effort id echo for malformed envelopes
+                let id = v.get("id").and_then(Json::as_u64).unwrap_or(0);
+                response_err(id, &e)
+            }
+        },
+        Err(e) => response_err(0, &e),
+    };
+    reply.to_string().into_bytes()
+}
+
+/// A listening RPC endpoint; accepting and serving happen on detached
+/// threads (dropping the server does not tear down in-flight
+/// connections — workers live until process exit, like the broadcast
+/// transport).
+pub struct RpcServer {
+    local_addr: SocketAddr,
+}
+
+impl RpcServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and serve `handler`.
+    pub fn bind(addr: &str, handler: Arc<dyn RpcHandler>) -> io::Result<RpcServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        std::thread::Builder::new()
+            .name(format!("rpc-accept-{local_addr}"))
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    let Ok(stream) = stream else { break };
+                    let handler = Arc::clone(&handler);
+                    std::thread::spawn(move || serve_conn(stream, handler));
+                }
+            })?;
+        Ok(RpcServer { local_addr })
+    }
+
+    /// The bound address (useful after binding port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, handler: Arc<dyn RpcHandler>) {
+    stream.set_nodelay(true).ok();
+    loop {
+        match read_frame(&mut stream) {
+            Ok(Some(raw)) => {
+                let reply = dispatch(handler.as_ref(), &raw);
+                if stream.write_all(&frame_bytes(&reply)).is_err() {
+                    return;
+                }
+            }
+            // clean close or corrupt framing: drop the connection, never
+            // the worker (same resilience stance as the broadcast path)
+            Ok(None) | Err(_) => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::admin::client::RpcClient;
+
+    /// Echoes params for "echo", errors for "boom", rejects the rest.
+    struct EchoHandler;
+
+    impl RpcHandler for EchoHandler {
+        fn handle(&self, method: &str, params: &Json) -> Result<Json, RpcError> {
+            match method {
+                "echo" => Ok(params.clone()),
+                "boom" => Err(RpcError::internal("kaboom")),
+                other => Err(RpcError::method_not_found(other)),
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_success_envelope() {
+        let out = dispatch(&EchoHandler, br#"{"v":1,"id":3,"method":"echo","params":[1,2]}"#);
+        assert_eq!(
+            String::from_utf8(out).unwrap(),
+            r#"{"id":3,"result":[1,2],"v":1}"#
+        );
+    }
+
+    #[test]
+    fn dispatch_typed_errors() {
+        // handler error
+        let out = dispatch(&EchoHandler, br#"{"v":1,"id":4,"method":"boom"}"#);
+        let v = Json::parse(std::str::from_utf8(&out).unwrap()).unwrap();
+        assert_eq!(
+            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_f64),
+            Some(-32603.0)
+        );
+        // unknown method
+        let out = dispatch(&EchoHandler, br#"{"v":1,"id":4,"method":"nope"}"#);
+        assert!(String::from_utf8(out).unwrap().contains("-32601"));
+        // non-JSON
+        let out = dispatch(&EchoHandler, b"not json at all");
+        assert!(String::from_utf8(out).unwrap().contains("-32700"));
+        // non-UTF8
+        let out = dispatch(&EchoHandler, &[0xFF, 0xFE]);
+        assert!(String::from_utf8(out).unwrap().contains("-32700"));
+        // bad envelope still echoes the id it could salvage
+        let out = dispatch(&EchoHandler, br#"{"v":1,"id":9}"#);
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.contains(r#""id":9"#) && s.contains("-32600"), "{s}");
+        // version mismatch
+        let out = dispatch(&EchoHandler, br#"{"v":9,"id":1,"method":"echo"}"#);
+        assert!(String::from_utf8(out).unwrap().contains("-32002"));
+    }
+
+    #[test]
+    fn server_round_trips_over_tcp() {
+        let server = RpcServer::bind("127.0.0.1:0", Arc::new(EchoHandler)).unwrap();
+        let mut client = RpcClient::connect(&server.local_addr().to_string()).unwrap();
+        // several calls down one connection
+        for i in 0..3 {
+            let mut params = Json::obj();
+            params.set("n", i as f64);
+            let result = client.call_ok("echo", params).unwrap();
+            assert_eq!(result.get("n").and_then(Json::as_u64), Some(i));
+        }
+        // typed error surfaces client-side
+        let err = client.call_ok("nope", Json::Null).unwrap_err();
+        assert!(err.contains("-32601"), "{err}");
+        // the connection survives an error reply
+        assert!(client.call_ok("echo", Json::Bool(true)).is_ok());
+    }
+
+    #[test]
+    fn two_clients_served_concurrently() {
+        let server = RpcServer::bind("127.0.0.1:0", Arc::new(EchoHandler)).unwrap();
+        let addr = server.local_addr().to_string();
+        let handles: Vec<_> = (0..2)
+            .map(|t| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut c = RpcClient::connect(&addr).unwrap();
+                    for i in 0..10u64 {
+                        let got = c.call_ok("echo", Json::Num((t * 100 + i) as f64)).unwrap();
+                        assert_eq!(got.as_u64(), Some(t * 100 + i));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

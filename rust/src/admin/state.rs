@@ -1,0 +1,296 @@
+//! Shared control-plane state: the gauges a worker publishes and the
+//! nudge queue an operator writes (DESIGN.md §10).
+//!
+//! One [`ControlState`] sits between a worker thread and its admin RPC
+//! thread. The worker is the only writer of the gauges (model version,
+//! scan progress, sampler stalls) and the only consumer of the nudge
+//! queue; the admin thread reads gauges and counters for
+//! `metrics.snapshot` and pushes [`Nudge`]s for the config methods. All
+//! gauges are atomics — a snapshot never blocks the training loop.
+//!
+//! Event *counters* live in [`LiveCounters`] and are fed by the worker's
+//! [`crate::metrics::EventLog`] (bump-after-send), so a snapshot's counts
+//! are always ≤ what a later drain of the event log shows — the
+//! consistency contract the control-plane storm test pins down.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::metrics::{EventKind, LiveCounters};
+use crate::sim::clock::{Clock, RealClock};
+use crate::util::json::Json;
+
+/// A deferred config change, applied by the worker at its loop head.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Nudge {
+    /// Override the scanner's per-invocation starting target γ₀
+    /// (`config.set_gamma`).
+    SetGamma(f64),
+    /// Restore γ₀ to the `TrainConfig` value (`config.gamma_reset`).
+    GammaReset,
+    /// Override the stopping-rule sweep cadence; 0 = auto
+    /// (`config.set_sweep`).
+    SetSweep(usize),
+}
+
+/// Gauges + nudge queue + fault switches shared between one worker and
+/// its admin endpoint.
+pub struct ControlState {
+    epoch: Instant,
+    clock: Arc<dyn Clock>,
+    /// Live per-[`EventKind`] counters; attach to the worker's log with
+    /// [`crate::metrics::EventLog::with_counters`].
+    pub counters: Arc<LiveCounters>,
+    model_version: AtomicU64,
+    model_len: AtomicU64,
+    loss_bound_bits: AtomicU64,
+    scanned: AtomicU64,
+    stall_nanos: AtomicU64,
+    nudges: Mutex<Vec<Nudge>>,
+    laggard_bits: AtomicU64,
+    crash_requested: AtomicBool,
+}
+
+impl ControlState {
+    /// Fresh state on the wall clock (empty model, bound 1.0).
+    pub fn new() -> ControlState {
+        ControlState::with_clock(Arc::new(RealClock))
+    }
+
+    /// Fresh state whose uptime is measured on `clock` — a
+    /// [`crate::sim::SimClock`] makes snapshots fully deterministic (the
+    /// golden-schema fixtures rely on this).
+    pub fn with_clock(clock: Arc<dyn Clock>) -> ControlState {
+        ControlState {
+            epoch: clock.now(),
+            clock,
+            counters: Arc::new(LiveCounters::new()),
+            model_version: AtomicU64::new(0),
+            model_len: AtomicU64::new(0),
+            loss_bound_bits: AtomicU64::new(1.0f64.to_bits()),
+            scanned: AtomicU64::new(0),
+            stall_nanos: AtomicU64::new(0),
+            nudges: Mutex::new(Vec::new()),
+            laggard_bits: AtomicU64::new(1.0f64.to_bits()),
+            crash_requested: AtomicBool::new(false),
+        }
+    }
+
+    // ---- worker-side writes ------------------------------------------
+
+    /// Publish the worker's current model gauges (on every version bump).
+    pub fn note_model(&self, version: u64, len: usize, loss_bound: f64) {
+        self.model_version.store(version, Ordering::Relaxed);
+        self.model_len.store(len as u64, Ordering::Relaxed);
+        self.loss_bound_bits
+            .store(loss_bound.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Publish the scanner's lifetime examples-scanned total.
+    pub fn note_scanned(&self, total: u64) {
+        self.scanned.store(total, Ordering::Relaxed);
+    }
+
+    /// Add time the worker spent blocked waiting for a sample (the
+    /// blocking resample, or the background pipeline's initial fill /
+    /// exhausted-sample park).
+    pub fn add_stall(&self, d: Duration) {
+        self.stall_nanos
+            .fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Drain every queued nudge, oldest first (worker loop head).
+    pub fn drain_nudges(&self) -> Vec<Nudge> {
+        std::mem::take(&mut *self.nudges.lock().unwrap())
+    }
+
+    // ---- admin-side writes -------------------------------------------
+
+    /// Queue a config nudge for the worker's next loop iteration.
+    pub fn push_nudge(&self, n: Nudge) {
+        self.nudges.lock().unwrap().push(n);
+    }
+
+    /// Ask the worker to crash at its next liveness check
+    /// (`fault.inject {"fault":"crash"}` — the live analogue of the
+    /// simulator's `ScenarioEvent::Crash`).
+    pub fn request_crash(&self) {
+        self.crash_requested.store(true, Ordering::Relaxed);
+    }
+
+    /// Has a crash been requested?
+    pub fn crash_requested(&self) -> bool {
+        self.crash_requested.load(Ordering::Relaxed)
+    }
+
+    /// Set the live compute-slowdown factor (≥ 1; 1.0 heals). Applied at
+    /// pass granularity: after each scan pass the worker idles
+    /// `(factor − 1) ×` the pass's elapsed time.
+    pub fn set_laggard(&self, factor: f64) {
+        self.laggard_bits.store(factor.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current compute-slowdown factor.
+    pub fn laggard(&self) -> f64 {
+        f64::from_bits(self.laggard_bits.load(Ordering::Relaxed))
+    }
+
+    // ---- reads -------------------------------------------------------
+
+    /// `(version, len, loss_bound)` of the worker's current model.
+    pub fn model(&self) -> (u64, u64, f64) {
+        (
+            self.model_version.load(Ordering::Relaxed),
+            self.model_len.load(Ordering::Relaxed),
+            f64::from_bits(self.loss_bound_bits.load(Ordering::Relaxed)),
+        )
+    }
+
+    /// The `model.current` RPC result object.
+    pub fn model_json(&self) -> Json {
+        let (version, len, bound) = self.model();
+        let mut o = Json::obj();
+        o.set("version", version as f64)
+            .set("len", len as f64)
+            .set("loss_bound", bound);
+        o
+    }
+
+    /// The `metrics.snapshot` RPC result object: uptime, model gauges,
+    /// scan throughput, sampler stalls/aborts, and one counter per event
+    /// kind. Keys are stable (BTreeMap ordering) — the wire format is
+    /// pinned by the golden-schema tests.
+    pub fn snapshot_json(&self) -> Json {
+        let uptime = self.clock.now().saturating_duration_since(self.epoch);
+        let scanned = self.scanned.load(Ordering::Relaxed);
+        let scan_per_s = if uptime.as_secs_f64() > 0.0 {
+            scanned as f64 / uptime.as_secs_f64()
+        } else {
+            0.0
+        };
+        let mut events = Json::obj();
+        for (name, count) in self.counters.snapshot() {
+            events.set(name, count as f64);
+        }
+        let mut sampler = Json::obj();
+        sampler
+            .set(
+                "stall_ms",
+                self.stall_nanos.load(Ordering::Relaxed) as f64 / 1e6,
+            )
+            .set(
+                "build_aborts",
+                self.counters.get(EventKind::BuildAbort) as f64,
+            )
+            .set("swaps", self.counters.get(EventKind::SampleSwap) as f64);
+        let mut o = Json::obj();
+        o.set("uptime_s", uptime.as_secs_f64())
+            .set("model", self.model_json())
+            .set("scanned", scanned as f64)
+            .set("scan_per_s", scan_per_s)
+            .set("sampler", sampler)
+            .set("laggard", self.laggard())
+            .set("events", events);
+        o
+    }
+}
+
+impl Default for ControlState {
+    fn default() -> Self {
+        ControlState::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimClock;
+
+    #[test]
+    fn gauges_roundtrip() {
+        let s = ControlState::new();
+        assert_eq!(s.model(), (0, 0, 1.0));
+        s.note_model(3, 7, 0.25);
+        assert_eq!(s.model(), (3, 7, 0.25));
+        s.note_scanned(1000);
+        let snap = s.snapshot_json();
+        assert_eq!(snap.get("scanned").and_then(Json::as_u64), Some(1000));
+        assert_eq!(
+            snap.get("model").and_then(|m| m.get("version")).and_then(Json::as_u64),
+            Some(3)
+        );
+    }
+
+    #[test]
+    fn nudges_fifo_and_drain_empties() {
+        let s = ControlState::new();
+        s.push_nudge(Nudge::SetGamma(0.1));
+        s.push_nudge(Nudge::GammaReset);
+        s.push_nudge(Nudge::SetSweep(4));
+        assert_eq!(
+            s.drain_nudges(),
+            vec![Nudge::SetGamma(0.1), Nudge::GammaReset, Nudge::SetSweep(4)]
+        );
+        assert!(s.drain_nudges().is_empty());
+    }
+
+    #[test]
+    fn fault_switches() {
+        let s = ControlState::new();
+        assert!(!s.crash_requested());
+        assert_eq!(s.laggard(), 1.0);
+        s.set_laggard(3.5);
+        assert_eq!(s.laggard(), 3.5);
+        s.set_laggard(1.0); // heal
+        assert_eq!(s.laggard(), 1.0);
+        s.request_crash();
+        assert!(s.crash_requested());
+    }
+
+    #[test]
+    fn snapshot_counts_every_event_kind() {
+        let s = ControlState::new();
+        let snap = s.snapshot_json();
+        let events = snap.get("events").unwrap();
+        for k in EventKind::ALL {
+            assert_eq!(
+                events.get(k.as_str()).and_then(Json::as_u64),
+                Some(0),
+                "missing {}",
+                k.as_str()
+            );
+        }
+    }
+
+    #[test]
+    fn virtual_clock_snapshot_is_deterministic() {
+        let clock = Arc::new(SimClock::new());
+        let s = ControlState::with_clock(clock.clone());
+        s.note_scanned(500);
+        clock.advance(Duration::from_secs(2));
+        let snap = s.snapshot_json();
+        assert_eq!(snap.get("uptime_s").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(snap.get("scan_per_s").and_then(Json::as_f64), Some(250.0));
+        // zero uptime divides safely
+        let s2 = ControlState::with_clock(Arc::new(SimClock::new()));
+        assert_eq!(
+            s2.snapshot_json().get("scan_per_s").and_then(Json::as_f64),
+            Some(0.0)
+        );
+    }
+
+    #[test]
+    fn stall_accumulates() {
+        let s = ControlState::new();
+        s.add_stall(Duration::from_millis(3));
+        s.add_stall(Duration::from_millis(4));
+        let snap = s.snapshot_json();
+        let ms = snap
+            .get("sampler")
+            .and_then(|x| x.get("stall_ms"))
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!((ms - 7.0).abs() < 1e-9, "{ms}");
+    }
+}

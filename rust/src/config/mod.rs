@@ -295,6 +295,52 @@ impl TrainConfig {
     }
 }
 
+/// Control-plane endpoints for `sparrow serve` (DESIGN.md §10): where the
+/// prediction RPC and the admin RPC listen. Port 0 binds an ephemeral
+/// port (printed at startup), which is what the tests and the demo
+/// script use.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// prediction endpoint (`predict`, `serve.stats`, `model.current`)
+    pub serve_addr: String,
+    /// admin endpoint (`metrics.snapshot`, config nudges, `fault.inject`,
+    /// `shutdown`)
+    pub admin_addr: String,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            serve_addr: "127.0.0.1:7790".into(),
+            admin_addr: "127.0.0.1:7791".into(),
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Apply `--serve-addr` / `--admin-addr` CLI overrides.
+    pub fn apply_args(mut self, args: &Args) -> Result<ServeConfig, String> {
+        self.serve_addr = args.get_or("serve-addr", &self.serve_addr);
+        self.admin_addr = args.get_or("admin-addr", &self.admin_addr);
+        self.validate()?;
+        Ok(self)
+    }
+
+    /// Both addresses must look like `host:port` and must differ (two
+    /// `:0` ephemeral binds are fine — the OS separates them).
+    pub fn validate(&self) -> Result<(), String> {
+        for (key, addr) in [("serve-addr", &self.serve_addr), ("admin-addr", &self.admin_addr)] {
+            if !addr.contains(':') {
+                return Err(format!("{key} must be host:port, got {addr:?}"));
+            }
+        }
+        if self.serve_addr == self.admin_addr && !self.serve_addr.ends_with(":0") {
+            return Err("serve-addr and admin-addr must differ".into());
+        }
+        Ok(())
+    }
+}
+
 /// Workload (dataset) configuration shared by `gen-data`, `train` and the
 /// benches.
 #[derive(Debug, Clone)]
@@ -455,6 +501,27 @@ mod tests {
             .apply_args(&args("train --sampler-mode background"))
             .unwrap();
         assert_eq!(cfg.sampler_mode, SamplerMode::Background);
+    }
+
+    #[test]
+    fn serve_config_defaults_and_overrides() {
+        let d = ServeConfig::default();
+        d.validate().unwrap();
+        assert_ne!(d.serve_addr, d.admin_addr);
+        let cfg = ServeConfig::default()
+            .apply_args(&args(
+                "serve --serve-addr 127.0.0.1:0 --admin-addr 127.0.0.1:0",
+            ))
+            .unwrap();
+        assert_eq!(cfg.serve_addr, "127.0.0.1:0");
+        // same concrete address for both endpoints is a config error...
+        assert!(ServeConfig::default()
+            .apply_args(&args("serve --serve-addr 1.2.3.4:9 --admin-addr 1.2.3.4:9"))
+            .is_err());
+        // ...as is a port-less address
+        assert!(ServeConfig::default()
+            .apply_args(&args("serve --admin-addr localhost"))
+            .is_err());
     }
 
     #[test]

@@ -109,6 +109,7 @@ pub fn train_cluster(
                 .find(|(w, _)| *w == id)
                 .map(|(_, t)| *t),
             seed: cfg.seed,
+            control: None,
         };
         handles.push(
             std::thread::Builder::new()

@@ -12,9 +12,12 @@
 //!   workers ([`scanner`], [`sampler`], [`worker`]), cluster
 //!   [`coordinator`], broadcast [`network`] fabric, disk/memory [`data`]
 //!   stores, the [`baselines`] the paper compares against,
-//!   [`eval`]/[`metrics`], and the deterministic fault-injection
+//!   [`eval`]/[`metrics`], the deterministic fault-injection
 //!   simulator ([`sim`]: virtual-time clock, seeded fault fabric,
-//!   scripted crash/laggard/partition scenarios).
+//!   scripted crash/laggard/partition scenarios), and the production
+//!   control plane ([`admin`]: versioned JSON-RPC endpoint with live
+//!   metrics, config nudges, and fault injection; [`serve`]: hot-swap
+//!   model serving behind `sparrow serve` — see OPERATIONS.md).
 //! - **L2/L1 (python/compile, build-time)** — the JAX scan-batch graph and
 //!   the Pallas edge kernel, AOT-lowered to `artifacts/*.hlo.txt` and
 //!   executed from [`runtime`] via PJRT. Python never runs at train time.
@@ -24,6 +27,7 @@
 //! a compile-only stub that errors at runtime (the native backend is the
 //! default and needs neither). See `rust/Cargo.toml` for the swap points.
 
+pub mod admin;
 pub mod baselines;
 pub mod boosting;
 pub mod config;
@@ -38,6 +42,7 @@ pub mod runtime;
 pub mod sampler;
 pub mod sampling;
 pub mod scanner;
+pub mod serve;
 pub mod sgd;
 pub mod sim;
 pub mod stopping;

@@ -5,6 +5,8 @@
 //!   train      run a Sparrow cluster (TMSN) on a store
 //!   baseline   run a Table-1 baseline (fullscan | goss | bulksync)
 //!   eval       evaluate a saved model on a test store
+//!   serve      train + answer predictions from the latest adopted model
+//!   rpc        call a worker's admin (or serve) JSON-RPC endpoint
 //!
 //! `sparrow <cmd> --help` lists the knobs for each subcommand.
 
@@ -47,7 +49,18 @@ COMMANDS
   eval       --model model.txt --test test.sprw
   worker     one TMSN worker process over real TCP:
              --data train.sprw --worker-id I --workers N --listen ADDR
-             [--peers addr1,addr2,...] --out model.txt [train knobs as above]
+             [--peers addr1,addr2,...] [--admin ADDR] --out model.txt
+             [train knobs as above]
+  serve      a worker that also answers predictions from the latest
+             adopted model (hot-swapped on every adoption, see
+             OPERATIONS.md): --data train.sprw [--serve-addr ADDR]
+             [--admin-addr ADDR] [--resume model.txt] [--out model.txt]
+             [--exit-after-train] [worker knobs as above]
+  rpc        one admin/serve RPC call, response envelope on stdout:
+             --addr HOST:PORT --method NAME [--params JSON]
+             (methods: ping, metrics.snapshot, model.current,
+             config.set_gamma, config.gamma_reset, config.set_sweep,
+             fault.inject, shutdown; serve: predict, serve.stats)
   launch     spawn N local `worker` processes wired over TCP:
              --data train.sprw --test test.sprw --workers N --out-dir DIR
              [train knobs as above]
@@ -65,6 +78,8 @@ fn main() {
         Some("baseline") => cmd_baseline(&args),
         Some("eval") => cmd_eval(&args),
         Some("worker") => cmd_worker(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("rpc") => cmd_rpc(&args),
         Some("launch") => cmd_launch(&args),
         Some("sim") => cmd_sim(&args),
         Some("help") | None => {
@@ -137,20 +152,10 @@ fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    let data = args
-        .get("data")
-        .ok_or_else(|| anyhow::anyhow!("--data is required"))?
-        .to_string();
-    let test_path = args
-        .get("test")
-        .ok_or_else(|| anyhow::anyhow!("--test is required"))?
-        .to_string();
-    let mut cfg = TrainConfig::default()
-        .apply_args(args)
-        .map_err(anyhow::Error::msg)?;
-    // checkpoint resume: --resume model.txt [--resume-bound B]
-    // (bound defaults to the value recorded in model.txt.meta)
+/// Checkpoint resume: `--resume model.txt [--resume-bound B]` (the bound
+/// defaults to the value recorded in `model.txt.meta`). Shared by `train`
+/// and `serve`.
+fn apply_resume(args: &Args, cfg: &mut TrainConfig) -> anyhow::Result<()> {
     if let Some(resume_path) = args.get("resume") {
         let model = StrongRule::from_text(&std::fs::read_to_string(resume_path)?)
             .map_err(anyhow::Error::msg)?;
@@ -170,6 +175,22 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         println!("resuming from {resume_path} ({} rules, bound {bound:.4})", model.len());
         cfg.resume = Some((model, bound));
     }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let data = args
+        .get("data")
+        .ok_or_else(|| anyhow::anyhow!("--data is required"))?
+        .to_string();
+    let test_path = args
+        .get("test")
+        .ok_or_else(|| anyhow::anyhow!("--test is required"))?
+        .to_string();
+    let mut cfg = TrainConfig::default()
+        .apply_args(args)
+        .map_err(anyhow::Error::msg)?;
+    apply_resume(args, &mut cfg)?;
     let out = out_dir(args)?;
     args.finish().map_err(anyhow::Error::msg)?;
 
@@ -358,13 +379,17 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
 /// `--nthr` so they derive the identical candidate grid (pilot quantiles
 /// are deterministic) and consistent feature stripes.
 fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    use sparrow::admin::{AdminHandler, ControlState, RpcServer};
     use sparrow::boosting::grid::partition_features;
     use sparrow::boosting::CandidateGrid;
     use sparrow::data::IoThrottle;
     use sparrow::metrics::EventLog;
     use sparrow::network::TcpEndpoint;
+    use sparrow::serve::ModelSlot;
     use sparrow::tmsn::BoostPayload;
-    use sparrow::worker::{run_worker, WorkerParams};
+    use sparrow::worker::{run_worker, ControlPlane, WorkerParams};
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
 
     let data = args
         .get("data")
@@ -373,6 +398,7 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
     let worker_id = args.get_usize("worker-id", 0);
     let listen = args.get_or("listen", "127.0.0.1:0");
     let peers = args.get_or("peers", "");
+    let admin_addr = args.get("admin").map(str::to_string);
     let out = args.get("out").map(str::to_string);
     let cfg = TrainConfig::default()
         .apply_args(args)
@@ -398,7 +424,26 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
         println!("worker {worker_id} connected to {peer}");
     }
 
-    let (log, _event_rx) = EventLog::new();
+    let (mut log, _event_rx) = EventLog::new();
+    let stop = Arc::new(AtomicBool::new(false));
+    // --admin ADDR: publish gauges into a ControlState and answer the
+    // operator's JSON-RPC on a side thread (OPERATIONS.md)
+    let control = match admin_addr {
+        Some(addr) => {
+            let state = Arc::new(ControlState::new());
+            log = log.with_counters(Arc::clone(&state.counters));
+            let admin = RpcServer::bind(
+                &addr,
+                Arc::new(AdminHandler::new(worker_id, Arc::clone(&state), Arc::clone(&stop))),
+            )?;
+            println!("worker {worker_id} admin rpc on {}", admin.local_addr());
+            Some(ControlPlane {
+                state,
+                slot: Arc::new(ModelSlot::new()),
+            })
+        }
+        None => None,
+    };
     let cfg2 = cfg.clone();
     let result = run_worker(WorkerParams {
         id: worker_id,
@@ -408,11 +453,12 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
         store,
         endpoint: Box::new(endpoint),
         log,
-        stop: std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false)),
+        stop,
         backend: sparrow::runtime::make_backend(&cfg2, features)?,
         laggard: 1.0,
         crash_after: None,
         seed: cfg.seed ^ worker_id as u64,
+        control,
     });
 
     println!(
@@ -436,6 +482,165 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
                 result.scanned
             ),
         )?;
+    }
+    Ok(())
+}
+
+/// `sparrow serve`: one worker process that also answers prediction
+/// requests from the latest adopted strong model (DESIGN.md §10).
+///
+/// Both RPC endpoints come up before training starts: the serve endpoint
+/// (`predict`, `serve.stats`, …) reads a hot-swap `ModelSlot` that the
+/// training loop publishes every adoption into — an adoption storm swaps
+/// the served model between requests without dropping any — and the
+/// admin endpoint answers `metrics.snapshot`, config nudges, fault
+/// injection and `shutdown`. After training finishes the process keeps
+/// serving the final model until an admin `shutdown` arrives (suppress
+/// with `--exit-after-train`).
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use sparrow::admin::{AdminHandler, ControlState, RpcServer};
+    use sparrow::boosting::grid::partition_features;
+    use sparrow::boosting::CandidateGrid;
+    use sparrow::config::ServeConfig;
+    use sparrow::data::IoThrottle;
+    use sparrow::metrics::EventLog;
+    use sparrow::network::TcpEndpoint;
+    use sparrow::serve::{ModelSlot, ServeHandler};
+    use sparrow::tmsn::BoostPayload;
+    use sparrow::worker::{run_worker, ControlPlane, WorkerParams};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let data = args
+        .get("data")
+        .ok_or_else(|| anyhow::anyhow!("--data is required"))?
+        .to_string();
+    let worker_id = args.get_usize("worker-id", 0);
+    let listen = args.get_or("listen", "127.0.0.1:0");
+    let peers = args.get_or("peers", "");
+    let out = args.get("out").map(str::to_string);
+    let exit_after_train = args.has_flag("exit-after-train");
+    let serve_cfg = ServeConfig::default()
+        .apply_args(args)
+        .map_err(anyhow::Error::msg)?;
+    let mut cfg = TrainConfig::default()
+        .apply_args(args)
+        .map_err(anyhow::Error::msg)?;
+    apply_resume(args, &mut cfg)?;
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let store = DiskStore::open(Path::new(&data))?;
+    let features = store.num_features();
+    anyhow::ensure!(worker_id < cfg.num_workers, "--worker-id out of range");
+    let pilot = store
+        .stream(IoThrottle::unlimited())?
+        .next_block(4096.min(store.len()))?;
+    let grid = CandidateGrid::from_quantiles(&pilot, cfg.nthr);
+    let stripe = partition_features(features, cfg.num_workers)[worker_id];
+
+    let endpoint: TcpEndpoint<BoostPayload> = TcpEndpoint::bind(&listen)?;
+    if cfg.num_workers > 1 {
+        println!("worker {worker_id} listening on {}", endpoint.local_addr());
+    }
+    for peer in peers.split(',').filter(|p| !p.is_empty()) {
+        endpoint.connect(peer)?;
+        println!("worker {worker_id} connected to {peer}");
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let state = Arc::new(ControlState::new());
+    let slot = Arc::new(ModelSlot::new());
+    if let Some((model, bound)) = &cfg.resume {
+        // serve the checkpoint immediately instead of the empty model;
+        // the seed stays version 0, so the first adoption still wins
+        slot.seed(model.clone(), *bound);
+    }
+    let admin = RpcServer::bind(
+        &serve_cfg.admin_addr,
+        Arc::new(AdminHandler::new(worker_id, Arc::clone(&state), Arc::clone(&stop))),
+    )?;
+    let serve = RpcServer::bind(
+        &serve_cfg.serve_addr,
+        Arc::new(ServeHandler::new(Arc::clone(&slot))),
+    )?;
+    println!(
+        "worker {worker_id} serving predictions on {} (admin rpc {})",
+        serve.local_addr(),
+        admin.local_addr()
+    );
+
+    let (log, _event_rx) = EventLog::new();
+    let log = log.with_counters(Arc::clone(&state.counters));
+    let cfg2 = cfg.clone();
+    let result = run_worker(WorkerParams {
+        id: worker_id,
+        cfg: cfg.clone(),
+        grid,
+        stripe,
+        store,
+        endpoint: Box::new(endpoint),
+        log,
+        stop: Arc::clone(&stop),
+        backend: sparrow::runtime::make_backend(&cfg2, features)?,
+        laggard: 1.0,
+        crash_after: None,
+        seed: cfg.seed ^ worker_id as u64,
+        control: Some(ControlPlane {
+            state,
+            slot: Arc::clone(&slot),
+        }),
+    });
+
+    println!(
+        "training done: {} rules, bound {:.4} — serving model v{}",
+        result.model.len(),
+        result.loss_bound,
+        slot.version()
+    );
+    if let Some(out) = out {
+        std::fs::write(&out, result.model.to_text())?;
+        std::fs::write(format!("{out}.meta"), format!("bound={}\n", result.loss_bound))?;
+        println!("model written to {out}");
+    }
+    if !exit_after_train && !stop.load(Ordering::Relaxed) {
+        println!(
+            "serving until shutdown: sparrow rpc --addr {} --method shutdown",
+            admin.local_addr()
+        );
+        while !stop.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+    Ok(())
+}
+
+/// One admin/serve RPC round trip; the full response envelope goes to
+/// stdout. The exit code is nonzero when the endpoint returned a typed
+/// error, so shell scripts can gate on it.
+fn cmd_rpc(args: &Args) -> anyhow::Result<()> {
+    use sparrow::admin::RpcClient;
+    use sparrow::util::json::Json;
+
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("--addr is required"))?
+        .to_string();
+    let method = args
+        .get("method")
+        .ok_or_else(|| anyhow::anyhow!("--method is required"))?
+        .to_string();
+    let params = match args.get("params") {
+        Some(p) => Json::parse(p).map_err(|e| anyhow::anyhow!("bad --params: {e}"))?,
+        None => Json::Null,
+    };
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let mut client = RpcClient::connect(&addr)?;
+    let reply = client.call(&method, params)?;
+    println!("{}", reply.to_string());
+    if let Some(err) = reply.get("error") {
+        let code = err.get("code").and_then(Json::as_f64).unwrap_or(0.0);
+        anyhow::bail!("rpc error {code}");
     }
     Ok(())
 }

@@ -1,0 +1,115 @@
+//! Live, lock-free event counters — the data behind the admin RPC's
+//! `metrics.snapshot` (DESIGN.md §10).
+//!
+//! The post-hoc event timeline answers "what happened"; an operator
+//! steering a live swarm needs "what is happening *now*" without stopping
+//! the run or scraping logs. [`LiveCounters`] keeps one atomic counter per
+//! [`EventKind`], bumped by [`crate::metrics::EventLog::record`] *after*
+//! the event is queued to the collector — so at any instant the counter
+//! value is a count of events already on the collector channel, and a
+//! snapshot can never claim an event the log will not eventually show
+//! (the consistency invariant the control-plane tests pin down).
+//!
+//! # Example
+//!
+//! ```
+//! use std::sync::Arc;
+//! use sparrow::metrics::{EventKind, EventLog, LiveCounters};
+//!
+//! let counters = Arc::new(LiveCounters::new());
+//! let (log, _rx) = EventLog::new();
+//! let log = log.with_counters(Arc::clone(&counters));
+//! log.record(0, EventKind::Accept, Some((1, 3)), 0.9);
+//! log.record(0, EventKind::Reject, Some((2, 1)), 0.95);
+//! assert_eq!(counters.get(EventKind::Accept), 1);
+//! assert_eq!(counters.get(EventKind::Reject), 1);
+//! assert_eq!(counters.get(EventKind::Broadcast), 0);
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::metrics::EventKind;
+
+/// One atomic counter per [`EventKind`]; cheap to share across every
+/// thread that holds an [`crate::metrics::EventLog`] clone.
+#[derive(Debug, Default)]
+pub struct LiveCounters {
+    counts: [AtomicU64; EventKind::ALL.len()],
+}
+
+impl LiveCounters {
+    /// All counters at zero.
+    pub fn new() -> LiveCounters {
+        LiveCounters::default()
+    }
+
+    /// Bump the counter for `kind` (called by `EventLog::record`).
+    pub fn bump(&self, kind: EventKind) {
+        self.counts[kind.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Current count for `kind`.
+    pub fn get(&self, kind: EventKind) -> u64 {
+        self.counts[kind.index()].load(Ordering::Relaxed)
+    }
+
+    /// `(wire name, count)` for every event kind, in [`EventKind::ALL`]
+    /// order — the rows of the `metrics.snapshot` RPC's `events` object.
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        EventKind::ALL
+            .iter()
+            .map(|k| (k.as_str(), self.get(*k)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bump_and_get() {
+        let c = LiveCounters::new();
+        assert_eq!(c.get(EventKind::Accept), 0);
+        c.bump(EventKind::Accept);
+        c.bump(EventKind::Accept);
+        c.bump(EventKind::Crash);
+        assert_eq!(c.get(EventKind::Accept), 2);
+        assert_eq!(c.get(EventKind::Crash), 1);
+        assert_eq!(c.get(EventKind::Reject), 0);
+    }
+
+    #[test]
+    fn snapshot_covers_every_kind_once() {
+        let c = LiveCounters::new();
+        for k in EventKind::ALL {
+            c.bump(k);
+        }
+        let snap = c.snapshot();
+        assert_eq!(snap.len(), EventKind::ALL.len());
+        assert!(snap.iter().all(|(_, n)| *n == 1));
+        let mut names: Vec<&str> = snap.iter().map(|(n, _)| *n).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), EventKind::ALL.len());
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        use std::sync::Arc;
+        let c = Arc::new(LiveCounters::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.bump(EventKind::Broadcast);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(EventKind::Broadcast), 4000);
+    }
+}

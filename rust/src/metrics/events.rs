@@ -5,6 +5,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::metrics::counters::LiveCounters;
 use crate::sim::clock::{Clock, RealClock};
 use crate::util::json::Json;
 
@@ -38,6 +39,46 @@ pub enum EventKind {
 }
 
 impl EventKind {
+    /// Every event kind, in declaration order. This is the canonical
+    /// enumeration the live-counter array, the `metrics.snapshot` RPC,
+    /// and the OPERATIONS.md coverage check are all indexed by — adding
+    /// a variant without extending it is a compile error (the `match`
+    /// in [`EventKind::index`] is exhaustive).
+    pub const ALL: [EventKind; 12] = [
+        EventKind::LocalImprovement,
+        EventKind::Broadcast,
+        EventKind::Receive,
+        EventKind::Accept,
+        EventKind::Reject,
+        EventKind::ResampleStart,
+        EventKind::ResampleEnd,
+        EventKind::SampleSwap,
+        EventKind::BuildAbort,
+        EventKind::GammaShrink,
+        EventKind::Crash,
+        EventKind::Finish,
+    ];
+
+    /// Position of this kind in [`EventKind::ALL`] (dense index for
+    /// per-kind counter arrays).
+    pub fn index(&self) -> usize {
+        match self {
+            EventKind::LocalImprovement => 0,
+            EventKind::Broadcast => 1,
+            EventKind::Receive => 2,
+            EventKind::Accept => 3,
+            EventKind::Reject => 4,
+            EventKind::ResampleStart => 5,
+            EventKind::ResampleEnd => 6,
+            EventKind::SampleSwap => 7,
+            EventKind::BuildAbort => 8,
+            EventKind::GammaShrink => 9,
+            EventKind::Crash => 10,
+            EventKind::Finish => 11,
+        }
+    }
+
+    /// Stable wire name (JSONL `kind` field and `metrics.snapshot` key).
     pub fn as_str(&self) -> &'static str {
         match self {
             EventKind::LocalImprovement => "local_improvement",
@@ -59,8 +100,11 @@ impl EventKind {
 /// One timestamped event.
 #[derive(Debug, Clone)]
 pub struct Event {
+    /// Time since the log's shared epoch.
     pub elapsed: Duration,
+    /// Id of the worker that recorded the event.
     pub worker: usize,
+    /// What happened.
     pub kind: EventKind,
     /// model version `(origin worker, sequence)` if applicable
     pub model: Option<(usize, u64)>,
@@ -79,9 +123,21 @@ pub struct EventLog {
     epoch: Instant,
     clock: Arc<dyn Clock>,
     tx: Sender<Event>,
+    counters: Option<Arc<LiveCounters>>,
 }
 
 impl EventLog {
+    /// A wall-clock log plus the collector end of its channel.
+    ///
+    /// ```
+    /// use sparrow::metrics::{drain, EventKind, EventLog};
+    ///
+    /// let (log, rx) = EventLog::new();
+    /// log.record(0, EventKind::Broadcast, Some((0, 1)), 0.9);
+    /// let events = drain(&rx);
+    /// assert_eq!(events.len(), 1);
+    /// assert_eq!(events[0].kind.as_str(), "broadcast");
+    /// ```
     pub fn new() -> (EventLog, Receiver<Event>) {
         EventLog::with_clock(Arc::new(RealClock))
     }
@@ -95,15 +151,29 @@ impl EventLog {
                 epoch: clock.now(),
                 clock,
                 tx,
+                counters: None,
             },
             rx,
         )
     }
 
+    /// The same log, additionally bumping `counters` on every
+    /// [`EventLog::record`] — the live feed behind the admin RPC's
+    /// `metrics.snapshot` (DESIGN.md §10). The bump happens *after* the
+    /// event is queued to the collector, so a counter snapshot never
+    /// exceeds what a later drain of the event log will show.
+    pub fn with_counters(mut self, counters: Arc<LiveCounters>) -> EventLog {
+        self.counters = Some(counters);
+        self
+    }
+
+    /// The shared epoch every `elapsed` stamp is measured from.
     pub fn epoch(&self) -> Instant {
         self.epoch
     }
 
+    /// Record one event: timestamp it, queue it to the collector, then
+    /// bump the live counter for `kind` (if counters are attached).
     pub fn record(&self, worker: usize, kind: EventKind, model: Option<(usize, u64)>, value: f64) {
         // send failures mean the collector is gone (run over) — ignore
         let _ = self.tx.send(Event {
@@ -113,6 +183,11 @@ impl EventLog {
             model,
             value,
         });
+        // after the send: snapshot ≤ eventual drain, the invariant the
+        // control-plane storm test asserts
+        if let Some(c) = &self.counters {
+            c.bump(kind);
+        }
     }
 }
 
@@ -201,24 +276,42 @@ mod tests {
 
     #[test]
     fn kind_names_unique() {
-        use EventKind::*;
-        let kinds = [
-            LocalImprovement,
-            Broadcast,
-            Receive,
-            Accept,
-            Reject,
-            ResampleStart,
-            ResampleEnd,
-            SampleSwap,
-            BuildAbort,
-            GammaShrink,
-            Crash,
-            Finish,
-        ];
-        let mut names: Vec<&str> = kinds.iter().map(|k| k.as_str()).collect();
+        let mut names: Vec<&str> = EventKind::ALL.iter().map(|k| k.as_str()).collect();
         names.sort();
         names.dedup();
-        assert_eq!(names.len(), kinds.len());
+        assert_eq!(names.len(), EventKind::ALL.len());
+    }
+
+    #[test]
+    fn kind_index_matches_all_order() {
+        for (i, k) in EventKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i, "{} out of order", k.as_str());
+        }
+    }
+
+    #[test]
+    fn counters_track_records() {
+        let counters = Arc::new(LiveCounters::new());
+        let (log, rx) = EventLog::new();
+        let log = log.with_counters(Arc::clone(&counters));
+        log.record(0, EventKind::Accept, Some((1, 2)), 0.9);
+        log.record(1, EventKind::Accept, Some((1, 2)), 0.9);
+        log.record(0, EventKind::Reject, Some((0, 1)), 0.95);
+        assert_eq!(counters.get(EventKind::Accept), 2);
+        assert_eq!(counters.get(EventKind::Reject), 1);
+        // counters never exceed what the log drains
+        let events = drain(&rx);
+        let accepts = events.iter().filter(|e| e.kind == EventKind::Accept).count();
+        assert_eq!(accepts as u64, counters.get(EventKind::Accept));
+    }
+
+    #[test]
+    fn counters_survive_collector_drop() {
+        let counters = Arc::new(LiveCounters::new());
+        let (log, rx) = EventLog::new();
+        let log = log.with_counters(Arc::clone(&counters));
+        drop(rx);
+        log.record(0, EventKind::Crash, None, 0.0);
+        assert_eq!(counters.get(EventKind::Crash), 1);
     }
 }

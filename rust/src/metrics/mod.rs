@@ -1,8 +1,13 @@
 //! Event log and execution timeline — the instrumentation behind Figure 1
-//! (the TMSN execution timeline) and the §Perf counters.
+//! (the TMSN execution timeline), the §Perf counters, and the live
+//! `metrics.snapshot` admin RPC (DESIGN.md §10).
 
+#![warn(missing_docs)]
+
+pub mod counters;
 pub mod events;
 pub mod timeline;
 
+pub use counters::LiveCounters;
 pub use events::{drain, Event, EventKind, EventLog};
 pub use timeline::render_timeline;

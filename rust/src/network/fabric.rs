@@ -64,12 +64,16 @@ impl NetConfig {
 /// Delivery counters (shared, lock-free).
 #[derive(Debug, Default)]
 pub struct NetStats {
+    /// broadcasts offered to the fabric (one per `broadcast` call)
     pub sent: AtomicU64,
+    /// per-recipient deliveries that reached an inbox
     pub delivered: AtomicU64,
+    /// per-recipient deliveries eaten by the loss model
     pub dropped: AtomicU64,
 }
 
 impl NetStats {
+    /// `(sent, delivered, dropped)` read with relaxed ordering.
     pub fn snapshot(&self) -> (u64, u64, u64) {
         (
             self.sent.load(Ordering::Relaxed),
@@ -115,6 +119,7 @@ enum ToDispatcher<T> {
 
 /// One worker's attachment to the fabric.
 pub struct Endpoint<T> {
+    /// This endpoint's worker id (broadcasts skip it as a recipient).
     pub id: usize,
     to_net: Sender<ToDispatcher<T>>,
     inbox: Receiver<T>,
@@ -149,6 +154,7 @@ impl<T: Clone + Send + 'static> Endpoint<T> {
 /// The fabric: owns the dispatcher thread.
 pub struct Fabric<T> {
     to_net: Sender<ToDispatcher<T>>,
+    /// Shared delivery counters, readable while the fabric runs.
     pub stats: Arc<NetStats>,
     handle: Option<JoinHandle<()>>,
 }

@@ -17,6 +17,26 @@
 //! message loss, per-worker laggard multipliers, and crash injection —
 //! the knobs behind the Figure-1 timeline and the resilience experiments
 //! (E2, E6 in DESIGN.md).
+//!
+//! # Example
+//!
+//! ```
+//! use std::time::Duration;
+//! use sparrow::network::{Fabric, NetConfig};
+//!
+//! // three endpoints on an ideal (zero-latency, lossless) fabric
+//! let (fabric, eps) = Fabric::new(3, NetConfig::ideal());
+//! eps[0].broadcast("certified model v1".to_string(), 18);
+//! for ep in &eps[1..] {
+//!     let got = ep.recv_timeout(Duration::from_secs(2));
+//!     assert_eq!(got.as_deref(), Some("certified model v1"));
+//! }
+//! // the sender never hears its own broadcast
+//! assert!(eps[0].try_recv().is_none());
+//! fabric.shutdown();
+//! ```
+
+#![warn(missing_docs)]
 
 pub mod fabric;
 pub mod tcp;

@@ -43,10 +43,22 @@ pub fn decode<P: Payload>(payload: &[u8]) -> Result<P, String> {
     P::decode(payload)
 }
 
+/// Frame raw bytes for the wire (same magic + length header the payload
+/// transport uses). The control plane's RPC endpoints (DESIGN.md §10)
+/// ship JSON request/response bodies in these frames, so an admin socket
+/// and a broadcast socket speak one framing dialect.
+pub(crate) fn frame_bytes(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + payload.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
 /// Read one length-prefixed frame. `Ok(None)` = clean EOF between frames
 /// (peer closed); `InvalidData` errors = corrupt stream (bad magic,
 /// oversized length), after which the link must be dropped.
-fn read_frame(stream: &mut impl Read) -> io::Result<Option<Vec<u8>>> {
+pub(crate) fn read_frame(stream: &mut impl Read) -> io::Result<Option<Vec<u8>>> {
     let mut head = [0u8; 8];
     if let Err(e) = stream.read_exact(&mut head) {
         // clean EOF between frames = peer closed
@@ -105,6 +117,7 @@ impl<P: Payload> TcpEndpoint<P> {
         })
     }
 
+    /// The bound address (useful after binding port 0).
     pub fn local_addr(&self) -> SocketAddr {
         self.local_addr
     }
@@ -137,14 +150,17 @@ impl<P: Payload> TcpEndpoint<P> {
         peers.retain_mut(|p| p.write_all(&frame).is_ok());
     }
 
+    /// Non-blocking poll of the inbox.
     pub fn try_recv(&self) -> Option<P> {
         self.inbox.try_recv().ok()
     }
 
+    /// Blocking poll of the inbox; `None` if `timeout` passes quietly.
     pub fn recv_timeout(&self, timeout: Duration) -> Option<P> {
         self.inbox.recv_timeout(timeout).ok()
     }
 
+    /// Number of live outbound links (dead peers are pruned on broadcast).
     pub fn peer_count(&self) -> usize {
         self.peers.lock().unwrap().len()
     }
@@ -233,6 +249,18 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn frame_bytes_roundtrips_through_read_frame() {
+        // the RPC layer's raw framing is byte-compatible with the
+        // payload transport's reader
+        let body = b"{\"v\":1,\"id\":7,\"method\":\"ping\"}";
+        let frame = frame_bytes(body);
+        let mut cursor = Cursor::new(frame.as_slice());
+        let back = read_frame(&mut cursor).unwrap().expect("one frame");
+        assert_eq!(back, body);
+        assert!(read_frame(&mut cursor).unwrap().is_none());
     }
 
     #[test]

@@ -126,6 +126,26 @@ impl Scanner {
         self.backend.name()
     }
 
+    /// Live override of the per-invocation starting target γ₀ (the admin
+    /// `config.set_gamma` / `config.gamma_reset` nudges, DESIGN.md §10).
+    /// Takes effect at the next `run_pass`; γ still halves from the new
+    /// value on budget exhaustion and `gamma_min` is unchanged.
+    pub fn set_gamma0(&mut self, gamma0: f64) {
+        assert!(gamma0 > 0.0, "gamma0 must be positive");
+        self.cfg.gamma0 = gamma0;
+    }
+
+    /// Live override of the stopping-rule sweep cadence (the admin
+    /// `config.set_sweep` nudge). `0` restores the auto cadence.
+    pub fn set_sweep_every(&mut self, sweep_every: usize) {
+        self.cfg.sweep_every = sweep_every;
+    }
+
+    /// Current per-invocation starting target γ₀.
+    pub fn gamma0(&self) -> f64 {
+        self.cfg.gamma0
+    }
+
     /// One scanner invocation: scan up to one full pass over `sample`,
     /// looking for a candidate with certified advantage ≥ γ (γ starts at
     /// γ₀ and halves every `scan_budget` examples).
@@ -608,5 +628,35 @@ mod tests {
             }
             other => panic!("expected Found, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn live_gamma_override_applies_next_pass() {
+        let mut rng = Rng::new(11);
+        let mut block = DataBlock::empty(1);
+        let n = 2_000;
+        for _ in 0..n {
+            let y = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+            block.push(&[y * (0.5 + rng.f32())], y);
+        }
+        let mut sample = SampleSet::fresh(block, vec![0.0; n], 0);
+        let mut sc = Scanner::new(
+            CandidateGrid::uniform(1, 1, -0.5, 0.5),
+            (0, 1),
+            Box::new(NativeBackend),
+            Box::new(LilRule::default()),
+            ScannerConfig::default(),
+        );
+        assert_eq!(sc.gamma0(), 0.25);
+        sc.set_gamma0(0.05);
+        assert_eq!(sc.gamma0(), 0.05);
+        // the override is what the next pass starts from: a perfectly
+        // separable feature certifies with γ ≥ the (low) new target
+        match sc.run_pass(&mut sample, &StrongRule::new(), || false) {
+            ScanOutcome::Found { gamma, .. } => assert!(gamma >= 0.05, "gamma={gamma}"),
+            other => panic!("expected Found, got {other:?}"),
+        }
+        sc.set_sweep_every(3); // smoke: cadence override is accepted
+        sc.set_sweep_every(0);
     }
 }

@@ -1,0 +1,221 @@
+//! Model serving: answer prediction requests from the latest adopted
+//! strong model while training continues (DESIGN.md §10, `sparrow serve`).
+//!
+//! The serve endpoint is a second [`crate::admin::RpcServer`] instance —
+//! same framing, same envelope, different handler — bound next to the
+//! worker's admin endpoint. Predictions read the model through a
+//! [`ModelSlot`] hot-swap: an adoption storm replaces the served model
+//! between requests without dropping or blocking any in-flight request.
+//!
+//! # Example
+//!
+//! ```
+//! use std::sync::Arc;
+//! use sparrow::model::{StrongRule, Stump};
+//! use sparrow::serve::{ModelSlot, ServeHandler};
+//! use sparrow::admin::RpcHandler;
+//! use sparrow::util::json::Json;
+//!
+//! let slot = Arc::new(ModelSlot::new());
+//! let mut m = StrongRule::new();
+//! m.push(Stump::new(0, 0.0, 1.0), 0.5);
+//! slot.publish(m, 1, 0.8);
+//!
+//! let handler = ServeHandler::new(Arc::clone(&slot));
+//! let params = Json::parse(r#"{"row":[2.5]}"#).unwrap();
+//! let r = handler.handle("predict", &params).unwrap();
+//! assert_eq!(r.get("label").and_then(Json::as_f64), Some(1.0));
+//! assert_eq!(r.get("model_version").and_then(Json::as_u64), Some(1));
+//! ```
+
+#![warn(missing_docs)]
+
+pub mod slot;
+
+pub use slot::{ModelSlot, ServedModel};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::admin::{RpcError, RpcHandler, PROTO_VERSION};
+use crate::util::json::Json;
+
+/// The prediction endpoint: serves every method in
+/// [`crate::admin::SERVE_METHODS`] from a shared [`ModelSlot`].
+pub struct ServeHandler {
+    slot: Arc<ModelSlot>,
+    requests: AtomicU64,
+    predictions: AtomicU64,
+}
+
+impl ServeHandler {
+    /// A serve endpoint answering from `slot`.
+    pub fn new(slot: Arc<ModelSlot>) -> ServeHandler {
+        ServeHandler {
+            slot,
+            requests: AtomicU64::new(0),
+            predictions: AtomicU64::new(0),
+        }
+    }
+
+    fn predict(&self, params: &Json) -> Result<Json, RpcError> {
+        let row_json = params
+            .get("row")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| RpcError::invalid_params("expected {\"row\": [number, ...]}"))?;
+        let mut row = Vec::with_capacity(row_json.len());
+        for v in row_json {
+            row.push(
+                v.as_f64()
+                    .ok_or_else(|| RpcError::invalid_params("row entries must be numbers"))?
+                    as f32,
+            );
+        }
+        // one lock + Arc clone, then score lock-free: a concurrent swap
+        // cannot touch this snapshot
+        let served = self.slot.current();
+        let needed = served
+            .model
+            .stumps()
+            .iter()
+            .map(|s| s.feature as usize + 1)
+            .max()
+            .unwrap_or(0);
+        if row.len() < needed {
+            return Err(RpcError::invalid_params(format!(
+                "row has {} features, model needs {needed}",
+                row.len()
+            )));
+        }
+        let score = served.model.score(&row);
+        self.predictions.fetch_add(1, Ordering::Relaxed);
+        let mut o = Json::obj();
+        o.set("score", score as f64)
+            .set("label", if score >= 0.0 { 1.0 } else { -1.0 })
+            .set("model_version", served.version as f64);
+        Ok(o)
+    }
+
+    fn stats(&self) -> Json {
+        let cur = self.slot.current();
+        let mut o = Json::obj();
+        o.set("requests", self.requests.load(Ordering::Relaxed) as f64)
+            .set(
+                "predictions",
+                self.predictions.load(Ordering::Relaxed) as f64,
+            )
+            .set("swaps", self.slot.swaps() as f64)
+            .set("model_version", cur.version as f64);
+        o
+    }
+}
+
+impl RpcHandler for ServeHandler {
+    fn handle(&self, method: &str, params: &Json) -> Result<Json, RpcError> {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        match method {
+            "ping" => {
+                let mut o = Json::obj();
+                o.set("pong", true).set("proto", PROTO_VERSION as f64);
+                Ok(o)
+            }
+            "predict" => self.predict(params),
+            "serve.stats" => Ok(self.stats()),
+            "model.current" => {
+                let cur = self.slot.current();
+                let mut o = Json::obj();
+                o.set("version", cur.version as f64)
+                    .set("len", cur.model.len() as f64)
+                    .set("loss_bound", cur.loss_bound);
+                Ok(o)
+            }
+            other => Err(RpcError::method_not_found(other)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::admin::SERVE_METHODS;
+    use crate::model::{StrongRule, Stump};
+
+    fn handler_with_model() -> ServeHandler {
+        let slot = Arc::new(ModelSlot::new());
+        let mut m = StrongRule::new();
+        m.push(Stump::new(0, 0.0, 1.0), 0.5); // +1 above 0 on feature 0
+        m.push(Stump::new(2, 1.0, -1.0), 0.25); // -1 above 1 on feature 2
+        slot.publish(m, 7, 0.6);
+        ServeHandler::new(slot)
+    }
+
+    fn params(text: &str) -> Json {
+        Json::parse(text).unwrap()
+    }
+
+    #[test]
+    fn every_listed_method_is_handled() {
+        let h = handler_with_model();
+        for m in SERVE_METHODS {
+            let p = match *m {
+                "predict" => params(r#"{"row":[1,0,0]}"#),
+                _ => Json::Null,
+            };
+            match h.handle(m, &p) {
+                Ok(_) => {}
+                Err(e) => panic!("{m}: {e:?}"),
+            }
+        }
+        assert_eq!(h.handle("nope", &Json::Null).unwrap_err().code, -32601);
+    }
+
+    #[test]
+    fn predict_scores_against_served_model() {
+        let h = handler_with_model();
+        // f0 = 2 > 0 → +0.5; f2 = 0 ≤ 1 → stump2 predicts +1 · -1 sign
+        // below → +0.25: total score 0.75 → label +1
+        let r = h.handle("predict", &params(r#"{"row":[2,0,0]}"#)).unwrap();
+        assert_eq!(r.get("label").and_then(Json::as_f64), Some(1.0));
+        assert!((r.get("score").and_then(Json::as_f64).unwrap() - 0.75).abs() < 1e-6);
+        assert_eq!(r.get("model_version").and_then(Json::as_u64), Some(7));
+        // f0 = -2 ≤ 0 → -0.5; f2 = 5 > 1 → -0.25: score -0.75 → label -1
+        let r = h.handle("predict", &params(r#"{"row":[-2,0,5]}"#)).unwrap();
+        assert_eq!(r.get("label").and_then(Json::as_f64), Some(-1.0));
+    }
+
+    #[test]
+    fn predict_validates_row() {
+        let h = handler_with_model();
+        for bad in [
+            r#"{}"#,
+            r#"{"row":"x"}"#,
+            r#"{"row":[1,"a",3]}"#,
+            r#"{"row":[1]}"#, // model needs features 0..=2
+        ] {
+            let err = h.handle("predict", &params(bad)).unwrap_err();
+            assert_eq!(err.code, -32602, "{bad}");
+        }
+    }
+
+    #[test]
+    fn empty_model_predicts_default_label() {
+        let h = ServeHandler::new(Arc::new(ModelSlot::new()));
+        let r = h.handle("predict", &params(r#"{"row":[]}"#)).unwrap();
+        assert_eq!(r.get("score").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(r.get("label").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(r.get("model_version").and_then(Json::as_u64), Some(0));
+    }
+
+    #[test]
+    fn stats_count_requests_and_swaps() {
+        let h = handler_with_model();
+        h.handle("ping", &Json::Null).unwrap();
+        h.handle("predict", &params(r#"{"row":[1,0,0]}"#)).unwrap();
+        let _ = h.handle("predict", &params(r#"{}"#)); // invalid → counted request, not prediction
+        let r = h.handle("serve.stats", &Json::Null).unwrap();
+        assert_eq!(r.get("requests").and_then(Json::as_u64), Some(4));
+        assert_eq!(r.get("predictions").and_then(Json::as_u64), Some(1));
+        assert_eq!(r.get("swaps").and_then(Json::as_u64), Some(1));
+        assert_eq!(r.get("model_version").and_then(Json::as_u64), Some(7));
+    }
+}

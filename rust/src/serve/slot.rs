@@ -1,0 +1,214 @@
+//! The hot-swap model slot: the serve-side half of the train→serve loop
+//! (DESIGN.md §10).
+//!
+//! A training worker publishes every adopted/improved model into a
+//! [`ModelSlot`]; prediction threads read the current model with one
+//! short lock and an `Arc` clone, then score entirely lock-free. The
+//! publish protocol is the same **latest-wins** rule as the sampler's
+//! [`crate::sampler::SampleHandle`]: a publish carrying a version no
+//! newer than the installed one is dropped, so no interleaving of an
+//! adoption storm can ever roll the served model backwards — served
+//! versions are monotone non-decreasing, the invariant the control-plane
+//! storm test asserts.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::model::StrongRule;
+
+/// An immutable served snapshot: the model plus its provenance.
+#[derive(Debug)]
+pub struct ServedModel {
+    /// The strong rule predictions are scored against.
+    pub model: StrongRule,
+    /// Worker-local model version (bumped on every adoption/publish).
+    pub version: u64,
+    /// The certificate bound the model shipped with.
+    pub loss_bound: f64,
+}
+
+/// Double-buffered latest-wins slot holding the newest adopted model.
+pub struct ModelSlot {
+    current: Mutex<Arc<ServedModel>>,
+    swaps: AtomicU64,
+}
+
+impl ModelSlot {
+    /// A slot holding the empty model (version 0, bound 1.0).
+    pub fn new() -> ModelSlot {
+        ModelSlot {
+            current: Mutex::new(Arc::new(ServedModel {
+                model: StrongRule::new(),
+                version: 0,
+                loss_bound: 1.0,
+            })),
+            swaps: AtomicU64::new(0),
+        }
+    }
+
+    /// Install `model` iff `version` is strictly newer than the installed
+    /// one (latest-wins). Returns whether the swap happened. In-flight
+    /// predictions keep their `Arc` to the old model — nothing is
+    /// invalidated under a reader, so a swap never drops a request.
+    pub fn publish(&self, model: StrongRule, version: u64, loss_bound: f64) -> bool {
+        let mut cur = self.current.lock().unwrap();
+        if version <= cur.version {
+            return false; // stale publish from a racing older state
+        }
+        *cur = Arc::new(ServedModel {
+            model,
+            version,
+            loss_bound,
+        });
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Replace the pristine slot's initial model without consuming a
+    /// version — resuming `sparrow serve` from a checkpoint serves the
+    /// checkpointed model immediately instead of the empty one. Only
+    /// valid before any publish has landed.
+    pub fn seed(&self, model: StrongRule, loss_bound: f64) {
+        let mut cur = self.current.lock().unwrap();
+        assert_eq!(
+            self.swaps.load(Ordering::Relaxed),
+            0,
+            "seed after a publish already landed"
+        );
+        *cur = Arc::new(ServedModel {
+            model,
+            version: 0,
+            loss_bound,
+        });
+    }
+
+    /// The current served model (cheap: one lock + `Arc` clone).
+    pub fn current(&self) -> Arc<ServedModel> {
+        Arc::clone(&self.current.lock().unwrap())
+    }
+
+    /// Version of the currently served model.
+    pub fn version(&self) -> u64 {
+        self.current.lock().unwrap().version
+    }
+
+    /// How many swaps have been installed over the slot's lifetime.
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for ModelSlot {
+    fn default() -> Self {
+        ModelSlot::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Stump;
+
+    fn model_of_len(n: usize) -> StrongRule {
+        let mut m = StrongRule::new();
+        for i in 0..n {
+            m.push(Stump::new(i as u32, 0.0, 1.0), 0.1);
+        }
+        m
+    }
+
+    #[test]
+    fn publish_installs_and_stale_is_dropped() {
+        let slot = ModelSlot::new();
+        assert_eq!(slot.version(), 0);
+        assert!(slot.publish(model_of_len(1), 1, 0.9));
+        assert!(slot.publish(model_of_len(3), 3, 0.7));
+        // older and same-version publishes lose
+        assert!(!slot.publish(model_of_len(2), 2, 0.8));
+        assert!(!slot.publish(model_of_len(3), 3, 0.7));
+        let cur = slot.current();
+        assert_eq!(cur.version, 3);
+        assert_eq!(cur.model.len(), 3);
+        assert_eq!(slot.swaps(), 2);
+    }
+
+    #[test]
+    fn seed_installs_without_a_version() {
+        let slot = ModelSlot::new();
+        slot.seed(model_of_len(4), 0.7);
+        let cur = slot.current();
+        assert_eq!((cur.version, cur.model.len()), (0, 4));
+        assert_eq!(slot.swaps(), 0);
+        // version 1 still beats the seed (seed is "version 0 content")
+        assert!(slot.publish(model_of_len(5), 1, 0.6));
+        assert_eq!(slot.current().version, 1);
+    }
+
+    #[test]
+    fn readers_keep_old_model_across_swap() {
+        let slot = ModelSlot::new();
+        slot.publish(model_of_len(1), 1, 0.9);
+        let held = slot.current();
+        slot.publish(model_of_len(5), 5, 0.5);
+        // the in-flight reader's snapshot is untouched
+        assert_eq!(held.version, 1);
+        assert_eq!(held.model.len(), 1);
+        assert_eq!(slot.current().version, 5);
+    }
+
+    #[test]
+    fn adoption_storm_served_version_monotone() {
+        // Seeded storm in the SampleHandle test style: racing publishers
+        // fire interleaved stale and fresh versions while a reader spins;
+        // the reader must never observe a version decrease, and the slot
+        // must end on the global maximum.
+        use std::sync::atomic::AtomicBool;
+        let slot = Arc::new(ModelSlot::new());
+        let done = Arc::new(AtomicBool::new(false));
+
+        let reader = {
+            let slot = Arc::clone(&slot);
+            let done = Arc::clone(&done);
+            std::thread::spawn(move || {
+                let mut last = 0u64;
+                let mut observed = 0u64;
+                while !done.load(Ordering::Relaxed) {
+                    let cur = slot.current();
+                    assert!(
+                        cur.version >= last,
+                        "served version went backwards: {} -> {}",
+                        last,
+                        cur.version
+                    );
+                    // provenance stays consistent under the swap
+                    assert_eq!(cur.model.len() as u64, cur.version);
+                    last = cur.version;
+                    observed += 1;
+                }
+                observed
+            })
+        };
+
+        let publishers: Vec<_> = (0..4)
+            .map(|p| {
+                let slot = Arc::clone(&slot);
+                std::thread::spawn(move || {
+                    // each publisher walks its own arithmetic progression,
+                    // so threads constantly race stale versions at the slot
+                    for step in 0..200u64 {
+                        let v = step * 4 + p + 1;
+                        slot.publish(model_of_len(v as usize), v, 1.0 / v as f64);
+                    }
+                })
+            })
+            .collect();
+        for h in publishers {
+            h.join().unwrap();
+        }
+        done.store(true, Ordering::Relaxed);
+        let observed = reader.join().unwrap();
+        assert!(observed > 0);
+        assert_eq!(slot.version(), 800);
+        assert!(slot.swaps() <= 800, "swaps can never exceed distinct versions");
+    }
+}

@@ -27,16 +27,41 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::admin::{ControlState, Nudge};
 use crate::boosting::{alpha_for_advantage, CandidateGrid};
 use crate::config::{SamplerMode, ScanEngine, TrainConfig};
 use crate::data::{BinSpec, DiskStore, IoThrottle, SampleSet, StrataConfig};
 use crate::metrics::{EventKind, EventLog};
 use crate::model::StrongRule;
 use crate::sampler::{BackgroundSampler, SampleStats, Sampler, SamplerConfig};
+use crate::serve::ModelSlot;
 use crate::scanner::{ScanBackend, ScanOutcome, Scanner, ScannerConfig};
 use crate::stopping::{DwRule, FixedScan, HoeffdingRule, LilRule, StoppingRule};
 use crate::tmsn::{BoostPayload, Driver, Link, Tmsn};
 use crate::util::rng::Rng;
+
+/// The worker's control-plane attachment (DESIGN.md §10): gauges and
+/// nudges shared with an admin RPC thread, plus the hot-swap slot a
+/// serve endpoint reads. `None` everywhere the control plane is off —
+/// the training loop then pays nothing.
+pub struct ControlPlane {
+    /// Gauges (model version, scan progress, stalls) + nudge queue +
+    /// fault switches.
+    pub state: Arc<ControlState>,
+    /// Latest-adopted-model slot for `sparrow serve`.
+    pub slot: Arc<ModelSlot>,
+}
+
+impl ControlPlane {
+    /// Publish a model-version bump to the gauges and the serve slot
+    /// (called on every adoption and local improvement).
+    fn note_model(&self, version: u64, payload: &BoostPayload) {
+        self.state
+            .note_model(version, payload.model.len(), payload.cert.loss_bound);
+        self.slot
+            .publish(payload.model.clone(), version, payload.cert.loss_bound);
+    }
+}
 
 /// Everything a worker thread needs.
 pub struct WorkerParams {
@@ -55,6 +80,8 @@ pub struct WorkerParams {
     /// crash this long after start (failure injection)
     pub crash_after: Option<Duration>,
     pub seed: u64,
+    /// control-plane attachment; `None` = no admin/serve endpoints
+    pub control: Option<ControlPlane>,
 }
 
 /// Final worker state returned to the coordinator.
@@ -170,6 +197,7 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
         laggard,
         crash_after,
         seed,
+        control,
     } = params;
     let start = Instant::now();
     let mut rng = Rng::new(seed ^ (id as u64).wrapping_mul(0x9E37_79B9));
@@ -253,6 +281,12 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
         None => Tmsn::new(id),
     };
     let mut driver = Driver::new(tmsn, endpoint, log.clone());
+    if let Some(c) = &control {
+        // startup gauges; a resumed checkpoint model reaches the serve
+        // slot via `ModelSlot::seed` at the call site (version 0)
+        let p = driver.payload();
+        c.state.note_model(version, p.model.len(), p.cert.loss_bound);
+    }
     let mut sample = SampleSet::empty(store.num_features());
     let mut force_resample = true;
     let mut found = 0u64;
@@ -267,6 +301,22 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
         }
         if let Some(t) = crash_after {
             if start.elapsed() >= t {
+                log.record(id, EventKind::Crash, None, 0.0);
+                crashed = true;
+                break;
+            }
+        }
+
+        // ---- control plane: nudges + on-demand faults (DESIGN.md §10) --
+        if let Some(c) = &control {
+            for nudge in c.state.drain_nudges() {
+                match nudge {
+                    Nudge::SetGamma(g) => scanner.set_gamma0(g),
+                    Nudge::GammaReset => scanner.set_gamma0(cfg.gamma0),
+                    Nudge::SetSweep(s) => scanner.set_sweep_every(s),
+                }
+            }
+            if c.state.crash_requested() {
                 log.record(id, EventKind::Crash, None, 0.0);
                 crashed = true;
                 break;
@@ -287,6 +337,9 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
             if let SampleSource::Background(bg) = &mut source {
                 // invalidate/restart any in-flight build (DESIGN.md §4)
                 bg.on_model_change(version, &driver.payload().model);
+            }
+            if let Some(c) = &control {
+                c.note_model(version, driver.payload());
             }
         }
 
@@ -324,7 +377,13 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
                 SampleSource::Blocking(sampler) => {
                     log.record(id, EventKind::ResampleStart, None, sample.n_eff());
                     let model = driver.payload().model.clone();
-                    match sampler.resample(&model) {
+                    let stall_t0 = Instant::now();
+                    let resampled = sampler.resample(&model);
+                    if let Some(c) = &control {
+                        // the paper's resample plateau, as a live gauge
+                        c.state.add_stall(stall_t0.elapsed());
+                    }
+                    match resampled {
                         Ok((s, stats)) => {
                             install_sample(
                                 &mut sample,
@@ -353,10 +412,14 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
                     if sample.is_empty() {
                         // initial fill: nothing to scan yet, so this wait
                         // is the only blocking hand-off in background mode
+                        let stall_t0 = Instant::now();
                         let install = bg.wait_install(version, || {
                             stop.load(Ordering::Relaxed)
                                 || start.elapsed() >= cfg.time_limit
                         });
+                        if let Some(c) = &control {
+                            c.state.add_stall(stall_t0.elapsed());
+                        }
                         match install {
                             Ok(Some((s, stats))) => {
                                 install_sample(
@@ -399,6 +462,7 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
             SampleSource::Background(bg) => Some(bg.ready_flag()),
             SampleSource::Blocking(_) => None,
         };
+        let pass_t0 = Instant::now();
         let outcome = scanner.run_pass(&mut sample, &model, || {
             deadline_hit.load(Ordering::Relaxed)
                 || driver.poll_interrupt()
@@ -409,6 +473,15 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
             log.record(id, EventKind::GammaShrink, None, 0.0);
         }
         prev_gamma_shrinks = scanner.gamma_shrinks;
+        if let Some(c) = &control {
+            c.state.note_scanned(scanner.total_scanned);
+            // on-demand laggard (`fault.inject`), applied at pass
+            // granularity: idle (factor − 1)× the pass's own elapsed time
+            let factor = c.state.laggard();
+            if factor > 1.0 {
+                std::thread::sleep(pass_t0.elapsed().mul_f64(factor - 1.0));
+            }
+        }
 
         match outcome {
             ScanOutcome::Found {
@@ -423,6 +496,9 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
                 if let SampleSource::Background(bg) = &mut source {
                     bg.on_model_change(version, &driver.payload().model);
                 }
+                if let Some(c) = &control {
+                    c.note_model(version, driver.payload());
+                }
                 found += 1;
             }
             ScanOutcome::Exhausted { .. } => {
@@ -434,11 +510,15 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
                 // park on the handoff until the swap, an adoption, or stop.
                 if let SampleSource::Background(bg) = &mut source {
                     bg.request(version, &driver.payload().model);
+                    let stall_t0 = Instant::now();
                     let install = bg.wait_install(version, || {
                         stop.load(Ordering::Relaxed)
                             || start.elapsed() >= cfg.time_limit
                             || driver.poll_interrupt()
                     });
+                    if let Some(c) = &control {
+                        c.state.add_stall(stall_t0.elapsed());
+                    }
                     match install {
                         Ok(Some((s, stats))) => {
                             install_sample(
@@ -463,6 +543,9 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
                             if adopted {
                                 version += 1;
                                 bg.on_model_change(version, &driver.payload().model);
+                                if let Some(c) = &control {
+                                    c.note_model(version, driver.payload());
+                                }
                             }
                         }
                         Err(e) => {
@@ -481,6 +564,9 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
                     version += 1;
                     if let SampleSource::Background(bg) = &mut source {
                         bg.on_model_change(version, &driver.payload().model);
+                    }
+                    if let Some(c) = &control {
+                        c.note_model(version, driver.payload());
                     }
                 }
                 // stop-flag and sample-ready interrupts fall through to

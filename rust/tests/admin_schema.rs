@@ -1,0 +1,130 @@
+//! Golden-schema tests pinning the admin/serve RPC wire format.
+//!
+//! Every method in `ADMIN_METHODS` / `SERVE_METHODS` has a stored
+//! request/response fixture pair under `tests/golden/admin_rpc/`; this
+//! suite replays each request through the socket-free [`dispatch`] core
+//! against a fully deterministic handler (SimClock uptime, scripted
+//! gauges) and compares the response **byte-for-byte**. Any wire-format
+//! drift — key renames, number formatting, error codes or messages —
+//! fails tier-1. If the change is intentional, regenerate with
+//! `GOLDEN_REGEN=1 cargo test --test admin_schema` and update
+//! OPERATIONS.md to match.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+use sparrow::admin::{dispatch, AdminHandler, ControlState, RpcHandler, ADMIN_METHODS, SERVE_METHODS};
+use sparrow::metrics::EventKind;
+use sparrow::model::{StrongRule, Stump};
+use sparrow::serve::{ModelSlot, ServeHandler};
+use sparrow::sim::SimClock;
+
+fn golden_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/admin_rpc")
+}
+
+/// The scripted admin-side state every `admin_*` fixture is computed
+/// against: 2 s of SimClock uptime, model v3 (3 rules, bound 0.5),
+/// 1000 examples scanned, 250 ms of sampler stall, and a 2/1/1
+/// accept/reject/local-improvement counter history.
+fn admin_fixture_handler() -> AdminHandler {
+    let clock = Arc::new(SimClock::new());
+    let state = Arc::new(ControlState::with_clock(clock.clone()));
+    state.note_model(3, 3, 0.5);
+    state.note_scanned(1000);
+    state.add_stall(Duration::from_millis(250));
+    state.counters.bump(EventKind::Accept);
+    state.counters.bump(EventKind::Accept);
+    state.counters.bump(EventKind::Reject);
+    state.counters.bump(EventKind::LocalImprovement);
+    clock.advance(Duration::from_secs(2));
+    AdminHandler::new(0, state, Arc::new(AtomicBool::new(false)))
+}
+
+/// The scripted serve-side state for `serve_*` fixtures: one published
+/// model (v1, a single +1-above-0 stump on feature 0 with α = 0.5,
+/// bound 0.75). Request counters advance as the fixtures replay in
+/// filename order, which is why the fixtures are numbered.
+fn serve_fixture_handler() -> ServeHandler {
+    let slot = Arc::new(ModelSlot::new());
+    let mut m = StrongRule::new();
+    m.push(Stump::new(0, 0.0, 1.0), 0.5);
+    slot.publish(m, 1, 0.75);
+    ServeHandler::new(slot)
+}
+
+/// Replay every `<prefix>*.request.json` (sorted, so numbering fixes the
+/// order stateful counters advance in) and diff against the stored
+/// response. `GOLDEN_REGEN=1` rewrites the response files instead.
+fn replay(prefix: &str, handler: &dyn RpcHandler) {
+    let dir = golden_dir();
+    let mut cases: Vec<PathBuf> = fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("missing fixture dir {}: {e}", dir.display()))
+        .map(|e| e.unwrap().path())
+        .filter(|p| {
+            let name = p.file_name().unwrap().to_str().unwrap();
+            name.starts_with(prefix) && name.ends_with(".request.json")
+        })
+        .collect();
+    cases.sort();
+    assert!(!cases.is_empty(), "no {prefix} fixtures in {}", dir.display());
+    for req_path in cases {
+        let resp_path = PathBuf::from(
+            req_path
+                .to_str()
+                .unwrap()
+                .replace(".request.json", ".response.json"),
+        );
+        let request = fs::read_to_string(&req_path).unwrap();
+        let got = String::from_utf8(dispatch(handler, request.trim_end().as_bytes())).unwrap();
+        if std::env::var_os("GOLDEN_REGEN").is_some() {
+            fs::write(&resp_path, format!("{got}\n")).unwrap();
+            continue;
+        }
+        let want = fs::read_to_string(&resp_path)
+            .unwrap_or_else(|_| panic!("missing {}", resp_path.display()));
+        assert_eq!(
+            got,
+            want.trim_end(),
+            "RPC wire format drifted for {} — if intentional, regenerate with \
+             GOLDEN_REGEN=1 and update OPERATIONS.md",
+            req_path.display()
+        );
+    }
+}
+
+#[test]
+fn admin_wire_format_pinned() {
+    replay("admin_", &admin_fixture_handler());
+}
+
+#[test]
+fn serve_wire_format_pinned() {
+    replay("serve_", &serve_fixture_handler());
+}
+
+#[test]
+fn every_method_has_a_fixture() {
+    // the canonical method lists are the coverage contract: adding a
+    // method without pinning its wire format fails here
+    for (prefix, methods) in [("admin_", ADMIN_METHODS), ("serve_", SERVE_METHODS)] {
+        let mut blob = String::new();
+        for e in fs::read_dir(golden_dir()).unwrap() {
+            let p = e.unwrap().path();
+            let name = p.file_name().unwrap().to_str().unwrap();
+            if name.starts_with(prefix) && name.ends_with(".request.json") {
+                blob.push_str(&fs::read_to_string(&p).unwrap());
+                blob.push('\n');
+            }
+        }
+        for m in methods {
+            assert!(
+                blob.contains(&format!("\"method\":\"{m}\"")),
+                "no golden fixture for {prefix}{m}"
+            );
+        }
+    }
+}

@@ -1,0 +1,322 @@
+//! Control-plane integration: the ISSUE-6 acceptance scenario.
+//!
+//! During a scripted adoption storm the serve endpoint must answer every
+//! prediction (zero drops) with a monotone non-decreasing model version,
+//! and a mid-storm `metrics.snapshot` must be consistent with the event
+//! log (every counter ≤ what a later drain shows; equal once the storm
+//! has quiesced). A second group of tests drives a *real* worker loop
+//! through the admin RPC: config nudges, live fault injection, shutdown.
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use sparrow::admin::{AdminHandler, ControlState, RpcClient, RpcServer};
+use sparrow::metrics::{drain, EventKind, EventLog};
+use sparrow::model::{StrongRule, Stump};
+use sparrow::serve::{ModelSlot, ServeHandler};
+use sparrow::util::json::Json;
+
+/// A model of `n` identical positive stumps on feature 0 — any row with
+/// one positive entry is a valid prediction input at every storm version.
+fn model_of_len(n: usize) -> StrongRule {
+    let mut m = StrongRule::new();
+    for _ in 0..n {
+        m.push(Stump::new(0, 0.0, 1.0), 0.1);
+    }
+    m
+}
+
+fn params(text: &str) -> Json {
+    Json::parse(text).unwrap()
+}
+
+#[test]
+fn adoption_storm_zero_drops_monotone_versions_consistent_snapshot() {
+    const STORM: u64 = 400;
+
+    let state = Arc::new(ControlState::new());
+    let slot = Arc::new(ModelSlot::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let (log, rx) = EventLog::new();
+    let log = log.with_counters(Arc::clone(&state.counters));
+
+    let admin = RpcServer::bind(
+        "127.0.0.1:0",
+        Arc::new(AdminHandler::new(0, Arc::clone(&state), stop)),
+    )
+    .unwrap();
+    let serve = RpcServer::bind(
+        "127.0.0.1:0",
+        Arc::new(ServeHandler::new(Arc::clone(&slot))),
+    )
+    .unwrap();
+
+    // the storm: a scripted trainer adopting/publishing STORM versions
+    // back-to-back, feeding gauges, slot and event log exactly like the
+    // worker loop's `ControlPlane::note_model` path
+    let trainer = {
+        let state = Arc::clone(&state);
+        let slot = Arc::clone(&slot);
+        thread::spawn(move || {
+            for v in 1..=STORM {
+                let m = model_of_len(v as usize);
+                let bound = 1.0 / (v as f64 + 1.0);
+                state.note_model(v, m.len(), bound);
+                slot.publish(m, v, bound);
+                let kind = if v % 3 == 0 {
+                    EventKind::LocalImprovement
+                } else {
+                    EventKind::Accept
+                };
+                log.record(0, kind, Some((0, v)), bound);
+                if v % 32 == 0 {
+                    // brief lulls so clients interleave with the storm
+                    thread::sleep(Duration::from_micros(200));
+                }
+            }
+        })
+    };
+
+    // prediction clients hammer the serve endpoint through the storm;
+    // every call must be answered, versions must never go backwards
+    let clients: Vec<_> = (0..3)
+        .map(|_| {
+            let addr = serve.local_addr().to_string();
+            thread::spawn(move || {
+                let mut c = RpcClient::connect(&addr).unwrap();
+                let mut last = 0u64;
+                let mut answered = 0u64;
+                loop {
+                    let r = c
+                        .call_ok("predict", params(r#"{"row":[1.5]}"#))
+                        .expect("prediction dropped mid-storm");
+                    let v = r.get("model_version").and_then(Json::as_u64).unwrap();
+                    assert!(v >= last, "served version went backwards: {last} -> {v}");
+                    // the served snapshot is internally consistent: score
+                    // comes from the same model the version stamp names
+                    let score = r.get("score").and_then(Json::as_f64).unwrap();
+                    // 0.02 tolerance: f32 alpha accumulation over up to
+                    // 400 stumps
+                    assert!(
+                        (score - 0.1 * v as f64).abs() < 0.02,
+                        "version {v} answered with a foreign model (score {score})"
+                    );
+                    last = v;
+                    answered += 1;
+                    if v == STORM {
+                        break;
+                    }
+                }
+                answered
+            })
+        })
+        .collect();
+
+    // mid-storm admin snapshot: taken while publishes are in flight
+    let mut admin_c = RpcClient::connect(&admin.local_addr().to_string()).unwrap();
+    let mid = admin_c.call_ok("metrics.snapshot", Json::Null).unwrap();
+
+    trainer.join().unwrap();
+    for c in clients {
+        let answered = c.join().unwrap();
+        assert!(answered > 0, "client never got an answer");
+    }
+
+    // quiesced: final snapshot must EQUAL the drained event log, and the
+    // mid-storm snapshot must never have exceeded it (bump-after-send)
+    let fin = admin_c.call_ok("metrics.snapshot", Json::Null).unwrap();
+    let events = drain(&rx);
+    for k in EventKind::ALL {
+        let name = k.as_str();
+        let drained = events.iter().filter(|e| e.kind == k).count() as u64;
+        let count = |snap: &Json| {
+            snap.get("events")
+                .and_then(|e| e.get(name))
+                .and_then(Json::as_u64)
+                .unwrap_or_else(|| panic!("snapshot missing {name}"))
+        };
+        assert_eq!(count(&fin), drained, "final snapshot vs drain for {name}");
+        assert!(count(&mid) <= drained, "mid-storm snapshot exceeds drain for {name}");
+    }
+    assert_eq!(
+        events.len() as u64,
+        STORM,
+        "storm events lost between log and drain"
+    );
+
+    // gauges, serve slot and serve.stats all agree on the final version
+    assert_eq!(slot.version(), STORM);
+    let model = fin.get("model").unwrap();
+    assert_eq!(model.get("version").and_then(Json::as_u64), Some(STORM));
+    assert_eq!(model.get("len").and_then(Json::as_u64), Some(STORM));
+    let mut serve_c = RpcClient::connect(&serve.local_addr().to_string()).unwrap();
+    let stats = serve_c.call_ok("serve.stats", Json::Null).unwrap();
+    assert_eq!(stats.get("model_version").and_then(Json::as_u64), Some(STORM));
+    assert!(stats.get("swaps").and_then(Json::as_u64).unwrap() <= STORM);
+    assert!(stats.get("predictions").and_then(Json::as_u64).unwrap() > 0);
+}
+
+#[test]
+fn seeded_slot_serves_checkpoint_until_first_adoption() {
+    use sparrow::admin::RpcHandler;
+    // `sparrow serve --resume`: the checkpoint is served at version 0 and
+    // the first live adoption (version 1) hot-swaps over it
+    let slot = Arc::new(ModelSlot::new());
+    slot.seed(model_of_len(3), 0.5);
+    let h = ServeHandler::new(Arc::clone(&slot));
+    let r = h.handle("predict", &params(r#"{"row":[1.0]}"#)).unwrap();
+    assert_eq!(r.get("model_version").and_then(Json::as_u64), Some(0));
+    assert!((r.get("score").and_then(Json::as_f64).unwrap() - 0.3).abs() < 1e-3);
+    slot.publish(model_of_len(4), 1, 0.4);
+    let r = h.handle("predict", &params(r#"{"row":[1.0]}"#)).unwrap();
+    assert_eq!(r.get("model_version").and_then(Json::as_u64), Some(1));
+}
+
+// ---- real worker loop under admin control --------------------------------
+
+mod live_worker {
+    use super::*;
+    use sparrow::boosting::grid::partition_features;
+    use sparrow::boosting::CandidateGrid;
+    use sparrow::config::TrainConfig;
+    use sparrow::data::{DiskStore, IoThrottle};
+    use sparrow::scanner::NativeBackend;
+    use sparrow::worker::{run_worker, ControlPlane, NullLink, WorkerParams};
+
+    /// A single-worker setup (NullLink transport) with the control plane
+    /// attached — the library-level equivalent of `sparrow serve` with a
+    /// generous rule/time budget, so only the admin RPC ends the run.
+    fn worker_with_control() -> (
+        WorkerParams,
+        Arc<ControlState>,
+        Arc<ModelSlot>,
+        Arc<AtomicBool>,
+    ) {
+        let (path, _test) = common::synth_store("sparrow_control_plane", 5, 4_000, 100);
+        let store = DiskStore::open(&path).unwrap();
+        let features = store.num_features();
+        let pilot = store
+            .stream(IoThrottle::unlimited())
+            .unwrap()
+            .next_block(2048)
+            .unwrap();
+        let grid = CandidateGrid::from_quantiles(&pilot, 4);
+        let stripe = partition_features(features, 1)[0];
+        let cfg = TrainConfig {
+            num_workers: 1,
+            sample_size: 512,
+            max_rules: 10_000,
+            time_limit: Duration::from_secs(30),
+            ..TrainConfig::default()
+        };
+        let state = Arc::new(ControlState::new());
+        let slot = Arc::new(ModelSlot::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let (log, _rx) = EventLog::new();
+        let log = log.with_counters(Arc::clone(&state.counters));
+        let params = WorkerParams {
+            id: 0,
+            cfg,
+            grid,
+            stripe,
+            store,
+            endpoint: Box::new(NullLink),
+            log,
+            stop: Arc::clone(&stop),
+            backend: Box::new(NativeBackend),
+            laggard: 1.0,
+            crash_after: None,
+            seed: 11,
+            control: Some(ControlPlane {
+                state: Arc::clone(&state),
+                slot: Arc::clone(&slot),
+            }),
+        };
+        (params, state, slot, stop)
+    }
+
+    /// Poll `model.current` until the worker has published `version >= v`
+    /// (bounded wait — the synth store certifies rules in milliseconds).
+    fn wait_for_version(c: &mut RpcClient, v: u64) -> u64 {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        loop {
+            let cur = c
+                .call_ok("model.current", Json::Null)
+                .unwrap()
+                .get("version")
+                .and_then(Json::as_u64)
+                .unwrap();
+            if cur >= v {
+                return cur;
+            }
+            assert!(Instant::now() < deadline, "worker never reached version {v}");
+            thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn shutdown_rpc_stops_a_live_worker_after_nudges() {
+        let (params, state, slot, stop) = worker_with_control();
+        let admin = RpcServer::bind(
+            "127.0.0.1:0",
+            Arc::new(AdminHandler::new(0, Arc::clone(&state), stop)),
+        )
+        .unwrap();
+        let worker = thread::spawn(move || run_worker(params));
+        let mut c = RpcClient::connect(&admin.local_addr().to_string()).unwrap();
+
+        // let training make real progress, then steer it over RPC
+        wait_for_version(&mut c, 1);
+        c.call_ok("config.set_gamma", params_json(r#"{"gamma":0.05}"#)).unwrap();
+        c.call_ok("config.gamma_reset", Json::Null).unwrap();
+        c.call_ok("fault.inject", params_json(r#"{"fault":"laggard","factor":2}"#))
+            .unwrap();
+        c.call_ok("fault.inject", params_json(r#"{"fault":"heal"}"#)).unwrap();
+        wait_for_version(&mut c, 2);
+
+        let r = c.call_ok("shutdown", Json::Null).unwrap();
+        assert_eq!(r.get("stopping").and_then(Json::as_bool), Some(true));
+        let result = worker.join().unwrap();
+        assert!(!result.crashed, "clean shutdown must not count as a crash");
+        assert!(result.model.len() >= 2);
+
+        // gauges and the serve slot reflect the final model exactly
+        let (version, len, _bound) = state.model();
+        assert_eq!(len as usize, result.model.len());
+        assert_eq!(slot.version(), version);
+        assert_eq!(slot.current().model.len(), result.model.len());
+        let snap = c.call_ok("metrics.snapshot", Json::Null).unwrap();
+        assert!(snap.get("scanned").and_then(Json::as_u64).unwrap() > 0);
+        assert!(
+            snap.get("events")
+                .and_then(|e| e.get("local_improvement"))
+                .and_then(Json::as_u64)
+                .unwrap()
+                > 0
+        );
+    }
+
+    #[test]
+    fn crash_injection_via_rpc_marks_worker_crashed() {
+        let (params, state, _slot, stop) = worker_with_control();
+        let admin = RpcServer::bind(
+            "127.0.0.1:0",
+            Arc::new(AdminHandler::new(0, Arc::clone(&state), stop)),
+        )
+        .unwrap();
+        let worker = thread::spawn(move || run_worker(params));
+        let mut c = RpcClient::connect(&admin.local_addr().to_string()).unwrap();
+        c.call_ok("fault.inject", params_json(r#"{"fault":"crash"}"#)).unwrap();
+        let result = worker.join().unwrap();
+        assert!(result.crashed, "crash injection must mark the result");
+        assert_eq!(state.counters.get(EventKind::Crash), 1);
+    }
+
+    fn params_json(text: &str) -> Json {
+        Json::parse(text).unwrap()
+    }
+}

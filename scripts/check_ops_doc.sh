@@ -1,0 +1,47 @@
+#!/usr/bin/env bash
+# OPERATIONS.md coverage gate: every RPC method in admin/proto.rs
+# (ADMIN_METHODS + SERVE_METHODS) and every event wire name in
+# metrics/events.rs must be documented in OPERATIONS.md as `name`.
+# Pure text diff — needs no Rust toolchain, so it runs anywhere.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+DOC=OPERATIONS.md
+PROTO=rust/src/admin/proto.rs
+EVENTS=rust/src/metrics/events.rs
+fail=0
+
+# ---- RPC methods: the quoted strings inside the two const lists ------
+# ADMIN_METHODS is a multi-line list; SERVE_METHODS is single-line.
+methods=$(
+  awk '/^pub const (ADMIN|SERVE)_METHODS/,/\];|\];$/' "$PROTO" \
+    | grep -o '"[a-z_.]*"' | tr -d '"' | sort -u
+)
+[ -n "$methods" ] || { echo "error: extracted no methods from $PROTO" >&2; exit 2; }
+
+for m in $methods; do
+  if ! grep -qF "\`$m\`" "$DOC"; then
+    echo "MISSING: RPC method \`$m\` (from $PROTO) is not documented in $DOC" >&2
+    fail=1
+  fi
+done
+
+# ---- Event kinds: the wire names returned by EventKind::as_str -------
+events=$(
+  awk '/pub fn as_str/,/^    }/' "$EVENTS" \
+    | grep -o '"[a-z_]*"' | tr -d '"' | sort -u
+)
+[ -n "$events" ] || { echo "error: extracted no event names from $EVENTS" >&2; exit 2; }
+
+for e in $events; do
+  if ! grep -qF "\`$e\`" "$DOC"; then
+    echo "MISSING: event kind \`$e\` (from $EVENTS) is not documented in $DOC" >&2
+    fail=1
+  fi
+done
+
+if [ "$fail" -ne 0 ]; then
+  echo "ops-doc check FAILED: update OPERATIONS.md (see above)" >&2
+  exit 1
+fi
+echo "ops-doc check OK: $(echo "$methods" | wc -w | tr -d ' ') methods, $(echo "$events" | wc -w | tr -d ' ') event kinds all documented"

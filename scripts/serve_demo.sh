@@ -1,0 +1,56 @@
+#!/usr/bin/env bash
+# End-to-end control-plane demo (`make serve-demo`, OPERATIONS.md §1):
+# synthesize a small store, start `sparrow serve`, round-trip the admin
+# and serve endpoints through `sparrow rpc`, then shut the worker down
+# cleanly and check it wrote its model. Override the port pair with
+# SERVE_DEMO_PORT=N (uses N and N+1).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PORT=${SERVE_DEMO_PORT:-7790}
+SERVE_ADDR="127.0.0.1:${PORT}"
+ADMIN_ADDR="127.0.0.1:$((PORT + 1))"
+
+(cd rust && cargo build --release)
+BIN=rust/target/release/sparrow
+
+TMP=$(mktemp -d)
+SERVE_PID=""
+cleanup() {
+  [ -n "$SERVE_PID" ] && kill "$SERVE_PID" 2>/dev/null || true
+  rm -rf "$TMP"
+}
+trap cleanup EXIT
+
+"$BIN" gen-data --out "$TMP/train.sprw" --train-n 4000 --features 16 --data-seed 5
+
+"$BIN" serve --data "$TMP/train.sprw" --workers 1 --max-rules 8 \
+    --time-limit 30 --serve-addr "$SERVE_ADDR" --admin-addr "$ADMIN_ADDR" \
+    --out "$TMP/model.txt" &
+SERVE_PID=$!
+
+# both endpoints bind before training starts; poll until the admin
+# endpoint answers (the rpc client itself retries connects for ~1s)
+for _ in $(seq 1 60); do
+  if "$BIN" rpc --addr "$ADMIN_ADDR" --method ping >/dev/null 2>&1; then
+    break
+  fi
+  sleep 0.25
+done
+
+echo "--- admin ping"
+"$BIN" rpc --addr "$ADMIN_ADDR" --method ping
+echo "--- predict (16-feature row; served model hot-swaps as training adopts)"
+ROW=$(printf '0.5,%.0s' {1..15}; printf '0.5')
+"$BIN" rpc --addr "$SERVE_ADDR" --method predict --params "{\"row\":[${ROW}]}"
+echo "--- metrics.snapshot"
+"$BIN" rpc --addr "$ADMIN_ADDR" --method metrics.snapshot
+echo "--- serve.stats"
+"$BIN" rpc --addr "$SERVE_ADDR" --method serve.stats
+echo "--- shutdown"
+"$BIN" rpc --addr "$ADMIN_ADDR" --method shutdown
+
+wait "$SERVE_PID"
+SERVE_PID=""
+test -f "$TMP/model.txt" || { echo "serve demo FAILED: no model written" >&2; exit 1; }
+echo "serve-demo OK"
