@@ -1,7 +1,7 @@
 # Convenience entry points. The authoritative verification gate is
 # scripts/tier1.sh (used verbatim by CI).
 
-.PHONY: tier1 build test fmt clippy doc check-ops-doc serve-demo artifacts bench bench-scan sim clean
+.PHONY: tier1 build test fmt clippy doc check-ops-doc serve-demo artifacts bench bench-scan bench-ooc sim clean
 
 tier1:
 	./scripts/tier1.sh
@@ -52,6 +52,12 @@ bench-scan:
 # JAX environment is available for the HLO step.
 artifacts: bench-scan
 	cd python && python3 -m compile.aot --out-dir ../rust/artifacts
+
+# Out-of-core data plane (DESIGN.md §11): mem vs tiered build rate on a
+# store ~4x the tiered memory budget, with a byte-identity assertion,
+# → BENCH_ooc.json at the repo root.
+bench-ooc:
+	cd rust && cargo bench --bench ooc_scan -- --json ../BENCH_ooc.json
 
 bench:
 	cd rust && cargo bench

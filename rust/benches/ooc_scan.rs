@@ -1,0 +1,190 @@
+//! Out-of-core data-plane benchmark (§Perf, DESIGN.md §11): steady-state
+//! background-build rate of the fully-resident stratified store vs the
+//! tiered store on a synthetic set ~4× the tiered memory budget, plus a
+//! byte-identity assertion between the two planes.
+//!
+//!     cargo bench --bench ooc_scan [-- --json BENCH_ooc.json]
+//!
+//! `--json PATH` writes the result object (`make bench-ooc` emits it to
+//! the repo root as `BENCH_ooc.json`, tracking the out-of-core cost
+//! trajectory across PRs).
+
+use sparrow::config::SamplerKind;
+use sparrow::data::{IoThrottle, StrataConfig, StratifiedStore, SynthConfig, TieredConfig, TieredStore};
+use sparrow::data::synth::SynthGen;
+use sparrow::model::{StrongRule, Stump};
+use sparrow::sampler::{build_once, build_tiered, BuildOutcome, BuildStamp, SamplerConfig};
+use sparrow::util::bench::BenchRunner;
+use sparrow::util::json::Json;
+
+const N: usize = 60_000;
+const F: usize = 16;
+/// record = label + F features ≈ 68 B ⇒ store ≈ 4.1 MB, ~4× this budget
+const BUDGET: u64 = 1 << 20;
+const SEED: u64 = 1805;
+
+fn sampler_cfg() -> SamplerConfig {
+    SamplerConfig {
+        target_m: 2048,
+        kind: SamplerKind::MinimalVariance,
+        probe: 2048,
+        max_passes: 1,
+        block: 1024,
+    }
+}
+
+fn models() -> Vec<StrongRule> {
+    let mut m1 = StrongRule::new();
+    m1.push(Stump::new(0, 0.0, 1.0), 0.5);
+    let mut m2 = m1.clone();
+    m2.push(Stump::new(5, 0.3, -1.0), 0.35);
+    vec![StrongRule::new(), m1, m2]
+}
+
+fn mem_sample(store: &mut StratifiedStore, model: &StrongRule, stamp: BuildStamp) -> BuildOutcome {
+    build_once(store, model, stamp, &sampler_cfg(), SEED, || false).expect("mem build")
+}
+
+fn tiered_sample(store: &mut TieredStore, model: &StrongRule, stamp: BuildStamp) -> BuildOutcome {
+    build_tiered(store, model, stamp, &sampler_cfg(), None, SEED, || false).expect("tiered build")
+}
+
+fn sample_of(out: BuildOutcome) -> sparrow::data::SampleSet {
+    match out {
+        BuildOutcome::Built { sample, .. } => sample,
+        other => panic!("expected Built, got {other:?}"),
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let json_path = argv
+        .windows(2)
+        .find(|w| w[0] == "--json")
+        .map(|w| w[1].clone());
+
+    let dir = std::env::temp_dir().join("sparrow_ooc_bench");
+    std::fs::create_dir_all(&dir).expect("bench tmpdir");
+    let path = dir.join(format!("train_{N}_{F}.sprw"));
+    SynthGen::new(SynthConfig {
+        f: F,
+        pos_rate: 0.3,
+        informative: 8,
+        signal: 0.8,
+        flip_rate: 0.02,
+        seed: 9,
+    })
+    .write_store(&path, N)
+    .expect("write synthetic store");
+
+    let mut mem = StratifiedStore::open(
+        &path,
+        IoThrottle::unlimited(),
+        StrataConfig::default(),
+    )
+    .expect("open mem store");
+    let mut tiered = TieredStore::open(
+        &path,
+        TieredConfig {
+            memory_budget: BUDGET,
+            probe_rows: sampler_cfg().probe,
+            ..TieredConfig::default()
+        },
+    )
+    .expect("open tiered store");
+
+    // ---- identity: the tier must never change sample bytes ---------------
+    let seq = models();
+    for (v, model) in seq.iter().enumerate() {
+        let stamp = BuildStamp {
+            version: v as u64,
+            attempt: 0,
+        };
+        let a = sample_of(mem_sample(&mut mem, model, stamp));
+        let b = sample_of(tiered_sample(&mut tiered, model, stamp));
+        assert_eq!(a.data, b.data, "v{v}: tiered sample diverged from mem");
+        assert_eq!(a.score_sample, b.score_sample, "v{v}: scores diverged");
+    }
+    println!("identity: tiered == mem over {} model versions", seq.len());
+    println!(
+        "tiered resident fraction: {:.3} (budget {} B, store {} B)",
+        tiered.resident_fraction(),
+        BUDGET,
+        (N * 4 * (1 + F)) as u64,
+    );
+
+    // ---- steady-state build rate: same model rebuilt (attempt bumps) -----
+    // After the identity loop both stores are anchored at the last model;
+    // repeated fresh draws at that anchor are the pipeline's steady state —
+    // for the tiered store, certified skips make most rejected rows free.
+    let runner = BenchRunner {
+        warmup: 1,
+        runs: 7,
+        ..BenchRunner::default()
+    };
+    let model = seq.last().unwrap().clone();
+    let mut attempt = 1u64;
+    let mem_stats = runner.bench("ooc mem build 60000x16", || {
+        let stamp = BuildStamp {
+            version: 2,
+            attempt,
+        };
+        attempt += 1;
+        sample_of(mem_sample(&mut mem, &model, stamp)).len()
+    });
+    let mut attempt_t = 1u64;
+    let before = tiered.counters();
+    let tiered_stats = runner.bench("ooc tiered build 60000x16", || {
+        let stamp = BuildStamp {
+            version: 2,
+            attempt: attempt_t,
+        };
+        attempt_t += 1;
+        sample_of(tiered_sample(&mut tiered, &model, stamp)).len()
+    });
+    let after = tiered.counters();
+
+    let mem_s = mem_stats.median.as_secs_f64();
+    let tiered_s = tiered_stats.median.as_secs_f64();
+    println!(
+        "  -> mem: {:.2} M rows/s, tiered: {:.2} M rows/s, ratio {:.2}x",
+        N as f64 / mem_s / 1e6,
+        N as f64 / tiered_s / 1e6,
+        tiered_s / mem_s,
+    );
+    println!(
+        "  -> readahead hits {} misses {}, rows skipped (certified) {}",
+        after.readahead_hits - before.readahead_hits,
+        after.readahead_misses - before.readahead_misses,
+        after.rows_skipped - before.rows_skipped,
+    );
+
+    let mut result = Json::obj();
+    result
+        .set("bench", "ooc_scan")
+        .set("n", N)
+        .set("features", F)
+        .set("budget_bytes", BUDGET as f64)
+        .set("store_bytes", (N * 4 * (1 + F)) as f64)
+        .set("resident_fraction", tiered.resident_fraction())
+        .set("mem_build_s", mem_s)
+        .set("tiered_build_s", tiered_s)
+        .set("tiered_over_mem", tiered_s / mem_s)
+        .set(
+            "readahead_hits",
+            (after.readahead_hits - before.readahead_hits) as f64,
+        )
+        .set(
+            "readahead_misses",
+            (after.readahead_misses - before.readahead_misses) as f64,
+        )
+        .set(
+            "rows_skipped",
+            (after.rows_skipped - before.rows_skipped) as f64,
+        )
+        .set("identical", true);
+    if let Some(path) = &json_path {
+        std::fs::write(path, result.to_string() + "\n").expect("write BENCH_ooc json");
+        println!("ooc sweep written to {path}");
+    }
+}

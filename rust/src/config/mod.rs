@@ -77,6 +77,28 @@ impl SamplerMode {
     }
 }
 
+/// Where the background sampler's weight-indexed store lives (DESIGN.md §11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreTier {
+    /// fully memory-resident stratified store (default)
+    Mem,
+    /// out-of-core tiered store: heavy strata in memory within
+    /// `--memory-budget`, light strata in spill chunk files with
+    /// readahead — train on stores much bigger than RAM
+    Tiered,
+}
+
+impl StoreTier {
+    /// Parse a `--store-tier` value.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "mem" | "memory" => Ok(StoreTier::Mem),
+            "tiered" => Ok(StoreTier::Tiered),
+            _ => Err(format!("unknown store tier {s:?} (mem|tiered)")),
+        }
+    }
+}
+
 /// Which CPU scan engine drives the edge accumulation (DESIGN.md §8).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScanEngine {
@@ -166,8 +188,15 @@ pub struct TrainConfig {
     /// or more; at the default batch of 128 the engine's win is the
     /// branch-free single-thread loop, not sharding.
     pub scan_threads: usize,
-    /// disk read bandwidth in bytes/s (0 = unlimited, in-memory tier)
+    /// disk read bandwidth in bytes/s (0 = unlimited, in-memory tier);
+    /// *simulated* — see the quarantine note in `data::throttle`
     pub disk_bandwidth: f64,
+    /// where the background sampler's store lives: `mem` (resident) or
+    /// `tiered` (out-of-core under `memory_budget`, DESIGN.md §11)
+    pub store_tier: StoreTier,
+    /// resident-byte budget for `--store-tier tiered` (store rows only;
+    /// excludes the sample and scan-side buffers)
+    pub memory_budget: u64,
     /// evaluation cadence for the metric series
     pub eval_interval: Duration,
     pub net: NetConfig,
@@ -206,6 +235,8 @@ impl Default for TrainConfig {
             scan_engine: ScanEngine::Rows,
             scan_threads: 1,
             disk_bandwidth: 0.0,
+            store_tier: StoreTier::Mem,
+            memory_budget: 64 << 20,
             eval_interval: Duration::from_millis(250),
             net: NetConfig::default(),
             laggards: Vec::new(),
@@ -252,6 +283,10 @@ impl TrainConfig {
         }
         self.scan_threads = args.get_usize("scan-threads", self.scan_threads);
         self.disk_bandwidth = args.get_f64("disk-bandwidth", self.disk_bandwidth);
+        if let Some(s) = args.get("store-tier") {
+            self.store_tier = StoreTier::parse(s)?;
+        }
+        self.memory_budget = args.get_u64("memory-budget", self.memory_budget);
         self.eval_interval = Duration::from_secs_f64(
             args.get_f64("eval-interval", self.eval_interval.as_secs_f64()),
         );
@@ -289,6 +324,25 @@ impl TrainConfig {
             }
             if self.backend != Backend::Native {
                 return Err("scan-engine binned requires --backend native".into());
+            }
+        }
+        if self.store_tier == StoreTier::Tiered {
+            if self.sampler_mode != SamplerMode::Background {
+                return Err(
+                    "store-tier tiered requires --sampler-mode background \
+                     (the blocking sampler streams the store directly)"
+                        .into(),
+                );
+            }
+            if self.disk_bandwidth > 0.0 {
+                return Err(
+                    "store-tier tiered does real I/O; it cannot be combined with \
+                     the simulated --disk-bandwidth throttle"
+                        .into(),
+                );
+            }
+            if self.memory_budget == 0 {
+                return Err("memory-budget must be positive".into());
             }
         }
         Ok(())
@@ -490,6 +544,45 @@ mod tests {
             .is_err());
         assert!(TrainConfig::default()
             .apply_args(&args("t --scan-engine rows --nthr 300"))
+            .is_ok());
+    }
+
+    #[test]
+    fn store_tier_default_and_override() {
+        // the knob must default to the fully-resident store
+        assert_eq!(TrainConfig::default().store_tier, StoreTier::Mem);
+        assert_eq!(TrainConfig::default().memory_budget, 64 << 20);
+        let cfg = TrainConfig::default()
+            .apply_args(&args(
+                "train --sampler-mode background --store-tier tiered \
+                 --memory-budget 1048576",
+            ))
+            .unwrap();
+        assert_eq!(cfg.store_tier, StoreTier::Tiered);
+        assert_eq!(cfg.memory_budget, 1 << 20);
+        assert_eq!(StoreTier::parse("mem").unwrap(), StoreTier::Mem);
+        assert_eq!(StoreTier::parse("tiered").unwrap(), StoreTier::Tiered);
+        assert!(StoreTier::parse("nope").is_err());
+        // tiered needs the background pipeline...
+        assert!(TrainConfig::default()
+            .apply_args(&args("t --store-tier tiered"))
+            .is_err());
+        // ...rejects the simulated throttle (it does real I/O)...
+        assert!(TrainConfig::default()
+            .apply_args(&args(
+                "t --sampler-mode background --store-tier tiered \
+                 --disk-bandwidth 1000000"
+            ))
+            .is_err());
+        // ...and needs a positive budget
+        assert!(TrainConfig::default()
+            .apply_args(&args(
+                "t --sampler-mode background --store-tier tiered --memory-budget 0"
+            ))
+            .is_err());
+        // the mem tier ignores both tiered knobs
+        assert!(TrainConfig::default()
+            .apply_args(&args("t --disk-bandwidth 1000000"))
             .is_ok());
     }
 

@@ -17,6 +17,7 @@ pub mod store;
 pub mod strata;
 pub mod synth;
 pub mod throttle;
+pub mod tiered;
 
 pub use binned::{BinSpec, BinnedBatch, BinnedStripe};
 pub use block::DataBlock;
@@ -25,3 +26,4 @@ pub use store::DiskStore;
 pub use strata::{StrataConfig, StratifiedStore};
 pub use synth::SynthConfig;
 pub use throttle::IoThrottle;
+pub use tiered::{TieredConfig, TieredCounters, TieredStore};

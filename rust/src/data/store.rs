@@ -105,6 +105,14 @@ impl DiskStore {
         let mut r = Reader::open(&self.path)?;
         r.read_block(self.len(), false)
     }
+
+    /// Read the first `n` examples (clamped to the store length) without
+    /// wrapping. The tiered data plane pins exactly this prefix in memory
+    /// for its deterministic scale probe (DESIGN.md §11).
+    pub fn read_prefix(&self, n: usize) -> io::Result<DataBlock> {
+        let mut r = Reader::open(&self.path)?;
+        r.read_block(n.min(self.len()), false)
+    }
 }
 
 /// Sequential (circular) cursor over a [`DiskStore`] with byte-rate
@@ -201,5 +209,80 @@ mod tests {
         let path = tmpfile("bytes.sprw");
         let store = DiskStore::write(&path, &block(10, 4)).unwrap();
         assert_eq!(store.data_bytes(), 10 * 4 * 5);
+    }
+
+    #[test]
+    fn read_prefix_clamps_and_preserves_order() {
+        let path = tmpfile("prefix.sprw");
+        let b = block(7, 3);
+        let store = DiskStore::write(&path, &b).unwrap();
+        // partial prefix
+        let p = store.read_prefix(4).unwrap();
+        assert_eq!(p.n, 4);
+        for i in 0..4 {
+            assert_eq!(p.row(i), b.row(i));
+            assert_eq!(p.label(i), b.label(i));
+        }
+        // over-asking clamps to the store length, no wrap
+        let all = store.read_prefix(100).unwrap();
+        assert_eq!(all, b);
+        // zero prefix is an empty block, not an error
+        assert!(store.read_prefix(0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn next_block_zero_is_empty_and_holds_position() {
+        let path = tmpfile("zero.sprw");
+        let store = DiskStore::write(&path, &block(5, 2)).unwrap();
+        let mut s = store.stream(IoThrottle::unlimited()).unwrap();
+        let z = s.next_block(0).unwrap();
+        assert!(z.is_empty());
+        assert_eq!(s.position(), 0);
+        // the cursor did not move: the next read starts at row 0
+        let b1 = s.next_block(2).unwrap();
+        assert_eq!(b1.row(0), block(5, 2).row(0));
+        assert_eq!(s.position(), 2);
+    }
+
+    #[test]
+    fn partial_final_block_then_wrap() {
+        let path = tmpfile("partial.sprw");
+        let b = block(5, 2);
+        let store = DiskStore::write(&path, &b).unwrap();
+        let mut s = store.stream(IoThrottle::unlimited()).unwrap();
+        assert_eq!(s.next_block(4).unwrap().n, 4);
+        // only one record remains before EOF; the circular stream fills the
+        // rest of the block from the start of the store
+        let tail = s.next_block(4).unwrap();
+        assert_eq!(tail.n, 4);
+        assert_eq!(tail.row(0), b.row(4));
+        assert_eq!(tail.row(1), b.row(0));
+        assert_eq!(s.position(), 3); // 3 records past the wrap
+    }
+
+    #[test]
+    fn truncated_header_rejected_on_open() {
+        let path = tmpfile("trunc.sprw");
+        DiskStore::write(&path, &block(3, 2)).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..10]).unwrap(); // mid-header cut
+        assert!(DiskStore::open(&path).is_err());
+    }
+
+    #[test]
+    fn corrupt_header_rejected_on_open() {
+        let path = tmpfile("corrupt.sprw");
+        DiskStore::write(&path, &block(3, 2)).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] = b'X'; // break the magic
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(DiskStore::open(&path).is_err());
+
+        // unsupported version is rejected too
+        DiskStore::write(&path, &block(3, 2)).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4] = 99;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(DiskStore::open(&path).is_err());
     }
 }

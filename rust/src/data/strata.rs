@@ -41,8 +41,14 @@ pub const NUM_STRATA: usize = 32;
 /// Stratum id for weight `w`: `clamp(⌊log₂ w⌋ + NUM_STRATA/2, 0, NUM_STRATA-1)`.
 /// Weight 1 (a freshly sampled example) lands in bucket `NUM_STRATA/2`;
 /// each step up doubles the weight ceiling.
+///
+/// Total over every `f64`: NaN and zero/negative weights clamp into the
+/// lightest bucket (via the `1e-300` floor), `+∞` into the heaviest. The
+/// `min(f64::MAX)` is load-bearing: `(+∞).log2().floor() as i64`
+/// saturates to `i64::MAX`, and the `+ NUM_STRATA/2` after it would
+/// overflow (a panic in debug builds) without the clamp.
 pub fn bucket_of(w: f64) -> u8 {
-    let k = w.max(1e-300).log2().floor() as i64 + (NUM_STRATA as i64) / 2;
+    let k = w.max(1e-300).min(f64::MAX).log2().floor() as i64 + (NUM_STRATA as i64) / 2;
     k.clamp(0, NUM_STRATA as i64 - 1) as u8
 }
 
@@ -297,6 +303,67 @@ mod tests {
         assert_eq!(bucket_of(3.9) as usize, NUM_STRATA / 2 + 1);
         assert_eq!(bucket_of(0.0), 0); // clamped underflow
         assert_eq!(bucket_of(1e30) as usize, NUM_STRATA - 1); // clamped overflow
+    }
+
+    #[test]
+    fn bucket_of_is_total_over_degenerate_weights() {
+        // every representable f64 must map to a valid stratum without
+        // panicking — exp() of an extreme score yields ±∞-adjacent
+        // weights, and defensive callers may pass NaN or negatives
+        let cases = [
+            (f64::INFINITY, (NUM_STRATA - 1) as u8), // was an i64 overflow panic
+            (f64::MAX, (NUM_STRATA - 1) as u8),
+            (f64::NAN, 0),           // NaN.max(1e-300) = 1e-300 → lightest
+            (0.0, 0),
+            (-0.0, 0),
+            (-1.0, 0),
+            (f64::NEG_INFINITY, 0),
+            (f64::MIN_POSITIVE, 0),  // smallest normal
+            (f64::from_bits(1), 0),  // smallest subnormal
+            (1e-300, 0),
+        ];
+        for (w, want) in cases {
+            let got = bucket_of(w);
+            assert_eq!(got, want, "bucket_of({w:e})");
+            assert!((got as usize) < NUM_STRATA);
+        }
+        // exhaustive sweep over the exponent range, both signs
+        for e in -1080..1080 {
+            for sign in [1.0, -1.0] {
+                let w = sign * 2f64.powi(e.clamp(-1074, 1023));
+                assert!((bucket_of(w) as usize) < NUM_STRATA, "w = {w:e}");
+            }
+        }
+    }
+
+    #[test]
+    fn note_weight_accepts_degenerate_weights() {
+        // the build path must survive whatever exp() produced
+        let path = store_path("degenerate.sprw", 8, 2);
+        let mut s = StratifiedStore::open(
+            &path,
+            IoThrottle::unlimited(),
+            StrataConfig { resident_rows: 4 },
+        )
+        .unwrap();
+        let weird = [
+            f64::INFINITY,
+            f64::NAN,
+            0.0,
+            f64::from_bits(1),
+            f64::NEG_INFINITY,
+            f64::MAX,
+            f64::MIN_POSITIVE,
+            1.0,
+        ];
+        full_pass(&mut s, |i| weird[i]);
+        s.commit_build();
+        // the index committed and every example landed in a real stratum
+        for i in 0..8 {
+            assert!((s.bucket(i) as usize) < NUM_STRATA);
+        }
+        assert_eq!(s.bucket(0) as usize, NUM_STRATA - 1); // ∞ → heaviest
+        assert_eq!(s.bucket(4), 0); // −∞ → lightest
     }
 
     #[test]

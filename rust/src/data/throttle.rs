@@ -11,6 +11,20 @@
 //! [`crate::sim::SimClock`] the same code *advances virtual time* instead,
 //! so a scenario can model slow disks without spending wall time
 //! (DESIGN.md §9).
+//!
+//! # Quarantined to simulation
+//!
+//! Since the out-of-core tiered data plane landed (DESIGN.md §11), this
+//! throttle is **not** the production off-memory story: `--store-tier
+//! tiered` performs *real* chunk-file I/O under a real memory budget, and
+//! combining it with `--disk-bandwidth` is rejected at config validation —
+//! a simulated bandwidth cap layered on actual disk reads would
+//! double-count the cost. The throttle remains for what it is good at:
+//! `sparrow sim` scenarios and in-memory-tier experiments that *model* a
+//! slow disk deterministically (virtual clock, zero wall time) without
+//! needing a store larger than RAM. Prefer the tiered plane when you want
+//! the real thing measured, and the throttle when you want a counterfactual
+//! simulated.
 
 use std::fmt;
 use std::sync::Arc;

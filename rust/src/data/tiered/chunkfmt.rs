@@ -1,0 +1,238 @@
+//! On-disk format for per-stratum spill chunk files, plus a uniform
+//! byte-span reader over spill files *and* the base store.
+//!
+//! Layout (little-endian), deliberately parallel to
+//! [`crate::data::binfmt`]:
+//!
+//! ```text
+//!   header:  magic "SPCH" (4 bytes) | version u32 | n u64 | f u32 | pad u32
+//!   records: n × ( label f32 | features f32 × f )
+//! ```
+//!
+//! Records are identical to the base `.sprw` records and both headers are
+//! 24 bytes, so a [`ChunkSource`] can address either file kind by *slot*
+//! (record index within the file) — the base store is just the one chunk
+//! source whose slots coincide with global example indices. Readers fetch
+//! contiguous slot spans as raw bytes ([`ChunkSource::read_span`]) and
+//! decode one record at a time ([`decode_row_into`]); a spilled example
+//! therefore never needs more than its own `f32` row materialized.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::data::binfmt;
+
+/// Magic for spill chunk files (base stores carry `binfmt::MAGIC`).
+pub const CHUNK_MAGIC: &[u8; 4] = b"SPCH";
+/// Spill format version.
+pub const CHUNK_VERSION: u32 = 1;
+/// Header length shared by both file kinds.
+pub const HEADER_LEN: u64 = binfmt::HEADER_LEN;
+
+/// Streaming writer for one spill chunk file. Call
+/// [`ChunkWriter::finish`] to patch the record count.
+pub struct ChunkWriter {
+    out: BufWriter<File>,
+    f: u32,
+    written: u64,
+}
+
+impl ChunkWriter {
+    /// Create `path` with a placeholder record count.
+    pub fn create(path: &Path, f: u32) -> io::Result<ChunkWriter> {
+        let file = File::create(path)?;
+        let mut out = BufWriter::new(file);
+        out.write_all(CHUNK_MAGIC)?;
+        out.write_all(&CHUNK_VERSION.to_le_bytes())?;
+        out.write_all(&0u64.to_le_bytes())?;
+        out.write_all(&f.to_le_bytes())?;
+        out.write_all(&0u32.to_le_bytes())?;
+        Ok(ChunkWriter { out, f, written: 0 })
+    }
+
+    /// Append one record.
+    pub fn write_row(&mut self, label: f32, features: &[f32]) -> io::Result<()> {
+        debug_assert_eq!(features.len(), self.f as usize);
+        self.out.write_all(&label.to_le_bytes())?;
+        for &x in features {
+            self.out.write_all(&x.to_le_bytes())?;
+        }
+        self.written += 1;
+        Ok(())
+    }
+
+    /// Flush, patch the record count, and return it.
+    pub fn finish(mut self) -> io::Result<u64> {
+        self.out.flush()?;
+        let mut file = self.out.into_inner()?;
+        file.seek(SeekFrom::Start(8))?;
+        file.write_all(&self.written.to_le_bytes())?;
+        file.sync_all()?;
+        Ok(self.written)
+    }
+}
+
+/// A validated, slot-addressable record file: either a spill chunk file
+/// or the base `.sprw` store.
+#[derive(Debug, Clone)]
+pub struct ChunkSource {
+    path: PathBuf,
+    /// features per record
+    pub f: usize,
+    /// records in the file
+    pub n: usize,
+}
+
+impl ChunkSource {
+    /// Open a spill chunk file, validating its header.
+    pub fn open_spill(path: &Path) -> io::Result<ChunkSource> {
+        let mut file = File::open(path)?;
+        let mut magic = [0u8; 4];
+        file.read_exact(&mut magic)?;
+        if &magic != CHUNK_MAGIC {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "bad spill chunk magic",
+            ));
+        }
+        let mut b4 = [0u8; 4];
+        let mut b8 = [0u8; 8];
+        file.read_exact(&mut b4)?;
+        if u32::from_le_bytes(b4) != CHUNK_VERSION {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "unsupported spill chunk version",
+            ));
+        }
+        file.read_exact(&mut b8)?;
+        let n = u64::from_le_bytes(b8) as usize;
+        file.read_exact(&mut b4)?;
+        let f = u32::from_le_bytes(b4) as usize;
+        Ok(ChunkSource {
+            path: path.to_path_buf(),
+            f,
+            n,
+        })
+    }
+
+    /// Open the base `.sprw` store as a chunk source (slots = global
+    /// example indices).
+    pub fn open_base(path: &Path) -> io::Result<ChunkSource> {
+        let mut file = File::open(path)?;
+        let header = binfmt::read_header(&mut file)?;
+        Ok(ChunkSource {
+            path: path.to_path_buf(),
+            f: header.f as usize,
+            n: header.n as usize,
+        })
+    }
+
+    /// Path of the backing file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Bytes per record.
+    pub fn record_bytes(&self) -> u64 {
+        4 * (1 + self.f as u64)
+    }
+
+    /// Open a private file handle for span reads (each reader thread
+    /// keeps its own cursor).
+    pub fn open_file(&self) -> io::Result<File> {
+        File::open(&self.path)
+    }
+
+    /// Read the raw bytes of `count` records starting at `slot` through
+    /// `file` (a handle from [`ChunkSource::open_file`]).
+    pub fn read_span(&self, file: &mut File, slot: usize, count: usize) -> io::Result<Vec<u8>> {
+        assert!(
+            slot + count <= self.n,
+            "span {slot}+{count} out of bounds (n={})",
+            self.n
+        );
+        let rec = self.record_bytes();
+        file.seek(SeekFrom::Start(HEADER_LEN + slot as u64 * rec))?;
+        let mut buf = vec![0u8; count * rec as usize];
+        file.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+}
+
+/// Decode record `k` of a span buffer into `row`, returning the label.
+pub fn decode_row_into(buf: &[u8], k: usize, f: usize, row: &mut [f32]) -> f32 {
+    debug_assert_eq!(row.len(), f);
+    let rec = 4 * (1 + f);
+    let at = k * rec;
+    let label = f32::from_le_bytes([buf[at], buf[at + 1], buf[at + 2], buf[at + 3]]);
+    for (j, r) in row.iter_mut().enumerate() {
+        let o = at + 4 + j * 4;
+        *r = f32::from_le_bytes([buf[o], buf[o + 1], buf[o + 2], buf[o + 3]]);
+    }
+    label
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("sparrow_chunkfmt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_spans() {
+        let path = tmpfile("rt.spch");
+        let mut w = ChunkWriter::create(&path, 3).unwrap();
+        for i in 0..10 {
+            let row = [i as f32, (i * 2) as f32, (i * 3) as f32];
+            w.write_row(if i % 2 == 0 { 1.0 } else { -1.0 }, &row).unwrap();
+        }
+        assert_eq!(w.finish().unwrap(), 10);
+
+        let src = ChunkSource::open_spill(&path).unwrap();
+        assert_eq!((src.n, src.f), (10, 3));
+        let mut file = src.open_file().unwrap();
+        let buf = src.read_span(&mut file, 4, 3).unwrap();
+        let mut row = [0f32; 3];
+        let label = decode_row_into(&buf, 1, 3, &mut row);
+        assert_eq!(label, -1.0); // record 5
+        assert_eq!(row, [5.0, 10.0, 15.0]);
+    }
+
+    #[test]
+    fn base_store_is_a_chunk_source() {
+        use crate::data::{DataBlock, DiskStore};
+        let path = tmpfile("base.sprw");
+        let mut b = DataBlock::empty(2);
+        for i in 0..6 {
+            b.push(&[i as f32, -(i as f32)], 1.0);
+        }
+        DiskStore::write(&path, &b).unwrap();
+
+        let src = ChunkSource::open_base(&path).unwrap();
+        assert_eq!((src.n, src.f), (6, 2));
+        let mut file = src.open_file().unwrap();
+        let buf = src.read_span(&mut file, 5, 1).unwrap();
+        let mut row = [0f32; 2];
+        decode_row_into(&buf, 0, 2, &mut row);
+        assert_eq!(row, [5.0, -5.0]);
+    }
+
+    #[test]
+    fn wrong_magic_rejected_both_ways() {
+        let path = tmpfile("cross.spch");
+        let mut w = ChunkWriter::create(&path, 1).unwrap();
+        w.write_row(1.0, &[0.0]).unwrap();
+        w.finish().unwrap();
+        // a spill file is not a base store and vice versa
+        assert!(ChunkSource::open_base(&path).is_err());
+        let base = tmpfile("cross.sprw");
+        use crate::data::{DataBlock, DiskStore};
+        DiskStore::write(&base, &DataBlock::empty(1)).unwrap();
+        assert!(ChunkSource::open_spill(&base).is_err());
+    }
+}

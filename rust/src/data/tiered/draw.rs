@@ -1,0 +1,231 @@
+//! The exactness-preserving draw: certified weight ceilings that let the
+//! tiered store *prove* an example will be rejected before reading it.
+//!
+//! # Why skipping a read can be exact
+//!
+//! The background build's acceptance draw for example `i` (see
+//! `sampler::background`) spends exactly one uniform coin
+//! `u = example_rng(key, i).f64() ∈ [0, 1)`, and for the
+//! weight-proportional kinds the example is rejected **iff**
+//! `scale · u ≥ w` (when `w/scale ≥ 1` at least one copy is kept
+//! unconditionally, and `u < 1` always, so the condition covers both
+//! branches). The coin is a pure function of `(seed, version, attempt, i)`
+//! — computable without touching the example's bytes. Rejection is
+//! monotone in `w`: if we hold a *certified ceiling* `W ≥ w`, then
+//! `scale · u ≥ W` implies rejection. Skips fire only when rejection is
+//! provable, so the surviving set — and therefore the sample — is
+//! byte-identical to the in-memory pass. (`SamplerKind::Uniform` is even
+//! simpler: acceptance is `u < m/n`, independent of `w`, so the survivor
+//! set is computed exactly with zero reads.)
+//!
+//! # Where ceilings come from
+//!
+//! Weights are `w(M) = exp(−y·s_M(x))` and a model `M` that extends the
+//! anchor `A` moves any score by at most the suffix alpha mass
+//! `d = Σ|α|` (stump outputs are ±1), so `w(M) ≤ w(A) · e^d`. The store
+//! keeps a per-example exponent `e` certifying `w(anchor) ≤ 2^e`: set
+//! exactly from the fresh weight whenever an example is read
+//! ([`exp_ceiling`]), and inflated by [`exp_bump`]`(d)` at commit time for
+//! examples the pass skipped. [`drift_bound`] pads `d` for `f32`
+//! score-accumulation rounding, so the certificate holds for the weights
+//! the sampler actually computes, not just the real-valued ideal. All
+//! roundings here are chosen to be safe-side: a ceiling may only ever be
+//! too large (costing a read), never too small (which would corrupt the
+//! sample).
+
+use crate::data::strata::NUM_STRATA;
+use crate::model::StrongRule;
+
+/// Exact `2^e` over the full `f64` range: `+∞` above it, `0` below it.
+/// Both extremes are safe ceilings (`∞` forces a read; `0` certifies only
+/// weights that are themselves `0`).
+pub fn pow2(e: i32) -> f64 {
+    if e > 1023 {
+        f64::INFINITY
+    } else if e >= -1022 {
+        f64::from_bits(((e + 1023) as u64) << 52)
+    } else if e >= -1074 {
+        f64::from_bits(1u64 << (e + 1074))
+    } else {
+        0.0
+    }
+}
+
+/// Smallest stored exponent `e` with `w ≤ 2^e` (safe-side under `log2`
+/// rounding). Non-finite weights get `i16::MAX` (infinite ceiling —
+/// always read). A weight of `0.0` can only come from `exp()`
+/// *underflow* — the real weight is positive, just below the smallest
+/// subnormal — so it is certified at `2^-1074`, **not** zero: a zero
+/// ceiling could never grow back through commit-time bumps and would skip
+/// the example forever even after its true weight recovered.
+pub fn exp_ceiling(w: f64) -> i16 {
+    if !w.is_finite() {
+        return i16::MAX;
+    }
+    if w <= 0.0 {
+        return -1074;
+    }
+    let mut e = w.log2().ceil() as i32;
+    // log2 is not correctly rounded — certify by construction
+    while pow2(e) < w {
+        e += 1;
+    }
+    e.clamp(i16::MIN as i32, i16::MAX as i32) as i16
+}
+
+/// The certified ceiling value `2^e`.
+pub fn ceiling_value(e: i16) -> f64 {
+    pow2(e as i32)
+}
+
+/// Layout stratum for a ceiling exponent — the same bucket
+/// [`crate::data::strata::bucket_of`] assigns the weights it certifies
+/// (`w ∈ (2^(e-1), 2^e]` has `⌊log₂ w⌋ = e−1` except at the boundary,
+/// which only shifts locality, never contents).
+pub fn stratum_of_exp(e: i16) -> u8 {
+    let k = e as i64 - 1 + (NUM_STRATA as i64) / 2;
+    k.clamp(0, NUM_STRATA as i64 - 1) as u8
+}
+
+fn alpha_mass(m: &StrongRule) -> f64 {
+    m.alphas().iter().map(|&a| a.abs() as f64).sum()
+}
+
+/// Upper bound on `|s_model(x) − s_anchor(x)|` for every row `x`,
+/// including the `f32` rounding of the score accumulation.
+///
+/// When `model` extends `anchor` the scores share the prefix fold
+/// exactly, so the ideal bound is the suffix alpha mass; otherwise the
+/// triangle inequality gives the mass sum. Either way a small guard term
+/// covers per-step `f32` rounding (each partial sum is bounded by the
+/// total mass; `1e-6` dwarfs the `f32` epsilon per step).
+pub fn drift_bound(model: &StrongRule, anchor: &StrongRule) -> f64 {
+    let d = if model.extends(anchor) {
+        model.alphas()[anchor.len()..]
+            .iter()
+            .map(|&a| a.abs() as f64)
+            .sum()
+    } else {
+        alpha_mass(model) + alpha_mass(anchor)
+    };
+    let mass = alpha_mass(model) + alpha_mass(anchor);
+    d + (model.len().max(anchor.len()) as f64 + 1.0) * 1e-6 * (mass + 1.0)
+}
+
+/// Exponent increment certifying a weight inflation of `e^d`:
+/// `ceil(d·log₂e)` nudged up past `ceil`'s own rounding. Saturates into
+/// `i16` (saturated ceilings read forever — safe).
+pub fn exp_bump(d: f64) -> i16 {
+    let b = (d.max(0.0) * std::f64::consts::LOG2_E + 1e-9).ceil();
+    b.min(i16::MAX as f64) as i16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Stump;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pow2_exact_at_extremes() {
+        assert_eq!(pow2(0), 1.0);
+        assert_eq!(pow2(10), 1024.0);
+        assert_eq!(pow2(-1), 0.5);
+        assert_eq!(pow2(1023), f64::MAX / (2.0 - f64::EPSILON)); // 2^1023
+        assert_eq!(pow2(1024), f64::INFINITY);
+        assert_eq!(pow2(-1074), f64::from_bits(1)); // min subnormal
+        assert_eq!(pow2(-1075), 0.0);
+    }
+
+    #[test]
+    fn exp_ceiling_always_certifies() {
+        // W = 2^exp_ceiling(w) must satisfy W ≥ w for every representable w
+        let mut rng = Rng::new(99);
+        for _ in 0..20_000 {
+            // span the full magnitude range, including subnormals
+            let mag = (rng.f64() - 0.5) * 2200.0;
+            let w = rng.f64().max(1e-12) * mag.exp2();
+            let e = exp_ceiling(w);
+            assert!(
+                ceiling_value(e) >= w,
+                "ceiling 2^{e} < w={w:e}"
+            );
+        }
+        // exact powers of two certify themselves (no wasted doubling)
+        for k in [-1074i32, -600, -1, 0, 1, 600, 1023] {
+            let w = pow2(k);
+            assert_eq!(exp_ceiling(w) as i32, k, "w=2^{k}");
+        }
+    }
+
+    #[test]
+    fn exp_ceiling_degenerate_weights() {
+        assert_eq!(exp_ceiling(f64::NAN), i16::MAX);
+        assert_eq!(exp_ceiling(f64::INFINITY), i16::MAX);
+        assert_eq!(ceiling_value(i16::MAX), f64::INFINITY);
+        // exp-underflowed weights certify at the subnormal floor, never 0:
+        // the ceiling must stay recoverable through commit-time bumps
+        assert_eq!(exp_ceiling(0.0), -1074);
+        assert!(ceiling_value(exp_ceiling(0.0)) > 0.0);
+        assert_eq!(exp_ceiling((-1000.0f64).exp()), -1074); // true underflow
+        assert_eq!(exp_ceiling(-1.0), -1074); // defensive: weights are ≥ 0
+        assert!(ceiling_value(exp_ceiling(f64::MIN_POSITIVE)) >= f64::MIN_POSITIVE);
+    }
+
+    #[test]
+    fn stratum_matches_bucket_of() {
+        use crate::data::strata::bucket_of;
+        // for weights strictly inside an exponent interval the layout
+        // stratum equals the StratifiedStore bucket
+        for k in [-20i32, -3, 0, 2, 17] {
+            let w = pow2(k) * 1.5; // in (2^k, 2^(k+1))
+            assert_eq!(stratum_of_exp(exp_ceiling(w)), bucket_of(w));
+        }
+        // saturated exponents clamp into the end strata
+        assert_eq!(stratum_of_exp(i16::MIN), 0);
+        assert_eq!(stratum_of_exp(i16::MAX), NUM_STRATA as u8 - 1);
+    }
+
+    #[test]
+    fn drift_bound_covers_computed_weights() {
+        // the certificate must hold for the f32-accumulated scores the
+        // sampler actually computes: w_model ≤ w_anchor · e^drift
+        let mut rng = Rng::new(5);
+        let mut anchor = StrongRule::new();
+        for k in 0..6 {
+            anchor.push(Stump::new(k % 3, rng.f64() as f32 - 0.5, 1.0), 0.3 + k as f32 * 0.1);
+        }
+        let mut model = anchor.clone();
+        for k in 0..4 {
+            model.push(Stump::new(k % 3, rng.f64() as f32 - 0.5, -1.0), 0.2 + k as f32 * 0.05);
+        }
+        let d = drift_bound(&model, &anchor);
+        let infl = d.exp();
+        for _ in 0..2000 {
+            let row = [rng.f64() as f32 - 0.5, rng.f64() as f32 - 0.5, rng.f64() as f32 - 0.5];
+            for label in [1.0f32, -1.0] {
+                let wa = (-(label as f64) * anchor.score(&row) as f64).exp();
+                let wm = (-(label as f64) * model.score(&row) as f64).exp();
+                assert!(wm <= wa * infl, "wm={wm} wa={wa} infl={infl}");
+                // and the commit-time exponent bump certifies the same move
+                let e = exp_ceiling(wa);
+                let bumped = e.saturating_add(exp_bump(d));
+                assert!(ceiling_value(bumped) >= wm);
+            }
+        }
+        // disjoint models fall back to the mass-sum bound
+        let mut other = StrongRule::new();
+        other.push(Stump::new(0, 0.0, 1.0), 2.0);
+        assert!(!other.extends(&anchor) || anchor.is_empty());
+        let d2 = drift_bound(&other, &anchor);
+        assert!(d2 >= 2.0);
+    }
+
+    #[test]
+    fn exp_bump_is_safe_side() {
+        assert!(exp_bump(0.0) >= 0);
+        assert_eq!(exp_bump(f64::ln(2.0)), 1); // e^ln2 = 2 → one doubling
+        assert!(exp_bump(10.0) as f64 >= 10.0 * std::f64::consts::LOG2_E);
+        assert_eq!(exp_bump(1e9), i16::MAX); // saturates, never wraps
+    }
+}

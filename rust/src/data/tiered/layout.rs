@@ -1,0 +1,98 @@
+//! Tier layout planning: which weight strata live in memory and which
+//! spill to chunk files.
+//!
+//! Strata are served heaviest-first (the mostly-accepted examples), so
+//! residency buys the most where acceptance is densest: a resident heavy
+//! stratum costs no I/O at all, while the light spilled tail is where the
+//! certified-skip draw (see [`super::draw`]) avoids most reads anyway.
+//! Residency is all-or-nothing per stratum — chunk files stay homogeneous
+//! and the plan is a pure function of the stratum histogram, which keeps
+//! re-partition decisions deterministic and testable.
+
+use crate::data::strata::NUM_STRATA;
+
+/// A residency plan over the non-empty strata.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TierPlan {
+    /// non-empty strata in serving order (heaviest first)
+    pub order: Vec<u8>,
+    /// aligned with `order`: does the stratum stay memory-resident?
+    pub resident: Vec<bool>,
+}
+
+impl TierPlan {
+    /// Greedy heaviest-first plan: walk strata from heaviest to lightest
+    /// and mark each resident when its bytes still fit the remaining
+    /// budget (lighter strata may still fit after a heavy one did not —
+    /// unused budget is never stranded).
+    pub fn plan(counts: &[usize; NUM_STRATA], record_bytes: u64, budget_bytes: u64) -> TierPlan {
+        let mut order = Vec::new();
+        let mut resident = Vec::new();
+        let mut remaining = budget_bytes;
+        for k in (0..NUM_STRATA).rev() {
+            if counts[k] == 0 {
+                continue;
+            }
+            let bytes = counts[k] as u64 * record_bytes;
+            let fits = bytes <= remaining;
+            if fits {
+                remaining -= bytes;
+            }
+            order.push(k as u8);
+            resident.push(fits);
+        }
+        TierPlan { order, resident }
+    }
+
+    /// Number of resident strata in the plan.
+    pub fn resident_strata(&self) -> usize {
+        self.resident.iter().filter(|&&r| r).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts(pairs: &[(usize, usize)]) -> [usize; NUM_STRATA] {
+        let mut c = [0usize; NUM_STRATA];
+        for &(k, n) in pairs {
+            c[k] = n;
+        }
+        c
+    }
+
+    #[test]
+    fn everything_fits() {
+        let c = counts(&[(10, 5), (20, 7)]);
+        let p = TierPlan::plan(&c, 100, 10_000);
+        assert_eq!(p.order, vec![20, 10]); // heaviest first
+        assert_eq!(p.resident, vec![true, true]);
+    }
+
+    #[test]
+    fn zero_budget_spills_everything() {
+        let c = counts(&[(16, 100)]);
+        let p = TierPlan::plan(&c, 100, 0);
+        assert_eq!(p.order, vec![16]);
+        assert_eq!(p.resident, vec![false]);
+        assert_eq!(p.resident_strata(), 0);
+    }
+
+    #[test]
+    fn partial_budget_prefers_heavy_but_backfills() {
+        // heavy stratum too big for the budget; two lighter ones fit
+        let c = counts(&[(30, 1000), (20, 4), (10, 5)]);
+        let p = TierPlan::plan(&c, 100, 1_000);
+        assert_eq!(p.order, vec![30, 20, 10]);
+        // 1000*100 > 1000 → spilled; 4*100 then 5*100 both fit
+        assert_eq!(p.resident, vec![false, true, true]);
+        assert_eq!(p.resident_strata(), 2);
+    }
+
+    #[test]
+    fn empty_strata_omitted() {
+        let p = TierPlan::plan(&counts(&[]), 100, 100);
+        assert!(p.order.is_empty());
+    }
+}

@@ -1,0 +1,103 @@
+//! Out-of-core tiered data plane: train on stores far bigger than RAM
+//! (DESIGN.md §11).
+//!
+//! [`crate::data::StratifiedStore`] keeps the whole store's bytes behind a
+//! single sequential cursor and *models* the off-memory tier with a
+//! token-bucket throttle ([`crate::data::IoThrottle`]) — reads are
+//! re-priced, never avoided. This module replaces that simulation with a
+//! real tiered layout:
+//!
+//! * **Tier layout** ([`layout`]): examples are partitioned by weight
+//!   stratum (the same `⌊log₂ w⌋` buckets as
+//!   [`crate::data::strata::bucket_of`]). The heaviest strata — the
+//!   mostly-*accepted* examples — stay memory-resident inside a byte
+//!   budget; the light, mostly-rejected tail spills to per-stratum chunk
+//!   files ([`chunkfmt`]).
+//! * **Exactness-preserving draw** ([`draw`]): the background build's
+//!   acceptance coin for example `i` is a pure function of
+//!   `(seed, version, attempt, i)` and rejection is monotone in the
+//!   example's fresh weight, so a *certified per-example weight ceiling*
+//!   lets the store prove "this example will be rejected" **before
+//!   reading it**. Per-stratum acceptance survivors are computed up
+//!   front; certainly-rejected examples are never read at all — not just
+//!   re-priced.
+//! * **Readahead** ([`readahead`]): a per-build prefetch thread walks the
+//!   survivor chunk schedule ahead of the builder, so the builder consumes
+//!   warm buffers while the next chunk is in flight, and aborts with the
+//!   same epoch-invalidation discipline as the builder itself.
+//!
+//! The store tracks [`TieredCounters`] (spills, readahead hits/misses,
+//! rows read/skipped); the worker surfaces them through the admin
+//! `metrics.snapshot` events (`spill`, `readahead_hit`, `readahead_miss`).
+//!
+//! The sampler-side pass that drives all of this — and the proof that its
+//! output is byte-identical to the in-memory path — lives in
+//! [`crate::sampler::build_tiered`].
+
+#![warn(missing_docs)]
+
+pub mod chunkfmt;
+pub mod draw;
+pub mod layout;
+pub mod readahead;
+mod store;
+
+pub use store::{PassStats, TieredStore};
+
+/// Configuration for the tiered store.
+#[derive(Debug, Clone, Copy)]
+pub struct TieredConfig {
+    /// Byte budget for memory-resident data (resident strata plus the
+    /// pinned probe prefix). The index (a few bytes per example) is not
+    /// charged against it.
+    pub memory_budget: u64,
+    /// Rows per readahead chunk: the granularity of prefetch requests and
+    /// of invalidation polling inside a build pass.
+    pub chunk_rows: usize,
+    /// Rows of the store prefix pinned in memory for the sampler's
+    /// deterministic probe (scale calibration). Must cover the sampler's
+    /// `probe` setting or probe reads fall back to the base file.
+    pub probe_rows: usize,
+    /// Chunks the readahead thread may buffer ahead of the builder.
+    pub readahead_depth: usize,
+    /// Fraction of examples whose stratum may disagree with the layout
+    /// before a commit triggers a full re-partition (spill rewrite).
+    pub relayout_threshold: f64,
+}
+
+impl Default for TieredConfig {
+    fn default() -> Self {
+        TieredConfig {
+            memory_budget: 64 << 20,
+            chunk_rows: 1024,
+            probe_rows: 4096,
+            readahead_depth: 4,
+            relayout_threshold: 0.25,
+        }
+    }
+}
+
+/// Monotone activity counters for one [`TieredStore`].
+///
+/// Deltas between builds feed the `spill` / `readahead_hit` /
+/// `readahead_miss` events the worker records (OPERATIONS.md §6).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TieredCounters {
+    /// examples written to spill chunk files (re-partitions)
+    pub spilled_rows: u64,
+    /// bytes written to spill chunk files
+    pub spill_bytes: u64,
+    /// full re-partitions performed
+    pub relayouts: u64,
+    /// prefetched chunks that were already buffered when the builder
+    /// asked for them
+    pub readahead_hits: u64,
+    /// chunks the builder had to wait for
+    pub readahead_misses: u64,
+    /// examples served from disk chunks
+    pub rows_read: u64,
+    /// examples skipped without any read (certified rejected)
+    pub rows_skipped: u64,
+    /// bytes read from spill/base chunks during build passes
+    pub bytes_read: u64,
+}

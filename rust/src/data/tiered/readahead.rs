@@ -1,0 +1,208 @@
+//! Asynchronous chunk prefetch behind the build pass.
+//!
+//! The build pass knows its entire read schedule up front (the survivor
+//! spans computed by the exactness-preserving draw — see [`super::draw`]),
+//! so prefetch is a straight-line producer: one thread walks the schedule
+//! in serving order and pushes raw span buffers into a bounded channel
+//! (`readahead_depth` chunks). The consumer counts a **hit** when the
+//! next chunk is already buffered and a **miss** when it has to wait —
+//! the `readahead_hit` / `readahead_miss` counters surfaced by the admin
+//! `metrics.snapshot`.
+//!
+//! Cancellation mirrors the builder's epoch-invalidation discipline: the
+//! consumer flips an atomic flag (on model adoption the whole build pass
+//! aborts), drains the channel so a blocked send completes, and joins.
+//! Dropping a [`Readahead`] mid-schedule is therefore always safe and
+//! prompt.
+
+use std::io;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::chunkfmt::ChunkSource;
+
+/// One prefetch request: a contiguous slot span of one source file.
+#[derive(Debug, Clone, Copy)]
+pub struct ReadReq {
+    /// index into the source list handed to [`Readahead::spawn`]
+    pub source: usize,
+    /// first record slot of the span
+    pub slot: usize,
+    /// records in the span
+    pub count: usize,
+}
+
+/// Handle to the prefetch thread; yields span buffers in schedule order.
+pub struct Readahead {
+    rx: Receiver<io::Result<Vec<u8>>>,
+    cancel: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl Readahead {
+    /// Start prefetching `schedule` (requests indexing into `sources`),
+    /// keeping at most `depth` chunks buffered ahead of the consumer.
+    pub fn spawn(
+        sources: Vec<ChunkSource>,
+        schedule: Vec<ReadReq>,
+        depth: usize,
+    ) -> io::Result<Readahead> {
+        let cancel = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = sync_channel::<io::Result<Vec<u8>>>(depth.max(1));
+        let tcancel = Arc::clone(&cancel);
+        let thread = std::thread::Builder::new()
+            .name("readahead".into())
+            .spawn(move || {
+                let mut files: Vec<Option<std::fs::File>> =
+                    sources.iter().map(|_| None).collect();
+                for req in schedule {
+                    if tcancel.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let src = &sources[req.source];
+                    let res = (|| {
+                        if files[req.source].is_none() {
+                            files[req.source] = Some(src.open_file()?);
+                        }
+                        src.read_span(files[req.source].as_mut().unwrap(), req.slot, req.count)
+                    })();
+                    let failed = res.is_err();
+                    // send failure = consumer gone; either way stop after
+                    // surfacing the first I/O error
+                    if tx.send(res).is_err() || failed {
+                        return;
+                    }
+                }
+            })?;
+        Ok(Readahead {
+            rx,
+            cancel,
+            thread: Some(thread),
+            hits: 0,
+            misses: 0,
+        })
+    }
+
+    /// Next span buffer in schedule order (blocking), with hit/miss
+    /// accounting.
+    pub fn next(&mut self) -> io::Result<Vec<u8>> {
+        match self.rx.try_recv() {
+            Ok(res) => {
+                self.hits += 1;
+                res
+            }
+            Err(TryRecvError::Empty) => {
+                self.misses += 1;
+                match self.rx.recv() {
+                    Ok(res) => res,
+                    Err(_) => Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "readahead thread ended before the schedule",
+                    )),
+                }
+            }
+            Err(TryRecvError::Disconnected) => Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "readahead thread ended before the schedule",
+            )),
+        }
+    }
+
+    /// Chunks that were already buffered when asked for.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Chunks the consumer had to wait for.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+}
+
+impl Drop for Readahead {
+    fn drop(&mut self) {
+        self.cancel.store(true, Ordering::Relaxed);
+        // unblock a producer stuck on a full channel, then join
+        while self.rx.recv().is_ok() {}
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tiered::chunkfmt::{decode_row_into, ChunkWriter};
+
+    fn chunk_file(name: &str, n: usize) -> ChunkSource {
+        let dir = std::env::temp_dir().join("sparrow_readahead_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let mut w = ChunkWriter::create(&path, 2).unwrap();
+        for i in 0..n {
+            w.write_row(1.0, &[i as f32, (i * i) as f32]).unwrap();
+        }
+        w.finish().unwrap();
+        ChunkSource::open_spill(&path).unwrap()
+    }
+
+    #[test]
+    fn yields_schedule_in_order() {
+        let src = chunk_file("order.spch", 20);
+        let schedule = vec![
+            ReadReq { source: 0, slot: 10, count: 4 },
+            ReadReq { source: 0, slot: 0, count: 2 },
+            ReadReq { source: 0, slot: 17, count: 3 },
+        ];
+        let mut ra = Readahead::spawn(vec![src], schedule.clone(), 2).unwrap();
+        let mut row = [0f32; 2];
+        for req in &schedule {
+            let buf = ra.next().unwrap();
+            assert_eq!(buf.len(), req.count * 12);
+            decode_row_into(&buf, 0, 2, &mut row);
+            assert_eq!(row[0] as usize, req.slot);
+        }
+        assert_eq!(ra.hits() + ra.misses(), 3);
+    }
+
+    #[test]
+    fn buffered_chunks_count_as_hits() {
+        let src = chunk_file("hits.spch", 8);
+        let schedule: Vec<ReadReq> = (0..4)
+            .map(|k| ReadReq { source: 0, slot: k * 2, count: 2 })
+            .collect();
+        let mut ra = Readahead::spawn(vec![src], schedule, 8).unwrap();
+        // give the producer time to fill the (deep) buffer
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        for _ in 0..4 {
+            ra.next().unwrap();
+        }
+        assert!(ra.hits() >= 3, "hits={} misses={}", ra.hits(), ra.misses());
+    }
+
+    #[test]
+    fn drop_mid_schedule_cancels_promptly() {
+        let src = chunk_file("cancel.spch", 1000);
+        // shallow channel: the producer will block on send
+        let schedule: Vec<ReadReq> = (0..500)
+            .map(|k| ReadReq { source: 0, slot: k * 2, count: 2 })
+            .collect();
+        let mut ra = Readahead::spawn(vec![src], schedule, 1).unwrap();
+        let _ = ra.next().unwrap();
+        drop(ra); // must not hang
+    }
+
+    #[test]
+    fn missing_file_surfaces_error() {
+        let src = chunk_file("gone.spch", 4);
+        std::fs::remove_file(src.path()).unwrap();
+        let schedule = vec![ReadReq { source: 0, slot: 0, count: 2 }];
+        let mut ra = Readahead::spawn(vec![src], schedule, 1).unwrap();
+        assert!(ra.next().is_err());
+    }
+}

@@ -1,0 +1,822 @@
+//! [`TieredStore`]: the chunk-file-backed store behind the out-of-core
+//! build pass.
+//!
+//! Data placement (see [`super::layout`]): each example belongs to one
+//! weight-stratum **group**; a group is either memory-resident (a
+//! [`DataBlock`] in slot order) or spilled (a chunk file in slot order,
+//! [`super::chunkfmt`]). The initial layout is a single group backed by
+//! the base `.sprw` file itself — opening a tiered store copies nothing.
+//! Commits re-certify the per-example weight ceilings; when enough
+//! examples have migrated strata the store re-partitions (a sequential
+//! merge pass that rewrites resident blocks and spill files).
+//!
+//! The build pass ([`TieredStore::build_pass`]) is where the tentpole
+//! properties live:
+//!
+//! 1. survivor spans for every spilled chunk are computed **up front**
+//!    from the certified ceilings (`keep`), so certainly-rejected
+//!    examples are never read;
+//! 2. a [`super::readahead`] thread prefetches those spans while the
+//!    resident (heavy) groups are being served, hiding disk latency
+//!    behind compute;
+//! 3. examples stream out of raw chunk buffers one decoded `f32` row at
+//!    a time — no spilled group is ever materialized whole.
+//!
+//! The store never decides acceptance itself: `keep` and `visit` belong
+//! to the sampler (see `sampler::build_tiered`), keeping the strata
+//! invariant of [`crate::data::strata`] — placement affects cost, never
+//! contents.
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::data::binfmt::Reader;
+use crate::data::strata::NUM_STRATA;
+use crate::data::tiered::chunkfmt::{decode_row_into, ChunkSource, ChunkWriter};
+use crate::data::tiered::draw::{ceiling_value, drift_bound, exp_bump, exp_ceiling, stratum_of_exp};
+use crate::data::tiered::layout::TierPlan;
+use crate::data::tiered::readahead::{ReadReq, Readahead};
+use crate::data::tiered::{TieredConfig, TieredCounters};
+use crate::data::DataBlock;
+use crate::model::StrongRule;
+
+/// Sentinel for "not observed by the in-flight build".
+const EXP_UNSEEN: i16 = i16::MIN;
+
+/// Distinguishes concurrently-opened stores' spill directories.
+static WORKDIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Statistics of the last completed (or aborted) build pass.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PassStats {
+    /// did the pass run to completion (false = invalidated)?
+    pub completed: bool,
+    /// examples served to the sampler (resident + disk)
+    pub rows_visited: u64,
+    /// examples decoded from disk chunks
+    pub rows_read_disk: u64,
+    /// examples skipped with zero bytes served (certified rejected)
+    pub rows_skipped: u64,
+    /// chunk bytes fetched (includes span slack around survivors)
+    pub bytes_read: u64,
+}
+
+enum GroupData {
+    /// resident rows, slot order
+    Mem(DataBlock),
+    /// spilled rows (or the base store for the initial layout), slot order
+    File(ChunkSource),
+}
+
+struct Group {
+    stratum: u8,
+    /// global example index per slot, ascending
+    rows: Vec<u32>,
+    data: GroupData,
+}
+
+/// Chunk-file-backed tiered store with certified per-example weight
+/// ceilings. See the module docs for the layout and the build-pass
+/// contract.
+pub struct TieredStore {
+    base: ChunkSource,
+    workdir: PathBuf,
+    cfg: TieredConfig,
+    n: usize,
+    f: usize,
+    /// pinned prefix for the sampler's deterministic probe
+    probe: DataBlock,
+    /// certified: `w_anchor(example i) ≤ 2^ceil_exp[i]`
+    ceil_exp: Vec<i16>,
+    /// the model the ceilings certify against
+    anchor: StrongRule,
+    /// serving order: resident groups first, then spilled, heaviest first
+    groups: Vec<Group>,
+    layout_gen: u64,
+    resident_rows: usize,
+    pending_exp: Vec<i16>,
+    building: bool,
+    last_pass: PassStats,
+    counters: TieredCounters,
+}
+
+impl TieredStore {
+    /// Open the base store at `path`. No data is copied: the initial
+    /// layout is one group backed by the base file (or one resident
+    /// block, when the whole store fits the memory budget).
+    pub fn open(path: &Path, cfg: TieredConfig) -> io::Result<TieredStore> {
+        let base = ChunkSource::open_base(path)?;
+        let n = base.n;
+        let f = base.f;
+        let record_bytes = base.record_bytes();
+
+        let pin = cfg.probe_rows.min(n);
+        let probe = if pin > 0 {
+            Reader::open(path)?.read_block(pin, false)?
+        } else {
+            DataBlock::empty(f)
+        };
+
+        let name = path
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "store".into());
+        let workdir = path.with_file_name(format!(
+            "{name}.tiered.{}.{}",
+            std::process::id(),
+            WORKDIR_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&workdir)?;
+
+        // every example starts certified at weight 1 under the empty
+        // model: exp(−y·0) = 1 ≤ 2^0 exactly
+        let e0 = exp_ceiling(1.0);
+        let ceil_exp = vec![e0; n];
+        let mut groups = Vec::new();
+        let mut resident_rows = 0;
+        if n > 0 {
+            let stratum = stratum_of_exp(e0);
+            let budget = cfg
+                .memory_budget
+                .saturating_sub(probe.n as u64 * record_bytes);
+            let rows: Vec<u32> = (0..n as u32).collect();
+            let data = if (n as u64) * record_bytes <= budget {
+                resident_rows = n;
+                GroupData::Mem(Reader::open(path)?.read_block(n, false)?)
+            } else {
+                GroupData::File(base.clone())
+            };
+            groups.push(Group {
+                stratum,
+                rows,
+                data,
+            });
+        }
+
+        Ok(TieredStore {
+            base,
+            workdir,
+            cfg,
+            n,
+            f,
+            probe,
+            ceil_exp,
+            anchor: StrongRule::new(),
+            groups,
+            layout_gen: 0,
+            resident_rows,
+            pending_exp: Vec::new(),
+            building: false,
+            last_pass: PassStats::default(),
+            counters: TieredCounters::default(),
+        })
+    }
+
+    /// Number of examples in the store.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// `true` when the store holds no examples.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Number of features per example.
+    pub fn num_features(&self) -> usize {
+        self.f
+    }
+
+    /// The model the certified ceilings hold against (the last committed
+    /// build's model; empty at open).
+    pub fn anchor(&self) -> &StrongRule {
+        &self.anchor
+    }
+
+    /// Certified weight ceiling of example `gi` under the anchor model.
+    pub fn ceiling(&self, gi: usize) -> f64 {
+        ceiling_value(self.ceil_exp[gi])
+    }
+
+    /// Fraction of examples currently memory-resident.
+    pub fn resident_fraction(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.resident_rows as f64 / self.n as f64
+    }
+
+    /// Activity counters (monotone; the worker logs deltas).
+    pub fn counters(&self) -> TieredCounters {
+        self.counters
+    }
+
+    /// Statistics of the most recent build pass.
+    pub fn last_pass(&self) -> PassStats {
+        self.last_pass
+    }
+
+    /// The deterministic probe prefix: records `0..probe_n` in store
+    /// order, exactly what the in-memory pass reads first. Served from
+    /// the pinned prefix when it covers `probe_n`, else from the base
+    /// file.
+    pub fn probe_block(&self, probe_n: usize) -> io::Result<DataBlock> {
+        let take = probe_n.min(self.n);
+        if take <= self.probe.n {
+            let mut b = DataBlock::empty(self.f);
+            for i in 0..take {
+                b.push(self.probe.row(i), self.probe.label(i));
+            }
+            return Ok(b);
+        }
+        Reader::open(self.base.path())?.read_block(take, false)
+    }
+
+    /// Begin a build pass: open the in-flight ceiling buffer. Mirrors
+    /// [`crate::data::StratifiedStore::begin_build`] — only
+    /// [`TieredStore::commit_build`] makes observations visible.
+    pub fn begin_build(&mut self) {
+        assert!(!self.building, "begin_build while building");
+        self.pending_exp = vec![EXP_UNSEEN; self.n];
+        self.building = true;
+        self.last_pass = PassStats::default();
+    }
+
+    /// One exactness-preserving pass over every example, heaviest strata
+    /// first (resident groups, then spilled groups behind readahead).
+    ///
+    /// * `keep(gi, ceiling)` — must return `false` **only** when the
+    ///   caller can prove example `gi` is rejected given that its fresh
+    ///   weight is at most `ceiling · e^d` for its drift allowance `d`
+    ///   (see [`super::draw`]); such examples are never read.
+    /// * `visit(gi, label, row)` — called for every kept example, returns
+    ///   the fresh weight (recorded into the in-flight ceiling buffer).
+    /// * `invalidated()` — polled between chunks; `true` aborts the pass
+    ///   (the caller should then [`TieredStore::abort_build`]).
+    ///
+    /// Returns `Ok(true)` on completion, `Ok(false)` when invalidated.
+    pub fn build_pass(
+        &mut self,
+        keep: &mut dyn FnMut(usize, f64) -> bool,
+        visit: &mut dyn FnMut(usize, f32, &[f32]) -> f64,
+        invalidated: &mut dyn FnMut() -> bool,
+    ) -> io::Result<bool> {
+        assert!(self.building, "build_pass outside begin_build/commit");
+        let chunk_rows = self.cfg.chunk_rows.max(1);
+
+        // ---- plan spilled survivors up front (no I/O: ceilings + coins
+        // are in memory) and start the readahead behind them ------------
+        let mut sources: Vec<ChunkSource> = Vec::new();
+        let mut schedule: Vec<ReadReq> = Vec::new();
+        // per request: (group index, span start slot, surviving slots)
+        let mut spans: Vec<(usize, usize, Vec<u32>)> = Vec::new();
+        for (g_idx, group) in self.groups.iter().enumerate() {
+            let src = match &group.data {
+                GroupData::File(src) => src,
+                GroupData::Mem(_) => continue,
+            };
+            let src_idx = sources.len();
+            sources.push(src.clone());
+            let slots = group.rows.len();
+            let mut chunk_start = 0;
+            while chunk_start < slots {
+                let chunk_end = (chunk_start + chunk_rows).min(slots);
+                let surv: Vec<u32> = (chunk_start..chunk_end)
+                    .filter(|&slot| {
+                        let gi = group.rows[slot] as usize;
+                        keep(gi, ceiling_value(self.ceil_exp[gi]))
+                    })
+                    .map(|slot| slot as u32)
+                    .collect();
+                let skipped = (chunk_end - chunk_start - surv.len()) as u64;
+                self.counters.rows_skipped += skipped;
+                self.last_pass.rows_skipped += skipped;
+                if !surv.is_empty() {
+                    let lo = surv[0] as usize;
+                    let hi = *surv.last().unwrap() as usize;
+                    schedule.push(ReadReq {
+                        source: src_idx,
+                        slot: lo,
+                        count: hi - lo + 1,
+                    });
+                    spans.push((g_idx, lo, surv));
+                }
+                chunk_start = chunk_end;
+            }
+        }
+        let mut ra = if schedule.is_empty() {
+            None
+        } else {
+            Some(Readahead::spawn(
+                sources,
+                schedule,
+                self.cfg.readahead_depth,
+            )?)
+        };
+
+        // ---- serve resident (heavy) groups while the readahead warms ---
+        for g_idx in 0..self.groups.len() {
+            let group = &self.groups[g_idx];
+            let block = match &group.data {
+                GroupData::Mem(b) => b,
+                GroupData::File(_) => continue,
+            };
+            for slot in 0..group.rows.len() {
+                if slot % chunk_rows == 0 && invalidated() {
+                    // keep the prefetch counters, then drop `ra` (which
+                    // cancels and joins the thread)
+                    if let Some(r) = &ra {
+                        self.counters.readahead_hits += r.hits();
+                        self.counters.readahead_misses += r.misses();
+                    }
+                    return Ok(false);
+                }
+                let gi = group.rows[slot] as usize;
+                if keep(gi, ceiling_value(self.ceil_exp[gi])) {
+                    let w = visit(gi, block.label(slot), block.row(slot));
+                    self.pending_exp[gi] = exp_ceiling(w);
+                    self.last_pass.rows_visited += 1;
+                } else {
+                    self.counters.rows_skipped += 1;
+                    self.last_pass.rows_skipped += 1;
+                }
+            }
+        }
+
+        // ---- consume the prefetched spilled spans ----------------------
+        if let Some(mut r) = ra.take() {
+            let mut row = vec![0f32; self.f];
+            for (g_idx, lo, surv) in &spans {
+                if invalidated() {
+                    self.counters.readahead_hits += r.hits();
+                    self.counters.readahead_misses += r.misses();
+                    return Ok(false);
+                }
+                let buf = match r.next() {
+                    Ok(b) => b,
+                    Err(e) => {
+                        self.counters.readahead_hits += r.hits();
+                        self.counters.readahead_misses += r.misses();
+                        return Err(e);
+                    }
+                };
+                self.counters.bytes_read += buf.len() as u64;
+                self.last_pass.bytes_read += buf.len() as u64;
+                let group = &self.groups[*g_idx];
+                for &slot in surv {
+                    let gi = group.rows[slot as usize] as usize;
+                    let label = decode_row_into(&buf, slot as usize - lo, self.f, &mut row);
+                    let w = visit(gi, label, &row);
+                    self.pending_exp[gi] = exp_ceiling(w);
+                    self.counters.rows_read += 1;
+                    self.last_pass.rows_read_disk += 1;
+                    self.last_pass.rows_visited += 1;
+                }
+            }
+            self.counters.readahead_hits += r.hits();
+            self.counters.readahead_misses += r.misses();
+        }
+        self.last_pass.completed = true;
+        Ok(true)
+    }
+
+    /// Commit the in-flight build: install exact ceilings for visited
+    /// examples, inflate unvisited ones by the drift allowance of `model`
+    /// vs the old anchor, re-anchor on `model`, and re-partition when the
+    /// layout has drifted past the configured threshold.
+    pub fn commit_build(&mut self, model: &StrongRule) -> io::Result<()> {
+        assert!(self.building);
+        let bump = exp_bump(drift_bound(model, &self.anchor));
+        let pending = std::mem::take(&mut self.pending_exp);
+        for (e, &p) in self.ceil_exp.iter_mut().zip(&pending) {
+            *e = if p == EXP_UNSEEN {
+                e.saturating_add(bump)
+            } else {
+                p
+            };
+        }
+        self.anchor = model.clone();
+        self.building = false;
+
+        if self.n > 0 {
+            let mut drift = 0usize;
+            for group in &self.groups {
+                for &gi in &group.rows {
+                    if stratum_of_exp(self.ceil_exp[gi as usize]) != group.stratum {
+                        drift += 1;
+                    }
+                }
+            }
+            if drift as f64 / self.n as f64 > self.cfg.relayout_threshold {
+                self.relayout()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Abort the in-flight build: the committed ceilings, anchor, and
+    /// layout are untouched.
+    pub fn abort_build(&mut self) {
+        self.pending_exp = Vec::new();
+        self.building = false;
+    }
+
+    /// Re-partition every example into its current stratum: one
+    /// sequential merge pass over the old groups, writing fresh resident
+    /// blocks and spill chunk files per [`TierPlan`].
+    fn relayout(&mut self) -> io::Result<()> {
+        let record_bytes = self.base.record_bytes();
+        let mut counts = [0usize; NUM_STRATA];
+        for &e in &self.ceil_exp {
+            counts[stratum_of_exp(e) as usize] += 1;
+        }
+        let budget = self
+            .cfg
+            .memory_budget
+            .saturating_sub(self.probe.n as u64 * record_bytes);
+        let plan = TierPlan::plan(&counts, record_bytes, budget);
+
+        enum Dest {
+            Mem(DataBlock, Vec<u32>),
+            File(ChunkWriter, Vec<u32>, PathBuf),
+        }
+        let mut dest_of = [usize::MAX; NUM_STRATA];
+        let mut dests: Vec<(u8, Dest)> = Vec::with_capacity(plan.order.len());
+        for (i, (&stratum, &resident)) in plan.order.iter().zip(&plan.resident).enumerate() {
+            dest_of[stratum as usize] = i;
+            let d = if resident {
+                Dest::Mem(DataBlock::empty(self.f), Vec::new())
+            } else {
+                let path = self
+                    .workdir
+                    .join(format!("s{stratum:02}_g{}.spch", self.layout_gen + 1));
+                Dest::File(ChunkWriter::create(&path, self.f as u32)?, Vec::new(), path)
+            };
+            dests.push((stratum, d));
+        }
+
+        // sequential merge in ascending global order: each old group's
+        // rows are ascending and the groups partition 0..n, so exactly
+        // one cursor matches each gi
+        let mut cursors = vec![0usize; self.groups.len()];
+        let mut readers: Vec<Option<SeqReader>> = Vec::with_capacity(self.groups.len());
+        for g in &self.groups {
+            readers.push(match &g.data {
+                GroupData::File(src) => Some(SeqReader::new(src.clone(), self.cfg.chunk_rows.max(1))?),
+                GroupData::Mem(_) => None,
+            });
+        }
+        let mut row = vec![0f32; self.f];
+        for gi in 0..self.n as u32 {
+            let mut src_g = usize::MAX;
+            for (k, grp) in self.groups.iter().enumerate() {
+                let c = cursors[k];
+                if c < grp.rows.len() && grp.rows[c] == gi {
+                    src_g = k;
+                    break;
+                }
+            }
+            debug_assert_ne!(src_g, usize::MAX, "groups must partition 0..n");
+            let slot = cursors[src_g];
+            cursors[src_g] += 1;
+            let label = match &self.groups[src_g].data {
+                GroupData::Mem(b) => {
+                    row.copy_from_slice(b.row(slot));
+                    b.label(slot)
+                }
+                GroupData::File(_) => {
+                    readers[src_g].as_mut().unwrap().row(slot, &mut row)?
+                }
+            };
+            let di = dest_of[stratum_of_exp(self.ceil_exp[gi as usize]) as usize];
+            match &mut dests[di].1 {
+                Dest::Mem(block, rows) => {
+                    block.push(&row, label);
+                    rows.push(gi);
+                }
+                Dest::File(w, rows, _) => {
+                    w.write_row(label, &row)?;
+                    rows.push(gi);
+                    self.counters.spilled_rows += 1;
+                    self.counters.spill_bytes += record_bytes;
+                }
+            }
+        }
+        drop(readers);
+
+        // install the new layout (resident groups first, each half
+        // heaviest-first), then drop the old generation's spill files
+        let old_paths: Vec<PathBuf> = self
+            .groups
+            .iter()
+            .filter_map(|g| match &g.data {
+                GroupData::File(src) if src.path().starts_with(&self.workdir) => {
+                    Some(src.path().to_path_buf())
+                }
+                _ => None,
+            })
+            .collect();
+        let mut resident_groups = Vec::new();
+        let mut spilled_groups = Vec::new();
+        self.resident_rows = 0;
+        for (stratum, dest) in dests {
+            match dest {
+                Dest::Mem(block, rows) => {
+                    self.resident_rows += rows.len();
+                    resident_groups.push(Group {
+                        stratum,
+                        rows,
+                        data: GroupData::Mem(block),
+                    });
+                }
+                Dest::File(w, rows, path) => {
+                    w.finish()?;
+                    spilled_groups.push(Group {
+                        stratum,
+                        rows,
+                        data: GroupData::File(ChunkSource::open_spill(&path)?),
+                    });
+                }
+            }
+        }
+        resident_groups.extend(spilled_groups);
+        self.groups = resident_groups;
+        self.layout_gen += 1;
+        self.counters.relayouts += 1;
+        for p in old_paths {
+            let _ = std::fs::remove_file(p);
+        }
+        Ok(())
+    }
+}
+
+impl Drop for TieredStore {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.workdir);
+    }
+}
+
+/// Ascending sequential slot reader over one chunk source (re-partition
+/// merge cursor): buffers `chunk_rows` records at a time.
+struct SeqReader {
+    src: ChunkSource,
+    file: std::fs::File,
+    buf: Vec<u8>,
+    buf_start: usize,
+    buf_rows: usize,
+    chunk_rows: usize,
+}
+
+impl SeqReader {
+    fn new(src: ChunkSource, chunk_rows: usize) -> io::Result<SeqReader> {
+        let file = src.open_file()?;
+        Ok(SeqReader {
+            src,
+            file,
+            buf: Vec::new(),
+            buf_start: 0,
+            buf_rows: 0,
+            chunk_rows,
+        })
+    }
+
+    fn row(&mut self, slot: usize, row: &mut [f32]) -> io::Result<f32> {
+        if slot < self.buf_start || slot >= self.buf_start + self.buf_rows {
+            let count = self.chunk_rows.min(self.src.n - slot);
+            self.buf = self.src.read_span(&mut self.file, slot, count)?;
+            self.buf_start = slot;
+            self.buf_rows = count;
+        }
+        Ok(decode_row_into(
+            &self.buf,
+            slot - self.buf_start,
+            self.src.f,
+            row,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DiskStore;
+
+    fn store_path(name: &str, n: usize, f: usize) -> PathBuf {
+        let dir = std::env::temp_dir().join("sparrow_tiered_store_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let mut b = DataBlock::empty(f);
+        for i in 0..n {
+            let row: Vec<f32> = (0..f).map(|j| (i * f + j) as f32).collect();
+            b.push(&row, if i % 2 == 0 { 1.0 } else { -1.0 });
+        }
+        DiskStore::write(&path, &b).unwrap();
+        path
+    }
+
+    fn tiny_cfg(budget: u64) -> TieredConfig {
+        TieredConfig {
+            memory_budget: budget,
+            chunk_rows: 16,
+            probe_rows: 8,
+            readahead_depth: 2,
+            relayout_threshold: 0.25,
+        }
+    }
+
+    /// Full pass keeping everything, weights from `wf`.
+    fn full_pass(s: &mut TieredStore, wf: impl Fn(usize) -> f64) -> Vec<(usize, f32, Vec<f32>)> {
+        let mut seen = Vec::new();
+        s.begin_build();
+        let ok = s
+            .build_pass(
+                &mut |_, _| true,
+                &mut |gi, label, row| {
+                    seen.push((gi, label, row.to_vec()));
+                    wf(gi)
+                },
+                &mut || false,
+            )
+            .unwrap();
+        assert!(ok);
+        seen
+    }
+
+    #[test]
+    fn open_copies_nothing_and_serves_every_row() {
+        let path = store_path("serve.sprw", 100, 3);
+        // budget far below the data: single spilled group backed by base
+        let mut s = TieredStore::open(&path, tiny_cfg(64)).unwrap();
+        assert_eq!(s.len(), 100);
+        assert_eq!(s.resident_fraction(), 0.0);
+        let mut seen = full_pass(&mut s, |_| 1.0);
+        s.commit_build(&StrongRule::new()).unwrap();
+        seen.sort_by_key(|e| e.0);
+        assert_eq!(seen.len(), 100);
+        for (gi, label, row) in seen {
+            assert_eq!(label, if gi % 2 == 0 { 1.0 } else { -1.0 });
+            assert_eq!(row[0], (gi * 3) as f32);
+        }
+    }
+
+    #[test]
+    fn small_store_goes_fully_resident() {
+        let path = store_path("resident.sprw", 50, 2);
+        let mut s = TieredStore::open(&path, tiny_cfg(1 << 20)).unwrap();
+        assert_eq!(s.resident_fraction(), 1.0);
+        let seen = full_pass(&mut s, |_| 1.0);
+        s.commit_build(&StrongRule::new()).unwrap();
+        assert_eq!(seen.len(), 50);
+    }
+
+    #[test]
+    fn certified_skips_never_visit() {
+        let path = store_path("skip.sprw", 80, 2);
+        let mut s = TieredStore::open(&path, tiny_cfg(64)).unwrap();
+        // first build: everything weight 1 except evens at 4.0
+        full_pass(&mut s, |gi| if gi % 2 == 0 { 4.0 } else { 1.0 });
+        s.commit_build(&StrongRule::new()).unwrap();
+        // second build: skip everything with ceiling ≤ 2 (the odds)
+        let mut visited = Vec::new();
+        s.begin_build();
+        let ok = s
+            .build_pass(
+                &mut |_, ceiling| ceiling > 2.0,
+                &mut |gi, _, _| {
+                    visited.push(gi);
+                    1.0
+                },
+                &mut || false,
+            )
+            .unwrap();
+        assert!(ok);
+        s.commit_build(&StrongRule::new()).unwrap();
+        visited.sort();
+        let evens: Vec<usize> = (0..80).filter(|g| g % 2 == 0).collect();
+        assert_eq!(visited, evens);
+        assert!(s.last_pass().rows_skipped >= 40);
+        assert!(s.counters().rows_skipped >= 40);
+    }
+
+    #[test]
+    fn commit_installs_ceilings_and_bumps_unseen() {
+        let path = store_path("ceil.sprw", 40, 2);
+        let mut s = TieredStore::open(&path, tiny_cfg(64)).unwrap();
+        assert_eq!(s.ceiling(0), 1.0); // weight 1 under the empty anchor
+        full_pass(&mut s, |gi| if gi < 10 { 8.0 } else { 0.25 });
+        s.commit_build(&StrongRule::new()).unwrap();
+        assert!(s.ceiling(3) >= 8.0);
+        assert!(s.ceiling(20) >= 0.25 && s.ceiling(20) <= 1.0);
+        // next build skips everything → ceilings grow, never shrink
+        let before = s.ceiling(20);
+        s.begin_build();
+        let ok = s
+            .build_pass(&mut |_, _| false, &mut |_, _, _| 1.0, &mut || false)
+            .unwrap();
+        assert!(ok);
+        s.commit_build(&StrongRule::new()).unwrap();
+        assert!(s.ceiling(20) >= before);
+    }
+
+    #[test]
+    fn abort_leaves_no_trace() {
+        let path = store_path("abort.sprw", 60, 2);
+        let mut s = TieredStore::open(&path, tiny_cfg(64)).unwrap();
+        full_pass(&mut s, |_| 1.0);
+        s.commit_build(&StrongRule::new()).unwrap();
+        let before: Vec<f64> = (0..60).map(|i| s.ceiling(i)).collect();
+        // aborted pass observes wild weights — none may stick
+        s.begin_build();
+        let mut polls = 0;
+        let ok = s
+            .build_pass(
+                &mut |_, _| true,
+                &mut |_, _, _| 1e9,
+                &mut || {
+                    polls += 1;
+                    polls > 1
+                },
+            )
+            .unwrap();
+        assert!(!ok);
+        s.abort_build();
+        let after: Vec<f64> = (0..60).map(|i| s.ceiling(i)).collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn relayout_spills_by_stratum_and_preserves_rows() {
+        let path = store_path("relayout.sprw", 90, 2);
+        // budget fits ~30 rows (record = 12 bytes) after the probe pin
+        let mut s = TieredStore::open(
+            &path,
+            TieredConfig {
+                memory_budget: 12 * 30,
+                chunk_rows: 8,
+                probe_rows: 0,
+                readahead_depth: 2,
+                relayout_threshold: 0.25,
+            },
+        )
+        .unwrap();
+        // 20 heavy, 70 light → drift from the single initial stratum
+        full_pass(&mut s, |gi| if gi < 20 { 64.0 } else { 0.01 });
+        s.commit_build(&StrongRule::new()).unwrap();
+        let c = s.counters();
+        assert_eq!(c.relayouts, 1);
+        assert!(c.spilled_rows >= 70, "light tail spilled: {c:?}");
+        assert!(s.resident_fraction() > 0.0, "heavy stratum resident");
+        // every row still served exactly once, bytes intact
+        let mut seen = full_pass(&mut s, |gi| if gi < 20 { 64.0 } else { 0.01 });
+        s.commit_build(&StrongRule::new()).unwrap();
+        seen.sort_by_key(|e| e.0);
+        assert_eq!(seen.len(), 90);
+        for (gi, _, row) in seen {
+            assert_eq!(row[1], (gi * 2 + 1) as f32);
+        }
+    }
+
+    #[test]
+    fn probe_block_matches_store_prefix() {
+        let path = store_path("probe.sprw", 30, 2);
+        let s = TieredStore::open(&path, tiny_cfg(64)).unwrap();
+        let direct = Reader::open(&path).unwrap().read_block(12, false).unwrap();
+        // pinned path (probe_rows = 8) and base-file fallback must agree
+        assert_eq!(s.probe_block(5).unwrap(), {
+            let mut b = DataBlock::empty(2);
+            for i in 0..5 {
+                b.push(direct.row(i), direct.label(i));
+            }
+            b
+        });
+        assert_eq!(s.probe_block(12).unwrap(), direct);
+    }
+
+    #[test]
+    fn workdir_removed_on_drop() {
+        let path = store_path("cleanup.sprw", 40, 2);
+        let wd;
+        {
+            let mut s = TieredStore::open(&path, tiny_cfg(64)).unwrap();
+            wd = s.workdir.clone();
+            full_pass(&mut s, |gi| if gi < 20 { 64.0 } else { 0.01 });
+            s.commit_build(&StrongRule::new()).unwrap();
+            assert!(wd.exists());
+        }
+        assert!(!wd.exists(), "spill workdir must be cleaned up");
+    }
+
+    #[test]
+    fn empty_store_builds_trivially() {
+        let dir = std::env::temp_dir().join("sparrow_tiered_store_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.sprw");
+        DiskStore::write(&path, &DataBlock::empty(4)).unwrap();
+        let mut s = TieredStore::open(&path, tiny_cfg(64)).unwrap();
+        assert!(s.is_empty());
+        let seen = full_pass(&mut s, |_| 1.0);
+        s.commit_build(&StrongRule::new()).unwrap();
+        assert!(seen.is_empty());
+    }
+}

@@ -41,6 +41,7 @@ COMMANDS
              [--sampler mvs|rejection|uniform] [--sampler-mode blocking|background]
              [--backend native|xla-pallas|xla-jnp]
              [--scan-engine rows|binned] [--scan-threads N]
+             [--store-tier mem|tiered] [--memory-budget BYTES]
              [--batch B] [--nthr NT] [--disk-bandwidth BYTES/S] [--seed S]
              [--out-dir DIR]
   baseline   --algo fullscan|goss|bulksync --data train.sprw --test test.sprw
@@ -778,6 +779,8 @@ fn cmd_launch(args: &Args) -> anyhow::Result<()> {
         "sampler-mode",
         "scan-engine",
         "scan-threads",
+        "store-tier",
+        "memory-budget",
         "disk-bandwidth",
         "seed",
         "artifacts-dir",

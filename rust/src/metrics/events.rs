@@ -36,6 +36,12 @@ pub enum EventKind {
     Crash,
     /// worker finished
     Finish,
+    /// tiered store spilled examples to chunk files (value = rows)
+    Spill,
+    /// readahead served an already-buffered chunk (value = chunks)
+    ReadaheadHit,
+    /// builder had to wait for a chunk read (value = chunks)
+    ReadaheadMiss,
 }
 
 impl EventKind {
@@ -44,7 +50,7 @@ impl EventKind {
     /// and the OPERATIONS.md coverage check are all indexed by — adding
     /// a variant without extending it is a compile error (the `match`
     /// in [`EventKind::index`] is exhaustive).
-    pub const ALL: [EventKind; 12] = [
+    pub const ALL: [EventKind; 15] = [
         EventKind::LocalImprovement,
         EventKind::Broadcast,
         EventKind::Receive,
@@ -57,6 +63,9 @@ impl EventKind {
         EventKind::GammaShrink,
         EventKind::Crash,
         EventKind::Finish,
+        EventKind::Spill,
+        EventKind::ReadaheadHit,
+        EventKind::ReadaheadMiss,
     ];
 
     /// Position of this kind in [`EventKind::ALL`] (dense index for
@@ -75,6 +84,9 @@ impl EventKind {
             EventKind::GammaShrink => 9,
             EventKind::Crash => 10,
             EventKind::Finish => 11,
+            EventKind::Spill => 12,
+            EventKind::ReadaheadHit => 13,
+            EventKind::ReadaheadMiss => 14,
         }
     }
 
@@ -93,6 +105,9 @@ impl EventKind {
             EventKind::GammaShrink => "gamma_shrink",
             EventKind::Crash => "crash",
             EventKind::Finish => "finish",
+            EventKind::Spill => "spill",
+            EventKind::ReadaheadHit => "readahead_hit",
+            EventKind::ReadaheadMiss => "readahead_miss",
         }
     }
 }

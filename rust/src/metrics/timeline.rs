@@ -39,6 +39,8 @@ pub fn render_timeline(events: &[Event], workers: usize, width: usize) -> String
             EventKind::GammaShrink => b'g',
             EventKind::Crash => b'X',
             EventKind::Finish => b'|',
+            // tiered-store I/O detail, not a Figure-1 protocol action
+            EventKind::Spill | EventKind::ReadaheadHit | EventKind::ReadaheadMiss => continue,
         };
         // don't let low-priority glyphs overwrite high-priority ones
         let priority = |g: u8| match g {

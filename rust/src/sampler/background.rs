@@ -46,10 +46,12 @@ use std::time::{Duration, Instant};
 
 use crate::config::SamplerKind;
 use crate::data::strata::{StrataConfig, StratifiedStore};
+use crate::data::tiered::{TieredConfig, TieredStore};
 use crate::data::{BinSpec, DataBlock, IoThrottle, SampleSet};
 use crate::metrics::{EventKind, EventLog};
 use crate::model::StrongRule;
 use crate::sampler::handle::{BuildStamp, BuiltSample, SampleHandle};
+use crate::sampler::tiered::build_tiered;
 use crate::sampler::{score_block, SampleStats, SamplerConfig};
 use crate::util::rng::Rng;
 
@@ -76,14 +78,49 @@ pub enum BuildOutcome {
 const MAX_COPIES_PER_EXAMPLE: f64 = 1024.0;
 
 /// RNG key shared by every example coin of one build.
-fn coin_key(seed: u64, stamp: BuildStamp) -> u64 {
+pub(crate) fn coin_key(seed: u64, stamp: BuildStamp) -> u64 {
     seed ^ stamp.version.wrapping_mul(0x9E37_79B9_7F4A_7C15)
         ^ stamp.attempt.wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
 }
 
 /// Per-example coin RNG: decorrelated from neighbours by SplitMix seeding.
-fn example_rng(key: u64, i: u64) -> Rng {
+pub(crate) fn example_rng(key: u64, i: u64) -> Rng {
     Rng::new(key ^ (i + 1).wrapping_mul(0xFF51_AFD7_ED55_8CCD))
+}
+
+/// The acceptance coin of example `gi`: the first `f64` its per-example
+/// RNG yields — the exact value [`copies_for`]'s Bernoulli consumes. The
+/// tiered pass uses it to prove rejections without reading the example
+/// (`data::tiered::draw`).
+pub(crate) fn first_coin(key: u64, gi: u64) -> f64 {
+    example_rng(key, gi).f64()
+}
+
+/// Copies kept of example `gi` with fresh weight `w`: the per-example
+/// acceptance rule shared by the in-memory and tiered passes. Pure in
+/// `(kind, key, scale, uniform_rate, gi, w)`, so visit order never
+/// matters. For the weight-proportional kinds `copies = 0` **iff**
+/// `scale · first_coin ≥ w` (one copy is unconditional once `w ≥ scale`,
+/// and the coin is < 1); for `Uniform` it is `first_coin ≥ uniform_rate`.
+pub(crate) fn copies_for(
+    kind: SamplerKind,
+    key: u64,
+    scale: f64,
+    uniform_rate: f64,
+    gi: u64,
+    w: f64,
+) -> usize {
+    let mut rng = example_rng(key, gi);
+    match kind {
+        SamplerKind::Uniform => usize::from(rng.bernoulli(uniform_rate)),
+        _ => {
+            // per-example copy cap: a pure, order-independent guard
+            // against a wildly unrepresentative probe scale
+            let expect = (w / scale).min(MAX_COPIES_PER_EXAMPLE);
+            let base = expect.floor();
+            base as usize + usize::from(rng.bernoulli(expect - base))
+        }
+    }
 }
 
 /// Build one sample against `model`, identified by `stamp`.
@@ -212,23 +249,24 @@ fn offer_block(
         let gi = start + i;
         let (s, w) = scored[i];
         store.note_weight(gi, w);
-        let mut rng = example_rng(key, gi as u64);
-        let copies = match kind {
-            SamplerKind::Uniform => usize::from(rng.bernoulli(uniform_rate)),
-            _ => {
-                // per-example copy cap: a pure, order-independent guard
-                // against a wildly unrepresentative probe scale
-                let expect = (w / scale).min(MAX_COPIES_PER_EXAMPLE);
-                let base = expect.floor();
-                base as usize + usize::from(rng.bernoulli(expect - base))
-            }
-        };
+        let copies = copies_for(kind, key, scale, uniform_rate, gi as u64, w);
         for _ in 0..copies {
             data.push(block.row(i), block.label(i));
             scores.push(s);
             weights.push(w as f32);
         }
     }
+}
+
+/// Which data plane backs the builder thread: the in-memory stratified
+/// store (`--store-tier mem`, the default) or the out-of-core tiered
+/// store (`--store-tier tiered`, DESIGN.md §11). Both produce
+/// byte-identical samples for equal `(seed, stamp, model, store bytes)`.
+pub(crate) enum BuildStore {
+    /// whole store behind one sequential cursor, residency simulated
+    Mem(StratifiedStore),
+    /// chunk-file tiers with certified-skip reads and readahead
+    Tiered(Box<TieredStore>),
 }
 
 struct Job {
@@ -331,7 +369,37 @@ impl BackgroundSampler {
         worker: usize,
         log: EventLog,
     ) -> io::Result<BackgroundSampler> {
-        let mut store = StratifiedStore::open(store_path, throttle, strata)?;
+        let store = BuildStore::Mem(StratifiedStore::open(store_path, throttle, strata)?);
+        Self::spawn_with(store, cfg, bin_spec, seed, worker, log)
+    }
+
+    /// Like [`BackgroundSampler::spawn`], but over the out-of-core tiered
+    /// store (`--store-tier tiered`): heavy strata memory-resident within
+    /// `tiered.memory_budget`, light strata in spill chunk files, builds
+    /// skipping certified-rejected examples entirely (DESIGN.md §11).
+    /// Sample contents are byte-identical to the `spawn` path for equal
+    /// `(seed, stamp, model, store bytes)`.
+    pub fn spawn_tiered(
+        store_path: &Path,
+        tiered: TieredConfig,
+        cfg: SamplerConfig,
+        bin_spec: Option<BinSpec>,
+        seed: u64,
+        worker: usize,
+        log: EventLog,
+    ) -> io::Result<BackgroundSampler> {
+        let store = BuildStore::Tiered(Box::new(TieredStore::open(store_path, tiered)?));
+        Self::spawn_with(store, cfg, bin_spec, seed, worker, log)
+    }
+
+    fn spawn_with(
+        mut store: BuildStore,
+        cfg: SamplerConfig,
+        bin_spec: Option<BinSpec>,
+        seed: u64,
+        worker: usize,
+        log: EventLog,
+    ) -> io::Result<BackgroundSampler> {
         let ctrl = Arc::new(Ctrl {
             state: Mutex::new(CtrlState {
                 job: None,
@@ -473,7 +541,7 @@ impl Drop for BackgroundSampler {
 
 #[allow(clippy::too_many_arguments)]
 fn builder_loop(
-    store: &mut StratifiedStore,
+    store: &mut BuildStore,
     ctrl: &Arc<Ctrl>,
     handle: &SampleHandle,
     cfg: &SamplerConfig,
@@ -504,7 +572,39 @@ fn builder_loop(
             job.stamp.version as f64,
         );
         let invalidated = || ctrl.epoch.load(Ordering::Relaxed) != my_epoch;
-        match build_once(store, &job.model, job.stamp, cfg, seed, invalidated) {
+        let outcome = match store {
+            BuildStore::Mem(s) => build_once(s, &job.model, job.stamp, cfg, seed, invalidated),
+            BuildStore::Tiered(s) => {
+                let before = s.counters();
+                let out = build_tiered(
+                    s,
+                    &job.model,
+                    job.stamp,
+                    cfg,
+                    bin_spec.as_ref(),
+                    seed,
+                    invalidated,
+                );
+                // surface the tiered data plane's activity as counter
+                // deltas (value = delta), mirroring ResampleEnd's
+                // value-carrying convention
+                let after = s.counters();
+                let spilled = after.spilled_rows - before.spilled_rows;
+                if spilled > 0 {
+                    log.record(worker, EventKind::Spill, None, spilled as f64);
+                }
+                let hits = after.readahead_hits - before.readahead_hits;
+                if hits > 0 {
+                    log.record(worker, EventKind::ReadaheadHit, None, hits as f64);
+                }
+                let misses = after.readahead_misses - before.readahead_misses;
+                if misses > 0 {
+                    log.record(worker, EventKind::ReadaheadMiss, None, misses as f64);
+                }
+                out
+            }
+        };
+        match outcome {
             Ok(BuildOutcome::Built { mut sample, stats }) => {
                 // commit path: quantize the stripe here, on the builder
                 // thread, so the swap hands the scanner a ready view

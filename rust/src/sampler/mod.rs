@@ -56,9 +56,11 @@
 
 pub mod background;
 pub mod handle;
+pub mod tiered;
 
 pub use background::{build_once, BackgroundSampler, BuildOutcome};
 pub use handle::{BuildStamp, BuiltSample, SampleHandle};
+pub use tiered::build_tiered;
 
 use std::time::{Duration, Instant};
 

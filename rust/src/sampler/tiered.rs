@@ -1,0 +1,440 @@
+//! The tiered build pass: [`build_tiered`] produces a sample
+//! **byte-identical** to [`super::build_once`] while reading only the
+//! examples whose acceptance cannot be ruled out up front (DESIGN.md §11).
+//!
+//! # Why the outputs are identical
+//!
+//! [`super::build_once`]'s sample is a pure function of
+//! `(seed, stamp, model, store)`: example `gi` contributes
+//! `copies_for(kind, key, scale, uniform_rate, gi, w)` copies, where the
+//! scale comes from a deterministic probe prefix and the coin from the
+//! example's own RNG. Nothing depends on visit order. This pass computes
+//! the *same* scale from the *same* prefix, draws the *same* per-example
+//! coin, and applies the *same* copy rule — it merely declines to read
+//! examples whose rejection is already provable from the certified weight
+//! ceiling (see [`crate::data::tiered::draw`]): for the
+//! weight-proportional kinds `copies = 0 ⟺ scale·u ≥ w`, so
+//! `scale·u ≥ ceiling·e^drift ≥ w` is a proof; for
+//! [`SamplerKind::Uniform`] acceptance ignores `w` entirely and the
+//! survivor set is exact with no ceiling at all. Accepted rows are
+//! collected in serving order (heaviest strata first) and emitted in
+//! global order, so the output block equals the sequential pass's
+//! byte-for-byte.
+//!
+//! When a [`BinSpec`] is supplied the accepted rows are quantized at
+//! visit time — straight out of the chunk buffers — and the column-major
+//! stripe is assembled at emission, so the published sample carries the
+//! identical `BinnedStripe` that `ensure_binned` would build, without a
+//! second pass over the sample.
+
+use std::io;
+use std::time::Instant;
+
+use crate::config::SamplerKind;
+use crate::data::tiered::draw::drift_bound;
+use crate::data::tiered::TieredStore;
+use crate::data::{BinSpec, BinnedStripe, DataBlock, SampleSet};
+use crate::model::StrongRule;
+use crate::sampler::background::{coin_key, copies_for, first_coin, BuildOutcome};
+use crate::sampler::handle::BuildStamp;
+use crate::sampler::{score_block, SampleStats, SamplerConfig};
+
+/// One accepted example, keyed for global-order emission.
+struct Kept {
+    gi: u32,
+    /// row index into the serving-order accumulator block
+    idx: u32,
+    s: f32,
+    w: f64,
+    copies: u32,
+}
+
+/// Build one sample against `model` over a [`TieredStore`], identified by
+/// `stamp`. Same contract and outcome type as [`super::build_once`]; the
+/// contents are byte-identical for equal `(seed, stamp, model, store
+/// bytes)`. `invalidated` is polled between chunks; `true` aborts the
+/// build and leaves the store's committed state untouched (the caller
+/// must still observe the [`BuildOutcome::Invalidated`] return — the
+/// store aborts internally).
+pub fn build_tiered(
+    store: &mut TieredStore,
+    model: &StrongRule,
+    stamp: BuildStamp,
+    cfg: &SamplerConfig,
+    bin_spec: Option<&BinSpec>,
+    seed: u64,
+    mut invalidated: impl FnMut() -> bool,
+) -> io::Result<BuildOutcome> {
+    let t0 = Instant::now();
+    let n = store.len();
+    let f = store.num_features();
+    if n == 0 {
+        return Ok(BuildOutcome::Built {
+            sample: SampleSet::empty(f),
+            stats: SampleStats {
+                read: 0,
+                kept: 0,
+                duration: t0.elapsed(),
+                mean_weight: 0.0,
+            },
+        });
+    }
+    let m = cfg.target_m.max(1);
+    let key = coin_key(seed, stamp);
+
+    // Probe: the identical deterministic prefix and arithmetic as
+    // build_once — the scale must match bit-for-bit.
+    let probe_n = cfg.probe.min(n).max(1);
+    let probe = store.probe_block(probe_n)?;
+    let probe_scored = score_block(model, &probe);
+    let mean_w =
+        (probe_scored.iter().map(|&(_, w)| w).sum::<f64>() / probe.n as f64).max(1e-300);
+    let scale = mean_w * n as f64 / m as f64;
+    let uniform_rate = (m as f64 / n as f64).min(1.0);
+
+    // Drift allowance: ceilings certify weights under the store's anchor;
+    // `model` may move any weight by at most e^d (safe-side padded).
+    let infl = drift_bound(model, store.anchor()).exp();
+    let kind = cfg.kind;
+
+    store.begin_build();
+
+    // serving-order accumulators; emission re-sorts by global index
+    let mut rows = DataBlock::empty(f);
+    let mut kept: Vec<Kept> = Vec::new();
+    let width = bin_spec.map_or(0, |s| s.width());
+    let mut row_bins: Vec<u8> = Vec::new(); // row-major, parallel to `rows`
+
+    let mut keep = |gi: usize, ceiling: f64| -> bool {
+        let u = first_coin(key, gi as u64);
+        match kind {
+            // acceptance is weight-independent: the survivor set is exact
+            SamplerKind::Uniform => u < uniform_rate,
+            // read unless rejection is provable from the ceiling
+            _ => scale * u < ceiling * infl,
+        }
+    };
+    let mut visit = |gi: usize, label: f32, row: &[f32]| -> f64 {
+        let s = model.score(row);
+        let w = (-(label as f64) * s as f64).exp();
+        let copies = copies_for(kind, key, scale, uniform_rate, gi as u64, w);
+        if copies > 0 {
+            if let Some(spec) = bin_spec {
+                for c in 0..width {
+                    row_bins.push(spec.bin_value(c, row[spec.stripe.0 + c]));
+                }
+            }
+            kept.push(Kept {
+                gi: gi as u32,
+                idx: rows.n as u32,
+                s,
+                w,
+                copies: copies as u32,
+            });
+            rows.push(row, label);
+        }
+        w
+    };
+
+    let completed = store.build_pass(&mut keep, &mut visit, &mut invalidated)?;
+    let pass = store.last_pass();
+    let read = probe.n as u64 + pass.rows_visited;
+    if !completed {
+        store.abort_build();
+        return Ok(BuildOutcome::Invalidated { read });
+    }
+    store.commit_build(model)?;
+
+    // emit in global order — the order build_once pushes in
+    kept.sort_by_key(|k| k.gi);
+    let mut data = DataBlock::empty(f);
+    let mut scores = Vec::with_capacity(m);
+    let mut weights = Vec::with_capacity(m);
+    let mut bins_emitted: Vec<u8> = Vec::new(); // row-major, emission order
+    for k in &kept {
+        let idx = k.idx as usize;
+        for _ in 0..k.copies {
+            data.push(rows.row(idx), rows.label(idx));
+            scores.push(k.s);
+            weights.push(k.w as f32);
+            if width > 0 {
+                bins_emitted.extend_from_slice(&row_bins[idx * width..(idx + 1) * width]);
+            }
+        }
+    }
+
+    let kept_n = data.n;
+    let stats = SampleStats {
+        read,
+        kept: kept_n,
+        duration: t0.elapsed(),
+        mean_weight: mean_w,
+    };
+    let mut sample = if kind == SamplerKind::Uniform {
+        SampleSet::with_weights(data, scores, weights, model.len() as u32)
+    } else {
+        SampleSet::fresh(data, scores, model.len() as u32)
+    };
+    if let Some(spec) = bin_spec {
+        // transpose the visit-time bins into the column-major stripe —
+        // identical values to spec.bin_block(&sample.data)
+        let mut bins = vec![0u8; width * kept_n];
+        for (i, chunk) in bins_emitted.chunks_exact(width).enumerate() {
+            for (c, &b) in chunk.iter().enumerate() {
+                bins[c * kept_n + i] = b;
+            }
+        }
+        sample.binned = Some(BinnedStripe {
+            stripe: spec.stripe,
+            nthr: spec.nthr,
+            grid_fingerprint: spec.fingerprint(),
+            n: kept_n,
+            bins,
+        });
+    }
+    Ok(BuildOutcome::Built { sample, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::strata::{StrataConfig, StratifiedStore};
+    use crate::data::synth::SynthGen;
+    use crate::data::tiered::TieredConfig;
+    use crate::data::{IoThrottle, SynthConfig};
+    use crate::model::Stump;
+    use crate::sampler::build_once;
+
+    fn make_store(name: &str, n: usize, seed: u64) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("sparrow_tiered_build_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{name}_{seed}_{n}.sprw"));
+        let cfg = SynthConfig {
+            f: 6,
+            pos_rate: 0.3,
+            informative: 3,
+            signal: 1.0,
+            flip_rate: 0.0,
+            seed,
+        };
+        SynthGen::new(cfg).write_store(&path, n).unwrap();
+        path
+    }
+
+    fn cfg(m: usize, kind: SamplerKind) -> SamplerConfig {
+        SamplerConfig {
+            target_m: m,
+            kind,
+            probe: 256,
+            max_passes: 1,
+            block: 128,
+        }
+    }
+
+    /// A budget far below the store so nearly everything spills.
+    fn tiny_tiered(path: &std::path::Path) -> TieredStore {
+        TieredStore::open(
+            path,
+            TieredConfig {
+                memory_budget: 2048,
+                chunk_rows: 64,
+                probe_rows: 0, // exercise the base-file probe fallback
+                readahead_depth: 2,
+                relayout_threshold: 0.25,
+            },
+        )
+        .unwrap()
+    }
+
+    fn mem_build(
+        path: &std::path::Path,
+        model: &StrongRule,
+        stamp: BuildStamp,
+        c: &SamplerConfig,
+        seed: u64,
+    ) -> SampleSet {
+        let mut store =
+            StratifiedStore::open(path, IoThrottle::unlimited(), StrataConfig { resident_rows: 0 })
+                .unwrap();
+        match build_once(&mut store, model, stamp, c, seed, || false).unwrap() {
+            BuildOutcome::Built { sample, .. } => sample,
+            other => panic!("expected Built, got {other:?}"),
+        }
+    }
+
+    fn tiered_build(
+        store: &mut TieredStore,
+        model: &StrongRule,
+        stamp: BuildStamp,
+        c: &SamplerConfig,
+        seed: u64,
+    ) -> SampleSet {
+        match build_tiered(store, model, stamp, c, None, seed, || false).unwrap() {
+            BuildOutcome::Built { sample, .. } => sample,
+            other => panic!("expected Built, got {other:?}"),
+        }
+    }
+
+    fn model1() -> StrongRule {
+        let mut m = StrongRule::new();
+        m.push(Stump::new(0, 0.0, 1.0), 0.8);
+        m
+    }
+
+    fn model2() -> StrongRule {
+        let mut m = model1();
+        m.push(Stump::new(1, 0.5, -1.0), 0.4);
+        m
+    }
+
+    #[test]
+    fn byte_identical_to_in_memory_pass_across_model_sequence() {
+        // the acceptance gate of the whole tentpole: a spilled tiered
+        // store, evolving through a model sequence (empty → extends →
+        // extends), emits exactly the samples the in-memory pass does
+        let path = make_store("ident", 3000, 1);
+        let mut tiered = tiny_tiered(&path);
+        let c = cfg(400, SamplerKind::MinimalVariance);
+        let seq = [
+            (StrongRule::new(), BuildStamp { version: 0, attempt: 0 }),
+            (StrongRule::new(), BuildStamp { version: 0, attempt: 1 }),
+            (model1(), BuildStamp { version: 1, attempt: 0 }),
+            (model2(), BuildStamp { version: 2, attempt: 0 }),
+        ];
+        for (model, stamp) in &seq {
+            let t = tiered_build(&mut tiered, model, *stamp, &c, 9);
+            let m = mem_build(&path, model, *stamp, &c, 9);
+            assert_eq!(t.data, m.data, "stamp {stamp:?}");
+            assert_eq!(t.score_sample, m.score_sample, "stamp {stamp:?}");
+        }
+        // the later builds must have exercised the certified-skip path
+        assert!(
+            tiered.counters().rows_skipped > 0,
+            "no skips: {:?}",
+            tiered.counters()
+        );
+    }
+
+    #[test]
+    fn uniform_kind_identical_with_zero_disk_reads_for_rejects() {
+        let path = make_store("uniform", 2500, 2);
+        let mut tiered = tiny_tiered(&path);
+        let c = cfg(300, SamplerKind::Uniform);
+        let stamp = BuildStamp { version: 3, attempt: 0 };
+        let model = model1();
+        let t = tiered_build(&mut tiered, &model, stamp, &c, 5);
+        let m = mem_build(&path, &model, stamp, &c, 5);
+        assert_eq!(t.data, m.data);
+        assert_eq!(t.w_last, m.w_last); // uniform kind carries true weights
+        // uniform acceptance is coin-only: rejected examples cost nothing
+        let pass = tiered.last_pass();
+        assert_eq!(
+            pass.rows_visited + pass.rows_skipped,
+            2500,
+            "every example decided"
+        );
+        assert!(pass.rows_skipped > 1500, "{pass:?}");
+    }
+
+    #[test]
+    fn rejection_kind_identical() {
+        let path = make_store("reject", 2000, 3);
+        let mut tiered = tiny_tiered(&path);
+        let c = cfg(250, SamplerKind::Rejection);
+        let stamp = BuildStamp { version: 1, attempt: 2 };
+        let t = tiered_build(&mut tiered, &model1(), stamp, &c, 17);
+        let m = mem_build(&path, &model1(), stamp, &c, 17);
+        assert_eq!(t.data, m.data);
+    }
+
+    #[test]
+    fn second_build_same_model_reads_less() {
+        // after one committed build the ceilings are exact, so a repeat
+        // against the same model reads only the actually-accepted rows
+        // (plus the Bernoulli boundary cases)
+        let path = make_store("skips", 3000, 4);
+        let mut tiered = tiny_tiered(&path);
+        let c = cfg(300, SamplerKind::MinimalVariance);
+        let model = model1();
+        tiered_build(&mut tiered, &model, BuildStamp { version: 1, attempt: 0 }, &c, 7);
+        let first_read = tiered.last_pass().rows_visited;
+        let t = tiered_build(&mut tiered, &model, BuildStamp { version: 1, attempt: 1 }, &c, 7);
+        let second = tiered.last_pass();
+        assert!(
+            second.rows_visited < 3000 / 2,
+            "second build should skip most rows: {second:?} (first read {first_read})"
+        );
+        // and still byte-identical
+        let m = mem_build(&path, &model, BuildStamp { version: 1, attempt: 1 }, &c, 7);
+        assert_eq!(t.data, m.data);
+    }
+
+    #[test]
+    fn invalidation_aborts_and_leaves_store_reusable() {
+        let path = make_store("inval", 2000, 5);
+        let mut tiered = tiny_tiered(&path);
+        let c = cfg(250, SamplerKind::MinimalVariance);
+        // prime ceilings so both resident/spilled paths exist
+        tiered_build(&mut tiered, &StrongRule::new(), BuildStamp { version: 0, attempt: 0 }, &c, 3);
+        let mut polls = 0;
+        let out = build_tiered(
+            &mut tiered,
+            &model1(),
+            BuildStamp { version: 1, attempt: 0 },
+            &c,
+            None,
+            3,
+            || {
+                polls += 1;
+                polls > 1
+            },
+        )
+        .unwrap();
+        assert!(matches!(out, BuildOutcome::Invalidated { .. }), "{out:?}");
+        // the aborted build left no trace: the next build matches a
+        // build on a freshly-opened tiered store and the memory path
+        let stamp = BuildStamp { version: 1, attempt: 0 };
+        let after = tiered_build(&mut tiered, &model1(), stamp, &c, 3);
+        let mem = mem_build(&path, &model1(), stamp, &c, 3);
+        assert_eq!(after.data, mem.data);
+    }
+
+    #[test]
+    fn prebuilt_stripe_equals_bin_block() {
+        let path = make_store("bins", 1500, 6);
+        let mut tiered = tiny_tiered(&path);
+        let c = cfg(200, SamplerKind::MinimalVariance);
+        let spec = BinSpec::new(
+            (1, 4),
+            3,
+            vec![-0.5, 0.0, 0.5, -0.5, 0.0, 0.5, -0.5, 0.0, 0.5],
+        );
+        let stamp = BuildStamp { version: 2, attempt: 0 };
+        let sample = match build_tiered(&mut tiered, &model1(), stamp, &c, Some(&spec), 29, || false)
+            .unwrap()
+        {
+            BuildOutcome::Built { sample, .. } => sample,
+            other => panic!("expected Built, got {other:?}"),
+        };
+        let stripe = sample.binned.as_ref().expect("stripe prebuilt");
+        assert!(stripe.matches(&spec, sample.data.n));
+        assert_eq!(stripe, &spec.bin_block(&sample.data));
+    }
+
+    #[test]
+    fn stats_read_counts_probe_and_visits() {
+        let path = make_store("stats", 1000, 7);
+        let mut tiered = tiny_tiered(&path);
+        let c = cfg(100, SamplerKind::MinimalVariance);
+        let stamp = BuildStamp { version: 0, attempt: 0 };
+        let stats = match build_tiered(&mut tiered, &StrongRule::new(), stamp, &c, None, 11, || false)
+            .unwrap()
+        {
+            BuildOutcome::Built { stats, .. } => stats,
+            other => panic!("expected Built, got {other:?}"),
+        };
+        let pass = tiered.last_pass();
+        assert_eq!(stats.read, 256 + pass.rows_visited);
+        assert!(stats.read < 1000, "first build already skips: {stats:?}");
+    }
+}

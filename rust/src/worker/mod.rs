@@ -29,8 +29,8 @@ use std::time::{Duration, Instant};
 
 use crate::admin::{ControlState, Nudge};
 use crate::boosting::{alpha_for_advantage, CandidateGrid};
-use crate::config::{SamplerMode, ScanEngine, TrainConfig};
-use crate::data::{BinSpec, DiskStore, IoThrottle, SampleSet, StrataConfig};
+use crate::config::{SamplerMode, ScanEngine, StoreTier, TrainConfig};
+use crate::data::{BinSpec, DiskStore, IoThrottle, SampleSet, StrataConfig, TieredConfig};
 use crate::metrics::{EventKind, EventLog};
 use crate::model::StrongRule;
 use crate::sampler::{BackgroundSampler, SampleStats, Sampler, SamplerConfig};
@@ -250,19 +250,37 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
             sampler_rng,
         )),
         SamplerMode::Background => {
-            match BackgroundSampler::spawn(
-                store.path(),
-                throttle,
-                StrataConfig {
-                    // keep roughly a few samples' worth of heavy strata hot
-                    resident_rows: cfg.sample_size.saturating_mul(4),
-                },
-                sampler_cfg,
-                bin_spec.clone(),
-                sampler_rng.next_u64(),
-                id,
-                log.clone(),
-            ) {
+            let spawned = match cfg.store_tier {
+                StoreTier::Mem => BackgroundSampler::spawn(
+                    store.path(),
+                    throttle,
+                    StrataConfig {
+                        // keep roughly a few samples' worth of heavy strata hot
+                        resident_rows: cfg.sample_size.saturating_mul(4),
+                    },
+                    sampler_cfg,
+                    bin_spec.clone(),
+                    sampler_rng.next_u64(),
+                    id,
+                    log.clone(),
+                ),
+                // out-of-core: heavy strata resident within the budget,
+                // light strata in spill chunks, identical sample bytes
+                StoreTier::Tiered => BackgroundSampler::spawn_tiered(
+                    store.path(),
+                    TieredConfig {
+                        memory_budget: cfg.memory_budget,
+                        probe_rows: sampler_cfg.probe,
+                        ..TieredConfig::default()
+                    },
+                    sampler_cfg,
+                    bin_spec.clone(),
+                    sampler_rng.next_u64(),
+                    id,
+                    log.clone(),
+                ),
+            };
+            match spawned {
                 Ok(bg) => SampleSource::Background(bg),
                 Err(e) => {
                     log.record(id, EventKind::Crash, None, 0.0);

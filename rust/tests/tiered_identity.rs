@@ -1,0 +1,164 @@
+//! End-to-end byte-identity of the out-of-core tiered data plane
+//! (DESIGN.md §11): a `BackgroundSampler` running over the tiered store
+//! must hand the worker the *exact same* samples as one running over the
+//! in-memory stratified store, for equal `(seed, stamp, model, store
+//! bytes)` — the tier is a placement decision, never a semantic one.
+
+mod common;
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use sparrow::config::SamplerKind;
+use sparrow::data::{BinSpec, IoThrottle, SampleSet, StrataConfig, TieredConfig};
+use sparrow::metrics::EventLog;
+use sparrow::model::{StrongRule, Stump};
+use sparrow::sampler::{BackgroundSampler, SamplerConfig};
+
+fn cfg(kind: SamplerKind) -> SamplerConfig {
+    SamplerConfig {
+        target_m: 512,
+        kind,
+        probe: 512,
+        max_passes: 1,
+        block: 256,
+    }
+}
+
+/// A tiered config whose budget forces most of the store onto disk
+/// (store below is 20k × 17 f32 ≈ 1.3 MiB; the budget holds ~1/10th).
+fn tight_tiered(probe: usize) -> TieredConfig {
+    TieredConfig {
+        memory_budget: 128 << 10,
+        chunk_rows: 512,
+        probe_rows: probe,
+        readahead_depth: 4,
+        relayout_threshold: 0.25,
+    }
+}
+
+fn spawn_pair(
+    path: &Path,
+    kind: SamplerKind,
+    bin_spec: Option<BinSpec>,
+    seed: u64,
+) -> (BackgroundSampler, BackgroundSampler) {
+    let c = cfg(kind);
+    let (log_a, _rx_a) = EventLog::new();
+    let (log_b, _rx_b) = EventLog::new();
+    let mem = BackgroundSampler::spawn(
+        path,
+        IoThrottle::unlimited(),
+        StrataConfig::default(),
+        c.clone(),
+        bin_spec.clone(),
+        seed,
+        0,
+        log_a,
+    )
+    .unwrap();
+    let tiered = BackgroundSampler::spawn_tiered(
+        path,
+        tight_tiered(c.probe),
+        c,
+        bin_spec,
+        seed,
+        1,
+        log_b,
+    )
+    .unwrap();
+    (mem, tiered)
+}
+
+fn build(bg: &mut BackgroundSampler, version: u64, model: &StrongRule) -> SampleSet {
+    bg.request(version, model);
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let (sample, _stats) = bg
+        .wait_install(version, || Instant::now() > deadline)
+        .unwrap()
+        .expect("build timed out");
+    sample
+}
+
+fn assert_same(a: &SampleSet, b: &SampleSet, what: &str) {
+    assert_eq!(a.data, b.data, "{what}: rows differ");
+    assert_eq!(a.w_sample, b.w_sample, "{what}: sample weights differ");
+    assert_eq!(a.score_sample, b.score_sample, "{what}: scores differ");
+    assert_eq!(a.w_last, b.w_last, "{what}: live weights differ");
+    assert_eq!(a.score_last, b.score_last, "{what}: live scores differ");
+    assert_eq!(
+        a.model_len_last, b.model_len_last,
+        "{what}: model lengths differ"
+    );
+    assert_eq!(a.binned, b.binned, "{what}: binned stripes differ");
+}
+
+fn model_sequence() -> Vec<StrongRule> {
+    let mut m1 = StrongRule::new();
+    m1.push(Stump::new(0, 0.0, 1.0), 0.6);
+    let mut m2 = m1.clone();
+    m2.push(Stump::new(3, 0.2, -1.0), 0.4);
+    let mut m3 = m2.clone();
+    m3.push(Stump::new(7, -0.1, 1.0), 0.3);
+    vec![StrongRule::new(), m1, m2, m3]
+}
+
+#[test]
+fn tiered_sampler_is_byte_identical_across_model_sequence() {
+    let (path, _test) = common::synth_store("sparrow_tiered_ident", 77, 20_000, 16);
+    let (mut mem, mut tiered) = spawn_pair(&path, SamplerKind::MinimalVariance, None, 41);
+    for (v, model) in model_sequence().into_iter().enumerate() {
+        let a = build(&mut mem, v as u64, &model);
+        let b = build(&mut tiered, v as u64, &model);
+        assert!(!a.is_empty(), "v{v}: empty sample");
+        assert_same(&a, &b, &format!("minimal-variance v{v}"));
+    }
+}
+
+#[test]
+fn tiered_sampler_identical_with_prebuilt_stripes() {
+    let (path, _test) = common::synth_store("sparrow_tiered_ident", 77, 20_000, 16);
+    // a small grid over the first four features
+    let nthr = 4;
+    let thresholds: Vec<f32> = (0..4)
+        .flat_map(|_| vec![-0.5, 0.0, 0.5, 1.0])
+        .collect();
+    let spec = BinSpec::new((0, 4), nthr, thresholds);
+    let (mut mem, mut tiered) =
+        spawn_pair(&path, SamplerKind::MinimalVariance, Some(spec.clone()), 19);
+    let models = model_sequence();
+    let a = build(&mut mem, 1, &models[1]);
+    let b = build(&mut tiered, 1, &models[1]);
+    assert_same(&a, &b, "binned v1");
+    let stripe = b.binned.as_ref().expect("tiered stripe prebuilt");
+    assert!(stripe.matches(&spec, b.data.n));
+}
+
+#[test]
+fn tiered_sampler_identical_for_uniform_kind() {
+    let (path, _test) = common::synth_store("sparrow_tiered_ident", 77, 20_000, 16);
+    let (mut mem, mut tiered) = spawn_pair(&path, SamplerKind::Uniform, None, 7);
+    let models = model_sequence();
+    for (v, model) in models.iter().enumerate().take(3) {
+        let a = build(&mut mem, v as u64, model);
+        let b = build(&mut tiered, v as u64, model);
+        assert_same(&a, &b, &format!("uniform v{v}"));
+    }
+}
+
+#[test]
+fn repeat_request_same_version_draws_identical_fresh_coins() {
+    // attempt bumps must flow through the tiered path exactly like the
+    // in-memory one: a re-request after install draws *different* coins,
+    // but the two planes still agree draw-for-draw
+    let (path, _test) = common::synth_store("sparrow_tiered_ident", 77, 20_000, 16);
+    let (mut mem, mut tiered) = spawn_pair(&path, SamplerKind::MinimalVariance, None, 23);
+    let m = &model_sequence()[1];
+    let a0 = build(&mut mem, 1, m);
+    let b0 = build(&mut tiered, 1, m);
+    assert_same(&a0, &b0, "attempt 0");
+    let a1 = build(&mut mem, 1, m);
+    let b1 = build(&mut tiered, 1, m);
+    assert_same(&a1, &b1, "attempt 1");
+    assert_ne!(a0.data, a1.data, "attempt bump must change the draw");
+}
