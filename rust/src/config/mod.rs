@@ -6,7 +6,7 @@
 
 use std::time::Duration;
 
-use crate::network::NetConfig;
+use crate::network::{BroadcastMode, NetConfig};
 use crate::util::cli::Args;
 
 /// Which sequential stopping rule the scanner uses (ablation A1).
@@ -210,6 +210,14 @@ pub struct TrainConfig {
     /// resume from a checkpoint: every worker starts from this
     /// `(model, certified bound)` instead of the empty model
     pub resume: Option<(crate::model::StrongRule, f64)>,
+    /// broadcast dissemination: full (every peer) or gossip fanout
+    /// (`k` random peers + TTL-bounded relay, DESIGN.md §12)
+    pub broadcast: BroadcastMode,
+    /// checkpoint path: the worker atomically rewrites `<path>` +
+    /// `<path>.meta` whenever its model version moves, in the same format
+    /// `--resume` reads back — a killed worker restarts from its last
+    /// committed model instead of scratch
+    pub checkpoint: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -244,6 +252,8 @@ impl Default for TrainConfig {
             seed: 42,
             artifacts_dir: "artifacts".into(),
             resume: None,
+            broadcast: BroadcastMode::Full,
+            checkpoint: None,
         }
     }
 }
@@ -292,6 +302,12 @@ impl TrainConfig {
         );
         self.seed = args.get_u64("seed", self.seed);
         self.artifacts_dir = args.get_or("artifacts-dir", &self.artifacts_dir);
+        if let Some(s) = args.get("broadcast") {
+            self.broadcast = BroadcastMode::parse(s)?;
+        }
+        if let Some(s) = args.get("checkpoint") {
+            self.checkpoint = Some(s.to_string());
+        }
         self.validate()?;
         Ok(self)
     }
@@ -584,6 +600,31 @@ mod tests {
         assert!(TrainConfig::default()
             .apply_args(&args("t --disk-bandwidth 1000000"))
             .is_ok());
+    }
+
+    #[test]
+    fn broadcast_and_checkpoint_default_and_override() {
+        let d = TrainConfig::default();
+        assert_eq!(d.broadcast, BroadcastMode::Full);
+        assert!(d.checkpoint.is_none());
+        let cfg = TrainConfig::default()
+            .apply_args(&args("train --broadcast fanout:4 --checkpoint ckpt/model.txt"))
+            .unwrap();
+        assert_eq!(cfg.broadcast, BroadcastMode::Fanout { k: 4, ttl: 0 });
+        assert_eq!(cfg.checkpoint.as_deref(), Some("ckpt/model.txt"));
+        assert_eq!(
+            TrainConfig::default()
+                .apply_args(&args("train --broadcast fanout"))
+                .unwrap()
+                .broadcast,
+            BroadcastMode::Fanout { k: 3, ttl: 0 }
+        );
+        assert!(TrainConfig::default()
+            .apply_args(&args("t --broadcast nope"))
+            .is_err());
+        assert!(TrainConfig::default()
+            .apply_args(&args("t --broadcast fanout:0"))
+            .is_err());
     }
 
     #[test]

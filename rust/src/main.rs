@@ -51,7 +51,8 @@ COMMANDS
   worker     one TMSN worker process over real TCP:
              --data train.sprw --worker-id I --workers N --listen ADDR
              [--peers addr1,addr2,...] [--admin ADDR] --out model.txt
-             [train knobs as above]
+             [--broadcast full|fanout[:K]] [--checkpoint PATH]
+             [--resume PATH [--resume-bound B]] [train knobs as above]
   serve      a worker that also answers predictions from the latest
              adopted model (hot-swapped on every adoption, see
              OPERATIONS.md): --data train.sprw [--serve-addr ADDR]
@@ -66,9 +67,12 @@ COMMANDS
              --data train.sprw --test test.sprw --workers N --out-dir DIR
              [train knobs as above]
   sim        deterministic fault-injection scenarios in virtual time:
-             [--workload boost|sgd] [--scenario calm|crash|laggard|partition|churn|all]
+             [--workload boost|sgd]
+             [--scenario calm|crash|laggard|partition|churn|join|churn_large|all]
              [--seed S] [--workers N] [--horizon SECS] [--drop P] [--dup P]
-             [--reorder P] [--trace] (exit 1 on any TMSN invariant violation)
+             [--reorder P] [--mode full|fanout[:K]] [--trace] [--minimize]
+             (exit 1 on any TMSN invariant violation; --minimize delta-debugs
+             a failing run to its minimal byte-identical repro)
 ";
 
 fn main() {
@@ -154,8 +158,9 @@ fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Checkpoint resume: `--resume model.txt [--resume-bound B]` (the bound
-/// defaults to the value recorded in `model.txt.meta`). Shared by `train`
-/// and `serve`.
+/// defaults to the value recorded in `model.txt.meta`). Shared by `train`,
+/// `serve` and `worker` — the files are exactly what `--checkpoint` writes,
+/// so a killed worker restarts with `--resume <its own checkpoint>`.
 fn apply_resume(args: &Args, cfg: &mut TrainConfig) -> anyhow::Result<()> {
     if let Some(resume_path) = args.get("resume") {
         let model = StrongRule::from_text(&std::fs::read_to_string(resume_path)?)
@@ -401,9 +406,10 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
     let peers = args.get_or("peers", "");
     let admin_addr = args.get("admin").map(str::to_string);
     let out = args.get("out").map(str::to_string);
-    let cfg = TrainConfig::default()
+    let mut cfg = TrainConfig::default()
         .apply_args(args)
         .map_err(anyhow::Error::msg)?;
+    apply_resume(args, &mut cfg)?;
     args.finish().map_err(anyhow::Error::msg)?;
 
     let store = DiskStore::open(Path::new(&data))?;
@@ -424,6 +430,13 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
         endpoint.connect(peer)?;
         println!("worker {worker_id} connected to {peer}");
     }
+    // gossip mode is a cluster-wide dialect: every worker must be launched
+    // with the same --broadcast value (DESIGN.md §12)
+    endpoint.enable_fanout(
+        cfg.broadcast,
+        cfg.num_workers,
+        cfg.seed ^ 0xFA_0 ^ worker_id as u64,
+    );
 
     let (mut log, _event_rx) = EventLog::new();
     let stop = Arc::new(AtomicBool::new(false));
@@ -445,6 +458,8 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
         }
         None => None,
     };
+    // gossip relays show up in the metrics feed as `forward` events
+    endpoint.fanout_event_log(log.clone(), worker_id);
     let cfg2 = cfg.clone();
     let result = run_worker(WorkerParams {
         id: worker_id,
@@ -547,6 +562,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         endpoint.connect(peer)?;
         println!("worker {worker_id} connected to {peer}");
     }
+    endpoint.enable_fanout(
+        cfg.broadcast,
+        cfg.num_workers,
+        cfg.seed ^ 0xFA_0 ^ worker_id as u64,
+    );
 
     let stop = Arc::new(AtomicBool::new(false));
     let state = Arc::new(ControlState::new());
@@ -572,6 +592,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 
     let (log, _event_rx) = EventLog::new();
     let log = log.with_counters(Arc::clone(&state.counters));
+    endpoint.fanout_event_log(log.clone(), worker_id);
     let cfg2 = cfg.clone();
     let result = run_worker(WorkerParams {
         id: worker_id,
@@ -663,15 +684,19 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     let seed = args.get_u64("seed", 1);
     let workers = args.get_usize("workers", 5);
     let horizon = Duration::from_secs_f64(args.get_f64("horizon", 1.5));
+    let mode = sparrow::network::BroadcastMode::parse(&args.get_or("mode", "full"))
+        .map_err(anyhow::Error::msg)?;
     let net = SimNetConfig {
         edge: EdgeFaults::lossy(
             args.get_f64("drop", 0.0),
             args.get_f64("dup", 0.0),
             args.get_f64("reorder", 0.0),
         ),
-        overrides: Vec::new(),
+        mode,
+        ..SimNetConfig::default()
     };
     let show_trace = args.has_flag("trace");
+    let do_minimize = args.has_flag("minimize");
     args.finish().map_err(anyhow::Error::msg)?;
 
     let names: Vec<String> = if scenario_arg == "all" {
@@ -736,6 +761,28 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
                 if show_trace {
                     print!("{}", r.trace);
                 }
+                if do_minimize && !r.violations.is_empty() {
+                    let spawn = |id: usize, inc: u64| BoostSimWorker::for_run(seed, id, inc);
+                    let failing =
+                        |r: &sparrow::sim::SimReport<BoostPayload>| !r.violations.is_empty();
+                    if let Some(m) = sparrow::sim::minimize(&cfg, &spawn, &failing) {
+                        println!(
+                            "minimized repro ({} probes): {} workers, horizon {:.3}s, \
+                             {} scenario event(s)",
+                            m.probes,
+                            m.cfg.workers,
+                            m.cfg.horizon.as_secs_f64(),
+                            m.cfg.scenario.len(),
+                        );
+                        for (t, e) in m.cfg.scenario.events() {
+                            println!("  {:>8.3}s {}", t.as_secs_f64(), e.describe());
+                        }
+                        for v in &m.violations {
+                            println!("  VIOLATION: {v}");
+                        }
+                        print!("{}", m.trace);
+                    }
+                }
             }
             "sgd" => {
                 let (shards, valid) = sgd_sim_fixture(seed, workers);
@@ -784,6 +831,7 @@ fn cmd_launch(args: &Args) -> anyhow::Result<()> {
         "disk-bandwidth",
         "seed",
         "artifacts-dir",
+        "broadcast",
     ]
     .iter()
     .filter_map(|k| args.get(k).map(|v| vec![format!("--{k}"), v.to_string()]))

@@ -42,6 +42,13 @@ pub enum EventKind {
     ReadaheadHit,
     /// builder had to wait for a chunk read (value = chunks)
     ReadaheadMiss,
+    /// worker joined an in-flight run (dynamic membership)
+    Join,
+    /// crashed worker resumed from its checkpoint (value = checkpoint
+    /// certificate summary)
+    Rejoin,
+    /// accepted payload re-forwarded to gossip peers (fanout mode)
+    Forward,
 }
 
 impl EventKind {
@@ -50,7 +57,7 @@ impl EventKind {
     /// and the OPERATIONS.md coverage check are all indexed by — adding
     /// a variant without extending it is a compile error (the `match`
     /// in [`EventKind::index`] is exhaustive).
-    pub const ALL: [EventKind; 15] = [
+    pub const ALL: [EventKind; 18] = [
         EventKind::LocalImprovement,
         EventKind::Broadcast,
         EventKind::Receive,
@@ -66,6 +73,9 @@ impl EventKind {
         EventKind::Spill,
         EventKind::ReadaheadHit,
         EventKind::ReadaheadMiss,
+        EventKind::Join,
+        EventKind::Rejoin,
+        EventKind::Forward,
     ];
 
     /// Position of this kind in [`EventKind::ALL`] (dense index for
@@ -87,6 +97,9 @@ impl EventKind {
             EventKind::Spill => 12,
             EventKind::ReadaheadHit => 13,
             EventKind::ReadaheadMiss => 14,
+            EventKind::Join => 15,
+            EventKind::Rejoin => 16,
+            EventKind::Forward => 17,
         }
     }
 
@@ -108,6 +121,9 @@ impl EventKind {
             EventKind::Spill => "spill",
             EventKind::ReadaheadHit => "readahead_hit",
             EventKind::ReadaheadMiss => "readahead_miss",
+            EventKind::Join => "join",
+            EventKind::Rejoin => "rejoin",
+            EventKind::Forward => "forward",
         }
     }
 }

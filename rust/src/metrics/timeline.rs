@@ -39,13 +39,17 @@ pub fn render_timeline(events: &[Event], workers: usize, width: usize) -> String
             EventKind::GammaShrink => b'g',
             EventKind::Crash => b'X',
             EventKind::Finish => b'|',
+            EventKind::Join => b'+',   // joined the swarm mid-run
+            EventKind::Rejoin => b'^', // resumed from checkpoint after a crash
+            // gossip relay hop: transport detail, not a protocol action
+            EventKind::Forward => continue,
             // tiered-store I/O detail, not a Figure-1 protocol action
             EventKind::Spill | EventKind::ReadaheadHit | EventKind::ReadaheadMiss => continue,
         };
         // don't let low-priority glyphs overwrite high-priority ones
         let priority = |g: u8| match g {
             b'X' => 5,
-            b'!' | b'B' | b'F' => 4,
+            b'!' | b'B' | b'F' | b'+' | b'^' => 4,
             b'[' | b']' | b'|' | b's' => 3,
             b'g' | b'~' => 2,
             b'.' => 1,

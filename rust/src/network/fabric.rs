@@ -114,6 +114,8 @@ impl<T> Ord for InFlight<T> {
 
 enum ToDispatcher<T> {
     Broadcast { src: usize, bytes: usize, msg: T },
+    /// dynamic membership: attach a new inbox (DESIGN.md §12)
+    Register { tx: Sender<T> },
     Shutdown,
 }
 
@@ -156,6 +158,9 @@ pub struct Fabric<T> {
     to_net: Sender<ToDispatcher<T>>,
     /// Shared delivery counters, readable while the fabric runs.
     pub stats: Arc<NetStats>,
+    /// next worker id handed out by [`Fabric::join`] (ids 0..n are the
+    /// founding endpoints)
+    next_id: AtomicU64,
     handle: Option<JoinHandle<()>>,
 }
 
@@ -195,10 +200,27 @@ impl<T: Clone + Send + 'static> Fabric<T> {
             Fabric {
                 to_net,
                 stats,
+                next_id: AtomicU64::new(n as u64),
                 handle: Some(handle),
             },
             endpoints,
         )
+    }
+
+    /// Dynamic membership: attach a new endpoint to a *running* fabric.
+    /// The joiner gets the next dense worker id and hears every broadcast
+    /// offered after its registration reaches the dispatcher — earlier
+    /// traffic is gone, exactly TMSN's join semantics (the joiner catches
+    /// up from the next strictly-better broadcast it hears).
+    pub fn join(&self) -> Endpoint<T> {
+        let (tx, rx) = channel::<T>();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) as usize;
+        let _ = self.to_net.send(ToDispatcher::Register { tx });
+        Endpoint {
+            id,
+            to_net: self.to_net.clone(),
+            inbox: rx,
+        }
     }
 
     /// Stop the dispatcher (undelivered messages are discarded).
@@ -221,7 +243,7 @@ impl<T> Drop for Fabric<T> {
 
 fn dispatcher<T: Clone + Send>(
     incoming: Receiver<ToDispatcher<T>>,
-    inboxes: Vec<Sender<T>>,
+    mut inboxes: Vec<Sender<T>>,
     cfg: NetConfig,
     stats: Arc<NetStats>,
     clock: Arc<dyn Clock>,
@@ -288,6 +310,12 @@ fn dispatcher<T: Clone + Send>(
                     });
                     seq += 1;
                 }
+            }
+            Ok(ToDispatcher::Register { tx }) => {
+                // joiner's inbox index == its dense id: Register messages
+                // from the single Fabric handle are FIFO, so ids and
+                // indices agree
+                inboxes.push(tx);
             }
             Ok(ToDispatcher::Shutdown) | Err(RecvTimeoutError::Disconnected) => return,
             Err(RecvTimeoutError::Timeout) => {}
@@ -533,6 +561,36 @@ mod tests {
         eps[0].broadcast(1u8, 1);
         drop(fabric); // must not hang
         drop(eps);
+    }
+
+    #[test]
+    fn join_attaches_a_live_endpoint_mid_run() {
+        let (fabric, eps) = Fabric::new(2, NetConfig::ideal());
+        let joiner = fabric.join();
+        assert_eq!(joiner.id, 2, "dense ids continue past the founders");
+        // give the Register message time to reach the dispatcher
+        std::thread::sleep(Duration::from_millis(50));
+
+        // the joiner hears subsequent broadcasts...
+        eps[0].broadcast("post-join".to_string(), 9);
+        assert_eq!(
+            joiner.recv_timeout(Duration::from_secs(2)).as_deref(),
+            Some("post-join")
+        );
+        assert_eq!(
+            eps[1].recv_timeout(Duration::from_secs(2)).as_deref(),
+            Some("post-join")
+        );
+        // ...and its own broadcasts reach the founders but not itself
+        joiner.broadcast("from-joiner".to_string(), 11);
+        for ep in &eps {
+            assert_eq!(
+                ep.recv_timeout(Duration::from_secs(2)).as_deref(),
+                Some("from-joiner")
+            );
+        }
+        assert!(joiner.recv_timeout(Duration::from_millis(100)).is_none());
+        fabric.shutdown();
     }
 
     #[test]

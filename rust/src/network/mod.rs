@@ -43,3 +43,114 @@ pub mod tcp;
 
 pub use fabric::{Endpoint, Fabric, NetConfig, NetStats};
 pub use tcp::TcpEndpoint;
+
+/// How a published payload fans out to the cluster (DESIGN.md §12).
+///
+/// TMSN's protocol layer only requires *eventual* dissemination of
+/// strictly-better certificates; it never requires that every publish
+/// reach every peer directly. That freedom is what makes gossip legal:
+///
+/// * [`BroadcastMode::Full`] — every publish is sent to all `n − 1`
+///   peers. Wire cost of a full round is `O(n²)`; the origin's NIC does
+///   `O(n)` serialized writes per publish.
+/// * [`BroadcastMode::Fanout`] — every publish is sent to `k` seeded
+///   random peers with a TTL; a receiver that *accepts* the payload
+///   (strictly better than its own) re-forwards it to `k` peers with
+///   `ttl − 1`. Dominated payloads die where they land, so only the
+///   improving frontier floods. Per-node send cost is `O(k)` per hop and
+///   duplicate deliveries are suppressed by `(origin, seq, cert)` dedup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BroadcastMode {
+    /// send every publish to all peers (the PR-5 default)
+    Full,
+    /// gossip: send/forward to `k` random peers, `ttl` hops max
+    Fanout {
+        /// peers contacted per publish/forward (≥ 1)
+        k: usize,
+        /// maximum forwarding hops; `0` means "auto" (resolved to the
+        /// cluster size by [`BroadcastMode::resolved_ttl`], which always
+        /// covers the alive-ring worst case)
+        ttl: u32,
+    },
+}
+
+impl Default for BroadcastMode {
+    fn default() -> Self {
+        BroadcastMode::Full
+    }
+}
+
+impl BroadcastMode {
+    /// Parse a CLI spelling: `full`, `fanout` (k = 3), `fanout4`, or
+    /// `fanout:4`.
+    pub fn parse(s: &str) -> Result<BroadcastMode, String> {
+        let s = s.trim();
+        if s == "full" {
+            return Ok(BroadcastMode::Full);
+        }
+        if let Some(rest) = s.strip_prefix("fanout") {
+            let rest = rest.strip_prefix(':').unwrap_or(rest);
+            let k = if rest.is_empty() {
+                3
+            } else {
+                rest.parse::<usize>().map_err(|_| format!("bad fanout degree {rest:?}"))?
+            };
+            if k == 0 {
+                return Err("fanout degree must be >= 1".into());
+            }
+            return Ok(BroadcastMode::Fanout { k, ttl: 0 });
+        }
+        Err(format!("unknown broadcast mode {s:?} (expected full|fanout[K])"))
+    }
+
+    /// True for any fanout variant.
+    pub fn is_fanout(&self) -> bool {
+        matches!(self, BroadcastMode::Fanout { .. })
+    }
+
+    /// The effective TTL for an `n`-worker cluster: an explicit `ttl` is
+    /// kept; the `0` sentinel resolves to `n`, which bounds the longest
+    /// alive-ring path and therefore guarantees an accepted payload can
+    /// reach every alive worker.
+    pub fn resolved_ttl(&self, n: usize) -> u32 {
+        match *self {
+            BroadcastMode::Full => 0,
+            BroadcastMode::Fanout { ttl: 0, .. } => n as u32,
+            BroadcastMode::Fanout { ttl, .. } => ttl,
+        }
+    }
+}
+
+#[cfg(test)]
+mod broadcast_mode_tests {
+    use super::BroadcastMode;
+
+    #[test]
+    fn parse_accepts_the_documented_spellings() {
+        assert_eq!(BroadcastMode::parse("full").unwrap(), BroadcastMode::Full);
+        assert_eq!(
+            BroadcastMode::parse("fanout").unwrap(),
+            BroadcastMode::Fanout { k: 3, ttl: 0 }
+        );
+        assert_eq!(
+            BroadcastMode::parse("fanout5").unwrap(),
+            BroadcastMode::Fanout { k: 5, ttl: 0 }
+        );
+        assert_eq!(
+            BroadcastMode::parse(" fanout:2 ").unwrap(),
+            BroadcastMode::Fanout { k: 2, ttl: 0 }
+        );
+        assert!(BroadcastMode::parse("fanout0").is_err());
+        assert!(BroadcastMode::parse("ring").is_err());
+        assert!(BroadcastMode::parse("fanoutx").is_err());
+    }
+
+    #[test]
+    fn ttl_zero_resolves_to_cluster_size() {
+        let m = BroadcastMode::Fanout { k: 3, ttl: 0 };
+        assert_eq!(m.resolved_ttl(40), 40);
+        let m = BroadcastMode::Fanout { k: 3, ttl: 7 };
+        assert_eq!(m.resolved_ttl(40), 7);
+        assert_eq!(BroadcastMode::Full.resolved_ttl(40), 0);
+    }
+}

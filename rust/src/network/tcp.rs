@@ -15,14 +15,29 @@
 //!     len    u32  = payload bytes
 //!     payload     = `P::encode()` (e.g. certificate line + model text
 //!                   for the boosting payload)
+//!
+//! In **fanout (gossip) mode** (DESIGN.md §12; enabled cluster-wide via
+//! [`TcpEndpoint::enable_fanout`], so all peers speak the same dialect)
+//! the payload area gains a one-byte hop-budget envelope:
+//!     payload     = `[ttl u8][P::encode()]`
+//! A publish goes to `k` seeded random peers instead of all of them; a
+//! receiver that sees a payload for the first time pushes it to its inbox
+//! and — if `ttl > 0` — relays it to `k` of its own peers with `ttl − 1`.
+//! Duplicates are suppressed by `(origin, seq, cert-bits)` dedup, the
+//! same key the simulator's gossip proof uses. The frame *header* is
+//! untouched, so the admin RPC's shared framing keeps working.
 
+use std::collections::HashSet;
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::tmsn::Payload;
+use crate::metrics::{EventKind, EventLog};
+use crate::network::BroadcastMode;
+use crate::tmsn::{Certified, Payload};
+use crate::util::rng::Rng;
 
 const MAGIC: u32 = 0x544D_534E;
 /// hard cap on accepted payloads (a model of 10⁶ stumps ≈ 30 MB text)
@@ -81,11 +96,62 @@ pub(crate) fn read_frame(stream: &mut impl Read) -> io::Result<Option<Vec<u8>>> 
     Ok(Some(payload))
 }
 
+/// Gossip-mode dedup key: `(origin, seq, certificate bits)`. The cert-bits
+/// component disambiguates incarnations — a resumed worker restamps its
+/// checkpoint `(id, 0)`, but any payload it re-publishes carries a
+/// strictly-better (hence bit-different) certificate summary. Mirrors the
+/// simulator's `dedup_key` exactly.
+fn gossip_key<P: Payload>(msg: &P) -> (usize, u64, u64) {
+    let c = msg.cert();
+    (c.origin(), c.seq(), c.summary().to_bits())
+}
+
+/// Frame a payload with the fanout hop-budget envelope:
+/// `[ttl u8][P::encode()]` inside the ordinary magic+len frame.
+fn encode_fanout<P: Payload>(msg: &P, ttl: u32) -> Vec<u8> {
+    let body = msg.encode();
+    let mut payload = Vec::with_capacity(1 + body.len());
+    payload.push(ttl.min(u8::MAX as u32) as u8);
+    payload.extend_from_slice(&body);
+    frame_bytes(&payload)
+}
+
+/// Write `frame` to `k` seeded-random distinct peers (all of them when
+/// `k >= peers.len()`); peers whose write fails are pruned, like
+/// full-mode broadcast.
+fn send_to_k(peers: &mut Vec<TcpStream>, rng: &mut Rng, k: usize, frame: &[u8]) {
+    if peers.is_empty() || k == 0 {
+        return;
+    }
+    let k = k.min(peers.len());
+    let mut dead: Vec<usize> = rng
+        .sample_indices(peers.len(), k)
+        .into_iter()
+        .filter(|&i| peers[i].write_all(frame).is_err())
+        .collect();
+    dead.sort_unstable();
+    for i in dead.into_iter().rev() {
+        peers.remove(i);
+    }
+}
+
+/// Per-endpoint gossip state, shared with the receive threads (they do
+/// the re-forwarding). `None` = full-broadcast mode, no envelopes.
+struct FanoutRt {
+    k: usize,
+    ttl: u32,
+    rng: Rng,
+    seen: HashSet<(usize, u64, u64)>,
+    forwards: u64,
+    log: Option<(EventLog, usize)>,
+}
+
 /// A worker's TCP attachment: listens for peers, dials peers, broadcasts.
 pub struct TcpEndpoint<P: Payload> {
     peers: Arc<Mutex<Vec<TcpStream>>>,
     inbox: Receiver<P>,
     local_addr: SocketAddr,
+    fanout: Arc<Mutex<Option<FanoutRt>>>,
     // keep the sender alive for acceptor threads spawned later
     _inbox_tx: Sender<P>,
 }
@@ -97,15 +163,20 @@ impl<P: Payload> TcpEndpoint<P> {
         let local_addr = listener.local_addr()?;
         let (tx, rx) = channel::<P>();
         let peers: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let fanout: Arc<Mutex<Option<FanoutRt>>> = Arc::new(Mutex::new(None));
 
         let tx_acceptor = tx.clone();
+        let peers_acceptor = Arc::clone(&peers);
+        let fanout_acceptor = Arc::clone(&fanout);
         std::thread::Builder::new()
             .name(format!("tmsn-accept-{local_addr}"))
             .spawn(move || {
                 for stream in listener.incoming() {
                     let Ok(stream) = stream else { break };
                     let tx = tx_acceptor.clone();
-                    std::thread::spawn(move || receive_loop(stream, tx));
+                    let peers = Arc::clone(&peers_acceptor);
+                    let fanout = Arc::clone(&fanout_acceptor);
+                    std::thread::spawn(move || receive_loop(stream, tx, peers, fanout));
                 }
             })?;
 
@@ -113,8 +184,43 @@ impl<P: Payload> TcpEndpoint<P> {
             peers,
             inbox: rx,
             local_addr,
+            fanout,
             _inbox_tx: tx,
         })
+    }
+
+    /// Switch this endpoint into gossip mode (no-op for
+    /// [`BroadcastMode::Full`]). Must be applied to **every** endpoint in
+    /// the cluster with the same mode — the envelope is a cluster-wide
+    /// dialect, not negotiated per link. `n` is the cluster size (resolves
+    /// the `ttl: 0` auto sentinel to `n` hops); `seed` drives peer
+    /// selection, forked per worker by the caller for determinism.
+    pub fn enable_fanout(&self, mode: BroadcastMode, n: usize, seed: u64) {
+        if let BroadcastMode::Fanout { k, .. } = mode {
+            *self.fanout.lock().unwrap() = Some(FanoutRt {
+                k,
+                ttl: mode.resolved_ttl(n),
+                rng: Rng::new(seed),
+                seen: HashSet::new(),
+                forwards: 0,
+                log: None,
+            });
+        }
+    }
+
+    /// Attach an event log to the gossip relay: each re-forward records a
+    /// [`EventKind::Forward`] for `worker_id`. No-op in full mode or
+    /// before [`TcpEndpoint::enable_fanout`].
+    pub fn fanout_event_log(&self, log: EventLog, worker_id: usize) {
+        if let Some(rt) = self.fanout.lock().unwrap().as_mut() {
+            rt.log = Some((log, worker_id));
+        }
+    }
+
+    /// Gossip relays performed by this endpoint's receive threads
+    /// (0 in full mode).
+    pub fn forward_count(&self) -> u64 {
+        self.fanout.lock().unwrap().as_ref().map_or(0, |rt| rt.forwards)
     }
 
     /// The bound address (useful after binding port 0).
@@ -143,11 +249,29 @@ impl<P: Payload> TcpEndpoint<P> {
     }
 
     /// Fire-and-forget broadcast. Dead peers are dropped silently —
-    /// exactly TMSN's failure semantics.
+    /// exactly TMSN's failure semantics. In fanout mode the publish goes
+    /// to `k` seeded-random peers with the full hop budget instead of to
+    /// everyone (lock order here and in the receive path is fanout →
+    /// peers, so gossip relays can't deadlock against a publish).
     pub fn broadcast(&self, msg: &P) {
-        let frame = encode(msg);
-        let mut peers = self.peers.lock().unwrap();
-        peers.retain_mut(|p| p.write_all(&frame).is_ok());
+        let mut fo = self.fanout.lock().unwrap();
+        match fo.as_mut() {
+            None => {
+                drop(fo);
+                let frame = encode(msg);
+                let mut peers = self.peers.lock().unwrap();
+                peers.retain_mut(|p| p.write_all(&frame).is_ok());
+            }
+            Some(rt) => {
+                // remember our own publish so a gossip echo of it is
+                // suppressed instead of re-delivered/re-forwarded
+                rt.seen.insert(gossip_key(msg));
+                let frame = encode_fanout(msg, rt.ttl);
+                let k = rt.k;
+                let mut peers = self.peers.lock().unwrap();
+                send_to_k(&mut peers, &mut rt.rng, k, &frame);
+            }
+        }
     }
 
     /// Non-blocking poll of the inbox.
@@ -166,22 +290,69 @@ impl<P: Payload> TcpEndpoint<P> {
     }
 }
 
-fn receive_loop<P: Payload>(mut stream: TcpStream, tx: Sender<P>) {
+fn receive_loop<P: Payload>(
+    mut stream: TcpStream,
+    tx: Sender<P>,
+    peers: Arc<Mutex<Vec<TcpStream>>>,
+    fanout: Arc<Mutex<Option<FanoutRt>>>,
+) {
     loop {
         match read_frame(&mut stream) {
-            Ok(Some(payload)) => match P::decode(&payload) {
-                Ok(msg) => {
-                    if tx.send(msg).is_err() {
-                        return; // endpoint dropped
+            Ok(Some(payload)) => {
+                let mut fo = fanout.lock().unwrap();
+                let msg = if let Some(rt) = fo.as_mut() {
+                    // fanout dialect: strip the [ttl u8] envelope
+                    if payload.is_empty() {
+                        eprintln!("tmsn-tcp: dropping peer after empty fanout frame");
+                        return;
                     }
+                    let ttl = payload[0] as u32;
+                    match P::decode(&payload[1..]) {
+                        Ok(msg) => {
+                            let key = gossip_key(&msg);
+                            if !rt.seen.insert(key) {
+                                continue; // gossip duplicate: suppress
+                            }
+                            if ttl > 0 {
+                                // first sight with hops left: relay with
+                                // one less hop before delivering locally
+                                rt.forwards += 1;
+                                if let Some((log, id)) = &rt.log {
+                                    log.record(
+                                        *id,
+                                        EventKind::Forward,
+                                        Some((key.0, key.1)),
+                                        msg.cert().summary(),
+                                    );
+                                }
+                                let frame = encode_fanout(&msg, ttl - 1);
+                                let k = rt.k;
+                                let mut ps = peers.lock().unwrap();
+                                send_to_k(&mut ps, &mut rt.rng, k, &frame);
+                            }
+                            msg
+                        }
+                        Err(e) => {
+                            eprintln!("tmsn-tcp: dropping peer after bad payload: {e}");
+                            return;
+                        }
+                    }
+                } else {
+                    drop(fo);
+                    match P::decode(&payload) {
+                        Ok(msg) => msg,
+                        Err(e) => {
+                            // malformed message from a peer: drop the link,
+                            // never crash the worker (resilience semantics)
+                            eprintln!("tmsn-tcp: dropping peer after bad payload: {e}");
+                            return;
+                        }
+                    }
+                };
+                if tx.send(msg).is_err() {
+                    return; // endpoint dropped
                 }
-                Err(e) => {
-                    // malformed message from a peer: drop the link, never
-                    // crash the worker (resilience semantics)
-                    eprintln!("tmsn-tcp: dropping peer after bad payload: {e}");
-                    return;
-                }
-            },
+            }
             Ok(None) | Err(_) => return,
         }
     }
@@ -393,6 +564,82 @@ mod tests {
         b.broadcast(&msg(3));
         let got = a.recv_timeout(Duration::from_secs(5)).expect("delivery");
         assert_eq!(got.cert.seq, 3);
+    }
+
+    /// n endpoints in gossip mode; edges\[i\] lists i's outbound links.
+    fn gossip_cluster(
+        edges: &[&[usize]],
+        k: usize,
+        ttl: u32,
+    ) -> Vec<TcpEndpoint<TestPayload>> {
+        let nodes: Vec<TcpEndpoint<TestPayload>> = (0..edges.len())
+            .map(|_| TcpEndpoint::bind("127.0.0.1:0").unwrap())
+            .collect();
+        for (i, outs) in edges.iter().enumerate() {
+            for &j in outs.iter() {
+                nodes[i].connect(&nodes[j].local_addr().to_string()).unwrap();
+            }
+        }
+        for (i, n) in nodes.iter().enumerate() {
+            n.enable_fanout(BroadcastMode::Fanout { k, ttl }, edges.len(), 0xFA_0 + i as u64);
+        }
+        nodes
+    }
+
+    #[test]
+    fn fanout_relay_walks_a_line() {
+        // 0 → 1 → 2 → 3, k = 1: every hop has exactly one outbound peer,
+        // so the gossip path is deterministic; ttl 8 covers 3 hops
+        let nodes = gossip_cluster(&[&[1], &[2], &[3], &[]], 1, 8);
+        nodes[0].broadcast(&msg(4));
+        for n in &nodes[1..] {
+            let got = n.recv_timeout(Duration::from_secs(5)).expect("relayed delivery");
+            assert_eq!(got.cert.seq, 4);
+        }
+        // middle nodes actually relayed (not direct delivery from 0)
+        assert!(nodes[1].forward_count() >= 1);
+        assert!(nodes[2].forward_count() >= 1);
+        // the publisher hears no echo
+        assert!(nodes[0].recv_timeout(Duration::from_millis(100)).is_none());
+    }
+
+    #[test]
+    fn fanout_ttl_bounds_the_relay_depth() {
+        // same line, ttl = 1: node 1 relays with ttl 0, node 2 delivers
+        // but must not relay, node 3 never hears
+        let nodes = gossip_cluster(&[&[1], &[2], &[3], &[]], 1, 1);
+        nodes[0].broadcast(&msg(7));
+        assert_eq!(nodes[1].recv_timeout(Duration::from_secs(5)).unwrap().cert.seq, 7);
+        assert_eq!(nodes[2].recv_timeout(Duration::from_secs(5)).unwrap().cert.seq, 7);
+        assert!(nodes[3].recv_timeout(Duration::from_millis(300)).is_none());
+        assert_eq!(nodes[2].forward_count(), 0, "ttl 0 must not be re-forwarded");
+    }
+
+    #[test]
+    fn fanout_dedup_delivers_each_payload_once() {
+        // diamond: 0 → {1,2}, both relay to 3; k = 2 ≥ every out-degree,
+        // so both copies reach 3 — dedup must deliver exactly one
+        let nodes = gossip_cluster(&[&[1, 2], &[3], &[3], &[]], 2, 8);
+        nodes[0].broadcast(&msg(11));
+        for n in &nodes[1..3] {
+            assert_eq!(n.recv_timeout(Duration::from_secs(5)).unwrap().cert.seq, 11);
+        }
+        assert_eq!(nodes[3].recv_timeout(Duration::from_secs(5)).unwrap().cert.seq, 11);
+        // the second wire copy is suppressed, never delivered
+        assert!(nodes[3].recv_timeout(Duration::from_millis(300)).is_none());
+    }
+
+    #[test]
+    fn enable_fanout_with_full_mode_is_a_no_op() {
+        let a = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        let b = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        a.enable_fanout(BroadcastMode::Full, 2, 1);
+        b.enable_fanout(BroadcastMode::Full, 2, 2);
+        a.connect(&b.local_addr().to_string()).unwrap();
+        a.broadcast(&msg(5));
+        assert_eq!(b.recv_timeout(Duration::from_secs(5)).unwrap().cert.seq, 5);
+        assert_eq!(a.forward_count(), 0);
+        assert_eq!(b.forward_count(), 0);
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! Delta-debugging scenario minimization (DESIGN.md §12).
+//!
+//! When a sim run violates a TMSN invariant, the raw repro is often a
+//! hundred-event churn schedule over hundreds of workers — useless for a
+//! human. [`minimize`] shrinks it greedily to a *minimal* failing
+//! configuration: it repeatedly tries to drop scenario events, pull event
+//! timestamps earlier, halve the horizon, and shrink the worker count,
+//! keeping a candidate only if the failure predicate still holds on the
+//! candidate's (fully deterministic) run. The result is replayable
+//! byte-identically — `sparrow sim --minimize` prints the reduced
+//! schedule and its trace.
+//!
+//! Candidates that fail [`Scenario::validate`] (e.g. a worker-count
+//! shrink that orphans a membership reference) are rejected *without*
+//! running, so the shrinker never panics the engine.
+
+use std::time::Duration;
+
+use crate::tmsn::Payload;
+
+use super::scenario::Scenario;
+use super::workloads::SimWorker;
+use super::{run_scenario, SimConfig, SimReport};
+
+/// Outcome of a successful minimization.
+#[derive(Debug)]
+pub struct Minimized {
+    /// the reduced configuration (scenario, worker count, horizon)
+    pub cfg: SimConfig,
+    /// candidate runs executed while shrinking
+    pub probes: usize,
+    /// invariant violations of the minimized run (non-empty)
+    pub violations: Vec<String>,
+    /// deterministic trace of the minimized run
+    pub trace: String,
+}
+
+/// Shrink `cfg` to a minimal configuration on which `failing` still
+/// returns true. Returns `None` if the original run does not fail.
+///
+/// `spawn` must be the same worker factory used for the original run —
+/// minimization replays the *same* deterministic system, only smaller.
+pub fn minimize<P, W, S, F>(cfg: &SimConfig, spawn: &S, failing: &F) -> Option<Minimized>
+where
+    P: Payload,
+    W: SimWorker<P>,
+    S: Fn(usize, u64) -> W,
+    F: Fn(&SimReport<P>) -> bool,
+{
+    let mut probes = 0usize;
+    let mut probe = |c: &SimConfig| -> SimReport<P> {
+        probes += 1;
+        run_scenario(c, |id, inc| spawn(id, inc))
+    };
+
+    if !failing(&probe(cfg)) {
+        return None;
+    }
+    let mut cur = cfg.clone();
+
+    loop {
+        let mut shrunk = false;
+
+        // 1) drop events one at a time (left to right; index stays put
+        // after a successful removal because the next event slid into it)
+        let mut i = 0;
+        while i < cur.scenario.len() {
+            let mut events = cur.scenario.events().to_vec();
+            events.remove(i);
+            let cand = SimConfig {
+                scenario: Scenario::from_events(events),
+                ..cur.clone()
+            };
+            if cand.scenario.validate(cand.workers).is_ok() && failing(&probe(&cand)) {
+                cur = cand;
+                shrunk = true;
+            } else {
+                i += 1;
+            }
+        }
+
+        // 2) pull each surviving event earlier (halve its timestamp)
+        for i in 0..cur.scenario.len() {
+            let mut events = cur.scenario.events().to_vec();
+            if events[i].0 > Duration::ZERO {
+                events[i].0 /= 2;
+                let cand = SimConfig {
+                    scenario: Scenario::from_events(events),
+                    ..cur.clone()
+                };
+                if cand.scenario.validate(cand.workers).is_ok() && failing(&probe(&cand)) {
+                    cur = cand;
+                    shrunk = true;
+                }
+            }
+        }
+
+        // 3) halve the horizon
+        if cur.horizon > Duration::from_millis(1) {
+            let cand = SimConfig {
+                horizon: cur.horizon / 2,
+                ..cur.clone()
+            };
+            if failing(&probe(&cand)) {
+                cur = cand;
+                shrunk = true;
+            }
+        }
+
+        // 4) shrink the cluster: halve first, then decrement
+        for w in [cur.workers / 2, cur.workers.saturating_sub(1)] {
+            if w >= 1 && w < cur.workers {
+                let cand = SimConfig {
+                    workers: w,
+                    ..cur.clone()
+                };
+                if cand.scenario.validate(w).is_ok() && failing(&probe(&cand)) {
+                    cur = cand;
+                    shrunk = true;
+                }
+            }
+        }
+
+        if !shrunk {
+            break;
+        }
+    }
+
+    let report = probe(&cur);
+    debug_assert!(failing(&report), "minimized repro must still fail");
+    Some(Minimized {
+        cfg: cur,
+        probes,
+        violations: report.violations,
+        trace: report.trace,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::ScenarioEvent;
+    use crate::tmsn::testpay::TestPayload;
+
+    fn ms(x: u64) -> Duration {
+        Duration::from_millis(x)
+    }
+
+    /// Planted bug: after its first remote adoption the worker starts
+    /// regurgitating its current payload as a "candidate" — a
+    /// non-improving publish the engine flags as a violation. Needs at
+    /// least 2 workers (no adoption ever happens solo).
+    struct Buggy {
+        score: f64,
+        poisoned: bool,
+    }
+    impl SimWorker<TestPayload> for Buggy {
+        fn step(&mut self, current: &TestPayload) -> (Duration, Option<TestPayload>) {
+            if self.poisoned {
+                return (ms(10), Some(current.clone()));
+            }
+            self.score *= 0.9;
+            (ms(10), Some(TestPayload::scored("b", self.score)))
+        }
+        fn on_adopt(&mut self, _adopted: &TestPayload) {
+            self.poisoned = true;
+        }
+    }
+
+    fn spawn(id: usize, _inc: u64) -> Buggy {
+        Buggy {
+            score: 100.0 + id as f64,
+            poisoned: false,
+        }
+    }
+
+    #[test]
+    fn shrinks_a_planted_violation_to_the_minimal_repro() {
+        // 5 workers, 300 ms, and a pile of junk events that have nothing
+        // to do with the planted bug
+        let cfg = SimConfig {
+            workers: 5,
+            horizon: ms(300),
+            scenario: Scenario::new()
+                .at(ms(100), ScenarioEvent::Laggard(3, 4.0))
+                .at(ms(120), ScenarioEvent::Crash(4))
+                .at(ms(130), ScenarioEvent::Partition(vec![vec![0, 1], vec![2, 3]]))
+                .at(ms(150), ScenarioEvent::Restart(4))
+                .at(ms(160), ScenarioEvent::Heal),
+            ..SimConfig::default()
+        };
+        let failing = |r: &SimReport<TestPayload>| !r.violations.is_empty();
+        let m = minimize(&cfg, &spawn, &failing).expect("planted bug must fail the base run");
+
+        assert!(m.cfg.scenario.is_empty(), "all junk events removed: {:?}", m.cfg.scenario);
+        assert_eq!(m.cfg.workers, 2, "bug needs an adoption, so exactly 2 workers");
+        assert!(m.cfg.horizon < ms(300), "horizon shrunk");
+        assert!(!m.violations.is_empty());
+        assert!(m.probes > 5, "the shrinker actually searched");
+
+        // the minimized repro is byte-identical on replay
+        let a = run_scenario(&m.cfg, spawn);
+        let b = run_scenario(&m.cfg, spawn);
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.trace, m.trace, "reported trace is the replayed trace");
+        assert!(!a.violations.is_empty());
+    }
+
+    #[test]
+    fn healthy_run_is_not_minimized() {
+        // same workload, but with one worker no adoption ever happens,
+        // so nothing fails and minimize declines
+        let cfg = SimConfig {
+            workers: 1,
+            horizon: ms(100),
+            ..SimConfig::default()
+        };
+        let failing = |r: &SimReport<TestPayload>| !r.violations.is_empty();
+        assert!(minimize(&cfg, &spawn, &failing).is_none());
+    }
+}

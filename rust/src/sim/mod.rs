@@ -1,4 +1,4 @@
-//! Deterministic fault-injection simulator (DESIGN.md §9).
+//! Deterministic fault-injection simulator (DESIGN.md §9, §12).
 //!
 //! The paper's headline resilience claim — TMSN "does not require
 //! synchronization or a head node and is highly resilient against failing
@@ -7,8 +7,8 @@
 //! protocol state machine ([`crate::tmsn::Tmsn`]) over a simulated wire
 //! ([`SimNet`], implementing the generic [`crate::tmsn::Link`]) under
 //! **virtual time** ([`SimClock`]), while a scripted [`Scenario`] injects
-//! crashes, restarts, laggards, and partitions at exact virtual
-//! timestamps.
+//! crashes, checkpoint-resuming restarts, mid-run joins, laggards, and
+//! (one- or two-way) partitions at exact virtual timestamps.
 //!
 //! Because every stochastic choice flows from one seeded RNG and the
 //! event loop is single-threaded with a total deterministic order over
@@ -20,20 +20,29 @@
 //! 1. **verdict soundness** — a message is accepted iff its certificate
 //!    is strictly better than the worker's current one;
 //! 2. **certificate monotonicity** — no worker's certificate ever
-//!    worsens (per incarnation; a restart legitimately starts over);
+//!    worsens (per incarnation; a resumed incarnation starts from its
+//!    checkpoint, never worse than empty);
 //! 3. **local-improvement soundness** — a worker never publishes a
 //!    payload that does not strictly improve on its own.
 //!
 //! Violations are collected (not panicked) so a failing scenario reports
-//! every broken invariant alongside its replayable trace.
+//! every broken invariant alongside its replayable trace — which
+//! [`crate::sim::minimize`] can then shrink to a minimal repro.
+//!
+//! In gossip mode ([`crate::network::BroadcastMode::Fanout`]) the engine
+//! adds the relay rule: a worker that *accepts* a payload with remaining
+//! TTL re-forwards it to `k` peers with `ttl − 1`. Rejected (dominated)
+//! payloads are never forwarded, so only the improving frontier floods.
 
 pub mod clock;
+pub mod minimize;
 pub mod net;
 pub mod scenario;
 pub mod trace;
 pub mod workloads;
 
 pub use clock::{Clock, RealClock, SimClock};
+pub use minimize::{minimize, Minimized};
 pub use net::{EdgeFaults, SimEndpoint, SimNet, SimNetConfig, SimNetStats};
 pub use scenario::{Scenario, ScenarioEvent};
 pub use trace::SimTrace;
@@ -49,12 +58,13 @@ use crate::util::rng::Rng;
 /// Configuration of one simulated cluster run.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
-    /// cluster size
+    /// initial cluster size (the swarm may grow via
+    /// [`ScenarioEvent::Join`])
     pub workers: usize,
     /// master seed: forked into the net's fault RNG (workload seeds are
     /// derived by the caller's spawn function)
     pub seed: u64,
-    /// wire fault model
+    /// wire fault model and broadcast mode
     pub net: SimNetConfig,
     /// scripted fault schedule
     pub scenario: Scenario,
@@ -105,7 +115,7 @@ pub struct WorkerSummary {
 pub struct SimReport<P: Payload> {
     /// best payload ever published on the wire
     pub best: P,
-    /// per-worker accounting
+    /// per-worker accounting (grows if the scenario joins workers)
     pub workers: Vec<WorkerSummary>,
     /// TMSN invariant violations observed (empty = the claims held)
     pub violations: Vec<String>,
@@ -146,12 +156,15 @@ struct Slot<P: Payload, W> {
     /// verdict counters of completed incarnations
     acc_accepts: u64,
     acc_rejects: u64,
-    /// last certificate, for the monotonicity invariant (reset on restart)
+    /// last certificate, for the monotonicity invariant (reset to the
+    /// checkpoint on resume)
     prev_cert: <P as Payload>::Cert,
 }
 
 /// Drain one worker's inbox through the real verdict rule, checking the
 /// accept-iff-strictly-better and monotonicity invariants per message.
+/// In fanout mode, accepted payloads with hop budget left are re-forwarded
+/// (gossip relay); rejected payloads die here.
 fn drain_inbox<P: Payload, W: SimWorker<P>>(
     slot: &mut Slot<P, W>,
     t: Duration,
@@ -159,7 +172,7 @@ fn drain_inbox<P: Payload, W: SimWorker<P>>(
     trace: &mut SimTrace,
     violations: &mut Vec<String>,
 ) {
-    while let Some(msg) = slot.ep.poll() {
+    while let Some((msg, ttl)) = slot.ep.poll_with_ttl() {
         let id = slot.tmsn.worker_id();
         let (origin, seq) = (msg.cert().origin(), msg.cert().seq());
         let val = msg.cert().summary();
@@ -176,6 +189,11 @@ fn drain_inbox<P: Payload, W: SimWorker<P>>(
                 }
                 let adopted = slot.tmsn.payload().clone();
                 slot.worker.on_adopt(&adopted);
+                if ttl > 0 {
+                    log.record(id, EventKind::Forward, Some((origin, seq)), val);
+                    trace.push(t, &format!("w{id}   forward {origin}#{seq} ttl={}", ttl - 1));
+                    slot.ep.forward(adopted, ttl - 1);
+                }
             }
             Verdict::Reject => {
                 log.record(id, EventKind::Reject, Some((origin, seq)), val);
@@ -244,12 +262,32 @@ fn worker_turn<P: Payload, W: SimWorker<P>>(
     check_monotone(slot, t, violations);
 }
 
+fn fresh_slot<P: Payload, W>(id: usize, worker: W, ep: SimEndpoint<P>, t: Duration) -> Slot<P, W> {
+    Slot {
+        tmsn: Tmsn::new(id),
+        worker,
+        ep,
+        alive: true,
+        speed: 1.0,
+        next_ready: t,
+        steps: 0,
+        published: 0,
+        restarts: 0,
+        acc_accepts: 0,
+        acc_rejects: 0,
+        prev_cert: <P as Payload>::Cert::initial(),
+    }
+}
+
 /// Run one scenario to completion and report.
 ///
 /// `spawn(id, incarnation)` builds a worker's local-search state;
 /// incarnation 0 is the initial boot, 1+ follow restarts. Derive any
 /// workload randomness from both arguments so restarted workers are
 /// deterministic too.
+///
+/// Panics if the scenario fails [`Scenario::validate`] against
+/// `cfg.workers` (out-of-range references or non-dense joins).
 pub fn run_scenario<P, W, F>(cfg: &SimConfig, mut spawn: F) -> SimReport<P>
 where
     P: Payload,
@@ -257,9 +295,10 @@ where
     F: FnMut(usize, u64) -> W,
 {
     assert!(cfg.workers >= 1, "need at least one worker");
-    if let Some(m) = cfg.scenario.max_worker() {
-        assert!(m < cfg.workers, "scenario references worker {m} of {}", cfg.workers);
-    }
+    let final_size = cfg
+        .scenario
+        .validate(cfg.workers)
+        .unwrap_or_else(|e| panic!("invalid scenario: {e}"));
 
     let clock = Arc::new(SimClock::new());
     let (log, event_rx) = EventLog::with_clock(clock.clone());
@@ -272,20 +311,7 @@ where
     let mut slots: Vec<Slot<P, W>> = endpoints
         .into_iter()
         .enumerate()
-        .map(|(id, ep)| Slot {
-            tmsn: Tmsn::new(id),
-            worker: spawn(id, 0),
-            ep,
-            alive: true,
-            speed: 1.0,
-            next_ready: Duration::ZERO,
-            steps: 0,
-            published: 0,
-            restarts: 0,
-            acc_accepts: 0,
-            acc_rejects: 0,
-            prev_cert: <P as Payload>::Cert::initial(),
-        })
+        .map(|(id, ep)| fresh_slot(id, spawn(id, 0), ep, Duration::ZERO))
         .collect();
 
     let sched = cfg.scenario.sorted();
@@ -326,18 +352,37 @@ where
                         s.acc_rejects += s.tmsn.rejects;
                         s.restarts += 1;
                         s.alive = true;
-                        s.tmsn = Tmsn::new(*i);
+                        // checkpoint-based rejoin (DESIGN.md §12): the new
+                        // incarnation resumes from the last committed
+                        // payload instead of starting empty, and catches
+                        // up from broadcasts alone
+                        let checkpoint = s.tmsn.payload().clone();
+                        s.tmsn = Tmsn::resume(*i, checkpoint);
                         s.worker = spawn(*i, s.restarts);
-                        s.prev_cert = <P as Payload>::Cert::initial();
+                        s.worker.on_adopt(s.tmsn.payload());
+                        s.prev_cert = s.tmsn.cert().clone();
                         s.next_ready = t;
                         net.set_down(*i, false);
+                        let val = s.tmsn.cert().summary();
+                        log.record(*i, EventKind::Rejoin, None, val);
+                        trace.push(t, &format!("w{i}   resume  cert={val:.9}"));
                     }
+                }
+                ScenarioEvent::Join(i) => {
+                    // dynamic membership: the swarm grows by one; the new
+                    // worker starts empty and converges from broadcasts
+                    assert_eq!(*i, slots.len(), "joins are dense (validated)");
+                    let ep = net.join();
+                    debug_assert_eq!(ep.id(), *i);
+                    log.record(*i, EventKind::Join, None, 0.0);
+                    slots.push(fresh_slot(*i, spawn(*i, 0), ep, t));
                 }
                 ScenarioEvent::Laggard(i, k) => {
                     assert!(*k > 0.0, "laggard factor must be positive");
                     slots[*i].speed = *k;
                 }
                 ScenarioEvent::Partition(groups) => net.partition(groups),
+                ScenarioEvent::PartitionOneWay(edges) => net.partition_oneway(edges),
                 ScenarioEvent::Heal => net.heal(),
             }
             sidx += 1;
@@ -365,17 +410,38 @@ where
         }
     }
 
-    // quiescence: every in-flight message has been delivered or discarded;
-    // survivors take one final look at their inboxes (adopt-only)
-    let t_end = clock.now_virtual();
+    // quiescence: survivors sweep their inboxes (adopt-only). In fanout
+    // mode an accept during the sweep re-forwards, putting new gossip on
+    // the wire — so iterate to a fixpoint: drain inboxes, deliver the next
+    // due batch, repeat until nothing is in flight. Terminates because
+    // every forward is triggered by a strict improvement and the set of
+    // published certificates is finite.
+    let mut t_end = clock.now_virtual();
+    loop {
+        for slot in slots.iter_mut() {
+            if slot.alive {
+                drain_inbox(slot, t_end, &log, &mut trace, &mut violations);
+            }
+        }
+        for (wt, line) in net.drain_wire_log() {
+            trace.push(wt, &line);
+        }
+        let Some(due) = net.next_due() else { break };
+        t_end = t_end.max(due);
+        clock.advance_to(t_end);
+        net.set_now(t_end);
+        net.deliver_due(t_end);
+        for (wt, line) in net.drain_wire_log() {
+            trace.push(wt, &line);
+        }
+    }
     for slot in slots.iter_mut() {
         if slot.alive {
-            drain_inbox(slot, t_end, &log, &mut trace, &mut violations);
             log.record(slot.tmsn.worker_id(), EventKind::Finish, None, slot.tmsn.cert().summary());
         }
     }
 
-    let workers = slots
+    let workers: Vec<WorkerSummary> = slots
         .iter()
         .map(|s| WorkerSummary {
             id: s.tmsn.worker_id(),
@@ -389,6 +455,7 @@ where
         })
         .collect();
 
+    debug_assert_eq!(workers.len(), final_size, "every validated join must have fired");
     debug_assert_eq!(net.queue_len(), 0, "event loop exited with messages in flight");
     SimReport {
         best,
@@ -403,10 +470,19 @@ where
 
 /// Named scenario presets shared by the test suite and the `sparrow sim`
 /// CLI; all timestamps are inside the default 1.5 s horizon.
-pub const PRESETS: &[&str] = &["calm", "crash", "laggard", "partition", "churn"];
+pub const PRESETS: &[&str] = &[
+    "calm",
+    "crash",
+    "laggard",
+    "partition",
+    "churn",
+    "join",
+    "churn_large",
+];
 
 /// Build a preset schedule for an `n`-worker cluster; `None` for unknown
-/// names. See [`PRESETS`].
+/// names. See [`PRESETS`]. Every preset is a pure function of `n`, so the
+/// run trace stays a pure function of `(seed, preset, n)`.
 pub fn preset(name: &str, n: usize) -> Option<Scenario> {
     let ms = Duration::from_millis;
     Some(match name {
@@ -438,6 +514,63 @@ pub fn preset(name: &str, n: usize) -> Option<Scenario> {
                 .at(ms(900), ScenarioEvent::Restart(1 % n))
                 .at(ms(1200), ScenarioEvent::Crash(n - 1))
         }
+        // elastic membership: two workers join mid-run, one original
+        // worker crashes and resumes from its checkpoint
+        "join" => Scenario::new()
+            .at(ms(200), ScenarioEvent::Join(n))
+            .at(ms(400), ScenarioEvent::Join(n + 1))
+            .at(ms(600), ScenarioEvent::Crash(0))
+            .at(ms(900), ScenarioEvent::Restart(0)),
+        // the full elastic-swarm battery: seeded joins, crash/rejoin
+        // waves, laggards, a symmetric split, and a one-way fault — scales
+        // from 5 to 1000 workers as a pure function of n
+        "churn_large" => {
+            let mut rng = Rng::new(0xC0FF_EE ^ n as u64);
+            let mut s = Scenario::new();
+            // dense joins at non-decreasing times: id order must agree
+            // with time order, so no per-join jitter
+            let joins = (n / 5).clamp(1, 200);
+            for j in 0..joins {
+                let t = 150 + (j as u64 * 400) / joins as u64;
+                s = s.at(ms(t), ScenarioEvent::Join(n + j));
+            }
+            // crash a quarter of the initial swarm; every second victim
+            // resumes from its checkpoint later
+            let mut victims: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut victims);
+            let crashes = (n / 4).max(1);
+            let mut crashed = vec![false; n];
+            for (c, &w) in victims.iter().take(crashes).enumerate() {
+                let t = 250 + rng.below(551);
+                s = s.at(ms(t), ScenarioEvent::Crash(w));
+                crashed[w] = true;
+                if c % 2 == 1 {
+                    s = s.at(ms(t + 150 + rng.below(251)), ScenarioEvent::Restart(w));
+                }
+            }
+            // a few laggards among the never-crashed
+            for &w in victims.iter().rev().take((n / 20).max(1)) {
+                if !crashed[w] {
+                    let t = 100 + rng.below(301);
+                    s = s.at(ms(t), ScenarioEvent::Laggard(w, 2.0 + rng.f64() * 6.0));
+                }
+            }
+            // a symmetric split (joined workers are isolated until heal),
+            // then an asymmetric fault
+            if n >= 3 {
+                let a: Vec<usize> = (0..n / 3).collect();
+                let b: Vec<usize> = (n / 3..n).collect();
+                s = s
+                    .at(ms(400), ScenarioEvent::Partition(vec![a, b]))
+                    .at(ms(650), ScenarioEvent::Heal);
+            }
+            if n >= 4 {
+                s = s
+                    .at(ms(700), ScenarioEvent::PartitionOneWay(vec![(0, 1), (2, 3)]))
+                    .at(ms(1000), ScenarioEvent::Heal);
+            }
+            s
+        }
         _ => return None,
     })
 }
@@ -445,6 +578,7 @@ pub fn preset(name: &str, n: usize) -> Option<Scenario> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::network::BroadcastMode;
     use crate::tmsn::testpay::TestPayload;
 
     /// Trivial deterministic workload: improve by 10% every step.
@@ -509,7 +643,7 @@ mod tests {
     }
 
     #[test]
-    fn restart_rejoins_with_fresh_state() {
+    fn restart_resumes_from_checkpoint() {
         let c = cfg(
             2,
             Scenario::new()
@@ -522,6 +656,29 @@ mod tests {
         assert_eq!(r.workers[1].restarts, 1);
         assert!(r.survivors_converged(), "restarted worker must catch up");
         assert!(r.trace.contains("w1   restart"));
+        // the resume line proves the incarnation started from its
+        // checkpoint, not from the empty model
+        assert!(r.trace.contains("w1   resume  cert="), "{}", r.trace);
+        assert!(!r.trace.contains("cert=inf"), "checkpoint must not be empty");
+    }
+
+    #[test]
+    fn join_grows_the_swarm_and_the_joiner_converges() {
+        let c = cfg(
+            2,
+            Scenario::new().at(Duration::from_millis(60), ScenarioEvent::Join(2)),
+        );
+        let r = run(&c);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+        assert_eq!(r.workers.len(), 3, "report covers the joined worker");
+        assert!(r.workers[2].alive);
+        assert!(r.workers[2].steps > 0, "joined worker must do work");
+        assert!(
+            r.workers[2].steps < r.workers[0].steps,
+            "it joined late, so it did less"
+        );
+        assert!(r.survivors_converged(), "join order must not break adoption");
+        assert!(r.trace.contains("w2   join"));
     }
 
     #[test]
@@ -539,11 +696,35 @@ mod tests {
     }
 
     #[test]
-    fn unknown_preset_is_none_and_known_presets_build() {
+    fn fanout_mode_converges_via_gossip_relay() {
+        let mut c = cfg(4, Scenario::new());
+        c.net.mode = BroadcastMode::Fanout { k: 1, ttl: 0 };
+        let r = run(&c);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+        assert!(
+            r.net.forwarded > 0,
+            "k=1 on a 4-cluster must rely on re-forwarding"
+        );
+        assert!(
+            r.survivors_converged(),
+            "alive-ring + ttl=n must reach everyone: {}",
+            r.trace
+        );
+        assert!(r.trace.contains("forward"), "relay must appear in the trace");
+    }
+
+    #[test]
+    fn unknown_preset_is_none_and_known_presets_validate() {
         assert!(preset("nope", 4).is_none());
         for name in PRESETS {
             let s = preset(name, 5).expect(name);
-            assert!(s.max_worker().map_or(true, |m| m < 5), "{name}");
+            // presets may join workers beyond n, so the membership walk
+            // (not max_worker) is the correctness check
+            let size = s.validate(5);
+            assert!(size.is_ok(), "{name}: {size:?}");
         }
+        // the battery preset must also build at swarm scale
+        let big = preset("churn_large", 100).unwrap();
+        assert_eq!(big.validate(100), Ok(120), "100 initial + 20 joins");
     }
 }

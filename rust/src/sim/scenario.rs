@@ -5,7 +5,10 @@
 //! dies at t=300ms, the rack splits at t=500ms and heals at t=800ms, …".
 //! Because the schedule is data (not sleeps on real threads), the same
 //! scenario replays identically under any seed and can be asserted on in
-//! CI (DESIGN.md §9).
+//! CI (DESIGN.md §9), shrunk to a minimal repro by the delta-debugger
+//! ([`crate::sim::minimize`]), and extended with elastic-membership
+//! events ([`ScenarioEvent::Join`]) without touching the engine's
+//! determinism story (DESIGN.md §12).
 
 use std::time::Duration;
 
@@ -13,21 +16,36 @@ use std::time::Duration;
 #[derive(Debug, Clone, PartialEq)]
 pub enum ScenarioEvent {
     /// Worker halts: no more local work, its inbox is discarded, and every
-    /// message delivered to it while down is dropped.
+    /// message delivered to it while down is dropped. Its last committed
+    /// payload survives as its checkpoint (see [`ScenarioEvent::Restart`]).
     Crash(usize),
-    /// A crashed worker rejoins with a fresh (empty) model — the paper's
-    /// no-ceremony recovery: it catches up purely by receiving broadcasts.
+    /// A crashed worker rejoins with a fresh incarnation, *resuming from
+    /// its last committed payload* (checkpoint-based rejoin via
+    /// `Tmsn::resume`) — the paper's no-ceremony recovery, hardened: it
+    /// loses nothing it had certified and catches the cluster up purely
+    /// by receiving broadcasts.
     Restart(usize),
+    /// A worker unknown at t=0 joins the in-flight run with an empty
+    /// model. Join ids must be assigned densely: the `i`-th join in
+    /// schedule order must carry id `initial_workers + i` (checked by
+    /// [`Scenario::validate`]).
+    Join(usize),
     /// Worker's compute slows by the given factor (≥ 1); a factor of 1
     /// restores full speed.
     Laggard(usize, f64),
     /// Network splits into the given groups; messages sent across group
     /// boundaries are silently blocked. Workers not listed in any group
-    /// are isolated. Replaces any previous partition.
+    /// (including ones that join while the split is active) are isolated.
+    /// Replaces any previous group partition.
     Partition(Vec<Vec<usize>>),
-    /// Remove the partition: all links work again (messages blocked while
-    /// partitioned are *not* retransmitted — TMSN needs no replay, later
-    /// broadcasts carry strictly-better state).
+    /// Asymmetric (one-way) partition: each `(a, b)` edge blocks messages
+    /// `a → b` while `b → a` still delivers. Replaces any previous
+    /// one-way edge set; composes with [`ScenarioEvent::Partition`].
+    PartitionOneWay(Vec<(usize, usize)>),
+    /// Remove every partition, group and one-way alike: all links work
+    /// again (messages blocked while partitioned are *not* retransmitted —
+    /// TMSN needs no replay, later broadcasts carry strictly-better
+    /// state).
     Heal,
 }
 
@@ -37,8 +55,12 @@ impl ScenarioEvent {
         match self {
             ScenarioEvent::Crash(w) => format!("w{w}   crash"),
             ScenarioEvent::Restart(w) => format!("w{w}   restart"),
+            ScenarioEvent::Join(w) => format!("w{w}   join"),
             ScenarioEvent::Laggard(w, k) => format!("w{w}   laggard x{k}"),
             ScenarioEvent::Partition(groups) => format!("net  partition {groups:?}"),
+            ScenarioEvent::PartitionOneWay(edges) => {
+                format!("net  partition-oneway {edges:?}")
+            }
             ScenarioEvent::Heal => "net  heal".to_string(),
         }
     }
@@ -46,9 +68,10 @@ impl ScenarioEvent {
     /// The worker this event targets, if any (used for validation).
     pub fn worker(&self) -> Option<usize> {
         match self {
-            ScenarioEvent::Crash(w) | ScenarioEvent::Restart(w) | ScenarioEvent::Laggard(w, _) => {
-                Some(*w)
-            }
+            ScenarioEvent::Crash(w)
+            | ScenarioEvent::Restart(w)
+            | ScenarioEvent::Join(w)
+            | ScenarioEvent::Laggard(w, _) => Some(*w),
             _ => None,
         }
     }
@@ -71,6 +94,17 @@ impl Scenario {
     pub fn at(mut self, t: Duration, event: ScenarioEvent) -> Scenario {
         self.events.push((t, event));
         self
+    }
+
+    /// Rebuild a scenario from an explicit event list (used by the
+    /// delta-debugging minimizer to propose reduced schedules).
+    pub fn from_events(events: Vec<(Duration, ScenarioEvent)>) -> Scenario {
+        Scenario { events }
+    }
+
+    /// The raw schedule in insertion order.
+    pub fn events(&self) -> &[(Duration, ScenarioEvent)] {
+        &self.events
     }
 
     /// The schedule sorted by timestamp (stable: insertion order breaks
@@ -99,9 +133,65 @@ impl Scenario {
                 ScenarioEvent::Partition(groups) => {
                     groups.iter().flatten().copied().collect::<Vec<_>>()
                 }
+                ScenarioEvent::PartitionOneWay(edges) => {
+                    edges.iter().flat_map(|&(a, b)| [a, b]).collect()
+                }
                 other => other.worker().into_iter().collect(),
             })
             .max()
+    }
+
+    /// Walk the schedule in replay order and check the dynamic-membership
+    /// rules: every referenced worker must already be a member when its
+    /// event fires, and joins must be dense (`Join(size)` when the swarm
+    /// holds `size` workers). Returns the final swarm size.
+    pub fn validate(&self, initial_workers: usize) -> Result<usize, String> {
+        let mut size = initial_workers;
+        for (t, e) in self.sorted() {
+            match &e {
+                ScenarioEvent::Join(w) => {
+                    if *w != size {
+                        return Err(format!(
+                            "join of worker {w} at {t:?} but the swarm holds {size} \
+                             workers (joins must be dense)"
+                        ));
+                    }
+                    size += 1;
+                }
+                ScenarioEvent::Partition(groups) => {
+                    for &w in groups.iter().flatten() {
+                        if w >= size {
+                            return Err(format!(
+                                "partition at {t:?} references worker {w} of {size}"
+                            ));
+                        }
+                    }
+                }
+                ScenarioEvent::PartitionOneWay(edges) => {
+                    for &(a, b) in edges {
+                        if a >= size || b >= size {
+                            return Err(format!(
+                                "one-way partition at {t:?} references edge \
+                                 ({a},{b}) of {size}"
+                            ));
+                        }
+                        if a == b {
+                            return Err(format!("one-way self-edge ({a},{b}) at {t:?}"));
+                        }
+                    }
+                }
+                other => {
+                    if let Some(w) = other.worker() {
+                        if w >= size {
+                            return Err(format!(
+                                "event at {t:?} references worker {w} of {size}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(size)
     }
 }
 
@@ -131,6 +221,8 @@ mod tests {
             .at(ms(1), ScenarioEvent::Crash(2))
             .at(ms(2), ScenarioEvent::Partition(vec![vec![0, 5], vec![1]]));
         assert_eq!(s.max_worker(), Some(5));
+        let s = Scenario::new().at(ms(1), ScenarioEvent::PartitionOneWay(vec![(1, 7)]));
+        assert_eq!(s.max_worker(), Some(7));
         assert_eq!(Scenario::new().max_worker(), None);
     }
 
@@ -139,5 +231,45 @@ mod tests {
         assert_eq!(ScenarioEvent::Crash(3).describe(), "w3   crash");
         assert_eq!(ScenarioEvent::Heal.describe(), "net  heal");
         assert_eq!(ScenarioEvent::Laggard(1, 4.0).describe(), "w1   laggard x4");
+        assert_eq!(ScenarioEvent::Join(6).describe(), "w6   join");
+        assert_eq!(
+            ScenarioEvent::PartitionOneWay(vec![(0, 2)]).describe(),
+            "net  partition-oneway [(0, 2)]"
+        );
+    }
+
+    #[test]
+    fn validate_walks_membership_in_replay_order() {
+        // join makes worker 3 legal for later events, even when the later
+        // event was *inserted* first
+        let s = Scenario::new()
+            .at(ms(50), ScenarioEvent::Crash(3))
+            .at(ms(10), ScenarioEvent::Join(3));
+        assert_eq!(s.validate(3), Ok(4));
+        // same events, join too late: the crash references a non-member
+        let s = Scenario::new()
+            .at(ms(50), ScenarioEvent::Crash(3))
+            .at(ms(99), ScenarioEvent::Join(3));
+        assert!(s.validate(3).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_sparse_joins() {
+        let s = Scenario::new().at(ms(10), ScenarioEvent::Join(5));
+        assert!(s.validate(3).is_err(), "join must target the next id");
+        let s = Scenario::new()
+            .at(ms(10), ScenarioEvent::Join(3))
+            .at(ms(20), ScenarioEvent::Join(4));
+        assert_eq!(s.validate(3), Ok(5));
+    }
+
+    #[test]
+    fn validate_checks_partition_membership_and_self_edges() {
+        let s = Scenario::new().at(ms(1), ScenarioEvent::Partition(vec![vec![0, 4]]));
+        assert!(s.validate(3).is_err());
+        let s = Scenario::new().at(ms(1), ScenarioEvent::PartitionOneWay(vec![(0, 0)]));
+        assert!(s.validate(3).is_err(), "self-edges are meaningless");
+        let s = Scenario::new().at(ms(1), ScenarioEvent::PartitionOneWay(vec![(0, 2)]));
+        assert_eq!(s.validate(3), Ok(3));
     }
 }

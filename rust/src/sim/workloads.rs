@@ -54,6 +54,16 @@ pub struct BoostSimWorker {
     pub jitter_mean: Duration,
     /// probability one unit certifies a weak rule
     pub hit_rate: f64,
+    /// *independent certificate stream* (DESIGN.md §12): when set, the
+    /// candidate's bound is the worker's **own** cumulative product of
+    /// `sqrt(1 − 4γ²)` over its own hits — a pure function of the
+    /// worker's seed, never of adopted payloads. The global best bound is
+    /// then invariant to the broadcast mode (full vs fanout deliver the
+    /// same publishes in different orders), which is what lets the test
+    /// suite assert fanout/full *bitwise* final-model equivalence.
+    pub independent: bool,
+    /// cumulative own bound (independent mode only)
+    own_bound: f64,
 }
 
 impl BoostSimWorker {
@@ -65,6 +75,8 @@ impl BoostSimWorker {
             step_cost: Duration::from_millis(2),
             jitter_mean: Duration::from_millis(1),
             hit_rate: 0.7,
+            independent: false,
+            own_bound: 1.0,
         }
     }
 
@@ -75,6 +87,15 @@ impl BoostSimWorker {
         BoostSimWorker::new(
             run_seed ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ (incarnation << 48),
         )
+    }
+
+    /// [`BoostSimWorker::for_run`] with the independent certificate
+    /// stream enabled (see the `independent` field) — the workload the
+    /// fanout-vs-full equivalence battery runs.
+    pub fn independent_for_run(run_seed: u64, id: usize, incarnation: u64) -> BoostSimWorker {
+        let mut w = BoostSimWorker::for_run(run_seed, id, incarnation);
+        w.independent = true;
+        w
     }
 }
 
@@ -100,6 +121,16 @@ impl SimWorker<BoostPayload> for BoostSimWorker {
             ),
             alpha as f32,
         );
+        if self.independent {
+            // all RNG draws above happen in both branches, so the search
+            // stream (and every virtual cost) is identical whether or not
+            // this flag is set — only the certificate arithmetic differs
+            self.own_bound *= (1.0 - 4.0 * gamma * gamma).sqrt();
+            if self.own_bound < current.cert.loss_bound {
+                return (cost, Some(BoostPayload::resume(model, self.own_bound)));
+            }
+            return (cost, None);
+        }
         (cost, Some(current.improved(model, gamma)))
     }
 
@@ -222,6 +253,48 @@ mod tests {
             }
         }
         assert!(p.cert.loss_bound < 1.0, "no improvement ever found");
+    }
+
+    #[test]
+    fn independent_stream_is_invariant_to_what_gets_adopted() {
+        // feed the same seeded worker two different adoption histories:
+        // (a) adopt every own candidate, (b) never adopt (current pinned
+        // at the initial payload). The published bound sequence must be
+        // bitwise identical — the property the fanout-vs-full equivalence
+        // battery rests on.
+        let bounds = |adopt_own: bool| {
+            let mut w = BoostSimWorker::independent_for_run(42, 3, 0);
+            let mut p = BoostPayload::initial();
+            let mut out = Vec::new();
+            for _ in 0..60 {
+                if let (_, Some(c)) = w.step(&p) {
+                    out.push(c.cert.loss_bound.to_bits());
+                    if adopt_own {
+                        p = c;
+                    }
+                }
+            }
+            out
+        };
+        let a = bounds(true);
+        let b = bounds(false);
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "own-bound stream must not depend on adoption history");
+    }
+
+    #[test]
+    fn independent_candidates_still_strictly_improve() {
+        let mut w = BoostSimWorker::independent_for_run(7, 0, 0);
+        let mut p = BoostPayload::initial();
+        let mut found = 0;
+        for _ in 0..50 {
+            if let (_, Some(c)) = w.step(&p) {
+                assert!(c.cert().better_than(p.cert()));
+                p = c;
+                found += 1;
+            }
+        }
+        assert!(found > 0);
     }
 
     fn sgd_fixture() -> (Arc<DataBlock>, Arc<DataBlock>) {

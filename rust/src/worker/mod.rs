@@ -126,6 +126,23 @@ fn crashed_result(id: usize, cfg: &TrainConfig, log: &EventLog) -> WorkerResult 
     }
 }
 
+/// Atomically persist the worker's current payload as a resumable
+/// checkpoint: `<path>` gets the model text, `<path>.meta` the certified
+/// bound — the exact files `--resume <path>` reads back. Both writes go
+/// through a temp file + rename, so a kill mid-write leaves the previous
+/// checkpoint intact. The model lands before the meta; a kill between the
+/// two renames leaves a *stale (larger)* bound next to a better model,
+/// which is the safe direction — the resumed certificate under-claims.
+pub fn write_checkpoint(path: &str, payload: &BoostPayload) -> std::io::Result<()> {
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, payload.model.to_text())?;
+    std::fs::rename(&tmp, path)?;
+    let meta_tmp = format!("{path}.meta.tmp");
+    std::fs::write(&meta_tmp, format!("bound={}\n", payload.cert.loss_bound))?;
+    std::fs::rename(&meta_tmp, format!("{path}.meta"))?;
+    Ok(())
+}
+
 /// Install a freshly built sample into the scanner's seat (shared by the
 /// blocking post-resample path and the background swap-at-a-batch-boundary
 /// path): replace the sample, ensure its quantized stripe view when the
@@ -295,7 +312,13 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
     let mut version: u64 = 0;
 
     let tmsn = match &cfg.resume {
-        Some((model, bound)) => Tmsn::resume(id, BoostPayload::resume(model.clone(), *bound)),
+        Some((model, bound)) => {
+            // crash-rejoin (DESIGN.md §12): restart from the last
+            // committed checkpoint, restamped (id, 0) so any own prior
+            // broadcast still in flight beats it and catches us up
+            log.record(id, EventKind::Rejoin, None, *bound);
+            Tmsn::resume(id, BoostPayload::resume(model.clone(), *bound))
+        }
         None => Tmsn::new(id),
     };
     let mut driver = Driver::new(tmsn, endpoint, log.clone());
@@ -311,8 +334,20 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
     let mut resamples = 0u64;
     let mut crashed = false;
     let mut prev_gamma_shrinks = 0u64;
+    // model version already persisted to cfg.checkpoint (0 = nothing yet)
+    let mut ckpt_version: u64 = 0;
 
     'outer: loop {
+        // ---- checkpoint: persist every model-version move ---------------
+        if let Some(path) = &cfg.checkpoint {
+            if version != ckpt_version {
+                match write_checkpoint(path, driver.payload()) {
+                    Ok(()) => ckpt_version = version,
+                    Err(e) => eprintln!("worker {id}: checkpoint write failed: {e}"),
+                }
+            }
+        }
+
         // ---- liveness checks -------------------------------------------
         if stop.load(Ordering::Relaxed) || start.elapsed() >= cfg.time_limit {
             break;
@@ -597,6 +632,15 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
         }
     }
 
+    // final checkpoint: the loop may have broken between a version bump
+    // and its loop-head persist
+    if let Some(path) = &cfg.checkpoint {
+        if version != ckpt_version {
+            if let Err(e) = write_checkpoint(path, driver.payload()) {
+                eprintln!("worker {id}: final checkpoint write failed: {e}");
+            }
+        }
+    }
     log.record(id, EventKind::Finish, None, driver.cert().loss_bound);
     let state = driver.into_state();
     WorkerResult {
@@ -639,6 +683,31 @@ pub fn rebase_sample(sample: &mut SampleSet, model: &StrongRule) {
 mod tests {
     use super::*;
     use crate::model::Stump;
+
+    #[test]
+    fn checkpoint_roundtrips_through_the_resume_files() {
+        let dir = std::env::temp_dir().join(format!("sparrow-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.txt");
+        let path = path.to_str().unwrap();
+
+        let mut model = StrongRule::new();
+        model.push(Stump::new(0, 0.5, 1.0), 0.4);
+        write_checkpoint(path, &BoostPayload::resume(model.clone(), 0.75)).unwrap();
+        let back = StrongRule::from_text(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(back.len(), 1);
+        let meta = std::fs::read_to_string(format!("{path}.meta")).unwrap();
+        assert!(meta.contains("bound=0.75"), "{meta:?}");
+
+        // a later version replaces both files (rename, never truncate)
+        model.push(Stump::new(0, 0.1, -1.0), 0.2);
+        write_checkpoint(path, &BoostPayload::resume(model, 0.5)).unwrap();
+        let back = StrongRule::from_text(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(back.len(), 2);
+        let meta = std::fs::read_to_string(format!("{path}.meta")).unwrap();
+        assert!(meta.contains("bound=0.5"), "{meta:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
 
     #[test]
     fn rebase_matches_direct_weights() {

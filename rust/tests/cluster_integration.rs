@@ -149,6 +149,242 @@ fn final_model_loss_bound_is_sound_on_train_sample() {
     );
 }
 
+// ---------------------------------------------------------------------------
+// elastic swarm on the real TCP path: kill a worker, restart with --resume
+// ---------------------------------------------------------------------------
+
+mod tcp_resume {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::{Arc, Mutex};
+    use std::thread;
+    use std::time::Instant;
+
+    use sparrow::admin::ControlState;
+    use sparrow::boosting::grid::partition_features;
+    use sparrow::boosting::CandidateGrid;
+    use sparrow::data::{DiskStore, IoThrottle};
+    use sparrow::metrics::EventLog;
+    use sparrow::model::StrongRule;
+    use sparrow::network::TcpEndpoint;
+    use sparrow::serve::ModelSlot;
+    use sparrow::tmsn::{BoostPayload, Link};
+    use sparrow::worker::{run_worker, ControlPlane, WorkerParams};
+
+    /// A shareable TCP link: the worker thread uses it as its transport
+    /// while the test keeps a handle — needed to redial the restarted
+    /// worker's fresh listener, exactly what a long-lived `sparrow worker`
+    /// process does when a rebooted peer comes back at a new address.
+    struct SharedTcp(Arc<Mutex<TcpEndpoint<BoostPayload>>>);
+
+    impl Link<BoostPayload> for SharedTcp {
+        fn send(&self, msg: BoostPayload) {
+            self.0.lock().unwrap().broadcast(&msg);
+        }
+        fn poll(&self) -> Option<BoostPayload> {
+            self.0.lock().unwrap().try_recv()
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn worker_params(
+        id: usize,
+        store_path: &std::path::Path,
+        endpoint: Box<dyn Link<BoostPayload>>,
+        stop: Arc<AtomicBool>,
+        state: Arc<ControlState>,
+        slot: Arc<ModelSlot>,
+        patch: impl FnOnce(&mut TrainConfig),
+    ) -> WorkerParams {
+        let store = DiskStore::open(store_path).unwrap();
+        let features = store.num_features();
+        let pilot = store
+            .stream(IoThrottle::unlimited())
+            .unwrap()
+            .next_block(2048)
+            .unwrap();
+        let grid = CandidateGrid::from_quantiles(&pilot, 4);
+        let stripe = partition_features(features, 2)[id];
+        let mut cfg = TrainConfig {
+            num_workers: 2,
+            sample_size: 512,
+            max_rules: 10_000,
+            time_limit: Duration::from_secs(30),
+            gamma0: 0.2,
+            ..TrainConfig::default()
+        };
+        patch(&mut cfg);
+        let (log, _rx) = EventLog::new();
+        let log = log.with_counters(Arc::clone(&state.counters));
+        WorkerParams {
+            id,
+            cfg,
+            grid,
+            stripe,
+            store,
+            endpoint,
+            log,
+            stop,
+            backend: Box::new(NativeBackend),
+            laggard: 1.0,
+            crash_after: None,
+            seed: 17 + id as u64,
+            control: Some(ControlPlane {
+                state,
+                slot,
+            }),
+        }
+    }
+
+    #[test]
+    fn killed_tcp_worker_resumes_from_checkpoint_and_catches_up() {
+        let (store_path, _test) = common::synth_store("sparrow_tcp_resume", 7, 8_000, 200);
+        let scratch =
+            std::env::temp_dir().join(format!("sparrow_tcp_resume_{}", std::process::id()));
+        std::fs::create_dir_all(&scratch).unwrap();
+        let ckpt = scratch.join("worker0.ckpt").to_str().unwrap().to_string();
+
+        // the long-lived peer (worker 1), on a shareable TCP endpoint
+        let ep1 = Arc::new(Mutex::new(
+            TcpEndpoint::<BoostPayload>::bind("127.0.0.1:0").unwrap(),
+        ));
+        let addr1 = ep1.lock().unwrap().local_addr().to_string();
+        let stop1 = Arc::new(AtomicBool::new(false));
+        let state1 = Arc::new(ControlState::new());
+        let slot1 = Arc::new(ModelSlot::new());
+        let h1 = {
+            let p = worker_params(
+                1,
+                &store_path,
+                Box::new(SharedTcp(Arc::clone(&ep1))),
+                Arc::clone(&stop1),
+                Arc::clone(&state1),
+                slot1,
+                |_| {},
+            );
+            thread::spawn(move || run_worker(p))
+        };
+
+        // phase 1: worker 0 trains with --checkpoint over real TCP …
+        let ep0 = TcpEndpoint::<BoostPayload>::bind("127.0.0.1:0").unwrap();
+        ep0.connect(&addr1).unwrap();
+        ep1.lock()
+            .unwrap()
+            .connect(&ep0.local_addr().to_string())
+            .unwrap();
+        let stop0 = Arc::new(AtomicBool::new(false));
+        let state0 = Arc::new(ControlState::new());
+        let slot0 = Arc::new(ModelSlot::new());
+        let ckpt_cfg = ckpt.clone();
+        let h0 = {
+            let p = worker_params(
+                0,
+                &store_path,
+                Box::new(ep0),
+                Arc::clone(&stop0),
+                Arc::clone(&state0),
+                slot0,
+                move |c| c.checkpoint = Some(ckpt_cfg),
+            );
+            thread::spawn(move || run_worker(p))
+        };
+
+        // … until it has certified progress AND persisted it, then kill it
+        let deadline = Instant::now() + Duration::from_secs(20);
+        loop {
+            let (version, _, _) = state0.model();
+            if version >= 2 && std::path::Path::new(&format!("{ckpt}.meta")).exists() {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "worker 0 never reached a persisted version"
+            );
+            thread::sleep(Duration::from_millis(5));
+        }
+        state0.request_crash();
+        let r0 = h0.join().unwrap();
+        assert!(r0.crashed, "the kill must register as a crash");
+
+        // read back exactly the files `sparrow worker --resume <path>` reads
+        let model = StrongRule::from_text(&std::fs::read_to_string(&ckpt).unwrap()).unwrap();
+        let meta = std::fs::read_to_string(format!("{ckpt}.meta")).unwrap();
+        let bound: f64 = meta
+            .trim()
+            .strip_prefix("bound=")
+            .expect("meta format")
+            .parse()
+            .unwrap();
+        assert!(!model.is_empty() && bound < 1.0, "checkpoint is not empty");
+
+        // phase 2: restart with --resume on a fresh listener; the peer
+        // redials the rebooted worker, which catches up from broadcasts
+        let ep0b = TcpEndpoint::<BoostPayload>::bind("127.0.0.1:0").unwrap();
+        ep0b.connect(&addr1).unwrap();
+        ep1.lock()
+            .unwrap()
+            .connect(&ep0b.local_addr().to_string())
+            .unwrap();
+        let stop0b = Arc::new(AtomicBool::new(false));
+        let state0b = Arc::new(ControlState::new());
+        let slot0b = Arc::new(ModelSlot::new());
+        // `sparrow serve --resume` seeds the slot so the checkpoint model
+        // is served (at version 0) before the first live adoption
+        slot0b.seed(model.clone(), bound);
+        let h0b = {
+            let resume = Some((model.clone(), bound));
+            let ckpt_cfg = ckpt.clone();
+            let p = worker_params(
+                0,
+                &store_path,
+                Box::new(ep0b),
+                Arc::clone(&stop0b),
+                Arc::clone(&state0b),
+                Arc::clone(&slot0b),
+                move |c| {
+                    c.resume = resume;
+                    c.checkpoint = Some(ckpt_cfg);
+                },
+            );
+            thread::spawn(move || run_worker(p))
+        };
+
+        // catch-up criterion: the resumed worker ACCEPTS a strictly-better
+        // peer model; meanwhile the served version must never regress
+        let deadline = Instant::now() + Duration::from_secs(20);
+        let mut last_v = 0u64;
+        loop {
+            let v = slot0b.version();
+            assert!(v >= last_v, "served version went backwards: {last_v} -> {v}");
+            last_v = v;
+            if state0b.counters.get(EventKind::Accept) >= 1 && v >= 1 {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "resumed worker never caught up from broadcasts"
+            );
+            thread::sleep(Duration::from_millis(5));
+        }
+
+        stop0b.store(true, std::sync::atomic::Ordering::Relaxed);
+        stop1.store(true, std::sync::atomic::Ordering::Relaxed);
+        let r0b = h0b.join().unwrap();
+        let r1 = h1.join().unwrap();
+        assert!(!r0b.crashed);
+        assert!(r0b.accepts >= 1, "no adoption on the resumed incarnation");
+        assert!(
+            r0b.loss_bound <= bound + 1e-9,
+            "resume lost certified progress: {bound} -> {}",
+            r0b.loss_bound
+        );
+        // the rejoin went through the metrics pipeline exactly once
+        assert_eq!(state0b.counters.get(EventKind::Rejoin), 1);
+        assert!(r1.found + r0b.found > 0);
+        std::fs::remove_dir_all(&scratch).ok();
+    }
+}
+
 #[test]
 fn resume_continues_from_checkpoint() {
     // phase 1: learn a few rules

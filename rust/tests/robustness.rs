@@ -187,6 +187,101 @@ fn empty_and_single_example_samples() {
 }
 
 #[test]
+fn checkpoint_resume_path_is_total_under_file_corruption() {
+    use sparrow::tmsn::BoostPayload;
+    use sparrow::worker::write_checkpoint;
+
+    let scratch = ScratchDir::unique("ckpt_fuzz");
+    prop_check("corrupted checkpoints never panic", 50, |rng| {
+        // a valid checkpoint pair, as `--checkpoint` writes it
+        let mut m = StrongRule::new();
+        for t in 0..gen::size(rng, 1, 8) {
+            m.push(Stump::new(t as u32, rng.gauss() as f32, 1.0), 0.1);
+        }
+        let bound = 0.01 + rng.f64() * 0.9;
+        let path = scratch.0.join(format!("w_{}.ckpt", rng.next_u64()));
+        let path = path.to_str().unwrap().to_string();
+        write_checkpoint(&path, &BoostPayload::resume(m.clone(), bound))
+            .map_err(|e| e.to_string())?;
+
+        // corrupt it the way a crash mid-write or disk fault would
+        let corrupted = rng.bernoulli(0.7);
+        if corrupted {
+            match rng.below(4) {
+                0 => {
+                    // truncate the model text at a random byte
+                    let text = std::fs::read_to_string(&path).map_err(|e| e.to_string())?;
+                    let cut = rng.below(text.len().max(1) as u64) as usize;
+                    std::fs::write(&path, &text[..cut]).map_err(|e| e.to_string())?;
+                }
+                1 => {
+                    // flip a byte in the model text
+                    let mut bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
+                    if !bytes.is_empty() {
+                        let i = rng.below(bytes.len() as u64) as usize;
+                        bytes[i] = bytes[i].wrapping_add(1 + rng.below(200) as u8);
+                    }
+                    std::fs::write(&path, &bytes).map_err(|e| e.to_string())?;
+                }
+                2 => {
+                    // garbage meta
+                    std::fs::write(format!("{path}.meta"), "bound=not_a_number\n")
+                        .map_err(|e| e.to_string())?;
+                }
+                _ => {
+                    // missing meta (kill between the two renames)
+                    std::fs::remove_file(format!("{path}.meta")).ok();
+                }
+            }
+        }
+
+        // the exact read-back `sparrow worker --resume <path>` performs:
+        // parse the model text, then token-scan the meta for `bound=`
+        let outcome = std::panic::catch_unwind(|| {
+            let model = std::fs::read_to_string(&path)
+                .map_err(|e| e.to_string())
+                .and_then(|t| StrongRule::from_text(&t));
+            let meta_bound = std::fs::read_to_string(format!("{path}.meta"))
+                .ok()
+                .and_then(|meta| {
+                    meta.split_whitespace()
+                        .find_map(|t| t.strip_prefix("bound=").map(str::to_string))
+                })
+                .and_then(|v| v.parse::<f64>().ok());
+            (model, meta_bound)
+        });
+        let cleanup = || {
+            std::fs::remove_file(&path).ok();
+            std::fs::remove_file(format!("{path}.meta")).ok();
+        };
+        let (model, meta_bound) = match outcome {
+            Err(_) => {
+                cleanup();
+                return Err("resume read path panicked".into());
+            }
+            Ok(pair) => pair,
+        };
+        // an untouched checkpoint must round-trip exactly
+        if !corrupted {
+            let got = model.map_err(|e| format!("clean checkpoint rejected: {e}"))?;
+            if got.to_text() != m.to_text() {
+                cleanup();
+                return Err("clean checkpoint model drifted".into());
+            }
+            match meta_bound {
+                Some(b) if (b - bound).abs() < 1e-12 => {}
+                other => {
+                    cleanup();
+                    return Err(format!("clean checkpoint bound drifted: {other:?}"));
+                }
+            }
+        }
+        cleanup();
+        Ok(())
+    });
+}
+
+#[test]
 fn strong_rule_score_associativity_under_split() {
     // score_suffix split at any point reconstructs the full score
     prop_check("suffix split exact", 50, |rng| {

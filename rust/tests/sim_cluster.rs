@@ -18,6 +18,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use sparrow::metrics::{EventKind, EventLog};
+use sparrow::network::BroadcastMode;
 use sparrow::sgd::SgdPayload;
 use sparrow::sim::{
     preset, run_scenario, sgd_sim_fixture, BoostSimWorker, EdgeFaults, Scenario, ScenarioEvent,
@@ -67,6 +68,42 @@ fn assert_clean<P: Payload>(r: &SimReport<P>) {
         r.violations.is_empty(),
         "TMSN invariant violations:\n{}",
         r.violations.join("\n")
+    );
+}
+
+/// Like [`assert_clean`], but first dumps the deterministic trace to
+/// `target/sim_failures/<name>_seed<seed>.trace` so CI can upload the
+/// exact failing repro as an artifact (`.github/workflows/ci.yml`).
+fn assert_clean_dumping<P: Payload>(name: &str, seed: u64, r: &SimReport<P>) {
+    if r.violations.is_empty() {
+        return;
+    }
+    let dir = std::path::Path::new("target").join("sim_failures");
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join(format!("{name}_seed{seed}.trace"));
+    let _ = std::fs::write(
+        &path,
+        format!(
+            "violations:\n{}\n\ntrace:\n{}",
+            r.violations.join("\n"),
+            r.trace
+        ),
+    );
+    panic!(
+        "TMSN invariant violations in '{name}' (seed {seed}; trace dumped to {}):\n{}",
+        path.display(),
+        r.violations.join("\n")
+    );
+}
+
+/// The extended wire-accounting identity every run must satisfy: each
+/// offered message is delivered, dropped, partition-blocked, discarded at
+/// a dead node, or (fanout mode) deduped; duplicates add deliveries.
+fn assert_wire_identity(s: &sparrow::sim::SimNetStats) {
+    assert_eq!(
+        s.delivered + s.to_down + s.deduped,
+        s.offered - s.dropped - s.partition_blocked + s.duplicated,
+        "{s:?}"
     );
 }
 
@@ -234,7 +271,7 @@ fn lossy_duplicating_reordering_links_preserve_all_invariants() {
         seed: env_seed() ^ 0xC405,
         net: SimNetConfig {
             edge: EdgeFaults::lossy(0.25, 0.25, 0.5),
-            overrides: Vec::new(),
+            ..SimNetConfig::default()
         },
         scenario: preset("churn", 5).unwrap(),
         horizon: ms(1500),
@@ -247,9 +284,10 @@ fn lossy_duplicating_reordering_links_preserve_all_invariants() {
     let s = &r.net;
     assert!(s.dropped > 0 && s.duplicated > 0 && s.reordered > 0, "{s:?}");
     // wire accounting: every offered message is delivered, dropped,
-    // blocked, or discarded at a dead node; duplicates add deliveries
+    // blocked, discarded at a dead node, or (fanout only) deduped;
+    // duplicates add deliveries
     assert_eq!(
-        s.delivered + s.to_down,
+        s.delivered + s.to_down + s.deduped,
         s.offered - s.dropped - s.partition_blocked + s.duplicated,
         "{s:?}"
     );
@@ -329,7 +367,7 @@ fn driver_runs_unmodified_over_simnet_under_virtual_time() {
     };
     let cfg = SimNetConfig {
         edge: delay,
-        overrides: Vec::new(),
+        ..SimNetConfig::default()
     };
     let (net, mut eps) = SimNet::<BoostPayload>::new(2, cfg, sparrow::util::rng::Rng::new(3));
     let b_ep = eps.pop().unwrap();
@@ -370,7 +408,7 @@ fn seeded_battery_all_presets_hold_all_invariants() {
     let seed = env_seed();
     for name in PRESETS {
         let r = run_boost(&boost_cfg(seed, preset(name, 5).expect(name)));
-        assert_clean(&r);
+        assert_clean_dumping(name, seed, &r);
         assert!(
             r.best.cert().summary() < 1.0,
             "preset '{name}' made no certified progress"
@@ -381,4 +419,299 @@ fn seeded_battery_all_presets_hold_all_invariants() {
             r.workers
         );
     }
+}
+
+// ---------------------------------------------------------------------------
+// elastic swarm: dynamic membership (join) and crash-rejoin from checkpoint
+// ---------------------------------------------------------------------------
+
+#[test]
+fn joiners_are_discovered_and_converge_with_the_founders() {
+    let seed = env_seed();
+    let r = run_boost(&boost_cfg(seed, preset("join", 5).unwrap()));
+    assert_clean_dumping("join", seed, &r);
+    // two workers joined the 5 founders mid-run
+    assert_eq!(r.workers.len(), 7);
+    assert!(r.trace.contains("w5   join"));
+    assert!(r.trace.contains("w6   join"));
+    // the joiners did real work and ended on the swarm's best certificate
+    assert!(r.workers[5].steps > 0 && r.workers[6].steps > 0);
+    assert!(r.survivors_converged(), "{:?}", r.workers);
+    let join_events: Vec<_> =
+        r.events.iter().filter(|e| e.kind == EventKind::Join).collect();
+    assert_eq!(join_events.len(), 2);
+}
+
+#[test]
+fn adoption_is_strictly_better_regardless_of_join_order() {
+    // the same swarm built in two different join orders (joins early vs
+    // late) must end converged with zero invariant violations both ways —
+    // accept-iff-strictly-better does not depend on membership history
+    let seed = env_seed();
+    for join_at in [ms(50), ms(700)] {
+        let scenario = Scenario::new()
+            .at(join_at, ScenarioEvent::Join(5))
+            .at(join_at + ms(30), ScenarioEvent::Join(6));
+        let r = run_boost(&boost_cfg(seed, scenario));
+        assert_clean_dumping("join_order", seed, &r);
+        assert_eq!(r.workers.len(), 7);
+        assert!(r.survivors_converged(), "join_at={join_at:?}: {:?}", r.workers);
+    }
+}
+
+#[test]
+fn rejoin_resumes_from_checkpoint_not_scratch() {
+    let seed = env_seed();
+    let r = run_boost(&boost_cfg(seed, preset("churn", 5).unwrap()));
+    assert_clean_dumping("churn_rejoin", seed, &r);
+    // the restarted worker resumed from its last committed payload: the
+    // resume trace line carries a finite certificate, not the initial one
+    assert!(r.trace.contains("w1   resume  cert="), "{}", r.trace);
+    assert!(!r.trace.contains("cert=inf"), "restart lost its checkpoint");
+    let rejoin: Vec<_> =
+        r.events.iter().filter(|e| e.kind == EventKind::Rejoin).collect();
+    assert_eq!(rejoin.len(), 1);
+    assert_eq!(rejoin[0].worker, 1);
+}
+
+// ---------------------------------------------------------------------------
+// one-way (asymmetric) partitions
+// ---------------------------------------------------------------------------
+
+#[test]
+fn one_way_partition_blocks_exactly_the_forward_direction() {
+    let seed = env_seed();
+    // worker 0 can hear everyone but nobody hears worker 0
+    let scenario = Scenario::new()
+        .at(
+            ms(100),
+            ScenarioEvent::PartitionOneWay(vec![(0, 1), (0, 2), (0, 3), (0, 4)]),
+        )
+        .at(ms(800), ScenarioEvent::Heal);
+    let r = run_boost(&boost_cfg(seed, scenario));
+    assert_clean_dumping("oneway", seed, &r);
+    assert!(r.net.partition_blocked > 0, "{:?}", r.net);
+    assert_wire_identity(&r.net);
+    assert!(r.trace.contains("partition-oneway"));
+    // after the heal everyone reconverges
+    assert!(r.survivors_converged(), "{:?}", r.workers);
+}
+
+#[test]
+fn prop_asymmetric_partitions_preserve_wire_accounting() {
+    // seeded sweep over random asymmetric edge sets: whatever direction
+    // mix is blocked, the wire identity and every TMSN invariant hold
+    let base = env_seed();
+    for i in 0..8u64 {
+        let mut rng = sparrow::util::rng::Rng::new(base ^ (0xA11CE + i));
+        let mut edges = Vec::new();
+        for a in 0..5usize {
+            for b in 0..5usize {
+                if a != b && rng.bernoulli(0.3) {
+                    edges.push((a, b));
+                }
+            }
+        }
+        if edges.is_empty() {
+            edges.push((0, 1));
+        }
+        let scenario = Scenario::new()
+            .at(ms(100), ScenarioEvent::PartitionOneWay(edges.clone()))
+            .at(ms(900), ScenarioEvent::Heal);
+        let r = run_boost(&boost_cfg(base ^ i, scenario));
+        assert_clean_dumping("oneway_prop", base ^ i, &r);
+        assert_wire_identity(&r.net);
+        assert!(
+            r.survivors_converged(),
+            "edges {edges:?} (seed {}) did not reconverge after heal",
+            base ^ i
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// gossip fanout: O(n·K·TTL) dissemination, equivalent in final-model terms
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fanout_reaches_the_same_final_model_as_full_broadcast_on_every_preset() {
+    // independent certificate streams (DESIGN.md §12) make each worker's
+    // candidate sequence a pure function of its own RNG, so the best
+    // certified bound is *bitwise* mode-invariant: the globally minimal
+    // own-bound gets published under any delivery order
+    let seed = env_seed();
+    for name in PRESETS {
+        let scenario = preset(name, 5).expect(name);
+        let mk = |mode: BroadcastMode| SimConfig {
+            workers: 5,
+            seed,
+            scenario: scenario.clone(),
+            horizon: ms(1500),
+            net: SimNetConfig {
+                mode,
+                ..SimNetConfig::default()
+            },
+            ..SimConfig::default()
+        };
+        let spawn = |id: usize, inc: u64| BoostSimWorker::independent_for_run(seed, id, inc);
+        let full = run_scenario(&mk(BroadcastMode::Full), spawn);
+        let fan = run_scenario(&mk(BroadcastMode::Fanout { k: 3, ttl: 16 }), spawn);
+        assert_clean_dumping(&format!("{name}_full"), seed, &full);
+        assert_clean_dumping(&format!("{name}_fanout"), seed, &fan);
+        assert_eq!(
+            full.best.cert.loss_bound.to_bits(),
+            fan.best.cert.loss_bound.to_bits(),
+            "preset '{name}' (seed {seed}): fanout best {} != full best {}",
+            fan.best.cert.loss_bound,
+            full.best.cert.loss_bound,
+        );
+        assert!(fan.net.forwarded > 0, "preset '{name}' gossip never relayed");
+        assert_wire_identity(&fan.net);
+        assert!(fan.survivors_converged(), "preset '{name}': {:?}", fan.workers);
+    }
+}
+
+#[test]
+fn fanout_origin_cost_is_k_not_cluster_size() {
+    // the wire-cost claim of DESIGN.md §12: full mode pays n-1 offers at
+    // the *origin* of every publish, fanout pays at most K and shifts
+    // dissemination onto TTL-bounded relays — O(n·K) total per flooded
+    // payload, never O(n) at one node
+    let seed = env_seed();
+    let mk = |mode: BroadcastMode| SimConfig {
+        workers: 12,
+        seed,
+        scenario: Scenario::new(),
+        horizon: ms(600),
+        net: SimNetConfig {
+            mode,
+            ..SimNetConfig::default()
+        },
+        ..SimConfig::default()
+    };
+    let spawn = |id: usize, inc: u64| BoostSimWorker::independent_for_run(seed, id, inc);
+    let full = run_scenario(&mk(BroadcastMode::Full), spawn);
+    let fan = run_scenario(&mk(BroadcastMode::Fanout { k: 2, ttl: 24 }), spawn);
+    assert_clean(&full);
+    assert_clean(&fan);
+    // full: exactly n-1 per publish, and nothing is ever relayed
+    assert_eq!(full.net.offered, full.net.broadcasts * 11);
+    assert_eq!(full.net.forwarded, 0);
+    // fanout: origin offers (offered minus relay offers) are capped at K
+    // per publish; dissemination happens via relays instead
+    let origin_offers = fan.net.offered - fan.net.forwarded;
+    assert!(
+        origin_offers <= fan.net.broadcasts * 2,
+        "origin cost exceeded K: {origin_offers} offers for {} publishes",
+        fan.net.broadcasts
+    );
+    assert!(fan.net.forwarded > 0, "gossip never relayed");
+    assert_wire_identity(&fan.net);
+    // and the cheaper wire still lands on the bit-identical best model
+    assert_eq!(
+        full.best.cert.loss_bound.to_bits(),
+        fan.best.cert.loss_bound.to_bits()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// churn_large: the 100..1000-virtual-worker elastic swarm battery
+// ---------------------------------------------------------------------------
+
+/// Swarm size for the large battery; CI sweeps `SPARROW_SIM_WORKERS`.
+fn churn_workers() -> usize {
+    std::env::var("SPARROW_SIM_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100)
+}
+
+fn churn_large_cfg(seed: u64, n: usize, mode: BroadcastMode, horizon: Duration) -> SimConfig {
+    SimConfig {
+        workers: n,
+        seed,
+        scenario: preset("churn_large", n).expect("churn_large"),
+        horizon,
+        net: SimNetConfig {
+            mode,
+            // per-message wire tracing is O(messages) string work — the
+            // counters and worker lines keep the trace deterministic
+            wire_trace: false,
+            ..SimNetConfig::default()
+        },
+        ..SimConfig::default()
+    }
+}
+
+#[test]
+fn churn_large_battery_holds_invariants_and_replays_byte_identically() {
+    let seed = env_seed();
+    let n = churn_workers();
+    let cfg = churn_large_cfg(seed, n, BroadcastMode::Full, ms(1500));
+    let expected = cfg.scenario.validate(n).expect("valid preset");
+    let a = run_boost(&cfg);
+    assert_clean_dumping("churn_large", seed, &a);
+    assert_eq!(a.workers.len(), expected, "joins all landed");
+    let alive = a.workers.iter().filter(|w| w.alive).count();
+    assert!(
+        alive * 2 >= a.workers.len(),
+        "churn felled too many: {alive}/{}",
+        a.workers.len()
+    );
+    assert!(a.survivors_converged(), "swarm did not converge");
+    // the preset restarts every 2nd crash victim, so any swarm big enough
+    // for >= 2 crashes must show a checkpoint rejoin
+    if n >= 8 {
+        assert!(a.workers.iter().any(|w| w.restarts > 0), "nobody rejoined");
+    }
+    assert_wire_identity(&a.net);
+    // byte-identical replay at 100+ workers
+    let b = run_boost(&cfg);
+    assert_eq!(a.trace, b.trace, "churn_large trace not a pure function of seed {seed}");
+    assert_eq!(a.net, b.net);
+}
+
+#[test]
+fn churn_large_fanout_agrees_with_full_broadcast() {
+    let seed = env_seed();
+    let n = churn_workers();
+    let spawn = |id: usize, inc: u64| BoostSimWorker::independent_for_run(seed, id, inc);
+    let full = run_scenario(&churn_large_cfg(seed, n, BroadcastMode::Full, ms(800)), spawn);
+    let fan = run_scenario(
+        &churn_large_cfg(seed, n, BroadcastMode::Fanout { k: 3, ttl: 0 }, ms(800)),
+        spawn,
+    );
+    assert_clean_dumping("churn_large_full", seed, &full);
+    assert_clean_dumping("churn_large_fanout", seed, &fan);
+    assert_eq!(
+        full.best.cert.loss_bound.to_bits(),
+        fan.best.cert.loss_bound.to_bits(),
+        "fanout best {} != full best {} at n={n}",
+        fan.best.cert.loss_bound,
+        full.best.cert.loss_bound,
+    );
+    assert!(fan.net.forwarded > 0);
+    if n >= 20 {
+        assert!(fan.net.deduped > 0, "at n={n} gossip must hit duplicates");
+    }
+    assert_wire_identity(&fan.net);
+}
+
+#[test]
+#[ignore = "1000-virtual-worker stress battery; run with: cargo test --test sim_cluster -- --ignored"]
+fn churn_large_scales_to_a_thousand_workers() {
+    let seed = env_seed();
+    let n = 1000;
+    let spawn = |id: usize, inc: u64| BoostSimWorker::independent_for_run(seed, id, inc);
+    // the horizon must outlive the preset's final heal (t=1000ms) so
+    // post-heal publishes can flood and convergence is assertable
+    let cfg = churn_large_cfg(seed, n, BroadcastMode::Fanout { k: 3, ttl: 0 }, ms(1100));
+    let expected = cfg.scenario.validate(n).expect("valid preset");
+    let r = run_scenario(&cfg, spawn);
+    assert_clean_dumping("churn_large_1000", seed, &r);
+    assert_eq!(r.workers.len(), expected);
+    let alive = r.workers.iter().filter(|w| w.alive).count();
+    assert!(alive * 2 >= r.workers.len());
+    assert!(r.survivors_converged(), "1000-worker swarm did not converge");
+    assert_wire_identity(&r.net);
 }
