@@ -1,7 +1,7 @@
 # Convenience entry points. The authoritative verification gate is
 # scripts/tier1.sh (used verbatim by CI).
 
-.PHONY: tier1 build test fmt clippy doc check-ops-doc serve-demo artifacts bench bench-scan bench-ooc sim clean
+.PHONY: tier1 build test fmt clippy doc check-ops-doc serve-demo artifacts bench bench-scan bench-ooc bench-resilience sim chaos clean
 
 tier1:
 	./scripts/tier1.sh
@@ -40,6 +40,12 @@ serve-demo:
 sim:
 	cd rust && cargo test --test sim_cluster
 
+# Chaos-proxy battery against the real TCP fabric (DESIGN.md §13). Pick
+# the seed with SPARROW_CHAOS_SEED=N; CI sweeps seeds 1-3 in the `chaos`
+# job and uploads frame-trace artifacts on failure.
+chaos:
+	cd rust && cargo test --release --test cluster_integration --test robustness
+
 # Rows-vs-binned scan-engine sweep (DESIGN.md §8) → BENCH_scan.json at the
 # repo root, tracking the scan-throughput trajectory across PRs.
 bench-scan:
@@ -50,7 +56,7 @@ bench-scan:
 # rust/artifacts is where the runtime tests and benches look for them.
 # The scan sweep runs first so BENCH_scan.json is refreshed even when no
 # JAX environment is available for the HLO step.
-artifacts: bench-scan
+artifacts: bench-scan bench-resilience
 	cd python && python3 -m compile.aot --out-dir ../rust/artifacts
 
 # Out-of-core data plane (DESIGN.md §11): mem vs tiered build rate on a
@@ -58,6 +64,12 @@ artifacts: bench-scan
 # → BENCH_ooc.json at the repo root.
 bench-ooc:
 	cd rust && cargo bench --bench ooc_scan -- --json ../BENCH_ooc.json
+
+# Self-healing fabric latency contract + laggard sweep (DESIGN.md §13 /
+# paper §4): broadcast push p50/p99 healthy vs blackholed, reconnect time,
+# retained-progress table, → BENCH_resilience.json at the repo root.
+bench-resilience:
+	cd rust && cargo bench --bench resilience -- --json ../BENCH_resilience.json
 
 bench:
 	cd rust && cargo bench

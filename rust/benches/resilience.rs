@@ -2,17 +2,124 @@
 //! fraction of faulty machines" (§4), contrasted with bulk-synchronous,
 //! which runs at the pace of the slowest machine.
 //!
-//! Sweeps the fraction of 8x-laggard workers for both systems and reports
-//! retained progress (rules or iterations per second, relative to the
-//! healthy cluster).
+//! Two parts:
 //!
-//!     cargo bench --bench resilience
+//! 1. **Sweep** — fraction of 8x-laggard workers for both systems,
+//!    reporting retained progress (rules or iterations per second,
+//!    relative to the healthy cluster).
+//! 2. **Fabric probe** (PR 9) — the self-healing TCP fabric's latency
+//!    contract: `broadcast()` cost is one bounded-queue push regardless
+//!    of peer health (a blackholed peer must not slow the caller), and
+//!    time-to-reconnect after a peer dies and restarts behind its chaos
+//!    proxy.
+//!
+//!     cargo bench --bench resilience [-- --json BENCH_resilience.json]
+//!
+//! `--json PATH` writes the result object (`make bench-resilience` emits
+//! it to the repo root as `BENCH_resilience.json`, consumed by
+//! `make artifacts`).
+
+use std::time::{Duration, Instant};
 
 use sparrow::data::DiskStore;
 use sparrow::harness::{self, Workload};
+use sparrow::model::StrongRule;
+use sparrow::network::chaos::{ChaosFault, ChaosProxy, ChaosRules};
+use sparrow::network::TcpEndpoint;
+use sparrow::tmsn::BoostPayload;
 use sparrow::util::bench::Table;
+use sparrow::util::json::Json;
+
+/// Percentile over a sorted sample set, in microseconds.
+fn pct_us(sorted: &[Duration], p: f64) -> f64 {
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx].as_secs_f64() * 1e6
+}
+
+fn timed_pushes(ep: &TcpEndpoint<BoostPayload>, payload: &BoostPayload, n: usize) -> Vec<Duration> {
+    let mut samples = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        ep.broadcast(payload);
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    samples
+}
+
+/// The fabric latency contract, measured: (healthy p50 us, healthy p99 us,
+/// blackholed p99 us, reconnect ms).
+fn fabric_probe() -> anyhow::Result<(f64, f64, f64, f64)> {
+    let a: TcpEndpoint<BoostPayload> = TcpEndpoint::bind("127.0.0.1:0")?;
+    let b: TcpEndpoint<BoostPayload> = TcpEndpoint::bind("127.0.0.1:0")?;
+    let rules = ChaosRules::new(9);
+    let proxy = ChaosProxy::spawn(&b.local_addr().to_string(), &rules, "a->b")?;
+    a.connect(&proxy.listen_addr().to_string())?;
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while a.peer_table().iter().filter(|p| p.up).count() < 1 {
+        anyhow::ensure!(Instant::now() < deadline, "fabric probe: link never came up");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let payload = BoostPayload::resume(StrongRule::new(), 0.9);
+
+    // healthy link: warm up, then time the push path
+    timed_pushes(&a, &payload, 200);
+    let healthy = timed_pushes(&a, &payload, 2_000);
+
+    // blackholed link: the proxy swallows every frame but keeps the
+    // connection alive — the sender must not notice at push time
+    rules.set("a->b", ChaosFault::Blackhole);
+    timed_pushes(&a, &payload, 200);
+    let blackholed = timed_pushes(&a, &payload, 2_000);
+    rules.clear("a->b");
+
+    // reconnect: kill b, wait for the writer to notice, restart behind
+    // the same proxy address, clock redial-to-delivery
+    drop(b);
+    while a.peer_count() > 0 {
+        anyhow::ensure!(Instant::now() < deadline, "fabric probe: peer death never detected");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let t0 = Instant::now();
+    let b2: TcpEndpoint<BoostPayload> = TcpEndpoint::bind("127.0.0.1:0")?;
+    proxy.set_upstream(&b2.local_addr().to_string());
+    loop {
+        a.broadcast(&payload);
+        if b2.recv_timeout(Duration::from_millis(50)).is_some() {
+            break;
+        }
+        anyhow::ensure!(Instant::now() < deadline, "fabric probe: reconnect never delivered");
+    }
+    let reconnect_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    Ok((
+        pct_us(&healthy, 0.50),
+        pct_us(&healthy, 0.99),
+        pct_us(&blackholed, 0.99),
+        reconnect_ms,
+    ))
+}
 
 fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().collect();
+    let json_path = argv
+        .windows(2)
+        .find(|w| w[0] == "--json")
+        .map(|w| w[1].clone());
+
+    // -- part 2 first: the fabric probe is cheap and fails fast ----------
+    let (p50_healthy, p99_healthy, p99_blackholed, reconnect_ms) = fabric_probe()?;
+    println!("Fabric probe — broadcast() push latency and recovery");
+    println!("  healthy     p50 {p50_healthy:8.1} us   p99 {p99_healthy:8.1} us");
+    println!("  blackholed                      p99 {p99_blackholed:8.1} us");
+    println!(
+        "  ratio (blackholed p99 / healthy p99): {:.2}  — the contract: a dead\n  peer costs the caller one queue-push, nothing more",
+        p99_blackholed / p99_healthy.max(1e-9)
+    );
+    println!("  reconnect-to-delivery after restart: {reconnect_ms:.0} ms\n");
+
+    // -- part 1: laggard sweep (paper §4) --------------------------------
     let w = Workload::standard();
     let (store_path, test) = w.materialize()?;
     let train = DiskStore::open(&store_path)?.read_all()?;
@@ -27,6 +134,7 @@ fn main() -> anyhow::Result<()> {
         "BSP iters",
         "BSP retained",
     ]);
+    let mut sweep_rows: Vec<Json> = Vec::new();
     let mut tmsn_base = 0usize;
     let mut bsp_base = 0u64;
     for faulty in 0..=workers / 2 {
@@ -53,18 +161,47 @@ fn main() -> anyhow::Result<()> {
             tmsn_base = tmsn_rules.max(1);
             bsp_base = bsp_iters.max(1);
         }
+        let tmsn_retained = tmsn_rules as f64 / tmsn_base as f64;
+        let bsp_retained = bsp_iters as f64 / bsp_base as f64;
         t.row(&[
             format!("{}/{}", faulty, workers),
             tmsn_rules.to_string(),
-            format!("{:.0}%", 100.0 * tmsn_rules as f64 / tmsn_base as f64),
+            format!("{:.0}%", 100.0 * tmsn_retained),
             bsp_iters.to_string(),
-            format!("{:.0}%", 100.0 * bsp_iters as f64 / bsp_base as f64),
+            format!("{:.0}%", 100.0 * bsp_retained),
         ]);
+        let mut row = Json::obj();
+        row.set("faulty", faulty)
+            .set("workers", workers)
+            .set("tmsn_rules", tmsn_rules)
+            .set("tmsn_retained", tmsn_retained)
+            .set("bsp_iters", bsp_iters)
+            .set("bsp_retained", bsp_retained);
+        sweep_rows.push(row);
     }
     println!("\nResilience sweep — {workers} workers, laggard slowdown {slow}x, {secs:.0}s budget");
     t.print();
     println!(
         "\nexpected shape (paper §1/§4): TMSN retained ≈ 1 − faulty_fraction·(1−1/{slow});\nBSP retained ≈ 1/{slow} as soon as one laggard exists"
     );
+
+    if let Some(path) = &json_path {
+        let mut fabric = Json::obj();
+        fabric
+            .set("push_p50_us_healthy", p50_healthy)
+            .set("push_p99_us_healthy", p99_healthy)
+            .set("push_p99_us_blackholed", p99_blackholed)
+            .set("push_p99_ratio", p99_blackholed / p99_healthy.max(1e-9))
+            .set("reconnect_ms", reconnect_ms);
+        let mut result = Json::obj();
+        result
+            .set("bench", "resilience")
+            .set("laggard_slowdown", slow)
+            .set("budget_s", secs)
+            .set("fabric", fabric)
+            .set("sweep", sweep_rows);
+        std::fs::write(path, result.to_string() + "\n")?;
+        println!("\nwrote {path}");
+    }
     Ok(())
 }

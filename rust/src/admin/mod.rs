@@ -43,11 +43,13 @@ pub mod state;
 pub use client::RpcClient;
 pub use proto::{RpcError, RpcRequest, ADMIN_METHODS, PROTO_VERSION, SERVE_METHODS};
 pub use server::{dispatch, RpcHandler, RpcServer};
-pub use state::{ControlState, Nudge};
+pub use state::{ChaosCtl, ControlState, Nudge, PeerSource};
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
+use crate::network::chaos::ChaosFault;
 use crate::util::json::Json;
 
 /// The worker admin endpoint: serves every method in
@@ -124,15 +126,48 @@ impl AdminHandler {
                 Ok(o)
             }
             "heal" => {
+                // heal is total: compute slowdown back to 1.0 AND every
+                // chaos fault cleared (when a fabric is attached)
                 self.state.set_laggard(1.0);
+                if let Some(ctl) = self.state.chaos() {
+                    ctl.rules.clear_all();
+                }
                 Ok(o)
             }
-            // the rest of the sim vocabulary needs the scripted fabric
-            "partition" | "restart" => Err(RpcError::unsupported(format!(
-                "fault \"{fault}\" is sim-only (see `sparrow sim`); live workers support crash/laggard/heal"
-            ))),
+            "partition" => {
+                let ctl = self.state.chaos().ok_or_else(|| {
+                    RpcError::unsupported(
+                        "fault \"partition\" needs a chaos fabric attached to this worker \
+                         (front its links with chaos proxies, or use `sparrow sim`)",
+                    )
+                })?;
+                // blackhole every registered edge; optional {"ms": N}
+                // auto-heals after N milliseconds
+                let ms = params.get("ms").and_then(Json::as_u64);
+                for edge in &ctl.edges {
+                    match ms {
+                        Some(ms) => ctl.rules.set_for(
+                            edge,
+                            ChaosFault::Blackhole,
+                            Duration::from_millis(ms),
+                        ),
+                        None => ctl.rules.set(edge, ChaosFault::Blackhole),
+                    }
+                }
+                o.set("edges", ctl.edges.len() as u64);
+                if let Some(ms) = ms {
+                    o.set("ms", ms);
+                }
+                Ok(o)
+            }
+            "restart" => {
+                // in-place rebirth at the worker's next loop head: the
+                // live analogue of the simulator's crash+rejoin
+                self.state.request_restart();
+                Ok(o)
+            }
             other => Err(RpcError::invalid_params(format!(
-                "unknown fault \"{other}\" (crash, laggard, heal)"
+                "unknown fault \"{other}\" (crash, laggard, heal, partition, restart)"
             ))),
         }
     }
@@ -150,6 +185,7 @@ impl RpcHandler for AdminHandler {
             }
             "metrics.snapshot" => Ok(self.state.snapshot_json()),
             "model.current" => Ok(self.state.model_json()),
+            "peers.list" => Ok(self.state.peers_json()),
             "config.set_gamma" => self.set_gamma(params),
             "config.gamma_reset" => {
                 self.state.push_nudge(Nudge::GammaReset);
@@ -240,11 +276,16 @@ mod tests {
         assert_eq!(state.laggard(), 1.0);
         h.handle("fault.inject", &params(r#"{"fault":"crash"}"#)).unwrap();
         assert!(state.crash_requested());
-        // sim-only faults are typed Unsupported, not InvalidParams
+        // partition with no chaos fabric attached is typed Unsupported,
+        // not InvalidParams — the vocabulary is known, the capability is
+        // missing
         let err = h
             .handle("fault.inject", &params(r#"{"fault":"partition"}"#))
             .unwrap_err();
         assert_eq!(err.code, -32001);
+        // restart needs no fabric: it's an in-process rebirth
+        h.handle("fault.inject", &params(r#"{"fault":"restart"}"#)).unwrap();
+        assert!(state.take_restart());
         let err = h
             .handle("fault.inject", &params(r#"{"fault":"gremlins"}"#))
             .unwrap_err();
@@ -253,6 +294,62 @@ mod tests {
         for bad in [r#"{"fault":"laggard"}"#, r#"{"fault":"laggard","factor":0.5}"#] {
             assert_eq!(h.handle("fault.inject", &params(bad)).unwrap_err().code, -32602);
         }
+    }
+
+    #[test]
+    fn partition_blackholes_edges_and_heal_clears() {
+        use crate::network::chaos::ChaosRules;
+        let (h, state, _) = handler();
+        state.set_chaos(ChaosCtl {
+            rules: ChaosRules::new(11),
+            edges: vec!["w0->w1".into(), "w1->w0".into()],
+        });
+        let r = h
+            .handle("fault.inject", &params(r#"{"fault":"partition"}"#))
+            .unwrap();
+        assert_eq!(r.get("edges").and_then(Json::as_u64), Some(2));
+        let rules = &state.chaos().unwrap().rules;
+        assert!(matches!(rules.active("w0->w1"), Some(ChaosFault::Blackhole)));
+        assert!(matches!(rules.active("w1->w0"), Some(ChaosFault::Blackhole)));
+        // heal clears every chaos fault along with the laggard factor
+        state.set_laggard(2.0);
+        h.handle("fault.inject", &params(r#"{"fault":"heal"}"#)).unwrap();
+        assert!(rules.active("w0->w1").is_none());
+        assert_eq!(state.laggard(), 1.0);
+        // timed partition carries its duration in the reply
+        let r = h
+            .handle("fault.inject", &params(r#"{"fault":"partition","ms":50}"#))
+            .unwrap();
+        assert_eq!(r.get("ms").and_then(Json::as_u64), Some(50));
+        assert!(matches!(rules.active("w0->w1"), Some(ChaosFault::Blackhole)));
+        std::thread::sleep(Duration::from_millis(80));
+        assert!(rules.active("w0->w1").is_none(), "timed fault never healed");
+    }
+
+    #[test]
+    fn peers_list_serves_the_live_table() {
+        use crate::network::tcp::PeerInfo;
+        let (h, state, _) = handler();
+        // no source attached: valid, empty
+        let r = h.handle("peers.list", &Json::Null).unwrap();
+        assert_eq!(r.get("total").and_then(Json::as_u64), Some(0));
+        state.set_peer_source(Arc::new(|| {
+            vec![PeerInfo {
+                addr: "127.0.0.1:9000".into(),
+                up: true,
+                queue_len: 2,
+                last_seen_ms: 40,
+                reconnects: 0,
+                drops: 0,
+            }]
+        }));
+        let r = h.handle("peers.list", &Json::Null).unwrap();
+        assert_eq!(r.get("up").and_then(Json::as_u64), Some(1));
+        let rows = r.get("peers").and_then(Json::as_arr).unwrap();
+        assert_eq!(
+            rows[0].get("addr").and_then(Json::as_str),
+            Some("127.0.0.1:9000")
+        );
     }
 
     #[test]

@@ -26,6 +26,7 @@ pub const ADMIN_METHODS: &[&str] = &[
     "ping",
     "metrics.snapshot",
     "model.current",
+    "peers.list",
     "config.set_gamma",
     "config.gamma_reset",
     "config.set_sweep",

@@ -18,8 +18,25 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::metrics::{EventKind, LiveCounters};
+use crate::network::chaos::ChaosRules;
+use crate::network::tcp::PeerInfo;
 use crate::sim::clock::{Clock, RealClock};
 use crate::util::json::Json;
+
+/// A payload-type-free view of the worker's live peer table (from
+/// [`crate::network::TcpEndpoint::peer_table_handle`]).
+pub type PeerSource = Arc<dyn Fn() -> Vec<PeerInfo> + Send + Sync>;
+
+/// The fabric's fault-injection handle: the chaos rules table shared with
+/// the proxies fronting this worker, plus the directed-edge names the
+/// admin plane may partition.
+#[derive(Clone)]
+pub struct ChaosCtl {
+    /// shared fault table (every attached proxy consults it per frame)
+    pub rules: Arc<ChaosRules>,
+    /// edge names `fault.inject {"fault":"partition"}` applies to
+    pub edges: Vec<String>,
+}
 
 /// A deferred config change, applied by the worker at its loop head.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -50,6 +67,9 @@ pub struct ControlState {
     nudges: Mutex<Vec<Nudge>>,
     laggard_bits: AtomicU64,
     crash_requested: AtomicBool,
+    restart_requested: AtomicBool,
+    peer_source: Mutex<Option<PeerSource>>,
+    chaos: Mutex<Option<ChaosCtl>>,
 }
 
 impl ControlState {
@@ -74,6 +94,9 @@ impl ControlState {
             nudges: Mutex::new(Vec::new()),
             laggard_bits: AtomicU64::new(1.0f64.to_bits()),
             crash_requested: AtomicBool::new(false),
+            restart_requested: AtomicBool::new(false),
+            peer_source: Mutex::new(None),
+            chaos: Mutex::new(None),
         }
     }
 
@@ -124,6 +147,39 @@ impl ControlState {
         self.crash_requested.load(Ordering::Relaxed)
     }
 
+    /// Ask the worker to restart in place at its next loop head
+    /// (`fault.inject {"fault":"restart"}`): persist a checkpoint if
+    /// configured, drop every pending remote payload, and rejoin the
+    /// protocol from the current certified model via
+    /// [`crate::tmsn::Driver::rebirth`].
+    pub fn request_restart(&self) {
+        self.restart_requested.store(true, Ordering::Relaxed);
+    }
+
+    /// Consume a pending restart request (worker loop head). Returns
+    /// `true` at most once per [`ControlState::request_restart`] call.
+    pub fn take_restart(&self) -> bool {
+        self.restart_requested.swap(false, Ordering::Relaxed)
+    }
+
+    /// Attach the live peer table (the endpoint's
+    /// [`crate::network::TcpEndpoint::peer_table_handle`]); feeds
+    /// `peers.list` and the `peers` object in `metrics.snapshot`.
+    pub fn set_peer_source(&self, src: PeerSource) {
+        *self.peer_source.lock().unwrap() = Some(src);
+    }
+
+    /// Attach the fabric's chaos handle, enabling real-path
+    /// `fault.inject {"fault":"partition"}`.
+    pub fn set_chaos(&self, ctl: ChaosCtl) {
+        *self.chaos.lock().unwrap() = Some(ctl);
+    }
+
+    /// The chaos handle, if one was attached.
+    pub fn chaos(&self) -> Option<ChaosCtl> {
+        self.chaos.lock().unwrap().clone()
+    }
+
     /// Set the live compute-slowdown factor (≥ 1; 1.0 heals). Applied at
     /// pass granularity: after each scan pass the worker idles
     /// `(factor − 1) ×` the pass's elapsed time.
@@ -157,6 +213,38 @@ impl ControlState {
         o
     }
 
+    /// The current peer table, or empty when no source is attached.
+    pub fn peers(&self) -> Vec<PeerInfo> {
+        match &*self.peer_source.lock().unwrap() {
+            Some(src) => src(),
+            None => Vec::new(),
+        }
+    }
+
+    /// The `peers.list` RPC result object: one row per known peer
+    /// (up/down, send-queue depth, last-heartbeat age, reconnect and
+    /// queue-drop totals), plus up/total summary counts.
+    pub fn peers_json(&self) -> Json {
+        let peers = self.peers();
+        let up = peers.iter().filter(|p| p.up).count();
+        let rows: Vec<Json> = peers
+            .iter()
+            .map(|p| {
+                let mut row = Json::obj();
+                row.set("addr", p.addr.as_str())
+                    .set("up", p.up)
+                    .set("queue", p.queue_len as u64)
+                    .set("last_seen_ms", p.last_seen_ms)
+                    .set("reconnects", p.reconnects)
+                    .set("drops", p.drops);
+                row
+            })
+            .collect();
+        let mut o = Json::obj();
+        o.set("peers", rows).set("total", peers.len() as u64).set("up", up as u64);
+        o
+    }
+
     /// The `metrics.snapshot` RPC result object: uptime, model gauges,
     /// scan throughput, sampler stalls/aborts, and one counter per event
     /// kind. Keys are stable (BTreeMap ordering) — the wire format is
@@ -184,6 +272,12 @@ impl ControlState {
                 self.counters.get(EventKind::BuildAbort) as f64,
             )
             .set("swaps", self.counters.get(EventKind::SampleSwap) as f64);
+        let peer_rows = self.peers();
+        let up = peer_rows.iter().filter(|p| p.up).count();
+        let mut peers = Json::obj();
+        peers
+            .set("up", up as u64)
+            .set("down", (peer_rows.len() - up) as u64);
         let mut o = Json::obj();
         o.set("uptime_s", uptime.as_secs_f64())
             .set("model", self.model_json())
@@ -191,6 +285,7 @@ impl ControlState {
             .set("scan_per_s", scan_per_s)
             .set("sampler", sampler)
             .set("laggard", self.laggard())
+            .set("peers", peers)
             .set("events", events);
         o
     }
@@ -246,6 +341,77 @@ mod tests {
         assert_eq!(s.laggard(), 1.0);
         s.request_crash();
         assert!(s.crash_requested());
+        // restart is one-shot
+        assert!(!s.take_restart());
+        s.request_restart();
+        assert!(s.take_restart());
+        assert!(!s.take_restart());
+    }
+
+    fn fake_peers() -> Vec<PeerInfo> {
+        vec![
+            PeerInfo {
+                addr: "127.0.0.1:7701".into(),
+                up: true,
+                queue_len: 3,
+                last_seen_ms: 150,
+                reconnects: 1,
+                drops: 0,
+            },
+            PeerInfo {
+                addr: "127.0.0.1:7702".into(),
+                up: false,
+                queue_len: 17,
+                last_seen_ms: 4200,
+                reconnects: 6,
+                drops: 12,
+            },
+        ]
+    }
+
+    #[test]
+    fn peer_source_feeds_list_and_snapshot() {
+        let s = ControlState::new();
+        // without a source: empty list, zero summary
+        let empty = s.peers_json();
+        assert_eq!(empty.get("total").and_then(Json::as_u64), Some(0));
+        let snap = s.snapshot_json();
+        let p = snap.get("peers").unwrap();
+        assert_eq!(p.get("up").and_then(Json::as_u64), Some(0));
+        assert_eq!(p.get("down").and_then(Json::as_u64), Some(0));
+
+        s.set_peer_source(Arc::new(fake_peers));
+        let list = s.peers_json();
+        assert_eq!(list.get("total").and_then(Json::as_u64), Some(2));
+        assert_eq!(list.get("up").and_then(Json::as_u64), Some(1));
+        let rows = list.get("peers").and_then(Json::as_arr).unwrap();
+        let first = &rows[0];
+        assert_eq!(
+            first.get("addr").and_then(Json::as_str),
+            Some("127.0.0.1:7701")
+        );
+        assert_eq!(first.get("queue").and_then(Json::as_u64), Some(3));
+        let second = &rows[1];
+        assert_eq!(second.get("reconnects").and_then(Json::as_u64), Some(6));
+        assert_eq!(second.get("drops").and_then(Json::as_u64), Some(12));
+
+        let snap = s.snapshot_json();
+        let p = snap.get("peers").unwrap();
+        assert_eq!(p.get("up").and_then(Json::as_u64), Some(1));
+        assert_eq!(p.get("down").and_then(Json::as_u64), Some(1));
+    }
+
+    #[test]
+    fn chaos_handle_attaches() {
+        let s = ControlState::new();
+        assert!(s.chaos().is_none());
+        s.set_chaos(ChaosCtl {
+            rules: ChaosRules::new(7),
+            edges: vec!["a->b".into(), "b->a".into()],
+        });
+        let ctl = s.chaos().unwrap();
+        assert_eq!(ctl.edges.len(), 2);
+        assert!(ctl.rules.active("a->b").is_none());
     }
 
     #[test]

@@ -218,6 +218,12 @@ pub struct TrainConfig {
     /// `--resume` reads back — a killed worker restarts from its last
     /// committed model instead of scratch
     pub checkpoint: Option<String>,
+    /// TCP fabric: idle links heartbeat (`PING`) at this cadence so
+    /// half-open peers are detected (DESIGN.md §13)
+    pub heartbeat_ms: u64,
+    /// TCP fabric: bounded send-queue depth per peer; when full the
+    /// oldest frame is dropped (`queue_drop`), which TMSN tolerates
+    pub queue_cap: usize,
 }
 
 impl Default for TrainConfig {
@@ -254,6 +260,8 @@ impl Default for TrainConfig {
             resume: None,
             broadcast: BroadcastMode::Full,
             checkpoint: None,
+            heartbeat_ms: 500,
+            queue_cap: 1024,
         }
     }
 }
@@ -308,6 +316,8 @@ impl TrainConfig {
         if let Some(s) = args.get("checkpoint") {
             self.checkpoint = Some(s.to_string());
         }
+        self.heartbeat_ms = args.get_u64("heartbeat-ms", self.heartbeat_ms);
+        self.queue_cap = args.get_usize("queue-cap", self.queue_cap);
         self.validate()?;
         Ok(self)
     }
@@ -360,6 +370,12 @@ impl TrainConfig {
             if self.memory_budget == 0 {
                 return Err("memory-budget must be positive".into());
             }
+        }
+        if self.heartbeat_ms == 0 {
+            return Err("heartbeat-ms must be >= 1".into());
+        }
+        if self.queue_cap == 0 {
+            return Err("queue-cap must be >= 1".into());
         }
         Ok(())
     }
@@ -509,6 +525,21 @@ mod tests {
     fn invalid_workers_rejected() {
         assert!(TrainConfig::default()
             .apply_args(&args("train --workers 0"))
+            .is_err());
+    }
+
+    #[test]
+    fn fabric_knobs_parse_and_validate() {
+        let cfg = TrainConfig::default()
+            .apply_args(&args("train --heartbeat-ms 250 --queue-cap 64"))
+            .unwrap();
+        assert_eq!(cfg.heartbeat_ms, 250);
+        assert_eq!(cfg.queue_cap, 64);
+        assert!(TrainConfig::default()
+            .apply_args(&args("train --heartbeat-ms 0"))
+            .is_err());
+        assert!(TrainConfig::default()
+            .apply_args(&args("train --queue-cap 0"))
             .is_err());
     }
 

@@ -50,9 +50,14 @@ COMMANDS
   eval       --model model.txt --test test.sprw
   worker     one TMSN worker process over real TCP:
              --data train.sprw --worker-id I --workers N --listen ADDR
-             [--peers addr1,addr2,...] [--admin ADDR] --out model.txt
+             [--peers addr1,addr2,...] [--seed-peers addr] [--pex]
+             [--advertise ADDR] [--admin ADDR] --out model.txt
              [--broadcast full|fanout[:K]] [--checkpoint PATH]
+             [--heartbeat-ms MS] [--queue-cap N]
              [--resume PATH [--resume-bound B]] [train knobs as above]
+             (--seed-peers joins via peer exchange — no static peer list;
+             --pex makes a seed node answer discovery; --advertise sets
+             the announced dial-back address, e.g. behind a proxy)
   serve      a worker that also answers predictions from the latest
              adopted model (hot-swapped on every adoption, see
              OPERATIONS.md): --data train.sprw [--serve-addr ADDR]
@@ -60,7 +65,7 @@ COMMANDS
              [--exit-after-train] [worker knobs as above]
   rpc        one admin/serve RPC call, response envelope on stdout:
              --addr HOST:PORT --method NAME [--params JSON]
-             (methods: ping, metrics.snapshot, model.current,
+             (methods: ping, metrics.snapshot, model.current, peers.list,
              config.set_gamma, config.gamma_reset, config.set_sweep,
              fault.inject, shutdown; serve: predict, serve.stats)
   launch     spawn N local `worker` processes wired over TCP:
@@ -384,6 +389,45 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
 /// All workers must be launched with the same `--data`, `--workers` and
 /// `--nthr` so they derive the identical candidate grid (pilot quantiles
 /// are deterministic) and consistent feature stripes.
+/// Wire the self-healing fabric (DESIGN.md §13) onto a freshly bound
+/// endpoint: tuning from the config knobs, peer exchange for seed-node
+/// discovery, and the initial dials — the static `--peers` list plus the
+/// `--seed-peers` discovery seeds.
+fn wire_fabric<P: sparrow::tmsn::Payload>(
+    endpoint: &sparrow::network::TcpEndpoint<P>,
+    cfg: &TrainConfig,
+    worker_id: usize,
+    peers: &str,
+    seed_peers: &str,
+    pex: bool,
+    advertise: Option<&str>,
+) -> anyhow::Result<()> {
+    use sparrow::network::TcpTuning;
+    endpoint.tune(TcpTuning {
+        heartbeat: Duration::from_millis(cfg.heartbeat_ms),
+        queue_cap: cfg.queue_cap,
+        ..TcpTuning::default()
+    });
+    // peer exchange is on for a joiner (--seed-peers), a seed node
+    // (--pex), or any endpoint announcing a non-bind address
+    // (--advertise, e.g. when fronted by a chaos proxy)
+    if pex || !seed_peers.is_empty() || advertise.is_some() {
+        match advertise {
+            Some(a) => endpoint.enable_pex_as(a),
+            None => endpoint.enable_pex(),
+        }
+    }
+    for peer in peers.split(',').filter(|p| !p.is_empty()) {
+        endpoint.connect(peer)?;
+        println!("worker {worker_id} connected to {peer}");
+    }
+    for seed in seed_peers.split(',').filter(|p| !p.is_empty()) {
+        endpoint.connect(seed)?;
+        println!("worker {worker_id} joining swarm via seed {seed}");
+    }
+    Ok(())
+}
+
 fn cmd_worker(args: &Args) -> anyhow::Result<()> {
     use sparrow::admin::{AdminHandler, ControlState, RpcServer};
     use sparrow::boosting::grid::partition_features;
@@ -404,6 +448,9 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
     let worker_id = args.get_usize("worker-id", 0);
     let listen = args.get_or("listen", "127.0.0.1:0");
     let peers = args.get_or("peers", "");
+    let seed_peers = args.get_or("seed-peers", "");
+    let pex = args.has_flag("pex");
+    let advertise = args.get("advertise").map(str::to_string);
     let admin_addr = args.get("admin").map(str::to_string);
     let out = args.get("out").map(str::to_string);
     let mut cfg = TrainConfig::default()
@@ -426,10 +473,15 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
 
     let endpoint: TcpEndpoint<BoostPayload> = TcpEndpoint::bind(&listen)?;
     println!("worker {worker_id} listening on {}", endpoint.local_addr());
-    for peer in peers.split(',').filter(|p| !p.is_empty()) {
-        endpoint.connect(peer)?;
-        println!("worker {worker_id} connected to {peer}");
-    }
+    wire_fabric(
+        &endpoint,
+        &cfg,
+        worker_id,
+        &peers,
+        &seed_peers,
+        pex,
+        advertise.as_deref(),
+    )?;
     // gossip mode is a cluster-wide dialect: every worker must be launched
     // with the same --broadcast value (DESIGN.md §12)
     endpoint.enable_fanout(
@@ -445,6 +497,8 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
     let control = match admin_addr {
         Some(addr) => {
             let state = Arc::new(ControlState::new());
+            // `peers.list` + the snapshot's peers object read the live table
+            state.set_peer_source(endpoint.peer_table_handle());
             log = log.with_counters(Arc::clone(&state.counters));
             let admin = RpcServer::bind(
                 &addr,
@@ -458,8 +512,11 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
         }
         None => None,
     };
-    // gossip relays show up in the metrics feed as `forward` events
+    // gossip relays show up in the metrics feed as `forward` events;
+    // the fabric's own lifecycle (peer_up/peer_down/reconnect/queue_drop)
+    // feeds the same log
     endpoint.fanout_event_log(log.clone(), worker_id);
+    endpoint.event_log(log.clone(), worker_id);
     let cfg2 = cfg.clone();
     let result = run_worker(WorkerParams {
         id: worker_id,
@@ -534,6 +591,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let worker_id = args.get_usize("worker-id", 0);
     let listen = args.get_or("listen", "127.0.0.1:0");
     let peers = args.get_or("peers", "");
+    let seed_peers = args.get_or("seed-peers", "");
+    let pex = args.has_flag("pex");
+    let advertise = args.get("advertise").map(str::to_string);
     let out = args.get("out").map(str::to_string);
     let exit_after_train = args.has_flag("exit-after-train");
     let serve_cfg = ServeConfig::default()
@@ -558,10 +618,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if cfg.num_workers > 1 {
         println!("worker {worker_id} listening on {}", endpoint.local_addr());
     }
-    for peer in peers.split(',').filter(|p| !p.is_empty()) {
-        endpoint.connect(peer)?;
-        println!("worker {worker_id} connected to {peer}");
-    }
+    wire_fabric(
+        &endpoint,
+        &cfg,
+        worker_id,
+        &peers,
+        &seed_peers,
+        pex,
+        advertise.as_deref(),
+    )?;
     endpoint.enable_fanout(
         cfg.broadcast,
         cfg.num_workers,
@@ -570,6 +635,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 
     let stop = Arc::new(AtomicBool::new(false));
     let state = Arc::new(ControlState::new());
+    state.set_peer_source(endpoint.peer_table_handle());
     let slot = Arc::new(ModelSlot::new());
     if let Some((model, bound)) = &cfg.resume {
         // serve the checkpoint immediately instead of the empty model;
@@ -593,6 +659,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let (log, _event_rx) = EventLog::new();
     let log = log.with_counters(Arc::clone(&state.counters));
     endpoint.fanout_event_log(log.clone(), worker_id);
+    endpoint.event_log(log.clone(), worker_id);
     let cfg2 = cfg.clone();
     let result = run_worker(WorkerParams {
         id: worker_id,
@@ -832,6 +899,8 @@ fn cmd_launch(args: &Args) -> anyhow::Result<()> {
         "seed",
         "artifacts-dir",
         "broadcast",
+        "heartbeat-ms",
+        "queue-cap",
     ]
     .iter()
     .filter_map(|k| args.get(k).map(|v| vec![format!("--{k}"), v.to_string()]))

@@ -49,6 +49,15 @@ pub enum EventKind {
     Rejoin,
     /// accepted payload re-forwarded to gossip peers (fanout mode)
     Forward,
+    /// TCP fabric established (or re-established) a live link to a peer
+    PeerUp,
+    /// TCP fabric lost a peer link (timeout, heartbeat miss, or EOF)
+    PeerDown,
+    /// redial of a down peer succeeded (value = attempt number)
+    Reconnect,
+    /// bounded send queue full: oldest frame dropped (safe — TMSN is
+    /// no-FIFO/lossy-tolerant, DESIGN.md §13)
+    QueueDrop,
 }
 
 impl EventKind {
@@ -57,7 +66,7 @@ impl EventKind {
     /// and the OPERATIONS.md coverage check are all indexed by — adding
     /// a variant without extending it is a compile error (the `match`
     /// in [`EventKind::index`] is exhaustive).
-    pub const ALL: [EventKind; 18] = [
+    pub const ALL: [EventKind; 22] = [
         EventKind::LocalImprovement,
         EventKind::Broadcast,
         EventKind::Receive,
@@ -76,6 +85,10 @@ impl EventKind {
         EventKind::Join,
         EventKind::Rejoin,
         EventKind::Forward,
+        EventKind::PeerUp,
+        EventKind::PeerDown,
+        EventKind::Reconnect,
+        EventKind::QueueDrop,
     ];
 
     /// Position of this kind in [`EventKind::ALL`] (dense index for
@@ -100,6 +113,10 @@ impl EventKind {
             EventKind::Join => 15,
             EventKind::Rejoin => 16,
             EventKind::Forward => 17,
+            EventKind::PeerUp => 18,
+            EventKind::PeerDown => 19,
+            EventKind::Reconnect => 20,
+            EventKind::QueueDrop => 21,
         }
     }
 
@@ -124,6 +141,10 @@ impl EventKind {
             EventKind::Join => "join",
             EventKind::Rejoin => "rejoin",
             EventKind::Forward => "forward",
+            EventKind::PeerUp => "peer_up",
+            EventKind::PeerDown => "peer_down",
+            EventKind::Reconnect => "reconnect",
+            EventKind::QueueDrop => "queue_drop",
         }
     }
 }

@@ -45,14 +45,19 @@ pub fn render_timeline(events: &[Event], workers: usize, width: usize) -> String
             EventKind::Forward => continue,
             // tiered-store I/O detail, not a Figure-1 protocol action
             EventKind::Spill | EventKind::ReadaheadHit | EventKind::ReadaheadMiss => continue,
+            EventKind::PeerUp => b'u',
+            EventKind::PeerDown => b'd',
+            EventKind::Reconnect => b'r',
+            // per-frame transport detail, not a Figure-1 protocol action
+            EventKind::QueueDrop => continue,
         };
         // don't let low-priority glyphs overwrite high-priority ones
         let priority = |g: u8| match g {
             b'X' => 5,
             b'!' | b'B' | b'F' | b'+' | b'^' => 4,
             b'[' | b']' | b'|' | b's' => 3,
-            b'g' | b'~' => 2,
-            b'.' => 1,
+            b'g' | b'~' | b'r' => 2,
+            b'.' | b'u' | b'd' => 1,
             _ => 0,
         };
         if priority(glyph) >= priority(lane[x]) {
@@ -70,7 +75,7 @@ pub fn render_timeline(events: &[Event], workers: usize, width: usize) -> String
     }
     let mut out = String::new();
     out.push_str(&format!(
-        "timeline ({} workers, {:.2}s span)  F=found B=broadcast !=accepted-interrupt .=rejected [ ]=resample s=swap ~=build-abort g=gamma/2 X=crash\n",
+        "timeline ({} workers, {:.2}s span)  F=found B=broadcast !=accepted-interrupt .=rejected [ ]=resample s=swap ~=build-abort g=gamma/2 X=crash u=peer-up d=peer-down r=reconnect\n",
         workers, tmax
     ));
     for (i, lane) in lanes.iter().enumerate() {

@@ -1,0 +1,617 @@
+//! Chaos proxy: seeded TCP fault injection against *real* sockets
+//! (DESIGN.md §13).
+//!
+//! PR 5's simulator proves TMSN's resilience claims under a virtual wire;
+//! this module re-runs the same fault vocabulary against the real TCP
+//! fabric. A [`ChaosProxy`] is an in-process forwarder for one directed
+//! edge: peers dial the proxy's listen address instead of the upstream
+//! worker, and every byte of the dialer→upstream direction passes through
+//! a fault gate consulted per frame. Faults live in a shared
+//! [`ChaosRules`] table so a test harness — or the admin RPC's
+//! `fault.inject` — can flip them at runtime:
+//!
+//! * [`ChaosFault::Delay`] — hold each frame for a fixed latency;
+//! * [`ChaosFault::Drop`] — discard each frame with seeded probability
+//!   `p` (deterministic per `(seed, edge)`);
+//! * [`ChaosFault::Blackhole`] — swallow every frame while still reading
+//!   the socket, so the sender sees a healthy connection that delivers
+//!   nothing (the "silent partition" case);
+//! * [`ChaosFault::HalfOpen`] — stop reading entirely without closing,
+//!   so the sender's kernel buffers fill and its writes stall — the
+//!   failure mode that pinned `receive_loop` threads before PR 9's
+//!   write timeouts.
+//!
+//! The proxy keeps a bounded pcap-style frame trace (edge, direction,
+//! frame length, action, timestamp) in the rules table; the chaos CI job
+//! dumps it as a JSONL artifact when a battery fails.
+//!
+//! Fidelity notes (the honest caveats, expanded in DESIGN.md §13): the
+//! proxy injects faults on the dialer→upstream direction of each edge it
+//! fronts, at frame granularity. It cannot reorder within a connection
+//! (TCP's per-link FIFO survives), cannot corrupt checksummed bytes in a
+//! way the kernel would deliver, and a `restart` seen through it is a
+//! connectivity restart, not a process death — the integration tests kill
+//! the real worker for that.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::network::tcp::{frame_bytes, peek_frame, MAX_PAYLOAD};
+use crate::util::rng::Rng;
+
+/// One injectable fault for a directed edge.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChaosFault {
+    /// Hold every frame for this many milliseconds before forwarding.
+    Delay {
+        /// added one-way latency per frame
+        ms: u64,
+    },
+    /// Discard each frame independently with probability `p` (seeded).
+    Drop {
+        /// per-frame drop probability in `[0, 1]`
+        p: f64,
+    },
+    /// Read and discard everything: the sender sees a live, accepting
+    /// connection that never delivers.
+    Blackhole,
+    /// Stop reading without closing: the sender's buffers fill and its
+    /// writes stall until its write timeout trips.
+    HalfOpen,
+}
+
+impl ChaosFault {
+    /// Stable lowercase name (trace records, admin params).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ChaosFault::Delay { .. } => "delay",
+            ChaosFault::Drop { .. } => "drop",
+            ChaosFault::Blackhole => "blackhole",
+            ChaosFault::HalfOpen => "half_open",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Rule {
+    fault: ChaosFault,
+    /// expiry for timed faults (`fault.inject` partitions with `ms`);
+    /// `None` = until cleared
+    until: Option<Instant>,
+}
+
+/// One pcap-style trace record: what the proxy did to one frame.
+#[derive(Debug, Clone)]
+pub struct TraceRec {
+    /// milliseconds since the rules table was created
+    pub t_ms: u64,
+    /// edge name (e.g. `"w1->w0"`)
+    pub edge: String,
+    /// what happened to the frame (`"forward"`, `"drop"`, `"delay"`,
+    /// `"blackhole"`)
+    pub action: &'static str,
+    /// frame payload length in bytes
+    pub len: usize,
+}
+
+/// Bound on retained trace records — a long battery must not grow memory
+/// without limit; the newest records win.
+const TRACE_CAP: usize = 100_000;
+
+/// The shared fault table all proxies of one harness consult, plus the
+/// frame trace they append to. Cheap to clone an `Arc` of; every mutation
+/// takes effect on the next frame through any attached proxy.
+pub struct ChaosRules {
+    seed: u64,
+    epoch: Instant,
+    edges: Mutex<HashMap<String, Rule>>,
+    trace: Mutex<Vec<TraceRec>>,
+}
+
+impl ChaosRules {
+    /// A fresh table; `seed` drives every probabilistic fault, so a
+    /// battery is reproducible from `(seed, edge names, schedule)`.
+    pub fn new(seed: u64) -> Arc<ChaosRules> {
+        Arc::new(ChaosRules {
+            seed,
+            epoch: Instant::now(),
+            edges: Mutex::new(HashMap::new()),
+            trace: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Install `fault` on `edge` until cleared.
+    pub fn set(&self, edge: &str, fault: ChaosFault) {
+        self.edges
+            .lock()
+            .unwrap()
+            .insert(edge.to_string(), Rule { fault, until: None });
+    }
+
+    /// Install `fault` on `edge` for `dur`, then auto-heal.
+    pub fn set_for(&self, edge: &str, fault: ChaosFault, dur: Duration) {
+        self.edges.lock().unwrap().insert(
+            edge.to_string(),
+            Rule {
+                fault,
+                until: Some(Instant::now() + dur),
+            },
+        );
+    }
+
+    /// Remove any fault on `edge`.
+    pub fn clear(&self, edge: &str) {
+        self.edges.lock().unwrap().remove(edge);
+    }
+
+    /// Remove every fault (the admin plane's `heal`).
+    pub fn clear_all(&self) {
+        self.edges.lock().unwrap().clear();
+    }
+
+    /// The fault currently active on `edge`, resolving timed expiry.
+    pub fn active(&self, edge: &str) -> Option<ChaosFault> {
+        let mut edges = self.edges.lock().unwrap();
+        match edges.get(edge) {
+            None => None,
+            Some(rule) => match rule.until {
+                Some(t) if Instant::now() >= t => {
+                    edges.remove(edge);
+                    None
+                }
+                _ => Some(rule.fault),
+            },
+        }
+    }
+
+    /// Deterministic per-edge RNG (drop decisions).
+    fn edge_rng(&self, edge: &str) -> Rng {
+        // FNV-1a over the edge name, folded into the battery seed
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &b in edge.as_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        Rng::new(self.seed ^ h)
+    }
+
+    fn note(&self, edge: &str, action: &'static str, len: usize) {
+        let mut trace = self.trace.lock().unwrap();
+        if trace.len() >= TRACE_CAP {
+            trace.remove(0);
+        }
+        trace.push(TraceRec {
+            t_ms: self.epoch.elapsed().as_millis() as u64,
+            edge: edge.to_string(),
+            action,
+            len,
+        });
+    }
+
+    /// Number of trace records currently retained.
+    pub fn trace_len(&self) -> usize {
+        self.trace.lock().unwrap().len()
+    }
+
+    /// The frame trace as JSONL — the failing-battery artifact the chaos
+    /// CI job uploads.
+    pub fn trace_jsonl(&self) -> String {
+        use crate::util::json::Json;
+        let trace = self.trace.lock().unwrap();
+        let mut out = String::new();
+        for rec in trace.iter() {
+            let mut o = Json::obj();
+            o.set("t_ms", rec.t_ms)
+                .set("edge", rec.edge.as_str())
+                .set("action", rec.action)
+                .set("len", rec.len);
+            out.push_str(&o.to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// An in-process TCP forwarder for one directed edge: listens on an
+/// ephemeral port, forwards to `upstream`, applies the edge's
+/// [`ChaosRules`] entry to every dialer→upstream frame. Dropping the
+/// proxy stops its threads and closes the listener.
+pub struct ChaosProxy {
+    listen_addr: SocketAddr,
+    upstream: Arc<Mutex<String>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl ChaosProxy {
+    /// Bind `127.0.0.1:0` and start forwarding to `upstream`, applying
+    /// `rules[edge]` per frame.
+    pub fn spawn(
+        upstream: &str,
+        rules: &Arc<ChaosRules>,
+        edge: &str,
+    ) -> io::Result<ChaosProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let listen_addr = listener.local_addr()?;
+        let upstream = Arc::new(Mutex::new(upstream.to_string()));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let up = Arc::clone(&upstream);
+        let st = Arc::clone(&stop);
+        let rl = Arc::clone(rules);
+        let edge = edge.to_string();
+        std::thread::Builder::new()
+            .name(format!("chaos-{edge}"))
+            .spawn(move || {
+                for client in listener.incoming() {
+                    if st.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(client) = client else { break };
+                    let target = up.lock().unwrap().clone();
+                    // upstream down (killed worker): refuse by closing the
+                    // client socket, so the dialer's writer sees the death
+                    // immediately and enters its redial schedule
+                    let Ok(server) = TcpStream::connect(&target) else {
+                        drop(client);
+                        continue;
+                    };
+                    let (c2, s2) = (client.try_clone(), server.try_clone());
+                    let (Ok(c2), Ok(s2)) = (c2, s2) else { continue };
+                    let rl_f = Arc::clone(&rl);
+                    let st_f = Arc::clone(&st);
+                    let edge_f = edge.clone();
+                    std::thread::spawn(move || {
+                        pump_faulted(client, server, rl_f, st_f, &edge_f)
+                    });
+                    let st_b = Arc::clone(&st);
+                    std::thread::spawn(move || pump_raw(s2, c2, st_b));
+                }
+            })?;
+
+        Ok(ChaosProxy {
+            listen_addr,
+            upstream,
+            stop,
+        })
+    }
+
+    /// Where peers should dial (hand this out instead of the worker's
+    /// real listen address).
+    pub fn listen_addr(&self) -> SocketAddr {
+        self.listen_addr
+    }
+
+    /// Retarget the proxy — the restart path: a worker killed and rebound
+    /// on a fresh port keeps its public (proxy) address, so surviving
+    /// peers' redial schedules find it without re-discovery.
+    pub fn set_upstream(&self, addr: &str) {
+        *self.upstream.lock().unwrap() = addr.to_string();
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the accept loop so it observes the stop flag
+        let _ = TcpStream::connect(self.listen_addr);
+    }
+}
+
+/// Faulted direction (dialer → upstream). Accumulates bytes, carves
+/// complete frames, applies the edge's active fault to each. On a
+/// non-TMSN byte stream (bad magic) it degrades to a transparent
+/// chunk-level forwarder — the proxy is a wire, not a validator.
+fn pump_faulted(
+    mut from: TcpStream,
+    mut to: TcpStream,
+    rules: Arc<ChaosRules>,
+    stop: Arc<AtomicBool>,
+    edge: &str,
+) {
+    let mut rng = rules.edge_rng(edge);
+    from.set_read_timeout(Some(Duration::from_millis(100))).ok();
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 16 * 1024];
+    let mut transparent = false;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        // half-open: park without reading, so the sender's buffers fill
+        if matches!(rules.active(edge), Some(ChaosFault::HalfOpen)) {
+            std::thread::sleep(Duration::from_millis(20));
+            continue;
+        }
+        match from.read(&mut chunk) {
+            Ok(0) => return, // dialer closed
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+            }
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => return,
+        }
+        if transparent {
+            let fault = rules.active(edge);
+            if forward_opaque(&mut to, &mut buf, fault, &mut rng, &rules, edge).is_err() {
+                return;
+            }
+            continue;
+        }
+        // carve complete frames off the front of the buffer
+        loop {
+            match peek_frame(&buf) {
+                Ok(None) => break, // incomplete: wait for more bytes
+                Err(_) => {
+                    // not TMSN framing: forward everything verbatim from
+                    // here on (still subject to blackhole/half-open)
+                    transparent = true;
+                    let fault = rules.active(edge);
+                    if forward_opaque(&mut to, &mut buf, fault, &mut rng, &rules, edge)
+                        .is_err()
+                    {
+                        return;
+                    }
+                    break;
+                }
+                Ok(Some(frame_len)) => {
+                    let payload: Vec<u8> = buf[8..frame_len].to_vec();
+                    buf.drain(..frame_len);
+                    match rules.active(edge) {
+                        None => {
+                            rules.note(edge, "forward", payload.len());
+                            if to.write_all(&frame_bytes(&payload)).is_err() {
+                                return;
+                            }
+                        }
+                        Some(ChaosFault::Delay { ms }) => {
+                            rules.note(edge, "delay", payload.len());
+                            std::thread::sleep(Duration::from_millis(ms));
+                            if to.write_all(&frame_bytes(&payload)).is_err() {
+                                return;
+                            }
+                        }
+                        Some(ChaosFault::Drop { p }) => {
+                            if rng.bernoulli(p) {
+                                rules.note(edge, "drop", payload.len());
+                            } else {
+                                rules.note(edge, "forward", payload.len());
+                                if to.write_all(&frame_bytes(&payload)).is_err() {
+                                    return;
+                                }
+                            }
+                        }
+                        Some(ChaosFault::Blackhole) => {
+                            rules.note(edge, "blackhole", payload.len());
+                        }
+                        // half-open flipped on mid-carve: the frame is
+                        // already ours — swallow it and park on the next
+                        // loop iteration
+                        Some(ChaosFault::HalfOpen) => {
+                            rules.note(edge, "blackhole", payload.len());
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Transparent-mode forwarding: the buffer is opaque bytes; apply
+/// blackhole/drop at chunk granularity, else pass through.
+fn forward_opaque(
+    to: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    fault: Option<ChaosFault>,
+    rng: &mut Rng,
+    rules: &ChaosRules,
+    edge: &str,
+) -> io::Result<()> {
+    if buf.is_empty() {
+        return Ok(());
+    }
+    let len = buf.len();
+    let res = match fault {
+        Some(ChaosFault::Blackhole) | Some(ChaosFault::HalfOpen) => {
+            rules.note(edge, "blackhole", len);
+            Ok(())
+        }
+        Some(ChaosFault::Drop { p }) if rng.bernoulli(p) => {
+            rules.note(edge, "drop", len);
+            Ok(())
+        }
+        Some(ChaosFault::Delay { ms }) => {
+            rules.note(edge, "delay", len);
+            std::thread::sleep(Duration::from_millis(ms));
+            to.write_all(buf)
+        }
+        _ => {
+            rules.note(edge, "forward", len);
+            to.write_all(buf)
+        }
+    };
+    buf.clear();
+    res
+}
+
+/// Raw direction (upstream → dialer): transparent byte pump with a stop
+/// check. Our links are written dialer→listener, so this side normally
+/// carries nothing, but transparency keeps the proxy honest for any
+/// bidirectional protocol riding it.
+fn pump_raw(mut from: TcpStream, mut to: TcpStream, stop: Arc<AtomicBool>) {
+    from.set_read_timeout(Some(Duration::from_millis(100))).ok();
+    let mut chunk = [0u8; 16 * 1024];
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match from.read(&mut chunk) {
+            Ok(0) => return,
+            Ok(n) => {
+                if to.write_all(&chunk[..n]).is_err() {
+                    return;
+                }
+            }
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+// `MAX_PAYLOAD` is re-used by `peek_frame`'s bounds check; referencing it
+// here keeps the dependency explicit for readers of this module.
+const _: () = assert!(MAX_PAYLOAD > 0);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::TcpEndpoint;
+    use crate::tmsn::testpay::{TestCert, TestPayload};
+
+    fn msg(seq: u64) -> TestPayload {
+        TestPayload {
+            body: "chaos".into(),
+            cert: TestCert {
+                score: 0.5,
+                origin: 1,
+                seq,
+            },
+        }
+    }
+
+    /// a → proxy(edge) → b
+    fn proxied_pair(
+        rules: &Arc<ChaosRules>,
+        edge: &str,
+    ) -> (TcpEndpoint<TestPayload>, TcpEndpoint<TestPayload>, ChaosProxy) {
+        let a = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        let b = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        let proxy =
+            ChaosProxy::spawn(&b.local_addr().to_string(), rules, edge).unwrap();
+        a.connect(&proxy.listen_addr().to_string()).unwrap();
+        (a, b, proxy)
+    }
+
+    #[test]
+    fn clean_edge_forwards() {
+        let rules = ChaosRules::new(1);
+        let (a, b, _proxy) = proxied_pair(&rules, "a->b");
+        a.broadcast(&msg(1));
+        let got = b.recv_timeout(Duration::from_secs(5)).expect("delivery");
+        assert_eq!(got.cert.seq, 1);
+        assert!(rules.trace_len() >= 1);
+    }
+
+    #[test]
+    fn delay_injects_latency() {
+        let rules = ChaosRules::new(2);
+        let (a, b, _proxy) = proxied_pair(&rules, "a->b");
+        rules.set("a->b", ChaosFault::Delay { ms: 300 });
+        let t0 = Instant::now();
+        a.broadcast(&msg(2));
+        let got = b.recv_timeout(Duration::from_secs(5)).expect("delivery");
+        assert_eq!(got.cert.seq, 2);
+        assert!(
+            t0.elapsed() >= Duration::from_millis(200),
+            "delay fault must add latency (saw {:?})",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn blackhole_swallows_then_heals() {
+        let rules = ChaosRules::new(3);
+        let (a, b, _proxy) = proxied_pair(&rules, "a->b");
+        rules.set("a->b", ChaosFault::Blackhole);
+        a.broadcast(&msg(3));
+        assert!(
+            b.recv_timeout(Duration::from_millis(400)).is_none(),
+            "blackholed frame must not arrive"
+        );
+        rules.clear("a->b");
+        a.broadcast(&msg(4));
+        let got = b.recv_timeout(Duration::from_secs(5)).expect("healed delivery");
+        assert_eq!(got.cert.seq, 4);
+    }
+
+    #[test]
+    fn drop_probability_one_drops_everything() {
+        let rules = ChaosRules::new(4);
+        let (a, b, _proxy) = proxied_pair(&rules, "a->b");
+        rules.set("a->b", ChaosFault::Drop { p: 1.0 });
+        for i in 0..5 {
+            a.broadcast(&msg(i));
+        }
+        assert!(b.recv_timeout(Duration::from_millis(400)).is_none());
+        rules.clear("a->b");
+        a.broadcast(&msg(99));
+        assert_eq!(
+            b.recv_timeout(Duration::from_secs(5)).unwrap().cert.seq,
+            99
+        );
+    }
+
+    #[test]
+    fn timed_fault_auto_heals() {
+        let rules = ChaosRules::new(5);
+        rules.set_for("e", ChaosFault::Blackhole, Duration::from_millis(100));
+        assert_eq!(rules.active("e"), Some(ChaosFault::Blackhole));
+        std::thread::sleep(Duration::from_millis(150));
+        assert_eq!(rules.active("e"), None);
+    }
+
+    #[test]
+    fn upstream_death_closes_client_and_retarget_revives() {
+        let rules = ChaosRules::new(6);
+        let b1 = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        let proxy =
+            ChaosProxy::spawn(&b1.local_addr().to_string(), &rules, "a->b").unwrap();
+        let a = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        a.connect(&proxy.listen_addr().to_string()).unwrap();
+        a.broadcast(&msg(1));
+        assert_eq!(b1.recv_timeout(Duration::from_secs(5)).unwrap().cert.seq, 1);
+
+        // kill b1; the proxy refuses new upstream connections, a's writer
+        // goes into redial; then "restart" b on a fresh port
+        drop(b1);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while a.peer_count() > 0 {
+            assert!(Instant::now() < deadline, "peer death never detected");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let b2 = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        proxy.set_upstream(&b2.local_addr().to_string());
+        while a.peer_count() == 0 {
+            assert!(Instant::now() < deadline, "reconnect never happened");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(a.reconnect_count() >= 1);
+        a.broadcast(&msg(2));
+        let got = b2.recv_timeout(Duration::from_secs(10)).expect("post-restart delivery");
+        assert_eq!(got.cert.seq, 2);
+    }
+
+    #[test]
+    fn trace_is_jsonl_and_bounded() {
+        let rules = ChaosRules::new(7);
+        rules.note("x->y", "forward", 42);
+        rules.note("x->y", "drop", 7);
+        let dump = rules.trace_jsonl();
+        assert_eq!(dump.lines().count(), 2);
+        assert!(dump.contains("\"action\":\"drop\""));
+        assert!(dump.contains("\"edge\":\"x->y\""));
+    }
+}

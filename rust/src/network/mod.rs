@@ -38,11 +38,14 @@
 
 #![warn(missing_docs)]
 
+pub mod chaos;
 pub mod fabric;
+pub mod pex;
 pub mod tcp;
 
+pub use chaos::{ChaosFault, ChaosProxy, ChaosRules};
 pub use fabric::{Endpoint, Fabric, NetConfig, NetStats};
-pub use tcp::TcpEndpoint;
+pub use tcp::{PeerInfo, TcpEndpoint, TcpTuning};
 
 /// How a published payload fans out to the cluster (DESIGN.md §12).
 ///

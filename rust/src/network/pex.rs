@@ -1,0 +1,324 @@
+//! Peer exchange (PEX): seed-node discovery for the TCP fabric
+//! (DESIGN.md §13).
+//!
+//! A joiner no longer needs the full `--peers` list — it dials any one
+//! live member (`--seed-peers`), announces its own listen address in a
+//! versioned `PEX` frame, and the swarm does the rest: the seed dials the
+//! joiner back, replies with its full known peer set, and gossips the
+//! announcement onward with a decremented TTL (the same hop-budget
+//! envelope the §12 fanout dialect uses), so every member learns the new
+//! address within one flood.
+//!
+//! This module is transport-free on purpose: it holds the wire codec
+//! ([`encode_pex`] / [`decode_pex`]) and the membership table
+//! ([`PexTable`]) so `rust/tests/robustness.rs` can fuzz both without a
+//! socket in sight. The socket-facing state machine (who to dial, when to
+//! reply, when to relay) lives in [`crate::network::tcp`].
+//!
+//! Wire body (rides inside a `[TAG_PEX][ttl u8]` link frame, all
+//! little-endian):
+//!
+//! ```text
+//!     version  u64   sender's membership epoch (bumped per table change)
+//!     count    u16   number of addresses (≤ MAX_ADDRS)
+//!     repeated count times:
+//!       len    u16   address byte length (1 ..= MAX_ADDR_LEN)
+//!       addr   [u8]  UTF-8 socket address ("host:port")
+//! ```
+//!
+//! Every decode failure is a hard error — a malformed PEX frame drops the
+//! link, it never panics and never partially applies (fail closed).
+
+use std::collections::HashSet;
+
+/// Hard cap on addresses per PEX frame (bounds allocation under fuzzing
+/// and caps what a hostile peer can make us absorb in one frame).
+pub const MAX_ADDRS: usize = 1024;
+
+/// Hard cap on one address string ("host:port"; a DNS name maxes out at
+/// 253 bytes).
+pub const MAX_ADDR_LEN: usize = 256;
+
+/// Hard cap on the membership table itself — a gossip storm of unique
+/// fake addresses must not grow memory without bound.
+pub const MAX_KNOWN: usize = 10_000;
+
+/// One decoded peer-exchange message: the sender's membership epoch plus
+/// the addresses it is telling us about (its own for an announce, its
+/// whole table for a full-set reply).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PexMsg {
+    /// Sender's membership epoch; monotone per sender, bumped whenever
+    /// its table changes. Purely observational (dedup is by address, not
+    /// version) but lets an operator order gossip in a frame trace.
+    pub version: u64,
+    /// The addresses being exchanged.
+    pub addrs: Vec<String>,
+}
+
+/// Encode a [`PexMsg`] body (the caller wraps it in the link frame).
+pub fn encode_pex(msg: &PexMsg) -> Vec<u8> {
+    let count = msg.addrs.len().min(MAX_ADDRS);
+    let mut out = Vec::with_capacity(10 + count * 24);
+    out.extend_from_slice(&msg.version.to_le_bytes());
+    out.extend_from_slice(&(count as u16).to_le_bytes());
+    for addr in msg.addrs.iter().take(count) {
+        let bytes = addr.as_bytes();
+        debug_assert!(bytes.len() <= MAX_ADDR_LEN);
+        out.extend_from_slice(&(bytes.len() as u16).to_le_bytes());
+        out.extend_from_slice(bytes);
+    }
+    out
+}
+
+/// Decode a PEX body. Fails closed: truncation, an oversized count or
+/// address, an empty address, non-UTF-8 bytes, or trailing garbage are
+/// all errors (→ the caller drops the link).
+pub fn decode_pex(body: &[u8]) -> Result<PexMsg, String> {
+    if body.len() < 10 {
+        return Err(format!("pex body truncated at {} bytes", body.len()));
+    }
+    let version = u64::from_le_bytes(body[0..8].try_into().unwrap());
+    let count = u16::from_le_bytes(body[8..10].try_into().unwrap()) as usize;
+    if count > MAX_ADDRS {
+        return Err(format!("pex count {count} exceeds {MAX_ADDRS}"));
+    }
+    let mut addrs = Vec::with_capacity(count.min(64));
+    let mut pos = 10usize;
+    for i in 0..count {
+        let Some(len_bytes) = body.get(pos..pos + 2) else {
+            return Err(format!("pex truncated before addr {i} length"));
+        };
+        let len = u16::from_le_bytes(len_bytes.try_into().unwrap()) as usize;
+        if len == 0 || len > MAX_ADDR_LEN {
+            return Err(format!("pex addr {i} length {len} out of range"));
+        }
+        pos += 2;
+        let Some(bytes) = body.get(pos..pos + len) else {
+            return Err(format!("pex truncated inside addr {i}"));
+        };
+        let addr = std::str::from_utf8(bytes)
+            .map_err(|_| format!("pex addr {i} is not UTF-8"))?;
+        addrs.push(addr.to_string());
+        pos += len;
+    }
+    if pos != body.len() {
+        return Err(format!("pex has {} trailing bytes", body.len() - pos));
+    }
+    Ok(PexMsg { version, addrs })
+}
+
+/// The fabric's membership table: this endpoint's advertised address plus
+/// every peer address it has learned, with a monotone version stamp.
+///
+/// [`PexTable::absorb`] is the whole anti-loop argument: an incoming
+/// address is *fresh* only if it is not our own advertised address and
+/// not already known — so a self-announce echoed back to us produces an
+/// empty fresh set (nothing dialed, nothing relayed: the loop dies
+/// immediately), and a gossip storm of repeats converges because only
+/// fresh addresses are ever re-forwarded.
+#[derive(Debug)]
+pub struct PexTable {
+    self_addr: String,
+    version: u64,
+    known: HashSet<String>,
+}
+
+impl PexTable {
+    /// A table that knows only its own advertised address.
+    pub fn new(self_addr: &str) -> PexTable {
+        PexTable {
+            self_addr: self_addr.to_string(),
+            version: 0,
+            known: HashSet::new(),
+        }
+    }
+
+    /// The address this endpoint tells peers to dial (the chaos-proxy
+    /// address when the endpoint is fronted by one).
+    pub fn self_addr(&self) -> &str {
+        &self.self_addr
+    }
+
+    /// Current membership epoch (bumped by every table change).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Every known peer address (not including our own), unordered.
+    pub fn known(&self) -> Vec<String> {
+        self.known.iter().cloned().collect()
+    }
+
+    /// Record an address we dialed directly (CLI `--peers` /
+    /// `--seed-peers`) so a later PEX echo of it is not fresh.
+    pub fn note_direct(&mut self, addr: &str) {
+        if addr != self.self_addr && self.known.insert(addr.to_string()) {
+            self.version += 1;
+        }
+    }
+
+    /// Merge an incoming message, returning the genuinely new addresses
+    /// (never our own, never a repeat, never beyond [`MAX_KNOWN`]).
+    pub fn absorb(&mut self, msg: &PexMsg) -> Vec<String> {
+        let mut fresh = Vec::new();
+        for addr in &msg.addrs {
+            if addr == &self.self_addr || self.known.contains(addr) {
+                continue;
+            }
+            if self.known.len() >= MAX_KNOWN {
+                break; // fail closed on table exhaustion, don't evict
+            }
+            self.known.insert(addr.clone());
+            fresh.push(addr.clone());
+        }
+        if !fresh.is_empty() {
+            self.version += 1;
+        }
+        fresh
+    }
+
+    /// The announce message: just our own advertised address.
+    pub fn announce(&self) -> PexMsg {
+        PexMsg {
+            version: self.version,
+            addrs: vec![self.self_addr.clone()],
+        }
+    }
+
+    /// The full-set reply a seed sends a joiner: everything we know,
+    /// including ourselves, so one frame bootstraps the whole mesh view.
+    pub fn full_set(&self) -> PexMsg {
+        let mut addrs: Vec<String> = self.known.iter().cloned().collect();
+        addrs.push(self.self_addr.clone());
+        addrs.sort(); // deterministic frame bytes for traces/tests
+        PexMsg {
+            version: self.version,
+            addrs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let msg = PexMsg {
+            version: 7,
+            addrs: vec!["127.0.0.1:7701".into(), "10.0.0.2:9000".into()],
+        };
+        let body = encode_pex(&msg);
+        assert_eq!(decode_pex(&body).unwrap(), msg);
+    }
+
+    #[test]
+    fn roundtrip_empty() {
+        let msg = PexMsg {
+            version: 0,
+            addrs: vec![],
+        };
+        assert_eq!(decode_pex(&encode_pex(&msg)).unwrap(), msg);
+    }
+
+    #[test]
+    fn decode_rejects_truncation_at_every_byte() {
+        let body = encode_pex(&PexMsg {
+            version: 3,
+            addrs: vec!["127.0.0.1:7701".into(), "127.0.0.1:7702".into()],
+        });
+        for cut in 0..body.len() {
+            assert!(
+                decode_pex(&body[..cut]).is_err(),
+                "truncation to {cut} bytes must fail closed"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_rejects_trailing_garbage() {
+        let mut body = encode_pex(&PexMsg {
+            version: 1,
+            addrs: vec!["a:1".into()],
+        });
+        body.push(0);
+        assert!(decode_pex(&body).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_oversized_count_and_lengths() {
+        // count over the cap
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.extend_from_slice(&(MAX_ADDRS as u16 + 1).to_le_bytes());
+        assert!(decode_pex(&body).is_err());
+        // zero-length address
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.extend_from_slice(&1u16.to_le_bytes());
+        body.extend_from_slice(&0u16.to_le_bytes());
+        assert!(decode_pex(&body).is_err());
+        // non-UTF-8 address
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.extend_from_slice(&1u16.to_le_bytes());
+        body.extend_from_slice(&2u16.to_le_bytes());
+        body.extend_from_slice(&[0xFF, 0xFE]);
+        assert!(decode_pex(&body).is_err());
+    }
+
+    #[test]
+    fn absorb_filters_self_and_repeats() {
+        let mut t = PexTable::new("127.0.0.1:7700");
+        let msg = PexMsg {
+            version: 1,
+            addrs: vec![
+                "127.0.0.1:7700".into(), // self: never fresh
+                "127.0.0.1:7701".into(),
+                "127.0.0.1:7701".into(), // duplicate within one frame
+            ],
+        };
+        assert_eq!(t.absorb(&msg), vec!["127.0.0.1:7701".to_string()]);
+        // echoed back later: nothing fresh, version unchanged
+        let v = t.version();
+        assert!(t.absorb(&msg).is_empty());
+        assert_eq!(t.version(), v);
+    }
+
+    #[test]
+    fn self_announce_loop_fails_closed() {
+        // a frame containing only the receiver's own address must be a
+        // complete no-op: no fresh addrs to dial, relay, or reply to
+        let mut t = PexTable::new("127.0.0.1:7700");
+        let echo = PexMsg {
+            version: 99,
+            addrs: vec!["127.0.0.1:7700".into()],
+        };
+        assert!(t.absorb(&echo).is_empty());
+        assert_eq!(t.version(), 0);
+        assert!(t.known().is_empty());
+    }
+
+    #[test]
+    fn table_growth_is_bounded() {
+        let mut t = PexTable::new("self:0");
+        let addrs: Vec<String> = (0..MAX_KNOWN + 500).map(|i| format!("h:{i}")).collect();
+        for chunk in addrs.chunks(MAX_ADDRS) {
+            t.absorb(&PexMsg {
+                version: 0,
+                addrs: chunk.to_vec(),
+            });
+        }
+        assert_eq!(t.known().len(), MAX_KNOWN);
+    }
+
+    #[test]
+    fn full_set_includes_self_and_is_sorted() {
+        let mut t = PexTable::new("b:2");
+        t.note_direct("c:3");
+        t.note_direct("a:1");
+        let full = t.full_set();
+        assert_eq!(full.addrs, vec!["a:1", "b:2", "c:3"]);
+    }
+}

@@ -7,34 +7,60 @@
 //! acknowledgements and no ordering guarantees beyond TCP's per-link
 //! FIFO — faithfully TMSN: a dead peer just stops receiving.
 //!
+//! Since PR 9 the fabric is **self-healing** (DESIGN.md §13):
+//!
+//! * every outbound link is owned by a dedicated writer thread behind a
+//!   **bounded drop-oldest send queue**, so [`TcpEndpoint::broadcast`]
+//!   enqueues and returns — a slow or blackholed peer backpressures only
+//!   its own queue, never a publish and never another peer. Dropping the
+//!   oldest frame is safe because TMSN tolerates loss and needs no FIFO:
+//!   a newer certified payload supersedes anything older on the wire;
+//! * a dead link (write error, write timeout, heartbeat silence) moves to
+//!   a **redial schedule** with exponential backoff + seeded jitter,
+//!   emitting `peer_down` / `reconnect` / `peer_up` events; queued frames
+//!   survive the outage and flush on reconnect;
+//! * idle links carry **`PING` heartbeats**, and every socket gets
+//!   `TCP_NODELAY` plus read/write timeouts, so half-open peers are
+//!   detected on both ends instead of pinning threads forever;
+//! * with **peer exchange** enabled ([`TcpEndpoint::enable_pex`]), a
+//!   joiner dials one live seed node, announces its own address in a
+//!   `PEX` frame, and the swarm gossips the announcement: the seed dials
+//!   back, replies with its full known peer set, and relays the announce
+//!   onward — `--peers` becomes optional (see [`crate::network::pex`]).
+//!
 //! The transport is payload-generic: framing wraps [`Payload::encode`] /
 //! [`Payload::decode`], so any workload's messages ride the same sockets.
 //!
-//! Wire format (little-endian):
+//! Wire format (little-endian), unchanged outer frame:
 //!     magic  u32  = 0x54_4D_53_4E ("TMSN")
 //!     len    u32  = payload bytes
-//!     payload     = `P::encode()` (e.g. certificate line + model text
-//!                   for the boosting payload)
+//!     payload     = link dialect, below
 //!
-//! In **fanout (gossip) mode** (DESIGN.md §12; enabled cluster-wide via
-//! [`TcpEndpoint::enable_fanout`], so all peers speak the same dialect)
-//! the payload area gains a one-byte hop-budget envelope:
-//!     payload     = `[ttl u8][P::encode()]`
-//! A publish goes to `k` seeded random peers instead of all of them; a
-//! receiver that sees a payload for the first time pushes it to its inbox
-//! and — if `ttl > 0` — relays it to `k` of its own peers with `ttl − 1`.
-//! Duplicates are suppressed by `(origin, seq, cert-bits)` dedup, the
-//! same key the simulator's gossip proof uses. The frame *header* is
-//! untouched, so the admin RPC's shared framing keeps working.
+//! Inside a peer-link frame the payload always starts with a tag byte:
+//!     [0x00 = DATA][ttl u8][P::encode()]   certified payload
+//!     [0x01 = PING]                        heartbeat, no body
+//!     [0x02 = PEX ][ttl u8][pex body]      peer exchange (pex.rs codec)
+//! An unknown tag or a malformed body drops the link, never the worker
+//! (fail closed). Full-broadcast mode sends `ttl = 0` and never relays;
+//! **fanout (gossip) mode** (DESIGN.md §12, [`TcpEndpoint::enable_fanout`])
+//! uses the ttl as its hop budget: a receiver seeing a payload for the
+//! first time delivers it and — if `ttl > 0` — relays it to `k` of its own
+//! peers with `ttl − 1`, with `(origin, seq, cert-bits)` dedup exactly
+//! like the simulator's gossip proof.
+//!
+//! The admin RPC rides its own socket with raw [`frame_bytes`] framing
+//! (no tag byte) — the control plane's dialect is untouched.
 
-use std::collections::HashSet;
+use std::collections::{HashSet, VecDeque};
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::metrics::{EventKind, EventLog};
+use crate::network::pex::{decode_pex, encode_pex, PexMsg, PexTable};
 use crate::network::BroadcastMode;
 use crate::tmsn::{Certified, Payload};
 use crate::util::rng::Rng;
@@ -42,6 +68,17 @@ use crate::util::rng::Rng;
 const MAGIC: u32 = 0x544D_534E;
 /// hard cap on accepted payloads (a model of 10⁶ stumps ≈ 30 MB text)
 pub(crate) const MAX_PAYLOAD: u32 = 64 << 20;
+
+/// link dialect tags (first payload byte of every peer-link frame)
+const TAG_DATA: u8 = 0x00;
+const TAG_PING: u8 = 0x01;
+const TAG_PEX: u8 = 0x02;
+
+/// Hop budget on a fresh PEX announce. Loop termination comes from the
+/// known-set dedup in [`PexTable::absorb`]; the ttl only bounds how far a
+/// single announce can travel per flood, and 4 hops covers any mesh a
+/// seed-node join can produce (each hop re-floods to all up peers).
+const PEX_TTL: u8 = 4;
 
 /// Frame a payload for the wire.
 pub fn encode<P: Payload>(msg: &P) -> Vec<u8> {
@@ -96,6 +133,30 @@ pub(crate) fn read_frame(stream: &mut impl Read) -> io::Result<Option<Vec<u8>>> 
     Ok(Some(payload))
 }
 
+/// Inspect the front of a byte buffer for one complete frame without
+/// consuming it: `Ok(Some(total))` = a full frame of `total` bytes
+/// (8-byte header + payload) is present, `Ok(None)` = incomplete, `Err` =
+/// corrupt stream (bad magic / oversized length). The chaos proxy's
+/// frame-level fault gate is built on this.
+pub(crate) fn peek_frame(buf: &[u8]) -> Result<Option<usize>, String> {
+    if buf.len() < 8 {
+        return Ok(None);
+    }
+    let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err("bad magic".into());
+    }
+    let len = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    if len > MAX_PAYLOAD {
+        return Err("oversized frame".into());
+    }
+    let total = 8 + len as usize;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    Ok(Some(total))
+}
+
 /// Gossip-mode dedup key: `(origin, seq, certificate bits)`. The cert-bits
 /// component disambiguates incarnations — a resumed worker restamps its
 /// checkpoint `(id, 0)`, but any payload it re-publishes carries a
@@ -106,37 +167,358 @@ fn gossip_key<P: Payload>(msg: &P) -> (usize, u64, u64) {
     (c.origin(), c.seq(), c.summary().to_bits())
 }
 
-/// Frame a payload with the fanout hop-budget envelope:
-/// `[ttl u8][P::encode()]` inside the ordinary magic+len frame.
-fn encode_fanout<P: Payload>(msg: &P, ttl: u32) -> Vec<u8> {
-    let body = msg.encode();
-    let mut payload = Vec::with_capacity(1 + body.len());
-    payload.push(ttl.min(u8::MAX as u32) as u8);
-    payload.extend_from_slice(&body);
-    frame_bytes(&payload)
+/// `[TAG_DATA][ttl][body]` link payload.
+fn data_payload(body: &[u8], ttl: u8) -> Vec<u8> {
+    let mut p = Vec::with_capacity(2 + body.len());
+    p.push(TAG_DATA);
+    p.push(ttl);
+    p.extend_from_slice(body);
+    p
 }
 
-/// Write `frame` to `k` seeded-random distinct peers (all of them when
-/// `k >= peers.len()`); peers whose write fails are pruned, like
-/// full-mode broadcast.
-fn send_to_k(peers: &mut Vec<TcpStream>, rng: &mut Rng, k: usize, frame: &[u8]) {
-    if peers.is_empty() || k == 0 {
-        return;
+/// A framed `[TAG_PEX][ttl][pex body]` wire frame.
+fn pex_frame_bytes(msg: &PexMsg, ttl: u8) -> Vec<u8> {
+    let body = encode_pex(msg);
+    let mut p = Vec::with_capacity(2 + body.len());
+    p.push(TAG_PEX);
+    p.push(ttl);
+    p.extend_from_slice(&body);
+    frame_bytes(&p)
+}
+
+/// A framed heartbeat.
+fn ping_frame() -> Vec<u8> {
+    frame_bytes(&[TAG_PING])
+}
+
+/// Deterministic per-peer jitter stream (FNV-1a of the dial address).
+fn addr_seed(addr: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in addr.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
-    let k = k.min(peers.len());
-    let mut dead: Vec<usize> = rng
-        .sample_indices(peers.len(), k)
-        .into_iter()
-        .filter(|&i| peers[i].write_all(frame).is_err())
-        .collect();
-    dead.sort_unstable();
-    for i in dead.into_iter().rev() {
-        peers.remove(i);
+    h
+}
+
+/// Socket/liveness knobs for the self-healing fabric. Apply with
+/// [`TcpEndpoint::tune`] (ideally before connecting; live changes take
+/// effect on the next write/dial/accept).
+#[derive(Debug, Clone, Copy)]
+pub struct TcpTuning {
+    /// idle writer sends a `PING` after this long without traffic
+    pub heartbeat: Duration,
+    /// receiver drops a link after this long without any frame (heartbeats
+    /// included) — half-open detection on the inbound side
+    pub read_timeout: Duration,
+    /// a blocked write fails after this long — half-open detection on the
+    /// outbound side (the writer then enters its redial schedule)
+    pub write_timeout: Duration,
+    /// bounded send queue per peer; when full the **oldest** frame is
+    /// dropped (`queue_drop`), which TMSN tolerates by design
+    pub queue_cap: usize,
+    /// first backoff delay of the redial schedule (attempt 1 is immediate)
+    pub backoff_base: Duration,
+    /// backoff ceiling; the schedule is `min(base · 2^(n−1), cap)` with
+    /// ×[0.5, 1.5) seeded jitter
+    pub backoff_cap: Duration,
+}
+
+impl Default for TcpTuning {
+    fn default() -> Self {
+        TcpTuning {
+            heartbeat: Duration::from_millis(500),
+            read_timeout: Duration::from_secs(3),
+            write_timeout: Duration::from_secs(2),
+            queue_cap: 1024,
+            backoff_base: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(2),
+        }
+    }
+}
+
+/// One row of [`TcpEndpoint::peer_table`]: the live view of one outbound
+/// link, the `peers.list` admin RPC's payload.
+#[derive(Debug, Clone)]
+pub struct PeerInfo {
+    /// the address this endpoint dials (a peer's advertised address)
+    pub addr: String,
+    /// link currently established
+    pub up: bool,
+    /// frames waiting in the bounded send queue
+    pub queue_len: usize,
+    /// ms since the last successful write or dial on this link
+    pub last_seen_ms: u64,
+    /// successful redials after a loss (0 for a never-lost link)
+    pub reconnects: u64,
+    /// frames dropped from this link's queue (drop-oldest policy)
+    pub drops: u64,
+}
+
+/// One outbound link: its bounded queue plus liveness state. The writer
+/// thread is the only consumer; everyone else just pushes.
+struct PeerHandle {
+    addr: String,
+    queue: Mutex<VecDeque<Vec<u8>>>,
+    cv: Condvar,
+    up: AtomicBool,
+    ever_up: AtomicBool,
+    queue_len: AtomicUsize,
+    drops: AtomicU64,
+    reconnects: AtomicU64,
+    last_seen: Mutex<Instant>,
+}
+
+impl PeerHandle {
+    fn new(addr: &str) -> PeerHandle {
+        PeerHandle {
+            addr: addr.to_string(),
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            up: AtomicBool::new(false),
+            ever_up: AtomicBool::new(false),
+            queue_len: AtomicUsize::new(0),
+            drops: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+            last_seen: Mutex::new(Instant::now()),
+        }
+    }
+
+    /// Enqueue a frame, evicting the oldest when full. Returns whether an
+    /// eviction happened. Never blocks beyond the queue mutex.
+    fn push(&self, frame: Vec<u8>, cap: usize) -> bool {
+        let mut q = self.queue.lock().unwrap();
+        let mut dropped = false;
+        if q.len() >= cap.max(1) {
+            q.pop_front();
+            self.drops.fetch_add(1, Ordering::SeqCst);
+            dropped = true;
+        }
+        q.push_back(frame);
+        self.queue_len.store(q.len(), Ordering::SeqCst);
+        self.cv.notify_one();
+        dropped
+    }
+}
+
+/// Generic-free shared state: peer set, liveness knobs, membership table,
+/// event sink. Writer threads and admin closures hold an `Arc<Inner>`
+/// without dragging the payload type parameter along.
+///
+/// Lock order (outermost first): `fanout → pex → peers → queue → log /
+/// tuning`. `log` and `tuning` are leaves — nothing is acquired while
+/// they are held.
+struct Inner {
+    peers: Mutex<Vec<Arc<PeerHandle>>>,
+    stop: AtomicBool,
+    tuning: Mutex<TcpTuning>,
+    log: Mutex<Option<(EventLog, usize)>>,
+    pex: Mutex<Option<PexTable>>,
+    queue_drops: AtomicU64,
+    reconnects: AtomicU64,
+}
+
+impl Inner {
+    fn tuning(&self) -> TcpTuning {
+        *self.tuning.lock().unwrap()
+    }
+
+    fn emit(&self, kind: EventKind, value: f64) {
+        if let Some((log, id)) = self.log.lock().unwrap().as_ref() {
+            log.record(*id, kind, None, value);
+        }
+    }
+
+    /// Enqueue to one peer, accounting queue drops globally.
+    fn push_to(&self, peer: &PeerHandle, frame: Vec<u8>) {
+        let cap = self.tuning().queue_cap;
+        if peer.push(frame, cap) {
+            let total = self.queue_drops.fetch_add(1, Ordering::SeqCst) + 1;
+            self.emit(EventKind::QueueDrop, total as f64);
+        }
+    }
+
+    /// Register a peer (dedup by address) and start its writer thread.
+    /// `stream` carries an already-established socket (sync connect); with
+    /// `None` the writer dials asynchronously (PEX dial-backs, redials).
+    fn add_peer(self: &Arc<Inner>, addr: &str, stream: Option<TcpStream>) {
+        let peer = {
+            let mut peers = self.peers.lock().unwrap();
+            if peers.iter().any(|p| p.addr == addr) {
+                return; // already linked (drops a redundant socket, if any)
+            }
+            let p = Arc::new(PeerHandle::new(addr));
+            if stream.is_some() {
+                // the link is live right now: make peer_count() reflect it
+                // before this call returns (the writer emits the event)
+                p.up.store(true, Ordering::SeqCst);
+                p.ever_up.store(true, Ordering::SeqCst);
+            }
+            peers.push(Arc::clone(&p));
+            p
+        };
+        let inner = Arc::clone(self);
+        std::thread::Builder::new()
+            .name(format!("tmsn-writer-{addr}"))
+            .spawn(move || writer_loop(inner, peer, stream))
+            .ok();
+    }
+
+    fn peer_table(&self) -> Vec<PeerInfo> {
+        let mut out: Vec<PeerInfo> = self
+            .peers
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|p| PeerInfo {
+                addr: p.addr.clone(),
+                up: p.up.load(Ordering::SeqCst),
+                queue_len: p.queue_len.load(Ordering::SeqCst),
+                last_seen_ms: p.last_seen.lock().unwrap().elapsed().as_millis() as u64,
+                reconnects: p.reconnects.load(Ordering::SeqCst),
+                drops: p.drops.load(Ordering::SeqCst),
+            })
+            .collect();
+        out.sort_by(|a, b| a.addr.cmp(&b.addr));
+        out
+    }
+}
+
+enum Popped {
+    Frame(Vec<u8>),
+    Idle,
+    Stop,
+}
+
+/// Pop the next frame, or report an idle heartbeat interval, or notice
+/// shutdown. Blocks on the queue condvar, never on a socket.
+fn pop_or_idle(peer: &PeerHandle, inner: &Inner, heartbeat: Duration) -> Popped {
+    let mut q = peer.queue.lock().unwrap();
+    loop {
+        if inner.stop.load(Ordering::SeqCst) {
+            return Popped::Stop;
+        }
+        if let Some(f) = q.pop_front() {
+            peer.queue_len.store(q.len(), Ordering::SeqCst);
+            return Popped::Frame(f);
+        }
+        let (guard, res) = peer.cv.wait_timeout(q, heartbeat).unwrap();
+        q = guard;
+        if res.timed_out() {
+            return if inner.stop.load(Ordering::SeqCst) {
+                Popped::Stop
+            } else {
+                Popped::Idle
+            };
+        }
+    }
+}
+
+/// Configure a fresh link, mark it up, and announce ourselves on it when
+/// peer exchange is on (the announce precedes any queued frame).
+fn on_link_up(inner: &Inner, peer: &PeerHandle, s: &TcpStream) {
+    let t = inner.tuning();
+    s.set_nodelay(true).ok();
+    s.set_write_timeout(Some(t.write_timeout)).ok();
+    peer.up.store(true, Ordering::SeqCst);
+    peer.ever_up.store(true, Ordering::SeqCst);
+    *peer.last_seen.lock().unwrap() = Instant::now();
+    inner.emit(EventKind::PeerUp, 0.0);
+    let announce = inner
+        .pex
+        .lock()
+        .unwrap()
+        .as_ref()
+        .map(|table| pex_frame_bytes(&table.announce(), PEX_TTL));
+    if let Some(frame) = announce {
+        let _ = (&*s).write_all(&frame);
+    }
+}
+
+/// The per-peer writer: pop frames (or heartbeat when idle) while the
+/// link is up; redial with exponential backoff + jitter while it is down.
+/// The peers mutex is never held across any of this — a blocking write
+/// can stall only this one link.
+fn writer_loop(inner: Arc<Inner>, peer: Arc<PeerHandle>, mut stream: Option<TcpStream>) {
+    let mut rng = Rng::new(0x9E37_79B9 ^ addr_seed(&peer.addr));
+    if let Some(s) = &stream {
+        on_link_up(&inner, &peer, s);
+    }
+    let mut attempt: u64 = 0;
+    loop {
+        if inner.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match stream.as_mut() {
+            Some(s) => {
+                let hb = inner.tuning().heartbeat;
+                let frame = match pop_or_idle(&peer, &inner, hb) {
+                    Popped::Stop => return,
+                    Popped::Frame(f) => f,
+                    Popped::Idle => ping_frame(),
+                };
+                if s.write_all(&frame).is_ok() {
+                    *peer.last_seen.lock().unwrap() = Instant::now();
+                } else {
+                    stream = None;
+                    attempt = 0;
+                    peer.up.store(false, Ordering::SeqCst);
+                    inner.emit(EventKind::PeerDown, 0.0);
+                }
+            }
+            None => {
+                attempt += 1;
+                if attempt > 1 {
+                    // attempt 1 is immediate; then min(base·2^(n−1), cap)
+                    // with ×[0.5, 1.5) jitter so a kill wave's survivors
+                    // don't redial in lockstep
+                    let t = inner.tuning();
+                    let base = t.backoff_base.as_millis().max(1) as u64;
+                    let cap = t.backoff_cap.as_millis().max(1) as u64;
+                    let shift = (attempt - 2).min(16) as u32;
+                    let delay = base.saturating_shl(shift).min(cap);
+                    let jittered = (delay as f64 * rng.range_f64(0.5, 1.5)) as u64;
+                    let deadline = Instant::now() + Duration::from_millis(jittered.max(1));
+                    while Instant::now() < deadline {
+                        if inner.stop.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                }
+                if let Ok(s) = TcpStream::connect(&peer.addr) {
+                    let was_ever_up = peer.ever_up.load(Ordering::SeqCst);
+                    on_link_up(&inner, &peer, &s);
+                    if was_ever_up {
+                        peer.reconnects.fetch_add(1, Ordering::SeqCst);
+                        inner.reconnects.fetch_add(1, Ordering::SeqCst);
+                        inner.emit(EventKind::Reconnect, attempt as f64);
+                    }
+                    stream = Some(s);
+                    attempt = 0;
+                }
+            }
+        }
+    }
+}
+
+/// `u64` has no stable `saturating_shl`; a tiny local shim keeps the
+/// backoff arithmetic overflow-safe at absurd attempt counts.
+trait SatShl {
+    fn saturating_shl(self, shift: u32) -> u64;
+}
+impl SatShl for u64 {
+    fn saturating_shl(self, shift: u32) -> u64 {
+        if shift >= 63 || self.leading_zeros() <= shift {
+            u64::MAX
+        } else {
+            self << shift
+        }
     }
 }
 
 /// Per-endpoint gossip state, shared with the receive threads (they do
-/// the re-forwarding). `None` = full-broadcast mode, no envelopes.
+/// the re-forwarding). `None` = full-broadcast mode (ttl 0, no relays).
 struct FanoutRt {
     k: usize,
     ttl: u32,
@@ -148,7 +530,7 @@ struct FanoutRt {
 
 /// A worker's TCP attachment: listens for peers, dials peers, broadcasts.
 pub struct TcpEndpoint<P: Payload> {
-    peers: Arc<Mutex<Vec<TcpStream>>>,
+    inner: Arc<Inner>,
     inbox: Receiver<P>,
     local_addr: SocketAddr,
     fanout: Arc<Mutex<Option<FanoutRt>>>,
@@ -162,26 +544,40 @@ impl<P: Payload> TcpEndpoint<P> {
         let listener = TcpListener::bind(addr)?;
         let local_addr = listener.local_addr()?;
         let (tx, rx) = channel::<P>();
-        let peers: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let inner = Arc::new(Inner {
+            peers: Mutex::new(Vec::new()),
+            stop: AtomicBool::new(false),
+            tuning: Mutex::new(TcpTuning::default()),
+            log: Mutex::new(None),
+            pex: Mutex::new(None),
+            queue_drops: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+        });
         let fanout: Arc<Mutex<Option<FanoutRt>>> = Arc::new(Mutex::new(None));
 
         let tx_acceptor = tx.clone();
-        let peers_acceptor = Arc::clone(&peers);
+        let inner_acceptor = Arc::clone(&inner);
         let fanout_acceptor = Arc::clone(&fanout);
         std::thread::Builder::new()
             .name(format!("tmsn-accept-{local_addr}"))
             .spawn(move || {
                 for stream in listener.incoming() {
+                    // endpoint dropped: exit so the listener closes and
+                    // the port is actually released (redials to a dead
+                    // endpoint must fail, not half-connect)
+                    if inner_acceptor.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
                     let Ok(stream) = stream else { break };
                     let tx = tx_acceptor.clone();
-                    let peers = Arc::clone(&peers_acceptor);
+                    let inner = Arc::clone(&inner_acceptor);
                     let fanout = Arc::clone(&fanout_acceptor);
-                    std::thread::spawn(move || receive_loop(stream, tx, peers, fanout));
+                    std::thread::spawn(move || receive_loop(stream, tx, inner, fanout));
                 }
             })?;
 
         Ok(TcpEndpoint {
-            peers,
+            inner,
             inbox: rx,
             local_addr,
             fanout,
@@ -217,6 +613,14 @@ impl<P: Payload> TcpEndpoint<P> {
         }
     }
 
+    /// Attach an event log to the fabric itself: link state changes record
+    /// `peer_up` / `peer_down` / `reconnect` (value = redial attempt) and
+    /// queue evictions record `queue_drop` (value = running total), all
+    /// attributed to `worker_id`.
+    pub fn event_log(&self, log: EventLog, worker_id: usize) {
+        *self.inner.log.lock().unwrap() = Some((log, worker_id));
+    }
+
     /// Gossip relays performed by this endpoint's receive threads
     /// (0 in full mode).
     pub fn forward_count(&self) -> u64 {
@@ -228,15 +632,47 @@ impl<P: Payload> TcpEndpoint<P> {
         self.local_addr
     }
 
+    /// Replace the fabric's liveness/queue knobs. Call before connecting
+    /// for full effect; live changes apply from the next write/dial.
+    pub fn tune(&self, tuning: TcpTuning) {
+        *self.inner.tuning.lock().unwrap() = tuning;
+    }
+
+    /// Turn on peer exchange, advertising the bound listen address.
+    /// Opt-in and cluster-wide like the fanout dialect: endpoints without
+    /// PEX silently ignore incoming `PEX` frames. Enable *before* dialing
+    /// the seed so the announce rides every fresh link.
+    pub fn enable_pex(&self) {
+        self.enable_pex_as(&self.local_addr.to_string());
+    }
+
+    /// Turn on peer exchange advertising `advertised` instead of the
+    /// bound address — required when this endpoint is fronted by a chaos
+    /// proxy (peers must dial the proxy, not the naked socket).
+    pub fn enable_pex_as(&self, advertised: &str) {
+        let mut table = PexTable::new(advertised);
+        let mut guard = self.inner.pex.lock().unwrap();
+        for p in self.inner.peers.lock().unwrap().iter() {
+            table.note_direct(&p.addr);
+        }
+        *guard = Some(table);
+    }
+
     /// Dial a peer; broadcasts will be pushed to it. Retries briefly so
-    /// cluster bring-up order doesn't matter.
+    /// cluster bring-up order doesn't matter; after this returns, link
+    /// maintenance (heartbeats, redials) is automatic.
     pub fn connect(&self, addr: &str) -> io::Result<()> {
+        if let Some(table) = self.inner.pex.lock().unwrap().as_mut() {
+            table.note_direct(addr);
+        }
+        if self.inner.peers.lock().unwrap().iter().any(|p| p.addr == addr) {
+            return Ok(());
+        }
         let mut last_err = io::Error::new(io::ErrorKind::Other, "no attempt");
         for _ in 0..50 {
             match TcpStream::connect(addr) {
                 Ok(s) => {
-                    s.set_nodelay(true).ok();
-                    self.peers.lock().unwrap().push(s);
+                    self.inner.add_peer(addr, Some(s));
                     return Ok(());
                 }
                 Err(e) => {
@@ -248,28 +684,42 @@ impl<P: Payload> TcpEndpoint<P> {
         Err(last_err)
     }
 
-    /// Fire-and-forget broadcast. Dead peers are dropped silently —
-    /// exactly TMSN's failure semantics. In fanout mode the publish goes
-    /// to `k` seeded-random peers with the full hop budget instead of to
-    /// everyone (lock order here and in the receive path is fanout →
-    /// peers, so gossip relays can't deadlock against a publish).
+    /// Add a peer without waiting for the dial (PEX dial-backs use this):
+    /// the peer's writer thread establishes the link with the usual
+    /// backoff schedule and the link comes up asynchronously.
+    pub fn add_peer(&self, addr: &str) {
+        if let Some(table) = self.inner.pex.lock().unwrap().as_mut() {
+            table.note_direct(addr);
+        }
+        self.inner.add_peer(addr, None);
+    }
+
+    /// Fire-and-forget broadcast: enqueue on every peer's bounded queue
+    /// and return. Never blocks on a socket — a slow, blackholed, or dead
+    /// peer costs exactly one queue push (its writer thread owns the
+    /// stall). Frames queued to a down peer flush when its redial lands,
+    /// which is what re-converges a restarted worker. In fanout mode the
+    /// publish goes to `k` seeded-random up peers with the full hop
+    /// budget instead of to everyone.
     pub fn broadcast(&self, msg: &P) {
         let mut fo = self.fanout.lock().unwrap();
         match fo.as_mut() {
             None => {
                 drop(fo);
-                let frame = encode(msg);
-                let mut peers = self.peers.lock().unwrap();
-                peers.retain_mut(|p| p.write_all(&frame).is_ok());
+                let frame = frame_bytes(&data_payload(&msg.encode(), 0));
+                let peers = self.inner.peers.lock().unwrap();
+                for p in peers.iter() {
+                    self.inner.push_to(p, frame.clone());
+                }
             }
             Some(rt) => {
                 // remember our own publish so a gossip echo of it is
                 // suppressed instead of re-delivered/re-forwarded
                 rt.seen.insert(gossip_key(msg));
-                let frame = encode_fanout(msg, rt.ttl);
+                let ttl = rt.ttl.min(u8::MAX as u32) as u8;
+                let frame = frame_bytes(&data_payload(&msg.encode(), ttl));
                 let k = rt.k;
-                let mut peers = self.peers.lock().unwrap();
-                send_to_k(&mut peers, &mut rt.rng, k, &frame);
+                push_to_k(&self.inner, &mut rt.rng, k, &frame);
             }
         }
     }
@@ -284,78 +734,222 @@ impl<P: Payload> TcpEndpoint<P> {
         self.inbox.recv_timeout(timeout).ok()
     }
 
-    /// Number of live outbound links (dead peers are pruned on broadcast).
+    /// Number of currently-**up** outbound links. Down peers being
+    /// redialed are excluded (see [`TcpEndpoint::peer_table`] for them).
     pub fn peer_count(&self) -> usize {
-        self.peers.lock().unwrap().len()
+        self.inner
+            .peers
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|p| p.up.load(Ordering::SeqCst))
+            .count()
+    }
+
+    /// Live per-peer state (sorted by address): the `peers.list` admin
+    /// view.
+    pub fn peer_table(&self) -> Vec<PeerInfo> {
+        self.inner.peer_table()
+    }
+
+    /// A payload-type-free closure over [`TcpEndpoint::peer_table`], for
+    /// wiring into the admin control plane.
+    pub fn peer_table_handle(&self) -> Arc<dyn Fn() -> Vec<PeerInfo> + Send + Sync> {
+        let inner = Arc::clone(&self.inner);
+        Arc::new(move || inner.peer_table())
+    }
+
+    /// Total frames evicted from full send queues (drop-oldest policy).
+    pub fn queue_drop_count(&self) -> u64 {
+        self.inner.queue_drops.load(Ordering::SeqCst)
+    }
+
+    /// Total successful redials of previously-up links.
+    pub fn reconnect_count(&self) -> u64 {
+        self.inner.reconnects.load(Ordering::SeqCst)
+    }
+}
+
+impl<P: Payload> Drop for TcpEndpoint<P> {
+    fn drop(&mut self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+        // wake every writer parked on its queue condvar
+        for p in self.inner.peers.lock().unwrap().iter() {
+            p.cv.notify_all();
+        }
+        // wake the acceptor so it observes the stop flag and releases the
+        // listen port (otherwise redials to this dead endpoint would
+        // half-connect forever)
+        let _ = TcpStream::connect(self.local_addr);
+    }
+}
+
+/// Enqueue `frame` to `k` seeded-random distinct **up** peers (all of
+/// them when `k >= up-count`). The gossip relay path.
+fn push_to_k(inner: &Inner, rng: &mut Rng, k: usize, frame: &[u8]) {
+    let peers = inner.peers.lock().unwrap();
+    let ups: Vec<&Arc<PeerHandle>> = peers
+        .iter()
+        .filter(|p| p.up.load(Ordering::SeqCst))
+        .collect();
+    if ups.is_empty() || k == 0 {
+        return;
+    }
+    let k = k.min(ups.len());
+    for i in rng.sample_indices(ups.len(), k) {
+        inner.push_to(ups[i], frame.to_vec());
     }
 }
 
 fn receive_loop<P: Payload>(
     mut stream: TcpStream,
     tx: Sender<P>,
-    peers: Arc<Mutex<Vec<TcpStream>>>,
+    inner: Arc<Inner>,
     fanout: Arc<Mutex<Option<FanoutRt>>>,
 ) {
+    {
+        let t = inner.tuning();
+        stream.set_read_timeout(Some(t.read_timeout)).ok();
+        stream.set_nodelay(true).ok();
+    }
     loop {
+        if inner.stop.load(Ordering::SeqCst) {
+            return;
+        }
         match read_frame(&mut stream) {
             Ok(Some(payload)) => {
-                let mut fo = fanout.lock().unwrap();
-                let msg = if let Some(rt) = fo.as_mut() {
-                    // fanout dialect: strip the [ttl u8] envelope
-                    if payload.is_empty() {
-                        eprintln!("tmsn-tcp: dropping peer after empty fanout frame");
+                let Some((&tag, rest)) = payload.split_first() else {
+                    eprintln!("tmsn-tcp: dropping peer after empty frame");
+                    return;
+                };
+                match tag {
+                    // heartbeat: its arrival already refreshed the read
+                    // timeout; body (if any) is ignored
+                    TAG_PING => continue,
+                    TAG_DATA => match handle_data::<P>(rest, &inner, &fanout) {
+                        Ok(None) => {}
+                        Ok(Some(msg)) => {
+                            if tx.send(msg).is_err() {
+                                return; // endpoint dropped
+                            }
+                        }
+                        Err(e) => {
+                            // malformed message from a peer: drop the
+                            // link, never crash the worker
+                            eprintln!("tmsn-tcp: dropping peer after bad payload: {e}");
+                            return;
+                        }
+                    },
+                    TAG_PEX => {
+                        if let Err(e) = handle_pex(rest, &inner) {
+                            eprintln!("tmsn-tcp: dropping peer after bad pex: {e}");
+                            return;
+                        }
+                    }
+                    t => {
+                        eprintln!("tmsn-tcp: dropping peer after unknown tag {t:#04x}");
                         return;
                     }
-                    let ttl = payload[0] as u32;
-                    match P::decode(&payload[1..]) {
-                        Ok(msg) => {
-                            let key = gossip_key(&msg);
-                            if !rt.seen.insert(key) {
-                                continue; // gossip duplicate: suppress
-                            }
-                            if ttl > 0 {
-                                // first sight with hops left: relay with
-                                // one less hop before delivering locally
-                                rt.forwards += 1;
-                                if let Some((log, id)) = &rt.log {
-                                    log.record(
-                                        *id,
-                                        EventKind::Forward,
-                                        Some((key.0, key.1)),
-                                        msg.cert().summary(),
-                                    );
-                                }
-                                let frame = encode_fanout(&msg, ttl - 1);
-                                let k = rt.k;
-                                let mut ps = peers.lock().unwrap();
-                                send_to_k(&mut ps, &mut rt.rng, k, &frame);
-                            }
-                            msg
-                        }
-                        Err(e) => {
-                            eprintln!("tmsn-tcp: dropping peer after bad payload: {e}");
-                            return;
-                        }
-                    }
-                } else {
-                    drop(fo);
-                    match P::decode(&payload) {
-                        Ok(msg) => msg,
-                        Err(e) => {
-                            // malformed message from a peer: drop the link,
-                            // never crash the worker (resilience semantics)
-                            eprintln!("tmsn-tcp: dropping peer after bad payload: {e}");
-                            return;
-                        }
-                    }
-                };
-                if tx.send(msg).is_err() {
-                    return; // endpoint dropped
                 }
             }
             Ok(None) | Err(_) => return,
         }
     }
+}
+
+/// One inbound `DATA` frame (`rest` = `[ttl][P::encode()]`). Returns the
+/// payload to deliver, `None` for a suppressed gossip duplicate, `Err`
+/// to drop the link.
+fn handle_data<P: Payload>(
+    rest: &[u8],
+    inner: &Arc<Inner>,
+    fanout: &Arc<Mutex<Option<FanoutRt>>>,
+) -> Result<Option<P>, String> {
+    let Some((&ttl, body)) = rest.split_first() else {
+        return Err("empty data frame".into());
+    };
+    let mut fo = fanout.lock().unwrap();
+    match fo.as_mut() {
+        None => {
+            drop(fo);
+            P::decode(body).map(Some)
+        }
+        Some(rt) => {
+            let msg = P::decode(body)?;
+            let key = gossip_key(&msg);
+            if !rt.seen.insert(key) {
+                return Ok(None); // gossip duplicate: suppress
+            }
+            if ttl > 0 {
+                // first sight with hops left: relay with one less hop
+                // before delivering locally
+                rt.forwards += 1;
+                if let Some((log, id)) = &rt.log {
+                    log.record(
+                        *id,
+                        EventKind::Forward,
+                        Some((key.0, key.1)),
+                        msg.cert().summary(),
+                    );
+                }
+                // forward the received body byte-for-byte
+                let frame = frame_bytes(&data_payload(body, ttl - 1));
+                let k = rt.k;
+                push_to_k(inner, &mut rt.rng, k, &frame);
+            }
+            Ok(Some(msg))
+        }
+    }
+}
+
+/// One inbound `PEX` frame (`rest` = `[ttl][pex body]`): absorb, dial
+/// back every fresh address, reply our full set to the fresh peers, and
+/// relay the fresh announce to everyone else while the ttl lasts.
+/// Ignored entirely when this endpoint has PEX disabled; the known-set
+/// dedup plus the self-address filter in [`PexTable::absorb`] make
+/// announce loops terminate (an echo of ourselves absorbs to nothing).
+fn handle_pex(rest: &[u8], inner: &Arc<Inner>) -> Result<(), String> {
+    let Some((&ttl, body)) = rest.split_first() else {
+        return Err("empty pex frame".into());
+    };
+    let msg = decode_pex(body)?;
+    let (fresh, full) = {
+        let mut guard = inner.pex.lock().unwrap();
+        let Some(table) = guard.as_mut() else {
+            return Ok(()); // PEX disabled here: tolerate, don't join
+        };
+        let fresh = table.absorb(&msg);
+        if fresh.is_empty() {
+            return Ok(()); // nothing new: the flood dies here
+        }
+        (fresh, table.full_set())
+    };
+    for addr in &fresh {
+        inner.add_peer(addr, None);
+    }
+    let full_frame = pex_frame_bytes(&full, 0);
+    let relay_frame = if ttl > 0 {
+        let relay = PexMsg {
+            version: full.version,
+            addrs: fresh.clone(),
+        };
+        Some(pex_frame_bytes(&relay, ttl - 1))
+    } else {
+        None
+    };
+    let peers = inner.peers.lock().unwrap();
+    for p in peers.iter() {
+        if fresh.iter().any(|a| a == &p.addr) {
+            // bootstrap the newcomer with our whole view (ttl 0: a full
+            // set is a reply, not a flood)
+            inner.push_to(p, full_frame.clone());
+        } else if let Some(rf) = &relay_frame {
+            if p.up.load(Ordering::SeqCst) {
+                inner.push_to(p, rf.clone());
+            }
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -375,6 +969,15 @@ mod tests {
                 origin: 7,
                 seq,
             },
+        }
+    }
+
+    /// Poll `cond` until true or `secs` elapse (then panic with `what`).
+    fn wait_for(what: &str, secs: u64, mut cond: impl FnMut() -> bool) {
+        let deadline = Instant::now() + Duration::from_secs(secs);
+        while !cond() {
+            assert!(Instant::now() < deadline, "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(20));
         }
     }
 
@@ -432,6 +1035,28 @@ mod tests {
         let back = read_frame(&mut cursor).unwrap().expect("one frame");
         assert_eq!(back, body);
         assert!(read_frame(&mut cursor).unwrap().is_none());
+    }
+
+    #[test]
+    fn peek_frame_matches_read_frame() {
+        let frame = frame_bytes(b"hello");
+        // incomplete at every prefix
+        for cut in 0..frame.len() {
+            assert_eq!(peek_frame(&frame[..cut]).unwrap(), None, "cut={cut}");
+        }
+        assert_eq!(peek_frame(&frame).unwrap(), Some(frame.len()));
+        // trailing bytes don't confuse the peek
+        let mut two = frame.clone();
+        two.extend_from_slice(&frame);
+        assert_eq!(peek_frame(&two).unwrap(), Some(frame.len()));
+        // corrupt magic / oversized length fail
+        let mut bad = frame.clone();
+        bad[0] ^= 0xFF;
+        assert!(peek_frame(&bad).is_err());
+        let mut big = Vec::new();
+        big.extend_from_slice(&MAGIC.to_le_bytes());
+        big.extend_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(peek_frame(&big).is_err());
     }
 
     #[test]
@@ -530,25 +1155,128 @@ mod tests {
     }
 
     #[test]
-    fn dead_peer_dropped_without_error() {
+    fn dead_peer_detected_and_marked_down() {
         let a = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
         let b = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
         a.connect(&b.local_addr().to_string()).unwrap();
+        assert_eq!(a.peer_count(), 1);
         drop(b);
-        // broadcasting into a closed peer must not panic; peer is pruned
-        // (possibly after one buffered write succeeds)
-        for i in 0..10 {
+        // broadcasting into a closed peer must not panic or block; the
+        // heartbeat + write failure marks the link down (the writer keeps
+        // redialing, but b's port is released so redials fail)
+        for i in 0..5 {
             a.broadcast(&msg(i));
-            std::thread::sleep(Duration::from_millis(10));
         }
-        assert_eq!(a.peer_count(), 0);
+        wait_for("dead peer to be marked down", 10, || a.peer_count() == 0);
+        let table = a.peer_table();
+        assert_eq!(table.len(), 1, "the peer stays in the redial table");
+        assert!(!table[0].up);
+    }
+
+    #[test]
+    fn endpoint_drop_releases_the_listen_port() {
+        let a = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        let addr = a.local_addr().to_string();
+        drop(a);
+        // acceptor shutdown is asynchronous: poll the rebind
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match TcpEndpoint::<TestPayload>::bind(&addr) {
+                Ok(_) => break,
+                Err(e) => {
+                    assert!(
+                        Instant::now() < deadline,
+                        "port never released after drop: {e}"
+                    );
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_never_blocks_on_a_stalled_peer() {
+        // a raw peer that accepts and then never reads: the kernel buffers
+        // fill, the writer thread stalls, and broadcast() must still cost
+        // only a queue push per call, evicting oldest frames once full
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let held = std::thread::spawn(move || listener.accept().map(|(s, _)| s));
+
+        let a = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        a.tune(TcpTuning {
+            queue_cap: 8,
+            ..TcpTuning::default()
+        });
+        a.connect(&addr).unwrap();
+        let _stalled = held.join().unwrap().unwrap(); // hold without reading
+
+        let big = TestPayload {
+            body: "x".repeat(128 * 1024),
+            cert: TestCert {
+                score: 0.1,
+                origin: 1,
+                seq: 0,
+            },
+        };
+        let t0 = Instant::now();
+        for _ in 0..200 {
+            a.broadcast(&big);
+        }
+        let elapsed = t0.elapsed();
+        assert!(
+            elapsed < Duration::from_secs(2),
+            "broadcast must not block on a stalled peer (took {elapsed:?})"
+        );
+        assert!(
+            a.queue_drop_count() >= 1,
+            "full bounded queue must evict oldest frames"
+        );
+        let table = a.peer_table();
+        assert!(table[0].queue_len <= 8);
+    }
+
+    #[test]
+    fn ordered_per_link() {
+        let a = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        let b = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        a.connect(&b.local_addr().to_string()).unwrap();
+        for i in 0..20 {
+            a.broadcast(&msg(i));
+        }
+        for i in 0..20 {
+            let got = b.recv_timeout(Duration::from_secs(5)).expect("delivery");
+            assert_eq!(got.cert.seq, i, "queued frames must keep per-link order");
+        }
+    }
+
+    #[test]
+    fn heartbeats_keep_an_idle_link_alive() {
+        let a = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        let b = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        // b drops silent links after 1s; a heartbeats every 200ms
+        b.tune(TcpTuning {
+            read_timeout: Duration::from_secs(1),
+            ..TcpTuning::default()
+        });
+        a.tune(TcpTuning {
+            heartbeat: Duration::from_millis(200),
+            ..TcpTuning::default()
+        });
+        a.connect(&b.local_addr().to_string()).unwrap();
+        std::thread::sleep(Duration::from_millis(2500));
+        assert_eq!(a.peer_count(), 1, "pings must keep the idle link up");
+        a.broadcast(&msg(42));
+        let got = b.recv_timeout(Duration::from_secs(5)).expect("delivery");
+        assert_eq!(got.cert.seq, 42);
     }
 
     #[test]
     fn malformed_payload_drops_link_not_worker() {
         let a = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
         // dial the endpoint raw and ship a well-framed but undecodable
-        // payload: the receiver must drop the link and keep serving others
+        // payload (first byte is an unknown dialect tag): the receiver
+        // must drop the link and keep serving others
         let mut raw = TcpStream::connect(a.local_addr()).unwrap();
         let garbage = b"not a wire payload";
         let mut frame = Vec::new();
@@ -564,6 +1292,43 @@ mod tests {
         b.broadcast(&msg(3));
         let got = a.recv_timeout(Duration::from_secs(5)).expect("delivery");
         assert_eq!(got.cert.seq, 3);
+    }
+
+    #[test]
+    fn seed_node_discovery_builds_full_mesh() {
+        // a is the only seed; b and c join knowing nothing but a's address
+        let a = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        let b = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        let c = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        a.enable_pex();
+        b.enable_pex();
+        c.enable_pex();
+        b.connect(&a.local_addr().to_string()).unwrap();
+        c.connect(&a.local_addr().to_string()).unwrap();
+        // announce → dial-back → full-set reply → relay converges to a
+        // full mesh: every endpoint ends with two up links
+        wait_for("pex full mesh", 15, || {
+            a.peer_count() == 2 && b.peer_count() == 2 && c.peer_count() == 2
+        });
+        // the discovered mesh actually carries traffic: c (who never heard
+        // of b from the CLI) reaches both a and b directly
+        c.broadcast(&msg(77));
+        assert_eq!(a.recv_timeout(Duration::from_secs(5)).unwrap().cert.seq, 77);
+        assert_eq!(b.recv_timeout(Duration::from_secs(5)).unwrap().cert.seq, 77);
+    }
+
+    #[test]
+    fn pex_disabled_endpoint_ignores_pex_frames() {
+        // a speaks PEX, b does not: b must tolerate the announce without
+        // joining the exchange or dropping the link
+        let a = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        let b = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
+        a.enable_pex();
+        a.connect(&b.local_addr().to_string()).unwrap();
+        a.broadcast(&msg(8)); // rides the same link as the announce
+        let got = b.recv_timeout(Duration::from_secs(5)).expect("delivery");
+        assert_eq!(got.cert.seq, 8);
+        assert_eq!(b.peer_count(), 0, "no dial-back without PEX");
     }
 
     /// n endpoints in gossip mode; edges\[i\] lists i's outbound links.
@@ -640,19 +1405,5 @@ mod tests {
         assert_eq!(b.recv_timeout(Duration::from_secs(5)).unwrap().cert.seq, 5);
         assert_eq!(a.forward_count(), 0);
         assert_eq!(b.forward_count(), 0);
-    }
-
-    #[test]
-    fn ordered_per_link() {
-        let a = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
-        let b = TcpEndpoint::<TestPayload>::bind("127.0.0.1:0").unwrap();
-        a.connect(&b.local_addr().to_string()).unwrap();
-        for i in 0..20 {
-            a.broadcast(&msg(i));
-        }
-        for i in 0..20 {
-            let got = b.recv_timeout(Duration::from_secs(5)).expect("delivery");
-            assert_eq!(got.cert.seq, i, "TCP must preserve per-link order");
-        }
     }
 }

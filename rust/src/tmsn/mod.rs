@@ -309,6 +309,21 @@ impl<P: Payload, L: Link<P>> Driver<P, L> {
         }
     }
 
+    /// In-process restart (the admin plane's `fault.inject "restart"`,
+    /// DESIGN.md §13): replace the state machine with one resumed from its
+    /// own current payload, exactly as if the worker had been killed and
+    /// restarted from a checkpoint taken this instant. The certificate is
+    /// restamped `(worker_id, 0)` so any of this worker's own pre-restart
+    /// broadcasts still in flight strictly beat it (the same catch-up
+    /// argument as `--resume`), the pending slot is cleared, and the
+    /// verdict counters restart with the new incarnation.
+    pub fn rebirth(&mut self) {
+        let id = self.tmsn.worker_id();
+        let payload = self.tmsn.payload().clone();
+        self.pending = None;
+        self.tmsn = Tmsn::resume(id, payload);
+    }
+
     /// Commit a local improvement and broadcast it (Alg. 1 send path).
     /// Returns the committed sequence number.
     pub fn publish(&mut self, payload: P) -> u64 {

@@ -374,6 +374,30 @@ pub fn run_worker(params: WorkerParams) -> WorkerResult {
                 crashed = true;
                 break;
             }
+            if c.state.take_restart() {
+                // in-place rebirth (`fault.inject {"fault":"restart"}`):
+                // the live analogue of the simulator's crash+rejoin.
+                // Persist first (so the restart point is durable), then
+                // drop every pending remote payload and restamp the
+                // current certified model (id, 0) — any strictly-better
+                // broadcast still in flight beats it and catches us up.
+                if let Some(path) = &cfg.checkpoint {
+                    match write_checkpoint(path, driver.payload()) {
+                        Ok(()) => ckpt_version = version,
+                        Err(e) => {
+                            eprintln!("worker {id}: restart checkpoint write failed: {e}")
+                        }
+                    }
+                }
+                driver.rebirth();
+                log.record(id, EventKind::Rejoin, None, driver.cert().loss_bound);
+                version += 1;
+                if let SampleSource::Background(bg) = &mut source {
+                    bg.on_model_change(version, &driver.payload().model);
+                }
+                c.note_model(version, driver.payload());
+                force_resample = true;
+            }
         }
         if driver.payload().model.len() >= cfg.max_rules
             || (cfg.target_bound > 0.0 && driver.cert().loss_bound <= cfg.target_bound)

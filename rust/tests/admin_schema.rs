@@ -16,9 +16,13 @@ use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 use std::time::Duration;
 
-use sparrow::admin::{dispatch, AdminHandler, ControlState, RpcHandler, ADMIN_METHODS, SERVE_METHODS};
+use sparrow::admin::{
+    dispatch, AdminHandler, ChaosCtl, ControlState, RpcHandler, ADMIN_METHODS, SERVE_METHODS,
+};
 use sparrow::metrics::EventKind;
 use sparrow::model::{StrongRule, Stump};
+use sparrow::network::chaos::ChaosRules;
+use sparrow::network::tcp::PeerInfo;
 use sparrow::serve::{ModelSlot, ServeHandler};
 use sparrow::sim::SimClock;
 
@@ -28,8 +32,10 @@ fn golden_dir() -> PathBuf {
 
 /// The scripted admin-side state every `admin_*` fixture is computed
 /// against: 2 s of SimClock uptime, model v3 (3 rules, bound 0.5),
-/// 1000 examples scanned, 250 ms of sampler stall, and a 2/1/1
-/// accept/reject/local-improvement counter history.
+/// 1000 examples scanned, 250 ms of sampler stall, a 2/1/1
+/// accept/reject/local-improvement counter history, a two-row static
+/// peer table (one up, one down), and a chaos fabric with two directed
+/// edges (so `fault.inject partition` succeeds on the real path).
 fn admin_fixture_handler() -> AdminHandler {
     let clock = Arc::new(SimClock::new());
     let state = Arc::new(ControlState::with_clock(clock.clone()));
@@ -40,6 +46,30 @@ fn admin_fixture_handler() -> AdminHandler {
     state.counters.bump(EventKind::Accept);
     state.counters.bump(EventKind::Reject);
     state.counters.bump(EventKind::LocalImprovement);
+    state.set_peer_source(Arc::new(|| {
+        vec![
+            PeerInfo {
+                addr: "127.0.0.1:7701".into(),
+                up: true,
+                queue_len: 3,
+                last_seen_ms: 150,
+                reconnects: 1,
+                drops: 0,
+            },
+            PeerInfo {
+                addr: "127.0.0.1:7702".into(),
+                up: false,
+                queue_len: 17,
+                last_seen_ms: 4200,
+                reconnects: 6,
+                drops: 12,
+            },
+        ]
+    }));
+    state.set_chaos(ChaosCtl {
+        rules: ChaosRules::new(0),
+        edges: vec!["w0->w1".into(), "w1->w0".into()],
+    });
     clock.advance(Duration::from_secs(2));
     AdminHandler::new(0, state, Arc::new(AtomicBool::new(false)))
 }

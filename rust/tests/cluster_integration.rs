@@ -385,6 +385,280 @@ mod tcp_resume {
     }
 }
 
+// ---------------------------------------------------------------------------
+// self-healing fabric (DESIGN.md §13): seed-node discovery, full churn
+// through chaos proxies, reconnect + reconvergence — no static peer list
+// ---------------------------------------------------------------------------
+
+mod chaos_churn {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+    use std::thread;
+    use std::time::Instant;
+
+    use sparrow::admin::ControlState;
+    use sparrow::boosting::grid::partition_features;
+    use sparrow::boosting::CandidateGrid;
+    use sparrow::data::{DiskStore, IoThrottle};
+    use sparrow::metrics::EventLog;
+    use sparrow::model::StrongRule;
+    use sparrow::network::{ChaosProxy, ChaosRules, TcpEndpoint, TcpTuning};
+    use sparrow::serve::ModelSlot;
+    use sparrow::tmsn::BoostPayload;
+    use sparrow::worker::{run_worker, ControlPlane, WorkerParams, WorkerResult};
+
+    const N: usize = 4;
+
+    /// The seed CI sweeps via the `SPARROW_CHAOS_SEED` matrix (job
+    /// `chaos`; locally `SPARROW_CHAOS_SEED=7 make chaos`).
+    fn env_seed() -> u64 {
+        std::env::var("SPARROW_CHAOS_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(1)
+    }
+
+    /// Dumps the chaos fabric's pcap-style frame trace to
+    /// `target/chaos_failures/` when the owning test panics — the
+    /// artifact the chaos CI job uploads on failure.
+    struct TraceGuard {
+        rules: Arc<ChaosRules>,
+        tag: String,
+    }
+
+    impl Drop for TraceGuard {
+        fn drop(&mut self) {
+            if !thread::panicking() {
+                return;
+            }
+            let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+                .join("target/chaos_failures");
+            let _ = std::fs::create_dir_all(&dir);
+            let path = dir.join(format!("{}.trace.jsonl", self.tag));
+            let _ = std::fs::write(&path, self.rules.trace_jsonl());
+            eprintln!("chaos frame trace dumped to {}", path.display());
+        }
+    }
+
+    struct Incarnation {
+        handle: thread::JoinHandle<WorkerResult>,
+        stop: Arc<AtomicBool>,
+        state: Arc<ControlState>,
+    }
+
+    fn wait(deadline: Instant, what: &str, mut cond: impl FnMut() -> bool) {
+        while !cond() {
+            assert!(Instant::now() < deadline, "watchdog expired: {what}");
+            thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    fn up_peers(inc: &Incarnation) -> usize {
+        inc.state.peers().iter().filter(|p| p.up).count()
+    }
+
+    /// Start one worker incarnation: bind is done by the caller (so the
+    /// chaos proxy can be retargeted first), PEX announces the *proxy*
+    /// address, and only `dial` (one seed) is contacted — discovery does
+    /// the rest.
+    fn launch(
+        id: usize,
+        store_path: &std::path::Path,
+        endpoint: TcpEndpoint<BoostPayload>,
+        advertised: &str,
+        dial: &[String],
+        resume: Option<(StrongRule, f64)>,
+    ) -> Incarnation {
+        // tight liveness so kill→down→redial cycles fit the watchdog
+        endpoint.tune(TcpTuning {
+            heartbeat: Duration::from_millis(100),
+            read_timeout: Duration::from_secs(1),
+            write_timeout: Duration::from_secs(1),
+            queue_cap: 1024,
+            backoff_base: Duration::from_millis(20),
+            backoff_cap: Duration::from_millis(200),
+        });
+        endpoint.enable_pex_as(advertised);
+        for d in dial {
+            endpoint.connect(d).unwrap();
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let state = Arc::new(ControlState::new());
+        state.set_peer_source(endpoint.peer_table_handle());
+        let slot = Arc::new(ModelSlot::new());
+        let (log, _rx) = EventLog::new();
+        let log = log.with_counters(Arc::clone(&state.counters));
+        endpoint.event_log(log.clone(), id);
+
+        let store = DiskStore::open(store_path).unwrap();
+        let features = store.num_features();
+        let pilot = store
+            .stream(IoThrottle::unlimited())
+            .unwrap()
+            .next_block(2048)
+            .unwrap();
+        let grid = CandidateGrid::from_quantiles(&pilot, 4);
+        let stripe = partition_features(features, N)[id];
+        let cfg = TrainConfig {
+            num_workers: N,
+            sample_size: 512,
+            max_rules: 10_000,
+            time_limit: Duration::from_secs(120),
+            gamma0: 0.2,
+            resume,
+            ..TrainConfig::default()
+        };
+        let params = WorkerParams {
+            id,
+            cfg,
+            grid,
+            stripe,
+            store,
+            endpoint: Box::new(endpoint),
+            log,
+            stop: Arc::clone(&stop),
+            backend: Box::new(NativeBackend),
+            laggard: 1.0,
+            crash_after: None,
+            seed: 41 + id as u64,
+            control: Some(ControlPlane {
+                state: Arc::clone(&state),
+                slot,
+            }),
+        };
+        let handle = thread::spawn(move || run_worker(params));
+        Incarnation {
+            handle,
+            stop,
+            state,
+        }
+    }
+
+    #[test]
+    fn seed_discovery_survives_full_churn_through_chaos_proxies() {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        let (store_path, _test) = common::synth_store("sparrow_chaos_churn", 11, 8_000, 200);
+        let seed = env_seed();
+        let rules = ChaosRules::new(seed);
+        let _trace = TraceGuard {
+            rules: Arc::clone(&rules),
+            tag: format!("churn_seed{seed}"),
+        };
+
+        // every worker sits behind its own chaos proxy: peers only ever
+        // see the proxy address, which survives the worker's restart
+        let mut eps = Vec::new();
+        let mut proxies = Vec::new();
+        for i in 0..N {
+            let ep = TcpEndpoint::<BoostPayload>::bind("127.0.0.1:0").unwrap();
+            let proxy =
+                ChaosProxy::spawn(&ep.local_addr().to_string(), &rules, &format!("->w{i}"))
+                    .unwrap();
+            proxies.push(proxy);
+            eps.push(ep);
+        }
+        let adv: Vec<String> = proxies.iter().map(|p| p.listen_addr().to_string()).collect();
+
+        // worker 0 is the seed; 1..N join with ONLY the seed's address
+        let mut workers: Vec<Option<Incarnation>> = Vec::new();
+        for (i, ep) in eps.into_iter().enumerate() {
+            let dial: Vec<String> = if i == 0 { vec![] } else { vec![adv[0].clone()] };
+            workers.push(Some(launch(i, &store_path, ep, &adv[i], &dial, None)));
+        }
+
+        // peer exchange must build the full mesh from one seed address
+        wait(deadline, "PEX never built the full mesh", || {
+            workers
+                .iter()
+                .all(|w| up_peers(w.as_ref().unwrap()) == N - 1)
+        });
+
+        // kill and restart every worker once, one at a time
+        for i in 0..N {
+            let recon_before: Vec<u64> = (0..N)
+                .filter(|j| *j != i)
+                .map(|j| {
+                    workers[j]
+                        .as_ref()
+                        .unwrap()
+                        .state
+                        .counters
+                        .get(EventKind::Reconnect)
+                })
+                .collect();
+
+            let old = workers[i].take().unwrap();
+            old.state.request_crash();
+            let r = old.handle.join().unwrap();
+            assert!(r.crashed, "worker {i}: kill must register as a crash");
+            let resume = if r.model.is_empty() {
+                None
+            } else {
+                Some((r.model.clone(), r.loss_bound))
+            };
+
+            // rebind on a fresh port, retarget the proxy (public address
+            // unchanged), and rejoin via one live peer — survivors' redial
+            // schedules find the proxy again on their own
+            let ep = TcpEndpoint::<BoostPayload>::bind("127.0.0.1:0").unwrap();
+            proxies[i].set_upstream(&ep.local_addr().to_string());
+            let dial = vec![adv[(i + 1) % N].clone()];
+            workers[i] = Some(launch(i, &store_path, ep, &adv[i], &dial, resume));
+
+            // every survivor reconnects to the restarted worker …
+            for (slot, j) in (0..N).filter(|j| *j != i).enumerate() {
+                wait(
+                    deadline,
+                    &format!("survivor {j} never reconnected to restarted worker {i}"),
+                    || {
+                        workers[j]
+                            .as_ref()
+                            .unwrap()
+                            .state
+                            .counters
+                            .get(EventKind::Reconnect)
+                            > recon_before[slot]
+                    },
+                );
+            }
+            // … and the restarted worker rebuilds its full outbound mesh
+            // (reconnect announces re-teach it the swarm) and makes
+            // certified progress again (adoption or local find)
+            wait(
+                deadline,
+                &format!("restarted worker {i} never rebuilt its mesh"),
+                || up_peers(workers[i].as_ref().unwrap()) == N - 1,
+            );
+            wait(
+                deadline,
+                &format!("restarted worker {i} never made progress"),
+                || workers[i].as_ref().unwrap().state.model().0 >= 1,
+            );
+        }
+
+        // reconvergence: stop everyone; every final incarnation holds a
+        // certified model, and nobody regressed past the global best
+        let mut results = Vec::new();
+        for w in &workers {
+            w.as_ref().unwrap().stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        }
+        for w in workers.iter_mut() {
+            let inc = w.take().unwrap();
+            results.push(inc.handle.join().unwrap());
+        }
+        for r in &results {
+            assert!(!r.crashed, "worker {} crashed after its restart", r.id);
+            assert!(
+                !r.model.is_empty() && r.loss_bound < 1.0,
+                "worker {} reconverged to nothing (bound {})",
+                r.id,
+                r.loss_bound
+            );
+        }
+    }
+}
+
 #[test]
 fn resume_continues_from_checkpoint() {
     // phase 1: learn a few rules

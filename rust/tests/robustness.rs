@@ -281,6 +281,156 @@ fn checkpoint_resume_path_is_total_under_file_corruption() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// self-healing fabric (DESIGN.md §13): PEX/PING dialect fails closed
+// ---------------------------------------------------------------------------
+
+mod fabric_fuzz {
+    use super::*;
+    use std::io::Write;
+    use std::net::TcpStream;
+    use std::time::Duration;
+
+    use sparrow::network::pex::{decode_pex, encode_pex, PexMsg, PexTable};
+    use sparrow::network::TcpEndpoint;
+    use sparrow::tmsn::BoostPayload;
+
+    // the link wire format, rebuilt from its documented layout (magic +
+    // LE length + payload; payload = tag byte + rest) — deliberately NOT
+    // the crate's own frame_bytes, so these attacks cover the real bytes
+    const MAGIC: u32 = 0x544D_534E;
+    const TAG_PING: u8 = 0x01;
+    const TAG_PEX: u8 = 0x02;
+
+    fn frame(payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + payload.len());
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(payload);
+        out
+    }
+
+    fn pex_frame(ttl: u8, msg: &PexMsg) -> Vec<u8> {
+        let mut payload = vec![TAG_PEX, ttl];
+        payload.extend_from_slice(&encode_pex(msg));
+        frame(&payload)
+    }
+
+    #[test]
+    fn pex_decoder_is_total_and_rejects_every_truncation() {
+        prop_check("pex decode total", 200, |rng| {
+            // arbitrary bytes must never panic the decoder
+            let len = gen::size(rng, 0, 300);
+            let junk: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            std::panic::catch_unwind(|| {
+                let _ = decode_pex(&junk);
+            })
+            .map_err(|_| "decode_pex panicked on junk".to_string())?;
+
+            // a valid encoding round-trips …
+            let n = gen::size(rng, 0, 8);
+            let msg = PexMsg {
+                version: rng.next_u64(),
+                addrs: (0..n).map(|i| format!("10.0.0.{i}:{}", 1024 + i)).collect(),
+            };
+            let bytes = encode_pex(&msg);
+            let back = decode_pex(&bytes).map_err(|e| format!("valid pex rejected: {e}"))?;
+            if back != msg {
+                return Err("pex roundtrip drifted".into());
+            }
+            // … and every strict prefix fails closed (the count in the
+            // header promises more than the body delivers)
+            let cut = rng.below(bytes.len() as u64) as usize;
+            if decode_pex(&bytes[..cut]).is_ok() {
+                return Err(format!("truncation at {cut}/{} accepted", bytes.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn self_announce_loops_die_in_the_table() {
+        // the anti-loop argument: our own advertised address is never
+        // fresh, so an echoed self-announce produces nothing to dial or
+        // relay and the gossip loop terminates immediately
+        let mut table = PexTable::new("127.0.0.1:7000");
+        let v0 = table.version();
+        let echo = PexMsg {
+            version: 99,
+            addrs: vec!["127.0.0.1:7000".into(), "127.0.0.1:7000".into()],
+        };
+        assert!(table.absorb(&echo).is_empty());
+        assert_eq!(table.version(), v0, "self-echo bumped the version");
+        // a mixed message only yields the genuinely new address
+        let mixed = PexMsg {
+            version: 100,
+            addrs: vec!["127.0.0.1:7000".into(), "127.0.0.1:7001".into()],
+        };
+        assert_eq!(table.absorb(&mixed), vec!["127.0.0.1:7001".to_string()]);
+        assert!(table.absorb(&mixed).is_empty(), "second absorb re-freshed");
+    }
+
+    #[test]
+    fn malformed_fabric_frames_drop_the_link_not_the_endpoint() {
+        let a: TcpEndpoint<BoostPayload> = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+        a.enable_pex();
+        let addr = a.local_addr().to_string();
+
+        let attacks: Vec<Vec<u8>> = vec![
+            b"GARBAGE-NOT-A-FRAME-AT-ALL".to_vec(),   // bad magic
+            MAGIC.to_le_bytes()[..3].to_vec(),        // truncated header
+            frame(&[]),                               // empty payload
+            frame(&[0x7F, 1, 2, 3]),                  // unknown tag
+            frame(&[TAG_PEX]),                        // PEX with no ttl/body
+            frame(&[TAG_PEX, 3, 1, 2, 3]),            // PEX truncated body
+            {
+                // oversized length prefix
+                let mut f = MAGIC.to_le_bytes().to_vec();
+                f.extend_from_slice(&u32::MAX.to_le_bytes());
+                f
+            },
+        ];
+        for (i, attack) in attacks.iter().enumerate() {
+            let mut s = TcpStream::connect(&addr).unwrap_or_else(|e| {
+                panic!("attack {i}: endpoint stopped accepting: {e}")
+            });
+            let _ = s.write_all(attack);
+            // the endpoint must drop this link, not its acceptor
+        }
+        // PING + trailing junk is tolerated by contract (liveness only,
+        // never delivered as a payload)
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&frame(&[TAG_PING, 0xDE, 0xAD])).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        assert!(a.try_recv().is_none(), "PING delivered as a payload");
+
+        // after every attack the endpoint still speaks the protocol
+        let b: TcpEndpoint<BoostPayload> = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+        b.connect(&addr).unwrap();
+        let payload = BoostPayload::resume(StrongRule::new(), 0.9);
+        b.broadcast(&payload);
+        let got = a.recv_timeout(Duration::from_secs(5));
+        assert!(got.is_some(), "endpoint dead after malformed frames");
+    }
+
+    #[test]
+    fn live_self_announce_never_dials_self() {
+        let a: TcpEndpoint<BoostPayload> = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+        // advertise a fixed public name, then echo that exact name back
+        a.enable_pex_as("127.0.0.1:39999");
+        let addr = a.local_addr().to_string();
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let echo = PexMsg {
+            version: 1,
+            addrs: vec!["127.0.0.1:39999".into()],
+        };
+        s.write_all(&pex_frame(4, &echo)).unwrap();
+        std::thread::sleep(Duration::from_millis(300));
+        assert_eq!(a.peer_count(), 0, "endpoint dialed its own advertisement");
+        assert!(a.peer_table().is_empty(), "self address entered the table");
+    }
+}
+
 #[test]
 fn strong_rule_score_associativity_under_split() {
     // score_suffix split at any point reconstructs the full score
