@@ -46,10 +46,15 @@ sim:
 chaos:
 	cd rust && cargo test --release --test cluster_integration --test robustness
 
-# Rows-vs-binned scan-engine sweep (DESIGN.md §8) → BENCH_scan.json at the
-# repo root, tracking the scan-throughput trajectory across PRs.
+# Scan-engine sweep (DESIGN.md §8/§14): rows vs binned, scalar vs lane
+# kernels, × threads, plus the threaded suffix fold → BENCH_scan.json at
+# the repo root, tracking the scan-throughput trajectory across PRs. The
+# bench asserts rows == binned-scalar == binned-simd bit-identity before
+# timing. Built with --features simd so the lane rows are populated; the
+# scalar rows double as the default-build numbers (same machine code —
+# the feature only *adds* kernels, §14).
 bench-scan:
-	cd rust && cargo bench --bench micro_hotpath -- --json ../BENCH_scan.json
+	cd rust && cargo bench --features simd --bench micro_hotpath -- --json ../BENCH_scan.json
 
 # AOT-lower the L2/L1 Python graph to HLO-text artifacts consumed by the
 # xla-* backends (requires a JAX environment; see python/compile/aot.py).

@@ -1,36 +1,64 @@
 //! Micro-benchmarks of the L3 hot paths (§Perf): edge accumulation
-//! (row engine vs the binned columnar engine × thread counts), incremental
-//! scoring, selective sampling, broadcast fan-out latency, stopping-rule
-//! sweep. Baseline + after numbers live in EXPERIMENTS.md §Perf.
+//! (row engine vs the binned columnar engine, scalar vs lane kernels,
+//! × thread counts {1,2,4,8}), the threaded bucket→edge suffix fold,
+//! incremental scoring, selective sampling, broadcast fan-out latency,
+//! stopping-rule sweep. Baseline + after numbers live in EXPERIMENTS.md
+//! §Perf.
 //!
-//!     cargo bench --bench micro_hotpath [-- --json BENCH_scan.json]
+//!     cargo bench [--features simd] --bench micro_hotpath [-- --json BENCH_scan.json]
 //!
-//! `--json PATH` additionally writes the rows-vs-binned scan sweep as a
-//! JSON artifact (`make artifacts` emits it to the repo root as
-//! `BENCH_scan.json`, tracking the perf trajectory across PRs).
+//! `--json PATH` additionally writes the scan sweep as a JSON artifact
+//! (`make bench-scan` emits it to the repo root as `BENCH_scan.json`;
+//! CI's bench-scan job uploads it, tracking the perf trajectory across
+//! PRs). The sweep asserts rows == binned-scalar == binned-simd before
+//! timing anything — a number from a divergent kernel is worthless
+//! (DESIGN.md §14).
 
 use std::time::{Duration, Instant};
 
 use sparrow::boosting::{
-    edges::{accumulate_edges_stripe, accumulate_edges_stripe_into},
+    edges::{accumulate_edges_stripe, accumulate_edges_stripe_into, fold_buckets_par},
     CandidateGrid, EdgeMatrix,
 };
 use sparrow::data::{BinnedBatch, DataBlock};
 use sparrow::model::{StrongRule, Stump};
 use sparrow::network::{Fabric, NetConfig};
 use sparrow::sampling::{MinimalVarianceSampler, SelectiveSampler};
-use sparrow::scanner::BinnedBackend;
+use sparrow::scanner::{lane_kernel, BinnedBackend};
 use sparrow::stopping::{CandidateStats, LilRule, StoppingRule};
 use sparrow::util::bench::BenchRunner;
 use sparrow::util::json::Json;
 use sparrow::util::rng::Rng;
 
-/// The rows-vs-binned × thread-count sweep of the edge-accumulation hot
-/// loop at the acceptance shape (F=64, NT=8): the row engine's per-example
-/// threshold search vs the binned engine's bucket accumulation (DESIGN.md
-/// §8), both through their zero-allocation scanner entries (scoring is the
-/// shared row-view step and benched separately below). Returns the result
-/// object written to `BENCH_scan.json` by `--json`.
+const SCAN_THREADS: [usize; 4] = [1, 2, 4, 8];
+
+/// Assert two accumulations agree bitwise on every stripe edge and
+/// stopping scalar — the precondition for comparing their timings.
+fn assert_identical(a: &EdgeMatrix, b: &EdgeMatrix, f: usize, nt: usize, ctx: &str) {
+    for ff in 0..f {
+        for t in 0..nt {
+            assert_eq!(
+                a.edge(ff, t).to_bits(),
+                b.edge(ff, t).to_bits(),
+                "{ctx}: edge f={ff} t={t}"
+            );
+        }
+    }
+    assert_eq!(a.sum_w.to_bits(), b.sum_w.to_bits(), "{ctx}: sum_w");
+    assert_eq!(a.sum_w2.to_bits(), b.sum_w2.to_bits(), "{ctx}: sum_w2");
+    assert_eq!(a.count, b.count, "{ctx}: count");
+}
+
+/// The scan sweep at the acceptance shape (F=64, NT=8): the row engine's
+/// per-example threshold search vs the binned engine's bucket
+/// accumulation (DESIGN.md §8) under both kernels — scalar always, the
+/// lane kernel when built with `--features simd` — × threads {1,2,4,8},
+/// all through their zero-allocation scanner entries (scoring is the
+/// shared row-view step and benched separately below). Before any timing,
+/// every config's EdgeMatrix is checked bitwise-identical to every other
+/// binned config and 1e-9-relative to rows. Also sweeps the threaded
+/// bucket→edge suffix fold. Returns the object written to
+/// `BENCH_scan.json` by `--json`.
 fn scan_engine_sweep(runner: &BenchRunner) -> Json {
     const N: usize = 32_768; // many BIN_CHUNK chunks → thread scaling visible
     const F: usize = 64;
@@ -49,8 +77,44 @@ fn scan_engine_sweep(runner: &BenchRunner) -> Json {
     let mut bins = BinnedBatch::default();
     bins.gather(&stripe_bins, &idx);
 
-    let mut acc = EdgeMatrix::zeros(F, NT);
+    // scalar always; the lane kernel when compiled in
+    let mut modes: Vec<(&str, bool)> = vec![("scalar", false)];
+    if cfg!(feature = "simd") {
+        modes.push(("simd", true));
+    }
+
+    // ---- identity gate: rows == every binned (mode × threads) config ----
+    let mut rows_acc = EdgeMatrix::zeros(F, NT);
     let mut bucket = Vec::new();
+    accumulate_edges_stripe_into(&block, &w, &grid, (0, F), &mut rows_acc, &mut bucket);
+    let mut reference: Option<EdgeMatrix> = None;
+    for &(mode, lanes) in &modes {
+        for threads in SCAN_THREADS {
+            let mut be = BinnedBackend::with_simd(threads, lanes);
+            let mut acc = EdgeMatrix::zeros(F, NT);
+            be.accumulate_batch(&bins, &w, &block.labels, NT, (0, F), &mut acc);
+            assert_eq!(acc.sum_w.to_bits(), rows_acc.sum_w.to_bits());
+            assert_eq!(acc.sum_w2.to_bits(), rows_acc.sum_w2.to_bits());
+            assert_eq!(acc.count, rows_acc.count);
+            for ff in 0..F {
+                for t in 0..NT {
+                    let (a, b) = (rows_acc.edge(ff, t), acc.edge(ff, t));
+                    assert!(
+                        (a - b).abs() <= 1e-9 * (1.0 + a.abs()),
+                        "rows vs binned/{mode} t={threads}: f={ff} thr={t}: {a} vs {b}"
+                    );
+                }
+            }
+            match &reference {
+                None => reference = Some(acc),
+                Some(r) => assert_identical(r, &acc, F, NT, &format!("{mode} t={threads}")),
+            }
+        }
+    }
+    println!("  -> identity: rows == binned across kernels x threads (checked)");
+
+    // ---- timings ----
+    let mut acc = EdgeMatrix::zeros(F, NT);
     let rows = runner.bench("scan rows 32768x64x8", || {
         acc.reset();
         accumulate_edges_stripe_into(&block, &w, &grid, (0, F), &mut acc, &mut bucket);
@@ -62,37 +126,80 @@ fn scan_engine_sweep(runner: &BenchRunner) -> Json {
         (N * F * NT) as f64 / rows_s / 1e6
     );
 
-    let mut sweep = Json::obj();
-    let mut binned_1t = rows_s;
-    let mut binned_last = rows_s;
-    for threads in [1usize, 2, 4] {
-        let mut be = BinnedBackend::new(threads);
-        let stats = runner.bench(&format!("scan binned 32768x64x8 t={threads}"), || {
-            acc.reset();
-            be.accumulate_batch(&bins, &w, &block.labels, NT, (0, F), &mut acc);
-            acc.count
-        });
-        let t_s = stats.median.as_secs_f64();
-        if threads == 1 {
-            binned_1t = t_s;
-            println!("  -> binned 1t speedup over rows: {:.2}x", rows_s / t_s);
-        } else {
-            println!("  -> binned {threads}t scaling vs 1t: {:.2}x", binned_1t / t_s);
-        }
-        binned_last = t_s;
-        sweep.set(&format!("t{threads}"), t_s);
-    }
-
     let mut result = Json::obj();
     result
         .set("bench", "scan_engine")
         .set("n", N)
         .set("features", F)
         .set("nthr", NT)
+        .set("simd_kernel", lane_kernel())
         .set("rows_s", rows_s)
-        .set("binned_s", sweep)
-        .set("speedup_binned_1t", rows_s / binned_1t)
-        .set("scaling_4t", binned_1t / binned_last);
+        .set("identical", true);
+    let mut scalar_1t = rows_s;
+    for &(mode, lanes) in &modes {
+        let mut sweep = Json::obj();
+        let mut t1 = rows_s;
+        let mut last = rows_s;
+        for threads in SCAN_THREADS {
+            let mut be = BinnedBackend::with_simd(threads, lanes);
+            let stats = runner.bench(&format!("scan binned/{mode} 32768x64x8 t={threads}"), || {
+                acc.reset();
+                be.accumulate_batch(&bins, &w, &block.labels, NT, (0, F), &mut acc);
+                acc.count
+            });
+            let t_s = stats.median.as_secs_f64();
+            if threads == 1 {
+                t1 = t_s;
+                println!("  -> binned/{mode} 1t speedup over rows: {:.2}x", rows_s / t_s);
+            } else {
+                println!("  -> binned/{mode} {threads}t scaling vs 1t: {:.2}x", t1 / t_s);
+            }
+            last = t_s;
+            sweep.set(&format!("t{threads}"), t_s);
+        }
+        if lanes {
+            result
+                .set("simd_s", sweep)
+                .set("simd_over_scalar_1t", scalar_1t / t1);
+        } else {
+            scalar_1t = t1;
+            result
+                .set("scalar_s", sweep)
+                .set("speedup_scalar_1t", rows_s / t1)
+                .set("scaling_scalar_8t", t1 / last);
+        }
+    }
+
+    // ---- threaded bucket→edge suffix fold (wide stripe) ----
+    const FOLD_F: usize = 4096;
+    const FOLD_NT: usize = 16;
+    let fold_bucket: Vec<f64> = (0..FOLD_F * (FOLD_NT + 1)).map(|_| rng.gauss()).collect();
+    let mut fold_ref = EdgeMatrix::zeros(FOLD_F, FOLD_NT);
+    fold_buckets_par(&fold_bucket, (0, FOLD_F), FOLD_NT, &mut fold_ref, 1);
+    let mut fold_sweep = Json::obj();
+    let mut fold_1t = 0.0f64;
+    let mut fold_last = 0.0f64;
+    for threads in SCAN_THREADS {
+        let mut facc = EdgeMatrix::zeros(FOLD_F, FOLD_NT);
+        fold_buckets_par(&fold_bucket, (0, FOLD_F), FOLD_NT, &mut facc, threads);
+        assert_identical(&fold_ref, &facc, FOLD_F, FOLD_NT, &format!("fold t={threads}"));
+        let stats = runner.bench(&format!("fold 4096x16 t={threads}"), || {
+            facc.reset();
+            fold_buckets_par(&fold_bucket, (0, FOLD_F), FOLD_NT, &mut facc, threads);
+            facc.count
+        });
+        let t_s = stats.median.as_secs_f64();
+        if threads == 1 {
+            fold_1t = t_s;
+        } else {
+            println!("  -> fold {threads}t scaling vs 1t: {:.2}x", fold_1t / t_s);
+        }
+        fold_last = t_s;
+        fold_sweep.set(&format!("t{threads}"), t_s);
+    }
+    result
+        .set("fold_s", fold_sweep)
+        .set("fold_scaling_8t", fold_1t / fold_last);
     result
 }
 

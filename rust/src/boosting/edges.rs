@@ -171,13 +171,69 @@ pub(crate) fn fold_buckets(
     debug_assert_eq!(bucket.len(), (fe - fs) * (nthr + 1));
     for f in fs..fe {
         let b = &bucket[(f - fs) * (nthr + 1)..(f - fs + 1) * (nthr + 1)];
-        let total: f64 = b.iter().sum();
-        let mut suffix = total;
-        for t in 0..nthr {
-            suffix -= b[t]; // now sum_{k >= t+1}
-            accum.edges[f * nthr + t] += 2.0 * suffix - total;
-        }
+        fold_column(b, &mut accum.edges[f * nthr..(f + 1) * nthr], nthr);
     }
+}
+
+/// One column's bucket → edge fold — the single shared implementation,
+/// so the serial and threaded folds have the identical f64 operation
+/// order per column by construction.
+#[inline]
+fn fold_column(b: &[f64], e: &mut [f64], nthr: usize) {
+    let total: f64 = b.iter().sum();
+    let mut suffix = total;
+    for t in 0..nthr {
+        suffix -= b[t]; // now sum_{k >= t+1}
+        e[t] += 2.0 * suffix - total;
+    }
+}
+
+/// Minimum fold size (stripe columns × bucket slots) before
+/// [`fold_buckets_par`] spawns threads: below this the whole fold is
+/// cheaper than one thread spawn, so it stays serial regardless of the
+/// requested thread count. A pure perf heuristic — the result is
+/// bit-identical either way.
+pub const FOLD_PAR_MIN_SLOTS: usize = 1 << 12;
+
+/// Threaded variant of `fold_buckets`: the stripe's columns are split
+/// into contiguous ranges folded by up to `threads` scoped workers.
+/// Every column writes its own disjoint `nthr`-wide `edges` slice with
+/// the identical per-column operation order as the serial fold (shared
+/// `fold_column`), and columns never interact, so the `EdgeMatrix` is
+/// **bit-identical for every thread count** — there is no merge step to
+/// order. Engages threads only when `threads > 1` and the fold spans at
+/// least [`FOLD_PAR_MIN_SLOTS`] slots (the binned engine's Amdahl
+/// remainder case: wide stripes × many thresholds).
+pub fn fold_buckets_par(
+    bucket: &[f64],
+    stripe: (usize, usize),
+    nthr: usize,
+    accum: &mut EdgeMatrix,
+    threads: usize,
+) {
+    let (fs, fe) = stripe;
+    let width = fe - fs;
+    debug_assert_eq!(bucket.len(), width * (nthr + 1));
+    let eff = threads.min(width);
+    if eff <= 1 || width * (nthr + 1) < FOLD_PAR_MIN_SLOTS {
+        return fold_buckets(bucket, stripe, nthr, accum);
+    }
+    let per = width.div_ceil(eff);
+    let region = &mut accum.edges[fs * nthr..fe * nthr];
+    std::thread::scope(|s| {
+        for (erange, brange) in region
+            .chunks_mut(per * nthr)
+            .zip(bucket.chunks(per * (nthr + 1)))
+        {
+            s.spawn(move || {
+                let cols = erange.len() / nthr;
+                for c in 0..cols {
+                    let b = &brange[c * (nthr + 1)..(c + 1) * (nthr + 1)];
+                    fold_column(b, &mut erange[c * nthr..(c + 1) * nthr], nthr);
+                }
+            });
+        }
+    });
 }
 
 /// One-shot edge computation (fresh accumulator).
@@ -307,6 +363,44 @@ mod tests {
         assert!(m.edges.iter().all(|&e| e == 0.0));
         assert_eq!((m.sum_w, m.sum_w2, m.count), (0.0, 0.0, 0));
         assert_eq!((m.f, m.nthr), (3, 2), "shape preserved");
+    }
+
+    #[test]
+    fn fold_par_bit_identical_across_thread_counts() {
+        // wide enough to cross FOLD_PAR_MIN_SLOTS so threads really
+        // engage: 600 columns × (7+1) slots = 4800 ≥ 4096
+        let mut rng = Rng::new(9);
+        let (width, nthr) = (600usize, 7usize);
+        let bucket: Vec<f64> = (0..width * (nthr + 1)).map(|_| rng.gauss()).collect();
+        for stripe in [(0, width), (3, 3 + width)] {
+            let f_total = stripe.1;
+            let mut serial = EdgeMatrix::zeros(f_total, nthr);
+            fold_buckets(&bucket, stripe, nthr, &mut serial);
+            for threads in [1usize, 2, 7, 64] {
+                let mut par = EdgeMatrix::zeros(f_total, nthr);
+                fold_buckets_par(&bucket, stripe, nthr, &mut par, threads);
+                for (a, b) in serial.edges.iter().zip(&par.edges) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fold_par_small_stripe_stays_serial_and_identical() {
+        // below the engage floor the threaded entry must take the serial
+        // path — and still accumulate (+=) into a dirty accumulator
+        let mut rng = Rng::new(10);
+        let (width, nthr) = (6usize, 4usize);
+        let bucket: Vec<f64> = (0..width * (nthr + 1)).map(|_| rng.gauss()).collect();
+        let mut serial = EdgeMatrix::zeros(width, nthr);
+        serial.edges.iter_mut().for_each(|e| *e = 0.25);
+        let mut par = serial.clone();
+        fold_buckets(&bucket, (0, width), nthr, &mut serial);
+        fold_buckets_par(&bucket, (0, width), nthr, &mut par, 8);
+        for (a, b) in serial.edges.iter().zip(&par.edges) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

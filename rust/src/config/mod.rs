@@ -123,6 +123,43 @@ impl ScanEngine {
     }
 }
 
+/// Whether the binned engine's bucket accumulation runs the lane-widened
+/// (SIMD) kernels (DESIGN.md §14). The kernels are bit-identical to the
+/// scalar loop by construction, but they only exist in builds with the
+/// `simd` cargo feature — see [`simd_compiled`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScanSimd {
+    /// best available, silently: avx2 → portable when compiled in,
+    /// scalar otherwise (the default — and the default build's off-path
+    /// is byte-identical to the pre-SIMD engine)
+    Auto,
+    /// lane kernels required: a config error when they are compiled out
+    /// (never a silent scalar fallback); with the feature compiled in,
+    /// always honorable — CPUs without AVX2 run the portable kernel
+    On,
+    /// scalar loop always, even when the lane kernels are available
+    Off,
+}
+
+impl ScanSimd {
+    /// Parse a `--scan-simd` value.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "auto" => Ok(ScanSimd::Auto),
+            "on" => Ok(ScanSimd::On),
+            "off" => Ok(ScanSimd::Off),
+            _ => Err(format!("unknown scan-simd mode {s:?} (auto|on|off)")),
+        }
+    }
+}
+
+/// Is this binary built with the `simd` cargo feature (the lane kernels
+/// of DESIGN.md §14)? `--scan-simd auto` silently degrades to the scalar
+/// loop when false; `--scan-simd on` refuses to.
+pub fn simd_compiled() -> bool {
+    cfg!(feature = "simd")
+}
+
 /// Scanner compute backend (ablation A4).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
@@ -188,6 +225,11 @@ pub struct TrainConfig {
     /// or more; at the default batch of 128 the engine's win is the
     /// branch-free single-thread loop, not sharding.
     pub scan_threads: usize,
+    /// lane-widened (SIMD) bucket accumulation for the binned engine:
+    /// auto (best available, the default), on (required — a config error
+    /// when compiled out), off (scalar always). Bit-identical to the
+    /// scalar loop in every mode (DESIGN.md §14).
+    pub scan_simd: ScanSimd,
     /// disk read bandwidth in bytes/s (0 = unlimited, in-memory tier);
     /// *simulated* — see the quarantine note in `data::throttle`
     pub disk_bandwidth: f64,
@@ -248,6 +290,7 @@ impl Default for TrainConfig {
             backend: Backend::Native,
             scan_engine: ScanEngine::Rows,
             scan_threads: 1,
+            scan_simd: ScanSimd::Auto,
             disk_bandwidth: 0.0,
             store_tier: StoreTier::Mem,
             memory_budget: 64 << 20,
@@ -300,6 +343,9 @@ impl TrainConfig {
             self.scan_engine = ScanEngine::parse(s)?;
         }
         self.scan_threads = args.get_usize("scan-threads", self.scan_threads);
+        if let Some(s) = args.get("scan-simd") {
+            self.scan_simd = ScanSimd::parse(s)?;
+        }
         self.disk_bandwidth = args.get_f64("disk-bandwidth", self.disk_bandwidth);
         if let Some(s) = args.get("store-tier") {
             self.store_tier = StoreTier::parse(s)?;
@@ -352,6 +398,7 @@ impl TrainConfig {
                 return Err("scan-engine binned requires --backend native".into());
             }
         }
+        self.validate_scan_simd(simd_compiled())?;
         if self.store_tier == StoreTier::Tiered {
             if self.sampler_mode != SamplerMode::Background {
                 return Err(
@@ -378,6 +425,42 @@ impl TrainConfig {
             return Err("queue-cap must be >= 1".into());
         }
         Ok(())
+    }
+
+    /// `--scan-simd` validation against an explicit feature-availability
+    /// flag, factored out so the engine × simd × threads matrix is
+    /// testable in BOTH build flavors from one build ([`validate`] calls
+    /// it with the real [`simd_compiled`]). The single hard rule: `on`
+    /// must never silently degrade — if the lane kernels cannot run
+    /// (compiled out, or the engine isn't binned), that is a config
+    /// error, not a quiet scalar fallback.
+    ///
+    /// [`validate`]: TrainConfig::validate
+    pub fn validate_scan_simd(&self, simd_compiled: bool) -> Result<(), String> {
+        match self.scan_simd {
+            // auto/off are always valid: auto's contract is "best
+            // available, silently"; off is the scalar loop everywhere
+            ScanSimd::Auto | ScanSimd::Off => Ok(()),
+            ScanSimd::On => {
+                if self.scan_engine != ScanEngine::Binned {
+                    return Err(
+                        "--scan-simd on requires --scan-engine binned \
+                         (the row engine has no lane kernels)"
+                            .into(),
+                    );
+                }
+                if !simd_compiled {
+                    return Err(
+                        "--scan-simd on requested but the lane kernels are compiled \
+                         out and the scalar loop would run silently; rebuild with \
+                         `cargo build --release --features simd`, or use \
+                         --scan-simd auto|off"
+                            .into(),
+                    );
+                }
+                Ok(())
+            }
+        }
     }
 }
 
@@ -592,6 +675,73 @@ mod tests {
         assert!(TrainConfig::default()
             .apply_args(&args("t --scan-engine rows --nthr 300"))
             .is_ok());
+    }
+
+    #[test]
+    fn scan_simd_default_parse_and_cli() {
+        // defaults to auto — silent best-available, scalar off-path when
+        // the feature is compiled out (pre-SIMD behavior, byte for byte)
+        assert_eq!(TrainConfig::default().scan_simd, ScanSimd::Auto);
+        assert_eq!(ScanSimd::parse("auto").unwrap(), ScanSimd::Auto);
+        assert_eq!(ScanSimd::parse("on").unwrap(), ScanSimd::On);
+        assert_eq!(ScanSimd::parse("off").unwrap(), ScanSimd::Off);
+        assert!(ScanSimd::parse("yes").is_err());
+        let cfg = TrainConfig::default()
+            .apply_args(&args("train --scan-engine binned --scan-simd off"))
+            .unwrap();
+        assert_eq!(cfg.scan_simd, ScanSimd::Off);
+        assert!(TrainConfig::default()
+            .apply_args(&args("t --scan-simd nope"))
+            .is_err());
+        // `on` through the real CLI path: valid iff this build carries
+        // the lane kernels (the compiled-out matrix is pinned below)
+        let on = TrainConfig::default().apply_args(&args("t --scan-engine binned --scan-simd on"));
+        assert_eq!(on.is_ok(), simd_compiled());
+    }
+
+    #[test]
+    fn scan_simd_validation_matrix() {
+        // engine × simd × threads × feature-availability: exactly two
+        // error cells — `on` without the binned engine, and `on` without
+        // the compiled lane kernels (the silent-fallback gap)
+        for engine in [ScanEngine::Rows, ScanEngine::Binned] {
+            for simd in [ScanSimd::Auto, ScanSimd::On, ScanSimd::Off] {
+                for threads in [1usize, 4] {
+                    for compiled in [false, true] {
+                        let cfg = TrainConfig {
+                            scan_engine: engine,
+                            scan_simd: simd,
+                            scan_threads: threads,
+                            ..TrainConfig::default()
+                        };
+                        let want_err = simd == ScanSimd::On
+                            && (engine != ScanEngine::Binned || !compiled);
+                        let got = cfg.validate_scan_simd(compiled);
+                        assert_eq!(
+                            got.is_err(),
+                            want_err,
+                            "engine={engine:?} simd={simd:?} threads={threads} \
+                             compiled={compiled}: {got:?}"
+                        );
+                    }
+                }
+            }
+        }
+        // the error messages name the actionable fix
+        let on_rows = TrainConfig {
+            scan_simd: ScanSimd::On,
+            ..TrainConfig::default()
+        };
+        assert!(on_rows.validate_scan_simd(true).unwrap_err().contains("binned"));
+        let on_binned = TrainConfig {
+            scan_engine: ScanEngine::Binned,
+            scan_simd: ScanSimd::On,
+            ..TrainConfig::default()
+        };
+        assert!(on_binned
+            .validate_scan_simd(false)
+            .unwrap_err()
+            .contains("--features simd"));
     }
 
     #[test]

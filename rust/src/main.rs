@@ -40,7 +40,7 @@ COMMANDS
              [--target-loss L] [--stopping lil|hoeffding|fixed]
              [--sampler mvs|rejection|uniform] [--sampler-mode blocking|background]
              [--backend native|xla-pallas|xla-jnp]
-             [--scan-engine rows|binned] [--scan-threads N]
+             [--scan-engine rows|binned] [--scan-threads N] [--scan-simd auto|on|off]
              [--store-tier mem|tiered] [--memory-budget BYTES]
              [--batch B] [--nthr NT] [--disk-bandwidth BYTES/S] [--seed S]
              [--out-dir DIR]
@@ -893,6 +893,7 @@ fn cmd_launch(args: &Args) -> anyhow::Result<()> {
         "sampler-mode",
         "scan-engine",
         "scan-threads",
+        "scan-simd",
         "store-tier",
         "memory-budget",
         "disk-bandwidth",

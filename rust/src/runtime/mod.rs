@@ -17,7 +17,7 @@ pub mod artifacts;
 pub use artifacts::{ArtifactSpec, Manifest};
 
 use crate::boosting::{CandidateGrid, EdgeMatrix};
-use crate::config::{Backend, ScanEngine, TrainConfig};
+use crate::config::{simd_compiled, Backend, ScanEngine, ScanSimd, TrainConfig};
 use crate::data::{BinnedBatch, DataBlock};
 use crate::model::StrongRule;
 use crate::scanner::{BatchResult, BinnedBackend, NativeBackend, ScanBackend};
@@ -204,7 +204,25 @@ pub fn make_backend(cfg: &TrainConfig, features: usize) -> anyhow::Result<Box<dy
     match cfg.backend {
         Backend::Native => match cfg.scan_engine {
             ScanEngine::Rows => Ok(Box::new(NativeBackend)),
-            ScanEngine::Binned => Ok(Box::new(BinnedBackend::new(cfg.scan_threads))),
+            ScanEngine::Binned => {
+                // resolve --scan-simd against this build (DESIGN.md §14):
+                // auto = lane kernels iff compiled in; on = required
+                // (validate() already rejects it when compiled out — the
+                // ensure below is the factory-level backstop for callers
+                // that skip validation); off = scalar always
+                let lanes = match cfg.scan_simd {
+                    ScanSimd::Off => false,
+                    ScanSimd::Auto => simd_compiled(),
+                    ScanSimd::On => {
+                        anyhow::ensure!(
+                            simd_compiled(),
+                            "--scan-simd on requires a build with --features simd"
+                        );
+                        true
+                    }
+                };
+                Ok(Box::new(BinnedBackend::with_simd(cfg.scan_threads, lanes)))
+            }
         },
         Backend::XlaPallas | Backend::XlaJnp => {
             anyhow::ensure!(
@@ -254,6 +272,33 @@ mod tests {
         let be = make_backend(&binned, 8).unwrap();
         assert_eq!(be.name(), "binned");
         assert!(be.wants_bins());
+    }
+
+    #[test]
+    fn make_backend_resolves_scan_simd() {
+        // off → always buildable (scalar); auto → always buildable (best
+        // available); on → buildable exactly when the lane kernels are in
+        // this build
+        for simd in [ScanSimd::Off, ScanSimd::Auto] {
+            let cfg = TrainConfig {
+                scan_engine: ScanEngine::Binned,
+                scan_simd: simd,
+                ..TrainConfig::default()
+            };
+            assert_eq!(make_backend(&cfg, 8).unwrap().name(), "binned");
+        }
+        let on = TrainConfig {
+            scan_engine: ScanEngine::Binned,
+            scan_simd: ScanSimd::On,
+            ..TrainConfig::default()
+        };
+        let got = make_backend(&on, 8);
+        if simd_compiled() {
+            assert_eq!(got.unwrap().name(), "binned");
+        } else {
+            let err = got.unwrap_err().to_string();
+            assert!(err.contains("--features simd"), "unexpected error: {err}");
+        }
     }
 
     #[test]

@@ -24,11 +24,27 @@
 //! convenience wrapper for tests, benches and baselines.
 
 use crate::boosting::{
-    edges::{accumulate_edges_stripe_into, fold_buckets},
+    edges::{accumulate_edges_stripe_into, fold_buckets_par},
     CandidateGrid, EdgeMatrix,
 };
 use crate::data::{BinnedBatch, DataBlock};
 use crate::model::StrongRule;
+
+/// Which lane kernel `--scan-simd` can engage on this build + CPU:
+/// `"avx2"` or `"portable"` when built with `--features simd`, else
+/// `"compiled-out"` (the default build carries only the scalar loop).
+#[cfg(feature = "simd")]
+pub fn lane_kernel() -> &'static str {
+    crate::scanner::simd::active_lane_kernel()
+}
+
+/// Which lane kernel `--scan-simd` can engage on this build + CPU:
+/// `"avx2"` or `"portable"` when built with `--features simd`, else
+/// `"compiled-out"` (the default build carries only the scalar loop).
+#[cfg(not(feature = "simd"))]
+pub fn lane_kernel() -> &'static str {
+    "compiled-out"
+}
 
 /// Caller-owned scratch + result of scan batches.
 ///
@@ -225,6 +241,10 @@ pub const BIN_CHUNK: usize = 512;
 #[derive(Debug)]
 pub struct BinnedBackend {
     threads: usize,
+    /// bucket accumulation runs the lane-widened kernels (DESIGN.md §14)
+    /// instead of the scalar scatter — bit-identical by construction,
+    /// only reachable when built with `--features simd`
+    simd: bool,
     /// signed contributions u = w·y for the current batch
     u: Vec<f64>,
     /// per-chunk bucket partials, `(num_chunks × width × (nthr+1))`
@@ -235,14 +255,42 @@ pub struct BinnedBackend {
 
 impl BinnedBackend {
     /// An engine that shards batch accumulation over `threads` workers
-    /// (1 = fully inline; results are identical for every value).
+    /// (1 = fully inline; results are identical for every value). Uses
+    /// the scalar bucket loop — [`BinnedBackend::with_simd`] opts into
+    /// the lane kernels.
     pub fn new(threads: usize) -> BinnedBackend {
+        BinnedBackend::with_simd(threads, false)
+    }
+
+    /// Like [`BinnedBackend::new`], with an explicit kernel choice:
+    /// `simd = true` runs the lane-widened bucket accumulation
+    /// (DESIGN.md §14 — bit-identical to the scalar loop for every
+    /// input). Panics if the lane kernels were not compiled in
+    /// (`--features simd`); `config::TrainConfig::validate` surfaces
+    /// that as a `--scan-simd on` error before any backend is built.
+    pub fn with_simd(threads: usize, simd: bool) -> BinnedBackend {
         assert!(threads >= 1, "scan-threads must be >= 1");
+        assert!(
+            !simd || cfg!(feature = "simd"),
+            "lane kernels requested but compiled out (build with --features simd)"
+        );
         BinnedBackend {
             threads,
+            simd,
             u: Vec::new(),
             partials: Vec::new(),
             bucket: Vec::new(),
+        }
+    }
+
+    /// The bucket-accumulation kernel this engine runs: `"scalar"`, or
+    /// the active lane kernel (`"avx2"`/`"portable"`) when opted in via
+    /// [`BinnedBackend::with_simd`].
+    pub fn kernel(&self) -> &'static str {
+        if self.simd {
+            lane_kernel()
+        } else {
+            "scalar"
         }
     }
 
@@ -298,17 +346,26 @@ impl BinnedBackend {
         self.partials.resize(nchunks * stride, 0.0);
 
         let u = &self.u;
+        // always false unless built with --features simd (ctor-asserted)
+        let lanes = self.simd;
         // one chunk's partial: columns outer, examples inner — for any
         // fixed (column, bucket) slot the adds land in ascending example
-        // order, exactly like the row engine's per-slot order
+        // order, exactly like the row engine's per-slot order. The lane
+        // kernels preserve that per-slot order exactly (DESIGN.md §14),
+        // so both arms produce the identical partial, bit for bit.
         let run_chunk = |c: usize, p: &mut [f64]| {
             let lo = c * BIN_CHUNK;
             let hi = ((c + 1) * BIN_CHUNK).min(n);
             for col in 0..width {
                 let colbins = &bins.bins[col * n..(col + 1) * n];
                 let hist = &mut p[col * (nthr + 1)..(col + 1) * (nthr + 1)];
-                for i in lo..hi {
-                    hist[colbins[i] as usize] += u[i];
+                if lanes {
+                    #[cfg(feature = "simd")]
+                    crate::scanner::simd::accumulate_column(colbins, u, lo, hi, hist);
+                } else {
+                    for i in lo..hi {
+                        hist[colbins[i] as usize] += u[i];
+                    }
                 }
             }
         };
@@ -343,8 +400,11 @@ impl BinnedBackend {
                 *a += p;
             }
         }
-        // buckets → edges: the row engine's reverse prefix sum
-        fold_buckets(&self.bucket, stripe, nthr, accum);
+        // buckets → edges: the row engine's reverse prefix sum, threaded
+        // across feature columns on wide stripes (disjoint-slice writes
+        // merged in ascending column order — bit-identical for any
+        // thread count, DESIGN.md §14)
+        fold_buckets_par(&self.bucket, stripe, nthr, accum, self.threads);
     }
 }
 
@@ -732,5 +792,61 @@ mod tests {
     #[should_panic(expected = "scan-threads")]
     fn binned_rejects_zero_threads() {
         BinnedBackend::new(0);
+    }
+
+    #[test]
+    fn default_constructor_is_scalar() {
+        // `new` must stay the scalar engine in every build flavor — the
+        // default (`--scan-simd auto` without the feature) path is the
+        // pre-SIMD behavior, byte for byte
+        assert_eq!(BinnedBackend::new(2).kernel(), "scalar");
+        assert_eq!(BinnedBackend::with_simd(2, false).kernel(), "scalar");
+    }
+
+    #[cfg(not(feature = "simd"))]
+    #[test]
+    #[should_panic(expected = "compiled out")]
+    fn with_simd_panics_when_compiled_out() {
+        BinnedBackend::with_simd(1, true);
+    }
+
+    #[cfg(not(feature = "simd"))]
+    #[test]
+    fn lane_kernel_reports_compiled_out() {
+        assert_eq!(lane_kernel(), "compiled-out");
+    }
+
+    #[cfg(feature = "simd")]
+    #[test]
+    fn with_simd_reports_active_lane_kernel() {
+        let k = BinnedBackend::with_simd(1, true).kernel();
+        assert!(["avx2", "portable"].contains(&k), "{k}");
+        assert_eq!(lane_kernel(), k);
+    }
+
+    #[cfg(feature = "simd")]
+    #[test]
+    fn simd_backend_bit_identical_to_scalar() {
+        // compact in-crate check (the full battery lives in
+        // tests/scan_differential.rs): same batch through both kernels,
+        // multi-chunk with a ragged tail, edges and scalars bitwise equal
+        let mut rng = Rng::new(21);
+        let n = 2 * BIN_CHUNK + 37;
+        let (f, nthr) = (5, 6);
+        let mut block = random_block(&mut rng, n, f);
+        let grid = CandidateGrid::uniform(f, nthr, -1.5, 1.5);
+        inject_boundary_values(&mut rng, &mut block, &grid);
+        let w_ref = gen::skewed_weights(&mut rng, n, 3.0);
+        let bins = bins_for(&block, &grid, (0, f));
+        let mut scalar = EdgeMatrix::zeros(f, nthr);
+        BinnedBackend::with_simd(2, false)
+            .accumulate_batch(&bins, &w_ref, &block.labels, nthr, (0, f), &mut scalar);
+        let mut lanes = EdgeMatrix::zeros(f, nthr);
+        BinnedBackend::with_simd(2, true)
+            .accumulate_batch(&bins, &w_ref, &block.labels, nthr, (0, f), &mut lanes);
+        assert_eq!(scalar.edges, lanes.edges, "edges diverged bitwise");
+        assert_eq!(scalar.sum_w.to_bits(), lanes.sum_w.to_bits());
+        assert_eq!(scalar.sum_w2.to_bits(), lanes.sum_w2.to_bits());
+        assert_eq!(scalar.count, lanes.count);
     }
 }

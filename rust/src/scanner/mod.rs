@@ -10,8 +10,10 @@
 //! when a better remote model arrives (the TMSN receive path).
 
 pub mod backend;
+#[cfg(feature = "simd")]
+pub mod simd;
 
-pub use backend::{BatchResult, BinnedBackend, NativeBackend, ScanBackend, BIN_CHUNK};
+pub use backend::{lane_kernel, BatchResult, BinnedBackend, NativeBackend, ScanBackend, BIN_CHUNK};
 
 use crate::boosting::{CandidateGrid, EdgeMatrix};
 use crate::data::{BinSpec, BinnedBatch, DataBlock, SampleSet};
@@ -60,6 +62,22 @@ impl Default for ScannerConfig {
             gamma_min: 0.001,
             scan_budget: 0,
             sweep_every: 0,
+        }
+    }
+}
+
+impl ScannerConfig {
+    /// The stopping-rule sweep cadence in effect for a stripe of
+    /// `stripe_width` features under `nthr` thresholds: the explicit
+    /// `sweep_every` when set, else the auto amortization
+    /// `max(1, stripe_width·nthr / batch)`. The single source of truth
+    /// for the formula — `run_pass` and the sweep-lag regression test
+    /// both derive the interval from here, so they cannot drift apart.
+    pub fn effective_sweep_every(&self, stripe_width: usize, nthr: usize) -> u64 {
+        if self.sweep_every == 0 {
+            ((stripe_width * nthr) / self.batch).max(1) as u64
+        } else {
+            self.sweep_every as u64
         }
     }
 }
@@ -171,12 +189,9 @@ impl Scanner {
         // stripe×thresholds×polarity sweep per batch would dominate the
         // scan itself, so sweep every `stripe_width·nthr / batch` batches
         // (γ-halving and final batches always sweep)
-        let sweep_every = if self.cfg.sweep_every == 0 {
-            let width = self.stripe.1 - self.stripe.0;
-            ((width * self.grid.nthr) / self.cfg.batch).max(1) as u64
-        } else {
-            self.cfg.sweep_every as u64
-        };
+        let sweep_every = self
+            .cfg
+            .effective_sweep_every(self.stripe.1 - self.stripe.0, self.grid.nthr);
         // binned engine: the sample must carry its quantized stripe view.
         // Prebuilt by the samplers at install time, so this is normally a
         // shape check; a cold sample (tests, ad-hoc callers) builds here —
@@ -572,7 +587,14 @@ mod tests {
             let mut s = sample.clone();
             sc.run_pass(&mut s, &StrongRule::new(), || false)
         };
-        let interval = ((f * nthr) / batch).max(1); // auto cadence = 32
+        // the interval comes from the same formula run_pass uses — the
+        // cadence and this regression test cannot drift apart
+        let interval = ScannerConfig {
+            batch,
+            sweep_every: 0,
+            ..ScannerConfig::default()
+        }
+        .effective_sweep_every(f, nthr) as usize;
         assert!(interval > 1, "test requires a wide stripe");
         let (base, amortized) = (run(1), run(0));
         match (base, amortized) {

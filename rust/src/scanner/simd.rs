@@ -1,0 +1,237 @@
+//! Lane-widened bucket-accumulation kernels for the binned scan engine
+//! (`--scan-simd`, DESIGN.md §14). Compiled only with `--features simd`;
+//! the default build carries the scalar loop alone and is byte-identical
+//! to the pre-SIMD engine.
+//!
+//! # Why the lane kernels are bit-identical to the scalar loop
+//!
+//! The scalar accumulation is a scatter: `hist[bin[i]] += u[i]`, so each
+//! histogram slot receives the `u` of its matching examples in ascending
+//! example order. The lane kernels vectorize across **histogram slots**,
+//! not across examples: each f64 lane owns one slot, examples stream in
+//! the same ascending order, and every example contributes `u[i]` to the
+//! matching lane and an exact `+0.0` to the rest. The contribution is a
+//! bitwise select (mask AND — never a multiply), so ±∞, NaN and
+//! subnormal `u` survive unchanged in the matching lane. Adding `+0.0`
+//! is the f64 identity on every value a lane accumulator can hold: the
+//! accumulator starts at `+0.0` and can never become `-0.0` (under
+//! round-to-nearest a sum is `-0.0` only when both operands are `-0.0`).
+//! The per-slot f64 summation tree is therefore *the same tree* the
+//! scalar loop builds — not merely a fixed alternative order — so
+//! `scalar == portable == avx2`, bit for bit, for every input, ragged
+//! batch tail, chunking, and thread count.
+//!
+//! Each kernel requires the destination slots to start at `+0.0` for the
+//! strict scalar-equality claim; the engine's per-chunk partials always
+//! do (they are zeroed on resize each batch).
+
+/// f64 lanes per vector register (AVX2: 256 bits / 64).
+pub const SLOT_LANES: usize = 4;
+
+/// Name of the lane kernel the runtime dispatch selects on this CPU:
+/// `"avx2"` when detected, else the `"portable"` fallback.
+pub fn active_lane_kernel() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return "avx2";
+        }
+    }
+    "portable"
+}
+
+/// Accumulate `hist[colbins[i]] += u[i]` for `i ∈ [lo, hi)` over one
+/// column's `nthr + 1` histogram slots with the best available lane
+/// kernel (feature-detection ladder: avx2 → portable).
+#[inline]
+pub fn accumulate_column(colbins: &[u8], u: &[f64], lo: usize, hi: usize, hist: &mut [f64]) {
+    debug_assert!(hi <= colbins.len() && hi <= u.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: gated on runtime AVX2 detection.
+            unsafe { accumulate_column_avx2(colbins, u, lo, hi, hist) };
+            return;
+        }
+    }
+    accumulate_column_portable(colbins, u, lo, hi, hist);
+}
+
+/// Portable lane kernel: [`SLOT_LANES`]-slot groups held in register
+/// accumulators, one pass over the examples per group, branch-free
+/// bitwise select per lane. Public (like the avx2 kernel) so the
+/// differential battery can pin `portable == avx2 == scalar` on every
+/// CPU, not just whichever the ladder picks.
+pub fn accumulate_column_portable(
+    colbins: &[u8],
+    u: &[f64],
+    lo: usize,
+    hi: usize,
+    hist: &mut [f64],
+) {
+    let nslots = hist.len();
+    let mut base = 0usize;
+    while base < nslots {
+        let mut acc = [0.0f64; SLOT_LANES];
+        for i in lo..hi {
+            let b = colbins[i] as usize;
+            let bits = u[i].to_bits();
+            for (l, a) in acc.iter_mut().enumerate() {
+                // all-ones mask iff this lane's slot matches the bin
+                let mask = ((b == base + l) as u64).wrapping_neg();
+                *a += f64::from_bits(bits & mask);
+            }
+        }
+        // lanes fold into their slots in ascending slot order; padding
+        // lanes past the last slot never matched any bin and are dropped
+        for (l, &a) in acc.iter().enumerate().take(nslots - base) {
+            hist[base + l] += a;
+        }
+        base += SLOT_LANES;
+    }
+}
+
+/// AVX2 specialization: up to four slot-groups (16 slots) per pass over
+/// the examples, all accumulators register-resident. Same select, same
+/// per-slot operation order as the portable kernel, hence bit-identical.
+///
+/// # Safety
+/// The CPU must support AVX2 (`is_x86_feature_detected!("avx2")`).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn accumulate_column_avx2(
+    colbins: &[u8],
+    u: &[f64],
+    lo: usize,
+    hi: usize,
+    hist: &mut [f64],
+) {
+    let nslots = hist.len();
+    let mut base = 0usize;
+    while base < nslots {
+        let groups = (nslots - base).div_ceil(SLOT_LANES).min(4);
+        match groups {
+            1 => avx2_pass::<1>(colbins, u, lo, hi, base, hist),
+            2 => avx2_pass::<2>(colbins, u, lo, hi, base, hist),
+            3 => avx2_pass::<3>(colbins, u, lo, hi, base, hist),
+            _ => avx2_pass::<4>(colbins, u, lo, hi, base, hist),
+        }
+        base += groups * SLOT_LANES;
+    }
+}
+
+/// One AVX2 pass: `G` slot-groups starting at slot `base`, every example
+/// broadcast-compared against each group's constant slot indices.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn avx2_pass<const G: usize>(
+    colbins: &[u8],
+    u: &[f64],
+    lo: usize,
+    hi: usize,
+    base: usize,
+    hist: &mut [f64],
+) {
+    use std::arch::x86_64::*;
+    let nslots = hist.len();
+    let mut idx = [_mm256_setzero_si256(); G];
+    let mut acc = [_mm256_setzero_pd(); G];
+    for (g, v) in idx.iter_mut().enumerate() {
+        let s = (base + g * SLOT_LANES) as i64;
+        *v = _mm256_set_epi64x(s + 3, s + 2, s + 1, s);
+    }
+    for i in lo..hi {
+        let b = _mm256_set1_epi64x(colbins[i] as i64);
+        let uv = _mm256_set1_pd(u[i]);
+        for g in 0..G {
+            // lane-select u (bitwise AND with the all-ones/zeros compare
+            // mask — non-matching lanes add an exact +0.0)
+            let m = _mm256_castsi256_pd(_mm256_cmpeq_epi64(b, idx[g]));
+            acc[g] = _mm256_add_pd(acc[g], _mm256_and_pd(m, uv));
+        }
+    }
+    let mut lanes = [0.0f64; SLOT_LANES];
+    for g in 0..G {
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc[g]);
+        let s = base + g * SLOT_LANES;
+        for (l, &v) in lanes.iter().enumerate().take(SLOT_LANES.min(nslots - s)) {
+            hist[s + l] += v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn scalar(colbins: &[u8], u: &[f64], lo: usize, hi: usize, hist: &mut [f64]) {
+        for i in lo..hi {
+            hist[colbins[i] as usize] += u[i];
+        }
+    }
+
+    /// Random u with injected ±∞, NaN, subnormal and -0.0 values.
+    fn hostile_u(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|_| match rng.below(12) {
+                0 => f64::INFINITY,
+                1 => f64::NEG_INFINITY,
+                2 => f64::NAN,
+                3 => f64::from_bits(1 + rng.below(100)), // subnormal
+                4 => -0.0,
+                _ => rng.gauss(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn portable_matches_scalar_bitwise() {
+        let mut rng = Rng::new(41);
+        // ragged slot counts around the lane width, plus the u8 maximum
+        for nslots in [1usize, 2, 3, 4, 5, 7, 8, 9, 16, 17, 19, 256] {
+            for n in [0usize, 1, 3, 7, 64, 513] {
+                let bins: Vec<u8> = (0..n).map(|_| rng.below(nslots as u64) as u8).collect();
+                let u = hostile_u(&mut rng, n);
+                let mut a = vec![0.0f64; nslots];
+                let mut b = vec![0.0f64; nslots];
+                scalar(&bins, &u, 0, n, &mut a);
+                accumulate_column_portable(&bins, &u, 0, n, &mut b);
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "nslots={nslots} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_and_avx2_match_scalar_bitwise() {
+        let mut rng = Rng::new(43);
+        for nslots in [3usize, 5, 9, 17, 33, 256] {
+            let n = 700; // crosses a lane-pass boundary and a ragged tail
+            let bins: Vec<u8> = (0..n).map(|_| rng.below(nslots as u64) as u8).collect();
+            let u = hostile_u(&mut rng, n);
+            let (lo, hi) = (13, n - 5); // sub-range, like a mid-batch chunk
+            let mut want = vec![0.0f64; nslots];
+            scalar(&bins, &u, lo, hi, &mut want);
+            let mut got = vec![0.0f64; nslots];
+            accumulate_column(&bins, &u, lo, hi, &mut got);
+            for (x, y) in want.iter().zip(&got) {
+                assert_eq!(x.to_bits(), y.to_bits(), "dispatch nslots={nslots}");
+            }
+            #[cfg(target_arch = "x86_64")]
+            if std::arch::is_x86_feature_detected!("avx2") {
+                let mut got = vec![0.0f64; nslots];
+                unsafe { accumulate_column_avx2(&bins, &u, lo, hi, &mut got) };
+                for (x, y) in want.iter().zip(&got) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "avx2 nslots={nslots}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn active_kernel_is_named() {
+        assert!(["avx2", "portable"].contains(&active_lane_kernel()));
+    }
+}

@@ -1,0 +1,449 @@
+//! Differential bit-exactness battery for the binned scan engine and its
+//! lane-widened kernels (DESIGN.md §8, §14):
+//!
+//!     simd == scalar == rows == bruteforce
+//!
+//! The first two equalities are **bitwise** for every input — the lane
+//! kernels replay the scalar loop's per-slot f64 summation tree exactly
+//! (see `scanner::simd`), and chunk boundaries (not threads) fix the
+//! merge order — so they are asserted with `to_bits` over randomized
+//! blocks, grids, stripes, thread counts {1, 2, 7}, ragged
+//! non-multiple-of-lane-width batch tails, threshold-equal values, ±∞
+//! features, zero and subnormal weights. `rows` is bitwise on
+//! single-chunk batches and 1e-9-relative beyond (a different but fixed
+//! summation tree); `bruteforce` is the semantic anchor at 1e-6.
+//!
+//! Also here: the `BinSpec::bin_value` quantization-totality fuzz
+//! (satellite: random f32 bit patterns incl. NaN-adjacent, duplicate
+//! thresholds, `x > thr[t] ⟺ bin(x) > t` exactly) and the exhaustive
+//! u8-boundary sweep (nthr = 255, all bins reachable).
+//!
+//! Without `--features simd` the battery still runs every scalar/rows/
+//! bruteforce assertion — the lane legs compile away, and a dedicated
+//! test pins that the default build's backend is the scalar kernel.
+
+use sparrow::boosting::{edges::edges_bruteforce, CandidateGrid, EdgeMatrix};
+use sparrow::data::{BinSpec, BinnedBatch, DataBlock, SampleSet};
+use sparrow::model::StrongRule;
+use sparrow::scanner::{
+    lane_kernel, BatchResult, BinnedBackend, NativeBackend, ScanBackend, Scanner, ScannerConfig,
+    BIN_CHUNK,
+};
+use sparrow::stopping::LilRule;
+use sparrow::util::prop::{gen, prop_check};
+use sparrow::util::rng::Rng;
+
+/// The bucket-accumulation kernels available in this build: the scalar
+/// loop always; the lane path when compiled in (`--features simd`).
+fn kernel_modes() -> Vec<(&'static str, bool)> {
+    let mut v = vec![("scalar", false)];
+    if cfg!(feature = "simd") {
+        v.push(("lanes", true));
+    }
+    v
+}
+
+fn random_block(rng: &mut Rng, n: usize, f: usize) -> DataBlock {
+    DataBlock::new(n, f, gen::normal_vec(rng, n * f), gen::labels(rng, n, 0.4))
+}
+
+/// Snap some features to exact grid thresholds and set a few to ±∞ —
+/// every bin boundary case the quantization must get exactly right.
+fn inject_boundary_values(rng: &mut Rng, block: &mut DataBlock, grid: &CandidateGrid) {
+    let n = block.n;
+    let f = block.f;
+    for _ in 0..(n * f / 4).max(1) {
+        let i = rng.below(n as u64) as usize;
+        let j = rng.below(f as u64) as usize;
+        block.features[i * f + j] = match rng.below(4) {
+            0 => f32::INFINITY,
+            1 => f32::NEG_INFINITY,
+            _ => grid.row(j)[rng.below(grid.nthr as u64) as usize],
+        };
+    }
+}
+
+/// Hostile reference weights: skewed positives with injected exact zeros
+/// (u = 0·y = ±0.0 — the sign case the lane select must preserve) and
+/// f32 subnormals (the underflow case).
+fn hostile_weights(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let mut w = gen::skewed_weights(rng, n, 2.0);
+    for x in w.iter_mut() {
+        match rng.below(10) {
+            0 => *x = 0.0,
+            1 => *x = f32::from_bits(1 + rng.below(0x7f_ffff) as u32), // subnormal
+            _ => {}
+        }
+    }
+    w
+}
+
+/// Gather a full-batch `BinnedBatch` for `block` under `grid`/`stripe`.
+fn bins_for(block: &DataBlock, grid: &CandidateGrid, stripe: (usize, usize)) -> BinnedBatch {
+    let stripe_bins = grid.bin_spec(stripe).bin_block(block);
+    let idx: Vec<usize> = (0..block.n).collect();
+    let mut b = BinnedBatch::default();
+    b.gather(&stripe_bins, &idx);
+    b
+}
+
+/// Assert two EdgeMatrix accumulations are bitwise identical over the
+/// stripe columns (edges) and globally (stopping scalars).
+fn assert_bitwise(a: &EdgeMatrix, b: &EdgeMatrix, stripe: (usize, usize), ctx: &str) {
+    for f in stripe.0..stripe.1 {
+        for t in 0..a.nthr {
+            assert_eq!(
+                a.edge(f, t).to_bits(),
+                b.edge(f, t).to_bits(),
+                "{ctx}: edge f={f} t={t}: {} vs {}",
+                a.edge(f, t),
+                b.edge(f, t)
+            );
+        }
+    }
+    assert_eq!(a.sum_w.to_bits(), b.sum_w.to_bits(), "{ctx}: sum_w");
+    assert_eq!(a.sum_w2.to_bits(), b.sum_w2.to_bits(), "{ctx}: sum_w2");
+    assert_eq!(a.count, b.count, "{ctx}: count");
+}
+
+/// Run the binned engine over every (thread count × kernel mode) config
+/// and assert all results are bitwise identical; returns one of them.
+fn binned_all_configs(
+    block: &DataBlock,
+    bins: &BinnedBatch,
+    w_ref: &[f32],
+    grid: &CandidateGrid,
+    stripe: (usize, usize),
+) -> BatchResult {
+    let n = block.n;
+    let s_ref = vec![0.0f32; n];
+    let l_ref = vec![0u32; n];
+    let model = StrongRule::new(); // empty → weights == w_ref exactly
+    let mut reference: Option<(String, BatchResult)> = None;
+    for threads in [1usize, 2, 7] {
+        for (mode, lanes) in kernel_modes() {
+            let mut be = BinnedBackend::with_simd(threads, lanes);
+            let mut out = BatchResult::zeros(grid.f, grid.nthr);
+            be.scan_batch_into(
+                block,
+                Some(bins),
+                w_ref,
+                &s_ref,
+                &l_ref,
+                &model,
+                grid,
+                stripe,
+                &mut out,
+            );
+            match &reference {
+                None => reference = Some((format!("{mode} t={threads}"), out)),
+                Some((ref_name, r)) => assert_bitwise(
+                    &r.edges,
+                    &out.edges,
+                    stripe,
+                    &format!("{ref_name} vs {mode} t={threads} (n={n})"),
+                ),
+            }
+        }
+    }
+    reference.unwrap().1
+}
+
+#[test]
+fn prop_simd_scalar_rows_bruteforce_differential() {
+    prop_check("simd == scalar == rows == bruteforce", 40, |rng| {
+        let n = gen::size(rng, 1, 1300); // spans 1–3 BIN_CHUNK chunks
+        let f = gen::size(rng, 1, 9);
+        let nthr = gen::size(rng, 1, 9);
+        let mut block = random_block(rng, n, f);
+        let grid = CandidateGrid::uniform(f, nthr, -2.0, 2.0);
+        inject_boundary_values(rng, &mut block, &grid);
+        let fs = rng.below(f as u64) as usize;
+        let fe = fs + 1 + rng.below((f - fs) as u64) as usize;
+        let w_ref = hostile_weights(rng, n);
+        let s_ref = vec![0.0f32; n];
+        let l_ref = vec![0u32; n];
+        let model = StrongRule::new();
+
+        let mut rows = NativeBackend;
+        let a = rows.scan_batch(&block, &w_ref, &s_ref, &l_ref, &model, &grid, (fs, fe));
+        let bins = bins_for(&block, &grid, (fs, fe));
+        let b = binned_all_configs(&block, &bins, &w_ref, &grid, (fs, fe));
+
+        // binned (any kernel, any thread count) vs rows
+        if a.edges.sum_w.to_bits() != b.edges.sum_w.to_bits()
+            || a.edges.sum_w2.to_bits() != b.edges.sum_w2.to_bits()
+            || a.edges.count != b.edges.count
+        {
+            return Err("stopping scalars diverged rows vs binned".into());
+        }
+        let brute = edges_bruteforce(&block, &w_ref, &grid);
+        for ff in fs..fe {
+            for t in 0..nthr {
+                let ea = a.edges.edge(ff, t);
+                let eb = b.edges.edge(ff, t);
+                let ec = brute.edge(ff, t);
+                if n <= BIN_CHUNK {
+                    // single chunk: identical summation tree → bitwise
+                    if ea.to_bits() != eb.to_bits() {
+                        return Err(format!(
+                            "single-chunk bit mismatch f={ff} t={t}: {ea} vs {eb} (n={n})"
+                        ));
+                    }
+                } else if (ea - eb).abs() > 1e-9 * (1.0 + ea.abs()) {
+                    return Err(format!("binned vs rows f={ff} t={t}: {eb} vs {ea} (n={n})"));
+                }
+                if (ea - ec).abs() > 1e-6 * (1.0 + ec.abs()) {
+                    return Err(format!("rows vs brute f={ff} t={t}: {ea} vs {ec}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ragged_tails_bit_identical() {
+    // the classic SIMD remainder bug: batch sizes around the lane width
+    // (4) and the chunk width (512) — every kernel × thread config must
+    // agree bitwise on every tail shape
+    let mut rng = Rng::new(171);
+    let (f, nthr) = (3usize, 5usize);
+    let grid = CandidateGrid::uniform(f, nthr, -1.5, 1.5);
+    for n in [
+        1usize, 2, 3, 4, 5, 7, 8, 9, 511, 512, 513, 515, 1023, 1024, 1025, 1027,
+    ] {
+        let mut block = random_block(&mut rng, n, f);
+        inject_boundary_values(&mut rng, &mut block, &grid);
+        let w_ref = hostile_weights(&mut rng, n);
+        let bins = bins_for(&block, &grid, (0, f));
+        // all configs bitwise-agree (asserted inside), including tails
+        let _ = binned_all_configs(&block, &bins, &w_ref, &grid, (0, f));
+    }
+}
+
+#[test]
+fn full_scan_path_identical_scores_weights_edges() {
+    // through scan_batch_into with a non-empty model: the incremental
+    // scoring/weight refresh is shared row-view code, so scores and
+    // weights must be bitwise equal across kernels too
+    let mut rng = Rng::new(172);
+    let n = BIN_CHUNK + 77;
+    let (f, nthr) = (6usize, 4usize);
+    let block = random_block(&mut rng, n, f);
+    let grid = CandidateGrid::uniform(f, nthr, -1.5, 1.5);
+    let mut model = StrongRule::new();
+    for k in 0..4u32 {
+        model.push(
+            sparrow::model::Stump::new(k % f as u32, 0.1 * k as f32 - 0.2, 1.0),
+            0.1 + 0.05 * k as f32,
+        );
+    }
+    let w_ref = hostile_weights(&mut rng, n);
+    let s_ref = vec![0.0f32; n];
+    let l_ref = vec![0u32; n];
+    let bins = bins_for(&block, &grid, (0, f));
+    let mut reference: Option<BatchResult> = None;
+    for threads in [1usize, 2, 7] {
+        for (mode, lanes) in kernel_modes() {
+            let mut be = BinnedBackend::with_simd(threads, lanes);
+            let mut out = BatchResult::zeros(f, nthr);
+            be.scan_batch_into(
+                &block,
+                Some(&bins),
+                &w_ref,
+                &s_ref,
+                &l_ref,
+                &model,
+                &grid,
+                (0, f),
+                &mut out,
+            );
+            match &reference {
+                None => reference = Some(out),
+                Some(r) => {
+                    assert_eq!(r.scores, out.scores, "{mode} t={threads}: scores");
+                    assert_eq!(r.weights, out.weights, "{mode} t={threads}: weights");
+                    assert_bitwise(&r.edges, &out.edges, (0, f), &format!("{mode} t={threads}"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn scanner_outcome_identical_across_kernels() {
+    // end to end through Scanner::run_pass: the kernel knob must not
+    // change a single certified answer, refreshed weight, or cursor
+    for (mode, lanes) in kernel_modes() {
+        let mut rng = Rng::new(173);
+        let (n, f) = (2000usize, 4usize);
+        let mut block = DataBlock::empty(f);
+        for _ in 0..n {
+            let y = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+            let mut row: Vec<f32> = (0..f).map(|_| rng.gauss() as f32).collect();
+            row[0] = y * (1.0 + rng.f32());
+            block.push(&row, y);
+        }
+        let mk_scanner = |simd: bool| {
+            Scanner::new(
+                CandidateGrid::uniform(f, 3, -1.0, 1.0),
+                (0, f),
+                Box::new(BinnedBackend::with_simd(2, simd)),
+                Box::new(LilRule::default()),
+                ScannerConfig {
+                    batch: 64,
+                    ..ScannerConfig::default()
+                },
+            )
+        };
+        let mut sample_scalar = SampleSet::fresh(block.clone(), vec![0.0; n], 0);
+        let mut sample_lanes = sample_scalar.clone();
+        let model = StrongRule::new();
+        let a = mk_scanner(false).run_pass(&mut sample_scalar, &model, || false);
+        let b = mk_scanner(lanes).run_pass(&mut sample_lanes, &model, || false);
+        assert_eq!(a, b, "outcome diverged ({mode})");
+        assert_eq!(sample_scalar.w_last, sample_lanes.w_last, "weights ({mode})");
+    }
+}
+
+#[test]
+fn default_backend_is_scalar_kernel() {
+    // the acceptance off-path: `BinnedBackend::new` (what `--scan-simd
+    // auto` resolves to without the feature, and `off` always) runs the
+    // scalar kernel, and without `--features simd` no lane kernel exists
+    assert_eq!(BinnedBackend::new(4).kernel(), "scalar");
+    if cfg!(feature = "simd") {
+        assert!(["avx2", "portable"].contains(&lane_kernel()));
+    } else {
+        assert_eq!(lane_kernel(), "compiled-out");
+    }
+}
+
+#[cfg(feature = "simd")]
+#[test]
+fn portable_and_dispatch_kernels_match_scalar_scatter() {
+    // kernel-level pin: the portable lane kernel AND whatever kernel the
+    // runtime ladder dispatches to both replay the scalar scatter bit
+    // for bit — on every CPU, not just whichever the ladder picks
+    use sparrow::scanner::simd::{accumulate_column, accumulate_column_portable};
+    let mut rng = Rng::new(174);
+    for nslots in [1usize, 4, 5, 6, 9, 13, 17, 256] {
+        for n in [1usize, 3, 5, 513] {
+            let bins: Vec<u8> = (0..n).map(|_| rng.below(nslots as u64) as u8).collect();
+            let u: Vec<f64> = (0..n)
+                .map(|_| match rng.below(8) {
+                    0 => 0.0,
+                    1 => -0.0,
+                    2 => f64::from_bits(1 + rng.below(1000)), // subnormal
+                    _ => rng.gauss() * 1e3,
+                })
+                .collect();
+            let mut want = vec![0.0f64; nslots];
+            for i in 0..n {
+                want[bins[i] as usize] += u[i];
+            }
+            let mut portable = vec![0.0f64; nslots];
+            accumulate_column_portable(&bins, &u, 0, n, &mut portable);
+            let mut dispatched = vec![0.0f64; nslots];
+            accumulate_column(&bins, &u, 0, n, &mut dispatched);
+            for s in 0..nslots {
+                assert_eq!(want[s].to_bits(), portable[s].to_bits(), "portable slot {s}");
+                assert_eq!(want[s].to_bits(), dispatched[s].to_bits(), "dispatch slot {s}");
+            }
+        }
+    }
+}
+
+// ---- BinSpec::bin quantization totality (satellite) -----------------------
+
+/// Reference predicate count: thresholds strictly below `x` (the row
+/// engine's loop, re-stated independently).
+fn strict_exceedances(x: f32, thr: &[f32]) -> usize {
+    thr.iter().filter(|&&t| x > t).count()
+}
+
+#[test]
+fn prop_bin_value_totality_fuzz() {
+    // seeded fuzz: for ANY f32 bit pattern x — normals, subnormals, ±0,
+    // ±∞, NaNs with random payloads ("NaN-adjacent" exponent-0xFF
+    // patterns included) — and ascending rows WITH duplicates,
+    // x > thr[t] ⟺ bin(x) > t must hold exactly for every t
+    prop_check("bin(x) counts strict exceedances totally", 60, |rng| {
+        let nthr = gen::size(rng, 1, 12);
+        // few distinct values, repeated → duplicate thresholds, sorted
+        let mut thr: Vec<f32> = Vec::with_capacity(nthr);
+        let distinct = 1 + rng.below(4u64.min(nthr as u64));
+        let pool: Vec<f32> = (0..distinct).map(|_| rng.gauss() as f32).collect();
+        for _ in 0..nthr {
+            thr.push(pool[rng.below(distinct) as usize]);
+        }
+        thr.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let spec = BinSpec::new((0, 1), nthr, thr.clone());
+        for _ in 0..200 {
+            // raw bit patterns: ~1/256 are ±∞, ~0.4% NaN, plus targeted
+            // NaN-adjacent patterns around 0x7f80_0000 / 0xff80_0000
+            let jitter = |rng: &mut Rng| (rng.below(9) as u32).wrapping_sub(4);
+            let x = match rng.below(8) {
+                0 => f32::from_bits(0x7f80_0000u32.wrapping_add(jitter(rng))),
+                1 => f32::from_bits(0xff80_0000u32.wrapping_add(jitter(rng))),
+                2 => thr[rng.below(nthr as u64) as usize], // exact threshold hit
+                _ => f32::from_bits(rng.next_u64() as u32),
+            };
+            let bin = spec.bin_value(0, x) as usize;
+            let want = strict_exceedances(x, &thr);
+            if bin != want {
+                return Err(format!("bin({x:?}) = {bin}, want {want} (thr={thr:?})"));
+            }
+            for t in 0..nthr {
+                if (x > thr[t]) != (bin > t) {
+                    return Err(format!(
+                        "equivalence broken at t={t}: x={x:?} thr={} bin={bin}",
+                        thr[t]
+                    ));
+                }
+            }
+            if x.is_nan() && bin != 0 {
+                return Err(format!("NaN must bin to 0, got {bin}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn bin_value_u8_boundary_exhaustive() {
+    // the full u8 range: nthr = 255 distinct ascending thresholds; every
+    // threshold is hit exactly (strict exceedance ⇒ bin(thr[t]) == t),
+    // every one of the 256 bin values is reachable, and the f32 next-up
+    // of each threshold lands one bin higher
+    let nthr = 255usize;
+    let thr: Vec<f32> = (0..nthr).map(|t| t as f32).collect();
+    let spec = BinSpec::new((0, 1), nthr, thr.clone());
+    let mut seen = [false; 256];
+    for t in 0..nthr {
+        let at = spec.bin_value(0, thr[t]) as usize;
+        assert_eq!(at, t, "bin(thr[{t}]) must equal {t} (strict exceedance)");
+        seen[at] = true;
+        let up = f32::from_bits(thr[t].to_bits() + 1); // next representable
+        assert_eq!(spec.bin_value(0, up) as usize, t + 1, "next-up of thr[{t}]");
+        for probe_t in 0..nthr {
+            assert_eq!(
+                thr[t] > thr[probe_t],
+                at > probe_t,
+                "equivalence at boundary t={t}, probe={probe_t}"
+            );
+        }
+    }
+    assert_eq!(spec.bin_value(0, 1e9), 255, "above all thresholds");
+    seen[255] = true;
+    assert_eq!(spec.bin_value(0, -1.0), 0);
+    assert_eq!(spec.bin_value(0, f32::NEG_INFINITY), 0);
+    assert_eq!(spec.bin_value(0, f32::INFINITY), 255);
+    assert!(seen.iter().all(|&s| s), "every u8 bin value reachable");
+    // all-duplicate row: the only reachable bins are 0 and nthr
+    let dup = BinSpec::new((0, 1), nthr, vec![1.5f32; nthr]);
+    assert_eq!(dup.bin_value(0, 1.5), 0);
+    assert_eq!(dup.bin_value(0, 1.0), 0);
+    assert_eq!(dup.bin_value(0, 2.0), 255);
+}

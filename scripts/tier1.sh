@@ -3,18 +3,21 @@
 #
 # Single entry point shared by CI (.github/workflows/ci.yml) and local devs:
 #
-#     ./scripts/tier1.sh
+#     ./scripts/tier1.sh                   # default build
+#     ./scripts/tier1.sh --features simd   # lane-kernel build (CI matrix leg)
 #
-# Keep this file in sync with the "Tier-1 verify" line in ROADMAP.md.
+# Extra arguments are passed through to every cargo build/test invocation
+# of the sparrow package, so the whole gate runs under the same feature
+# set. Keep this file in sync with the "Tier-1 verify" line in ROADMAP.md.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
 
-cargo build --release
+cargo build --release "$@"
 # Examples and harness=false benches are the first casualties of an API
 # redesign and `cargo test` does not build the benches — gate them too.
-cargo build --examples --benches
-cargo test -q
+cargo build --examples --benches "$@"
+cargo test -q "$@"
 
 # The workspace root package is `sparrow`, so the gate above does not reach
 # the vendored shim crates; test them explicitly (fast — a handful of tests).
